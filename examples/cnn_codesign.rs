@@ -1,0 +1,161 @@
+//! Hardware/software co-design sweep (the CODESIGN experiment): one
+//! pre-quantized CNN model file, many hardware configurations. The model
+//! never changes — that is the paper's point — while MAC-array size, LUT
+//! width and rounding mode trade accuracy against cycles and energy.
+//!
+//!     cargo run --release --example cnn_codesign
+
+use pqdl::hwsim::{HwConfig, HwModule, Rounding};
+use pqdl::interp::Session;
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+use pqdl::tensor::Tensor;
+use pqdl::train::{cnn_accuracy, synthetic_digits, train_cnn, Cnn};
+
+fn main() -> anyhow::Result<()> {
+    // Train the fp32 CNN once.
+    let data = synthetic_digits(2500, 555);
+    let (train, test) = data.split(0.2, 556);
+    let mut cnn = Cnn::new(8, 10, 557);
+    println!("training fp32 CNN ({} params)...", cnn.param_count());
+    train_cnn(&mut cnn, &train, 12, 32, 0.08, 0.9, 558);
+    let fp32_acc = cnn_accuracy(&cnn, &test);
+    println!("fp32 test accuracy: {:.2}%\n", 100.0 * fp32_acc);
+
+    // Quantize once: ONE model file for every hardware point below.
+    let model = cnn.to_model("digits_cnn");
+    let sess = Session::new(model.clone())?;
+    let batches: Vec<_> = (0..96)
+        .map(|i| {
+            let (x, _) = train.sample(i);
+            vec![(
+                "x".to_string(),
+                Tensor::from_f32(&[1, 1, 8, 8], x.to_vec()).unwrap(),
+            )]
+        })
+        .collect();
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange)?;
+    let preq = quantize_model(&model, &cal, &QuantizeOptions::default())?;
+
+    // Evaluation batch (whole test set as one NCHW tensor).
+    let mut xs = Vec::with_capacity(test.len() * 64);
+    for i in 0..test.len() {
+        xs.extend_from_slice(test.sample(i).0);
+    }
+    let full = Tensor::from_f32(&[test.len(), 1, 8, 8], xs)?;
+
+    let eval = |cfg: HwConfig| -> anyhow::Result<(f32, f64, f64, f64)> {
+        let hw = HwModule::compile(&preq, cfg.clone())?;
+        let (probs, cost) = hw.run(&full)?;
+        let preds: Vec<usize> = probs
+            .as_f32()?
+            .chunks(10)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        let acc =
+            preds.iter().zip(&test.y).filter(|(p, y)| p == y).count() as f32 / test.len() as f32;
+        let per = test.len() as f64;
+        Ok((
+            acc,
+            cost.cycles as f64 / per,
+            cost.energy_nj(&cfg) / 1000.0 / per,
+            cost.utilization(&cfg),
+        ))
+    };
+
+    println!("-- MAC array sweep (lut 8b, round-half-even) --");
+    println!("array   | accuracy | cycles/img | uJ/img | utilization");
+    for dim in [4usize, 8, 16, 32, 64] {
+        let (acc, cyc, uj, util) = eval(HwConfig::default().with_array(dim, dim))?;
+        println!(
+            "{dim:>2}x{dim:<3} | {:>7.2}% | {:>10.0} | {:>6.3} | {:>10.1}%",
+            100.0 * acc,
+            cyc,
+            uj,
+            100.0 * util
+        );
+    }
+
+    // The LUT and rounding knobs only engage on activation stages: use a
+    // Tanh MLP lowered to the Fig. 4 pattern (int8 tanh via ROM) so the
+    // sweep actually exercises them.
+    use pqdl::rewrite::ActPrecision;
+    use pqdl::train::{train_classifier, HiddenAct, Mlp};
+    let mut tanh_mlp = Mlp::new(&[64, 48, 10], HiddenAct::Tanh, 600);
+    train_classifier(&mut tanh_mlp, &train, 15, 32, 0.08, 0.9, 601);
+    let tanh_fp32 = pqdl::train::accuracy(&tanh_mlp, &test);
+    let tanh_model = tanh_mlp.to_model("digits_tanh");
+    let tsess = Session::new(tanh_model.clone())?;
+    let tbatches: Vec<_> = (0..96)
+        .map(|i| {
+            let (x, _) = train.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    let tcal = calibrate(&tsess, &tbatches, CalibStrategy::MaxRange)?;
+    let tanh_preq = quantize_model(
+        &tanh_model,
+        &tcal,
+        &QuantizeOptions {
+            act_precision: ActPrecision::Int8,
+            ..Default::default()
+        },
+    )?;
+    let mut txs = Vec::with_capacity(test.len() * 64);
+    for i in 0..test.len() {
+        txs.extend_from_slice(test.sample(i).0);
+    }
+    let tfull = Tensor::from_f32(&[test.len(), 64], txs)?;
+    let teval = |cfg: HwConfig| -> anyhow::Result<f32> {
+        let hw = HwModule::compile(&tanh_preq, cfg)?;
+        let (probs, _) = hw.run(&tfull)?;
+        let acc = probs
+            .as_f32()?
+            .chunks(10)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .zip(&test.y)
+            .filter(|(p, y)| p == *y)
+            .count() as f32
+            / test.len() as f32;
+        Ok(acc)
+    };
+
+    println!(
+        "\n-- activation ROM width sweep (tanh MLP, Fig. 4; fp32 ref {:.2}%) --",
+        100.0 * tanh_fp32
+    );
+    println!("lut bits | accuracy");
+    for bits in [8u32, 7, 6, 5, 4, 3, 2] {
+        let acc = teval(HwConfig::default().with_lut_bits(bits))?;
+        println!("{bits:>8} | {:>7.2}%", 100.0 * acc);
+    }
+
+    println!("\n-- rescale rounding mode sweep (tanh MLP) --");
+    println!("rounding          | accuracy");
+    for (name, r) in [
+        ("half-even       ", Rounding::HalfEven),
+        ("half-away-0     ", Rounding::HalfAwayFromZero),
+        ("truncate        ", Rounding::Truncate),
+    ] {
+        let acc = teval(HwConfig::default().with_rounding(r))?;
+        println!("{name} | {:>7.2}%", 100.0 * acc);
+    }
+
+    println!(
+        "\nfp32 reference: {:.2}% — the model file was identical for every row above.",
+        100.0 * fp32_acc
+    );
+    Ok(())
+}

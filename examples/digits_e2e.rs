@@ -1,0 +1,200 @@
+//! End-to-end driver (the DESIGN.md E2E experiment): train a 3-layer
+//! MLP on the synthetic-digits corpus, calibrate, emit the pre-quantized
+//! model, execute it on every backend, and serve it through the
+//! coordinator with dynamic batching — reporting accuracy, narrow-margin
+//! agreement and latency/throughput.
+//!
+//!     cargo run --release --example digits_e2e
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use pqdl::compare::compare_quantized;
+use pqdl::coordinator::{
+    CoordinatorBuilder, HwSimBackend, InterpBackend, ServerConfig,
+};
+use pqdl::hwsim::{HwConfig, HwModule};
+use pqdl::interp::Session;
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+use pqdl::tensor::Tensor;
+use pqdl::train::{accuracy, synthetic_digits, train_classifier, HiddenAct, Mlp};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn batch_of(data: &pqdl::train::Dataset, idx: &[usize]) -> Tensor {
+    let mut x = Vec::with_capacity(idx.len() * data.dim);
+    for &i in idx {
+        x.extend_from_slice(data.sample(i).0);
+    }
+    Tensor::from_f32(&[idx.len(), data.dim], x).unwrap()
+}
+
+fn acc_of(outputs: &[usize], data: &pqdl::train::Dataset) -> f32 {
+    outputs
+        .iter()
+        .zip(&data.y)
+        .filter(|(p, y)| p == y)
+        .count() as f32
+        / data.len() as f32
+}
+
+fn argmax_rows(t: &Tensor, classes: usize) -> Vec<usize> {
+    t.as_f32()
+        .unwrap()
+        .chunks(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== pqdl end-to-end: synthetic digits ==\n");
+
+    // ---- 1. Train ------------------------------------------------------
+    let data = synthetic_digits(4000, 2024);
+    let (train, test) = data.split(0.2, 2025);
+    let mut mlp = Mlp::new(&[64, 128, 64, 10], HiddenAct::Relu, 2026);
+    println!(
+        "training fp32 MLP 64-128-64-10 ({} params) on {} samples...",
+        mlp.param_count(),
+        train.len()
+    );
+    let t0 = Instant::now();
+    let losses = train_classifier(&mut mlp, &train, 30, 32, 0.08, 0.9, 2027);
+    println!(
+        "  trained in {:.1?}; loss {:.4} -> {:.4}",
+        t0.elapsed(),
+        losses[0],
+        losses.last().unwrap()
+    );
+    let fp32_acc = accuracy(&mlp, &test);
+    println!("  fp32 test accuracy: {:.2}%", 100.0 * fp32_acc);
+
+    // ---- 2. Calibrate + quantize (both rescale codifications) ----------
+    let model = mlp.to_model("digits_mlp");
+    let sess = Session::new(model.clone())?;
+    let calib_batches: Vec<_> = (0..128)
+        .map(|i| {
+            let (x, _) = train.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    let cal = calibrate(&sess, &calib_batches, CalibStrategy::MaxRange)?;
+
+    for (label, opts) in [
+        ("2-Mul (hardware-explicit)", QuantizeOptions::default()),
+        (
+            "1-Mul (toolchain-derived)",
+            QuantizeOptions {
+                two_mul: false,
+                ..Default::default()
+            },
+        ),
+    ] {
+        println!("\n-- rescale codification: {label} --");
+        let preq = quantize_model(&model, &cal, &opts)?;
+        let bytes = pqdl::onnx::model_to_json(&preq).len();
+        println!(
+            "  pre-quantized model: {} nodes, {} KiB",
+            preq.graph.nodes.len(),
+            bytes / 1024
+        );
+
+        // ---- 3. Execute on all environments ----------------------------
+        let qsess = Session::new(preq.clone())?;
+        let hw = HwModule::compile(&preq, HwConfig::default())?;
+        println!(
+            "  hw compile: {} stages, rescales exact-from-model: {}",
+            hw.stage_count(),
+            hw.all_rescales_exact()
+        );
+
+        let full = batch_of(&test, &(0..test.len()).collect::<Vec<_>>());
+        let interp_probs = qsess.run(&[("x", full.clone())])?.remove(0);
+        let (hw_probs, cost) = hw.run(&full)?;
+
+        let interp_acc = acc_of(&argmax_rows(&interp_probs, 10), &test);
+        let hw_acc = acc_of(&argmax_rows(&hw_probs, 10), &test);
+        println!(
+            "  accuracy: fp32 {:.2}% | int8 interp {:.2}% | int8 hwsim {:.2}%",
+            100.0 * fp32_acc,
+            100.0 * interp_acc,
+            100.0 * hw_acc
+        );
+        // Agreement measured on the int8 logits (re-quantized probs).
+        let qi = interp_probs.cast(pqdl::tensor::DType::I32);
+        let qh = hw_probs.cast(pqdl::tensor::DType::I32);
+        let rep = compare_quantized(&qi, &qh, 8);
+        println!(
+            "  interp vs hwsim argmax agreement on {} samples; prob tensors exact {:.2}%",
+            test.len(),
+            100.0 * rep.exact_rate()
+        );
+        println!(
+            "  hw cost/inference: {:.0} MACs, {:.0} cycles, {:.1} nJ, util {:.1}%",
+            cost.macs as f64 / test.len() as f64,
+            cost.cycles as f64 / test.len() as f64,
+            cost.energy_nj(&HwConfig::default()) / test.len() as f64,
+            100.0 * cost.utilization(&HwConfig::default())
+        );
+    }
+
+    // ---- 4. Serve through the coordinator ------------------------------
+    println!("\n-- serving (interp + hwsim lanes, dynamic batching) --");
+    let preq = quantize_model(&model, &cal, &QuantizeOptions::default())?;
+    for (mode, max_batch, max_wait_us) in
+        [("batching OFF", 1usize, 1u64), ("batching ON ", 16, 200)]
+    {
+        let coord = CoordinatorBuilder::new(ServerConfig {
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+        })
+        .register("digits", Arc::new(InterpBackend::new(preq.clone())?))
+        .register(
+            "digits_hw",
+            Arc::new(HwSimBackend::new(&preq, HwConfig::default())?),
+        )
+        .start();
+
+        let coord = Arc::new(coord);
+        let n_clients = 16;
+        let per_client = 100;
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..n_clients {
+            let coord = coord.clone();
+            let test = test.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per_client {
+                    let idx = (c * per_client + i) % test.len();
+                    let x = batch_of(&test, &[idx]);
+                    let resp = coord.infer("digits", x).unwrap();
+                    resp.output.unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let stats = coord.metrics.snapshot("digits").unwrap();
+        println!(
+            "  {mode}: {} reqs in {:.2?} = {:.0} req/s | mean batch {:.2} | e2e p50 {}us p95 {}us p99 {}us",
+            n_clients * per_client,
+            elapsed,
+            (n_clients * per_client) as f64 / elapsed.as_secs_f64(),
+            stats.mean_batch(),
+            stats.e2e.quantile_us(0.50),
+            stats.e2e.quantile_us(0.95),
+            stats.e2e.quantile_us(0.99),
+        );
+        coord.shutdown();
+    }
+    println!("\ndone.");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Quickstart: train a tiny fp32 MLP, quantize it into the paper's
+//! pre-quantized ONNX form, and run the SAME model file on the generic
+//! interpreter and the integer-only hardware simulator.
+//!
+//!     cargo run --release --example quickstart
+
+use pqdl::hwsim::{HwConfig, HwModule};
+use pqdl::interp::Session;
+use pqdl::onnx::{model_from_json, model_to_json};
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+use pqdl::tensor::Tensor;
+use pqdl::train::{accuracy, synthetic_digits, train_classifier, HiddenAct, Mlp};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Train a small fp32 model on a real (synthetic) workload.
+    let data = synthetic_digits(1200, 7);
+    let (train, test) = data.split(0.2, 8);
+    let mut mlp = Mlp::new(&[64, 32, 10], HiddenAct::Relu, 9);
+    println!("training fp32 MLP ({} params)...", mlp.param_count());
+    train_classifier(&mut mlp, &train, 20, 32, 0.1, 0.9, 10);
+    let fp32_acc = accuracy(&mlp, &test);
+    println!("fp32 test accuracy: {:.1}%", 100.0 * fp32_acc);
+
+    // 2. Export to ONNX form and calibrate on training data.
+    let model = mlp.to_model("quickstart_mlp");
+    let sess = Session::new(model.clone())?;
+    let batches: Vec<_> = (0..64)
+        .map(|i| {
+            let (x, _) = train.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange)?;
+
+    // 3. Rewrite into the pre-quantized patterns (Fig. 2 here: FC+ReLU),
+    //    embedding Quant_scale / Quant_shift as initializers (2-Mul form).
+    let preq = quantize_model(&model, &cal, &QuantizeOptions::default())?;
+    let text = model_to_json(&preq);
+    println!(
+        "\npre-quantized model: {} nodes, {} bytes serialized, ops = {:?}",
+        preq.graph.nodes.len(),
+        text.len(),
+        preq.graph
+            .nodes
+            .iter()
+            .map(|n| n.op_type.as_str())
+            .collect::<Vec<_>>()
+    );
+
+    // 4. The serialized file is the interchange: reload and execute it
+    //    on both environments.
+    let reloaded = model_from_json(&text)?;
+    let qsess = Session::new(reloaded.clone())?;
+    let hw = HwModule::compile(&reloaded, HwConfig::default())?;
+
+    let (x0, label) = test.sample(0);
+    let input = Tensor::from_f32(&[1, 64], x0.to_vec())?;
+    let interp_out = qsess.run(&[("x", input.clone())])?;
+    let (hw_out, cost) = hw.run(&input)?;
+
+    let probs_i = interp_out[0].as_f32()?;
+    let probs_h = hw_out.as_f32()?;
+    let argmax = |p: &[f32]| {
+        p.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    println!("\nsample 0 (true label {label}):");
+    println!("  interpreter predicts {} ", argmax(probs_i));
+    println!("  hw simulator predicts {}", argmax(probs_h));
+    let max_diff = probs_i
+        .iter()
+        .zip(probs_h)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("  max |interp - hwsim| prob diff: {max_diff:.6}");
+    println!(
+        "  hw cost: {} MACs, {} cycles, {:.2} uJ, {:.1}% MAC utilization",
+        cost.macs,
+        cost.cycles,
+        cost.energy_nj(&HwConfig::default()) / 1000.0,
+        100.0 * cost.utilization(&HwConfig::default())
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Serving demo: the coordinator fronting all six canonical figure
+//! models with interpreter, hardware-simulator and (when artifacts are
+//! built) XLA/PJRT lanes, under a mixed concurrent load.
+//!
+//!     make artifacts && cargo run --release --example serve_demo
+
+use pqdl::coordinator::{
+    CoordinatorBuilder, HwSimBackend, InterpBackend, PjrtBackend, ServerConfig,
+};
+use pqdl::figures::Figure;
+use pqdl::hwsim::HwConfig;
+use pqdl::runtime::PjrtService;
+use pqdl::train::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let artifact_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let pjrt = if artifact_dir.join("manifest.json").exists() {
+        println!("loading + compiling PJRT artifacts...");
+        let svc = PjrtService::spawn(artifact_dir)?;
+        let rows = svc.verify_golden()?;
+        let worst = rows.iter().map(|(_, _, d)| *d).max().unwrap_or(0);
+        println!(
+            "  {} artifacts verified against python golden outputs (max LSB diff {})",
+            rows.len(),
+            worst
+        );
+        Some(svc)
+    } else {
+        println!("artifacts/ not built; PJRT lanes disabled (run `make artifacts`)");
+        None
+    };
+
+    let mut builder = CoordinatorBuilder::new(ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+    });
+    let mut lanes = Vec::new();
+    for fig in Figure::ALL {
+        let model = fig.model();
+        builder = builder.register(
+            &format!("{}/interp", fig.name()),
+            Arc::new(InterpBackend::new(model.clone())?),
+        );
+        builder = builder.register(
+            &format!("{}/hwsim", fig.name()),
+            Arc::new(HwSimBackend::new(&model, HwConfig::default())?),
+        );
+        lanes.push(format!("{}/interp", fig.name()));
+        lanes.push(format!("{}/hwsim", fig.name()));
+        if let Some(svc) = &pjrt {
+            builder = builder.register(
+                &format!("{}/pjrt", fig.name()),
+                Arc::new(PjrtBackend::new(svc.clone(), fig.name())?),
+            );
+            lanes.push(format!("{}/pjrt", fig.name()));
+        }
+    }
+    let coord = Arc::new(builder.start());
+    println!("serving {} lanes\n", coord.models().len());
+
+    // Mixed load: 6 client threads, random lane + random input each.
+    let n_clients = 6;
+    let per_client = 150;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let coord = coord.clone();
+        let lanes = lanes.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64 + 1);
+            let mut errors = 0usize;
+            for i in 0..per_client {
+                let lane = &lanes[rng.below(lanes.len())];
+                let fig_name = lane.split('/').next().unwrap();
+                let fig = Figure::ALL
+                    .into_iter()
+                    .find(|f| f.name() == fig_name)
+                    .unwrap();
+                let x = fig.input(1, (c * 10_000 + i) as u64);
+                match coord.infer(lane, x) {
+                    Ok(resp) if resp.output.is_ok() => {}
+                    _ => errors += 1,
+                }
+            }
+            errors
+        }));
+    }
+    let mut total_errors = 0;
+    for j in joins {
+        total_errors += j.join().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let total = n_clients * per_client;
+    println!(
+        "{} requests in {:.2?} = {:.0} req/s ({} errors)\n",
+        total,
+        elapsed,
+        total as f64 / elapsed.as_secs_f64(),
+        total_errors
+    );
+    println!("{}", coord.metrics.report());
+    if let Some(svc) = &pjrt {
+        svc.shutdown();
+    }
+    coord.shutdown();
+    Ok(())
+}

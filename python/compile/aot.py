@@ -1,0 +1,78 @@
+"""AOT pipeline: lower every Figure variant to HLO *text* + manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Python runs ONLY here, at build time. The Rust runtime
+(``rust/src/runtime``) loads ``artifacts/<variant>_b<batch>.hlo.txt``
+via the PJRT C API and never touches Python again.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"variants": {}}
+    for name, (fn, input_builder) in model.VARIANTS.items():
+        entries = []
+        for batch in BATCHES:
+            example = input_builder(batch)
+            spec = jax.ShapeDtypeStruct(example.shape, example.dtype)
+            lowered = jax.jit(lambda x, f=fn: (f(x),)).lower(spec)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_b{batch}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            # Golden output for the canonical input (lets the Rust side
+            # verify the PJRT round trip without running Python).
+            out = np.asarray(fn(example))
+            entries.append(
+                {
+                    "batch": batch,
+                    "file": fname,
+                    "input_dtype": str(example.dtype),
+                    "input_shape": list(example.shape),
+                    "output_dtype": str(out.dtype),
+                    "output_shape": list(out.shape),
+                    "golden_input_seed": 42,
+                    "golden_output": out.reshape(-1).astype(int).tolist(),
+                }
+            )
+            print(f"wrote {fname} ({len(text)} chars)")
+        manifest["variants"][name] = entries
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json with {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    main()

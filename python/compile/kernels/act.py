@@ -1,0 +1,99 @@
+"""L1 Pallas kernels for the quantized activation tails (Figures 4-6).
+
+Two realizations of the same codified stage:
+
+* ``act_lut`` — the int8->int8 stage as a 256-entry table lookup, i.e.
+  exactly what the fixed-point accelerator does (mirrors
+  ``rust/src/hwsim/lut.rs``). The ROM is baked at trace time from the
+  model's codified scales.
+* ``act_float`` — the literal ONNX pipeline (Dequantize -> [f16 cast] ->
+  Tanh/Sigmoid -> Quantize) as a Pallas kernel, matching the standard
+  tooling path bit-for-bit.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def build_lut(act, f16, in_scale, out_scale, out_dtype):
+    """Bake the 256-entry ROM: index = (q8 as u8), value = requantized
+    activation output.
+
+    Built with the SAME jnp ops as the float pipeline (XLA's f16
+    transcendentals differ from numpy's by 1 ULP, and the ROM must
+    reproduce the standard-tool path bit-exactly)."""
+    q = np.arange(-128, 128, dtype=np.int32)
+    x = jnp.asarray(q, dtype=jnp.float32) * jnp.float32(in_scale)
+    if f16:
+        x = x.astype(jnp.float16)
+    if act == "tanh":
+        y = jnp.tanh(x)
+    elif act == "sigmoid":
+        y = 1.0 / (1.0 + jnp.exp(-x))
+    else:
+        raise ValueError(act)
+    y = np.asarray(y.astype(jnp.float32))
+    info = np.iinfo(out_dtype)
+    # np.round is round-half-even, matching ONNX QuantizeLinear.
+    vals = np.clip(np.round(y / np.float32(out_scale)), info.min, info.max)
+    # Table indexed by u8 reinterpretation of the int8 input.
+    table = np.zeros(256, dtype=np.int32)
+    table[(q & 0xFF)] = vals.astype(np.int32)
+    return jnp.asarray(table)
+
+
+def _lut_kernel(x_ref, t_ref, o_ref, *, out_dtype):
+    idx = x_ref[...].astype(jnp.int32) & 0xFF
+    o_ref[...] = t_ref[...][idx].astype(out_dtype)
+
+
+def act_lut(q8, act, f16, in_scale, out_scale, out_dtype=jnp.int8):
+    """Apply the activation stage via ROM lookup (hardware realization)."""
+    table = build_lut(act, f16, in_scale, out_scale, out_dtype)
+    flat = q8.reshape(-1)
+    kernel = functools.partial(_lut_kernel, out_dtype=out_dtype)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, out_dtype),
+        interpret=True,
+    )(flat, table)
+    return out.reshape(q8.shape)
+
+
+def _float_kernel(x_ref, o_ref, *, act, f16, in_scale, out_scale, out_dtype):
+    x = x_ref[...].astype(jnp.float32) * jnp.float32(in_scale)
+    if f16:
+        x = x.astype(jnp.float16)
+    if act == "tanh":
+        y = jnp.tanh(x)
+    else:
+        one = x.dtype.type(1.0) if hasattr(x.dtype, "type") else 1.0
+        y = 1.0 / (1.0 + jnp.exp(-x))
+        del one
+    y = y.astype(jnp.float32)
+    info = jnp.iinfo(out_dtype)
+    q = jnp.round(y / jnp.float32(out_scale))
+    o_ref[...] = jnp.clip(q, info.min, info.max).astype(out_dtype)
+
+
+def act_float(q8, act, f16, in_scale, out_scale, out_dtype=jnp.int8):
+    """The literal ONNX activation tail as a Pallas kernel."""
+    flat = q8.reshape(-1)
+    kernel = functools.partial(
+        _float_kernel,
+        act=act,
+        f16=f16,
+        in_scale=float(in_scale),
+        out_scale=float(out_scale),
+        out_dtype=out_dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, out_dtype),
+        interpret=True,
+    )(flat)
+    return out.reshape(q8.shape)

@@ -1,0 +1,44 @@
+"""L1 ConvInteger path: im2col layout transform (L2, jnp) feeding the
+Pallas int8 GEMM tile (L1), plus the fused rescale epilogue.
+
+On the TPU mapping, im2col is the BlockSpec-expressible HBM->VMEM
+gather; the MAC work itself goes through the same ``matmul_int8`` tile
+as the fully-connected path — mirroring how the ASIC reuses one MAC
+array for both layer types (and how the Rust interpreter and hwsim share
+``gemm_i32``).
+"""
+
+import jax.numpy as jnp
+
+from . import matmul_int8 as mm
+
+
+def im2col_pad1(x_q, kh, kw):
+    """int8 NCHW -> [n, c*kh*kw, h*w] patch matrix (stride 1, pad 1),
+    row order (c, ky, kx) matching rust ops::conv::im2col."""
+    n, c, h, w = x_q.shape
+    xp = jnp.pad(x_q, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    patches = []
+    for ci in range(c):
+        for ky in range(kh):
+            for kx in range(kw):
+                patches.append(xp[:, ci, ky:ky + h, kx:kx + w].reshape(n, h * w))
+    return jnp.stack(patches, axis=1)
+
+
+def conv_int8_requant(x_q, w_q, b_q, multiplier, relu=False,
+                      out_dtype=jnp.int8):
+    """Figure 3 block: ConvInteger(pad1) + bias + 1-Mul rescale +
+    QuantizeLinear, with the GEMM on the Pallas tile."""
+    n, c, h, w = x_q.shape
+    m, _, kh, kw = w_q.shape
+    col = im2col_pad1(x_q, kh, kw)  # [n, k', hw] int8
+    wm = w_q.reshape(m, c * kh * kw)  # [m, k'] int8
+    outs = []
+    for b in range(n):
+        acc = mm.matmul_int8(wm, col[b], block_m=m, block_n=h * w)
+        acc = acc + b_q.astype(jnp.int32)[:, None]
+        outs.append(acc)
+    acc = jnp.stack(outs, axis=0).reshape(n, m, h, w)
+    return mm.rescale_requant(acc, multiplier, 1.0, relu=relu,
+                              out_dtype=out_dtype)

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: int8 GEMM with i32 accumulation and a fused
+rescale + requantize epilogue.
+
+Hardware adaptation (GPU->TPU, see DESIGN.md section "Hardware
+adaptation"): the paper's target is a fixed-point ASIC with int8 MACs and
+i32 accumulators. On TPU the analogue is the MXU with
+``preferred_element_type=int32`` accumulation; VMEM plays the role of the
+accelerator's SRAM, so we tile M x N with BlockSpec (K resident) and fuse
+the section-3.1 rescale + round + clip into the same kernel so the i32
+accumulator tile never leaves VMEM — the structural equivalent of the
+ASIC's rescale unit sitting behind the MAC array.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against ``ref.py`` in
+pytest, and TPU-perf is *estimated* from the BlockSpec in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_int8_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: int8 x int8 -> int32."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def matmul_int8(x_q, w_q, block_m=None, block_n=None):
+    """MatMulInteger semantics: [m,k] int8 x [k,n] int8 -> [m,n] int32."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (k, k2)
+    bm = block_m or min(m, 128)
+    bn = block_n or min(n, 128)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x_q, w_q)
+
+
+def _fc_requant_kernel(x_ref, w_ref, b_ref, o_ref, *, quant_scale,
+                       quant_shift, relu, out_dtype):
+    """Fused FC tile: MatMulInteger + bias + rescale + round/clip.
+
+    The epilogue reproduces the ONNX chain bit-for-bit: Cast to f32,
+    Mul by the integer-valued Quant_scale FLOAT, Mul by Quant_shift,
+    (Relu,) then QuantizeLinear's round-half-even + saturation.
+    """
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    acc = acc + b_ref[...].astype(jnp.int32)[None, :]
+    f = acc.astype(jnp.float32)
+    f = f * jnp.float32(quant_scale) * jnp.float32(quant_shift)
+    if relu:
+        f = jnp.maximum(f, 0.0)
+    info = jnp.iinfo(out_dtype)
+    q = jnp.round(f)
+    o_ref[...] = jnp.clip(q, info.min, info.max).astype(out_dtype)
+
+
+def fc_requant(x_q, w_q, b_q, quant_scale, quant_shift, relu=False,
+               out_dtype=jnp.int8, block_m=None, block_n=None):
+    """Figures 1/2 as ONE fused Pallas kernel (the paper's FC hot-spot).
+
+    The i32 accumulator tile lives in VMEM only; HBM sees int8 in,
+    int8/uint8 out — the memory-traffic profile of the ASIC datapath.
+    """
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm = block_m or min(m, 128)
+    bn = block_n or min(n, 128)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    kernel = functools.partial(
+        _fc_requant_kernel,
+        quant_scale=float(quant_scale),
+        quant_shift=float(quant_shift),
+        relu=relu,
+        out_dtype=out_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,
+    )(x_q, w_q, b_q)
+
+
+def rescale_requant(acc_i32, quant_scale, quant_shift, relu=False,
+                    out_dtype=jnp.int8):
+    """Standalone rescale+requantize Pallas kernel (vector epilogue as
+    its own stage, used by the conv path where the GEMM runs separately).
+    """
+    def kernel(a_ref, o_ref):
+        f = a_ref[...].astype(jnp.float32)
+        f = f * jnp.float32(quant_scale) * jnp.float32(quant_shift)
+        if relu:
+            f = jnp.maximum(f, 0.0)
+        info = jnp.iinfo(out_dtype)
+        o_ref[...] = jnp.clip(jnp.round(f), info.min, info.max).astype(out_dtype)
+
+    flat = acc_i32.reshape(-1)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, out_dtype),
+        interpret=True,
+    )(flat)
+    return out.reshape(acc_i32.shape)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracle implementing the ONNX operator semantics.
+
+This is the correctness ground truth for the Pallas kernels (pytest
+compares kernel vs ref) and mirrors, operation for operation, the Rust
+``ops/`` implementations — so L1 (Pallas), L2 (JAX) and L3 (Rust interp)
+all agree on the same contract:
+
+* ``MatMulInteger``: int8/uint8 x int8 -> int32 accumulation.
+* rescale (paper section 3.1): f32 multiply by integer ``Quant_scale``
+  (stored as FLOAT) then by ``Quant_shift`` = 2**-N.
+* ``QuantizeLinear``: round half-to-even, saturate, dtype from the
+  zero-point (int8 vs uint8).
+* ``DequantizeLinear``, f32/f16 ``Tanh``/``Sigmoid``.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_integer(x_q, w_q):
+    """ONNX MatMulInteger with zero-point 0: int32 accumulation."""
+    return jnp.matmul(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quantize_linear(x, scale, out_dtype):
+    """ONNX QuantizeLinear (zero_point = 0): saturating round-half-even.
+
+    jnp.round implements round-half-to-even, matching the ONNX spec and
+    the Rust ``ops::qlinear::round_half_even``.
+    """
+    info = jnp.iinfo(out_dtype)
+    q = jnp.round(x / jnp.float32(scale))
+    return jnp.clip(q, info.min, info.max).astype(out_dtype)
+
+
+def dequantize_linear(q, scale):
+    """ONNX DequantizeLinear (zero_point = 0)."""
+    return q.astype(jnp.float32) * jnp.float32(scale)
+
+
+def rescale(acc_i32, quant_scale, quant_shift):
+    """Paper section 3.1 rescale: Cast INT32->FLOAT then Mul, Mul.
+
+    ``quant_scale`` is the integer-valued FLOAT; ``quant_shift`` is
+    2**-N. Passing quant_shift=1.0 degenerates to the 1-Mul form.
+    """
+    f = acc_i32.astype(jnp.float32)
+    return f * jnp.float32(quant_scale) * jnp.float32(quant_shift)
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def tanh_f16(x_f32):
+    """Fig. 5: Cast FLOAT->FLOAT16, Tanh in f16, Cast back."""
+    return jnp.tanh(x_f32.astype(jnp.float16)).astype(jnp.float32)
+
+
+def sigmoid_f16(x_f32):
+    """Fig. 6: sigmoid evaluated in f16."""
+    h = x_f32.astype(jnp.float16)
+    one = jnp.float16(1.0)
+    return (one / (one + jnp.exp(-h))).astype(jnp.float32)
+
+
+# --- full figure patterns (the oracles for model.py) -----------------------
+
+
+def fig_fc(x_q, w_q, b_q, quant_scale, quant_shift, relu_after=False,
+           out_dtype=jnp.int8):
+    """Figures 1/2: MatMulInteger + Add + Cast + Mul(+Mul) [+Relu] +
+    QuantizeLinear(scale=1)."""
+    acc = matmul_integer(x_q, w_q) + b_q.astype(jnp.int32)
+    f = rescale(acc, quant_scale, quant_shift)
+    if relu_after:
+        f = relu(f)
+    return quantize_linear(f, 1.0, out_dtype)
+
+
+def fig_act(x_q, w_q, b_q, quant_scale, quant_shift, act, f16, in_scale,
+            out_scale, out_dtype):
+    """Figures 4/5/6: fig_fc -> Dequantize -> [f16] act -> Quantize."""
+    q8 = fig_fc(x_q, w_q, b_q, quant_scale, quant_shift, out_dtype=jnp.int8)
+    x = dequantize_linear(q8, in_scale)
+    if act == "tanh":
+        y = tanh_f16(x) if f16 else jnp.tanh(x)
+    elif act == "sigmoid":
+        y = sigmoid_f16(x) if f16 else 1.0 / (1.0 + jnp.exp(-x))
+    else:
+        raise ValueError(act)
+    return quantize_linear(y, out_scale, out_dtype)
+
+
+def conv_integer_pad1(x_q, w_q):
+    """ONNX ConvInteger, stride 1, pad 1, int32 accumulation (NCHW)."""
+    n, c, h, w = x_q.shape
+    m, _, kh, kw = w_q.shape
+    xp = jnp.pad(x_q.astype(jnp.int32), ((0, 0), (0, 0), (1, 1), (1, 1)))
+    patches = []
+    for ci in range(c):
+        for ky in range(kh):
+            for kx in range(kw):
+                patches.append(xp[:, ci, ky:ky + h, kx:kx + w].reshape(n, h * w))
+    col = jnp.stack(patches, axis=1)  # [n, c*kh*kw, h*w]
+    wm = w_q.astype(jnp.int32).reshape(m, c * kh * kw)
+    return jnp.einsum("mk,nkp->nmp", wm, col).reshape(n, m, h, w)
+
+
+def fig_conv(x_q, w_q, b_q, multiplier, out_dtype=jnp.int8):
+    """Figure 3: ConvInteger(pad 1) + Add + Cast + Mul + QuantizeLinear."""
+    m = w_q.shape[0]
+    acc = conv_integer_pad1(x_q, w_q) + b_q.astype(jnp.int32).reshape(1, m, 1, 1)
+    f = rescale(acc, multiplier, 1.0)
+    return quantize_linear(f, 1.0, out_dtype)

@@ -1,0 +1,177 @@
+"""L2: the canonical Figure 1-6 models in JAX, calling the L1 kernels.
+
+Parameters are generated from the SAME integer formulas as
+``rust/src/figures.rs`` (pinned by tests on both sides), so the AOT
+artifacts produced from these functions describe byte-identical networks
+to the ONNX models the Rust stack builds — no weight files cross the
+language boundary.
+
+Formulas (keep in sync with rust/src/figures.rs):
+* weight   w[i, j] = ((i*7 + j*3) mod 23) - 11          (int8)
+* bias     b[j]    = ((j*13) mod 101) - 50              (int32)
+* conv     w[m, c, i, j] = ((m*5 + c*3 + i*7 + j) mod 19) - 9
+* rescale  decompose(multiplier): frac in [0.5, 1), qs = round(frac*2^24)
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import act as act_k
+from .kernels import conv_int8 as conv_k
+from .kernels import matmul_int8 as mm_k
+
+FC_IN = 64
+FC_OUT = 32
+
+
+def canonical_weight(k, n):
+    i = np.arange(k)[:, None]
+    j = np.arange(n)[None, :]
+    return ((i * 7 + j * 3) % 23 - 11).astype(np.int8)
+
+
+def canonical_bias(n):
+    j = np.arange(n)
+    return ((j * 13) % 101 - 50).astype(np.int32)
+
+
+def canonical_conv_kernel(m, c, kh, kw):
+    out = np.zeros((m, c, kh, kw), dtype=np.int8)
+    for mi in range(m):
+        for ci in range(c):
+            for i in range(kh):
+                for j in range(kw):
+                    out[mi, ci, i, j] = (mi * 5 + ci * 3 + i * 7 + j) % 19 - 9
+    return out
+
+
+def canonical_input(batch, dim, seed):
+    """SplitMix64 stream, identical to rust figures::canonical_input."""
+    mask = (1 << 64) - 1
+    gamma = 0x9E3779B97F4A7C15
+    s = (seed + gamma) & mask
+    vals = np.zeros(batch * dim, dtype=np.int8)
+    for idx in range(batch * dim):
+        s = (s + gamma) & mask
+        z = s
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & mask
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask
+        z = z ^ (z >> 31)
+        vals[idx] = np.uint8((z >> 56) & 0xFF).astype(np.int8)
+    return vals.reshape(batch, dim)
+
+
+def decompose(multiplier, max_shift=31):
+    """Section 3.1 decomposition, mirroring rust quant::rescale::decompose."""
+    assert multiplier > 0
+    e = math.floor(math.log2(multiplier)) + 1
+    shift = 24 - e
+    if shift > max_shift:
+        shift = max_shift
+    qs = round(multiplier * 2.0 ** shift)
+    while qs > (1 << 24):
+        qs = (qs + 1) >> 1
+        shift -= 1
+    return qs, shift
+
+
+# --- figure model functions (int8 in -> int8/uint8 out) --------------------
+
+
+def fig1_fc(x_q):
+    """Fig. 1: FC, 2-Mul rescale (1/192), int8 out — fused L1 kernel."""
+    qs, shift = decompose(1.0 / 192.0)
+    return mm_k.fc_requant(
+        x_q,
+        jnp.asarray(canonical_weight(FC_IN, FC_OUT)),
+        jnp.asarray(canonical_bias(FC_OUT)),
+        float(qs),
+        2.0 ** -shift,
+        relu=False,
+        out_dtype=jnp.int8,
+    )
+
+
+def fig2_fc_relu(x_q):
+    """Fig. 2: FC + ReLU, 1-Mul rescale, uint8 out."""
+    return mm_k.fc_requant(
+        x_q,
+        jnp.asarray(canonical_weight(FC_IN, FC_OUT)),
+        jnp.asarray(canonical_bias(FC_OUT)),
+        1.0 / 192.0,
+        1.0,
+        relu=True,
+        out_dtype=jnp.uint8,
+    )
+
+
+def fig3_conv(x_q):
+    """Fig. 3: ConvInteger 1->4 ch, 3x3 pad 1, 1-Mul rescale (1/64)."""
+    return conv_k.conv_int8_requant(
+        x_q,
+        jnp.asarray(canonical_conv_kernel(4, 1, 3, 3)),
+        jnp.asarray(canonical_bias(4)),
+        1.0 / 64.0,
+        relu=False,
+        out_dtype=jnp.int8,
+    )
+
+
+def _fc_to_int8(x_q, multiplier):
+    qs, shift = decompose(multiplier)
+    return mm_k.fc_requant(
+        x_q,
+        jnp.asarray(canonical_weight(FC_IN, FC_OUT)),
+        jnp.asarray(canonical_bias(FC_OUT)),
+        float(qs),
+        2.0 ** -shift,
+        relu=False,
+        out_dtype=jnp.int8,
+    )
+
+
+def fig4_tanh_int8(x_q):
+    """Fig. 4: FC + int8 tanh (full range +-4 mapped onto int8)."""
+    q8 = _fc_to_int8(x_q, 127.0 / (48.0 * 127.0))
+    return act_k.act_float(q8, "tanh", False, 4.0 / 127.0, 1.0 / 127.0,
+                           out_dtype=jnp.int8)
+
+
+def fig5_tanh_f16(x_q):
+    """Fig. 5: FC + genuine-f16 tanh on a narrow (+-2) range."""
+    q8 = _fc_to_int8(x_q, 127.0 / (96.0 * 127.0))
+    return act_k.act_float(q8, "tanh", True, 2.0 / 127.0, 1.0 / 127.0,
+                           out_dtype=jnp.int8)
+
+
+def fig6_sigmoid_f16(x_q):
+    """Fig. 6: FC + f16 sigmoid, uint8 out (sigmoid >= 0)."""
+    qs, shift = decompose(127.0 / (24.0 * 127.0))
+    del qs, shift  # fig6 uses the 1-Mul form
+    q8 = mm_k.fc_requant(
+        x_q,
+        jnp.asarray(canonical_weight(FC_IN, FC_OUT)),
+        jnp.asarray(canonical_bias(FC_OUT)),
+        127.0 / (24.0 * 127.0),
+        1.0,
+        relu=False,
+        out_dtype=jnp.int8,
+    )
+    return act_k.act_float(q8, "sigmoid", True, 8.0 / 127.0, 1.0 / 255.0,
+                           out_dtype=jnp.uint8)
+
+
+#: variant name -> (fn, input builder(batch) -> np array)
+VARIANTS = {
+    "fig1_fc": (fig1_fc, lambda b: canonical_input(b, FC_IN, 42)),
+    "fig2_fc_relu": (fig2_fc_relu, lambda b: canonical_input(b, FC_IN, 42)),
+    "fig3_conv": (
+        fig3_conv,
+        lambda b: canonical_input(b, 64, 42).reshape(b, 1, 8, 8),
+    ),
+    "fig4_tanh_int8": (fig4_tanh_int8, lambda b: canonical_input(b, FC_IN, 42)),
+    "fig5_tanh_f16": (fig5_tanh_f16, lambda b: canonical_input(b, FC_IN, 42)),
+    "fig6_sigmoid_f16": (fig6_sigmoid_f16, lambda b: canonical_input(b, FC_IN, 42)),
+}

@@ -1,0 +1,159 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes and seeds; exact equality is required —
+these are integer/quantized pipelines where "close" is not a thing.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import act as act_k
+from compile.kernels import conv_int8 as conv_k
+from compile.kernels import matmul_int8 as mm_k
+from compile.kernels import ref
+
+
+def rand_i8(rng, shape):
+    return rng.integers(-128, 128, size=shape, dtype=np.int64).astype(np.int8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 64),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_int8_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_i8(rng, (m, k))
+    w = rand_i8(rng, (k, n))
+    got = mm_k.matmul_int8(jnp.asarray(x), jnp.asarray(w), block_m=m, block_n=n)
+    want = ref.matmul_integer(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_int8_tiled_grid():
+    # Multi-tile grid must agree with the single-tile result.
+    rng = np.random.default_rng(7)
+    x = rand_i8(rng, (16, 64))
+    w = rand_i8(rng, (64, 32))
+    whole = mm_k.matmul_int8(jnp.asarray(x), jnp.asarray(w), block_m=16, block_n=32)
+    tiled = mm_k.matmul_int8(jnp.asarray(x), jnp.asarray(w), block_m=4, block_n=8)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(tiled))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    relu=st.booleans(),
+    unsigned=st.booleans(),
+    qs=st.integers(1, 1 << 24),
+    shift=st.integers(0, 31),
+)
+def test_fc_requant_matches_ref(seed, relu, unsigned, qs, shift):
+    rng = np.random.default_rng(seed)
+    m, k, n = 4, 16, 8
+    x = rand_i8(rng, (m, k))
+    w = rand_i8(rng, (k, n))
+    b = rng.integers(-1000, 1000, size=n, dtype=np.int32)
+    out_dtype = jnp.uint8 if unsigned else jnp.int8
+    got = mm_k.fc_requant(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+        float(qs), 2.0 ** -shift, relu=relu, out_dtype=out_dtype,
+        block_m=m, block_n=n,
+    )
+    want = ref.fig_fc(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+        float(qs), 2.0 ** -shift, relu_after=relu, out_dtype=out_dtype,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fc_requant_round_half_even():
+    # acc = 3, multiplier 0.5 -> 1.5 -> rounds to 2? No: half-even -> 2.
+    # acc = 5 -> 2.5 -> 2 (even), distinguishing from round-half-away.
+    x = jnp.asarray(np.array([[1]], dtype=np.int8))
+    w = jnp.asarray(np.array([[1]], dtype=np.int8))
+    for acc, want in [(3, 2), (5, 2), (1, 0), (-3, -2), (-5, -2)]:
+        b = jnp.asarray(np.array([acc - 1], dtype=np.int32))
+        got = mm_k.fc_requant(x, w, b, 1.0, 0.5, block_m=1, block_n=1)
+        assert int(np.asarray(got)[0, 0]) == want, (acc, want)
+
+
+def test_fc_requant_saturates():
+    x = jnp.asarray(np.full((1, 1), 127, dtype=np.int8))
+    w = jnp.asarray(np.full((1, 1), 127, dtype=np.int8))
+    b = jnp.asarray(np.zeros(1, dtype=np.int32))
+    got = mm_k.fc_requant(x, w, b, 1.0, 1.0, block_m=1, block_n=1)
+    assert int(np.asarray(got)[0, 0]) == 127
+    got = mm_k.fc_requant(x, -w, b, 1.0, 1.0, block_m=1, block_n=1)
+    assert int(np.asarray(got)[0, 0]) == -128
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    act=st.sampled_from(["tanh", "sigmoid"]),
+    f16=st.booleans(),
+)
+def test_act_float_matches_ref(seed, act, f16):
+    rng = np.random.default_rng(seed)
+    q8 = rand_i8(rng, (32,))
+    in_scale, out_scale = 4.0 / 127.0, 1.0 / 127.0
+    out_dtype = jnp.uint8 if act == "sigmoid" else jnp.int8
+    got = act_k.act_float(jnp.asarray(q8), act, f16, in_scale, out_scale,
+                          out_dtype=out_dtype)
+    x = ref.dequantize_linear(jnp.asarray(q8), in_scale)
+    if act == "tanh":
+        y = ref.tanh_f16(x) if f16 else jnp.tanh(x)
+    else:
+        y = ref.sigmoid_f16(x) if f16 else 1.0 / (1.0 + jnp.exp(-x))
+    want = ref.quantize_linear(y, out_scale, out_dtype)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    act=st.sampled_from(["tanh", "sigmoid"]),
+    f16=st.booleans(),
+)
+def test_act_lut_matches_float_pipeline(seed, act, f16):
+    # The hardware ROM and the literal float pipeline must agree exactly
+    # at full 8-bit index width (same claim as rust hwsim::lut tests).
+    rng = np.random.default_rng(seed)
+    q8 = rand_i8(rng, (64,))
+    in_scale, out_scale = 2.0 / 127.0, 1.0 / 127.0
+    out_dtype = jnp.uint8 if act == "sigmoid" else jnp.int8
+    via_lut = act_k.act_lut(jnp.asarray(q8), act, f16, in_scale, out_scale,
+                            out_dtype=out_dtype)
+    via_float = act_k.act_float(jnp.asarray(q8), act, f16, in_scale,
+                                out_scale, out_dtype=out_dtype)
+    np.testing.assert_array_equal(np.asarray(via_lut), np.asarray(via_float))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), batch=st.integers(1, 3))
+def test_conv_int8_matches_ref(seed, batch):
+    rng = np.random.default_rng(seed)
+    x = rand_i8(rng, (batch, 1, 8, 8))
+    w = rand_i8(rng, (4, 1, 3, 3))
+    b = rng.integers(-500, 500, size=4, dtype=np.int32)
+    got = conv_k.conv_int8_requant(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), 1.0 / 64.0
+    )
+    want = ref.fig_conv(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), 1.0 / 64.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_linear_dtype_selection():
+    x = jnp.asarray(np.array([-300.0, -0.5, 0.5, 300.0], dtype=np.float32))
+    q_i8 = ref.quantize_linear(x, 1.0, jnp.int8)
+    q_u8 = ref.quantize_linear(x, 1.0, jnp.uint8)
+    assert q_i8.dtype == jnp.int8
+    assert q_u8.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(q_i8), [-128, 0, 0, 127])
+    np.testing.assert_array_equal(np.asarray(q_u8), [0, 0, 0, 255])

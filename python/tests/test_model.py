@@ -1,0 +1,92 @@
+"""L2 model tests: canonical parameters pinned to the Rust side, the
+section-3.1 decomposition, and every Figure variant's shape/dtype
+contract against the ref oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_canonical_values_pinned_to_rust():
+    # Must match rust/src/figures.rs::canonical_values_stable exactly.
+    w = model.canonical_weight(3, 3)
+    np.testing.assert_array_equal(
+        w.reshape(-1), [-11, -8, -5, -4, -1, 2, 3, 6, 9]
+    )
+    b = model.canonical_bias(3)
+    np.testing.assert_array_equal(b, [-50, -37, -24])
+    k = model.canonical_conv_kernel(1, 1, 2, 2)
+    np.testing.assert_array_equal(k.reshape(-1), [-9, -8, -2, -1])
+    x = model.canonical_input(1, 4, 42)
+    np.testing.assert_array_equal(x.reshape(-1), [40, 71, 88, 9])
+
+
+def test_decompose_paper_example():
+    # Section 3.1: 1/3 -> integer scale ~11184811 at shift 25.
+    qs, shift = model.decompose(1.0 / 3.0)
+    assert shift == 25
+    assert qs in (11184810, 11184811)
+    # Every decomposition must be exactly representable in f32.
+    for m in (0.25, 1 / 192, 1 / 48, 1 / 96, 1 / 24, 0.9, 3.7):
+        qs, shift = model.decompose(m)
+        assert qs <= 1 << 24
+        assert float(np.float32(qs)) == qs
+
+
+@pytest.mark.parametrize("name", sorted(model.VARIANTS))
+@pytest.mark.parametrize("batch", [1, 8])
+def test_variant_contract(name, batch):
+    fn, input_builder = model.VARIANTS[name]
+    x = input_builder(batch)
+    out = np.asarray(fn(jnp.asarray(x)))
+    assert out.shape[0] == batch
+    if name == "fig3_conv":
+        assert out.shape == (batch, 4, 8, 8)
+    else:
+        assert out.shape == (batch, model.FC_OUT)
+    if name in ("fig2_fc_relu", "fig6_sigmoid_f16"):
+        assert out.dtype == np.uint8
+    else:
+        assert out.dtype == np.int8
+
+
+def test_fig1_matches_ref_oracle():
+    x = jnp.asarray(model.canonical_input(4, model.FC_IN, 1))
+    qs, shift = model.decompose(1.0 / 192.0)
+    want = ref.fig_fc(
+        x,
+        jnp.asarray(model.canonical_weight(model.FC_IN, model.FC_OUT)),
+        jnp.asarray(model.canonical_bias(model.FC_OUT)),
+        float(qs),
+        2.0 ** -shift,
+    )
+    got = model.fig1_fc(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fig3_matches_ref_oracle():
+    x = jnp.asarray(model.canonical_input(2, 64, 3).reshape(2, 1, 8, 8))
+    want = ref.fig_conv(
+        x,
+        jnp.asarray(model.canonical_conv_kernel(4, 1, 3, 3)),
+        jnp.asarray(model.canonical_bias(4)),
+        1.0 / 64.0,
+    )
+    got = model.fig3_conv(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fig4_vs_fig5_range_and_precision():
+    # Same input, different codified ranges: fig4 maps the full +-4 tanh
+    # range (coarser, saturates), fig5 evaluates in f16 on +-2 (finer).
+    # Both stay in the int8 domain and visibly differ (precision choice
+    # is observable in the output, which is the point of the two figures).
+    x = jnp.asarray(model.canonical_input(8, model.FC_IN, 9))
+    y4 = np.asarray(model.fig4_tanh_int8(x)).astype(np.int32)
+    y5 = np.asarray(model.fig5_tanh_f16(x)).astype(np.int32)
+    assert y4.min() >= -127 and y4.max() <= 127
+    assert y5.min() >= -127 and y5.max() <= 127
+    assert (y4 != y5).sum() > 0

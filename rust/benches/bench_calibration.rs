@@ -1,0 +1,99 @@
+//! CALIB experiment: the motivation of the paper's §3 — calibration
+//! strategy is a *model-producer* decision, decoupled from the hardware
+//! flow. Trains one fp32 MLP, quantizes it under each strategy, and
+//! reports accuracy on interpreter and hardware simulator (which never
+//! change).
+
+use pqdl::bench_util::section;
+use pqdl::hwsim::{HwConfig, HwModule};
+use pqdl::interp::Session;
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+use pqdl::tensor::Tensor;
+use pqdl::train::{accuracy, synthetic_digits, train_classifier, HiddenAct, Mlp};
+
+fn eval_acc(probs: &Tensor, data: &pqdl::train::Dataset) -> f32 {
+    probs
+        .as_f32()
+        .unwrap()
+        .chunks(10)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .zip(&data.y)
+        .filter(|(p, y)| p == *y)
+        .count() as f32
+        / data.len() as f32
+}
+
+fn main() {
+    let data = synthetic_digits(3000, 777);
+    let (train, test) = data.split(0.2, 778);
+    let mut mlp = Mlp::new(&[64, 64, 10], HiddenAct::Relu, 779);
+    train_classifier(&mut mlp, &train, 25, 32, 0.1, 0.9, 780);
+    let fp32_acc = accuracy(&mlp, &test);
+
+    // Inject synthetic outliers into the calibration stream so the
+    // strategies actually diverge (max-range is outlier-sensitive).
+    let model = mlp.to_model("digits_mlp");
+    let sess = Session::new(model.clone()).unwrap();
+    let mut batches: Vec<Vec<(String, Tensor)>> = (0..128)
+        .map(|i| {
+            let (x, _) = train.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    // 2% of calibration samples carry a large spike.
+    for i in (0..batches.len()).step_by(50) {
+        let mut spiky = batches[i][0].1.as_f32().unwrap().to_vec();
+        spiky[0] = 25.0;
+        batches[i][0].1 = Tensor::from_f32(&[1, 64], spiky).unwrap();
+    }
+
+    let mut xs = Vec::with_capacity(test.len() * 64);
+    for i in 0..test.len() {
+        xs.extend_from_slice(test.sample(i).0);
+    }
+    let full = Tensor::from_f32(&[test.len(), 64], xs).unwrap();
+
+    section(&format!(
+        "calibration ablation (fp32 reference {:.2}%, calib stream has 2% spiky outliers)",
+        100.0 * fp32_acc
+    ));
+    println!("strategy      | int8 interp acc | int8 hwsim acc | input scale");
+    for strategy in [
+        CalibStrategy::MaxRange,
+        CalibStrategy::Percentile(0.999),
+        CalibStrategy::Percentile(0.99),
+        CalibStrategy::Mse,
+    ] {
+        let cal = calibrate(&sess, &batches, strategy).unwrap();
+        let q = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+        let qsess = Session::new(q.clone()).unwrap();
+        let probs = qsess.run(&[("x", full.clone())]).unwrap().remove(0);
+        let interp_acc = eval_acc(&probs, &test);
+        let hw = HwModule::compile(&q, HwConfig::default()).unwrap();
+        let (hw_probs, _) = hw.run(&full).unwrap();
+        let hw_acc = eval_acc(&hw_probs, &test);
+        // Report the embedded input scale (first QuantizeLinear scale).
+        let in_scale = q
+            .graph
+            .initializers
+            .iter()
+            .find(|(n, _)| n.contains("x_scale"))
+            .map(|(_, t)| t.as_f32().unwrap()[0])
+            .unwrap_or(f32::NAN);
+        println!(
+            "{:<13} | {:>14.2}% | {:>13.2}% | {:.5}",
+            format!("{strategy:?}").chars().take(13).collect::<String>(),
+            100.0 * interp_acc,
+            100.0 * hw_acc,
+            in_scale
+        );
+    }
+    println!("\n(the executors and the model format were identical for every row)");
+}

@@ -1,0 +1,82 @@
+//! CODESIGN experiment: one pre-quantized model file, many hardware
+//! points. MAC-array size vs cycles/energy/utilization on the Fig. 3
+//! conv pattern, and activation-ROM width vs accuracy-critical LUT
+//! fidelity on the Fig. 4 tanh pattern — the quantitative form of the
+//! paper's co-design claim.
+
+use pqdl::bench_util::section;
+use pqdl::coordinator::{validate, Backend, HwSimBackend, InterpBackend};
+use pqdl::figures::Figure;
+use pqdl::hwsim::{HwConfig, HwModule, Rounding};
+use pqdl::tensor::Tensor;
+use std::sync::Arc;
+
+fn main() {
+    // --- MAC array sweep on the conv pattern (Fig. 3) -------------------
+    let fig = Figure::Fig3Conv;
+    let model = fig.model();
+    let x = fig.input(16, 99);
+    section("MAC-array sweep on fig3_conv, batch 16 (one model file)");
+    println!("array   | cycles | ideal-cycles | utilization | energy nJ");
+    for dim in [4usize, 8, 16, 32, 64, 128] {
+        let cfg = HwConfig::default().with_array(dim, dim);
+        let hw = HwModule::compile(&model, cfg.clone()).unwrap();
+        let (_, cost) = hw.run(&x).unwrap();
+        let ideal = cost.macs as f64 / (dim * dim) as f64;
+        println!(
+            "{dim:>3}x{dim:<3} | {:>6} | {:>12.0} | {:>10.1}% | {:>9.1}",
+            cost.cycles,
+            ideal,
+            100.0 * cost.utilization(&cfg),
+            cost.energy_nj(&cfg)
+        );
+    }
+
+    // --- LUT width: fidelity of the activation stage (Fig. 4) -----------
+    let fig = Figure::Fig4TanhInt8;
+    let model = fig.model();
+    section("activation-ROM width on fig4_tanh_int8: agreement vs standard tools");
+    println!("lut bits | exact%   | <=1 LSB% | max LSB diff");
+    let inputs: Vec<Tensor> = (0..40).map(|s| fig.input(8, s)).collect();
+    for bits in [8u32, 7, 6, 5, 4, 3] {
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(InterpBackend::new(model.clone()).unwrap()),
+            Arc::new(
+                HwSimBackend::new(&model, HwConfig::default().with_lut_bits(bits)).unwrap(),
+            ),
+        ];
+        let rep = validate(fig.name(), &backends, &inputs).unwrap();
+        let r = &rep.rows[0].report;
+        println!(
+            "{bits:>8} | {:>7.3}% | {:>7.3}% | {:>12}",
+            100.0 * r.exact_rate(),
+            100.0 * r.within(1),
+            r.max_abs_diff
+        );
+    }
+
+    // --- Rounding hardware: fidelity of the rescale unit (Fig. 1) -------
+    let fig = Figure::Fig1FcTwoMul;
+    let model = fig.model();
+    section("rescale rounding mode on fig1_fc: agreement vs standard tools");
+    println!("rounding      | exact%   | <=1 LSB% | max LSB diff");
+    let inputs: Vec<Tensor> = (0..40).map(|s| fig.input(8, s)).collect();
+    for (name, r) in [
+        ("half-even   ", Rounding::HalfEven),
+        ("half-away-0 ", Rounding::HalfAwayFromZero),
+        ("truncate    ", Rounding::Truncate),
+    ] {
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(InterpBackend::new(model.clone()).unwrap()),
+            Arc::new(HwSimBackend::new(&model, HwConfig::default().with_rounding(r)).unwrap()),
+        ];
+        let rep = validate(fig.name(), &backends, &inputs).unwrap();
+        let rr = &rep.rows[0].report;
+        println!(
+            "{name} | {:>7.3}% | {:>7.3}% | {:>12}",
+            100.0 * rr.exact_rate(),
+            100.0 * rr.within(1),
+            rr.max_abs_diff
+        );
+    }
+}

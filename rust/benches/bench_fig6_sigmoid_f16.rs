@@ -1,0 +1,5 @@
+//! Regenerates the paper's fig6_sigmoid_f16 pattern and benches it across all
+//! inference environments (see DESIGN.md experiment index).
+fn main() {
+    pqdl::bench_util::fig::run_figure_bench(pqdl::figures::Figure::Fig6SigmoidF16);
+}

@@ -1,0 +1,46 @@
+//! GOAL3 experiment: "closely matching output (within narrow margins)
+//! on all inference environments" — the paper's goal 3, measured.
+//!
+//! Every Figure 1–6 pattern × {interp (reference), hwsim, pjrt} × 1000
+//! random inputs: exact-match rate, ≤1-LSB rate, max LSB difference.
+//! These are the headline rows of EXPERIMENTS.md.
+
+use pqdl::bench_util::fig::backends_for;
+use pqdl::bench_util::section;
+use pqdl::coordinator::validate;
+use pqdl::figures::Figure;
+use pqdl::tensor::Tensor;
+
+fn main() {
+    let n_inputs = 125; // x batch 8 = 1000 samples per figure
+    section(&format!(
+        "cross-environment agreement, {} inputs x batch 8 per figure",
+        n_inputs
+    ));
+    let mut all_ok = true;
+    for fig in Figure::ALL {
+        let backends = backends_for(fig);
+        let inputs: Vec<Tensor> = (0..n_inputs).map(|s| fig.input(8, s as u64)).collect();
+        let report = validate(fig.name(), &backends, &inputs).expect("validate");
+        print!("{}", report.table());
+        // Slope-amplified tolerance per figure (see DESIGN.md).
+        let tol = match fig {
+            Figure::Fig4TanhInt8 => 5,
+            Figure::Fig5TanhF16 => 3,
+            Figure::Fig6SigmoidF16 => 6,
+            _ => 1,
+        };
+        let ok = report.all_within(tol);
+        println!("--> within {tol} LSB everywhere: {ok}\n");
+        all_ok &= ok;
+    }
+    println!(
+        "GOAL3 verdict: {}",
+        if all_ok {
+            "PASS — all environments agree within narrow margins"
+        } else {
+            "FAIL"
+        }
+    );
+    assert!(all_ok);
+}

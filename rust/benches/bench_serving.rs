@@ -1,0 +1,83 @@
+//! E2E serving experiment: coordinator throughput/latency on the
+//! quantized digits MLP as dynamic batching scales, closed-loop clients.
+
+use pqdl::bench_util::section;
+use pqdl::coordinator::{CoordinatorBuilder, InterpBackend, ServerConfig};
+use pqdl::interp::Session;
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+use pqdl::tensor::Tensor;
+use pqdl::train::{synthetic_digits, train_classifier, HiddenAct, Mlp};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    // One trained + quantized model serves the whole bench.
+    let data = synthetic_digits(2000, 31);
+    let (train, _) = data.split(0.2, 32);
+    let mut mlp = Mlp::new(&[64, 128, 64, 10], HiddenAct::Relu, 33);
+    train_classifier(&mut mlp, &train, 10, 32, 0.08, 0.9, 34);
+    let model = mlp.to_model("digits");
+    let sess = Session::new(model.clone()).unwrap();
+    let batches: Vec<_> = (0..64)
+        .map(|i| {
+            let (x, _) = train.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
+    let preq = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+
+    section("dynamic batching sweep (16 closed-loop clients x 150 reqs)");
+    println!(
+        "{:<28} | {:>9} | {:>10} | {:>8} | {:>8} | {:>8}",
+        "config", "req/s", "mean batch", "p50 us", "p95 us", "p99 us"
+    );
+    for (max_batch, wait_us) in [
+        (1usize, 1u64),
+        (2, 100),
+        (4, 100),
+        (8, 200),
+        (16, 200),
+        (32, 500),
+    ] {
+        let coord = Arc::new(
+            CoordinatorBuilder::new(ServerConfig {
+                max_batch,
+                max_wait: Duration::from_micros(wait_us),
+            })
+            .register("digits", Arc::new(InterpBackend::new(preq.clone()).unwrap()))
+            .start(),
+        );
+        let n_clients = 16;
+        let per_client = 150;
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..n_clients {
+            let coord = coord.clone();
+            let train = train.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per_client {
+                    let (x, _) = train.sample((c * per_client + i) % train.len());
+                    let t = Tensor::from_f32(&[1, 64], x.to_vec()).unwrap();
+                    coord.infer("digits", t).unwrap().output.unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let stats = coord.metrics.snapshot("digits").unwrap();
+        println!(
+            "{:<28} | {:>9.0} | {:>10.2} | {:>8} | {:>8} | {:>8}",
+            format!("max_batch {max_batch}, wait {wait_us}us"),
+            (n_clients * per_client) as f64 / elapsed.as_secs_f64(),
+            stats.mean_batch(),
+            stats.e2e.quantile_us(0.50),
+            stats.e2e.quantile_us(0.95),
+            stats.e2e.quantile_us(0.99),
+        );
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,143 @@
+//! "Narrow margins" measurement (paper goal 3).
+//!
+//! Quantifies agreement between two executions of the same pre-quantized
+//! model on different backends: exact-match rate, LSB-difference
+//! histogram, max absolute difference — the numbers EXPERIMENTS.md
+//! reports for every figure.
+
+use crate::tensor::{DType, Tensor};
+
+/// Comparison summary between two integer tensors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MatchReport {
+    pub elements: usize,
+    pub exact: usize,
+    /// Histogram of |a-b|: index 0 = exact, 1 = 1 LSB, ...; last bucket
+    /// accumulates everything >= its index.
+    pub lsb_hist: Vec<usize>,
+    pub max_abs_diff: i32,
+    pub mean_abs_diff: f64,
+}
+
+impl MatchReport {
+    pub fn exact_rate(&self) -> f64 {
+        if self.elements == 0 {
+            return 1.0;
+        }
+        self.exact as f64 / self.elements as f64
+    }
+
+    /// Fraction of elements within `lsb` LSBs.
+    pub fn within(&self, lsb: usize) -> f64 {
+        if self.elements == 0 {
+            return 1.0;
+        }
+        let ok: usize = self.lsb_hist.iter().take(lsb + 1).sum();
+        ok as f64 / self.elements as f64
+    }
+
+    /// Merge another report into this one (accumulating over inputs).
+    pub fn merge(&mut self, other: &MatchReport) {
+        let prev = self.elements;
+        self.elements += other.elements;
+        self.exact += other.exact;
+        if self.lsb_hist.len() < other.lsb_hist.len() {
+            self.lsb_hist.resize(other.lsb_hist.len(), 0);
+        }
+        for (i, &c) in other.lsb_hist.iter().enumerate() {
+            self.lsb_hist[i] += c;
+        }
+        self.max_abs_diff = self.max_abs_diff.max(other.max_abs_diff);
+        if self.elements > 0 {
+            self.mean_abs_diff = (self.mean_abs_diff * prev as f64
+                + other.mean_abs_diff * other.elements as f64)
+                / self.elements as f64;
+        }
+    }
+}
+
+/// Compare two quantized tensors element-wise (widened to i32).
+pub fn compare_quantized(a: &Tensor, b: &Tensor, hist_buckets: usize) -> MatchReport {
+    let av = a.as_quantized_i32().unwrap_or_default();
+    let bv = b.as_quantized_i32().unwrap_or_default();
+    let n = av.len().min(bv.len());
+    let mut hist = vec![0usize; hist_buckets.max(2)];
+    let mut exact = 0usize;
+    let mut max_d = 0i32;
+    let mut sum_d = 0f64;
+    for i in 0..n {
+        let d = (av[i] - bv[i]).abs();
+        if d == 0 {
+            exact += 1;
+        }
+        let bucket = (d as usize).min(hist.len() - 1);
+        hist[bucket] += 1;
+        max_d = max_d.max(d);
+        sum_d += d as f64;
+    }
+    MatchReport {
+        elements: n,
+        exact,
+        lsb_hist: hist,
+        max_abs_diff: max_d,
+        mean_abs_diff: if n > 0 { sum_d / n as f64 } else { 0.0 },
+    }
+}
+
+/// Max |a-b| between two f32 tensors (fp32 reference comparisons).
+pub fn max_abs_diff_f32(a: &Tensor, b: &Tensor) -> f32 {
+    debug_assert_eq!(a.dtype(), DType::F32);
+    let av = a.as_f32().unwrap_or_default();
+    let bv = b.as_f32().unwrap_or_default();
+    av.iter()
+        .zip(bv)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match() {
+        let a = Tensor::from_i8(&[4], vec![1, -2, 3, -4]).unwrap();
+        let r = compare_quantized(&a, &a, 4);
+        assert_eq!(r.exact_rate(), 1.0);
+        assert_eq!(r.max_abs_diff, 0);
+        assert_eq!(r.within(0), 1.0);
+    }
+
+    #[test]
+    fn lsb_histogram() {
+        let a = Tensor::from_i8(&[4], vec![0, 0, 0, 0]).unwrap();
+        let b = Tensor::from_i8(&[4], vec![0, 1, -1, 5]).unwrap();
+        let r = compare_quantized(&a, &b, 4);
+        assert_eq!(r.exact, 1);
+        assert_eq!(r.lsb_hist[0], 1);
+        assert_eq!(r.lsb_hist[1], 2);
+        assert_eq!(r.lsb_hist[3], 1); // 5 clamps into last bucket
+        assert_eq!(r.max_abs_diff, 5);
+        assert_eq!(r.within(1), 0.75);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let a = Tensor::from_i8(&[2], vec![0, 0]).unwrap();
+        let b = Tensor::from_i8(&[2], vec![0, 1]).unwrap();
+        let mut total = MatchReport::default();
+        total.merge(&compare_quantized(&a, &b, 3));
+        total.merge(&compare_quantized(&a, &a, 3));
+        assert_eq!(total.elements, 4);
+        assert_eq!(total.exact, 3);
+        assert_eq!(total.max_abs_diff, 1);
+        assert!((total.mean_abs_diff - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f32_diff() {
+        let a = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![1.5, 2.0]).unwrap();
+        assert_eq!(max_abs_diff_f32(&a, &b), 0.5);
+    }
+}

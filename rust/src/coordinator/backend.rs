@@ -1,0 +1,337 @@
+//! Execution backends behind one trait: the generic interpreter, the
+//! integer hardware simulator, and the XLA/PJRT artifacts. The
+//! coordinator routes and batches without knowing which is which —
+//! exactly the portability story of the paper (one model file, many
+//! inference environments).
+
+use crate::hwsim::{CostReport, HwConfig, HwModule};
+use crate::interp::Session;
+use crate::onnx::Model;
+use crate::runtime::PjrtService;
+use crate::tensor::{DType, Tensor, TensorData};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Mutex;
+
+/// A batched inference engine for one model.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &str;
+    /// Execute a batch (axis 0 = batch).
+    fn run_batch(&self, input: &Tensor) -> Result<Tensor>;
+}
+
+/// Interpreter backend ("standard tool" path).
+pub struct InterpBackend {
+    session: Session,
+}
+
+impl InterpBackend {
+    pub fn new(model: Model) -> Result<InterpBackend> {
+        Ok(InterpBackend {
+            session: Session::new(model).map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+}
+
+impl Backend for InterpBackend {
+    fn name(&self) -> &str {
+        "interp"
+    }
+
+    fn run_batch(&self, input: &Tensor) -> Result<Tensor> {
+        let name = self
+            .session
+            .model()
+            .graph
+            .runtime_inputs()
+            .first()
+            .map(|vi| vi.name.clone())
+            .ok_or_else(|| anyhow!("model has no inputs"))?;
+        let mut out = self
+            .session
+            .run(&[(&name, input.clone())])
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(out.remove(0))
+    }
+}
+
+/// Hardware-simulator backend (integer-only path) with accumulated cost.
+pub struct HwSimBackend {
+    module: HwModule,
+    total_cost: Mutex<CostReport>,
+}
+
+impl HwSimBackend {
+    pub fn new(model: &Model, cfg: HwConfig) -> Result<HwSimBackend> {
+        Ok(HwSimBackend {
+            module: HwModule::compile(model, cfg).map_err(|e| anyhow!("{e}"))?,
+            total_cost: Mutex::new(CostReport::default()),
+        })
+    }
+
+    /// Total accumulated cost across all served batches.
+    pub fn total_cost(&self) -> CostReport {
+        self.total_cost.lock().unwrap().clone()
+    }
+}
+
+impl Backend for HwSimBackend {
+    fn name(&self) -> &str {
+        "hwsim"
+    }
+
+    fn run_batch(&self, input: &Tensor) -> Result<Tensor> {
+        let (out, cost) = self.module.run(input).map_err(|e| anyhow!("{e}"))?;
+        self.total_cost.lock().unwrap().add(&cost);
+        Ok(out)
+    }
+}
+
+/// PJRT backend over the AOT artifacts (via the thread-confined
+/// [`PjrtService`] — the xla handles are not `Send`). Artifacts have
+/// fixed batch sizes; requests are padded up to the smallest fitting
+/// artifact (or chunked through the largest one).
+pub struct PjrtBackend {
+    service: PjrtService,
+    variant: String,
+    batches: Vec<usize>,
+}
+
+impl PjrtBackend {
+    pub fn new(service: PjrtService, variant: &str) -> Result<PjrtBackend> {
+        let batches = service
+            .batches(variant)
+            .ok_or_else(|| anyhow!("no artifacts for variant '{variant}'"))?
+            .to_vec();
+        if batches.is_empty() {
+            bail!("no artifacts for variant '{variant}'");
+        }
+        Ok(PjrtBackend {
+            service,
+            variant: variant.to_string(),
+            batches,
+        })
+    }
+
+    fn run_exact(&self, input: &Tensor, batch: usize) -> Result<Tensor> {
+        self.service.run_exact(&self.variant, batch, input.clone())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn run_batch(&self, input: &Tensor) -> Result<Tensor> {
+        let n = *input
+            .shape()
+            .first()
+            .ok_or_else(|| anyhow!("rank-0 input"))?;
+        // Exact-size artifact?
+        if self.batches.contains(&n) {
+            return self.run_exact(input, n);
+        }
+        let max_b = *self.batches.last().unwrap();
+        if n < max_b {
+            // Pad up to the smallest artifact >= n.
+            let target = *self.batches.iter().find(|&&b| b >= n).unwrap();
+            let padded = pad_batch(input, target)?;
+            let out = self.run_exact(&padded, target)?;
+            slice_batch(&out, n)
+        } else {
+            // Chunk through the largest artifact.
+            let mut outs = Vec::new();
+            let mut off = 0;
+            while off < n {
+                let take = max_b.min(n - off);
+                let chunk = slice_batch_range(input, off, take)?;
+                let padded = if take == max_b {
+                    chunk
+                } else {
+                    pad_batch(&chunk, max_b)?
+                };
+                let out = self.run_exact(&padded, max_b)?;
+                outs.push(slice_batch(&out, take)?);
+                off += take;
+            }
+            concat_batch(&outs)
+        }
+    }
+}
+
+// --- batch tensor manipulation --------------------------------------------
+
+fn row_elems(t: &Tensor) -> usize {
+    t.shape()[1..].iter().product()
+}
+
+macro_rules! per_dtype {
+    ($t:expr, $v:ident, $body:expr) => {
+        match $t.data() {
+            TensorData::F32($v) => TensorData::F32($body),
+            TensorData::F16($v) => TensorData::F16($body),
+            TensorData::I8($v) => TensorData::I8($body),
+            TensorData::U8($v) => TensorData::U8($body),
+            TensorData::I32($v) => TensorData::I32($body),
+            TensorData::I64($v) => TensorData::I64($body),
+            TensorData::Bool($v) => TensorData::Bool($body),
+        }
+    };
+}
+
+/// Concatenate along axis 0. All tensors must share dtype + row shape.
+pub fn concat_batch(tensors: &[Tensor]) -> Result<Tensor> {
+    let first = tensors.first().ok_or_else(|| anyhow!("empty concat"))?;
+    let row_shape = &first.shape()[1..];
+    let dtype = first.dtype();
+    let mut total = 0usize;
+    for t in tensors {
+        if &t.shape()[1..] != row_shape || t.dtype() != dtype {
+            bail!(
+                "concat mismatch: {:?}/{} vs {:?}/{}",
+                t.shape(),
+                t.dtype(),
+                first.shape(),
+                dtype
+            );
+        }
+        total += t.shape()[0];
+    }
+    let mut shape = vec![total];
+    shape.extend_from_slice(row_shape);
+
+    macro_rules! concat_as {
+        ($variant:ident, $ty:ty) => {{
+            let mut out: Vec<$ty> = Vec::with_capacity(total * row_shape.iter().product::<usize>());
+            for t in tensors {
+                match t.data() {
+                    TensorData::$variant(v) => out.extend_from_slice(v),
+                    _ => unreachable!(),
+                }
+            }
+            TensorData::$variant(out)
+        }};
+    }
+    let data = match dtype {
+        DType::F32 => concat_as!(F32, f32),
+        DType::F16 => concat_as!(F16, crate::tensor::F16),
+        DType::I8 => concat_as!(I8, i8),
+        DType::U8 => concat_as!(U8, u8),
+        DType::I32 => concat_as!(I32, i32),
+        DType::I64 => concat_as!(I64, i64),
+        DType::Bool => concat_as!(Bool, bool),
+    };
+    Ok(Tensor::new(shape, data)?)
+}
+
+/// Split along axis 0 into chunks of the given sizes.
+pub fn split_batch(t: &Tensor, sizes: &[usize]) -> Result<Vec<Tensor>> {
+    let re = row_elems(t);
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut off = 0usize;
+    for &n in sizes {
+        out.push(slice_batch_range(t, off, n)?);
+        off += n;
+    }
+    if off != t.shape()[0] {
+        bail!("split sizes {:?} != batch {}", sizes, t.shape()[0]);
+    }
+    let _ = re;
+    Ok(out)
+}
+
+/// First `n` rows.
+pub fn slice_batch(t: &Tensor, n: usize) -> Result<Tensor> {
+    slice_batch_range(t, 0, n)
+}
+
+/// Rows [off, off+n).
+pub fn slice_batch_range(t: &Tensor, off: usize, n: usize) -> Result<Tensor> {
+    if off + n > t.shape()[0] {
+        bail!("slice {off}+{n} out of batch {}", t.shape()[0]);
+    }
+    let re = row_elems(t);
+    let (a, b) = (off * re, (off + n) * re);
+    let data = per_dtype!(t, v, v[a..b].to_vec());
+    let mut shape = vec![n];
+    shape.extend_from_slice(&t.shape()[1..]);
+    Ok(Tensor::new(shape, data)?)
+}
+
+/// Pad with zero rows up to `target` rows.
+pub fn pad_batch(t: &Tensor, target: usize) -> Result<Tensor> {
+    let n = t.shape()[0];
+    if target < n {
+        bail!("pad target {target} < batch {n}");
+    }
+    if target == n {
+        return Ok(t.clone());
+    }
+    let mut shape = vec![target - n];
+    shape.extend_from_slice(&t.shape()[1..]);
+    let zeros = Tensor::zeros(t.dtype(), &shape);
+    concat_batch(&[t.clone(), zeros])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::Figure;
+
+    #[test]
+    fn concat_split_round_trip() {
+        let a = Tensor::from_i8(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let b = Tensor::from_i8(&[1, 3], vec![7, 8, 9]).unwrap();
+        let c = concat_batch(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(c.shape(), &[3, 3]);
+        let parts = split_batch(&c, &[2, 1]).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn concat_rejects_mismatch() {
+        let a = Tensor::from_i8(&[1, 3], vec![1, 2, 3]).unwrap();
+        let b = Tensor::from_i8(&[1, 2], vec![1, 2]).unwrap();
+        assert!(concat_batch(&[a.clone(), b]).is_err());
+        let c = Tensor::from_u8(&[1, 3], vec![1, 2, 3]).unwrap();
+        assert!(concat_batch(&[a, c]).is_err());
+    }
+
+    #[test]
+    fn pad_and_slice() {
+        let a = Tensor::from_i8(&[2, 2], vec![1, 2, 3, 4]).unwrap();
+        let p = pad_batch(&a, 4).unwrap();
+        assert_eq!(p.shape(), &[4, 2]);
+        assert_eq!(p.as_i8().unwrap()[4..], [0, 0, 0, 0]);
+        let s = slice_batch(&p, 2).unwrap();
+        assert_eq!(s, a);
+    }
+
+    #[test]
+    fn interp_backend_batching_transparent() {
+        let fig = Figure::Fig1FcTwoMul;
+        let be = InterpBackend::new(fig.model()).unwrap();
+        let x = fig.input(4, 11);
+        let whole = be.run_batch(&x).unwrap();
+        // Per-row execution must give identical rows.
+        for i in 0..4 {
+            let row = slice_batch_range(&x, i, 1).unwrap();
+            let out = be.run_batch(&row).unwrap();
+            assert_eq!(
+                out.as_i8().unwrap(),
+                &whole.as_i8().unwrap()[i * 32..(i + 1) * 32]
+            );
+        }
+    }
+
+    #[test]
+    fn hwsim_backend_accumulates_cost() {
+        let fig = Figure::Fig1FcTwoMul;
+        let be = HwSimBackend::new(&fig.model(), HwConfig::default()).unwrap();
+        be.run_batch(&fig.input(2, 1)).unwrap();
+        be.run_batch(&fig.input(2, 2)).unwrap();
+        let cost = be.total_cost();
+        assert_eq!(cost.macs, 2 * 2 * 64 * 32);
+    }
+}

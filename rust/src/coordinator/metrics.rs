@@ -1,0 +1,197 @@
+//! Serving metrics: request counters, latency histograms, batch-size
+//! accounting. Lock-guarded (std-thread coordinator; contention is a
+//! few atomics per request, far off the hot path of the actual math).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram (microseconds, buckets 1us..~1s).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    buckets: Vec<u64>, // bucket i covers [2^i, 2^(i+1)) us
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            buckets: vec![0; 32],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+}
+
+impl LatencyHist {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Approximate quantile (upper edge of the bucket containing it).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+}
+
+/// Per-model serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ModelStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub batch_size_sum: u64,
+    pub queue: LatencyHist,
+    pub exec: LatencyHist,
+    pub e2e: LatencyHist,
+}
+
+impl ModelStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Registry-wide metrics store.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<HashMap<String, ModelStats>>,
+}
+
+impl Metrics {
+    pub fn record_batch(
+        &self,
+        model: &str,
+        batch: usize,
+        queue_times: &[Duration],
+        exec: Duration,
+        errored: bool,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(model.to_string()).or_default();
+        s.requests += batch as u64;
+        s.batches += 1;
+        s.batch_size_sum += batch as u64;
+        if errored {
+            s.errors += batch as u64;
+        }
+        for &q in queue_times {
+            s.queue.record(q);
+            s.e2e.record(q + exec);
+        }
+        s.exec.record(exec);
+    }
+
+    pub fn snapshot(&self, model: &str) -> Option<ModelStats> {
+        self.inner.lock().unwrap().get(model).cloned()
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Formatted per-model report lines.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for model in self.models() {
+            if let Some(s) = self.snapshot(&model) {
+                out.push_str(&format!(
+                    "{model}: {} reqs in {} batches (mean batch {:.2}, {} errors)\n  \
+                     e2e p50 {}us p95 {}us p99 {}us max {}us | exec mean {:.0}us | queue mean {:.0}us\n",
+                    s.requests,
+                    s.batches,
+                    s.mean_batch(),
+                    s.errors,
+                    s.e2e.quantile_us(0.5),
+                    s.e2e.quantile_us(0.95),
+                    s.e2e.quantile_us(0.99),
+                    s.e2e.max_us(),
+                    s.exec.mean_us(),
+                    s.queue.mean_us(),
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHist::default();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.95));
+        assert!(h.quantile_us(0.95) <= h.quantile_us(1.0).max(h.max_us()));
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let m = Metrics::default();
+        m.record_batch(
+            "fig1",
+            4,
+            &[Duration::from_micros(5); 4],
+            Duration::from_micros(100),
+            false,
+        );
+        m.record_batch(
+            "fig1",
+            2,
+            &[Duration::from_micros(5); 2],
+            Duration::from_micros(80),
+            false,
+        );
+        let s = m.snapshot("fig1").unwrap();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch(), 3.0);
+        assert!(m.report().contains("fig1"));
+    }
+}

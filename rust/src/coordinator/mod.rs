@@ -1,0 +1,21 @@
+//! L3 serving coordinator.
+//!
+//! Thread-based (tokio is unavailable offline; a std-thread worker per
+//! model lane is the right shape for a CPU inference server anyway):
+//! request router + dynamic batcher ([`server`]), pluggable execution
+//! backends ([`backend`]: interpreter / hwsim / PJRT artifacts), serving
+//! metrics ([`metrics`]) and the cross-backend narrow-margins validation
+//! service ([`validate`]).
+
+pub mod backend;
+pub mod metrics;
+pub mod server;
+pub mod validate;
+
+pub use backend::{
+    concat_batch, pad_batch, slice_batch, split_batch, Backend, HwSimBackend, InterpBackend,
+    PjrtBackend,
+};
+pub use metrics::{LatencyHist, Metrics, ModelStats};
+pub use server::{Coordinator, CoordinatorBuilder, Response, ServerConfig};
+pub use validate::{validate, ValidationReport, ValidationRow};

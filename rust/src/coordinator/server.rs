@@ -1,0 +1,387 @@
+//! The serving loop: per-model worker threads with dynamic batching.
+//!
+//! Size + deadline policy: a worker takes the first queued request,
+//! then keeps admitting requests until either `max_batch` is reached or
+//! `max_wait` has elapsed since the batch opened; the batch is fused
+//! along axis 0 (the models' symbolic `N`), executed once, and split
+//! back per request.
+
+use super::backend::{concat_batch, split_batch, Backend};
+use super::metrics::Metrics;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Maximum requests fused into one execution.
+    pub max_batch: usize,
+    /// Maximum time a batch stays open waiting for more requests.
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A completed inference.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Result<Tensor, String>,
+    /// Time spent queued before execution started.
+    pub queue_time: Duration,
+    /// Execution wall time of the fused batch.
+    pub exec_time: Duration,
+    /// Size of the batch this request was fused into.
+    pub batch_size: usize,
+}
+
+struct Request {
+    id: u64,
+    input: Tensor,
+    enqueued: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+struct ModelLane {
+    tx: mpsc::Sender<Request>,
+}
+
+/// The coordinator: routes requests to per-model batching workers.
+pub struct Coordinator {
+    lanes: HashMap<String, ModelLane>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Builder registering (model name -> backend) lanes.
+pub struct CoordinatorBuilder {
+    config: ServerConfig,
+    backends: Vec<(String, Arc<dyn Backend>)>,
+}
+
+impl CoordinatorBuilder {
+    pub fn new(config: ServerConfig) -> CoordinatorBuilder {
+        CoordinatorBuilder {
+            config,
+            backends: Vec::new(),
+        }
+    }
+
+    /// Register a backend to serve `model`.
+    pub fn register(mut self, model: &str, backend: Arc<dyn Backend>) -> Self {
+        self.backends.push((model.to_string(), backend));
+        self
+    }
+
+    /// Spawn the workers and return the running coordinator.
+    pub fn start(self) -> Coordinator {
+        let metrics = Arc::new(Metrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut lanes = HashMap::new();
+        let mut handles = Vec::new();
+        for (model, backend) in self.backends {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let cfg = self.config.clone();
+            let m = metrics.clone();
+            let stop = shutdown.clone();
+            let model_name = model.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("lane-{model}"))
+                .spawn(move || batch_worker(rx, backend, cfg, m, stop, model_name))
+                .expect("spawning lane worker");
+            lanes.insert(model, ModelLane { tx });
+            handles.push(handle);
+        }
+        Coordinator {
+            lanes,
+            metrics,
+            next_id: AtomicU64::new(1),
+            shutdown,
+            handles: Mutex::new(handles),
+        }
+    }
+}
+
+impl Coordinator {
+    /// Submit one request; returns a receiver for its response.
+    pub fn submit(&self, model: &str, input: Tensor) -> Result<mpsc::Receiver<Response>> {
+        let lane = self
+            .lanes
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            input,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        lane.tx
+            .send(req)
+            .map_err(|_| anyhow!("lane for '{model}' is down"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer(&self, model: &str, input: Tensor) -> Result<Response> {
+        let rx = self.submit(model, input)?;
+        rx.recv().map_err(|_| anyhow!("response channel closed"))
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.lanes.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Stop all workers (drains nothing; pending requests get channel
+    /// errors, matching a hard shutdown).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn batch_worker(
+    rx: mpsc::Receiver<Request>,
+    backend: Arc<dyn Backend>,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    model: String,
+) {
+    loop {
+        // Wait for the batch-opening request.
+        let first = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        let opened = Instant::now();
+        let mut batch = vec![first];
+        let mut rows = batch[0].input.shape().first().copied().unwrap_or(1);
+        // Admit until size or deadline; requests are whole tensors whose
+        // row counts add up (clients usually send single rows).
+        while rows < cfg.max_batch {
+            let elapsed = opened.elapsed();
+            if elapsed >= cfg.max_wait {
+                break;
+            }
+            match rx.recv_timeout(cfg.max_wait - elapsed) {
+                Ok(r) => {
+                    rows += r.input.shape().first().copied().unwrap_or(1);
+                    batch.push(r);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let exec_start = Instant::now();
+        let queue_times: Vec<Duration> = batch
+            .iter()
+            .map(|r| exec_start.duration_since(r.enqueued))
+            .collect();
+        let inputs: Vec<Tensor> = batch.iter().map(|r| r.input.clone()).collect();
+        let sizes: Vec<usize> = inputs
+            .iter()
+            .map(|t| t.shape().first().copied().unwrap_or(1))
+            .collect();
+
+        let result = concat_batch(&inputs).and_then(|fused| {
+            let out = backend.run_batch(&fused)?;
+            split_batch(&out, &sizes)
+        });
+        let exec_time = exec_start.elapsed();
+
+        match result {
+            Ok(outputs) => {
+                metrics.record_batch(&model, batch.len(), &queue_times, exec_time, false);
+                for ((req, out), q) in batch.into_iter().zip(outputs).zip(&queue_times) {
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        output: Ok(out),
+                        queue_time: *q,
+                        exec_time,
+                        batch_size: rows,
+                    });
+                }
+            }
+            Err(e) => {
+                metrics.record_batch(&model, batch.len(), &queue_times, exec_time, true);
+                let msg = e.to_string();
+                for (req, q) in batch.into_iter().zip(&queue_times) {
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        output: Err(msg.clone()),
+                        queue_time: *q,
+                        exec_time,
+                        batch_size: rows,
+                    });
+                }
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::InterpBackend;
+    use crate::figures::Figure;
+    use crate::interp::Session;
+
+    fn coordinator(max_batch: usize, max_wait_ms: u64) -> Coordinator {
+        let fig = Figure::Fig1FcTwoMul;
+        CoordinatorBuilder::new(ServerConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+        })
+        .register(
+            "fig1_fc",
+            Arc::new(InterpBackend::new(fig.model()).unwrap()),
+        )
+        .start()
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let coord = coordinator(8, 1);
+        let fig = Figure::Fig1FcTwoMul;
+        let x = fig.input(1, 3);
+        let resp = coord.infer("fig1_fc", x.clone()).unwrap();
+        let out = resp.output.unwrap();
+        // Must equal a direct session run.
+        let sess = Session::new(fig.model()).unwrap();
+        let want = &sess.run(&[("x", x)]).unwrap()[0];
+        assert_eq!(&out, want);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let coord = coordinator(8, 1);
+        assert!(coord
+            .submit("nope", Figure::Fig1FcTwoMul.input(1, 1))
+            .is_err());
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered_exactly_once_correctly() {
+        let coord = Arc::new(coordinator(8, 5));
+        let fig = Figure::Fig1FcTwoMul;
+        let sess = Session::new(fig.model()).unwrap();
+        let n_threads = 4;
+        let per_thread = 16;
+
+        let mut joins = Vec::new();
+        for t in 0..n_threads {
+            let coord = coord.clone();
+            joins.push(std::thread::spawn(move || {
+                let fig = Figure::Fig1FcTwoMul;
+                let mut results = Vec::new();
+                for i in 0..per_thread {
+                    let seed = (t * 1000 + i) as u64;
+                    let x = fig.input(1, seed);
+                    let resp = coord.infer("fig1_fc", x.clone()).unwrap();
+                    results.push((seed, x, resp));
+                }
+                results
+            }));
+        }
+        let mut total = 0;
+        let mut batched_over_1 = 0;
+        for j in joins {
+            for (seed, x, resp) in j.join().unwrap() {
+                let want = &sess.run(&[("x", x)]).unwrap()[0];
+                let got = resp.output.unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                assert_eq!(&got, want, "seed {seed}");
+                assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+                if resp.batch_size > 1 {
+                    batched_over_1 += 1;
+                }
+                total += 1;
+            }
+        }
+        assert_eq!(total, n_threads * per_thread);
+        // With 4 concurrent submitters and 5ms windows, at least some
+        // requests must actually have been fused.
+        assert!(batched_over_1 > 0, "dynamic batching never engaged");
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        assert_eq!(stats.requests, (n_threads * per_thread) as u64);
+        assert!(stats.mean_batch() > 1.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batch_transparency_property() {
+        // Property: for any request interleaving, coordinator output ==
+        // direct per-request execution (batching must be invisible).
+        use crate::proptest_util::{run_prop, Gen, RangeUsize};
+        struct Plan;
+        impl Gen for Plan {
+            type Value = Vec<u64>;
+            fn generate(&self, rng: &mut crate::train::Rng) -> Vec<u64> {
+                let n = 1 + rng.below(12);
+                (0..n).map(|_| rng.next_u64() % 1000).collect()
+            }
+            fn shrink(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+                if v.len() > 1 {
+                    vec![v[..v.len() / 2].to_vec()]
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+        let _ = RangeUsize { lo: 0, hi: 1 }; // keep import used
+        let coord = coordinator(4, 1);
+        let fig = Figure::Fig1FcTwoMul;
+        let sess = Session::new(fig.model()).unwrap();
+        run_prop("batch_transparency", &Plan, 7, 20, |seeds| {
+            let rxs: Vec<_> = seeds
+                .iter()
+                .map(|&s| coord.submit("fig1_fc", fig.input(1, s)).unwrap())
+                .collect();
+            for (&s, rx) in seeds.iter().zip(rxs) {
+                let resp = rx.recv().map_err(|e| e.to_string())?;
+                let got = resp.output.map_err(|e| e)?;
+                let want = &sess.run(&[("x", fig.input(1, s))]).unwrap()[0];
+                if &got != want {
+                    return Err(format!("mismatch for seed {s}"));
+                }
+            }
+            Ok(())
+        });
+        coord.shutdown();
+    }
+}

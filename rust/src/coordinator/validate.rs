@@ -1,0 +1,108 @@
+//! Cross-backend validation — the paper's goal 3 ("closely matching
+//! output (within narrow margins) on all inference environments") as an
+//! operational service: fan one input set out to every backend and
+//! aggregate LSB-level match reports against a designated reference.
+
+use super::backend::Backend;
+use crate::compare::{compare_quantized, MatchReport};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Agreement of one backend against the reference backend.
+#[derive(Debug)]
+pub struct ValidationRow {
+    pub backend: String,
+    pub report: MatchReport,
+}
+
+/// Outcome of a validation sweep.
+#[derive(Debug)]
+pub struct ValidationReport {
+    pub model: String,
+    pub reference: String,
+    pub inputs: usize,
+    pub rows: Vec<ValidationRow>,
+}
+
+impl ValidationReport {
+    /// True if every backend matches within `lsb_tol` everywhere.
+    pub fn all_within(&self, lsb_tol: i32) -> bool {
+        self.rows.iter().all(|r| r.report.max_abs_diff <= lsb_tol)
+    }
+
+    /// Human-readable table.
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "{}: {} inputs, reference = {}\n",
+            self.model, self.inputs, self.reference
+        );
+        out.push_str("backend  | exact%   | <=1 LSB% | max diff | mean diff\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<8} | {:>7.3}% | {:>7.3}% | {:>8} | {:>9.5}\n",
+                r.backend,
+                100.0 * r.report.exact_rate(),
+                100.0 * r.report.within(1),
+                r.report.max_abs_diff,
+                r.report.mean_abs_diff,
+            ));
+        }
+        out
+    }
+}
+
+/// Run `inputs` through every backend; compare each against
+/// `backends[0]` (the reference, normally the interpreter).
+pub fn validate(
+    model: &str,
+    backends: &[Arc<dyn Backend>],
+    inputs: &[Tensor],
+) -> Result<ValidationReport> {
+    assert!(!backends.is_empty());
+    let reference = &backends[0];
+    let mut rows: Vec<ValidationRow> = backends[1..]
+        .iter()
+        .map(|b| ValidationRow {
+            backend: b.name().to_string(),
+            report: MatchReport::default(),
+        })
+        .collect();
+    for input in inputs {
+        let want = reference.run_batch(input)?;
+        for (row, backend) in rows.iter_mut().zip(&backends[1..]) {
+            let got = backend.run_batch(input)?;
+            row.report.merge(&compare_quantized(&want, &got, 16));
+        }
+    }
+    Ok(ValidationReport {
+        model: model.to_string(),
+        reference: reference.name().to_string(),
+        inputs: inputs.len(),
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{HwSimBackend, InterpBackend};
+    use crate::figures::Figure;
+    use crate::hwsim::HwConfig;
+
+    #[test]
+    fn interp_vs_hwsim_narrow_margins() {
+        for fig in [Figure::Fig1FcTwoMul, Figure::Fig2FcReluOneMul] {
+            let model = fig.model();
+            let backends: Vec<Arc<dyn Backend>> = vec![
+                Arc::new(InterpBackend::new(model.clone()).unwrap()),
+                Arc::new(HwSimBackend::new(&model, HwConfig::default()).unwrap()),
+            ];
+            let inputs: Vec<Tensor> = (0..10).map(|s| fig.input(4, s)).collect();
+            let report = validate(fig.name(), &backends, &inputs).unwrap();
+            assert!(report.all_within(1), "{}", report.table());
+            assert!(report.rows[0].report.exact_rate() > 0.99);
+            assert!(report.table().contains("hwsim"));
+        }
+    }
+}

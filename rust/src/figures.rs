@@ -1,0 +1,291 @@
+//! Canonical Figure 1–6 models with deterministic parameters.
+//!
+//! These are the *shared ground truth* between the Rust stack and the
+//! Python/JAX AOT pipeline: `python/compile/model.py` constructs the
+//! same weights from the same integer formulas, so the PJRT artifacts
+//! and these ONNX models describe the identical network — letting
+//! `bench_goal_match` compare interpreter vs hwsim vs XLA on equal
+//! footing without any weight files changing hands.
+//!
+//! Formulas (do not change without updating `python/compile/model.py`):
+//! * weight  `w[i, j] = ((i*7 + j*3) mod 23) - 11`      (int8)
+//! * bias    `b[j]    = ((j*13) mod 101) - 50`          (int32)
+//! * conv kernel `w[m, c, i, j] = ((m*5 + c*3 + i*7 + j) mod 19) - 9`
+
+use crate::onnx::ir::Attr;
+use crate::onnx::{batched, GraphBuilder, Model};
+use crate::quant::{decompose, QType, RescaleDecomposition};
+use crate::rewrite::patterns::{emit_conv, emit_fc, ActKind, ConvParams, FcParams, RescaleOp};
+use crate::tensor::{DType, Tensor};
+
+/// Default layer sizes of the canonical FC figures.
+pub const FC_IN: usize = 64;
+pub const FC_OUT: usize = 32;
+
+/// Canonical int8 FC weight `[k, n]`.
+pub fn canonical_weight(k: usize, n: usize) -> Tensor {
+    let data: Vec<i8> = (0..k)
+        .flat_map(|i| (0..n).map(move |j| (((i * 7 + j * 3) % 23) as i8) - 11))
+        .collect();
+    Tensor::from_i8(&[k, n], data).unwrap()
+}
+
+/// Canonical i32 bias `[n]`.
+pub fn canonical_bias(n: usize) -> Tensor {
+    let data: Vec<i32> = (0..n).map(|j| ((j * 13) % 101) as i32 - 50).collect();
+    Tensor::from_i32(&[n], data).unwrap()
+}
+
+/// Canonical conv kernel `[m, c, kh, kw]`.
+pub fn canonical_conv_kernel(m: usize, c: usize, kh: usize, kw: usize) -> Tensor {
+    let mut data = Vec::with_capacity(m * c * kh * kw);
+    for mi in 0..m {
+        for ci in 0..c {
+            for i in 0..kh {
+                for j in 0..kw {
+                    data.push((((mi * 5 + ci * 3 + i * 7 + j) % 19) as i8) - 9);
+                }
+            }
+        }
+    }
+    Tensor::from_i8(&[m, c, kh, kw], data).unwrap()
+}
+
+/// The canonical rescale for the FC figures: 1/192 ≈ the right magnitude
+/// to keep the int8 output unsaturated with the canonical weights.
+pub fn canonical_rescale() -> RescaleDecomposition {
+    decompose(1.0 / 192.0, 31).unwrap()
+}
+
+/// Deterministic pseudo-random int8 input for cross-backend checks
+/// (same formula as `python/compile/model.py::canonical_input`).
+pub fn canonical_input(batch: usize, dim: usize, seed: u64) -> Tensor {
+    let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+    let data: Vec<i8> = (0..batch * dim)
+        .map(|_| {
+            s = s.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            ((z ^ (z >> 31)) >> 56) as u8 as i8
+        })
+        .collect();
+    Tensor::from_i8(&[batch, dim], data).unwrap()
+}
+
+/// Which figure pattern a canonical model realizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Figure {
+    Fig1FcTwoMul,
+    Fig2FcReluOneMul,
+    Fig3Conv,
+    Fig4TanhInt8,
+    Fig5TanhF16,
+    Fig6SigmoidF16,
+}
+
+impl Figure {
+    pub const ALL: [Figure; 6] = [
+        Figure::Fig1FcTwoMul,
+        Figure::Fig2FcReluOneMul,
+        Figure::Fig3Conv,
+        Figure::Fig4TanhInt8,
+        Figure::Fig5TanhF16,
+        Figure::Fig6SigmoidF16,
+    ];
+
+    /// Stable name used for artifact files and bench output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Figure::Fig1FcTwoMul => "fig1_fc",
+            Figure::Fig2FcReluOneMul => "fig2_fc_relu",
+            Figure::Fig3Conv => "fig3_conv",
+            Figure::Fig4TanhInt8 => "fig4_tanh_int8",
+            Figure::Fig5TanhF16 => "fig5_tanh_f16",
+            Figure::Fig6SigmoidF16 => "fig6_sigmoid_f16",
+        }
+    }
+
+    /// Input feature shape (without batch dim).
+    pub fn input_dims(&self) -> Vec<usize> {
+        match self {
+            Figure::Fig3Conv => vec![1, 8, 8],
+            _ => vec![FC_IN],
+        }
+    }
+
+    /// Output feature shape (without batch dim).
+    pub fn output_dims(&self) -> Vec<usize> {
+        match self {
+            Figure::Fig3Conv => vec![4, 8, 8],
+            _ => vec![FC_OUT],
+        }
+    }
+
+    /// Output dtype of the pattern.
+    pub fn output_dtype(&self) -> DType {
+        match self {
+            Figure::Fig2FcReluOneMul | Figure::Fig6SigmoidF16 => DType::U8,
+            _ => DType::I8,
+        }
+    }
+
+    /// Build the canonical ONNX model for this figure (int8 I/O, exactly
+    /// the operator sequences of the paper's figures).
+    pub fn model(&self) -> Model {
+        match self {
+            Figure::Fig3Conv => {
+                let params = ConvParams {
+                    weight_q: canonical_conv_kernel(4, 1, 3, 3),
+                    bias_q: Some(canonical_bias(4)),
+                    rescale: RescaleOp::OneMul(1.0 / 64.0),
+                    relu: false,
+                    out_qtype: QType::I8,
+                    strides: [1, 1],
+                    pads: [1, 1, 1, 1],
+                };
+                let mut b = GraphBuilder::new(self.name());
+                b.input("x", DType::I8, &batched(&[1, 8, 8]));
+                let y = emit_conv(&mut b, "x", &params, "c0");
+                b.output(&y, DType::I8, &batched(&[4, 8, 8]));
+                b.finish_model()
+            }
+            _ => {
+                let (rescale, activation, out_qtype) = match self {
+                    Figure::Fig1FcTwoMul => (
+                        RescaleOp::TwoMul(canonical_rescale()),
+                        ActKind::None,
+                        QType::I8,
+                    ),
+                    Figure::Fig2FcReluOneMul => {
+                        (RescaleOp::OneMul(1.0 / 192.0), ActKind::Relu, QType::U8)
+                    }
+                    Figure::Fig4TanhInt8 => (
+                        RescaleOp::TwoMul(decompose(127.0 / (48.0 * 127.0), 31).unwrap()),
+                        ActKind::TanhInt8 {
+                            in_scale: 4.0 / 127.0,
+                            out_scale: 1.0 / 127.0,
+                        },
+                        QType::I8,
+                    ),
+                    Figure::Fig5TanhF16 => (
+                        RescaleOp::TwoMul(decompose(127.0 / (96.0 * 127.0), 31).unwrap()),
+                        ActKind::TanhF16 {
+                            in_scale: 2.0 / 127.0,
+                            out_scale: 1.0 / 127.0,
+                        },
+                        QType::I8,
+                    ),
+                    Figure::Fig6SigmoidF16 => (
+                        RescaleOp::OneMul(127.0 / (24.0 * 127.0)),
+                        ActKind::SigmoidF16 {
+                            in_scale: 8.0 / 127.0,
+                            out_scale: 1.0 / 255.0,
+                        },
+                        QType::U8,
+                    ),
+                    Figure::Fig3Conv => unreachable!(),
+                };
+                let params = FcParams {
+                    weight_q: canonical_weight(FC_IN, FC_OUT),
+                    bias_q: Some(canonical_bias(FC_OUT)),
+                    rescale,
+                    activation,
+                    out_qtype,
+                };
+                let mut b = GraphBuilder::new(self.name());
+                b.input("x", DType::I8, &batched(&[FC_IN]));
+                let y = emit_fc(&mut b, "x", &params, "l0");
+                b.output(&y, self.output_dtype(), &batched(&[FC_OUT]));
+                b.finish_model()
+            }
+        }
+    }
+
+    /// Canonical input batch for this figure.
+    pub fn input(&self, batch: usize, seed: u64) -> Tensor {
+        let dims = self.input_dims();
+        let flat: usize = dims.iter().product();
+        let t = canonical_input(batch, flat, seed);
+        let mut shape = vec![batch];
+        shape.extend(dims);
+        t.reshape(&shape).unwrap()
+    }
+}
+
+/// Attribute helper used by benches to tag models.
+pub fn tag(model: &mut Model, key: &str, value: &str) {
+    model.metadata.push((key.to_string(), value.to_string()));
+    let _ = Attr::Int(0); // keep Attr import meaningful for future tags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::Session;
+
+    #[test]
+    fn all_figures_validate_and_run() {
+        for fig in Figure::ALL {
+            let m = fig.model();
+            crate::onnx::check_model(&m).unwrap_or_else(|e| panic!("{}: {e}", fig.name()));
+            let sess = Session::new(m).unwrap();
+            let x = fig.input(2, 42);
+            let y = sess.run(&[("x", x)]).unwrap();
+            assert_eq!(y[0].dtype(), fig.output_dtype(), "{}", fig.name());
+            let mut want = vec![2usize];
+            want.extend(fig.output_dims());
+            assert_eq!(y[0].shape(), &want[..], "{}", fig.name());
+        }
+    }
+
+    #[test]
+    fn all_figures_run_on_hwsim() {
+        for fig in Figure::ALL {
+            let m = fig.model();
+            let hw =
+                crate::hwsim::HwModule::compile(&m, crate::hwsim::HwConfig::default()).unwrap();
+            let sess = Session::new(m).unwrap();
+            let x = fig.input(3, 7);
+            let want = &sess.run(&[("x", x.clone())]).unwrap()[0];
+            let (got, _) = hw.run(&x).unwrap();
+            let wv = want.as_quantized_i32().unwrap();
+            let gv = got.as_quantized_i32().unwrap();
+            let max_diff = wv
+                .iter()
+                .zip(&gv)
+                .map(|(a, b)| (a - b).abs())
+                .max()
+                .unwrap();
+            // A 1-LSB pre-activation difference (f32 product rounding in
+            // the interp vs exact i64 in hw) is amplified by the
+            // activation's local slope: tanh ≤ in_scale*127 = 2 LSB,
+            // sigmoid ≤ in_scale*0.25*255 ≈ 4 LSB.
+            let tol = match fig {
+                Figure::Fig4TanhInt8 => 4,
+                Figure::Fig5TanhF16 => 2,
+                Figure::Fig6SigmoidF16 => 5,
+                _ => 1,
+            };
+            assert!(
+                max_diff <= tol,
+                "{}: max LSB diff {max_diff} > {tol}",
+                fig.name()
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_values_stable() {
+        // Pin the formulas: any change must be deliberate and mirrored in
+        // python/compile/model.py.
+        let w = canonical_weight(3, 3);
+        assert_eq!(w.as_i8().unwrap(), &[-11, -8, -5, -4, -1, 2, 3, 6, 9]);
+        let b = canonical_bias(3);
+        assert_eq!(b.as_i32().unwrap(), &[-50, -37, -24]);
+        let k = canonical_conv_kernel(1, 1, 2, 2);
+        assert_eq!(k.as_i8().unwrap(), &[-9, -8, -2, -1]);
+        let x = canonical_input(1, 4, 42);
+        assert_eq!(x.as_i8().unwrap(), &[40, 71, 88, 9]);
+    }
+}

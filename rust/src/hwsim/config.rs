@@ -1,0 +1,86 @@
+//! Hardware configuration of the simulated fixed-point accelerator.
+//!
+//! The knobs here are the co-design surface: the model producer never
+//! sees them, and the model file never changes when they change — that
+//! independence is the paper's central claim. Defaults are sized like a
+//! small edge-inference NPU (8×8 MAC array class).
+
+/// Rounding the rescale unit applies to the shifted-out bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round half away from zero (add ±half before shifting) — the
+    /// cheapest fixed-point rounding, common in NPU rescale units.
+    HalfAwayFromZero,
+    /// Round half to even — matches ONNX QuantizeLinear exactly, costs
+    /// one extra comparator.
+    HalfEven,
+    /// Truncate (floor toward zero) — the degenerate no-rounding unit;
+    /// included to let the co-design sweep show why rounding hardware is
+    /// worth its gates.
+    Truncate,
+}
+
+/// Accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    /// Systolic MAC array rows (output-stationary mapping: rows ↔ M).
+    pub mac_rows: usize,
+    /// MAC array columns (↔ N).
+    pub mac_cols: usize,
+    /// Activation LUT index width in bits (8 = exact int8 lookup; fewer
+    /// bits truncate the index and interpolate nothing — the co-design
+    /// sweep measures the accuracy cost).
+    pub lut_bits: u32,
+    /// Rescale-unit rounding mode.
+    pub rounding: Rounding,
+    /// Maximum right-shift the rescale unit supports.
+    pub max_shift: u32,
+    /// Whether an fp16 activation FPU exists (Figs. 5/6). Without it,
+    /// fp16 activation stages fall back to the LUT path.
+    pub has_f16_unit: bool,
+    /// Clock, for latency estimates.
+    pub freq_mhz: f64,
+    /// Energy per int8 MAC (pJ).
+    pub pj_per_mac: f64,
+    /// Energy per byte moved SRAM<->array (pJ).
+    pub pj_per_sram_byte: f64,
+    /// Energy per byte moved DRAM<->SRAM (pJ).
+    pub pj_per_dram_byte: f64,
+}
+
+impl Default for HwConfig {
+    fn default() -> HwConfig {
+        HwConfig {
+            mac_rows: 8,
+            mac_cols: 8,
+            lut_bits: 8,
+            rounding: Rounding::HalfEven,
+            max_shift: 31,
+            has_f16_unit: true,
+            freq_mhz: 800.0,
+            // Representative 7nm-class numbers (order-of-magnitude).
+            pj_per_mac: 0.05,
+            pj_per_sram_byte: 0.2,
+            pj_per_dram_byte: 20.0,
+        }
+    }
+}
+
+impl HwConfig {
+    /// Convenience: a named sweep point for the co-design bench.
+    pub fn with_array(mut self, rows: usize, cols: usize) -> HwConfig {
+        self.mac_rows = rows;
+        self.mac_cols = cols;
+        self
+    }
+
+    pub fn with_lut_bits(mut self, bits: u32) -> HwConfig {
+        self.lut_bits = bits;
+        self
+    }
+
+    pub fn with_rounding(mut self, r: Rounding) -> HwConfig {
+        self.rounding = r;
+        self
+    }
+}

@@ -1,0 +1,135 @@
+//! Cycle / energy / traffic cost model of the simulated accelerator.
+//!
+//! Deliberately simple and auditable: an output-stationary systolic MAC
+//! array (`rows × cols`), single-ported SRAM, DRAM for initial weight
+//! load. Good enough to rank co-design points (array size vs utilization,
+//! LUT width vs accuracy), which is all the paper's claim needs.
+
+use super::config::HwConfig;
+
+/// Accumulated execution cost of one inference.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CostReport {
+    /// Total int8 MAC operations.
+    pub macs: u64,
+    /// Accelerator cycles (MAC array + vector unit + LUT).
+    pub cycles: u64,
+    /// Bytes moved between SRAM and the compute units.
+    pub sram_bytes: u64,
+    /// Bytes loaded from DRAM (weights, once per inference in this model).
+    pub dram_bytes: u64,
+    /// Elementwise vector-unit operations (rescale mul+shift, relu, pool
+    /// compares, LUT lookups).
+    pub vector_ops: u64,
+    /// Work executed on the host CPU (edge quantize/dequantize, softmax),
+    /// in float ops.
+    pub host_flops: u64,
+}
+
+impl CostReport {
+    pub fn add(&mut self, other: &CostReport) {
+        self.macs += other.macs;
+        self.cycles += other.cycles;
+        self.sram_bytes += other.sram_bytes;
+        self.dram_bytes += other.dram_bytes;
+        self.vector_ops += other.vector_ops;
+        self.host_flops += other.host_flops;
+    }
+
+    /// Latency at the configured clock (accelerator cycles only).
+    pub fn latency_us(&self, cfg: &HwConfig) -> f64 {
+        self.cycles as f64 / cfg.freq_mhz
+    }
+
+    /// Energy estimate in nanojoules.
+    pub fn energy_nj(&self, cfg: &HwConfig) -> f64 {
+        (self.macs as f64 * cfg.pj_per_mac
+            + self.sram_bytes as f64 * cfg.pj_per_sram_byte
+            + self.dram_bytes as f64 * cfg.pj_per_dram_byte
+            // Vector/LUT ops cost roughly one MAC each.
+            + self.vector_ops as f64 * cfg.pj_per_mac)
+            / 1000.0
+    }
+
+    /// MAC-array utilization: ideal cycles / modeled cycles.
+    pub fn utilization(&self, cfg: &HwConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let ideal = self.macs as f64 / (cfg.mac_rows * cfg.mac_cols) as f64;
+        (ideal / self.cycles as f64).min(1.0)
+    }
+}
+
+/// Cost of an M×K×N integer GEMM on the systolic array: the array
+/// computes a `rows × cols` output tile per K cycles (output-stationary),
+/// plus a pipeline-fill overhead per tile.
+pub fn gemm_cost(cfg: &HwConfig, m: usize, k: usize, n: usize) -> CostReport {
+    let tiles_m = m.div_ceil(cfg.mac_rows) as u64;
+    let tiles_n = n.div_ceil(cfg.mac_cols) as u64;
+    let fill = (cfg.mac_rows + cfg.mac_cols) as u64; // systolic skew
+    let cycles = tiles_m * tiles_n * (k as u64 + fill);
+    CostReport {
+        macs: (m * k * n) as u64,
+        cycles,
+        // Activations stream in per tile-row; weights per tile.
+        sram_bytes: (m * k) as u64 * tiles_n + (k * n) as u64 * tiles_m + (m * n) as u64 * 4,
+        dram_bytes: (k * n) as u64, // weight load
+        vector_ops: 0,
+        host_flops: 0,
+    }
+}
+
+/// Cost of an elementwise vector stage over `n` elements (`lanes` wide,
+/// one op per element).
+pub fn vector_cost(cfg: &HwConfig, n: usize, ops_per_elem: u64) -> CostReport {
+    let lanes = cfg.mac_cols as u64; // vector unit shares the column width
+    CostReport {
+        cycles: (n as u64 * ops_per_elem).div_ceil(lanes),
+        sram_bytes: (n * 2) as u64, // read + write, 1B each
+        vector_ops: n as u64 * ops_per_elem,
+        ..Default::default()
+    }
+}
+
+/// Host-side float work (edge conversion, softmax).
+pub fn host_cost(n: usize, flops_per_elem: u64) -> CostReport {
+    CostReport {
+        host_flops: n as u64 * flops_per_elem,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_cost_scales_with_mnk() {
+        let cfg = HwConfig::default();
+        let a = gemm_cost(&cfg, 8, 64, 8);
+        let b = gemm_cost(&cfg, 8, 128, 8);
+        assert_eq!(b.macs, 2 * a.macs);
+        assert!(b.cycles > a.cycles);
+    }
+
+    #[test]
+    fn bigger_array_fewer_cycles_lower_utilization_on_small_work() {
+        let small = HwConfig::default().with_array(8, 8);
+        let big = HwConfig::default().with_array(64, 64);
+        let cs = gemm_cost(&small, 32, 256, 32);
+        let cb = gemm_cost(&big, 32, 256, 32);
+        assert!(cb.cycles < cs.cycles);
+        assert!(cb.utilization(&big) < cs.utilization(&small));
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let cfg = HwConfig::default();
+        let mut total = CostReport::default();
+        total.add(&gemm_cost(&cfg, 4, 4, 4));
+        total.add(&vector_cost(&cfg, 16, 2));
+        assert!(total.energy_nj(&cfg) > 0.0);
+        assert!(total.latency_us(&cfg) > 0.0);
+    }
+}

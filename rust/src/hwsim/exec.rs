@@ -1,0 +1,1091 @@
+//! The "hardware tool chain" + integer-only executor.
+//!
+//! [`HwModule::compile`] plays the role of the accelerator vendor's
+//! compiler: it consumes the *same standard ONNX file* every other
+//! backend runs, recognizes the paper's codified patterns, and lifts them
+//! into fixed-point pipeline stages:
+//!
+//! * `MatMulInteger/ConvInteger + Add + Cast + Mul(+Mul) [+Relu] +
+//!   QuantizeLinear` → int8 GEMM/conv with an integer-multiplier +
+//!   right-shift rescale unit (§3.1). With the 2-Mul codification the
+//!   integer constants are read directly from the model; with 1-Mul the
+//!   tool chain derives them (the paper's "responsibility of the
+//!   hardware-specific tool chain").
+//! * `DequantizeLinear [+Cast f16] + Tanh/Sigmoid [+Cast f32] +
+//!   QuantizeLinear` → a 256-entry activation ROM ([`super::lut`]).
+//! * Edge `QuantizeLinear`/`DequantizeLinear`/`Softmax` → host stages.
+//!
+//! Execution is pure integer arithmetic end-to-end on the accelerator
+//! stages — there is no f32 rescale path to fall back on, so agreement
+//! with the interpreter *demonstrates* the paper's expressiveness claim.
+
+use super::config::{HwConfig, Rounding};
+use super::cost::{gemm_cost, host_cost, vector_cost, CostReport};
+use super::lut::{ActEval, ActFn, ActLut};
+use crate::onnx::ir::{Graph, Model, Node};
+use crate::onnx::shape::ConvAttrs;
+use crate::ops::matmul::gemm_i32;
+use crate::quant::QType;
+use crate::tensor::{DType, Tensor};
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum HwError {
+    #[error("unsupported model for hw compilation: {0}")]
+    Unsupported(String),
+    #[error("pattern mismatch at node '{node}': {msg}")]
+    Pattern { node: String, msg: String },
+    #[error("tensor: {0}")]
+    Tensor(#[from] crate::tensor::TensorError),
+    #[error("quant: {0}")]
+    Quant(#[from] crate::quant::QuantError),
+    #[error("execution: {0}")]
+    Exec(String),
+}
+
+fn perr(node: &Node, msg: impl Into<String>) -> HwError {
+    HwError::Pattern {
+        node: node.name.clone(),
+        msg: msg.into(),
+    }
+}
+
+/// Integer rescale constants lifted from the model.
+#[derive(Clone, Copy, Debug)]
+pub struct HwRescale {
+    pub quant_scale: u32,
+    pub shift: u32,
+    /// True when read verbatim from a 2-Mul codification (exact); false
+    /// when derived from a 1-Mul float multiplier.
+    pub exact_from_model: bool,
+}
+
+/// One pipeline stage.
+pub enum Stage {
+    /// Host-side input quantization (float-I/O models only).
+    QuantizeInput { scale: f32, qtype: QType },
+    /// Fully-connected integer block.
+    Fc {
+        /// Widened weights, row-major [K, N].
+        w: Vec<i32>,
+        k: usize,
+        n: usize,
+        bias: Option<Vec<i32>>,
+        rescale: HwRescale,
+        relu: bool,
+        out_qtype: QType,
+    },
+    /// Convolution integer block (NCHW).
+    Conv {
+        w: Vec<i32>,
+        m: usize,
+        c: usize,
+        kh: usize,
+        kw: usize,
+        attrs: ConvAttrs,
+        bias: Option<Vec<i32>>, // length m
+        rescale: HwRescale,
+        relu: bool,
+        out_qtype: QType,
+    },
+    /// Activation ROM stage.
+    Act { lut: ActLut, f16_evaluated: bool },
+    /// Integer max-pool.
+    MaxPool {
+        kernel: [usize; 2],
+        attrs: ConvAttrs,
+    },
+    /// Pure shape change.
+    Flatten { axis: usize },
+    Reshape { spec: Vec<i64> },
+    /// Host-side output dequantization.
+    DequantizeOutput { scale: f32 },
+    /// Host-side softmax (classifier tail).
+    SoftmaxHost { axis: i64 },
+}
+
+/// A compiled, executable hardware program.
+pub struct HwModule {
+    pub cfg: HwConfig,
+    stages: Vec<Stage>,
+    input_dtype: DType,
+}
+
+/// Runtime tensor inside the accelerator: integers widened to i32, plus
+/// the quantized type they logically carry.
+struct HwInt {
+    data: Vec<i32>,
+    shape: Vec<usize>,
+    qtype: QType,
+}
+
+enum HwValue {
+    Int(HwInt),
+    Float(Vec<f32>, Vec<usize>),
+}
+
+fn scalar_f32(g: &Graph, name: &str, node: &Node) -> Result<f32, HwError> {
+    let t = g
+        .initializer(name)
+        .ok_or_else(|| perr(node, format!("'{name}' must be an initializer")))?;
+    if t.numel() != 1 {
+        return Err(perr(node, format!("'{name}' must be scalar")));
+    }
+    Ok(t.as_f32()?[0])
+}
+
+fn zp_qtype(g: &Graph, name: &str, node: &Node) -> Result<QType, HwError> {
+    let t = g
+        .initializer(name)
+        .ok_or_else(|| perr(node, "zero point must be an initializer"))?;
+    match t.dtype() {
+        DType::I8 => Ok(QType::I8),
+        DType::U8 => Ok(QType::U8),
+        d => Err(perr(node, format!("unsupported zero-point dtype {d}"))),
+    }
+}
+
+/// Derive the integer rescale from the Mul scalar(s) (§3.1 both forms).
+fn lift_rescale(muls: &[f32], max_shift: u32) -> Result<HwRescale, HwError> {
+    if muls.len() == 2 {
+        let (s1, s2) = (muls[0] as f64, muls[1] as f64);
+        // 2-Mul form: integer Quant_scale then Quant_shift = 2^-N.
+        let integral = s1.fract() == 0.0 && s1 >= 1.0 && s1 <= (1u64 << 24) as f64;
+        let n = -s2.log2();
+        let pow2 = n.fract() == 0.0 && n >= 0.0 && n <= 63.0;
+        if integral && pow2 {
+            return Ok(HwRescale {
+                quant_scale: s1 as u32,
+                shift: n as u32,
+                exact_from_model: true,
+            });
+        }
+    }
+    // 1-Mul form (or unrecognized constants): the hardware tool chain
+    // derives integer scale + shift itself.
+    let m: f64 = muls.iter().map(|&x| x as f64).product();
+    let d = crate::quant::decompose(m as f32, max_shift)?;
+    Ok(HwRescale {
+        quant_scale: d.quant_scale,
+        shift: d.shift,
+        exact_from_model: false,
+    })
+}
+
+/// Integer rescale + round + saturate — the hardware rescale unit.
+#[inline]
+fn rescale_sat(acc: i32, r: &HwRescale, rounding: Rounding, lo: i32, hi: i32) -> i32 {
+    let prod = acc as i64 * r.quant_scale as i64;
+    let q = if r.shift == 0 {
+        prod
+    } else {
+        match rounding {
+            Rounding::HalfAwayFromZero => {
+                let half = 1i64 << (r.shift - 1);
+                if prod >= 0 {
+                    (prod + half) >> r.shift
+                } else {
+                    -((-prod + half) >> r.shift)
+                }
+            }
+            Rounding::HalfEven => {
+                let floor = prod >> r.shift; // arithmetic = floor
+                let rem = prod - (floor << r.shift);
+                let half = 1i64 << (r.shift - 1);
+                if rem > half || (rem == half && (floor & 1) == 1) {
+                    floor + 1
+                } else {
+                    floor
+                }
+            }
+            Rounding::Truncate => prod >> r.shift,
+        }
+    };
+    q.clamp(lo as i64, hi as i64) as i32
+}
+
+impl HwModule {
+    /// Compile a pre-quantized standard-ONNX model for this hardware.
+    pub fn compile(model: &Model, cfg: HwConfig) -> Result<HwModule, HwError> {
+        let g = &model.graph;
+        let inputs = g.runtime_inputs();
+        if inputs.len() != 1 || g.outputs.len() != 1 {
+            return Err(HwError::Unsupported(
+                "hw compiler expects single-input single-output models".into(),
+            ));
+        }
+        let input_dtype = inputs[0].dtype;
+        let output_name = g.outputs[0].name.clone();
+
+        // The consumer map: emitted graphs are linear chains, enforced here.
+        let consumer_of = |value: &str| -> Result<Option<&Node>, HwError> {
+            let cons: Vec<&Node> = g
+                .nodes
+                .iter()
+                .filter(|n| n.inputs.iter().any(|i| i == value))
+                .collect();
+            match cons.len() {
+                0 => Ok(None),
+                1 => Ok(Some(cons[0])),
+                _ => Err(HwError::Unsupported(format!(
+                    "value '{value}' has multiple consumers; hw compiler handles chains"
+                ))),
+            }
+        };
+
+        let mut stages = Vec::new();
+        let mut cur = inputs[0].name.clone();
+
+        loop {
+            if cur == output_name {
+                break;
+            }
+            let node = match consumer_of(&cur)? {
+                Some(n) => n,
+                None => break,
+            };
+            match node.op_type.as_str() {
+                "QuantizeLinear" => {
+                    // Edge input quantization (f32 host input).
+                    let scale = scalar_f32(g, &node.inputs[1], node)?;
+                    let qtype = zp_qtype(g, &node.inputs[2], node)?;
+                    stages.push(Stage::QuantizeInput { scale, qtype });
+                    cur = node.outputs[0].clone();
+                }
+                "MatMulInteger" => {
+                    let (stage, out) = Self::lift_fc(g, node, &cfg, consumer_of)?;
+                    stages.push(stage);
+                    cur = out;
+                }
+                "ConvInteger" => {
+                    let (stage, out) = Self::lift_conv(g, node, &cfg, consumer_of)?;
+                    stages.push(stage);
+                    cur = out;
+                }
+                "DequantizeLinear" => {
+                    let in_scale = scalar_f32(g, &node.inputs[1], node)?;
+                    // Look ahead: activation tail or output edge?
+                    let next = consumer_of(&node.outputs[0])?;
+                    match next.map(|n| n.op_type.as_str()) {
+                        Some("Cast") | Some("Tanh") | Some("Sigmoid") => {
+                            let (stage, out) =
+                                Self::lift_act(g, node, in_scale, &cfg, consumer_of)?;
+                            stages.push(stage);
+                            cur = out;
+                        }
+                        _ => {
+                            stages.push(Stage::DequantizeOutput { scale: in_scale });
+                            cur = node.outputs[0].clone();
+                        }
+                    }
+                }
+                "MaxPool" => {
+                    let kernel = node
+                        .attr_ints("kernel_shape")
+                        .ok_or_else(|| perr(node, "missing kernel_shape"))?;
+                    stages.push(Stage::MaxPool {
+                        kernel: [kernel[0] as usize, kernel[1] as usize],
+                        attrs: ConvAttrs::from_node(node),
+                    });
+                    cur = node.outputs[0].clone();
+                }
+                "Flatten" => {
+                    stages.push(Stage::Flatten {
+                        axis: node.attr_int("axis").unwrap_or(1) as usize,
+                    });
+                    cur = node.outputs[0].clone();
+                }
+                "Reshape" => {
+                    let spec = g
+                        .initializer(&node.inputs[1])
+                        .ok_or_else(|| perr(node, "reshape spec must be initializer"))?
+                        .as_i64()?
+                        .to_vec();
+                    stages.push(Stage::Reshape { spec });
+                    cur = node.outputs[0].clone();
+                }
+                "Softmax" => {
+                    stages.push(Stage::SoftmaxHost {
+                        axis: node.attr_int("axis").unwrap_or(-1),
+                    });
+                    cur = node.outputs[0].clone();
+                }
+                "Identity" => {
+                    cur = node.outputs[0].clone();
+                }
+                op => {
+                    return Err(perr(node, format!("unsupported op '{op}' in hw chain")))
+                }
+            }
+        }
+
+        Ok(HwModule {
+            cfg,
+            stages,
+            input_dtype,
+        })
+    }
+
+    /// Lift MatMulInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
+    fn lift_fc<'a>(
+        g: &'a Graph,
+        mm: &'a Node,
+        cfg: &HwConfig,
+        consumer_of: impl Fn(&str) -> Result<Option<&'a Node>, HwError>,
+    ) -> Result<(Stage, String), HwError> {
+        let w_t = g
+            .initializer(&mm.inputs[1])
+            .ok_or_else(|| perr(mm, "weight must be initializer"))?;
+        if w_t.rank() != 2 {
+            return Err(perr(mm, "weight must be rank-2"));
+        }
+        let (k, n) = (w_t.shape()[0], w_t.shape()[1]);
+        let w = w_t.as_quantized_i32()?;
+
+        let mut cur = mm.outputs[0].clone();
+        let mut node = consumer_of(&cur)?.ok_or_else(|| perr(mm, "dangling FC block"))?;
+
+        // Optional bias Add.
+        let mut bias = None;
+        if node.op_type == "Add" {
+            let bias_name = if node.inputs[0] == cur {
+                &node.inputs[1]
+            } else {
+                &node.inputs[0]
+            };
+            let b = g
+                .initializer(bias_name)
+                .ok_or_else(|| perr(node, "bias must be initializer"))?;
+            bias = Some(b.as_i32()?.to_vec());
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
+        }
+
+        // Cast INT32 -> FLOAT.
+        if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
+            return Err(perr(node, "expected Cast to FLOAT after accumulate"));
+        }
+        cur = node.outputs[0].clone();
+        node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+
+        // One or two Muls.
+        let mut muls = Vec::new();
+        while node.op_type == "Mul" && muls.len() < 2 {
+            let s_name = if node.inputs[0] == cur {
+                &node.inputs[1]
+            } else {
+                &node.inputs[0]
+            };
+            muls.push(scalar_f32(g, s_name, node)?);
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
+        }
+        if muls.is_empty() {
+            return Err(perr(node, "expected rescale Mul after Cast"));
+        }
+        let rescale = lift_rescale(&muls, cfg.max_shift)?;
+
+        // Optional ReLU.
+        let mut relu = false;
+        if node.op_type == "Relu" {
+            relu = true;
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
+        }
+
+        // Round + clip stage.
+        if node.op_type != "QuantizeLinear" {
+            return Err(perr(node, "expected QuantizeLinear (round+clip)"));
+        }
+        let unit = scalar_f32(g, &node.inputs[1], node)?;
+        if unit != 1.0 {
+            return Err(perr(node, format!("requantize scale must be 1.0, got {unit}")));
+        }
+        let out_qtype = zp_qtype(g, &node.inputs[2], node)?;
+
+        Ok((
+            Stage::Fc {
+                w,
+                k,
+                n,
+                bias,
+                rescale,
+                relu,
+                out_qtype,
+            },
+            node.outputs[0].clone(),
+        ))
+    }
+
+    /// Lift ConvInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
+    fn lift_conv<'a>(
+        g: &'a Graph,
+        cv: &'a Node,
+        cfg: &HwConfig,
+        consumer_of: impl Fn(&str) -> Result<Option<&'a Node>, HwError>,
+    ) -> Result<(Stage, String), HwError> {
+        let w_t = g
+            .initializer(&cv.inputs[1])
+            .ok_or_else(|| perr(cv, "kernel must be initializer"))?;
+        if w_t.rank() != 4 {
+            return Err(perr(cv, "kernel must be rank-4"));
+        }
+        let s = w_t.shape();
+        let (m, c, kh, kw) = (s[0], s[1], s[2], s[3]);
+        let w = w_t.as_quantized_i32()?;
+        let attrs = ConvAttrs::from_node(cv);
+
+        let mut cur = cv.outputs[0].clone();
+        let mut node = consumer_of(&cur)?.ok_or_else(|| perr(cv, "dangling conv block"))?;
+
+        let mut bias = None;
+        if node.op_type == "Add" {
+            let bias_name = if node.inputs[0] == cur {
+                &node.inputs[1]
+            } else {
+                &node.inputs[0]
+            };
+            let b = g
+                .initializer(bias_name)
+                .ok_or_else(|| perr(node, "bias must be initializer"))?;
+            if b.numel() != m {
+                return Err(perr(node, "conv bias must have M elements"));
+            }
+            bias = Some(b.as_i32()?.to_vec());
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
+        }
+
+        if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
+            return Err(perr(node, "expected Cast to FLOAT after conv"));
+        }
+        cur = node.outputs[0].clone();
+        node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+
+        let mut muls = Vec::new();
+        while node.op_type == "Mul" && muls.len() < 2 {
+            let s_name = if node.inputs[0] == cur {
+                &node.inputs[1]
+            } else {
+                &node.inputs[0]
+            };
+            muls.push(scalar_f32(g, s_name, node)?);
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
+        }
+        if muls.is_empty() {
+            return Err(perr(node, "expected rescale Mul after Cast"));
+        }
+        let rescale = lift_rescale(&muls, cfg.max_shift)?;
+
+        let mut relu = false;
+        if node.op_type == "Relu" {
+            relu = true;
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
+        }
+
+        if node.op_type != "QuantizeLinear" {
+            return Err(perr(node, "expected QuantizeLinear (round+clip)"));
+        }
+        let unit = scalar_f32(g, &node.inputs[1], node)?;
+        if unit != 1.0 {
+            return Err(perr(node, "requantize scale must be 1.0"));
+        }
+        let out_qtype = zp_qtype(g, &node.inputs[2], node)?;
+
+        Ok((
+            Stage::Conv {
+                w,
+                m,
+                c,
+                kh,
+                kw,
+                attrs,
+                bias,
+                rescale,
+                relu,
+                out_qtype,
+            },
+            node.outputs[0].clone(),
+        ))
+    }
+
+    /// Lift DequantizeLinear [+Cast f16] + Tanh/Sigmoid [+Cast f32] +
+    /// QuantizeLinear into an activation ROM.
+    fn lift_act<'a>(
+        g: &'a Graph,
+        deq: &'a Node,
+        in_scale: f32,
+        cfg: &HwConfig,
+        consumer_of: impl Fn(&str) -> Result<Option<&'a Node>, HwError>,
+    ) -> Result<(Stage, String), HwError> {
+        let mut cur = deq.outputs[0].clone();
+        let mut node = consumer_of(&cur)?.ok_or_else(|| perr(deq, "dangling act block"))?;
+
+        let mut f16 = false;
+        if node.op_type == "Cast" {
+            if node.attr_str("to") != Some("FLOAT16") {
+                return Err(perr(node, "expected Cast to FLOAT16 in act block"));
+            }
+            f16 = true;
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+        }
+
+        let act_fn = match node.op_type.as_str() {
+            "Tanh" => ActFn::Tanh,
+            "Sigmoid" => ActFn::Sigmoid,
+            op => return Err(perr(node, format!("expected Tanh/Sigmoid, got {op}"))),
+        };
+        cur = node.outputs[0].clone();
+        node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after act fn"))?;
+
+        if f16 {
+            if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
+                return Err(perr(node, "expected Cast back to FLOAT"));
+            }
+            cur = node.outputs[0].clone();
+            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+        }
+
+        if node.op_type != "QuantizeLinear" {
+            return Err(perr(node, "expected final QuantizeLinear in act block"));
+        }
+        let out_scale = scalar_f32(g, &node.inputs[1], node)?;
+        let out_qtype = zp_qtype(g, &node.inputs[2], node)?;
+
+        let eval = if f16 { ActEval::F16 } else { ActEval::F32 };
+        let lut = ActLut::build(act_fn, eval, in_scale, out_scale, out_qtype, cfg.lut_bits);
+        Ok((
+            Stage::Act {
+                lut,
+                f16_evaluated: f16,
+            },
+            node.outputs[0].clone(),
+        ))
+    }
+
+    /// Execute one inference. Returns the output tensor and the cost
+    /// report for this run.
+    pub fn run(&self, input: &Tensor) -> Result<(Tensor, CostReport), HwError> {
+        if input.dtype() != self.input_dtype {
+            return Err(HwError::Exec(format!(
+                "input dtype {} != model input {}",
+                input.dtype(),
+                self.input_dtype
+            )));
+        }
+        let mut cost = CostReport::default();
+        let mut val = match input.dtype() {
+            DType::F32 => HwValue::Float(input.as_f32()?.to_vec(), input.shape().to_vec()),
+            DType::I8 => HwValue::Int(HwInt {
+                data: input.as_quantized_i32()?,
+                shape: input.shape().to_vec(),
+                qtype: QType::I8,
+            }),
+            DType::U8 => HwValue::Int(HwInt {
+                data: input.as_quantized_i32()?,
+                shape: input.shape().to_vec(),
+                qtype: QType::U8,
+            }),
+            d => return Err(HwError::Exec(format!("unsupported input dtype {d}"))),
+        };
+
+        for stage in &self.stages {
+            val = self.run_stage(stage, val, &mut cost)?;
+        }
+
+        let out = match val {
+            HwValue::Float(data, shape) => Tensor::from_f32(&shape, data)?,
+            HwValue::Int(t) => match t.qtype {
+                QType::I8 => {
+                    Tensor::from_i8(&t.shape, t.data.iter().map(|&v| v as i8).collect())?
+                }
+                QType::U8 => {
+                    Tensor::from_u8(&t.shape, t.data.iter().map(|&v| v as u8).collect())?
+                }
+            },
+        };
+        Ok((out, cost))
+    }
+
+    fn run_stage(
+        &self,
+        stage: &Stage,
+        val: HwValue,
+        cost: &mut CostReport,
+    ) -> Result<HwValue, HwError> {
+        match stage {
+            Stage::QuantizeInput { scale, qtype } => {
+                let (data, shape) = match val {
+                    HwValue::Float(d, s) => (d, s),
+                    _ => return Err(HwError::Exec("QuantizeInput expects float".into())),
+                };
+                let (lo, hi) = qtype.range();
+                let inv = 1.0 / scale;
+                let q: Vec<i32> = data
+                    .iter()
+                    .map(|&x| {
+                        crate::ops::qlinear::round_half_even(x * inv)
+                            .clamp(lo as f32, hi as f32) as i32
+                    })
+                    .collect();
+                cost.add(&host_cost(q.len(), 2));
+                Ok(HwValue::Int(HwInt {
+                    data: q,
+                    shape,
+                    qtype: *qtype,
+                }))
+            }
+            Stage::Fc {
+                w,
+                k,
+                n,
+                bias,
+                rescale,
+                relu,
+                out_qtype,
+            } => {
+                let t = match val {
+                    HwValue::Int(t) => t,
+                    _ => return Err(HwError::Exec("Fc expects int".into())),
+                };
+                let m: usize = t.shape[..t.shape.len() - 1].iter().product();
+                let kk = *t.shape.last().ok_or_else(|| HwError::Exec("rank-0 fc".into()))?;
+                if kk != *k {
+                    return Err(HwError::Exec(format!("fc K mismatch {kk} vs {k}")));
+                }
+                let mut acc = vec![0i32; m * n];
+                gemm_i32(&t.data, w, m, *k, *n, &mut acc);
+                if let Some(b) = bias {
+                    for row in acc.chunks_mut(*n) {
+                        for (v, bv) in row.iter_mut().zip(b) {
+                            *v = v.wrapping_add(*bv);
+                        }
+                    }
+                }
+                let (lo, hi) = out_qtype.range();
+                for v in &mut acc {
+                    let mut q = rescale_sat(*v, rescale, self.cfg.rounding, lo, hi);
+                    if *relu && q < 0 {
+                        q = 0;
+                    }
+                    *v = q;
+                }
+                cost.add(&gemm_cost(&self.cfg, m, *k, *n));
+                cost.add(&vector_cost(&self.cfg, m * n, 2));
+                let mut shape = t.shape[..t.shape.len() - 1].to_vec();
+                shape.push(*n);
+                Ok(HwValue::Int(HwInt {
+                    data: acc,
+                    shape,
+                    qtype: *out_qtype,
+                }))
+            }
+            Stage::Conv {
+                w,
+                m,
+                c,
+                kh,
+                kw,
+                attrs,
+                bias,
+                rescale,
+                relu,
+                out_qtype,
+            } => {
+                let t = match val {
+                    HwValue::Int(t) => t,
+                    _ => return Err(HwError::Exec("Conv expects int".into())),
+                };
+                if t.shape.len() != 4 || t.shape[1] != *c {
+                    return Err(HwError::Exec(format!("conv input shape {:?}", t.shape)));
+                }
+                let (nb, h, wd) = (t.shape[0], t.shape[2], t.shape[3]);
+                let out_dim = |i: usize, kk: usize, pb: usize, pe: usize, st: usize, dl: usize| {
+                    (i + pb + pe - (dl * (kk - 1) + 1)) / st + 1
+                };
+                let oh = out_dim(h, *kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0]);
+                let ow = out_dim(wd, *kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1]);
+                let patch_rows = c * kh * kw;
+                let patch = oh * ow;
+                let mut col = vec![0i32; patch_rows * patch];
+                let mut out = vec![0i32; nb * m * patch];
+                for b in 0..nb {
+                    let src = &t.data[b * c * h * wd..(b + 1) * c * h * wd];
+                    im2col_i32(src, *c, h, wd, *kh, *kw, attrs, oh, ow, &mut col);
+                    let dst = &mut out[b * m * patch..(b + 1) * m * patch];
+                    gemm_i32(w, &col, *m, patch_rows, patch, dst);
+                }
+                let (lo, hi) = out_qtype.range();
+                for b in 0..nb {
+                    for mi in 0..*m {
+                        let base = (b * m + mi) * patch;
+                        let bv = bias.as_ref().map(|bb| bb[mi]).unwrap_or(0);
+                        for v in &mut out[base..base + patch] {
+                            let mut q = rescale_sat(
+                                v.wrapping_add(bv),
+                                rescale,
+                                self.cfg.rounding,
+                                lo,
+                                hi,
+                            );
+                            if *relu && q < 0 {
+                                q = 0;
+                            }
+                            *v = q;
+                        }
+                    }
+                }
+                cost.add(&gemm_cost(&self.cfg, *m, patch_rows, nb * patch));
+                cost.add(&vector_cost(&self.cfg, nb * m * patch, 2));
+                Ok(HwValue::Int(HwInt {
+                    data: out,
+                    shape: vec![nb, *m, oh, ow],
+                    qtype: *out_qtype,
+                }))
+            }
+            Stage::Act { lut, .. } => {
+                let mut t = match val {
+                    HwValue::Int(t) => t,
+                    _ => return Err(HwError::Exec("Act expects int".into())),
+                };
+                lut.apply(&mut t.data);
+                cost.add(&vector_cost(&self.cfg, t.data.len(), 1));
+                t.qtype = lut.out_qtype;
+                Ok(HwValue::Int(t))
+            }
+            Stage::MaxPool { kernel, attrs } => {
+                let t = match val {
+                    HwValue::Int(t) => t,
+                    _ => return Err(HwError::Exec("MaxPool expects int".into())),
+                };
+                let (nb, c, h, w) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+                let oh = (h + attrs.pads[0] + attrs.pads[2] - kernel[0]) / attrs.strides[0] + 1;
+                let ow = (w + attrs.pads[1] + attrs.pads[3] - kernel[1]) / attrs.strides[1] + 1;
+                let mut out = Vec::with_capacity(nb * c * oh * ow);
+                for b in 0..nb {
+                    for ci in 0..c {
+                        let plane = &t.data[(b * c + ci) * h * w..(b * c + ci + 1) * h * w];
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let mut best = i32::MIN;
+                                for ky in 0..kernel[0] {
+                                    let iy = (oy * attrs.strides[0] + ky) as isize
+                                        - attrs.pads[0] as isize;
+                                    if iy < 0 || iy as usize >= h {
+                                        continue;
+                                    }
+                                    for kx in 0..kernel[1] {
+                                        let ix = (ox * attrs.strides[1] + kx) as isize
+                                            - attrs.pads[1] as isize;
+                                        if ix < 0 || ix as usize >= w {
+                                            continue;
+                                        }
+                                        best = best.max(plane[iy as usize * w + ix as usize]);
+                                    }
+                                }
+                                out.push(best);
+                            }
+                        }
+                    }
+                }
+                cost.add(&vector_cost(
+                    &self.cfg,
+                    out.len(),
+                    (kernel[0] * kernel[1]) as u64,
+                ));
+                Ok(HwValue::Int(HwInt {
+                    data: out,
+                    shape: vec![nb, c, oh, ow],
+                    qtype: t.qtype,
+                }))
+            }
+            Stage::Flatten { axis } => match val {
+                HwValue::Int(mut t) => {
+                    let d0: usize = t.shape[..*axis].iter().product();
+                    let d1: usize = t.shape[*axis..].iter().product();
+                    t.shape = vec![d0, d1];
+                    Ok(HwValue::Int(t))
+                }
+                HwValue::Float(d, s) => {
+                    let d0: usize = s[..*axis].iter().product();
+                    let d1: usize = s[*axis..].iter().product();
+                    Ok(HwValue::Float(d, vec![d0, d1]))
+                }
+            },
+            Stage::Reshape { spec } => {
+                let (numel, old_shape) = match &val {
+                    HwValue::Int(t) => (t.data.len(), t.shape.clone()),
+                    HwValue::Float(d, s) => (d.len(), s.clone()),
+                };
+                let mut dims = Vec::with_capacity(spec.len());
+                let mut infer = None;
+                for (i, &s) in spec.iter().enumerate() {
+                    match s {
+                        0 => dims.push(old_shape[i]),
+                        -1 => {
+                            infer = Some(i);
+                            dims.push(1);
+                        }
+                        s => dims.push(s as usize),
+                    }
+                }
+                if let Some(at) = infer {
+                    let rest: usize =
+                        dims.iter().enumerate().filter(|(i, _)| *i != at).map(|(_, &d)| d).product();
+                    dims[at] = numel / rest;
+                }
+                Ok(match val {
+                    HwValue::Int(mut t) => {
+                        t.shape = dims;
+                        HwValue::Int(t)
+                    }
+                    HwValue::Float(d, _) => HwValue::Float(d, dims),
+                })
+            }
+            Stage::DequantizeOutput { scale } => {
+                let t = match val {
+                    HwValue::Int(t) => t,
+                    _ => return Err(HwError::Exec("DequantizeOutput expects int".into())),
+                };
+                let f: Vec<f32> = t.data.iter().map(|&q| q as f32 * scale).collect();
+                cost.add(&host_cost(f.len(), 1));
+                Ok(HwValue::Float(f, t.shape))
+            }
+            Stage::SoftmaxHost { axis } => {
+                let (data, shape) = match val {
+                    HwValue::Float(d, s) => (d, s),
+                    _ => return Err(HwError::Exec("Softmax expects float".into())),
+                };
+                let t = Tensor::from_f32(&shape, data)?;
+                let y = crate::ops::shape_ops::softmax(&t, *axis)
+                    .map_err(|e| HwError::Exec(e.to_string()))?;
+                cost.add(&host_cost(y.numel(), 4));
+                Ok(HwValue::Float(y.as_f32()?.to_vec(), shape))
+            }
+        }
+    }
+
+    /// Number of compiled pipeline stages.
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// True if every rescale stage read its integer constants verbatim
+    /// from the model (2-Mul codification).
+    pub fn all_rescales_exact(&self) -> bool {
+        self.stages.iter().all(|s| match s {
+            Stage::Fc { rescale, .. } | Stage::Conv { rescale, .. } => rescale.exact_from_model,
+            _ => true,
+        })
+    }
+}
+
+/// i32 im2col (same layout as ops::conv, widened domain).
+#[allow(clippy::too_many_arguments)]
+fn im2col_i32(
+    src: &[i32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    attrs: &ConvAttrs,
+    oh: usize,
+    ow: usize,
+    dst: &mut [i32],
+) {
+    let [stride_h, stride_w] = attrs.strides;
+    let [pad_t, pad_l, _, _] = attrs.pads;
+    let [dil_h, dil_w] = attrs.dilations;
+    let patch = oh * ow;
+    for ci in 0..c {
+        for ki in 0..kh {
+            for kj in 0..kw {
+                let row = (ci * kh * kw + ki * kw + kj) * patch;
+                for oy in 0..oh {
+                    let iy = (oy * stride_h + ki * dil_h) as isize - pad_t as isize;
+                    let base = row + oy * ow;
+                    if iy < 0 || iy as usize >= h {
+                        dst[base..base + ow].fill(0);
+                        continue;
+                    }
+                    let src_row = (ci * h + iy as usize) * w;
+                    for ox in 0..ow {
+                        let ix = (ox * stride_w + kj * dil_w) as isize - pad_l as isize;
+                        dst[base + ox] = if ix < 0 || ix as usize >= w {
+                            0
+                        } else {
+                            src[src_row + ix as usize]
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::Session;
+    use crate::onnx::{batched, GraphBuilder};
+    use crate::quant::decompose;
+    use crate::rewrite::patterns::{emit_fc, ActKind, FcParams, RescaleOp};
+
+    fn fig1_model(rescale: RescaleOp, act: ActKind, out_qtype: QType) -> Model {
+        let mut b = GraphBuilder::new("hw_fc");
+        b.input("x", DType::I8, &batched(&[8]));
+        let params = FcParams {
+            weight_q: Tensor::from_i8(
+                &[8, 4],
+                (0..32).map(|i| ((i * 7 % 23) as i8) - 11).collect(),
+            )
+            .unwrap(),
+            bias_q: Some(Tensor::from_i32(&[4], vec![50, -75, 0, 125]).unwrap()),
+            rescale,
+            activation: act,
+            out_qtype,
+        };
+        let y = emit_fc(&mut b, "x", &params, "l0");
+        let dt = match act {
+            ActKind::SigmoidF16 { .. } => DType::U8,
+            _ => out_qtype.dtype(),
+        };
+        b.output(&y, dt, &batched(&[4]));
+        b.finish_model()
+    }
+
+    fn random_i8(n: usize, seed: u64) -> Vec<i8> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as u8) as i8
+            })
+            .collect()
+    }
+
+    fn agree(model: Model, batch: usize, tol: i32) {
+        let sess = Session::new(model.clone()).unwrap();
+        let hw = HwModule::compile(&model, HwConfig::default()).unwrap();
+        let k = 8;
+        for seed in 1..=5u64 {
+            let x = Tensor::from_i8(&[batch, k], random_i8(batch * k, seed)).unwrap();
+            let want = &sess.run(&[("x", x.clone())]).unwrap()[0];
+            let (got, cost) = hw.run(&x).unwrap();
+            assert_eq!(want.shape(), got.shape());
+            assert!(cost.macs > 0);
+            let wv = want.as_quantized_i32().unwrap();
+            let gv = got.as_quantized_i32().unwrap();
+            for (i, (a, b)) in wv.iter().zip(&gv).enumerate() {
+                assert!(
+                    (a - b).abs() <= tol,
+                    "seed {seed} elem {i}: interp {a} vs hw {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fc_two_mul_agrees_bit_exact_mostly() {
+        let d = decompose(1.0 / 3.0, 31).unwrap();
+        // 2-Mul: hw reads the exact integer constants from the model; the
+        // only possible divergence is f32 product rounding in the interp,
+        // bounded to 1 LSB.
+        agree(
+            fig1_model(RescaleOp::TwoMul(d), ActKind::None, QType::I8),
+            4,
+            1,
+        );
+    }
+
+    #[test]
+    fn fc_one_mul_agrees_within_lsb() {
+        agree(
+            fig1_model(RescaleOp::OneMul(0.0123), ActKind::Relu, QType::U8),
+            4,
+            1,
+        );
+    }
+
+    #[test]
+    fn act_lut_stage_bit_exact() {
+        let d = decompose(127.0 / 2560.0, 31).unwrap();
+        // Activation ROM is built from the same float composition the
+        // interpreter executes, so the Act stage itself is bit-exact; the
+        // preceding rescale may differ by 1 LSB which the tanh LUT maps
+        // to at most a small output delta.
+        agree(
+            fig1_model(
+                RescaleOp::TwoMul(d),
+                ActKind::TanhF16 {
+                    in_scale: 2.0 / 127.0,
+                    out_scale: 1.0 / 127.0,
+                },
+                QType::I8,
+            ),
+            2,
+            2,
+        );
+    }
+
+    #[test]
+    fn sigmoid_uint8_path() {
+        let d = decompose(127.0 / 2560.0, 31).unwrap();
+        agree(
+            fig1_model(
+                RescaleOp::TwoMul(d),
+                ActKind::SigmoidF16 {
+                    in_scale: 8.0 / 127.0,
+                    out_scale: 1.0 / 255.0,
+                },
+                QType::U8,
+            ),
+            2,
+            2,
+        );
+    }
+
+    #[test]
+    fn exactness_flag_reflects_codification() {
+        let d = decompose(0.25, 31).unwrap();
+        let m2 = fig1_model(RescaleOp::TwoMul(d), ActKind::None, QType::I8);
+        assert!(HwModule::compile(&m2, HwConfig::default())
+            .unwrap()
+            .all_rescales_exact());
+        let m1 = fig1_model(RescaleOp::OneMul(0.25), ActKind::None, QType::I8);
+        assert!(!HwModule::compile(&m1, HwConfig::default())
+            .unwrap()
+            .all_rescales_exact());
+    }
+
+    #[test]
+    fn rejects_unsupported_graph() {
+        let mut b = GraphBuilder::new("bad");
+        b.input("x", DType::F32, &batched(&[2]));
+        let y = b.node("Tanh", &["x"], &[]);
+        b.output(&y, DType::F32, &batched(&[2]));
+        let m = b.finish_model();
+        assert!(HwModule::compile(&m, HwConfig::default()).is_err());
+    }
+
+    #[test]
+    fn truncate_rounding_biases_down() {
+        let d = decompose(0.5, 31).unwrap();
+        let r = HwRescale {
+            quant_scale: d.quant_scale,
+            shift: d.shift,
+            exact_from_model: true,
+        };
+        // 3 * 0.5 = 1.5: HalfEven -> 2, HalfAway -> 2, Truncate -> 1.
+        assert_eq!(rescale_sat(3, &r, Rounding::HalfEven, -128, 127), 2);
+        assert_eq!(rescale_sat(3, &r, Rounding::HalfAwayFromZero, -128, 127), 2);
+        assert_eq!(rescale_sat(3, &r, Rounding::Truncate, -128, 127), 1);
+        // 5 * 0.5 = 2.5: HalfEven -> 2, HalfAway -> 3.
+        assert_eq!(rescale_sat(5, &r, Rounding::HalfEven, -128, 127), 2);
+        assert_eq!(rescale_sat(5, &r, Rounding::HalfAwayFromZero, -128, 127), 3);
+    }
+}

@@ -1,0 +1,20 @@
+//! Integer-only fixed-point accelerator simulator — the "hardware" side
+//! of the co-design claim.
+//!
+//! [`exec::HwModule::compile`] consumes the *same* pre-quantized standard
+//! ONNX model every software backend runs and lifts the codified patterns
+//! into fixed-point pipeline stages; execution is integer arithmetic only
+//! (int8 MACs, i32 accumulators, integer-multiplier + right-shift rescale
+//! per §3.1, activation ROMs). [`cost`] attaches a cycle/energy model so
+//! hardware configurations can be swept against model accuracy
+//! (`bench_codesign_sweep`).
+
+pub mod config;
+pub mod cost;
+pub mod exec;
+pub mod lut;
+
+pub use config::{HwConfig, Rounding};
+pub use cost::CostReport;
+pub use exec::{HwModule, HwError, Stage};
+pub use lut::{ActEval, ActFn, ActLut};

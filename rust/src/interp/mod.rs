@@ -1,0 +1,349 @@
+//! Generic graph executor — the "standard ONNX tool" of the reproduction.
+//!
+//! [`Session`] validates a model once (structure, standard-ops-only,
+//! shape/dtype inference), plans an execution order and value lifetimes,
+//! then executes feeds with zero quantization-specific logic. A
+//! pre-quantized model runs here *because* it is expressed in standard
+//! operators (paper goal 2) — the session treats `Quant_scale` exactly
+//! like any other initializer.
+
+use crate::onnx::check::{check_model, CheckError};
+use crate::onnx::ir::{Dim, Model};
+use crate::onnx::topo::topo_order;
+use crate::ops::{execute_node, OpError};
+use crate::tensor::{DType, Tensor};
+use std::collections::{BTreeMap, HashMap};
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum SessionError {
+    #[error("model check failed: {0}")]
+    Check(#[from] CheckError),
+    #[error("feed '{0}' is not a graph input")]
+    UnknownFeed(String),
+    #[error("missing feed for graph input '{0}'")]
+    MissingFeed(String),
+    #[error("feed '{name}': expected dtype {expected}, got {got}")]
+    FeedDType {
+        name: String,
+        expected: DType,
+        got: DType,
+    },
+    #[error("feed '{name}': shape {got:?} incompatible with declared {declared:?}")]
+    FeedShape {
+        name: String,
+        declared: Vec<Dim>,
+        got: Vec<usize>,
+    },
+    #[error("symbolic dim '{sym}' bound inconsistently: {a} vs {b}")]
+    SymbolClash { sym: String, a: usize, b: usize },
+    #[error("op failed at node '{node}': {source}")]
+    Op { node: String, source: OpError },
+    #[error("internal: value '{0}' missing during execution")]
+    ValueMissing(String),
+}
+
+/// Per-node execution statistics (filled when profiling is enabled).
+#[derive(Clone, Debug, Default)]
+pub struct NodeStats {
+    pub name: String,
+    pub op_type: String,
+    pub nanos: u128,
+    pub calls: u64,
+}
+
+/// A validated, planned, executable model.
+pub struct Session {
+    model: Model,
+    order: Vec<usize>,
+    /// For each schedule position, values whose last use is that node
+    /// (freed immediately after, keeping peak memory at the graph's
+    /// live-set size rather than its total-values size).
+    frees: Vec<Vec<String>>,
+    profile: std::sync::Mutex<HashMap<String, NodeStats>>,
+    profiling: bool,
+}
+
+impl Session {
+    /// Validate + plan. Fails on any malformed or non-standard model.
+    pub fn new(model: Model) -> Result<Session, SessionError> {
+        check_model(&model)?;
+        let order = topo_order(&model.graph)
+            .map_err(|e| SessionError::Check(crate::onnx::shape::ShapeError::from(e).into()))?;
+
+        // Last-use analysis over the schedule.
+        let mut last_use: HashMap<&str, usize> = HashMap::new();
+        for (pos, &idx) in order.iter().enumerate() {
+            for input in &model.graph.nodes[idx].inputs {
+                if !input.is_empty() {
+                    last_use.insert(input, pos);
+                }
+            }
+        }
+        // Graph outputs live forever.
+        for out in &model.graph.outputs {
+            last_use.remove(out.name.as_str());
+        }
+        // Initializers are owned by the model, not the value store.
+        let mut frees: Vec<Vec<String>> = vec![Vec::new(); order.len()];
+        for (value, pos) in last_use {
+            if model.graph.initializer(value).is_none() {
+                frees[pos].push(value.to_string());
+            }
+        }
+
+        Ok(Session {
+            model,
+            order,
+            frees,
+            profile: std::sync::Mutex::new(HashMap::new()),
+            profiling: false,
+        })
+    }
+
+    /// Enable per-node wall-clock accounting (used by the §Perf pass).
+    pub fn with_profiling(mut self) -> Session {
+        self.profiling = true;
+        self
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Execute the graph. `feeds` must cover every runtime input; outputs
+    /// are returned in graph-output declaration order.
+    pub fn run(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
+        self.run_observed(feeds, &mut |_, _| {})
+    }
+
+    /// Execute while reporting every produced value (name, tensor) to
+    /// `observer` — the hook the calibration pass uses to profile
+    /// intermediate activations without declaring them as outputs.
+    pub fn run_observed(
+        &self,
+        feeds: &[(&str, Tensor)],
+        observer: &mut dyn FnMut(&str, &Tensor),
+    ) -> Result<Vec<Tensor>, SessionError> {
+        let g = &self.model.graph;
+
+        // Validate feeds against declarations, binding symbolic dims.
+        let mut bindings: BTreeMap<String, usize> = BTreeMap::new();
+        for (name, t) in feeds {
+            let vi = g
+                .input(name)
+                .ok_or_else(|| SessionError::UnknownFeed(name.to_string()))?;
+            if vi.dtype != t.dtype() {
+                return Err(SessionError::FeedDType {
+                    name: name.to_string(),
+                    expected: vi.dtype,
+                    got: t.dtype(),
+                });
+            }
+            if vi.shape.len() != t.shape().len() {
+                return Err(SessionError::FeedShape {
+                    name: name.to_string(),
+                    declared: vi.shape.clone(),
+                    got: t.shape().to_vec(),
+                });
+            }
+            for (d, &got) in vi.shape.iter().zip(t.shape()) {
+                match d {
+                    Dim::Fixed(n) => {
+                        if *n != got {
+                            return Err(SessionError::FeedShape {
+                                name: name.to_string(),
+                                declared: vi.shape.clone(),
+                                got: t.shape().to_vec(),
+                            });
+                        }
+                    }
+                    Dim::Symbolic(s) => {
+                        if let Some(&prev) = bindings.get(s) {
+                            if prev != got {
+                                return Err(SessionError::SymbolClash {
+                                    sym: s.clone(),
+                                    a: prev,
+                                    b: got,
+                                });
+                            }
+                        } else {
+                            bindings.insert(s.clone(), got);
+                        }
+                    }
+                }
+            }
+        }
+        for vi in g.runtime_inputs() {
+            if !feeds.iter().any(|(n, _)| *n == vi.name) {
+                return Err(SessionError::MissingFeed(vi.name.clone()));
+            }
+        }
+
+        // Value store for feeds + intermediates (initializers resolved
+        // separately to avoid cloning weights per call).
+        let mut values: HashMap<String, Tensor> = HashMap::with_capacity(feeds.len() + 16);
+        for (name, t) in feeds {
+            observer(name, t);
+            values.insert(name.to_string(), t.clone());
+        }
+
+        for (pos, &idx) in self.order.iter().enumerate() {
+            let node = &g.nodes[idx];
+            let inputs: Vec<Option<&Tensor>> = node
+                .inputs
+                .iter()
+                .map(|n| {
+                    if n.is_empty() {
+                        None
+                    } else {
+                        values.get(n.as_str()).or_else(|| g.initializer(n))
+                    }
+                })
+                .collect();
+            let t0 = if self.profiling {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
+            let outs = execute_node(node, &inputs).map_err(|source| SessionError::Op {
+                node: node.name.clone(),
+                source,
+            })?;
+            if let Some(t0) = t0 {
+                let mut prof = self.profile.lock().unwrap();
+                let e = prof.entry(node.name.clone()).or_insert_with(|| NodeStats {
+                    name: node.name.clone(),
+                    op_type: node.op_type.clone(),
+                    ..Default::default()
+                });
+                e.nanos += t0.elapsed().as_nanos();
+                e.calls += 1;
+            }
+            for (name, t) in node.outputs.iter().zip(outs) {
+                if !name.is_empty() {
+                    observer(name, &t);
+                    values.insert(name.clone(), t);
+                }
+            }
+            for dead in &self.frees[pos] {
+                values.remove(dead);
+            }
+        }
+
+        g.outputs
+            .iter()
+            .map(|vi| {
+                values
+                    .remove(&vi.name)
+                    .or_else(|| g.initializer(&vi.name).cloned())
+                    .ok_or_else(|| SessionError::ValueMissing(vi.name.clone()))
+            })
+            .collect()
+    }
+
+    /// Convenience: single-input single-output execution.
+    pub fn run1(&self, input: Tensor) -> Result<Tensor, SessionError> {
+        let inputs = self.model.graph.runtime_inputs();
+        let name = inputs
+            .first()
+            .map(|vi| vi.name.clone())
+            .ok_or_else(|| SessionError::MissingFeed("<none declared>".into()))?;
+        let mut out = self.run(&[(&name, input)])?;
+        Ok(out.remove(0))
+    }
+
+    /// Snapshot of per-node timings (profiling sessions only), sorted by
+    /// total time descending.
+    pub fn profile(&self) -> Vec<NodeStats> {
+        let mut v: Vec<NodeStats> = self.profile.lock().unwrap().values().cloned().collect();
+        v.sort_by_key(|s| std::cmp::Reverse(s.nanos));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::ir::Attr;
+    use crate::onnx::{batched, GraphBuilder};
+    use crate::tensor::DType;
+
+    /// The paper's Figure 1 pattern, hand-built: MatMulInteger -> Add ->
+    /// Cast -> Mul(Quant_scale) -> Mul(Quant_shift) -> QuantizeLinear.
+    fn fig1_model() -> Model {
+        let mut b = GraphBuilder::new("fig1");
+        b.input("x", DType::I8, &batched(&[4]));
+        b.init("w", Tensor::from_i8(&[4, 2], vec![1, 2, 3, 4, 5, 6, 7, 8]).unwrap());
+        b.init("bias", Tensor::from_i32(&[2], vec![100, -100]).unwrap());
+        b.init("quant_scale", Tensor::scalar_f32(1.0));
+        b.init("quant_shift", Tensor::scalar_f32(1.0 / 4.0)); // >>2
+        b.init("q_one", Tensor::scalar_f32(1.0));
+        b.init("q_zp", Tensor::scalar_i8(0));
+        let acc = b.node("MatMulInteger", &["x", "w"], &[]);
+        let accb = b.node("Add", &[&acc, "bias"], &[]);
+        let f = b.node("Cast", &[&accb], &[("to", Attr::Str("FLOAT".into()))]);
+        let m1 = b.node("Mul", &[&f, "quant_scale"], &[]);
+        let m2 = b.node("Mul", &[&m1, "quant_shift"], &[]);
+        let y = b.node("QuantizeLinear", &[&m2, "q_one", "q_zp"], &[]);
+        b.output(&y, DType::I8, &batched(&[2]));
+        b.finish_model()
+    }
+
+    #[test]
+    fn fig1_end_to_end() {
+        let sess = Session::new(fig1_model()).unwrap();
+        let x = Tensor::from_i8(&[1, 4], vec![1, 1, 1, 1]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        // acc = [1+3+5+7, 2+4+6+8] = [16, 20]; +bias = [116, -80];
+        // * 1.0 * 0.25 = [29, -20]; quantize(scale 1) = [29, -20].
+        assert_eq!(y[0].as_i8().unwrap(), &[29, -20]);
+    }
+
+    #[test]
+    fn batch_via_symbolic_dim() {
+        let sess = Session::new(fig1_model()).unwrap();
+        let x = Tensor::from_i8(&[3, 4], vec![1; 12]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        assert_eq!(y[0].shape(), &[3, 2]);
+        assert_eq!(y[0].as_i8().unwrap(), &[29, -20, 29, -20, 29, -20]);
+    }
+
+    #[test]
+    fn feed_validation() {
+        let sess = Session::new(fig1_model()).unwrap();
+        // wrong dtype
+        let bad = Tensor::from_f32(&[1, 4], vec![0.0; 4]).unwrap();
+        assert!(matches!(
+            sess.run(&[("x", bad)]),
+            Err(SessionError::FeedDType { .. })
+        ));
+        // wrong fixed dim
+        let bad = Tensor::from_i8(&[1, 5], vec![0; 5]).unwrap();
+        assert!(matches!(
+            sess.run(&[("x", bad)]),
+            Err(SessionError::FeedShape { .. })
+        ));
+        // missing feed
+        assert!(matches!(
+            sess.run(&[]),
+            Err(SessionError::MissingFeed(_))
+        ));
+        // unknown feed
+        let x = Tensor::from_i8(&[1, 4], vec![0; 4]).unwrap();
+        assert!(matches!(
+            sess.run(&[("nope", x)]),
+            Err(SessionError::UnknownFeed(_))
+        ));
+    }
+
+    #[test]
+    fn profiling_collects() {
+        let sess = Session::new(fig1_model()).unwrap().with_profiling();
+        let x = Tensor::from_i8(&[1, 4], vec![1; 4]).unwrap();
+        sess.run(&[("x", x)]).unwrap();
+        let prof = sess.profile();
+        assert!(!prof.is_empty());
+        assert!(prof.iter().any(|s| s.op_type == "MatMulInteger"));
+    }
+}

@@ -1,0 +1,48 @@
+//! # pqdl — Pre-Quantized Deep Learning models codified in ONNX
+//!
+//! Reproduction of *"Pre-Quantized Deep Learning Models Codified in ONNX to
+//! Enable Hardware/Software Co-Design"* (Hanebutte et al., 2021).
+//!
+//! The crate implements the paper's full stack from scratch:
+//!
+//! * [`tensor`] — dtyped strided tensors (f32/f16/i8/u8/i32/i64/bool) with a
+//!   bit-exact software f16.
+//! * [`onnx`] — an ONNX-compatible IR (model / graph / node / attribute /
+//!   initializer), its own JSON text serialization, shape & dtype inference
+//!   and a graph checker.
+//! * [`ops`] — implementations of the standard ONNX operators the paper's
+//!   patterns use (MatMulInteger, ConvInteger, QuantizeLinear, ...).
+//! * [`interp`] — a generic graph executor ("ONNXruntime" stand-in): it has
+//!   no quantization-specific logic, it simply runs standard operators.
+//! * [`quant`] — the decoupled quantization toolchain: calibration,
+//!   symmetric scales, and the §3.1 integer-multiplier + right-shift
+//!   rescale decomposition.
+//! * [`rewrite`] — the fp32 → pre-quantized graph compiler emitting exactly
+//!   the paper's Figure 1–6 operator patterns.
+//! * [`hwsim`] — an integer-only fixed-point accelerator simulator with a
+//!   cycle/energy cost model; it consumes the same ONNX file and must agree
+//!   with [`interp`] bit-exactly (the paper's co-design claim).
+//! * [`train`] — a small fp32 training substrate (MLP/CNN + SGD) so the
+//!   end-to-end example quantizes a really-trained model.
+//! * [`runtime`] — PJRT bridge executing the JAX/Pallas AOT artifacts.
+//! * [`coordinator`] — serving layer: router, dynamic batcher, worker pool,
+//!   cross-backend validation, metrics.
+//!
+//! See `DESIGN.md` for the module inventory and experiment index.
+
+pub mod bench_util;
+pub mod compare;
+pub mod figures;
+pub mod coordinator;
+pub mod hwsim;
+pub mod interp;
+pub mod onnx;
+pub mod ops;
+pub mod proptest_util;
+pub mod quant;
+pub mod rewrite;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,369 @@
+//! `pqdl` command-line interface.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! * `train`    — train an fp32 MLP/CNN on the synthetic-digits corpus
+//!   and save the ONNX-form model.
+//! * `quantize` — calibrate + rewrite an fp32 model file into the
+//!   paper's pre-quantized patterns.
+//! * `run`      — execute a model file on a chosen backend.
+//! * `validate` — cross-backend narrow-margins table for a model file.
+//! * `figures`  — emit the six canonical Figure models as files.
+//! * `verify-artifacts` — check the PJRT artifacts against the Python
+//!   golden outputs.
+//! * `serve`    — start the coordinator on the canonical figures and
+//!   run a synthetic load (demo).
+
+use anyhow::{anyhow, bail, Context, Result};
+use pqdl::coordinator::{validate as xvalidate, Backend, HwSimBackend, InterpBackend};
+use pqdl::figures::Figure;
+use pqdl::hwsim::{HwConfig, HwModule};
+use pqdl::interp::Session;
+use pqdl::onnx::{load_model, save_model};
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, ActPrecision, QuantizeOptions};
+use pqdl::tensor::Tensor;
+use pqdl::train::{
+    accuracy, cnn_accuracy, synthetic_digits, train_classifier, train_cnn, Cnn, HiddenAct, Mlp,
+};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--key value` / `--flag` argument map.
+struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    values.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                flags.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { values, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing --{key}"))
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+const USAGE: &str = "pqdl — pre-quantized ONNX models for HW/SW co-design
+
+USAGE:
+  pqdl train    --arch mlp|cnn --out MODEL.json [--epochs N] [--act relu|tanh|sigmoid]
+  pqdl quantize --model FP32.json --out PREQ.json [--calib max|p99.9|mse]
+                [--one-mul] [--act-precision int8|f16] [--int8-io]
+  pqdl run      --model MODEL.json [--backend interp|hwsim] [--batch N]
+  pqdl validate --model PREQ.json [--inputs N]
+  pqdl figures  [--out-dir DIR]
+  pqdl verify-artifacts [--dir artifacts]
+  pqdl serve    [--requests N]
+  pqdl profile  [--fig NAME] [--batch N] [--iters N]
+";
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "quantize" => cmd_quantize(&args),
+        "run" => cmd_run(&args),
+        "validate" => cmd_validate(&args),
+        "figures" => cmd_figures(&args),
+        "verify-artifacts" => cmd_verify_artifacts(&args),
+        "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.req("out")?);
+    let arch = args.get("arch").unwrap_or("mlp");
+    let epochs: usize = args.get("epochs").unwrap_or("20").parse()?;
+    let data = synthetic_digits(3000, 42);
+    let (train, test) = data.split(0.2, 43);
+    let model = match arch {
+        "mlp" => {
+            let act = match args.get("act").unwrap_or("relu") {
+                "relu" => HiddenAct::Relu,
+                "tanh" => HiddenAct::Tanh,
+                "sigmoid" => HiddenAct::Sigmoid,
+                other => bail!("unknown activation '{other}'"),
+            };
+            let mut mlp = Mlp::new(&[64, 64, 10], act, 44);
+            train_classifier(&mut mlp, &train, epochs, 32, 0.1, 0.9, 45);
+            println!("fp32 test accuracy: {:.2}%", 100.0 * accuracy(&mlp, &test));
+            mlp.to_model("digits_mlp")
+        }
+        "cnn" => {
+            let mut cnn = Cnn::new(8, 10, 46);
+            train_cnn(&mut cnn, &train, epochs, 32, 0.08, 0.9, 47);
+            println!(
+                "fp32 test accuracy: {:.2}%",
+                100.0 * cnn_accuracy(&cnn, &test)
+            );
+            cnn.to_model("digits_cnn")
+        }
+        other => bail!("unknown arch '{other}'"),
+    };
+    save_model(&model, &out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn digits_calib_batches(model: &pqdl::onnx::Model) -> Vec<Vec<(String, Tensor)>> {
+    let data = synthetic_digits(128, 48);
+    let image = model.graph.runtime_inputs()[0].shape.len() == 4;
+    (0..data.len())
+        .map(|i| {
+            let (x, _) = data.sample(i);
+            let shape: Vec<usize> = if image { vec![1, 1, 8, 8] } else { vec![1, 64] };
+            vec![(
+                "x".to_string(),
+                Tensor::from_f32(&shape, x.to_vec()).unwrap(),
+            )]
+        })
+        .collect()
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model = load_model(Path::new(args.req("model")?))?;
+    let out = PathBuf::from(args.req("out")?);
+    let strategy = CalibStrategy::parse(args.get("calib").unwrap_or("max"))
+        .ok_or_else(|| anyhow!("bad --calib"))?;
+    let opts = QuantizeOptions {
+        two_mul: !args.flag("one-mul"),
+        act_precision: match args.get("act-precision").unwrap_or("f16") {
+            "int8" => ActPrecision::Int8,
+            _ => ActPrecision::F16,
+        },
+        strategy,
+        float_io: !args.flag("int8-io"),
+        ..Default::default()
+    };
+    let sess = Session::new(model.clone()).map_err(|e| anyhow!("{e}"))?;
+    let cal = calibrate(&sess, &digits_calib_batches(&model), strategy)
+        .map_err(|e| anyhow!("{e}"))?;
+    let preq = quantize_model(&model, &cal, &opts)?;
+    save_model(&preq, &out)?;
+    println!(
+        "wrote {} ({} nodes, strategy {}, {})",
+        out.display(),
+        preq.graph.nodes.len(),
+        cal.strategy_name,
+        if opts.two_mul { "2-Mul" } else { "1-Mul" }
+    );
+    Ok(())
+}
+
+fn random_input(model: &pqdl::onnx::Model, batch: usize) -> Result<Tensor> {
+    let vi = model.graph.runtime_inputs()[0].clone();
+    let mut dims = vec![batch];
+    for d in &vi.shape[1..] {
+        dims.push(d.fixed().ok_or_else(|| anyhow!("non-batch symbolic dim"))?);
+    }
+    let n: usize = dims.iter().product();
+    let mut rng = pqdl::train::Rng::new(7);
+    Ok(match vi.dtype {
+        pqdl::tensor::DType::F32 => {
+            Tensor::from_f32(&dims, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())?
+        }
+        pqdl::tensor::DType::I8 => {
+            Tensor::from_i8(&dims, (0..n).map(|_| rng.i8()).collect())?
+        }
+        d => bail!("unsupported input dtype {d}"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model = load_model(Path::new(args.req("model")?))?;
+    let batch: usize = args.get("batch").unwrap_or("1").parse()?;
+    let input = random_input(&model, batch)?;
+    match args.get("backend").unwrap_or("interp") {
+        "interp" => {
+            let sess = Session::new(model).map_err(|e| anyhow!("{e}"))?;
+            let name = sess.model().graph.runtime_inputs()[0].name.clone();
+            let out = sess.run(&[(&name, input)]).map_err(|e| anyhow!("{e}"))?;
+            println!("output[0] ({} x {:?}):", out[0].dtype(), out[0].shape());
+            println!("{:?}", &out[0].to_f32_vec()[..out[0].numel().min(16)]);
+        }
+        "hwsim" => {
+            let cfg = HwConfig::default();
+            let hw = HwModule::compile(&model, cfg.clone())?;
+            let (out, cost) = hw.run(&input)?;
+            println!("output ({} x {:?}):", out.dtype(), out.shape());
+            println!("{:?}", &out.to_f32_vec()[..out.numel().min(16)]);
+            println!(
+                "cost: {} MACs, {} cycles ({:.2} us @ {:.0} MHz), {:.3} uJ, util {:.1}%",
+                cost.macs,
+                cost.cycles,
+                cost.latency_us(&cfg),
+                cfg.freq_mhz,
+                cost.energy_nj(&cfg) / 1000.0,
+                100.0 * cost.utilization(&cfg)
+            );
+        }
+        other => bail!("unknown backend '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let model = load_model(Path::new(args.req("model")?))?;
+    let n_inputs: usize = args.get("inputs").unwrap_or("50").parse()?;
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(InterpBackend::new(model.clone()).map_err(|e| anyhow!("{e}"))?),
+        Arc::new(HwSimBackend::new(&model, HwConfig::default())?),
+    ];
+    let inputs: Vec<Tensor> = (0..n_inputs)
+        .map(|_| random_input(&model, 4))
+        .collect::<Result<_>>()?;
+    let report = xvalidate("model", &backends, &inputs)?;
+    print!("{}", report.table());
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("out-dir").unwrap_or("figures_out"));
+    std::fs::create_dir_all(&dir)?;
+    for fig in Figure::ALL {
+        let m = fig.model();
+        let path = dir.join(format!("{}.json", fig.name()));
+        save_model(&m, &path)?;
+        let ops: Vec<&str> = m.graph.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        println!("{:<18} {} -> {:?}", fig.name(), path.display(), ops);
+    }
+    Ok(())
+}
+
+fn cmd_verify_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
+    let svc = pqdl::runtime::PjrtService::spawn(dir).context("starting PJRT")?;
+    let rows = svc.verify_golden()?;
+    println!("variant              | batch | max LSB diff vs python golden");
+    for (v, b, d) in &rows {
+        println!("{v:<20} | {b:>5} | {d}");
+    }
+    let worst = rows.iter().map(|r| r.2).max().unwrap_or(0);
+    svc.shutdown();
+    if worst == 0 {
+        println!("all {} artifacts bit-exact.", rows.len());
+        Ok(())
+    } else {
+        bail!("max divergence {worst} LSB");
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use pqdl::coordinator::{CoordinatorBuilder, ServerConfig};
+    let requests: usize = args.get("requests").unwrap_or("500").parse()?;
+    let mut builder = CoordinatorBuilder::new(ServerConfig::default());
+    for fig in Figure::ALL {
+        builder = builder.register(
+            fig.name(),
+            Arc::new(InterpBackend::new(fig.model()).map_err(|e| anyhow!("{e}"))?),
+        );
+    }
+    let coord = Arc::new(builder.start());
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..4u64 {
+        let coord = coord.clone();
+        let per = requests / 4;
+        joins.push(std::thread::spawn(move || {
+            let mut rng = pqdl::train::Rng::new(c);
+            for i in 0..per {
+                let fig = Figure::ALL[rng.below(6)];
+                let x = fig.input(1, c * 100_000 + i as u64);
+                coord.infer(fig.name(), x).unwrap().output.unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    println!(
+        "{requests} requests in {:.2?}\n\n{}",
+        t0.elapsed(),
+        coord.metrics.report()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let fig_name = args.get("fig").unwrap_or("fig1_fc");
+    let batch: usize = args.get("batch").unwrap_or("64").parse()?;
+    let iters: usize = args.get("iters").unwrap_or("2000").parse()?;
+    let fig = Figure::ALL
+        .into_iter()
+        .find(|f| f.name() == fig_name)
+        .ok_or_else(|| anyhow!("unknown figure '{fig_name}'"))?;
+    let sess = Session::new(fig.model())
+        .map_err(|e| anyhow!("{e}"))?
+        .with_profiling();
+    let x = fig.input(batch, 42);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        sess.run(&[("x", x.clone())]).map_err(|e| anyhow!("{e}"))?;
+    }
+    let total = t0.elapsed();
+    println!(
+        "{fig_name} b{batch}: {iters} iters in {total:.2?} ({:.2} us/iter)\n",
+        total.as_secs_f64() * 1e6 / iters as f64
+    );
+    println!("{:<28} | {:>10} | {:>8} | share", "node", "total ms", "us/call");
+    let prof = sess.profile();
+    let sum: u128 = prof.iter().map(|s| s.nanos).sum();
+    for s in &prof {
+        println!(
+            "{:<28} | {:>10.2} | {:>8.2} | {:>5.1}%",
+            format!("{} ({})", s.name, s.op_type),
+            s.nanos as f64 / 1e6,
+            s.nanos as f64 / 1e3 / s.calls as f64,
+            100.0 * s.nanos as f64 / sum as f64
+        );
+    }
+    Ok(())
+}

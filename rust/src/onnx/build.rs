@@ -1,0 +1,128 @@
+//! Fluent graph construction used by the rewriter, the examples and the
+//! tests. Generates unique value/node names and keeps the initializer
+//! table alongside the node list.
+
+use super::ir::{Attr, Dim, Graph, Model, Node, ValueInfo};
+use crate::tensor::{DType, Tensor};
+
+/// Builder for a [`Graph`] with automatic name generation.
+pub struct GraphBuilder {
+    graph: Graph,
+    counter: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder {
+            graph: Graph {
+                name: name.to_string(),
+                ..Default::default()
+            },
+            counter: 0,
+        }
+    }
+
+    /// Fresh unique value name with a readable prefix.
+    pub fn fresh(&mut self, prefix: &str) -> String {
+        let name = format!("{prefix}_{}", self.counter);
+        self.counter += 1;
+        name
+    }
+
+    /// Declare a runtime graph input.
+    pub fn input(&mut self, name: &str, dtype: DType, dims: &[Dim]) -> String {
+        self.graph.inputs.push(ValueInfo::new(name, dtype, dims));
+        name.to_string()
+    }
+
+    /// Declare a graph output.
+    pub fn output(&mut self, name: &str, dtype: DType, dims: &[Dim]) {
+        self.graph.outputs.push(ValueInfo::new(name, dtype, dims));
+    }
+
+    /// Add a named initializer (weight / bias / quant parameter).
+    pub fn init(&mut self, name: &str, t: Tensor) -> String {
+        self.graph.initializers.push((name.to_string(), t));
+        name.to_string()
+    }
+
+    /// Add an initializer with a generated name.
+    pub fn init_fresh(&mut self, prefix: &str, t: Tensor) -> String {
+        let name = self.fresh(prefix);
+        self.init(&name, t)
+    }
+
+    /// Append a node; returns its (single) output name.
+    pub fn node(
+        &mut self,
+        op: &str,
+        inputs: &[&str],
+        attrs: &[(&str, Attr)],
+    ) -> String {
+        let out = self.fresh(&format!("{}_out", op.to_lowercase()));
+        self.node_named(op, inputs, &[&out], attrs);
+        out
+    }
+
+    /// Append a node with explicit output names.
+    pub fn node_named(
+        &mut self,
+        op: &str,
+        inputs: &[&str],
+        outputs: &[&str],
+        attrs: &[(&str, Attr)],
+    ) {
+        let name = self.fresh(op);
+        let mut node = Node::new(&name, op, inputs, outputs);
+        for (k, v) in attrs {
+            node = node.with_attr(k, v.clone());
+        }
+        self.graph.nodes.push(node);
+    }
+
+    pub fn finish(self) -> Graph {
+        self.graph
+    }
+
+    pub fn finish_model(self) -> Model {
+        Model::new(self.graph)
+    }
+}
+
+/// Shorthand: `[N, d0, d1...]` with a symbolic leading batch axis.
+pub fn batched(dims: &[usize]) -> Vec<Dim> {
+    std::iter::once(Dim::Symbolic("N".to_string()))
+        .chain(dims.iter().map(|&d| Dim::Fixed(d)))
+        .collect()
+}
+
+/// Shorthand: all-fixed dims.
+pub fn fixed_dims(dims: &[usize]) -> Vec<Dim> {
+    dims.iter().map(|&d| Dim::Fixed(d)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::check::check_model;
+
+    #[test]
+    fn builds_valid_graph() {
+        let mut b = GraphBuilder::new("g");
+        b.input("x", DType::I8, &batched(&[4]));
+        b.init("w", Tensor::from_i8(&[4, 2], vec![1; 8]).unwrap());
+        let y = b.node("MatMulInteger", &["x", "w"], &[]);
+        b.output(&y, DType::I32, &batched(&[2]));
+        let m = b.finish_model();
+        assert!(check_model(&m).is_ok());
+        assert_eq!(m.graph.nodes.len(), 1);
+    }
+
+    #[test]
+    fn fresh_names_unique() {
+        let mut b = GraphBuilder::new("g");
+        let a = b.fresh("v");
+        let c = b.fresh("v");
+        assert_ne!(a, c);
+    }
+}

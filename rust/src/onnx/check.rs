@@ -1,0 +1,227 @@
+//! Model validation.
+//!
+//! Enforces the paper's goal 3 directly: only *standard* ONNX operators
+//! are admitted (a custom op would make the model unusable in standard
+//! tools), plus structural well-formedness: unique value names, all
+//! consumed values defined, declared output types consistent with shape
+//! inference, acyclicity.
+
+use super::ir::{Dim, Model};
+use super::shape::{infer_graph, ShapeError};
+use std::collections::HashSet;
+use thiserror::Error;
+
+/// The standard ONNX operators this opset-13 subset admits. All of the
+/// paper's Figure 1–6 patterns are expressible with exactly these.
+pub const STANDARD_OPS: &[&str] = &[
+    "Add",
+    "AveragePool",
+    "Cast",
+    "Conv",
+    "ConvInteger",
+    "DequantizeLinear",
+    "Div",
+    "Flatten",
+    "Gemm",
+    "Identity",
+    "MatMul",
+    "MatMulInteger",
+    "MaxPool",
+    "Mul",
+    "QuantizeLinear",
+    "Relu",
+    "Reshape",
+    "Sigmoid",
+    "Softmax",
+    "Sub",
+    "Tanh",
+];
+
+#[derive(Error, Debug)]
+pub enum CheckError {
+    #[error("non-standard operator '{op}' in node '{node}' (paper goal 3 forbids custom ops)")]
+    NonStandardOp { op: String, node: String },
+    #[error("duplicate node name '{0}'")]
+    DuplicateNode(String),
+    #[error("duplicate initializer '{0}'")]
+    DuplicateInitializer(String),
+    #[error("graph input '{0}' duplicated")]
+    DuplicateInput(String),
+    #[error("declared output '{name}' was never produced")]
+    MissingOutput { name: String },
+    #[error("declared output '{name}' has dtype {declared} but inference found {inferred}")]
+    OutputDtypeMismatch {
+        name: String,
+        declared: String,
+        inferred: String,
+    },
+    #[error("declared output '{name}' shape {declared:?} incompatible with inferred {inferred:?}")]
+    OutputShapeMismatch {
+        name: String,
+        declared: Vec<Dim>,
+        inferred: Vec<Dim>,
+    },
+    #[error(transparent)]
+    Shape(#[from] ShapeError),
+}
+
+/// Validate a model. Returns the inferred value types on success so
+/// callers (interpreter, hwsim, rewriter) can reuse them.
+pub fn check_model(
+    model: &Model,
+) -> Result<std::collections::HashMap<String, super::shape::ValueType>, CheckError> {
+    let g = &model.graph;
+
+    // Standard-ops-only (goal 3).
+    for n in &g.nodes {
+        if !STANDARD_OPS.contains(&n.op_type.as_str()) {
+            return Err(CheckError::NonStandardOp {
+                op: n.op_type.clone(),
+                node: n.name.clone(),
+            });
+        }
+    }
+
+    // Name uniqueness.
+    let mut seen = HashSet::new();
+    for n in &g.nodes {
+        if !n.name.is_empty() && !seen.insert(n.name.as_str()) {
+            return Err(CheckError::DuplicateNode(n.name.clone()));
+        }
+    }
+    let mut seen = HashSet::new();
+    for (name, _) in &g.initializers {
+        if !seen.insert(name.as_str()) {
+            return Err(CheckError::DuplicateInitializer(name.clone()));
+        }
+    }
+    let mut seen = HashSet::new();
+    for vi in &g.inputs {
+        if !seen.insert(vi.name.as_str()) {
+            return Err(CheckError::DuplicateInput(vi.name.clone()));
+        }
+    }
+
+    // Full inference (includes topo/cycle/undefined-value checks).
+    let types = infer_graph(g)?;
+
+    // Declared outputs must match inference.
+    for out in &g.outputs {
+        let inferred = types
+            .get(&out.name)
+            .ok_or_else(|| CheckError::MissingOutput {
+                name: out.name.clone(),
+            })?;
+        if inferred.dtype != out.dtype {
+            return Err(CheckError::OutputDtypeMismatch {
+                name: out.name.clone(),
+                declared: out.dtype.to_string(),
+                inferred: inferred.dtype.to_string(),
+            });
+        }
+        if inferred.shape.len() != out.shape.len()
+            || inferred
+                .shape
+                .iter()
+                .zip(&out.shape)
+                .any(|(a, b)| !dims_compatible(a, b))
+        {
+            return Err(CheckError::OutputShapeMismatch {
+                name: out.name.clone(),
+                declared: out.shape.clone(),
+                inferred: inferred.shape.clone(),
+            });
+        }
+    }
+    Ok(types)
+}
+
+/// Declared vs inferred dim compatibility: symbolic matches anything with
+/// the same symbol, and a declared symbolic dim accepts an inferred fixed
+/// one (the author may declare looser).
+fn dims_compatible(inferred: &Dim, declared: &Dim) -> bool {
+    match (inferred, declared) {
+        (Dim::Fixed(a), Dim::Fixed(b)) => a == b,
+        (Dim::Symbolic(a), Dim::Symbolic(b)) => a == b,
+        (Dim::Fixed(_), Dim::Symbolic(_)) => true,
+        (Dim::Symbolic(_), Dim::Fixed(_)) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::ir::{Graph, Model, Node, ValueInfo};
+    use crate::tensor::{DType, Tensor};
+
+    fn ok_model() -> Model {
+        let mut g = Graph {
+            name: "m".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::fixed("x", DType::I8, &[1, 4]));
+        g.initializers
+            .push(("w".into(), Tensor::from_i8(&[4, 2], vec![0; 8]).unwrap()));
+        g.nodes
+            .push(Node::new("mm", "MatMulInteger", &["x", "w"], &["y"]));
+        g.outputs.push(ValueInfo::fixed("y", DType::I32, &[1, 2]));
+        Model::new(g)
+    }
+
+    #[test]
+    fn accepts_valid() {
+        assert!(check_model(&ok_model()).is_ok());
+    }
+
+    #[test]
+    fn rejects_custom_op() {
+        let mut m = ok_model();
+        m.graph.nodes[0].op_type = "MyAcceleratorOp".into();
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::NonStandardOp { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_output_dtype_mismatch() {
+        let mut m = ok_model();
+        m.graph.outputs[0].dtype = DType::F32;
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::OutputDtypeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_output() {
+        let mut m = ok_model();
+        m.graph.outputs[0].name = "nope".into();
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::MissingOutput { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_duplicate_initializer() {
+        let mut m = ok_model();
+        m.graph
+            .initializers
+            .push(("w".into(), Tensor::from_i8(&[1], vec![0]).unwrap()));
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::DuplicateInitializer(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_output_shape() {
+        let mut m = ok_model();
+        m.graph.outputs[0] = ValueInfo::fixed("y", DType::I32, &[1, 3]);
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::OutputShapeMismatch { .. })
+        ));
+    }
+}

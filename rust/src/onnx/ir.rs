@@ -1,0 +1,279 @@
+//! The ONNX-compatible intermediate representation.
+//!
+//! Mirrors the ONNX object model — `Model` / `Graph` / `Node` /
+//! `Attribute` / initializer tensors / `ValueInfo` — with the operator
+//! *semantics* of the standard opset. The wire format is our own JSON
+//! text serialization ([`super::json`]); see DESIGN.md §3 for why that
+//! substitution is faithful (the paper's methodology depends on the
+//! object model and standard-operator semantics, not on protobuf bytes).
+
+use crate::tensor::{DType, Tensor};
+use std::collections::BTreeMap;
+
+/// A node attribute, matching ONNX `AttributeProto` kinds we need.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Attr {
+    Int(i64),
+    Ints(Vec<i64>),
+    Float(f32),
+    Floats(Vec<f32>),
+    Str(String),
+    Tensor(Tensor),
+}
+
+impl Attr {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Attr::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_ints(&self) -> Option<&[i64]> {
+        match self {
+            Attr::Ints(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f32> {
+        match self {
+            Attr::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Attr::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One operator invocation in the graph. `inputs`/`outputs` are value
+/// names; an empty input name denotes an omitted optional input (ONNX
+/// convention).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    pub name: String,
+    pub op_type: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub attributes: BTreeMap<String, Attr>,
+}
+
+impl Node {
+    pub fn new(name: &str, op_type: &str, inputs: &[&str], outputs: &[&str]) -> Node {
+        Node {
+            name: name.to_string(),
+            op_type: op_type.to_string(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            attributes: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_attr(mut self, key: &str, attr: Attr) -> Node {
+        self.attributes.insert(key.to_string(), attr);
+        self
+    }
+
+    pub fn attr(&self, key: &str) -> Option<&Attr> {
+        self.attributes.get(key)
+    }
+
+    pub fn attr_int(&self, key: &str) -> Option<i64> {
+        self.attr(key).and_then(Attr::as_int)
+    }
+
+    pub fn attr_ints(&self, key: &str) -> Option<&[i64]> {
+        self.attr(key).and_then(Attr::as_ints)
+    }
+
+    pub fn attr_float(&self, key: &str) -> Option<f32> {
+        self.attr(key).and_then(Attr::as_float)
+    }
+
+    pub fn attr_str(&self, key: &str) -> Option<&str> {
+        self.attr(key).and_then(Attr::as_str)
+    }
+}
+
+/// A dimension: fixed, or symbolic (e.g. the batch axis `"N"`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Dim {
+    Fixed(usize),
+    Symbolic(String),
+}
+
+impl Dim {
+    pub fn fixed(&self) -> Option<usize> {
+        match self {
+            Dim::Fixed(n) => Some(*n),
+            Dim::Symbolic(_) => None,
+        }
+    }
+}
+
+/// Typed shape signature of a graph input/output (`ValueInfoProto`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValueInfo {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<Dim>,
+}
+
+impl ValueInfo {
+    pub fn new(name: &str, dtype: DType, dims: &[Dim]) -> ValueInfo {
+        ValueInfo {
+            name: name.to_string(),
+            dtype,
+            shape: dims.to_vec(),
+        }
+    }
+
+    /// All-fixed shape helper.
+    pub fn fixed(name: &str, dtype: DType, shape: &[usize]) -> ValueInfo {
+        ValueInfo {
+            name: name.to_string(),
+            dtype,
+            shape: shape.iter().map(|&d| Dim::Fixed(d)).collect(),
+        }
+    }
+
+    /// Concrete shape if every dim is fixed.
+    pub fn fixed_shape(&self) -> Option<Vec<usize>> {
+        self.shape.iter().map(Dim::fixed).collect()
+    }
+
+    /// Resolve symbolic dims using a binding map (e.g. {"N": 8}).
+    pub fn resolve_shape(&self, bindings: &BTreeMap<String, usize>) -> Option<Vec<usize>> {
+        self.shape
+            .iter()
+            .map(|d| match d {
+                Dim::Fixed(n) => Some(*n),
+                Dim::Symbolic(s) => bindings.get(s).copied(),
+            })
+            .collect()
+    }
+}
+
+/// The computation graph: nodes in topological order of authorship
+/// (the checker/scheduler re-verifies), named initializers (weights,
+/// biases and — centrally for this paper — the embedded quantization
+/// parameters), and typed inputs/outputs.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub inputs: Vec<ValueInfo>,
+    pub outputs: Vec<ValueInfo>,
+    /// Ordered name -> tensor map (order is part of the serialized form).
+    pub initializers: Vec<(String, Tensor)>,
+}
+
+impl Graph {
+    pub fn initializer(&self, name: &str) -> Option<&Tensor> {
+        self.initializers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    pub fn input(&self, name: &str) -> Option<&ValueInfo> {
+        self.inputs.iter().find(|v| v.name == name)
+    }
+
+    pub fn output(&self, name: &str) -> Option<&ValueInfo> {
+        self.outputs.iter().find(|v| v.name == name)
+    }
+
+    /// Names of graph inputs that are NOT initializers (i.e. the runtime
+    /// feeds). ONNX allows initializers to shadow inputs; we keep them
+    /// disjoint but filter defensively.
+    pub fn runtime_inputs(&self) -> Vec<&ValueInfo> {
+        self.inputs
+            .iter()
+            .filter(|v| self.initializer(&v.name).is_none())
+            .collect()
+    }
+
+    /// The node producing a given value name, if any.
+    pub fn producer(&self, value: &str) -> Option<&Node> {
+        self.nodes
+            .iter()
+            .find(|n| n.outputs.iter().any(|o| o == value))
+    }
+}
+
+/// Top-level model: graph + versioning metadata (`ModelProto`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    pub ir_version: i64,
+    pub opset_version: i64,
+    pub producer_name: String,
+    pub doc: String,
+    pub graph: Graph,
+    /// Free-form metadata props. The paper's goal 1 forbids *requiring*
+    /// metadata for execution; we only store provenance here (never read
+    /// by any backend).
+    pub metadata: Vec<(String, String)>,
+}
+
+impl Model {
+    pub fn new(graph: Graph) -> Model {
+        Model {
+            ir_version: 8,
+            // Opset 13+: QuantizeLinear/DequantizeLinear with int8/uint8
+            // zero-point dtype selection, MatMulInteger/ConvInteger (10+).
+            opset_version: 13,
+            producer_name: "pqdl".to_string(),
+            doc: String::new(),
+            graph,
+            metadata: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_attrs() {
+        let n = Node::new("n0", "Conv", &["x", "w"], &["y"])
+            .with_attr("strides", Attr::Ints(vec![1, 1]))
+            .with_attr("group", Attr::Int(1));
+        assert_eq!(n.attr_int("group"), Some(1));
+        assert_eq!(n.attr_ints("strides"), Some(&[1i64, 1][..]));
+        assert!(n.attr("pads").is_none());
+    }
+
+    #[test]
+    fn value_info_resolution() {
+        let vi = ValueInfo::new(
+            "x",
+            DType::I8,
+            &[Dim::Symbolic("N".into()), Dim::Fixed(64)],
+        );
+        assert_eq!(vi.fixed_shape(), None);
+        let mut b = BTreeMap::new();
+        b.insert("N".to_string(), 4usize);
+        assert_eq!(vi.resolve_shape(&b), Some(vec![4, 64]));
+    }
+
+    #[test]
+    fn graph_lookups() {
+        let mut g = Graph {
+            name: "g".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::fixed("x", DType::I8, &[1, 4]));
+        g.initializers
+            .push(("w".into(), Tensor::from_i8(&[4, 2], vec![0; 8]).unwrap()));
+        g.nodes
+            .push(Node::new("mm", "MatMulInteger", &["x", "w"], &["y"]));
+        assert!(g.initializer("w").is_some());
+        assert_eq!(g.runtime_inputs().len(), 1);
+        assert_eq!(g.producer("y").unwrap().name, "mm");
+        assert!(g.producer("z").is_none());
+    }
+}

@@ -1,0 +1,425 @@
+//! Minimal self-contained JSON reader/writer.
+//!
+//! `serde`/`serde_json` are not available in this offline environment, so
+//! the model text format is implemented directly. Numbers are kept as
+//! their canonical source text inside [`Json::Num`], which makes f32
+//! round-trips bit-exact (Rust's shortest-representation float formatting
+//! is guaranteed to re-parse to the identical value) — a requirement for
+//! the paper's "narrow margins" goal: serializing a model must not perturb
+//! any quantization parameter.
+
+use std::fmt::Write as _;
+use thiserror::Error;
+
+/// A JSON document node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Number kept as canonical text (exactness; see module docs).
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+#[derive(Error, Debug)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character '{ch}' at byte {pos}")]
+    Unexpected { ch: char, pos: usize },
+    #[error("invalid number literal '{0}'")]
+    BadNumber(String),
+    #[error("invalid escape sequence at byte {0}")]
+    BadEscape(usize),
+    #[error("expected {expected} at byte {pos}")]
+    Expected { expected: &'static str, pos: usize },
+    #[error("trailing data at byte {0}")]
+    Trailing(usize),
+}
+
+impl Json {
+    pub fn num_i64(v: i64) -> Json {
+        Json::Num(v.to_string())
+    }
+    pub fn num_usize(v: usize) -> Json {
+        Json::Num(v.to_string())
+    }
+    /// Shortest round-trip f32 formatting (exact re-parse guaranteed).
+    pub fn num_f32(v: f32) -> Json {
+        if v.is_finite() {
+            Json::Num(format!("{v}"))
+        } else {
+            // JSON has no inf/nan literals; encode as strings.
+            Json::Str(format!("{v}"))
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj()?.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+    pub fn to_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+    pub fn to_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+    pub fn to_f32(&self) -> Option<f32> {
+        match self {
+            Json::Num(s) => s.parse().ok(),
+            // inf/nan encoded as strings by num_f32.
+            Json::Str(s) => match s.as_str() {
+                "inf" => Some(f32::INFINITY),
+                "-inf" => Some(f32::NEG_INFINITY),
+                "NaN" => Some(f32::NAN),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+    pub fn to_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Serialize to compact JSON text.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(s) => out.push_str(s),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(v) => {
+                out.push('{');
+                for (i, (k, item)) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    item.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(JsonError::Trailing(pos));
+        }
+        Ok(v)
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        return Err(JsonError::Eof(*pos));
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b'-' | b'0'..=b'9' => parse_num(b, pos),
+        c => Err(JsonError::Unexpected {
+            ch: c as char,
+            pos: *pos,
+        }),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &'static str, v: Json) -> Result<Json, JsonError> {
+    if b.len() - *pos >= lit.len() && &b[*pos..*pos + lit.len()] == lit.as_bytes() {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(JsonError::Expected {
+            expected: lit,
+            pos: *pos,
+        })
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    let start = *pos;
+    if b[*pos] == b'-' {
+        *pos += 1;
+    }
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).unwrap();
+    // Validate it parses as a number.
+    if text.parse::<f64>().is_err() {
+        return Err(JsonError::BadNumber(text.to_string()));
+    }
+    Ok(Json::Num(text.to_string()))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        if *pos >= b.len() {
+            return Err(JsonError::Eof(*pos));
+        }
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    return Err(JsonError::Eof(*pos));
+                }
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 >= b.len() {
+                            return Err(JsonError::Eof(*pos));
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .map_err(|_| JsonError::BadEscape(*pos))?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|_| JsonError::BadEscape(*pos))?;
+                        out.push(char::from_u32(code).ok_or(JsonError::BadEscape(*pos))?);
+                        *pos += 4;
+                    }
+                    _ => return Err(JsonError::BadEscape(*pos)),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Consume one UTF-8 scalar.
+                let s = std::str::from_utf8(&b[*pos..]).map_err(|_| JsonError::BadEscape(*pos))?;
+                let c = s.chars().next().ok_or(JsonError::Eof(*pos))?;
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    *pos += 1; // '['
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            return Err(JsonError::Eof(*pos));
+        }
+        match b[*pos] {
+            b',' => {
+                *pos += 1;
+            }
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            c => {
+                return Err(JsonError::Unexpected {
+                    ch: c as char,
+                    pos: *pos,
+                })
+            }
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    *pos += 1; // '{'
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(items));
+    }
+    loop {
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b'"' {
+            return Err(JsonError::Expected {
+                expected: "object key",
+                pos: *pos,
+            });
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b':' {
+            return Err(JsonError::Expected {
+                expected: ":",
+                pos: *pos,
+            });
+        }
+        *pos += 1;
+        let value = parse_value(b, pos)?;
+        items.push((key, value));
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            return Err(JsonError::Eof(*pos));
+        }
+        match b[*pos] {
+            b',' => {
+                *pos += 1;
+            }
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(items));
+            }
+            c => {
+                return Err(JsonError::Unexpected {
+                    ch: c as char,
+                    pos: *pos,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_basic() {
+        let src = r#"{"a":[1,2.5,-3],"b":"hi","c":true,"d":null,"e":{}}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("b").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("c").unwrap().to_bool(), Some(true));
+    }
+
+    #[test]
+    fn f32_exact_round_trip() {
+        // Every one of these must survive format -> parse bit-exactly.
+        for &x in &[
+            0.1f32,
+            1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            1.1754944e-38,
+            3.4028235e38,
+            -0.0,
+            6.1035156e-5,
+        ] {
+            let j = Json::num_f32(x);
+            let y = Json::parse(&j.to_string()).unwrap().to_f32().unwrap();
+            assert_eq!(x.to_bits(), y.to_bits(), "lost bits for {x}");
+        }
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::Str("a\"b\\c\nd\tπ".to_string());
+        let parsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(parsed, v);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("[1] x").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn nested() {
+        let src = r#"[[1,[2,[3]]],{"k":[{"m":0}]}]"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.to_string(), src);
+    }
+}

@@ -1,0 +1,22 @@
+//! ONNX-compatible model representation.
+//!
+//! This is the paper's interchange substrate, built from scratch: the
+//! ONNX object model ([`ir`]), a lossless JSON text serialization
+//! ([`serde`], [`json`]), topological scheduling ([`topo`]), shape/dtype
+//! inference ([`shape`]) and a validator ([`check`]) that — per the
+//! paper's goal 3 — admits only standard operators.
+
+pub mod build;
+pub mod check;
+pub mod ir;
+pub mod json;
+pub mod serde;
+pub mod shape;
+pub mod topo;
+
+pub use build::{batched, fixed_dims, GraphBuilder};
+pub use check::{check_model, CheckError, STANDARD_OPS};
+pub use ir::{Attr, Dim, Graph, Model, Node, ValueInfo};
+pub use serde::{load_model, model_from_json, model_to_json, save_model};
+pub use shape::{infer_graph, ValueType};
+pub use topo::topo_order;

@@ -1,0 +1,500 @@
+//! Model <-> JSON text serialization.
+//!
+//! The serialized form carries everything the paper's goal 1 requires to
+//! live *inside* the model: weights, biases, and the quantization
+//! parameters (`Quant_scale`, `Quant_shift`, QuantizeLinear scales and
+//! zero-points) as ordinary initializers. Floats are stored in shortest
+//! round-trip decimal (bit-exact re-parse), f16 as raw bit patterns.
+
+use super::ir::{Attr, Dim, Graph, Model, Node, ValueInfo};
+use super::json::Json;
+use crate::tensor::{f16::F16, DType, Tensor, TensorData};
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum SerdeError {
+    #[error("json: {0}")]
+    Json(#[from] super::json::JsonError),
+    #[error("missing field '{0}'")]
+    Missing(&'static str),
+    #[error("bad field '{field}': {msg}")]
+    Bad { field: &'static str, msg: String },
+    #[error("tensor: {0}")]
+    Tensor(#[from] crate::tensor::TensorError),
+}
+
+fn bad(field: &'static str, msg: impl Into<String>) -> SerdeError {
+    SerdeError::Bad {
+        field,
+        msg: msg.into(),
+    }
+}
+
+// --- serialization --------------------------------------------------------
+
+fn dims_to_json(dims: &[Dim]) -> Json {
+    Json::Arr(
+        dims.iter()
+            .map(|d| match d {
+                Dim::Fixed(n) => Json::num_usize(*n),
+                Dim::Symbolic(s) => Json::Str(s.clone()),
+            })
+            .collect(),
+    )
+}
+
+fn value_info_to_json(vi: &ValueInfo) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(vi.name.clone())),
+        ("dtype".into(), Json::Str(vi.dtype.onnx_name().into())),
+        ("shape".into(), dims_to_json(&vi.shape)),
+    ])
+}
+
+fn tensor_data_to_json(t: &Tensor) -> Json {
+    match t.data() {
+        TensorData::F32(v) => Json::Arr(v.iter().map(|&x| Json::num_f32(x)).collect()),
+        // f16 serialized as raw bits — exact by construction.
+        TensorData::F16(v) => Json::Arr(v.iter().map(|x| Json::num_i64(x.0 as i64)).collect()),
+        TensorData::I8(v) => Json::Arr(v.iter().map(|&x| Json::num_i64(x as i64)).collect()),
+        TensorData::U8(v) => Json::Arr(v.iter().map(|&x| Json::num_i64(x as i64)).collect()),
+        TensorData::I32(v) => Json::Arr(v.iter().map(|&x| Json::num_i64(x as i64)).collect()),
+        TensorData::I64(v) => Json::Arr(v.iter().map(|&x| Json::num_i64(x)).collect()),
+        TensorData::Bool(v) => Json::Arr(v.iter().map(|&x| Json::Bool(x)).collect()),
+    }
+}
+
+fn tensor_to_json(name: &str, t: &Tensor) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(name.to_string())),
+        ("dtype".into(), Json::Str(t.dtype().onnx_name().into())),
+        (
+            "shape".into(),
+            Json::Arr(t.shape().iter().map(|&d| Json::num_usize(d)).collect()),
+        ),
+        ("data".into(), tensor_data_to_json(t)),
+    ])
+}
+
+fn attr_to_json(a: &Attr) -> Json {
+    let (kind, value) = match a {
+        Attr::Int(v) => ("int", Json::num_i64(*v)),
+        Attr::Ints(v) => (
+            "ints",
+            Json::Arr(v.iter().map(|&x| Json::num_i64(x)).collect()),
+        ),
+        Attr::Float(v) => ("float", Json::num_f32(*v)),
+        Attr::Floats(v) => (
+            "floats",
+            Json::Arr(v.iter().map(|&x| Json::num_f32(x)).collect()),
+        ),
+        Attr::Str(v) => ("string", Json::Str(v.clone())),
+        Attr::Tensor(t) => ("tensor", tensor_to_json("", t)),
+    };
+    Json::Obj(vec![
+        ("kind".into(), Json::Str(kind.into())),
+        ("value".into(), value),
+    ])
+}
+
+fn node_to_json(n: &Node) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(n.name.clone())),
+        ("op".into(), Json::Str(n.op_type.clone())),
+        (
+            "inputs".into(),
+            Json::Arr(n.inputs.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        (
+            "outputs".into(),
+            Json::Arr(n.outputs.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        (
+            "attrs".into(),
+            Json::Obj(
+                n.attributes
+                    .iter()
+                    .map(|(k, v)| (k.clone(), attr_to_json(v)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serialize a model to its JSON text form.
+pub fn model_to_json(m: &Model) -> String {
+    let graph = Json::Obj(vec![
+        ("name".into(), Json::Str(m.graph.name.clone())),
+        (
+            "inputs".into(),
+            Json::Arr(m.graph.inputs.iter().map(value_info_to_json).collect()),
+        ),
+        (
+            "outputs".into(),
+            Json::Arr(m.graph.outputs.iter().map(value_info_to_json).collect()),
+        ),
+        (
+            "initializers".into(),
+            Json::Arr(
+                m.graph
+                    .initializers
+                    .iter()
+                    .map(|(n, t)| tensor_to_json(n, t))
+                    .collect(),
+            ),
+        ),
+        (
+            "nodes".into(),
+            Json::Arr(m.graph.nodes.iter().map(node_to_json).collect()),
+        ),
+    ]);
+    Json::Obj(vec![
+        ("ir_version".into(), Json::num_i64(m.ir_version)),
+        ("opset_version".into(), Json::num_i64(m.opset_version)),
+        ("producer_name".into(), Json::Str(m.producer_name.clone())),
+        ("doc".into(), Json::Str(m.doc.clone())),
+        (
+            "metadata".into(),
+            Json::Arr(
+                m.metadata
+                    .iter()
+                    .map(|(k, v)| {
+                        Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("graph".into(), graph),
+    ])
+    .to_string()
+}
+
+// --- deserialization ------------------------------------------------------
+
+fn parse_dtype(j: &Json, field: &'static str) -> Result<DType, SerdeError> {
+    let s = j.as_str().ok_or(bad(field, "dtype must be a string"))?;
+    DType::from_onnx_name(s).ok_or(bad(field, format!("unknown dtype '{s}'")))
+}
+
+fn parse_dims(j: &Json) -> Result<Vec<Dim>, SerdeError> {
+    j.as_arr()
+        .ok_or(bad("shape", "must be array"))?
+        .iter()
+        .map(|d| match d {
+            Json::Str(s) => Ok(Dim::Symbolic(s.clone())),
+            n => n
+                .to_usize()
+                .map(Dim::Fixed)
+                .ok_or(bad("shape", "dim must be usize or string")),
+        })
+        .collect()
+}
+
+fn parse_value_info(j: &Json) -> Result<ValueInfo, SerdeError> {
+    Ok(ValueInfo {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or(SerdeError::Missing("name"))?
+            .to_string(),
+        dtype: parse_dtype(j.get("dtype").ok_or(SerdeError::Missing("dtype"))?, "dtype")?,
+        shape: parse_dims(j.get("shape").ok_or(SerdeError::Missing("shape"))?)?,
+    })
+}
+
+fn parse_tensor(j: &Json) -> Result<(String, Tensor), SerdeError> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or(SerdeError::Missing("name"))?
+        .to_string();
+    let dtype = parse_dtype(j.get("dtype").ok_or(SerdeError::Missing("dtype"))?, "dtype")?;
+    let shape: Vec<usize> = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or(SerdeError::Missing("shape"))?
+        .iter()
+        .map(|d| d.to_usize().ok_or(bad("shape", "dim must be usize")))
+        .collect::<Result<_, _>>()?;
+    let data = j
+        .get("data")
+        .and_then(Json::as_arr)
+        .ok_or(SerdeError::Missing("data"))?;
+    let want = |msg: &'static str| bad("data", msg);
+    let td = match dtype {
+        DType::F32 => TensorData::F32(
+            data.iter()
+                .map(|v| v.to_f32().ok_or(want("f32")))
+                .collect::<Result<_, _>>()?,
+        ),
+        DType::F16 => TensorData::F16(
+            data.iter()
+                .map(|v| {
+                    v.to_i64()
+                        .and_then(|b| u16::try_from(b).ok())
+                        .map(F16)
+                        .ok_or(want("f16 bits"))
+                })
+                .collect::<Result<_, _>>()?,
+        ),
+        DType::I8 => TensorData::I8(
+            data.iter()
+                .map(|v| {
+                    v.to_i64()
+                        .and_then(|b| i8::try_from(b).ok())
+                        .ok_or(want("i8"))
+                })
+                .collect::<Result<_, _>>()?,
+        ),
+        DType::U8 => TensorData::U8(
+            data.iter()
+                .map(|v| {
+                    v.to_i64()
+                        .and_then(|b| u8::try_from(b).ok())
+                        .ok_or(want("u8"))
+                })
+                .collect::<Result<_, _>>()?,
+        ),
+        DType::I32 => TensorData::I32(
+            data.iter()
+                .map(|v| {
+                    v.to_i64()
+                        .and_then(|b| i32::try_from(b).ok())
+                        .ok_or(want("i32"))
+                })
+                .collect::<Result<_, _>>()?,
+        ),
+        DType::I64 => TensorData::I64(
+            data.iter()
+                .map(|v| v.to_i64().ok_or(want("i64")))
+                .collect::<Result<_, _>>()?,
+        ),
+        DType::Bool => TensorData::Bool(
+            data.iter()
+                .map(|v| v.to_bool().ok_or(want("bool")))
+                .collect::<Result<_, _>>()?,
+        ),
+    };
+    Ok((name, Tensor::new(shape, td)?))
+}
+
+fn parse_attr(j: &Json) -> Result<Attr, SerdeError> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or(SerdeError::Missing("kind"))?;
+    let value = j.get("value").ok_or(SerdeError::Missing("value"))?;
+    Ok(match kind {
+        "int" => Attr::Int(value.to_i64().ok_or(bad("value", "int"))?),
+        "ints" => Attr::Ints(
+            value
+                .as_arr()
+                .ok_or(bad("value", "ints"))?
+                .iter()
+                .map(|v| v.to_i64().ok_or(bad("value", "ints item")))
+                .collect::<Result<_, _>>()?,
+        ),
+        "float" => Attr::Float(value.to_f32().ok_or(bad("value", "float"))?),
+        "floats" => Attr::Floats(
+            value
+                .as_arr()
+                .ok_or(bad("value", "floats"))?
+                .iter()
+                .map(|v| v.to_f32().ok_or(bad("value", "floats item")))
+                .collect::<Result<_, _>>()?,
+        ),
+        "string" => Attr::Str(value.as_str().ok_or(bad("value", "string"))?.to_string()),
+        "tensor" => Attr::Tensor(parse_tensor(value)?.1),
+        other => return Err(bad("kind", format!("unknown attr kind '{other}'"))),
+    })
+}
+
+fn parse_node(j: &Json) -> Result<Node, SerdeError> {
+    let names = |key: &'static str| -> Result<Vec<String>, SerdeError> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or(SerdeError::Missing(key))?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or(bad("inputs/outputs", "must be strings"))
+            })
+            .collect()
+    };
+    let mut node = Node {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        op_type: j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or(SerdeError::Missing("op"))?
+            .to_string(),
+        inputs: names("inputs")?,
+        outputs: names("outputs")?,
+        attributes: Default::default(),
+    };
+    if let Some(attrs) = j.get("attrs").and_then(Json::as_obj) {
+        for (k, v) in attrs {
+            node.attributes.insert(k.clone(), parse_attr(v)?);
+        }
+    }
+    Ok(node)
+}
+
+/// Parse a model from its JSON text form.
+pub fn model_from_json(text: &str) -> Result<Model, SerdeError> {
+    let j = Json::parse(text)?;
+    let g = j.get("graph").ok_or(SerdeError::Missing("graph"))?;
+    let arr = |key: &'static str| -> Result<&[Json], SerdeError> {
+        g.get(key)
+            .and_then(Json::as_arr)
+            .ok_or(SerdeError::Missing(key))
+    };
+    let graph = Graph {
+        name: g
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        inputs: arr("inputs")?
+            .iter()
+            .map(parse_value_info)
+            .collect::<Result<_, _>>()?,
+        outputs: arr("outputs")?
+            .iter()
+            .map(parse_value_info)
+            .collect::<Result<_, _>>()?,
+        initializers: arr("initializers")?
+            .iter()
+            .map(parse_tensor)
+            .collect::<Result<_, _>>()?,
+        nodes: arr("nodes")?
+            .iter()
+            .map(parse_node)
+            .collect::<Result<_, _>>()?,
+    };
+    Ok(Model {
+        ir_version: j
+            .get("ir_version")
+            .and_then(Json::to_i64)
+            .ok_or(SerdeError::Missing("ir_version"))?,
+        opset_version: j
+            .get("opset_version")
+            .and_then(Json::to_i64)
+            .ok_or(SerdeError::Missing("opset_version"))?,
+        producer_name: j
+            .get("producer_name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        doc: j
+            .get("doc")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        metadata: j
+            .get("metadata")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|pair| {
+                let a = pair.as_arr()?;
+                Some((a.first()?.as_str()?.to_string(), a.get(1)?.as_str()?.to_string()))
+            })
+            .collect(),
+        graph,
+    })
+}
+
+/// Write a model to a file.
+pub fn save_model(m: &Model, path: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::write(path, model_to_json(m))?;
+    Ok(())
+}
+
+/// Read a model from a file.
+pub fn load_model(path: &std::path::Path) -> anyhow::Result<Model> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(model_from_json(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::ir::{Attr, Dim, Graph, Model, Node, ValueInfo};
+    use crate::tensor::Tensor;
+
+    fn sample_model() -> Model {
+        let mut g = Graph {
+            name: "fc".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::new(
+            "x",
+            DType::I8,
+            &[Dim::Symbolic("N".into()), Dim::Fixed(4)],
+        ));
+        g.outputs.push(ValueInfo::new(
+            "y",
+            DType::I8,
+            &[Dim::Symbolic("N".into()), Dim::Fixed(2)],
+        ));
+        g.initializers.push((
+            "w".into(),
+            Tensor::from_i8(&[4, 2], vec![1, -2, 3, -4, 5, -6, 7, -8]).unwrap(),
+        ));
+        g.initializers
+            .push(("qs".into(), Tensor::scalar_f32(11184810.0)));
+        g.initializers.push((
+            "h".into(),
+            Tensor::from_f16(&[2], vec![F16::from_f32(0.5), F16::NAN]).unwrap(),
+        ));
+        g.nodes.push(
+            Node::new("mm", "MatMulInteger", &["x", "w"], &["acc"])
+                .with_attr("doc", Attr::Str("eq5".into())),
+        );
+        g.nodes.push(
+            Node::new("mul", "Mul", &["acc_f", "qs"], &["y_f"])
+                .with_attr("k", Attr::Floats(vec![0.1, 1.0 / 3.0])),
+        );
+        Model::new(g)
+    }
+
+    #[test]
+    fn model_round_trip() {
+        let m = sample_model();
+        let text = model_to_json(&m);
+        let back = model_from_json(&text).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn round_trip_is_stable() {
+        // Serializing twice yields identical text (canonical form).
+        let m = sample_model();
+        let t1 = model_to_json(&m);
+        let t2 = model_to_json(&model_from_json(&t1).unwrap());
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn quant_scale_float_precision() {
+        // The paper's 1/3 example: Quant_scale = 11184810 stored as FLOAT
+        // must survive serialization exactly.
+        let m = sample_model();
+        let back = model_from_json(&model_to_json(&m)).unwrap();
+        let qs = back.graph.initializer("qs").unwrap();
+        assert_eq!(qs.as_f32().unwrap()[0], 11184810.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(model_from_json("{}").is_err());
+        assert!(model_from_json("not json").is_err());
+        assert!(model_from_json(r#"{"graph":{"name":"g"}}"#).is_err());
+    }
+}

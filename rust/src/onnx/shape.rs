@@ -1,0 +1,651 @@
+//! Per-operator shape and dtype inference over the standard opset subset
+//! used by the paper's patterns (plus the fp32 originals they are lowered
+//! from). Batch dims may be symbolic (`Dim::Symbolic`); spatial and
+//! feature dims must be fixed, matching how the paper's models are
+//! authored (fixed layer sizes, free batch).
+
+use super::ir::{Dim, Graph, Node};
+use crate::tensor::DType;
+use std::collections::HashMap;
+use thiserror::Error;
+
+/// Inferred type of one graph value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValueType {
+    pub dtype: DType,
+    pub shape: Vec<Dim>,
+}
+
+impl ValueType {
+    pub fn new(dtype: DType, shape: Vec<Dim>) -> ValueType {
+        ValueType { dtype, shape }
+    }
+
+    pub fn fixed(dtype: DType, shape: &[usize]) -> ValueType {
+        ValueType {
+            dtype,
+            shape: shape.iter().map(|&d| Dim::Fixed(d)).collect(),
+        }
+    }
+}
+
+#[derive(Error, Debug)]
+pub enum ShapeError {
+    #[error("node '{node}' ({op}): {msg}")]
+    Infer {
+        node: String,
+        op: String,
+        msg: String,
+    },
+    #[error("unsupported operator '{0}'")]
+    UnsupportedOp(String),
+    #[error("topology: {0}")]
+    Topo(#[from] super::topo::TopoError),
+}
+
+fn err(node: &Node, msg: impl Into<String>) -> ShapeError {
+    ShapeError::Infer {
+        node: node.name.clone(),
+        op: node.op_type.clone(),
+        msg: msg.into(),
+    }
+}
+
+fn dims_eq(a: &Dim, b: &Dim) -> bool {
+    match (a, b) {
+        (Dim::Fixed(x), Dim::Fixed(y)) => x == y,
+        (Dim::Symbolic(x), Dim::Symbolic(y)) => x == y,
+        _ => false,
+    }
+}
+
+/// Multidirectional (NumPy) broadcast over possibly-symbolic dims.
+fn broadcast_dims(node: &Node, a: &[Dim], b: &[Dim]) -> Result<Vec<Dim>, ShapeError> {
+    let rank = a.len().max(b.len());
+    let one = Dim::Fixed(1);
+    let mut out = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let da = if i < rank - a.len() { &one } else { &a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { &one } else { &b[i - (rank - b.len())] };
+        let d = if dims_eq(da, db) {
+            da.clone()
+        } else if matches!(da, Dim::Fixed(1)) {
+            db.clone()
+        } else if matches!(db, Dim::Fixed(1)) {
+            da.clone()
+        } else {
+            return Err(err(node, format!("cannot broadcast {a:?} with {b:?}")));
+        };
+        out.push(d);
+    }
+    Ok(out)
+}
+
+/// Spatial output size of a conv/pool window.
+fn window_out(
+    node: &Node,
+    input: usize,
+    kernel: usize,
+    pad_begin: usize,
+    pad_end: usize,
+    stride: usize,
+    dilation: usize,
+) -> Result<usize, ShapeError> {
+    let eff_k = dilation * (kernel - 1) + 1;
+    let padded = input + pad_begin + pad_end;
+    if padded < eff_k {
+        return Err(err(
+            node,
+            format!("window {eff_k} larger than padded input {padded}"),
+        ));
+    }
+    Ok((padded - eff_k) / stride + 1)
+}
+
+/// Read 2-D conv/pool attributes with ONNX defaults.
+pub struct ConvAttrs {
+    pub strides: [usize; 2],
+    pub pads: [usize; 4], // top, left, bottom, right
+    pub dilations: [usize; 2],
+    pub group: usize,
+}
+
+impl ConvAttrs {
+    pub fn from_node(node: &Node) -> ConvAttrs {
+        let get2 = |key: &str| -> [usize; 2] {
+            node.attr_ints(key)
+                .map(|v| [v[0] as usize, v[1] as usize])
+                .unwrap_or([1, 1])
+        };
+        let pads = node
+            .attr_ints("pads")
+            .map(|v| [v[0] as usize, v[1] as usize, v[2] as usize, v[3] as usize])
+            .unwrap_or([0, 0, 0, 0]);
+        ConvAttrs {
+            strides: get2("strides"),
+            pads,
+            dilations: get2("dilations"),
+            group: node.attr_int("group").unwrap_or(1) as usize,
+        }
+    }
+}
+
+fn fixed_dim(node: &Node, d: &Dim, what: &str) -> Result<usize, ShapeError> {
+    d.fixed()
+        .ok_or_else(|| err(node, format!("{what} must be a fixed dim, got {d:?}")))
+}
+
+fn conv_like_shape(
+    node: &Node,
+    x: &ValueType,
+    w: &ValueType,
+) -> Result<Vec<Dim>, ShapeError> {
+    if x.shape.len() != 4 || w.shape.len() != 4 {
+        return Err(err(node, "expects NCHW input and MCkk weight"));
+    }
+    let attrs = ConvAttrs::from_node(node);
+    let c_in = fixed_dim(node, &x.shape[1], "C")?;
+    let h = fixed_dim(node, &x.shape[2], "H")?;
+    let wdt = fixed_dim(node, &x.shape[3], "W")?;
+    let m = fixed_dim(node, &w.shape[0], "M")?;
+    let wc = fixed_dim(node, &w.shape[1], "weight C")?;
+    let kh = fixed_dim(node, &w.shape[2], "kH")?;
+    let kw = fixed_dim(node, &w.shape[3], "kW")?;
+    if wc * attrs.group != c_in {
+        return Err(err(
+            node,
+            format!("channel mismatch: input C={c_in}, weight C={wc}, group={}", attrs.group),
+        ));
+    }
+    let oh = window_out(node, h, kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0])?;
+    let ow = window_out(node, wdt, kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1])?;
+    Ok(vec![
+        x.shape[0].clone(),
+        Dim::Fixed(m),
+        Dim::Fixed(oh),
+        Dim::Fixed(ow),
+    ])
+}
+
+fn pool_shape(node: &Node, x: &ValueType) -> Result<Vec<Dim>, ShapeError> {
+    if x.shape.len() != 4 {
+        return Err(err(node, "expects NCHW input"));
+    }
+    let kernel = node
+        .attr_ints("kernel_shape")
+        .ok_or_else(|| err(node, "missing kernel_shape"))?;
+    let attrs = ConvAttrs::from_node(node);
+    let h = fixed_dim(node, &x.shape[2], "H")?;
+    let w = fixed_dim(node, &x.shape[3], "W")?;
+    let oh = window_out(node, h, kernel[0] as usize, attrs.pads[0], attrs.pads[2], attrs.strides[0], 1)?;
+    let ow = window_out(node, w, kernel[1] as usize, attrs.pads[1], attrs.pads[3], attrs.strides[1], 1)?;
+    Ok(vec![
+        x.shape[0].clone(),
+        x.shape[1].clone(),
+        Dim::Fixed(oh),
+        Dim::Fixed(ow),
+    ])
+}
+
+/// Infer the output [`ValueType`]s of one node given its input types.
+/// `graph` is consulted for shape-carrying initializers (Reshape).
+pub fn infer_node(
+    node: &Node,
+    graph: &Graph,
+    inputs: &[Option<&ValueType>],
+) -> Result<Vec<ValueType>, ShapeError> {
+    let req = |i: usize| -> Result<&ValueType, ShapeError> {
+        inputs
+            .get(i)
+            .copied()
+            .flatten()
+            .ok_or_else(|| err(node, format!("missing required input #{i}")))
+    };
+
+    let out = match node.op_type.as_str() {
+        "MatMulInteger" => {
+            let a = req(0)?;
+            let b = req(1)?;
+            if !a.dtype.is_quantized_int() || !b.dtype.is_quantized_int() {
+                return Err(err(node, format!("requires int8/uint8 inputs, got {}/{}", a.dtype, b.dtype)));
+            }
+            vec![ValueType::new(DType::I32, matmul_shape(node, a, b)?)]
+        }
+        "MatMul" => {
+            let a = req(0)?;
+            let b = req(1)?;
+            if a.dtype != b.dtype || !a.dtype.is_float() {
+                return Err(err(node, "requires matching float inputs"));
+            }
+            vec![ValueType::new(a.dtype, matmul_shape(node, a, b)?)]
+        }
+        "Gemm" => {
+            let a = req(0)?;
+            let b = req(1)?;
+            if a.shape.len() != 2 || b.shape.len() != 2 {
+                return Err(err(node, "Gemm expects rank-2 inputs"));
+            }
+            let trans_a = node.attr_int("transA").unwrap_or(0) != 0;
+            let trans_b = node.attr_int("transB").unwrap_or(0) != 0;
+            let (m, ka) = if trans_a {
+                (a.shape[1].clone(), a.shape[0].clone())
+            } else {
+                (a.shape[0].clone(), a.shape[1].clone())
+            };
+            let (kb, n) = if trans_b {
+                (b.shape[1].clone(), b.shape[0].clone())
+            } else {
+                (b.shape[0].clone(), b.shape[1].clone())
+            };
+            if !dims_eq(&ka, &kb) {
+                return Err(err(node, format!("K mismatch {ka:?} vs {kb:?}")));
+            }
+            vec![ValueType::new(a.dtype, vec![m, n])]
+        }
+        "ConvInteger" => {
+            let x = req(0)?;
+            let w = req(1)?;
+            if !x.dtype.is_quantized_int() || !w.dtype.is_quantized_int() {
+                return Err(err(node, "requires int8/uint8 inputs"));
+            }
+            vec![ValueType::new(DType::I32, conv_like_shape(node, x, w)?)]
+        }
+        "Conv" => {
+            let x = req(0)?;
+            let w = req(1)?;
+            if x.dtype != DType::F32 || w.dtype != DType::F32 {
+                return Err(err(node, "fp32 Conv requires FLOAT inputs"));
+            }
+            vec![ValueType::new(DType::F32, conv_like_shape(node, x, w)?)]
+        }
+        "Add" | "Mul" | "Sub" | "Div" => {
+            let a = req(0)?;
+            let b = req(1)?;
+            if a.dtype != b.dtype {
+                return Err(err(node, format!("dtype mismatch {} vs {}", a.dtype, b.dtype)));
+            }
+            vec![ValueType::new(a.dtype, broadcast_dims(node, &a.shape, &b.shape)?)]
+        }
+        "Cast" => {
+            let x = req(0)?;
+            let to = node
+                .attr_str("to")
+                .and_then(DType::from_onnx_name)
+                .ok_or_else(|| err(node, "missing/unknown 'to' dtype attr"))?;
+            vec![ValueType::new(to, x.shape.clone())]
+        }
+        "QuantizeLinear" => {
+            let x = req(0)?;
+            let scale = req(1)?;
+            if x.dtype != DType::F32 {
+                return Err(err(node, "input must be FLOAT"));
+            }
+            if scale.dtype != DType::F32 {
+                return Err(err(node, "y_scale must be FLOAT"));
+            }
+            // Zero-point dtype selects the output dtype (paper §3.1);
+            // default int8 when omitted (ONNX defaults to uint8, but every
+            // pattern in the paper passes an explicit zero point).
+            let out_dtype = inputs
+                .get(2)
+                .copied()
+                .flatten()
+                .map(|zp| zp.dtype)
+                .unwrap_or(DType::U8);
+            if !out_dtype.is_quantized_int() {
+                return Err(err(node, "zero_point must be INT8 or UINT8"));
+            }
+            vec![ValueType::new(out_dtype, x.shape.clone())]
+        }
+        "DequantizeLinear" => {
+            let x = req(0)?;
+            if !x.dtype.is_quantized_int() && x.dtype != DType::I32 {
+                return Err(err(node, "input must be INT8/UINT8/INT32"));
+            }
+            vec![ValueType::new(DType::F32, x.shape.clone())]
+        }
+        "Relu" => {
+            let x = req(0)?;
+            if !matches!(x.dtype, DType::F32 | DType::F16 | DType::I32 | DType::I8) {
+                return Err(err(node, format!("unsupported dtype {}", x.dtype)));
+            }
+            vec![x.clone()]
+        }
+        "Tanh" | "Sigmoid" => {
+            let x = req(0)?;
+            if !x.dtype.is_float() {
+                return Err(err(node, format!("requires float input, got {}", x.dtype)));
+            }
+            vec![x.clone()]
+        }
+        "Softmax" => {
+            let x = req(0)?;
+            if x.dtype != DType::F32 {
+                return Err(err(node, "requires FLOAT input"));
+            }
+            vec![x.clone()]
+        }
+        "MaxPool" => {
+            let x = req(0)?;
+            vec![ValueType::new(x.dtype, pool_shape(node, x)?)]
+        }
+        "AveragePool" => {
+            let x = req(0)?;
+            if x.dtype != DType::F32 {
+                return Err(err(node, "requires FLOAT input"));
+            }
+            vec![ValueType::new(x.dtype, pool_shape(node, x)?)]
+        }
+        "Reshape" => {
+            let x = req(0)?;
+            let shape_name = node
+                .inputs
+                .get(1)
+                .ok_or_else(|| err(node, "missing shape input"))?;
+            let shape_t = graph
+                .initializer(shape_name)
+                .ok_or_else(|| err(node, "shape input must be an initializer"))?;
+            let spec = shape_t
+                .as_i64()
+                .map_err(|e| err(node, format!("shape tensor: {e}")))?;
+            vec![ValueType::new(x.dtype, reshape_dims(node, &x.shape, spec)?)]
+        }
+        "Flatten" => {
+            let x = req(0)?;
+            let axis = node.attr_int("axis").unwrap_or(1) as usize;
+            if axis > x.shape.len() {
+                return Err(err(node, "axis out of range"));
+            }
+            let fold = |dims: &[Dim]| -> Result<Dim, ShapeError> {
+                if dims.is_empty() {
+                    return Ok(Dim::Fixed(1));
+                }
+                if dims.len() == 1 {
+                    return Ok(dims[0].clone());
+                }
+                let mut p = 1usize;
+                for d in dims {
+                    p *= fixed_dim(node, d, "flattened dim")?;
+                }
+                Ok(Dim::Fixed(p))
+            };
+            vec![ValueType::new(
+                x.dtype,
+                vec![fold(&x.shape[..axis])?, fold(&x.shape[axis..])?],
+            )]
+        }
+        "Identity" => vec![req(0)?.clone()],
+        other => return Err(ShapeError::UnsupportedOp(other.to_string())),
+    };
+    Ok(out)
+}
+
+fn matmul_shape(node: &Node, a: &ValueType, b: &ValueType) -> Result<Vec<Dim>, ShapeError> {
+    // Supports A rank >= 2 (leading batch dims) with rank-2 B — the form
+    // every pattern in the paper uses (weights are rank-2 initializers).
+    if b.shape.len() != 2 {
+        return Err(err(node, "B must be rank-2"));
+    }
+    if a.shape.len() < 2 {
+        return Err(err(node, "A must be rank >= 2"));
+    }
+    let k_a = &a.shape[a.shape.len() - 1];
+    let k_b = &b.shape[0];
+    if !dims_eq(k_a, k_b) {
+        return Err(err(node, format!("K mismatch: {k_a:?} vs {k_b:?}")));
+    }
+    let mut out = a.shape[..a.shape.len() - 1].to_vec();
+    out.push(b.shape[1].clone());
+    Ok(out)
+}
+
+fn reshape_dims(node: &Node, input: &[Dim], spec: &[i64]) -> Result<Vec<Dim>, ShapeError> {
+    // ONNX Reshape: 0 copies the input dim, -1 infers. Symbolic input dims
+    // are supported only where copied via 0 or where the -1 inference does
+    // not need them.
+    let mut out: Vec<Dim> = Vec::with_capacity(spec.len());
+    let mut infer_at: Option<usize> = None;
+    for (i, &s) in spec.iter().enumerate() {
+        match s {
+            0 => {
+                let d = input
+                    .get(i)
+                    .ok_or_else(|| err(node, "0-dim copies out of range"))?;
+                out.push(d.clone());
+            }
+            -1 => {
+                if infer_at.is_some() {
+                    return Err(err(node, "multiple -1 dims"));
+                }
+                infer_at = Some(i);
+                out.push(Dim::Fixed(0)); // placeholder
+            }
+            s if s > 0 => out.push(Dim::Fixed(s as usize)),
+            _ => return Err(err(node, format!("bad reshape dim {s}"))),
+        }
+    }
+    if let Some(at) = infer_at {
+        // Total elements must be computable: all input dims fixed except
+        // ones that are copied symbolically AND cancel out.
+        let mut sym_in: Vec<&str> = Vec::new();
+        let mut fixed_in = 1usize;
+        for d in input {
+            match d {
+                Dim::Fixed(n) => fixed_in *= n,
+                Dim::Symbolic(s) => sym_in.push(s),
+            }
+        }
+        let mut sym_out: Vec<&str> = Vec::new();
+        let mut fixed_out = 1usize;
+        for (i, d) in out.iter().enumerate() {
+            if i == at {
+                continue;
+            }
+            match d {
+                Dim::Fixed(n) => fixed_out *= n,
+                Dim::Symbolic(s) => sym_out.push(s),
+            }
+        }
+        sym_in.sort_unstable();
+        sym_out.sort_unstable();
+        if sym_in != sym_out {
+            return Err(err(node, "cannot infer -1 with unmatched symbolic dims"));
+        }
+        if fixed_out == 0 || fixed_in % fixed_out != 0 {
+            return Err(err(node, format!("cannot infer -1: {fixed_in} vs {fixed_out}")));
+        }
+        out[at] = Dim::Fixed(fixed_in / fixed_out);
+    }
+    Ok(out)
+}
+
+/// Infer types for every value in the graph. Returns a map from value
+/// name to [`ValueType`]; declared graph outputs are cross-checked.
+pub fn infer_graph(graph: &Graph) -> Result<HashMap<String, ValueType>, ShapeError> {
+    let order = super::topo::topo_order(graph)?;
+    let mut types: HashMap<String, ValueType> = HashMap::new();
+    for vi in &graph.inputs {
+        types.insert(vi.name.clone(), ValueType::new(vi.dtype, vi.shape.clone()));
+    }
+    for (name, t) in &graph.initializers {
+        types.insert(name.clone(), ValueType::fixed(t.dtype(), t.shape()));
+    }
+    for idx in order {
+        let node = &graph.nodes[idx];
+        let in_types: Vec<Option<&ValueType>> = node
+            .inputs
+            .iter()
+            .map(|n| if n.is_empty() { None } else { types.get(n.as_str()) })
+            .collect();
+        let outs = infer_node(node, graph, &in_types)?;
+        if outs.len() != node.outputs.len() {
+            return Err(err(node, "output arity mismatch"));
+        }
+        for (name, vt) in node.outputs.iter().zip(outs) {
+            if !name.is_empty() {
+                types.insert(name.clone(), vt);
+            }
+        }
+    }
+    Ok(types)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::ir::{Attr, Graph, Node, ValueInfo};
+    use crate::tensor::Tensor;
+
+    fn fc_graph() -> Graph {
+        // x:i8[N,4] @ w:i8[4,2] -> i32 -> +bias -> cast f32
+        let mut g = Graph {
+            name: "fc".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::new(
+            "x",
+            DType::I8,
+            &[Dim::Symbolic("N".into()), Dim::Fixed(4)],
+        ));
+        g.initializers
+            .push(("w".into(), Tensor::from_i8(&[4, 2], vec![0; 8]).unwrap()));
+        g.initializers
+            .push(("b".into(), Tensor::from_i32(&[2], vec![0; 2]).unwrap()));
+        g.nodes
+            .push(Node::new("mm", "MatMulInteger", &["x", "w"], &["acc"]));
+        g.nodes.push(Node::new("add", "Add", &["acc", "b"], &["acc_b"]));
+        g.nodes.push(
+            Node::new("cast", "Cast", &["acc_b"], &["f"])
+                .with_attr("to", Attr::Str("FLOAT".into())),
+        );
+        g
+    }
+
+    #[test]
+    fn fc_inference() {
+        let types = infer_graph(&fc_graph()).unwrap();
+        let acc = &types["acc"];
+        assert_eq!(acc.dtype, DType::I32);
+        assert_eq!(acc.shape, vec![Dim::Symbolic("N".into()), Dim::Fixed(2)]);
+        assert_eq!(types["acc_b"].dtype, DType::I32);
+        assert_eq!(types["f"].dtype, DType::F32);
+    }
+
+    #[test]
+    fn matmul_k_mismatch() {
+        let mut g = fc_graph();
+        g.initializers[0] = ("w".into(), Tensor::from_i8(&[3, 2], vec![0; 6]).unwrap());
+        assert!(infer_graph(&g).is_err());
+    }
+
+    #[test]
+    fn matmul_integer_rejects_float() {
+        let mut g = fc_graph();
+        g.inputs[0] = ValueInfo::new("x", DType::F32, &[Dim::Fixed(1), Dim::Fixed(4)]);
+        assert!(infer_graph(&g).is_err());
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let mut g = Graph {
+            name: "c".into(),
+            ..Default::default()
+        };
+        g.inputs
+            .push(ValueInfo::fixed("x", DType::I8, &[1, 3, 8, 8]));
+        g.initializers.push((
+            "w".into(),
+            Tensor::from_i8(&[4, 3, 3, 3], vec![0; 108]).unwrap(),
+        ));
+        g.nodes.push(
+            Node::new("conv", "ConvInteger", &["x", "w"], &["y"])
+                .with_attr("pads", Attr::Ints(vec![1, 1, 1, 1]))
+                .with_attr("strides", Attr::Ints(vec![2, 2])),
+        );
+        let types = infer_graph(&g).unwrap();
+        assert_eq!(types["y"].dtype, DType::I32);
+        assert_eq!(
+            types["y"].shape,
+            vec![Dim::Fixed(1), Dim::Fixed(4), Dim::Fixed(4), Dim::Fixed(4)]
+        );
+    }
+
+    #[test]
+    fn quantize_linear_zero_point_selects_dtype() {
+        let mut g = Graph {
+            name: "q".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::fixed("x", DType::F32, &[2, 2]));
+        g.initializers
+            .push(("s".into(), Tensor::scalar_f32(1.0)));
+        g.initializers
+            .push(("zp_u8".into(), Tensor::scalar_u8(0)));
+        g.nodes.push(Node::new(
+            "q",
+            "QuantizeLinear",
+            &["x", "s", "zp_u8"],
+            &["y"],
+        ));
+        let types = infer_graph(&g).unwrap();
+        assert_eq!(types["y"].dtype, DType::U8);
+    }
+
+    #[test]
+    fn reshape_with_zero_and_minus_one() {
+        let mut g = Graph {
+            name: "r".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::new(
+            "x",
+            DType::F32,
+            &[Dim::Symbolic("N".into()), Dim::Fixed(4), Dim::Fixed(4)],
+        ));
+        g.initializers.push((
+            "shape".into(),
+            Tensor::from_i64(&[2], vec![0, -1]).unwrap(),
+        ));
+        g.nodes
+            .push(Node::new("r", "Reshape", &["x", "shape"], &["y"]));
+        let types = infer_graph(&g).unwrap();
+        assert_eq!(
+            types["y"].shape,
+            vec![Dim::Symbolic("N".into()), Dim::Fixed(16)]
+        );
+    }
+
+    #[test]
+    fn flatten_symbolic_batch() {
+        let mut g = Graph {
+            name: "f".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::new(
+            "x",
+            DType::F32,
+            &[Dim::Symbolic("N".into()), Dim::Fixed(2), Dim::Fixed(3)],
+        ));
+        g.nodes
+            .push(Node::new("f", "Flatten", &["x"], &["y"]).with_attr("axis", Attr::Int(1)));
+        let types = infer_graph(&g).unwrap();
+        assert_eq!(
+            types["y"].shape,
+            vec![Dim::Symbolic("N".into()), Dim::Fixed(6)]
+        );
+    }
+
+    #[test]
+    fn unsupported_op() {
+        let mut g = Graph {
+            name: "u".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::fixed("x", DType::F32, &[1]));
+        g.nodes.push(Node::new("n", "Einsum", &["x"], &["y"]));
+        assert!(matches!(
+            infer_graph(&g),
+            Err(ShapeError::UnsupportedOp(_))
+        ));
+    }
+}

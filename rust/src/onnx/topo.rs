@@ -1,0 +1,160 @@
+//! Topological scheduling of graph nodes with cycle detection.
+
+use super::ir::Graph;
+use std::collections::{HashMap, HashSet};
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum TopoError {
+    #[error("graph contains a cycle involving node '{0}'")]
+    Cycle(String),
+    #[error("value '{value}' consumed by node '{node}' has no producer, initializer or graph input")]
+    Undefined { value: String, node: String },
+    #[error("value '{0}' is produced more than once")]
+    Redefined(String),
+}
+
+/// Return indices into `graph.nodes` in a valid execution order.
+///
+/// Every node input must be a graph input, an initializer, or the output
+/// of an earlier node. Kahn's algorithm; ties broken by authoring order so
+/// scheduling is deterministic.
+pub fn topo_order(graph: &Graph) -> Result<Vec<usize>, TopoError> {
+    let mut available: HashSet<&str> = HashSet::new();
+    for vi in &graph.inputs {
+        available.insert(&vi.name);
+    }
+    for (name, _) in &graph.initializers {
+        available.insert(name);
+    }
+
+    // Producer map + duplicate-definition check.
+    let mut producer: HashMap<&str, usize> = HashMap::new();
+    for (i, n) in graph.nodes.iter().enumerate() {
+        for o in &n.outputs {
+            if o.is_empty() {
+                continue;
+            }
+            if available.contains(o.as_str()) || producer.insert(o, i).is_some() {
+                return Err(TopoError::Redefined(o.clone()));
+            }
+        }
+    }
+
+    // Validate all consumed values exist somewhere.
+    for n in &graph.nodes {
+        for i in &n.inputs {
+            if i.is_empty() {
+                continue; // omitted optional input
+            }
+            if !available.contains(i.as_str()) && !producer.contains_key(i.as_str()) {
+                return Err(TopoError::Undefined {
+                    value: i.clone(),
+                    node: n.name.clone(),
+                });
+            }
+        }
+    }
+
+    let n_nodes = graph.nodes.len();
+    let mut scheduled = vec![false; n_nodes];
+    let mut order = Vec::with_capacity(n_nodes);
+    // O(V*E) worst case; fine at our graph sizes (tens of nodes) and keeps
+    // the deterministic authoring-order tie-break trivially correct.
+    loop {
+        let mut progressed = false;
+        for (i, node) in graph.nodes.iter().enumerate() {
+            if scheduled[i] {
+                continue;
+            }
+            let ready = node.inputs.iter().all(|inp| {
+                inp.is_empty()
+                    || available.contains(inp.as_str())
+                    || producer
+                        .get(inp.as_str())
+                        .map(|&p| scheduled[p])
+                        .unwrap_or(false)
+            });
+            if ready {
+                scheduled[i] = true;
+                order.push(i);
+                progressed = true;
+            }
+        }
+        if order.len() == n_nodes {
+            return Ok(order);
+        }
+        if !progressed {
+            let stuck = graph
+                .nodes
+                .iter()
+                .enumerate()
+                .find(|(i, _)| !scheduled[*i])
+                .map(|(_, n)| n.name.clone())
+                .unwrap_or_default();
+            return Err(TopoError::Cycle(stuck));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::ir::{Graph, Node, ValueInfo};
+    use crate::tensor::DType;
+
+    fn graph_with(nodes: Vec<Node>) -> Graph {
+        let mut g = Graph {
+            name: "t".into(),
+            ..Default::default()
+        };
+        g.inputs.push(ValueInfo::fixed("x", DType::F32, &[1]));
+        g.nodes = nodes;
+        g
+    }
+
+    #[test]
+    fn orders_out_of_order_authorship() {
+        // b depends on a, authored in reverse.
+        let g = graph_with(vec![
+            Node::new("b", "Relu", &["a_out"], &["b_out"]),
+            Node::new("a", "Relu", &["x"], &["a_out"]),
+        ]);
+        assert_eq!(topo_order(&g).unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let g = graph_with(vec![
+            Node::new("a", "Add", &["x", "b_out"], &["a_out"]),
+            Node::new("b", "Relu", &["a_out"], &["b_out"]),
+        ]);
+        assert!(matches!(topo_order(&g), Err(TopoError::Cycle(_))));
+    }
+
+    #[test]
+    fn detects_undefined_input() {
+        let g = graph_with(vec![Node::new("a", "Relu", &["ghost"], &["a_out"])]);
+        assert!(matches!(topo_order(&g), Err(TopoError::Undefined { .. })));
+    }
+
+    #[test]
+    fn detects_redefinition() {
+        let g = graph_with(vec![
+            Node::new("a", "Relu", &["x"], &["y"]),
+            Node::new("b", "Relu", &["x"], &["y"]),
+        ]);
+        assert!(matches!(topo_order(&g), Err(TopoError::Redefined(_))));
+    }
+
+    #[test]
+    fn optional_empty_inputs_skipped() {
+        let g = graph_with(vec![Node::new(
+            "mm",
+            "MatMulInteger",
+            &["x", "x", ""],
+            &["y"],
+        )]);
+        assert_eq!(topo_order(&g).unwrap(), vec![0]);
+    }
+}

@@ -1,0 +1,256 @@
+//! ConvInteger (ONNX opset 10+) and float Conv, NCHW, via im2col + GEMM.
+//!
+//! The paper's Figure 3 pattern uses `ConvInteger` with int8 kernel
+//! coefficients and an i32 result; zero points are optional (symmetric
+//! quantization uses none). im2col turns the convolution into the same
+//! blocked GEMM the fully-connected path uses, so one hot loop serves
+//! both patterns.
+
+use super::matmul::{gemm_f32, gemm_i32};
+use super::OpError;
+use crate::onnx::shape::ConvAttrs;
+use crate::tensor::Tensor;
+
+/// im2col over an i32-widened NCHW input. Output layout is
+/// `[C*kH*kW, oH*oW]` per batch element (column-major patches) so the
+/// weight matrix `[M, C*kH*kW]` multiplies it directly.
+#[allow(clippy::too_many_arguments)]
+fn im2col<T: Copy + Default>(
+    src: &[T],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    attrs: &ConvAttrs,
+    oh: usize,
+    ow: usize,
+    dst: &mut [T],
+) {
+    let [stride_h, stride_w] = attrs.strides;
+    let [pad_t, pad_l, _, _] = attrs.pads;
+    let [dil_h, dil_w] = attrs.dilations;
+    let patch = oh * ow;
+    for ci in 0..c {
+        for ki in 0..kh {
+            for kj in 0..kw {
+                let row = (ci * kh * kw + ki * kw + kj) * patch;
+                for oy in 0..oh {
+                    let iy = (oy * stride_h + ki * dil_h) as isize - pad_t as isize;
+                    let base = row + oy * ow;
+                    if iy < 0 || iy as usize >= h {
+                        for ox in 0..ow {
+                            dst[base + ox] = T::default();
+                        }
+                        continue;
+                    }
+                    let src_row = (ci * h + iy as usize) * w;
+                    for ox in 0..ow {
+                        let ix = (ox * stride_w + kj * dil_w) as isize - pad_l as isize;
+                        dst[base + ox] = if ix < 0 || ix as usize >= w {
+                            T::default()
+                        } else {
+                            src[src_row + ix as usize]
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn out_spatial(
+    input: usize,
+    kernel: usize,
+    pad_b: usize,
+    pad_e: usize,
+    stride: usize,
+    dil: usize,
+) -> usize {
+    (input + pad_b + pad_e - (dil * (kernel - 1) + 1)) / stride + 1
+}
+
+/// ONNX `ConvInteger` (group=1): x (i8/u8 NCHW), w (i8/u8 MCkk),
+/// optional per-tensor zero points, i32 output.
+pub fn conv_integer(
+    x: &Tensor,
+    w: &Tensor,
+    x_zp: Option<&Tensor>,
+    w_zp: Option<&Tensor>,
+    attrs: &ConvAttrs,
+) -> Result<Tensor, OpError> {
+    if attrs.group != 1 {
+        return Err(OpError::Semantics("group conv not supported".into()));
+    }
+    let (n, c, h, wd) = nchw(x)?;
+    let (m, wc, kh, kw) = nchw(w)?;
+    if wc != c {
+        return Err(OpError::Semantics(format!("channel mismatch {wc} vs {c}")));
+    }
+    let oh = out_spatial(h, kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0]);
+    let ow = out_spatial(wd, kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1]);
+
+    let zp_of = |zp: Option<&Tensor>| -> Result<i32, OpError> {
+        Ok(match zp {
+            None => 0,
+            Some(z) => z.as_quantized_i32()?[0],
+        })
+    };
+    let xz = zp_of(x_zp)?;
+    let wz = zp_of(w_zp)?;
+
+    let mut xv = x.as_quantized_i32()?;
+    if xz != 0 {
+        for v in &mut xv {
+            *v -= xz;
+        }
+    }
+    let mut wv = w.as_quantized_i32()?;
+    if wz != 0 {
+        for v in &mut wv {
+            *v -= wz;
+        }
+    }
+
+    let patch_rows = c * kh * kw;
+    let patch = oh * ow;
+    let mut col = vec![0i32; patch_rows * patch];
+    let mut out = vec![0i32; n * m * patch];
+    for b in 0..n {
+        let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+        // NOTE on zero points: im2col pads with 0 AFTER zero-point
+        // subtraction, which matches the ONNX contract (padding value is
+        // the zero point, i.e. 0 after widening).
+        im2col(src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
+        let dst = &mut out[b * m * patch..(b + 1) * m * patch];
+        gemm_i32(&wv, &col, m, patch_rows, patch, dst);
+    }
+    Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
+}
+
+/// ONNX float `Conv` (group=1), same im2col+GEMM path in f32.
+pub fn conv_f32(x: &Tensor, w: &Tensor, attrs: &ConvAttrs) -> Result<Tensor, OpError> {
+    if attrs.group != 1 {
+        return Err(OpError::Semantics("group conv not supported".into()));
+    }
+    let (n, c, h, wd) = nchw(x)?;
+    let (m, wc, kh, kw) = nchw(w)?;
+    if wc != c {
+        return Err(OpError::Semantics(format!("channel mismatch {wc} vs {c}")));
+    }
+    let oh = out_spatial(h, kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0]);
+    let ow = out_spatial(wd, kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1]);
+
+    let xv = x.as_f32()?;
+    let wv = w.as_f32()?;
+    let patch_rows = c * kh * kw;
+    let patch = oh * ow;
+    let mut col = vec![0f32; patch_rows * patch];
+    let mut out = vec![0f32; n * m * patch];
+    for b in 0..n {
+        let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+        im2col(src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
+        let dst = &mut out[b * m * patch..(b + 1) * m * patch];
+        gemm_f32(wv, &col, m, patch_rows, patch, dst);
+    }
+    Ok(Tensor::from_f32(&[n, m, oh, ow], out)?)
+}
+
+fn nchw(t: &Tensor) -> Result<(usize, usize, usize, usize), OpError> {
+    let s = t.shape();
+    if s.len() != 4 {
+        return Err(OpError::Semantics(format!("expected rank-4, got {s:?}")));
+    }
+    Ok((s[0], s[1], s[2], s[3]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attrs_default() -> ConvAttrs {
+        ConvAttrs {
+            strides: [1, 1],
+            pads: [0, 0, 0, 0],
+            dilations: [1, 1],
+            group: 1,
+        }
+    }
+
+    #[test]
+    fn conv_integer_identity_kernel() {
+        // 1x1 kernel of value 1 copies the input.
+        let x = Tensor::from_i8(&[1, 1, 2, 2], vec![1, 2, 3, 4]).unwrap();
+        let w = Tensor::from_i8(&[1, 1, 1, 1], vec![1]).unwrap();
+        let y = conv_integer(&x, &w, None, None, &attrs_default()).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.as_i32().unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn conv_integer_sum_kernel() {
+        // 2x2 all-ones kernel on a 3x3 ramp = window sums.
+        let x = Tensor::from_i8(&[1, 1, 3, 3], (1..=9).collect::<Vec<i8>>()).unwrap();
+        let w = Tensor::from_i8(&[1, 1, 2, 2], vec![1, 1, 1, 1]).unwrap();
+        let y = conv_integer(&x, &w, None, None, &attrs_default()).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.as_i32().unwrap(), &[12, 16, 24, 28]);
+    }
+
+    #[test]
+    fn conv_integer_padding() {
+        let x = Tensor::from_i8(&[1, 1, 2, 2], vec![1, 2, 3, 4]).unwrap();
+        let w = Tensor::from_i8(&[1, 1, 3, 3], vec![0, 0, 0, 0, 1, 0, 0, 0, 0]).unwrap();
+        let mut attrs = attrs_default();
+        attrs.pads = [1, 1, 1, 1];
+        let y = conv_integer(&x, &w, None, None, &attrs).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.as_i32().unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn conv_integer_multichannel() {
+        // 2 input channels, kernel sums both channels at center.
+        let x = Tensor::from_i8(&[1, 2, 2, 2], vec![1, 2, 3, 4, 10, 20, 30, 40]).unwrap();
+        let w = Tensor::from_i8(&[1, 2, 1, 1], vec![1, 1]).unwrap();
+        let y = conv_integer(&x, &w, None, None, &attrs_default()).unwrap();
+        assert_eq!(y.as_i32().unwrap(), &[11, 22, 33, 44]);
+    }
+
+    #[test]
+    fn conv_integer_stride() {
+        let x = Tensor::from_i8(&[1, 1, 4, 4], (0..16).map(|i| i as i8).collect::<Vec<_>>())
+            .unwrap();
+        let w = Tensor::from_i8(&[1, 1, 1, 1], vec![1]).unwrap();
+        let mut attrs = attrs_default();
+        attrs.strides = [2, 2];
+        let y = conv_integer(&x, &w, None, None, &attrs).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.as_i32().unwrap(), &[0, 2, 8, 10]);
+    }
+
+    #[test]
+    fn conv_f32_matches_integer_on_ints() {
+        let xi: Vec<i8> = vec![3, -1, 2, 0, 5, -4, 1, 1, -2];
+        let wi: Vec<i8> = vec![1, -1, 2, 0];
+        let x8 = Tensor::from_i8(&[1, 1, 3, 3], xi.clone()).unwrap();
+        let w8 = Tensor::from_i8(&[1, 1, 2, 2], wi.clone()).unwrap();
+        let xf =
+            Tensor::from_f32(&[1, 1, 3, 3], xi.iter().map(|&v| v as f32).collect()).unwrap();
+        let wf =
+            Tensor::from_f32(&[1, 1, 2, 2], wi.iter().map(|&v| v as f32).collect()).unwrap();
+        let yi = conv_integer(&x8, &w8, None, None, &attrs_default()).unwrap();
+        let yf = conv_f32(&xf, &wf, &attrs_default()).unwrap();
+        let yi: Vec<f32> = yi.as_i32().unwrap().iter().map(|&v| v as f32).collect();
+        assert_eq!(yi, yf.as_f32().unwrap());
+    }
+
+    #[test]
+    fn conv_integer_batch2() {
+        let x = Tensor::from_i8(&[2, 1, 2, 2], vec![1, 1, 1, 1, 2, 2, 2, 2]).unwrap();
+        let w = Tensor::from_i8(&[1, 1, 2, 2], vec![1, 1, 1, 1]).unwrap();
+        let y = conv_integer(&x, &w, None, None, &attrs_default()).unwrap();
+        assert_eq!(y.shape(), &[2, 1, 1, 1]);
+        assert_eq!(y.as_i32().unwrap(), &[4, 8]);
+    }
+}

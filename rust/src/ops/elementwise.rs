@@ -1,0 +1,377 @@
+//! Elementwise operators: Add / Mul / Sub / Div (with NumPy broadcasting)
+//! and the activations Relu / Tanh / Sigmoid.
+//!
+//! The paper's rescale stage is two (or one) `Mul` nodes on the f32 path
+//! (§3.1) and an i32 `Add` for the bias (Eq. 5); Figures 4–6 run Tanh and
+//! Sigmoid in f32 or genuine f16.
+
+use super::OpError;
+use crate::tensor::{BroadcastIndexer, Tensor, TensorData};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Mul,
+    Sub,
+    Div,
+}
+
+impl BinOp {
+    pub fn from_op_type(op: &str) -> Option<BinOp> {
+        Some(match op {
+            "Add" => BinOp::Add,
+            "Mul" => BinOp::Mul,
+            "Sub" => BinOp::Sub,
+            "Div" => BinOp::Div,
+            _ => return None,
+        })
+    }
+}
+
+#[inline]
+fn apply_f32(op: BinOp, x: f32, y: f32) -> f32 {
+    match op {
+        BinOp::Add => x + y,
+        BinOp::Mul => x * y,
+        BinOp::Sub => x - y,
+        BinOp::Div => x / y,
+    }
+}
+
+/// i32 path uses wrapping arithmetic: the ONNX integer operators are
+/// defined modulo 2^32 on overflow, and hardware accumulators wrap.
+#[inline]
+fn apply_i32(op: BinOp, x: i32, y: i32) -> i32 {
+    match op {
+        BinOp::Add => x.wrapping_add(y),
+        BinOp::Mul => x.wrapping_mul(y),
+        BinOp::Sub => x.wrapping_sub(y),
+        BinOp::Div => {
+            if y == 0 {
+                0
+            } else {
+                x.wrapping_div(y)
+            }
+        }
+    }
+}
+
+/// Elementwise binary op with multidirectional broadcasting.
+pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
+    if a.dtype() != b.dtype() {
+        return Err(OpError::Semantics(format!(
+            "dtype mismatch {} vs {}",
+            a.dtype(),
+            b.dtype()
+        )));
+    }
+    let out_shape = crate::tensor::broadcast_shape(a.shape(), b.shape())?;
+    let n: usize = out_shape.iter().product();
+    let same = a.shape() == out_shape.as_slice() && b.shape() == out_shape.as_slice();
+    // Fast-path classification (hot in every pattern: the rescale Mul is
+    // tensor×scalar, the bias Add broadcasts along one axis — rows×[N]
+    // for FC, [1,C,1,1] for conv. See EXPERIMENTS.md §Perf).
+    let a_full = a.shape() == out_shape.as_slice();
+    let b_scalar = b.numel() == 1;
+    let a_scalar = a.numel() == 1;
+    // Single-axis broadcast of b over a full-shape a: b's non-1 dims
+    // reduce to one axis matching out_shape. Yields (axis_len, chunk):
+    // b[j] applies to contiguous runs of `chunk` elements, cycling j.
+    let b_axis: Option<(usize, usize)> = if a_full && !b_scalar {
+        let rank = out_shape.len();
+        let pad = rank - b.rank();
+        let mut axis = None;
+        let mut ok = true;
+        for (i, &d) in b.shape().iter().enumerate() {
+            if d == 1 {
+                continue;
+            }
+            if d == out_shape[pad + i] && axis.is_none() {
+                axis = Some(pad + i);
+            } else {
+                ok = false;
+                break;
+            }
+        }
+        match (ok, axis) {
+            (true, Some(ax)) => {
+                let chunk: usize = out_shape[ax + 1..].iter().product();
+                Some((out_shape[ax], chunk))
+            }
+            _ => None,
+        }
+    } else {
+        None
+    };
+
+    macro_rules! fused_loops {
+        ($av:expr, $bv:expr, $apply:expr, $wrap:expr) => {{
+            let (av, bv) = ($av, $bv);
+            if same {
+                $wrap(av.iter().zip(bv).map(|(&x, &y)| $apply(op, x, y)).collect())
+            } else if b_scalar && a_full {
+                let s = bv[0];
+                $wrap(av.iter().map(|&x| $apply(op, x, s)).collect())
+            } else if a_scalar && b.shape() == out_shape.as_slice() {
+                let s = av[0];
+                $wrap(bv.iter().map(|&y| $apply(op, s, y)).collect())
+            } else if let Some((axis_len, chunk)) = b_axis {
+                let mut out = Vec::with_capacity(n);
+                if chunk == 1 {
+                    // b cycles elementwise (e.g. FC bias over rows).
+                    for row in av.chunks_exact(axis_len) {
+                        out.extend(row.iter().zip(bv).map(|(&x, &y)| $apply(op, x, y)));
+                    }
+                } else {
+                    // b[j] constant over contiguous chunks (conv bias).
+                    let mut pos = 0;
+                    while pos < n {
+                        for j in 0..axis_len {
+                            let s = bv[j];
+                            out.extend(
+                                av[pos..pos + chunk].iter().map(|&x| $apply(op, x, s)),
+                            );
+                            pos += chunk;
+                        }
+                    }
+                }
+                $wrap(out)
+            } else {
+                let ia = BroadcastIndexer::new(&out_shape, a.shape());
+                let ib = BroadcastIndexer::new(&out_shape, b.shape());
+                $wrap((0..n).map(|i| $apply(op, av[ia.map(i)], bv[ib.map(i)])).collect())
+            }
+        }};
+    }
+
+    let data = match (a.data(), b.data()) {
+        (TensorData::F32(av), TensorData::F32(bv)) => {
+            fused_loops!(av, bv, apply_f32, TensorData::F32)
+        }
+        (TensorData::I32(av), TensorData::I32(bv)) => {
+            fused_loops!(av, bv, apply_i32, TensorData::I32)
+        }
+        (TensorData::F16(av), TensorData::F16(bv)) => {
+            // f16 arithmetic: compute in f32, round back per op (what
+            // fp16 ALUs do for a single operation).
+            let f = |x: crate::tensor::F16, y: crate::tensor::F16| {
+                crate::tensor::F16::from_f32(apply_f32(op, x.to_f32(), y.to_f32()))
+            };
+            let v = if same {
+                av.iter().zip(bv).map(|(&x, &y)| f(x, y)).collect()
+            } else {
+                let ia = BroadcastIndexer::new(&out_shape, a.shape());
+                let ib = BroadcastIndexer::new(&out_shape, b.shape());
+                (0..n).map(|i| f(av[ia.map(i)], bv[ib.map(i)])).collect()
+            };
+            TensorData::F16(v)
+        }
+        _ => {
+            return Err(OpError::Semantics(format!(
+                "unsupported dtype {} for elementwise op",
+                a.dtype()
+            )))
+        }
+    };
+    Ok(Tensor::new(out_shape, data)?)
+}
+
+/// ONNX `Relu`: max(x, 0). Supports the dtypes the paper's patterns can
+/// place it on: f32, f16, i32 (pre-rescale) and i8 (post-requantize).
+pub fn relu(x: &Tensor) -> Result<Tensor, OpError> {
+    let data = match x.data() {
+        TensorData::F32(v) => TensorData::F32(v.iter().map(|&x| x.max(0.0)).collect()),
+        TensorData::F16(v) => TensorData::F16(
+            v.iter()
+                .map(|&x| if x.to_f32() > 0.0 { x } else { crate::tensor::F16::ZERO })
+                .collect(),
+        ),
+        TensorData::I32(v) => TensorData::I32(v.iter().map(|&x| x.max(0)).collect()),
+        TensorData::I8(v) => TensorData::I8(v.iter().map(|&x| x.max(0)).collect()),
+        d => {
+            return Err(OpError::Semantics(format!(
+                "Relu: unsupported dtype {}",
+                d.dtype()
+            )))
+        }
+    };
+    Ok(Tensor::new(x.shape().to_vec(), data)?)
+}
+
+/// ONNX `Tanh` — f32 or genuine f16 (Figure 5's `Tanh FLOAT16 -> FLOAT16`).
+pub fn tanh(x: &Tensor) -> Result<Tensor, OpError> {
+    let data = match x.data() {
+        TensorData::F32(v) => TensorData::F32(v.iter().map(|&x| x.tanh()).collect()),
+        TensorData::F16(v) => TensorData::F16(v.iter().map(|x| x.tanh()).collect()),
+        d => {
+            return Err(OpError::Semantics(format!(
+                "Tanh: unsupported dtype {}",
+                d.dtype()
+            )))
+        }
+    };
+    Ok(Tensor::new(x.shape().to_vec(), data)?)
+}
+
+/// ONNX `Sigmoid` — f32 or genuine f16 (Figure 6).
+pub fn sigmoid(x: &Tensor) -> Result<Tensor, OpError> {
+    let data = match x.data() {
+        TensorData::F32(v) => {
+            TensorData::F32(v.iter().map(|&x| 1.0 / (1.0 + (-x).exp())).collect())
+        }
+        TensorData::F16(v) => TensorData::F16(v.iter().map(|x| x.sigmoid()).collect()),
+        d => {
+            return Err(OpError::Semantics(format!(
+                "Sigmoid: unsupported dtype {}",
+                d.dtype()
+            )))
+        }
+    };
+    Ok(Tensor::new(x.shape().to_vec(), data)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::F16;
+
+    #[test]
+    fn add_i32_bias_broadcast() {
+        // Eq. 5's bias add: [2,3] + [3].
+        let acc = Tensor::from_i32(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let bias = Tensor::from_i32(&[3], vec![10, 20, 30]).unwrap();
+        let y = binary(BinOp::Add, &acc, &bias).unwrap();
+        assert_eq!(y.as_i32().unwrap(), &[11, 22, 33, 14, 25, 36]);
+    }
+
+    #[test]
+    fn mul_f32_scalar_broadcast() {
+        // The rescale Mul: tensor * scalar Quant_scale.
+        let x = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let s = Tensor::scalar_f32(0.25);
+        let y = binary(BinOp::Mul, &x, &s).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let a = Tensor::from_f32(&[1], vec![1.0]).unwrap();
+        let b = Tensor::from_i32(&[1], vec![1]).unwrap();
+        assert!(binary(BinOp::Add, &a, &b).is_err());
+    }
+
+    #[test]
+    fn i32_add_wraps() {
+        let a = Tensor::from_i32(&[1], vec![i32::MAX]).unwrap();
+        let b = Tensor::from_i32(&[1], vec![1]).unwrap();
+        let y = binary(BinOp::Add, &a, &b).unwrap();
+        assert_eq!(y.as_i32().unwrap(), &[i32::MIN]);
+    }
+
+    #[test]
+    fn relu_variants() {
+        let f = Tensor::from_f32(&[3], vec![-1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(relu(&f).unwrap().as_f32().unwrap(), &[0.0, 0.0, 2.0]);
+        let i = Tensor::from_i32(&[3], vec![-5, 0, 5]).unwrap();
+        assert_eq!(relu(&i).unwrap().as_i32().unwrap(), &[0, 0, 5]);
+        let q = Tensor::from_i8(&[2], vec![-7, 7]).unwrap();
+        assert_eq!(relu(&q).unwrap().as_i8().unwrap(), &[0, 7]);
+    }
+
+    #[test]
+    fn tanh_f16_is_rounded_f16() {
+        let x = Tensor::from_f16(&[1], vec![F16::from_f32(1.0)]).unwrap();
+        let y = tanh(&x).unwrap();
+        let got = y.as_f16().unwrap()[0];
+        // Must be the f16-rounded value of tanh(1.0) = 0.761594...
+        assert_eq!(got.0, F16::from_f32(0.7615942_f32).0);
+    }
+
+    #[test]
+    fn sigmoid_f32() {
+        let x = Tensor::from_f32(&[2], vec![0.0, 100.0]).unwrap();
+        let y = sigmoid(&x).unwrap();
+        assert_eq!(y.as_f32().unwrap()[0], 0.5);
+        assert_eq!(y.as_f32().unwrap()[1], 1.0);
+    }
+
+    #[test]
+    fn f16_add_rounds_per_op() {
+        // 2048 + 1 in f16: 2049 is not representable (spacing is 2 there),
+        // ties-to-even keeps 2048.
+        let a = Tensor::from_f16(&[1], vec![F16::from_f32(2048.0)]).unwrap();
+        let b = Tensor::from_f16(&[1], vec![F16::ONE]).unwrap();
+        let y = binary(BinOp::Add, &a, &b).unwrap();
+        assert_eq!(y.as_f16().unwrap()[0].to_f32(), 2048.0);
+    }
+}
+
+#[cfg(test)]
+mod bcast_prop_tests {
+    use super::*;
+    use crate::tensor::{BroadcastIndexer, Tensor};
+    use crate::train::Rng;
+
+    /// Reference implementation: always the generic indexer.
+    fn binary_reference(op: BinOp, a: &Tensor, b: &Tensor) -> Tensor {
+        let out_shape = crate::tensor::broadcast_shape(a.shape(), b.shape()).unwrap();
+        let n: usize = out_shape.iter().product();
+        let ia = BroadcastIndexer::new(&out_shape, a.shape());
+        let ib = BroadcastIndexer::new(&out_shape, b.shape());
+        let av = a.as_f32().unwrap();
+        let bv = b.as_f32().unwrap();
+        let v: Vec<f32> = (0..n)
+            .map(|i| apply_f32(op, av[ia.map(i)], bv[ib.map(i)]))
+            .collect();
+        Tensor::from_f32(&out_shape, v).unwrap()
+    }
+
+    /// Property: every fast path in `binary` agrees with the generic
+    /// indexer across random shapes and broadcast patterns (guards the
+    /// §Perf fast paths).
+    #[test]
+    fn fast_paths_match_reference() {
+        let mut rng = Rng::new(0xFA57);
+        for case in 0..300 {
+            // Random output shape, rank 1..4, dims 1..5.
+            let rank = 1 + rng.below(4);
+            let out_shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5)).collect();
+            // b: randomly degrade axes to 1 and possibly drop leading dims.
+            let keep_from = rng.below(rank);
+            let mut b_shape: Vec<usize> = out_shape[keep_from..].to_vec();
+            for d in &mut b_shape {
+                if rng.below(2) == 0 {
+                    *d = 1;
+                }
+            }
+            if b_shape.is_empty() {
+                b_shape = vec![];
+            }
+            let n_a: usize = out_shape.iter().product();
+            let n_b: usize = b_shape.iter().product::<usize>().max(1);
+            let a = Tensor::from_f32(
+                &out_shape,
+                (0..n_a).map(|_| rng.range_f32(-4.0, 4.0)).collect(),
+            )
+            .unwrap();
+            let b = Tensor::from_f32(
+                &b_shape,
+                (0..n_b).map(|_| rng.range_f32(-4.0, 4.0)).collect(),
+            )
+            .unwrap();
+            for op in [BinOp::Add, BinOp::Mul, BinOp::Sub] {
+                let fast = binary(op, &a, &b).unwrap();
+                let slow = binary_reference(op, &a, &b);
+                assert_eq!(
+                    fast, slow,
+                    "case {case}: op {op:?} a{:?} b{:?}",
+                    out_shape, b_shape
+                );
+                // And the mirrored argument order.
+                let fast = binary(op, &b, &a).unwrap();
+                let slow = binary_reference(op, &b, &a);
+                assert_eq!(fast, slow, "case {case} swapped");
+            }
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! MatMulInteger (ONNX opset 10+), float MatMul, and Gemm.
+//!
+//! `MatMulInteger` is the heart of every pattern in the paper (Eq. 5:
+//! `Y_intermediate = W_q · X_q + B_q`): int8/uint8 operands, i32
+//! accumulation, optional zero points (the paper uses symmetric
+//! quantization, i.e. zero points of 0, but the operator contract is
+//! implemented in full).
+
+use super::OpError;
+use crate::tensor::{DType, Tensor};
+
+/// Widen an i8/u8 tensor to i32 applying an optional zero point.
+fn widen_with_zp(t: &Tensor, zp: Option<&Tensor>) -> Result<Vec<i32>, OpError> {
+    let zero = match zp {
+        None => 0i32,
+        Some(z) => {
+            if z.numel() != 1 {
+                return Err(OpError::Semantics(
+                    "per-row/col zero points not supported (paper uses per-tensor)".into(),
+                ));
+            }
+            z.as_quantized_i32()?[0]
+        }
+    };
+    let mut v = t.as_quantized_i32()?;
+    if zero != 0 {
+        for x in &mut v {
+            *x -= zero;
+        }
+    }
+    Ok(v)
+}
+
+/// Blocked i32 GEMM kernel over pre-widened operands.
+///
+/// C[m,n] = sum_k A[m,k] * B[k,n], row-major. The k-inner/j-unrolled loop
+/// ordering keeps B accesses sequential so the auto-vectorizer can work
+/// with them; this is the interpreter's hot path (see EXPERIMENTS.md
+/// §Perf).
+pub fn gemm_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, c: &mut [i32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &a_ik) in a_row.iter().enumerate() {
+            if a_ik == 0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                *c_v += a_ik * b_v;
+            }
+        }
+    }
+}
+
+/// f32 GEMM with the same loop structure.
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    c.fill(0.0);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &a_ik) in a_row.iter().enumerate() {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                *c_v += a_ik * b_v;
+            }
+        }
+    }
+}
+
+/// Flatten leading dims of A's shape into a single M (B is rank-2; shape
+/// inference has already validated this form).
+fn flat_mk(shape: &[usize]) -> (usize, usize) {
+    let k = *shape.last().unwrap();
+    let m = shape[..shape.len() - 1].iter().product();
+    (m, k)
+}
+
+/// i8-activation GEMM with a pre-widened weight matrix: avoids
+/// materializing the (batch-sized) widened activation buffer on every
+/// call — the interpreter's hottest loop (§Perf).
+pub fn gemm_i8_i32(a: &[i8], b_w: &[i32], m: usize, k: usize, n: usize, c: &mut [i32]) {
+    c.fill(0);
+    let k4 = k & !3;
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        // 4-wide k-unroll: one pass over c_row amortizes four b-rows
+        // (4x the arithmetic intensity per store; see §Perf log).
+        let mut kk = 0;
+        while kk < k4 {
+            let a0 = a_row[kk] as i32;
+            let a1 = a_row[kk + 1] as i32;
+            let a2 = a_row[kk + 2] as i32;
+            let a3 = a_row[kk + 3] as i32;
+            let b0 = &b_w[kk * n..(kk + 1) * n];
+            let b1 = &b_w[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b_w[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b_w[(kk + 3) * n..(kk + 4) * n];
+            for j in 0..n {
+                c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        for kk in k4..k {
+            let a_ik = a_row[kk] as i32;
+            if a_ik == 0 {
+                continue;
+            }
+            let b_row = &b_w[kk * n..(kk + 1) * n];
+            for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                *c_v += a_ik * b_v;
+            }
+        }
+    }
+}
+
+/// ONNX `MatMulInteger`: quantized A (i8/u8), quantized B (i8/u8),
+/// optional a_zero_point / b_zero_point, i32 output.
+pub fn matmul_integer(
+    a: &Tensor,
+    b: &Tensor,
+    a_zp: Option<&Tensor>,
+    b_zp: Option<&Tensor>,
+) -> Result<Tensor, OpError> {
+    let (m, k) = flat_mk(a.shape());
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    if k != kb {
+        return Err(OpError::Semantics(format!("K mismatch {k} vs {kb}")));
+    }
+    let mut c = vec![0i32; m * n];
+    let a_zp_zero = a_zp.map_or(true, |z| {
+        z.as_quantized_i32().map(|v| v == [0]).unwrap_or(false)
+    });
+    match (a.data(), a_zp_zero) {
+        // Hot path: i8 activations, zero a-zero-point (symmetric
+        // quantization — every pattern in the paper). Only the weight is
+        // widened, once.
+        (crate::tensor::TensorData::I8(av), true) => {
+            let bw = widen_with_zp(b, b_zp)?;
+            gemm_i8_i32(av, &bw, m, k, n, &mut c);
+        }
+        _ => {
+            let aw = widen_with_zp(a, a_zp)?;
+            let bw = widen_with_zp(b, b_zp)?;
+            gemm_i32(&aw, &bw, m, k, n, &mut c);
+        }
+    }
+    let mut out_shape = a.shape()[..a.shape().len() - 1].to_vec();
+    out_shape.push(n);
+    Ok(Tensor::from_i32(&out_shape, c)?)
+}
+
+/// ONNX float `MatMul` (A rank>=2, B rank-2).
+pub fn matmul_f32(a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
+    let (m, k) = flat_mk(a.shape());
+    let n = b.shape()[1];
+    let mut c = vec![0f32; m * n];
+    gemm_f32(a.as_f32()?, b.as_f32()?, m, k, n, &mut c);
+    let mut out_shape = a.shape()[..a.shape().len() - 1].to_vec();
+    out_shape.push(n);
+    Ok(Tensor::from_f32(&out_shape, c)?)
+}
+
+/// ONNX `Gemm`: alpha * op(A) * op(B) + beta * C (C broadcast).
+pub fn gemm(
+    a: &Tensor,
+    b: &Tensor,
+    c: Option<&Tensor>,
+    alpha: f32,
+    beta: f32,
+    trans_a: bool,
+    trans_b: bool,
+) -> Result<Tensor, OpError> {
+    let at;
+    let a = if trans_a {
+        at = transpose2(a)?;
+        &at
+    } else {
+        a
+    };
+    let bt;
+    let b = if trans_b {
+        bt = transpose2(b)?;
+        &bt
+    } else {
+        b
+    };
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    if k != kb {
+        return Err(OpError::Semantics(format!("Gemm K mismatch {k} vs {kb}")));
+    }
+    let mut out = vec![0f32; m * n];
+    gemm_f32(a.as_f32()?, b.as_f32()?, m, k, n, &mut out);
+    if alpha != 1.0 {
+        for v in &mut out {
+            *v *= alpha;
+        }
+    }
+    if let Some(c) = c {
+        let ix = crate::tensor::BroadcastIndexer::new(&[m, n], c.shape());
+        let cv = c.as_f32()?;
+        for (i, v) in out.iter_mut().enumerate() {
+            *v += beta * cv[ix.map(i)];
+        }
+    }
+    Ok(Tensor::from_f32(&[m, n], out)?)
+}
+
+fn transpose2(t: &Tensor) -> Result<Tensor, OpError> {
+    if t.rank() != 2 {
+        return Err(OpError::Semantics("transpose expects rank-2".into()));
+    }
+    let (r, c) = (t.shape()[0], t.shape()[1]);
+    match t.dtype() {
+        DType::F32 => {
+            let src = t.as_f32()?;
+            let mut dst = vec![0f32; r * c];
+            for i in 0..r {
+                for j in 0..c {
+                    dst[j * r + i] = src[i * c + j];
+                }
+            }
+            Ok(Tensor::from_f32(&[c, r], dst)?)
+        }
+        d => Err(OpError::Semantics(format!("transpose: unsupported {d}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_integer_basic() {
+        // [[1,2],[3,4]] i8 x [[1,0],[0,1]] i8 = identity.
+        let a = Tensor::from_i8(&[2, 2], vec![1, 2, 3, 4]).unwrap();
+        let b = Tensor::from_i8(&[2, 2], vec![1, 0, 0, 1]).unwrap();
+        let c = matmul_integer(&a, &b, None, None).unwrap();
+        assert_eq!(c.as_i32().unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn matmul_integer_saturating_range() {
+        // Worst-case int8 accumulation must not overflow i32:
+        // 128 * 127 * 127 fits easily; check extreme values.
+        let a = Tensor::from_i8(&[1, 4], vec![-128, -128, 127, 127]).unwrap();
+        let b = Tensor::from_i8(&[4, 1], vec![127, 127, -128, -128]).unwrap();
+        let c = matmul_integer(&a, &b, None, None).unwrap();
+        assert_eq!(c.as_i32().unwrap(), &[2 * (-128 * 127) + 2 * (127 * -128)]);
+    }
+
+    #[test]
+    fn matmul_integer_uint8_with_zero_point() {
+        // uint8 activations with zp=128 behave like shifted int8.
+        let a = Tensor::from_u8(&[1, 2], vec![130, 126]).unwrap(); // -> +2, -2
+        let b = Tensor::from_i8(&[2, 1], vec![3, 1]).unwrap();
+        let zp = Tensor::scalar_u8(128);
+        let c = matmul_integer(&a, &b, Some(&zp), None).unwrap();
+        assert_eq!(c.as_i32().unwrap(), &[2 * 3 + (-2) * 1]);
+    }
+
+    #[test]
+    fn matmul_integer_batched() {
+        let a = Tensor::from_i8(&[2, 1, 2], vec![1, 2, 3, 4]).unwrap();
+        let b = Tensor::from_i8(&[2, 1], vec![1, 1]).unwrap();
+        let c = matmul_integer(&a, &b, None, None).unwrap();
+        assert_eq!(c.shape(), &[2, 1, 1]);
+        assert_eq!(c.as_i32().unwrap(), &[3, 7]);
+    }
+
+    #[test]
+    fn gemm_with_bias_and_transpose() {
+        let a = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_f32(&[2, 2], vec![1., 0., 0., 1.]).unwrap();
+        let c = Tensor::from_f32(&[2], vec![10., 20.]).unwrap();
+        let y = gemm(&a, &b, Some(&c), 1.0, 1.0, false, false).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[11., 22., 13., 24.]);
+        // transB with identity is unchanged
+        let y2 = gemm(&a, &b, None, 2.0, 0.0, false, true).unwrap();
+        assert_eq!(y2.as_f32().unwrap(), &[2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn gemm_i32_matches_naive_random() {
+        // Cross-check the blocked kernel against a naive triple loop.
+        let mut state = 0x12345678u64;
+        let mut rnd = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as i32 % 256 - 128) as i32
+        };
+        let (m, k, n) = (5, 7, 3);
+        let a: Vec<i32> = (0..m * k).map(|_| rnd()).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rnd()).collect();
+        let mut c = vec![0i32; m * n];
+        gemm_i32(&a, &b, m, k, n, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                assert_eq!(c[i * n + j], want);
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Standard ONNX operator implementations and the node-level dispatcher.
+//!
+//! This is the execution half of the "runs on standard tools" claim: the
+//! operators implement the public ONNX contracts (opset 13 subset listed
+//! in [`crate::onnx::check::STANDARD_OPS`]) with no knowledge of the
+//! paper's quantization scheme — exactly like ONNXruntime.
+
+pub mod conv;
+pub mod elementwise;
+pub mod matmul;
+pub mod pool;
+pub mod qlinear;
+pub mod shape_ops;
+
+use crate::onnx::ir::Node;
+use crate::onnx::shape::ConvAttrs;
+use crate::tensor::{DType, Tensor, TensorError};
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum OpError {
+    #[error("semantics: {0}")]
+    Semantics(String),
+    #[error(transparent)]
+    Tensor(#[from] TensorError),
+    #[error("node '{node}' ({op}): missing required input #{index}")]
+    MissingInput {
+        node: String,
+        op: String,
+        index: usize,
+    },
+    #[error("unsupported operator '{0}'")]
+    Unsupported(String),
+}
+
+/// Execute one node given resolved input tensors (None = omitted optional
+/// input). Returns the node's output tensors in declaration order.
+pub fn execute_node(node: &Node, inputs: &[Option<&Tensor>]) -> Result<Vec<Tensor>, OpError> {
+    let req = |i: usize| -> Result<&Tensor, OpError> {
+        inputs
+            .get(i)
+            .copied()
+            .flatten()
+            .ok_or_else(|| OpError::MissingInput {
+                node: node.name.clone(),
+                op: node.op_type.clone(),
+                index: i,
+            })
+    };
+    let opt = |i: usize| -> Option<&Tensor> { inputs.get(i).copied().flatten() };
+
+    let out = match node.op_type.as_str() {
+        "MatMulInteger" => vec![matmul::matmul_integer(req(0)?, req(1)?, opt(2), opt(3))?],
+        "MatMul" => vec![matmul::matmul_f32(req(0)?, req(1)?)?],
+        "Gemm" => {
+            let alpha = node.attr_float("alpha").unwrap_or(1.0);
+            let beta = node.attr_float("beta").unwrap_or(1.0);
+            let trans_a = node.attr_int("transA").unwrap_or(0) != 0;
+            let trans_b = node.attr_int("transB").unwrap_or(0) != 0;
+            vec![matmul::gemm(req(0)?, req(1)?, opt(2), alpha, beta, trans_a, trans_b)?]
+        }
+        "ConvInteger" => {
+            let attrs = ConvAttrs::from_node(node);
+            vec![conv::conv_integer(req(0)?, req(1)?, opt(2), opt(3), &attrs)?]
+        }
+        "Conv" => {
+            let attrs = ConvAttrs::from_node(node);
+            let y = conv::conv_f32(req(0)?, req(1)?, &attrs)?;
+            // ONNX Conv takes an optional fp32 bias input B [M].
+            match opt(2) {
+                None => vec![y],
+                Some(b) => {
+                    let m = y.shape()[1];
+                    let b4 = b.clone().reshape(&[1, m, 1, 1])?;
+                    vec![elementwise::binary(elementwise::BinOp::Add, &y, &b4)?]
+                }
+            }
+        }
+        "Add" | "Mul" | "Sub" | "Div" => {
+            let op = elementwise::BinOp::from_op_type(&node.op_type).unwrap();
+            vec![elementwise::binary(op, req(0)?, req(1)?)?]
+        }
+        "Cast" => {
+            let to = node
+                .attr_str("to")
+                .and_then(DType::from_onnx_name)
+                .ok_or_else(|| OpError::Semantics("Cast: missing/unknown 'to'".into()))?;
+            vec![req(0)?.cast(to)]
+        }
+        "QuantizeLinear" => vec![qlinear::quantize_linear(req(0)?, req(1)?, opt(2))?],
+        "DequantizeLinear" => vec![qlinear::dequantize_linear(req(0)?, req(1)?, opt(2))?],
+        "Relu" => vec![elementwise::relu(req(0)?)?],
+        "Tanh" => vec![elementwise::tanh(req(0)?)?],
+        "Sigmoid" => vec![elementwise::sigmoid(req(0)?)?],
+        "Softmax" => {
+            let axis = node.attr_int("axis").unwrap_or(-1);
+            vec![shape_ops::softmax(req(0)?, axis)?]
+        }
+        "MaxPool" => {
+            let kernel = node
+                .attr_ints("kernel_shape")
+                .ok_or_else(|| OpError::Semantics("MaxPool: missing kernel_shape".into()))?
+                .to_vec();
+            vec![pool::max_pool(req(0)?, &kernel, ConvAttrs::from_node(node))?]
+        }
+        "AveragePool" => {
+            let kernel = node
+                .attr_ints("kernel_shape")
+                .ok_or_else(|| OpError::Semantics("AveragePool: missing kernel_shape".into()))?
+                .to_vec();
+            vec![pool::average_pool(req(0)?, &kernel, ConvAttrs::from_node(node))?]
+        }
+        "Reshape" => {
+            let spec = req(1)?.as_i64()?.to_vec();
+            vec![shape_ops::reshape(req(0)?, &spec)?]
+        }
+        "Flatten" => {
+            let axis = node.attr_int("axis").unwrap_or(1) as usize;
+            vec![shape_ops::flatten(req(0)?, axis)?]
+        }
+        "Identity" => vec![req(0)?.clone()],
+        other => return Err(OpError::Unsupported(other.to_string())),
+    };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::ir::Attr;
+
+    #[test]
+    fn dispatch_matmul_integer() {
+        let node = Node::new("mm", "MatMulInteger", &["a", "b"], &["c"]);
+        let a = Tensor::from_i8(&[1, 2], vec![1, 2]).unwrap();
+        let b = Tensor::from_i8(&[2, 1], vec![3, 4]).unwrap();
+        let out = execute_node(&node, &[Some(&a), Some(&b)]).unwrap();
+        assert_eq!(out[0].as_i32().unwrap(), &[11]);
+    }
+
+    #[test]
+    fn dispatch_cast_attr() {
+        let node = Node::new("c", "Cast", &["x"], &["y"])
+            .with_attr("to", Attr::Str("FLOAT".into()));
+        let x = Tensor::from_i32(&[2], vec![1, -1]).unwrap();
+        let out = execute_node(&node, &[Some(&x)]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn missing_input_reported() {
+        let node = Node::new("mm", "MatMulInteger", &["a", "b"], &["c"]);
+        let a = Tensor::from_i8(&[1, 2], vec![1, 2]).unwrap();
+        let err = execute_node(&node, &[Some(&a), None]).unwrap_err();
+        assert!(matches!(err, OpError::MissingInput { index: 1, .. }));
+    }
+
+    #[test]
+    fn unsupported_op_reported() {
+        let node = Node::new("n", "LSTM", &[], &["y"]);
+        assert!(matches!(
+            execute_node(&node, &[]),
+            Err(OpError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn conv_with_bias_input() {
+        let node = Node::new("c", "Conv", &["x", "w", "b"], &["y"]);
+        let x = Tensor::from_f32(&[1, 1, 2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let w = Tensor::from_f32(&[1, 1, 1, 1], vec![1.0]).unwrap();
+        let b = Tensor::from_f32(&[1], vec![10.0]).unwrap();
+        let out = execute_node(&node, &[Some(&x), Some(&w), Some(&b)]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[11., 12., 13., 14.]);
+    }
+}

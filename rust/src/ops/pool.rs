@@ -1,0 +1,166 @@
+//! MaxPool / AveragePool (NCHW, 2-D).
+//!
+//! MaxPool operates directly on quantized i8/u8 tensors (order-preserving,
+//! so it commutes with symmetric quantization — which is why quantized
+//! CNNs keep pooling in the integer domain), as well as f32.
+
+use super::OpError;
+use crate::onnx::shape::ConvAttrs;
+use crate::tensor::{Tensor, TensorData};
+
+struct PoolGeom {
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    oh: usize,
+    ow: usize,
+    attrs: ConvAttrs,
+}
+
+fn geometry(x: &Tensor, kernel: &[i64], attrs: ConvAttrs) -> Result<PoolGeom, OpError> {
+    let s = x.shape();
+    if s.len() != 4 {
+        return Err(OpError::Semantics(format!("pool expects NCHW, got {s:?}")));
+    }
+    let (kh, kw) = (kernel[0] as usize, kernel[1] as usize);
+    let eff = |i: usize, k: usize, pb: usize, pe: usize, st: usize| (i + pb + pe - k) / st + 1;
+    let oh = eff(s[2], kh, attrs.pads[0], attrs.pads[2], attrs.strides[0]);
+    let ow = eff(s[3], kw, attrs.pads[1], attrs.pads[3], attrs.strides[1]);
+    Ok(PoolGeom {
+        n: s[0],
+        c: s[1],
+        h: s[2],
+        w: s[3],
+        kh,
+        kw,
+        oh,
+        ow,
+        attrs,
+    })
+}
+
+fn pool_windows<T: Copy, F: FnMut(&mut Vec<T>) -> T>(
+    src: &[T],
+    g: &PoolGeom,
+    mut reduce: F,
+) -> Vec<T> {
+    let mut out = Vec::with_capacity(g.n * g.c * g.oh * g.ow);
+    let mut window: Vec<T> = Vec::with_capacity(g.kh * g.kw);
+    for b in 0..g.n {
+        for ci in 0..g.c {
+            let plane = &src[(b * g.c + ci) * g.h * g.w..(b * g.c + ci + 1) * g.h * g.w];
+            for oy in 0..g.oh {
+                for ox in 0..g.ow {
+                    window.clear();
+                    for ky in 0..g.kh {
+                        let iy = (oy * g.attrs.strides[0] + ky) as isize - g.attrs.pads[0] as isize;
+                        if iy < 0 || iy as usize >= g.h {
+                            continue;
+                        }
+                        for kx in 0..g.kw {
+                            let ix =
+                                (ox * g.attrs.strides[1] + kx) as isize - g.attrs.pads[1] as isize;
+                            if ix < 0 || ix as usize >= g.w {
+                                continue;
+                            }
+                            window.push(plane[iy as usize * g.w + ix as usize]);
+                        }
+                    }
+                    out.push(reduce(&mut window));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// ONNX `MaxPool` over f32 / i8 / u8.
+pub fn max_pool(x: &Tensor, kernel: &[i64], attrs: ConvAttrs) -> Result<Tensor, OpError> {
+    let g = geometry(x, kernel, attrs)?;
+    let shape = vec![g.n, g.c, g.oh, g.ow];
+    let data = match x.data() {
+        TensorData::F32(v) => TensorData::F32(pool_windows(v, &g, |w| {
+            w.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        })),
+        TensorData::I8(v) => {
+            TensorData::I8(pool_windows(v, &g, |w| *w.iter().max().unwrap_or(&i8::MIN)))
+        }
+        TensorData::U8(v) => {
+            TensorData::U8(pool_windows(v, &g, |w| *w.iter().max().unwrap_or(&u8::MIN)))
+        }
+        d => {
+            return Err(OpError::Semantics(format!(
+                "MaxPool: unsupported dtype {}",
+                d.dtype()
+            )))
+        }
+    };
+    Ok(Tensor::new(shape, data)?)
+}
+
+/// ONNX `AveragePool` (f32, count_include_pad=0).
+pub fn average_pool(x: &Tensor, kernel: &[i64], attrs: ConvAttrs) -> Result<Tensor, OpError> {
+    let g = geometry(x, kernel, attrs)?;
+    let shape = vec![g.n, g.c, g.oh, g.ow];
+    match x.data() {
+        TensorData::F32(v) => {
+            let out = pool_windows(v, &g, |w| {
+                if w.is_empty() {
+                    0.0
+                } else {
+                    w.iter().sum::<f32>() / w.len() as f32
+                }
+            });
+            Ok(Tensor::new(shape, TensorData::F32(out))?)
+        }
+        d => Err(OpError::Semantics(format!(
+            "AveragePool: unsupported dtype {}",
+            d.dtype()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attrs(strides: [usize; 2], pads: [usize; 4]) -> ConvAttrs {
+        ConvAttrs {
+            strides,
+            pads,
+            dilations: [1, 1],
+            group: 1,
+        }
+    }
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = Tensor::from_f32(
+            &[1, 1, 4, 4],
+            (0..16).map(|i| i as f32).collect(),
+        )
+        .unwrap();
+        let y = max_pool(&x, &[2, 2], attrs([2, 2], [0; 4])).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.as_f32().unwrap(), &[5., 7., 13., 15.]);
+    }
+
+    #[test]
+    fn max_pool_i8_quantized_domain() {
+        let x = Tensor::from_i8(&[1, 1, 2, 2], vec![-5, 3, -1, -8]).unwrap();
+        let y = max_pool(&x, &[2, 2], attrs([1, 1], [0; 4])).unwrap();
+        assert_eq!(y.as_i8().unwrap(), &[3]);
+    }
+
+    #[test]
+    fn avg_pool_excludes_pad() {
+        let x = Tensor::from_f32(&[1, 1, 2, 2], vec![2., 2., 2., 2.]).unwrap();
+        // 2x2 kernel, pad 1 all around: corner windows see one real value.
+        let y = average_pool(&x, &[2, 2], attrs([1, 1], [1, 1, 1, 1])).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        assert_eq!(y.as_f32().unwrap()[0], 2.0); // not diluted by pad
+    }
+}

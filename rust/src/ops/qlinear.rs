@@ -1,0 +1,172 @@
+//! QuantizeLinear / DequantizeLinear (ONNX opset 13 per-tensor form).
+//!
+//! In the paper's patterns `QuantizeLinear` is used with `y_scale = 1`,
+//! `y_zero_point = 0` purely as the **rounding + clipping** stage after
+//! the Mul-codified rescale (§3.1); the zero-point *dtype* selects int8
+//! vs uint8 output. `DequantizeLinear` re-enters float space before the
+//! Tanh/Sigmoid activations (Figs. 4–6). Implemented to the full operator
+//! contract: y = saturate(round(x / y_scale) + y_zero_point) with
+//! round-half-to-nearest-even, matching ONNXruntime bit-for-bit.
+
+use super::OpError;
+use crate::tensor::{DType, Tensor, TensorData};
+
+/// Round half to even ("banker's rounding"), the rounding ONNX specifies
+/// for QuantizeLinear. `f32::round` rounds half away from zero, which
+/// differs on exact .5 values — those occur constantly with power-of-two
+/// scales, so this matters for bit-exactness.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    // IEEE 754 roundTiesToEven — a single hardware rounding instruction
+    // on x86 (roundss) vs the branchy tie-fixup this replaced (§Perf).
+    x.round_ties_even()
+}
+
+#[inline]
+fn saturate_i8(v: f32) -> i8 {
+    v.clamp(-128.0, 127.0) as i8
+}
+
+#[inline]
+fn saturate_u8(v: f32) -> u8 {
+    v.clamp(0.0, 255.0) as u8
+}
+
+/// ONNX `QuantizeLinear` (per-tensor): output dtype = zero-point dtype.
+pub fn quantize_linear(
+    x: &Tensor,
+    y_scale: &Tensor,
+    y_zero_point: Option<&Tensor>,
+) -> Result<Tensor, OpError> {
+    let scale = y_scale.as_f32()?[0];
+    if scale <= 0.0 || !scale.is_finite() {
+        return Err(OpError::Semantics(format!("invalid y_scale {scale}")));
+    }
+    let xv = x.as_f32()?;
+    let (out_dtype, zp) = match y_zero_point {
+        None => (DType::U8, 0i32),
+        Some(z) => (z.dtype(), z.as_quantized_i32()?[0]),
+    };
+    let inv = 1.0 / scale;
+    match out_dtype {
+        DType::I8 => {
+            let v: Vec<i8> = xv
+                .iter()
+                .map(|&x| saturate_i8(round_half_even(x * inv) + zp as f32))
+                .collect();
+            Ok(Tensor::new(x.shape().to_vec(), TensorData::I8(v))?)
+        }
+        DType::U8 => {
+            let v: Vec<u8> = xv
+                .iter()
+                .map(|&x| saturate_u8(round_half_even(x * inv) + zp as f32))
+                .collect();
+            Ok(Tensor::new(x.shape().to_vec(), TensorData::U8(v))?)
+        }
+        d => Err(OpError::Semantics(format!(
+            "QuantizeLinear zero_point must be INT8/UINT8, got {d}"
+        ))),
+    }
+}
+
+/// ONNX `DequantizeLinear` (per-tensor): y = (x - zero_point) * scale.
+pub fn dequantize_linear(
+    x: &Tensor,
+    x_scale: &Tensor,
+    x_zero_point: Option<&Tensor>,
+) -> Result<Tensor, OpError> {
+    let scale = x_scale.as_f32()?[0];
+    let zp = match x_zero_point {
+        None => 0i32,
+        Some(z) => z.as_quantized_i32()?[0],
+    };
+    let v: Vec<f32> = x
+        .as_quantized_i32()?
+        .iter()
+        .map(|&q| (q - zp) as f32 * scale)
+        .collect();
+    Ok(Tensor::from_f32(x.shape(), v)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_even_cases() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(-2.5), -2.0);
+        assert_eq!(round_half_even(1.4), 1.0);
+        assert_eq!(round_half_even(1.6), 2.0);
+        assert_eq!(round_half_even(127.5), 128.0);
+        assert_eq!(round_half_even(126.5), 126.0);
+    }
+
+    #[test]
+    fn quantize_saturates_int8() {
+        let x = Tensor::from_f32(&[4], vec![-1000.0, -128.4, 127.4, 1000.0]).unwrap();
+        let s = Tensor::scalar_f32(1.0);
+        let zp = Tensor::scalar_i8(0);
+        let q = quantize_linear(&x, &s, Some(&zp)).unwrap();
+        assert_eq!(q.as_i8().unwrap(), &[-128, -128, 127, 127]);
+    }
+
+    #[test]
+    fn quantize_uint8_via_zero_point_dtype() {
+        // Paper §3.1: "an uint8 zero_point argument results in uint8 output".
+        let x = Tensor::from_f32(&[3], vec![-5.0, 100.0, 300.0]).unwrap();
+        let s = Tensor::scalar_f32(1.0);
+        let zp = Tensor::scalar_u8(0);
+        let q = quantize_linear(&x, &s, Some(&zp)).unwrap();
+        assert_eq!(q.dtype(), DType::U8);
+        assert_eq!(q.as_u8().unwrap(), &[0, 100, 255]);
+    }
+
+    #[test]
+    fn quantize_scale_divides() {
+        let x = Tensor::from_f32(&[2], vec![1.0, -1.0]).unwrap();
+        let s = Tensor::scalar_f32(0.5);
+        let zp = Tensor::scalar_i8(0);
+        let q = quantize_linear(&x, &s, Some(&zp)).unwrap();
+        assert_eq!(q.as_i8().unwrap(), &[2, -2]);
+    }
+
+    #[test]
+    fn quantize_rounds_half_even() {
+        // 0.5/1.0 -> 0, 1.5 -> 2, 2.5 -> 2: distinguishable from
+        // round-half-away which would give 1, 2, 3.
+        let x = Tensor::from_f32(&[3], vec![0.5, 1.5, 2.5]).unwrap();
+        let s = Tensor::scalar_f32(1.0);
+        let zp = Tensor::scalar_i8(0);
+        let q = quantize_linear(&x, &s, Some(&zp)).unwrap();
+        assert_eq!(q.as_i8().unwrap(), &[0, 2, 2]);
+    }
+
+    #[test]
+    fn dequantize_round_trip() {
+        let q = Tensor::from_i8(&[3], vec![-128, 0, 127]).unwrap();
+        let s = Tensor::scalar_f32(0.25);
+        let f = dequantize_linear(&q, &s, None).unwrap();
+        assert_eq!(f.as_f32().unwrap(), &[-32.0, 0.0, 31.75]);
+    }
+
+    #[test]
+    fn dequantize_i32_bias_path() {
+        // DequantizeLinear also accepts INT32 (used for bias inspection).
+        let q = Tensor::from_i32(&[2], vec![1000, -1000]).unwrap();
+        let s = Tensor::scalar_f32(0.001);
+        let f = dequantize_linear(&q, &s, None).unwrap();
+        assert!((f.as_f32().unwrap()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_scale() {
+        let x = Tensor::from_f32(&[1], vec![1.0]).unwrap();
+        assert!(quantize_linear(&x, &Tensor::scalar_f32(0.0), None).is_err());
+        assert!(quantize_linear(&x, &Tensor::scalar_f32(-1.0), None).is_err());
+    }
+}

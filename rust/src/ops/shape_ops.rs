@@ -1,0 +1,120 @@
+//! Shape-manipulating operators (Reshape, Flatten, Identity) and Softmax.
+
+use super::OpError;
+use crate::tensor::Tensor;
+
+/// ONNX `Reshape` with 0 (copy) and -1 (infer) semantics.
+pub fn reshape(x: &Tensor, spec: &[i64]) -> Result<Tensor, OpError> {
+    let mut dims: Vec<usize> = Vec::with_capacity(spec.len());
+    let mut infer_at = None;
+    for (i, &s) in spec.iter().enumerate() {
+        match s {
+            0 => {
+                let d = *x
+                    .shape()
+                    .get(i)
+                    .ok_or_else(|| OpError::Semantics("0-dim out of range".into()))?;
+                dims.push(d);
+            }
+            -1 => {
+                if infer_at.is_some() {
+                    return Err(OpError::Semantics("multiple -1 dims".into()));
+                }
+                infer_at = Some(i);
+                dims.push(1);
+            }
+            s if s > 0 => dims.push(s as usize),
+            s => return Err(OpError::Semantics(format!("bad dim {s}"))),
+        }
+    }
+    if let Some(at) = infer_at {
+        let rest: usize = dims.iter().enumerate().filter(|(i, _)| *i != at).map(|(_, &d)| d).product();
+        if rest == 0 || x.numel() % rest != 0 {
+            return Err(OpError::Semantics(format!(
+                "cannot infer -1: numel {} over {}",
+                x.numel(),
+                rest
+            )));
+        }
+        dims[at] = x.numel() / rest;
+    }
+    Ok(x.clone().reshape(&dims)?)
+}
+
+/// ONNX `Flatten`.
+pub fn flatten(x: &Tensor, axis: usize) -> Result<Tensor, OpError> {
+    if axis > x.rank() {
+        return Err(OpError::Semantics("axis out of range".into()));
+    }
+    let d0: usize = x.shape()[..axis].iter().product();
+    let d1: usize = x.shape()[axis..].iter().product();
+    Ok(x.clone().reshape(&[d0, d1])?)
+}
+
+/// ONNX `Softmax` along `axis` (f32). Numerically-stable max-subtraction
+/// form; used by the fp32 reference models and accuracy evaluation.
+pub fn softmax(x: &Tensor, axis: i64) -> Result<Tensor, OpError> {
+    let rank = x.rank() as i64;
+    let axis = if axis < 0 { axis + rank } else { axis };
+    if axis < 0 || axis >= rank {
+        return Err(OpError::Semantics("axis out of range".into()));
+    }
+    let axis = axis as usize;
+    let v = x.as_f32()?;
+    let shape = x.shape();
+    let axis_len = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    let outer: usize = shape[..axis].iter().product();
+    let mut out = vec![0f32; v.len()];
+    for o in 0..outer {
+        for i in 0..inner {
+            let idx = |a: usize| (o * axis_len + a) * inner + i;
+            let mut max = f32::NEG_INFINITY;
+            for a in 0..axis_len {
+                max = max.max(v[idx(a)]);
+            }
+            let mut sum = 0.0;
+            for a in 0..axis_len {
+                let e = (v[idx(a)] - max).exp();
+                out[idx(a)] = e;
+                sum += e;
+            }
+            for a in 0..axis_len {
+                out[idx(a)] /= sum;
+            }
+        }
+    }
+    Ok(Tensor::from_f32(shape, out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_infer() {
+        let x = Tensor::from_f32(&[2, 6], vec![0.0; 12]).unwrap();
+        let y = reshape(&x, &[0, 2, -1]).unwrap();
+        assert_eq!(y.shape(), &[2, 2, 3]);
+        assert!(reshape(&x, &[5, -1]).is_err());
+    }
+
+    #[test]
+    fn flatten_axis() {
+        let x = Tensor::from_f32(&[2, 3, 4], vec![0.0; 24]).unwrap();
+        assert_eq!(flatten(&x, 1).unwrap().shape(), &[2, 12]);
+        assert_eq!(flatten(&x, 0).unwrap().shape(), &[1, 24]);
+        assert_eq!(flatten(&x, 3).unwrap().shape(), &[24, 1]);
+    }
+
+    #[test]
+    fn softmax_rows() {
+        let x = Tensor::from_f32(&[2, 2], vec![0.0, 0.0, 1000.0, 0.0]).unwrap();
+        let y = softmax(&x, -1).unwrap();
+        let v = y.as_f32().unwrap();
+        assert!((v[0] - 0.5).abs() < 1e-6);
+        assert!((v[2] - 1.0).abs() < 1e-6); // stable under large inputs
+        let row_sum: f32 = v[..2].iter().sum();
+        assert!((row_sum - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,218 @@
+//! Minimal property-testing driver (the `proptest` crate is unavailable
+//! offline).
+//!
+//! [`run_prop`] generates `cases` random inputs from a generator, runs
+//! the property, and on failure performs greedy shrinking via the
+//! generator's `shrink` implementation before reporting the minimal
+//! counterexample. Deterministic: failures print the seed, and the same
+//! seed reproduces the run.
+
+use crate::train::rng::Rng;
+
+/// A generator of random test inputs with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values (tried in order during shrinking).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics with the
+/// minimal counterexample (after shrinking) and the reproducing seed.
+pub fn run_prop<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
+    name: &str,
+    gen: &G,
+    seed: u64,
+    cases: usize,
+    prop: F,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut current = value;
+            let mut current_msg = msg;
+            'outer: loop {
+                for cand in gen.shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed {seed}, case {case}):\n  \
+                 counterexample: {current:?}\n  error: {current_msg}"
+            );
+        }
+    }
+}
+
+/// Generator: i8 vectors of length within [min_len, max_len].
+pub struct VecI8 {
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Gen for VecI8 {
+    type Value = Vec<i8>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<i8> {
+        let len = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..len).map(|_| rng.i8()).collect()
+    }
+
+    fn shrink(&self, v: &Vec<i8>) -> Vec<Vec<i8>> {
+        let mut out = Vec::new();
+        // Halve the vector.
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+        }
+        // Zero out elements.
+        if let Some(pos) = v.iter().position(|&x| x != 0) {
+            let mut z = v.clone();
+            z[pos] = 0;
+            out.push(z);
+        }
+        out
+    }
+}
+
+/// Generator: f32 in [lo, hi] plus interesting boundary values.
+pub struct RangeF32 {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for RangeF32 {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        // 1 in 8: pick a boundary-ish value.
+        if rng.below(8) == 0 {
+            let specials = [
+                self.lo,
+                self.hi,
+                0.5 * (self.lo + self.hi),
+                self.lo + f32::EPSILON,
+            ];
+            specials[rng.below(specials.len())]
+        } else {
+            rng.range_f32(self.lo, self.hi)
+        }
+    }
+
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mid = 0.5 * (self.lo + self.hi);
+        if (*v - mid).abs() > 1e-6 {
+            vec![mid, 0.5 * (*v + mid)]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Generator: usize in [lo, hi].
+pub struct RangeUsize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for RangeUsize {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        if *v > self.lo {
+            vec![self.lo, self.lo + (*v - self.lo) / 2]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        run_prop("abs_nonneg", &VecI8 { min_len: 0, max_len: 32 }, 1, 200, |v| {
+            if v.iter().all(|&x| (x as i32).abs() >= 0) {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_shrinks() {
+        run_prop(
+            "always_fails",
+            &VecI8 { min_len: 1, max_len: 64 },
+            2,
+            10,
+            |v| {
+                if v.len() >= 1 {
+                    Err("too long".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn range_f32_within_bounds() {
+        let gen = RangeF32 { lo: -2.0, hi: 3.0 };
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let v = gen.generate(&mut rng);
+            assert!((-2.0..=3.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = VecI8 { min_len: 0, max_len: 16 };
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..50 {
+            assert_eq!(gen.generate(&mut a), gen.generate(&mut b));
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Calibration strategies — the part of the flow the paper argues should
+//! be *decoupled* from the hardware compiler (§1, §3: "There are multiple
+//! ways to determine the scale ... Precisely, this is one of the
+//! motivations for this paper").
+//!
+//! Three strategies are provided, all producing a saturation threshold
+//! `max_abs` that [`super::scheme::SymmetricScale`] maps to the integer
+//! range:
+//!
+//! * [`MaxRange`] — profile the true |max| (the paper's first example).
+//! * [`Percentile`] — histogram profile, saturate at a percentile (the
+//!   paper's "profile histograms and saturating the numerical range").
+//! * [`MseOptimal`] — choose the threshold minimizing expected squared
+//!   quantization error over the histogram.
+
+use super::scheme::{QType, QuantError, SymmetricScale};
+
+/// A streaming observer of fp32 tensor values that yields a saturation
+/// threshold.
+pub trait Calibrator: Send {
+    /// Account a batch of observed values.
+    fn observe(&mut self, data: &[f32]);
+    /// Saturation threshold (absolute value) after observation.
+    fn threshold(&self) -> f32;
+    /// Human-readable strategy name (reports/benches).
+    fn name(&self) -> &'static str;
+
+    /// Finish calibration into a scale for the given target type.
+    fn scale(&self, qtype: QType) -> Result<SymmetricScale, QuantError> {
+        SymmetricScale::from_max_abs(self.threshold(), qtype)
+    }
+}
+
+/// Full-range calibration: threshold = max |x| observed.
+#[derive(Default, Debug, Clone)]
+pub struct MaxRange {
+    max_abs: f32,
+}
+
+impl MaxRange {
+    pub fn new() -> MaxRange {
+        MaxRange::default()
+    }
+}
+
+impl Calibrator for MaxRange {
+    fn observe(&mut self, data: &[f32]) {
+        for &x in data {
+            let a = x.abs();
+            if a.is_finite() && a > self.max_abs {
+                self.max_abs = a;
+            }
+        }
+    }
+
+    fn threshold(&self) -> f32 {
+        self.max_abs
+    }
+
+    fn name(&self) -> &'static str {
+        "max_range"
+    }
+}
+
+/// Fixed-capacity dynamic-range histogram of |x|. When a new maximum
+/// exceeds the current range the bin width doubles (existing counts are
+/// folded pairwise), so observation is single-pass and bounded-memory.
+#[derive(Debug, Clone)]
+pub struct AbsHistogram {
+    counts: Vec<u64>,
+    /// Upper edge of the histogram (bin width = range / counts.len()).
+    range: f32,
+    total: u64,
+}
+
+impl AbsHistogram {
+    pub fn new(bins: usize) -> AbsHistogram {
+        AbsHistogram {
+            counts: vec![0; bins.max(16)],
+            range: 0.0,
+            total: 0,
+        }
+    }
+
+    pub fn observe(&mut self, data: &[f32]) {
+        for &x in data {
+            let a = x.abs();
+            if !a.is_finite() {
+                continue;
+            }
+            if a > self.range {
+                self.grow_to(a);
+            }
+            let n = self.counts.len();
+            let idx = if self.range == 0.0 {
+                0
+            } else {
+                (((a / self.range) * n as f32) as usize).min(n - 1)
+            };
+            self.counts[idx] += 1;
+            self.total += 1;
+        }
+    }
+
+    fn grow_to(&mut self, new_max: f32) {
+        if self.range == 0.0 {
+            self.range = new_max;
+            return;
+        }
+        while self.range < new_max {
+            // Double the range: fold bins pairwise into the lower half.
+            let n = self.counts.len();
+            for i in 0..n / 2 {
+                self.counts[i] = self.counts[2 * i] + self.counts[2 * i + 1];
+            }
+            for c in &mut self.counts[n / 2..] {
+                *c = 0;
+            }
+            self.range *= 2.0;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Threshold below which `pct` (0..=1) of observations fall.
+    pub fn percentile(&self, pct: f32) -> f32 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (pct as f64 * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        let n = self.counts.len();
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.range * (i + 1) as f32 / n as f32;
+            }
+        }
+        self.range
+    }
+
+    /// Expected squared quantization error if saturating at `threshold`
+    /// with `levels` positive quantization levels. Clipped mass
+    /// contributes its (bin-center - threshold)^2; in-range mass
+    /// contributes the uniform-quantization step variance step^2/12.
+    pub fn quant_mse(&self, threshold: f32, levels: f32) -> f64 {
+        if self.total == 0 || threshold <= 0.0 {
+            return 0.0;
+        }
+        let n = self.counts.len();
+        let bin_w = self.range / n as f32;
+        let step = threshold / levels;
+        let in_range_var = (step as f64).powi(2) / 12.0;
+        let mut err = 0.0f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let center = (i as f32 + 0.5) * bin_w;
+            if center <= threshold {
+                err += c as f64 * in_range_var;
+            } else {
+                let clip = (center - threshold) as f64;
+                err += c as f64 * clip * clip;
+            }
+        }
+        err / self.total as f64
+    }
+}
+
+/// Percentile calibration (e.g. 99.9%): ignores extreme outliers, the
+/// "saturating the numerical range prior to mapping" strategy.
+#[derive(Debug, Clone)]
+pub struct Percentile {
+    hist: AbsHistogram,
+    pct: f32,
+}
+
+impl Percentile {
+    pub fn new(pct: f32) -> Percentile {
+        Percentile {
+            hist: AbsHistogram::new(2048),
+            pct,
+        }
+    }
+}
+
+impl Calibrator for Percentile {
+    fn observe(&mut self, data: &[f32]) {
+        self.hist.observe(data);
+    }
+
+    fn threshold(&self) -> f32 {
+        self.hist.percentile(self.pct)
+    }
+
+    fn name(&self) -> &'static str {
+        "percentile"
+    }
+}
+
+/// MSE-optimal calibration: grid-searches the saturation threshold that
+/// minimizes expected squared error under the observed distribution
+/// (histogram variant of the minimize-overall-quantization-error
+/// strategy the paper mentions).
+#[derive(Debug, Clone)]
+pub struct MseOptimal {
+    hist: AbsHistogram,
+    levels: f32,
+}
+
+impl MseOptimal {
+    pub fn new(qtype: QType) -> MseOptimal {
+        MseOptimal {
+            hist: AbsHistogram::new(2048),
+            levels: qtype.positive_levels(),
+        }
+    }
+}
+
+impl Calibrator for MseOptimal {
+    fn observe(&mut self, data: &[f32]) {
+        self.hist.observe(data);
+    }
+
+    fn threshold(&self) -> f32 {
+        let hi = self.hist.percentile(1.0);
+        if hi == 0.0 {
+            return 0.0;
+        }
+        // Search thresholds from 30% to 100% of the observed max.
+        let mut best = hi;
+        let mut best_err = f64::INFINITY;
+        for i in 30..=100 {
+            let t = hi * i as f32 / 100.0;
+            let e = self.hist.quant_mse(t, self.levels);
+            if e < best_err {
+                best_err = e;
+                best = t;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "mse"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_range_tracks_extremes() {
+        let mut c = MaxRange::new();
+        c.observe(&[0.5, -3.0, 2.0]);
+        c.observe(&[1.0]);
+        assert_eq!(c.threshold(), 3.0);
+    }
+
+    #[test]
+    fn max_range_ignores_nan_inf() {
+        let mut c = MaxRange::new();
+        c.observe(&[1.0, f32::NAN, f32::INFINITY]);
+        assert_eq!(c.threshold(), 1.0);
+    }
+
+    #[test]
+    fn histogram_grows_and_counts() {
+        let mut h = AbsHistogram::new(64);
+        h.observe(&[0.1; 100]);
+        h.observe(&[10.0]); // forces range growth
+        assert_eq!(h.total(), 101);
+        assert!(h.percentile(1.0) >= 10.0 * 63.0 / 64.0);
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut c = Percentile::new(0.95);
+        // 990 values at ~1.0, 10 outliers (1%) at 100: the 95th
+        // percentile lies firmly inside the bulk.
+        let mut data = vec![1.0f32; 990];
+        data.extend(vec![100.0f32; 10]);
+        c.observe(&data);
+        let t = c.threshold();
+        assert!(t < 10.0, "threshold {t} should ignore the 1% outliers");
+        assert!(t >= 0.9);
+    }
+
+    #[test]
+    fn mse_saturates_heavy_tail() {
+        let mut c = MseOptimal::new(QType::I8);
+        // Bulk in [-1,1] plus a *population* of moderate outliers (not a
+        // single point — a lone extreme value genuinely dominates MSE and
+        // must be kept; a thin tail should be clipped).
+        let mut data: Vec<f32> =
+            (0..100_000).map(|i| ((i % 200) as f32 - 100.0) / 100.0).collect();
+        data.extend((0..20).map(|i| 10.0 + i as f32));
+        c.observe(&data);
+        let t = c.threshold();
+        let max_t = {
+            let mut m = MaxRange::new();
+            m.observe(&data);
+            m.threshold()
+        };
+        assert_eq!(max_t, 29.0);
+        // The chosen threshold must never be worse than full-range, and
+        // here the tail is thin enough that clipping wins.
+        assert!(
+            c.hist.quant_mse(t, 127.0) <= c.hist.quant_mse(max_t, 127.0) + 1e-12,
+            "mse({t}) > mse({max_t})"
+        );
+        assert!(t < max_t, "threshold {t} should clip the thin tail");
+    }
+
+    #[test]
+    fn calibrators_produce_valid_scales() {
+        for c in [&mut MaxRange::new() as &mut dyn Calibrator] {
+            c.observe(&[0.3, -0.7]);
+            let s = c.scale(QType::I8).unwrap();
+            assert!(s.scale > 0.0);
+        }
+        let mut p = Percentile::new(0.999);
+        p.observe(&[0.3, -0.7]);
+        assert!(p.scale(QType::I8).unwrap().scale > 0.0);
+        let mut m = MseOptimal::new(QType::I8);
+        m.observe(&[0.3, -0.7]);
+        assert!(m.scale(QType::I8).unwrap().scale > 0.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! The decoupled quantization toolchain (paper §3).
+//!
+//! Everything needed to turn a trained fp32 model into a *pre-quantized*
+//! one lives here, independent of any execution backend: calibration
+//! ([`calib`]), the symmetric scale scheme ([`scheme`]), and the
+//! integer-multiplier + right-shift rescale decomposition ([`rescale`])
+//! that makes the model expressive enough for fixed-point hardware
+//! (goal 4). The [`crate::rewrite`] module consumes these to emit the
+//! Figure 1–6 operator patterns.
+
+pub mod calib;
+pub mod rescale;
+pub mod scheme;
+
+pub use calib::{AbsHistogram, Calibrator, MaxRange, MseOptimal, Percentile};
+pub use rescale::{apply_integer, decompose, RescaleDecomposition, MAX_EXACT_F32_INT};
+pub use scheme::{quantize_bias, QType, QuantError, SymmetricScale};
+
+/// Which calibration strategy to use, as a config-friendly enum.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CalibStrategy {
+    MaxRange,
+    Percentile(f32),
+    Mse,
+}
+
+impl CalibStrategy {
+    pub fn build(self, qtype: QType) -> Box<dyn Calibrator> {
+        match self {
+            CalibStrategy::MaxRange => Box::new(MaxRange::new()),
+            CalibStrategy::Percentile(p) => Box::new(Percentile::new(p)),
+            CalibStrategy::Mse => Box::new(MseOptimal::new(qtype)),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CalibStrategy> {
+        Some(match s {
+            "max" | "max_range" => CalibStrategy::MaxRange,
+            "mse" => CalibStrategy::Mse,
+            s if s.starts_with("p") => {
+                CalibStrategy::Percentile(s[1..].parse::<f32>().ok()? / 100.0)
+            }
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(CalibStrategy::parse("max"), Some(CalibStrategy::MaxRange));
+        assert_eq!(CalibStrategy::parse("mse"), Some(CalibStrategy::Mse));
+        assert_eq!(
+            CalibStrategy::parse("p99.9"),
+            Some(CalibStrategy::Percentile(0.999))
+        );
+        assert_eq!(CalibStrategy::parse("bogus"), None);
+    }
+}

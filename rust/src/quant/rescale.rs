@@ -1,0 +1,221 @@
+//! §3.1 rescale decomposition: replace the floating-point rescale
+//! multiplier with an **integer multiply + arithmetic right shift** —
+//! the operation fixed-point accelerator hardware actually performs —
+//! and codify both constants in the ONNX model as FLOAT initializers.
+//!
+//! `Quant_multiplier ≈ Quant_scale * 2^-N` where `Quant_scale` is an
+//! integer stored as FLOAT. The paper notes the largest exactly-
+//! representable integer in f32 is 2^24 = 16,777,216, which bounds the
+//! precision; its worked example is 1/3 ≈ 11,184,810 * 2^-25.
+
+use super::scheme::QuantError;
+
+/// An integer-multiplier / right-shift pair representing a positive
+/// rescale multiplier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RescaleDecomposition {
+    /// Integer multiplier, guaranteed <= 2^24 so its FLOAT encoding in
+    /// the ONNX file is exact.
+    pub quant_scale: u32,
+    /// Right-shift bit count N (`Quant_shift = 2^-N`).
+    pub shift: u32,
+}
+
+/// Largest integer exactly representable as f32 (paper §3.1).
+pub const MAX_EXACT_F32_INT: u32 = 1 << 24;
+
+impl RescaleDecomposition {
+    /// The multiplier this decomposition encodes, in f64 (exact:
+    /// both factors are powers-of-two-scaled small integers).
+    pub fn multiplier(&self) -> f64 {
+        self.quant_scale as f64 * (self.shift as f64).exp2().recip()
+    }
+
+    /// `Quant_scale` as the FLOAT the ONNX initializer stores — exact by
+    /// construction (<= 2^24).
+    pub fn quant_scale_f32(&self) -> f32 {
+        self.quant_scale as f32
+    }
+
+    /// `Quant_shift` = 2^-N as FLOAT — exact for all N < 127.
+    pub fn quant_shift_f32(&self) -> f32 {
+        (-(self.shift as i32) as f32).exp2()
+    }
+
+    /// Relative error vs a target multiplier.
+    pub fn relative_error(&self, target: f64) -> f64 {
+        if target == 0.0 {
+            return 0.0;
+        }
+        ((self.multiplier() - target) / target).abs()
+    }
+}
+
+/// Decompose a positive multiplier into (integer scale <= 2^24, right
+/// shift <= `max_shift`), minimizing representation error.
+///
+/// Strategy: normalize `m = frac * 2^e` with `frac` in [0.5, 1), then
+/// `quant_scale = round(frac * 2^24)` and `shift = 24 - e`. This uses the
+/// full 24-bit mantissa budget, giving relative error <= 2^-24 whenever
+/// the shift fits; when `shift` would exceed `max_shift` the multiplier
+/// is tiny and precision degrades gracefully (error reported by
+/// [`RescaleDecomposition::relative_error`]).
+pub fn decompose(multiplier: f32, max_shift: u32) -> Result<RescaleDecomposition, QuantError> {
+    if !multiplier.is_finite() || multiplier <= 0.0 {
+        return Err(QuantError::BadMultiplier(multiplier));
+    }
+    let m = multiplier as f64;
+    // e such that m = frac * 2^e, frac in [0.5, 1).
+    let e = m.log2().floor() as i32 + 1;
+    let mut shift = 24 - e;
+    let mut qs: u64;
+    if shift > max_shift as i32 {
+        // Multiplier too small for full precision at this shift budget.
+        shift = max_shift as i32;
+        qs = (m * (shift as f64).exp2()).round() as u64;
+        if qs == 0 {
+            return Err(QuantError::BadMultiplier(multiplier));
+        }
+    } else if shift < 0 {
+        // Multiplier >= 2^24: not representable with a right shift.
+        return Err(QuantError::BadMultiplier(multiplier));
+    } else {
+        qs = (m * (shift as f64).exp2()).round() as u64;
+        if qs == MAX_EXACT_F32_INT as u64 * 2 {
+            // frac rounded up to exactly 1.0 (cannot happen with
+            // round-to-nearest from [0.5,1) * 2^24, but guard anyway).
+            qs = MAX_EXACT_F32_INT as u64;
+            shift -= 1;
+        }
+        while qs > MAX_EXACT_F32_INT as u64 {
+            qs = (qs + 1) >> 1;
+            shift -= 1;
+            if shift < 0 {
+                return Err(QuantError::BadMultiplier(multiplier));
+            }
+        }
+    }
+    Ok(RescaleDecomposition {
+        quant_scale: qs as u32,
+        shift: shift as u32,
+    })
+}
+
+/// Apply the decomposition in pure integer arithmetic, exactly as the
+/// hardware rescale unit does: `(acc * quant_scale) >> shift` in i64 with
+/// round-to-nearest (add half before shifting), then saturate to the
+/// output integer range. This is the function `hwsim` uses.
+#[inline]
+pub fn apply_integer(acc: i32, d: &RescaleDecomposition, lo: i32, hi: i32) -> i32 {
+    let prod = acc as i64 * d.quant_scale as i64;
+    let rounded = if d.shift == 0 {
+        prod
+    } else {
+        // Round half away from zero on the shifted-out bits; the +-half
+        // offset is the standard fixed-point rounding the paper's target
+        // hardware class performs.
+        let half = 1i64 << (d.shift - 1);
+        if prod >= 0 {
+            (prod + half) >> d.shift
+        } else {
+            -((-prod + half) >> d.shift)
+        }
+    };
+    rounded.clamp(lo as i64, hi as i64) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_quarter() {
+        // Quant_multiplier 0.25 = 1 * 2^-2 family; our normalizer uses
+        // the full mantissa: 2^23 * 2^-25 == 0.25 exactly.
+        let d = decompose(0.25, 31).unwrap();
+        assert_eq!(d.multiplier(), 0.25);
+    }
+
+    #[test]
+    fn paper_example_one_third() {
+        // §3.1: 1/3 ~ Quant_scale 11184810 (truncated) or 11184811
+        // (nearest), shift 25. Round-to-nearest picks 11184811.
+        let d = decompose(1.0 / 3.0, 31).unwrap();
+        assert_eq!(d.shift, 25);
+        assert!(
+            d.quant_scale == 11184811 || d.quant_scale == 11184810,
+            "got {}",
+            d.quant_scale
+        );
+        assert!(d.relative_error(1.0 / 3.0) < 1e-7);
+    }
+
+    #[test]
+    fn quant_scale_always_exact_in_f32() {
+        for &m in &[0.1f32, 0.9, 1.7, 100.3, 1e-3, 1e-6, 0.5, 2.0_f32.powi(-20)] {
+            let d = decompose(m, 31).unwrap();
+            assert!(d.quant_scale <= MAX_EXACT_F32_INT);
+            // f32 round trip of the integer is exact.
+            assert_eq!(d.quant_scale_f32() as u32, d.quant_scale);
+        }
+    }
+
+    #[test]
+    fn precision_within_2_pow_24() {
+        for i in 1..=1000 {
+            let m = i as f32 * 7.3e-4;
+            let d = decompose(m, 40).unwrap();
+            assert!(
+                d.relative_error(m as f64) <= 2.0_f64.powi(-24),
+                "m={m} err={}",
+                d.relative_error(m as f64)
+            );
+        }
+    }
+
+    #[test]
+    fn shift_budget_degrades_gracefully() {
+        // Small multiplier with a capped shift budget: representable but
+        // with fewer effective mantissa bits.
+        let m = 2.0_f32.powi(-10);
+        let d = decompose(m, 15).unwrap();
+        assert_eq!(d.shift, 15);
+        assert_eq!(d.quant_scale, 32); // 2^-10 * 2^15
+        assert_eq!(d.multiplier(), m as f64);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(decompose(0.0, 31).is_err());
+        assert!(decompose(-1.0, 31).is_err());
+        assert!(decompose(f32::INFINITY, 31).is_err());
+        assert!(decompose(17_000_000.0, 31).is_err()); // >= 2^24
+    }
+
+    #[test]
+    fn apply_integer_matches_float() {
+        let d = decompose(1.0 / 3.0, 31).unwrap();
+        for &acc in &[0i32, 1, 2, 3, 300, -300, 1000, -1000, 38100, -38100] {
+            let hw = apply_integer(acc, &d, -128, 127);
+            let float = (acc as f64 / 3.0).round().clamp(-128.0, 127.0) as i32;
+            assert!(
+                (hw - float).abs() <= 1,
+                "acc={acc}: hw={hw} float={float}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_integer_rounds() {
+        // multiplier exactly 0.5: acc=3 -> 1.5 -> rounds away from zero to 2.
+        let d = decompose(0.5, 31).unwrap();
+        assert_eq!(apply_integer(3, &d, -128, 127), 2);
+        assert_eq!(apply_integer(-3, &d, -128, 127), -2);
+        assert_eq!(apply_integer(300, &d, -128, 127), 127); // saturates
+    }
+
+    #[test]
+    fn tiny_multiplier_underflow_is_error() {
+        assert!(decompose(2.0_f32.powi(-20), 10).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Symmetric quantization scheme (paper §3, Eq. 1): `X = scale_X * X_q`
+//! with zero offset. int8 for signed tensors, uint8 for provably
+//! non-negative ones (post-ReLU / post-Sigmoid, Figure 6).
+
+use crate::ops::qlinear::round_half_even;
+use crate::tensor::{DType, Tensor, TensorData};
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum QuantError {
+    #[error("invalid scale {0} (must be finite and > 0)")]
+    BadScale(f32),
+    #[error("multiplier {0} out of decomposable range")]
+    BadMultiplier(f32),
+    #[error("tensor: {0}")]
+    Tensor(#[from] crate::tensor::TensorError),
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Quantized integer target type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QType {
+    I8,
+    U8,
+}
+
+impl QType {
+    pub fn dtype(self) -> DType {
+        match self {
+            QType::I8 => DType::I8,
+            QType::U8 => DType::U8,
+        }
+    }
+
+    /// Integer range the quantized values live in.
+    pub fn range(self) -> (i32, i32) {
+        match self {
+            QType::I8 => (-128, 127),
+            QType::U8 => (0, 255),
+        }
+    }
+
+    /// The positive magnitude the scale maps onto (127 for symmetric
+    /// int8 — the paper's scheme keeps ±ranges symmetric so -128 is
+    /// never produced by quantization, only by saturating arithmetic —
+    /// and 255 for uint8 one-sided data).
+    pub fn positive_levels(self) -> f32 {
+        match self {
+            QType::I8 => 127.0,
+            QType::U8 => 255.0,
+        }
+    }
+}
+
+/// A per-tensor symmetric scale: `x ≈ scale * q`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SymmetricScale {
+    pub scale: f32,
+    pub qtype: QType,
+}
+
+impl SymmetricScale {
+    /// Scale from an observed absolute maximum (the "map max range to the
+    /// full int8 range" strategy of §3; other calibrators feed a
+    /// saturated max_abs here instead).
+    pub fn from_max_abs(max_abs: f32, qtype: QType) -> Result<SymmetricScale, QuantError> {
+        if !max_abs.is_finite() || max_abs < 0.0 {
+            return Err(QuantError::BadScale(max_abs));
+        }
+        // Degenerate all-zero tensor: scale 1 encodes zeros exactly.
+        let max_abs = if max_abs == 0.0 { 1.0 } else { max_abs };
+        let scale = max_abs / qtype.positive_levels();
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(QuantError::BadScale(scale));
+        }
+        Ok(SymmetricScale { scale, qtype })
+    }
+
+    /// Quantize an fp32 tensor: `q = clip(round(x / scale))` with
+    /// round-half-to-even, matching ONNX QuantizeLinear.
+    pub fn quantize(&self, x: &Tensor) -> Result<Tensor, QuantError> {
+        let xv = x.as_f32()?;
+        let inv = 1.0 / self.scale;
+        let (lo, hi) = self.qtype.range();
+        let data = match self.qtype {
+            QType::I8 => TensorData::I8(
+                xv.iter()
+                    .map(|&v| round_half_even(v * inv).clamp(lo as f32, hi as f32) as i8)
+                    .collect(),
+            ),
+            QType::U8 => TensorData::U8(
+                xv.iter()
+                    .map(|&v| round_half_even(v * inv).clamp(lo as f32, hi as f32) as u8)
+                    .collect(),
+            ),
+        };
+        Ok(Tensor::new(x.shape().to_vec(), data)?)
+    }
+
+    /// Dequantize back to fp32 (Eq. 1).
+    pub fn dequantize(&self, q: &Tensor) -> Result<Tensor, QuantError> {
+        let v: Vec<f32> = q
+            .as_quantized_i32()?
+            .iter()
+            .map(|&x| x as f32 * self.scale)
+            .collect();
+        Ok(Tensor::from_f32(q.shape(), v)?)
+    }
+
+    /// Worst-case absolute reconstruction error for in-range inputs:
+    /// half a quantization step.
+    pub fn max_error(&self) -> f32 {
+        self.scale * 0.5
+    }
+}
+
+/// Quantize a bias vector to i32 at the accumulator scale (Eq. 6):
+/// `B_q = round(B / (scale_W * scale_X))`.
+pub fn quantize_bias(bias: &Tensor, scale_w: f32, scale_x: f32) -> Result<Tensor, QuantError> {
+    let s = scale_w * scale_x;
+    if !s.is_finite() || s <= 0.0 {
+        return Err(QuantError::BadScale(s));
+    }
+    let v: Vec<i32> = bias
+        .as_f32()?
+        .iter()
+        .map(|&b| {
+            round_half_even((b as f64 / s as f64) as f32)
+                .clamp(i32::MIN as f32, i32::MAX as f32) as i32
+        })
+        .collect();
+    Ok(Tensor::from_i32(bias.shape(), v)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_maps_max_to_full_range() {
+        let s = SymmetricScale::from_max_abs(12.7, QType::I8).unwrap();
+        assert!((s.scale - 0.1).abs() < 1e-6);
+        let x = Tensor::from_f32(&[3], vec![12.7, -12.7, 0.0]).unwrap();
+        let q = s.quantize(&x).unwrap();
+        assert_eq!(q.as_i8().unwrap(), &[127, -127, 0]);
+    }
+
+    #[test]
+    fn uint8_one_sided() {
+        let s = SymmetricScale::from_max_abs(25.5, QType::U8).unwrap();
+        let x = Tensor::from_f32(&[3], vec![25.5, 12.75, -3.0]).unwrap();
+        let q = s.quantize(&x).unwrap();
+        // Negative values clamp to 0 in the one-sided uint8 scheme.
+        assert_eq!(q.as_u8().unwrap(), &[255, 128, 0]);
+    }
+
+    #[test]
+    fn round_trip_error_bounded() {
+        let s = SymmetricScale::from_max_abs(1.0, QType::I8).unwrap();
+        let xs: Vec<f32> = (0..201).map(|i| -1.0 + i as f32 * 0.01).collect();
+        let x = Tensor::from_f32(&[xs.len()], xs.clone()).unwrap();
+        let rt = s.dequantize(&s.quantize(&x).unwrap()).unwrap();
+        for (a, b) in xs.iter().zip(rt.as_f32().unwrap()) {
+            assert!((a - b).abs() <= s.max_error() + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_tensor_ok() {
+        let s = SymmetricScale::from_max_abs(0.0, QType::I8).unwrap();
+        assert_eq!(s.scale, 1.0 / 127.0);
+    }
+
+    #[test]
+    fn bias_quantization_eq6() {
+        // B_q = B / (scale_W * scale_X)
+        let b = Tensor::from_f32(&[2], vec![1.0, -0.5]).unwrap();
+        let q = quantize_bias(&b, 0.1, 0.05).unwrap();
+        assert_eq!(q.as_i32().unwrap(), &[200, -100]);
+    }
+
+    #[test]
+    fn bias_large_values_saturate_i32() {
+        let b = Tensor::from_f32(&[1], vec![1e30]).unwrap();
+        let q = quantize_bias(&b, 1e-6, 1e-6).unwrap();
+        assert_eq!(q.as_i32().unwrap()[0], i32::MAX);
+    }
+
+    #[test]
+    fn rejects_bad_scales() {
+        assert!(SymmetricScale::from_max_abs(f32::NAN, QType::I8).is_err());
+        assert!(SymmetricScale::from_max_abs(-1.0, QType::I8).is_err());
+        let b = Tensor::from_f32(&[1], vec![0.0]).unwrap();
+        assert!(quantize_bias(&b, 0.0, 1.0).is_err());
+    }
+}

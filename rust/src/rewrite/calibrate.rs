@@ -1,0 +1,94 @@
+//! Activation profiling: run the fp32 model over a calibration set while
+//! observing every f32 intermediate, producing per-value saturation
+//! thresholds with a pluggable strategy (paper §3: "One approach might be
+//! to profile the fp32 tensor ... another might be to ... create profile
+//! histograms and saturate").
+
+use crate::interp::{Session, SessionError};
+use crate::quant::{CalibStrategy, Calibrator, QType};
+use crate::tensor::{DType, Tensor};
+use std::collections::HashMap;
+
+/// Per-value calibration thresholds (absolute saturation values).
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    pub thresholds: HashMap<String, f32>,
+    pub strategy_name: &'static str,
+}
+
+impl Calibration {
+    pub fn threshold(&self, value: &str) -> Option<f32> {
+        self.thresholds.get(value).copied()
+    }
+}
+
+/// Run `session` over `batches` (each a full feed set) and calibrate
+/// every f32 value in the graph.
+pub fn calibrate(
+    session: &Session,
+    batches: &[Vec<(String, Tensor)>],
+    strategy: CalibStrategy,
+) -> Result<Calibration, SessionError> {
+    let mut calibs: HashMap<String, Box<dyn Calibrator>> = HashMap::new();
+    for feeds in batches {
+        let feeds_ref: Vec<(&str, Tensor)> = feeds
+            .iter()
+            .map(|(n, t)| (n.as_str(), t.clone()))
+            .collect();
+        session.run_observed(&feeds_ref, &mut |name, t| {
+            if t.dtype() == DType::F32 {
+                let c = calibs
+                    .entry(name.to_string())
+                    .or_insert_with(|| strategy.build(QType::I8));
+                if let Ok(v) = t.as_f32() {
+                    c.observe(v);
+                }
+            }
+        })?;
+    }
+    let mut thresholds = HashMap::new();
+    let mut strategy_name = "max_range";
+    for (name, c) in calibs {
+        strategy_name = c.name();
+        thresholds.insert(name, c.threshold());
+    }
+    Ok(Calibration {
+        thresholds,
+        strategy_name,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::{batched, GraphBuilder};
+
+    #[test]
+    fn calibrates_inputs_and_intermediates() {
+        let mut b = GraphBuilder::new("g");
+        b.input("x", DType::F32, &batched(&[2]));
+        let y = b.node("Relu", &["x"], &[]);
+        b.output(&y, DType::F32, &batched(&[2]));
+        let sess = Session::new(b.finish_model()).unwrap();
+
+        let batches = vec![
+            vec![(
+                "x".to_string(),
+                Tensor::from_f32(&[1, 2], vec![-3.0, 1.0]).unwrap(),
+            )],
+            vec![(
+                "x".to_string(),
+                Tensor::from_f32(&[1, 2], vec![0.5, 2.0]).unwrap(),
+            )],
+        ];
+        let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
+        assert_eq!(cal.threshold("x"), Some(3.0));
+        // Post-ReLU max is 2.0.
+        let relu_out = cal
+            .thresholds
+            .iter()
+            .find(|(k, _)| k.as_str() != "x")
+            .unwrap();
+        assert_eq!(*relu_out.1, 2.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! fp32 → pre-quantized graph compiler.
+//!
+//! [`patterns`] emits the paper's Figure 1–6 operator sequences;
+//! [`calibrate`] profiles activations on a calibration set; [`pass`]
+//! drives the whole-model rewrite. The output model embeds every
+//! quantization parameter as a standard initializer and runs unmodified
+//! on the interpreter, the hardware simulator, and XLA/PJRT.
+
+pub mod calibrate;
+pub mod pass;
+pub mod patterns;
+
+pub use calibrate::{calibrate, Calibration};
+pub use pass::{quantize_model, ActPrecision, QuantizeOptions, RewriteError};
+pub use patterns::{emit_conv, emit_fc, ActKind, ConvParams, FcParams, RescaleOp};

@@ -1,0 +1,690 @@
+//! The fp32 → pre-quantized model compiler.
+//!
+//! Walks a trained fp32 graph (Gemm / Conv / Relu / Tanh / Sigmoid /
+//! MaxPool / Flatten / Reshape / Softmax) and re-emits it as the paper's
+//! pre-quantized patterns (Figures 1–6), embedding all quantization
+//! parameters as initializers. The result is a *standalone standard ONNX
+//! model*: this crate's interpreter, the hwsim "hardware", and the
+//! XLA/PJRT artifact all execute it without any out-of-band metadata
+//! (paper goals 1–4).
+
+use super::calibrate::Calibration;
+use super::patterns::{emit_conv, emit_fc, ActKind, ConvParams, FcParams, RescaleOp};
+use crate::onnx::ir::{Attr, Dim, Model, Node};
+use crate::onnx::GraphBuilder;
+use crate::quant::{
+    decompose, quantize_bias, CalibStrategy, MaxRange, QType, SymmetricScale,
+};
+use crate::quant::calib::Calibrator;
+use crate::tensor::{DType, Tensor};
+use std::collections::{HashMap, HashSet};
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum RewriteError {
+    #[error("missing calibration threshold for value '{0}'")]
+    MissingCalibration(String),
+    #[error("unsupported fp32 operator '{op}' at node '{node}'")]
+    Unsupported { op: String, node: String },
+    #[error("node '{0}': weight must be an fp32 initializer")]
+    WeightNotInitializer(String),
+    #[error("quant: {0}")]
+    Quant(#[from] crate::quant::QuantError),
+    #[error("tensor: {0}")]
+    Tensor(#[from] crate::tensor::TensorError),
+    #[error("graph: {0}")]
+    Graph(String),
+}
+
+/// How float activations (Tanh/Sigmoid) are lowered.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActPrecision {
+    /// Fig. 4: int8 approximation via full-range mapping.
+    Int8,
+    /// Figs. 5/6: genuine fp16 evaluation on a narrow range.
+    F16,
+}
+
+/// Options controlling the emitted patterns.
+#[derive(Clone, Debug)]
+pub struct QuantizeOptions {
+    /// 2-Mul (hardware-explicit) or 1-Mul rescale codification (§3.1).
+    pub two_mul: bool,
+    /// Tanh/Sigmoid lowering precision.
+    pub act_precision: ActPrecision,
+    /// Calibration strategy used (recorded in model metadata only).
+    pub strategy: CalibStrategy,
+    /// Max right-shift the target hardware supports.
+    pub max_shift: u32,
+    /// Use uint8 after ReLU (doubles resolution of one-sided data).
+    pub relu_uint8: bool,
+    /// Tanh "full input range" for the Fig. 4 int8 approximation.
+    pub tanh_full_range: f32,
+    /// Narrow-range clamp for fp16 tanh/sigmoid inputs (Figs. 5/6).
+    pub f16_act_range: f32,
+    /// Keep f32 graph inputs/outputs by emitting QuantizeLinear /
+    /// DequantizeLinear at the edges (self-contained model). When false
+    /// the model has raw int8 I/O exactly like the paper's figures.
+    pub float_io: bool,
+}
+
+impl Default for QuantizeOptions {
+    fn default() -> Self {
+        QuantizeOptions {
+            two_mul: true,
+            act_precision: ActPrecision::F16,
+            strategy: CalibStrategy::MaxRange,
+            max_shift: 31,
+            relu_uint8: true,
+            tanh_full_range: 4.0,
+            f16_act_range: 8.0,
+            float_io: true,
+        }
+    }
+}
+
+/// A value in the quantized graph: its name, scale and integer type.
+#[derive(Clone, Debug)]
+struct QValue {
+    name: String,
+    scale: f32,
+    qtype: QType,
+}
+
+fn rescale_op(mult: f32, opts: &QuantizeOptions) -> Result<RescaleOp, RewriteError> {
+    Ok(if opts.two_mul {
+        RescaleOp::TwoMul(decompose(mult, opts.max_shift)?)
+    } else {
+        RescaleOp::OneMul(mult)
+    })
+}
+
+/// Quantize a trained fp32 model into the paper's pre-quantized form.
+///
+/// `calibration` must cover the graph input and every pre/post-activation
+/// f32 value (produced by [`super::calibrate::calibrate`] on the same
+/// model).
+pub fn quantize_model(
+    model: &Model,
+    calibration: &Calibration,
+    opts: &QuantizeOptions,
+) -> Result<Model, RewriteError> {
+    let g = &model.graph;
+    let order = crate::onnx::topo_order(g).map_err(|e| RewriteError::Graph(e.to_string()))?;
+    let mut b = GraphBuilder::new(&format!("{}_preq", g.name));
+
+    // Values already merged into an emitted pattern (activations fused
+    // into the preceding FC/Conv).
+    let mut consumed: HashSet<usize> = HashSet::new();
+    // fp32 value name -> quantized counterpart.
+    let mut qvals: HashMap<String, QValue> = HashMap::new();
+    // fp32 value name -> f32 value name in the new graph (Softmax tail).
+    let mut fvals: HashMap<String, String> = HashMap::new();
+
+    let threshold = |name: &str| -> Result<f32, RewriteError> {
+        calibration
+            .threshold(name)
+            .filter(|t| *t > 0.0)
+            .ok_or_else(|| RewriteError::MissingCalibration(name.to_string()))
+    };
+
+    // Graph inputs: declare as i8 (paper figures) or f32 + QuantizeLinear.
+    for vi in g.runtime_inputs() {
+        let t_in = threshold(&vi.name)?;
+        let s_x = SymmetricScale::from_max_abs(t_in, QType::I8)?;
+        if opts.float_io {
+            b.input(&vi.name, DType::F32, &vi.shape);
+            let scale_name =
+                b.init_fresh(&format!("{}_x_scale", vi.name), Tensor::scalar_f32(s_x.scale));
+            let zp = b.init_fresh(&format!("{}_x_zp", vi.name), Tensor::scalar_i8(0));
+            let q = b.node("QuantizeLinear", &[&vi.name, &scale_name, &zp], &[]);
+            qvals.insert(
+                vi.name.clone(),
+                QValue {
+                    name: q,
+                    scale: s_x.scale,
+                    qtype: QType::I8,
+                },
+            );
+        } else {
+            b.input(&vi.name, DType::I8, &vi.shape);
+            qvals.insert(
+                vi.name.clone(),
+                QValue {
+                    name: vi.name.clone(),
+                    scale: s_x.scale,
+                    qtype: QType::I8,
+                },
+            );
+        }
+    }
+
+    // Consumer lookup for activation fusion.
+    let consumers = |value: &str| -> Vec<usize> {
+        g.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.iter().any(|i| i == value))
+            .map(|(i, _)| i)
+            .collect()
+    };
+
+    for &idx in &order {
+        if consumed.contains(&idx) {
+            continue;
+        }
+        let node = &g.nodes[idx];
+        match node.op_type.as_str() {
+            "Gemm" | "MatMul" => {
+                let x = qvals
+                    .get(&node.inputs[0])
+                    .ok_or_else(|| RewriteError::Graph(format!(
+                        "FC input '{}' not quantized (unsupported producer?)",
+                        node.inputs[0]
+                    )))?
+                    .clone();
+                // Weight: fp32 initializer [K,N] (transB=1 -> [N,K]).
+                let w_name = &node.inputs[1];
+                let mut w = g
+                    .initializer(w_name)
+                    .ok_or_else(|| RewriteError::WeightNotInitializer(node.name.clone()))?
+                    .clone();
+                if node.op_type == "Gemm" && node.attr_int("transB").unwrap_or(0) != 0 {
+                    w = transpose2_f32(&w)?;
+                }
+                let bias = if node.op_type == "Gemm" {
+                    node.inputs.get(2).and_then(|n| g.initializer(n)).cloned()
+                } else {
+                    None
+                };
+
+                // Weight scale from its own max (weights are fully known).
+                let mut wc = MaxRange::new();
+                wc.observe(w.as_f32()?);
+                let s_w = SymmetricScale::from_max_abs(wc.threshold(), QType::I8)?;
+                let w_q = s_w.quantize(&w)?;
+                let bias_q = match &bias {
+                    Some(bt) => Some(quantize_bias(bt, s_w.scale, x.scale)?),
+                    None => None,
+                };
+                let acc_scale = s_w.scale * x.scale;
+                let out_name = &node.outputs[0];
+
+                // Activation fusion: single consumer that is an activation?
+                let cons = consumers(out_name);
+                let act_node: Option<&Node> = if cons.len() == 1 {
+                    let n = &g.nodes[cons[0]];
+                    matches!(n.op_type.as_str(), "Relu" | "Tanh" | "Sigmoid").then_some(n)
+                } else {
+                    None
+                };
+
+                let (params, result_scale, result_qtype, fused_value) = match act_node
+                    .map(|n| n.op_type.as_str())
+                {
+                    Some("Relu") => {
+                        let act_out = &act_node.unwrap().outputs[0];
+                        let qtype = if opts.relu_uint8 { QType::U8 } else { QType::I8 };
+                        let s_y =
+                            SymmetricScale::from_max_abs(threshold(act_out)?, qtype)?;
+                        (
+                            FcParams {
+                                weight_q: w_q,
+                                bias_q,
+                                rescale: rescale_op(acc_scale / s_y.scale, opts)?,
+                                activation: ActKind::Relu,
+                                out_qtype: qtype,
+                            },
+                            s_y.scale,
+                            qtype,
+                            Some(act_out.clone()),
+                        )
+                    }
+                    Some("Tanh") => {
+                        let act_out = &act_node.unwrap().outputs[0];
+                        let (in_range, act) = match opts.act_precision {
+                            ActPrecision::Int8 => {
+                                let r = opts.tanh_full_range;
+                                (
+                                    r,
+                                    ActKind::TanhInt8 {
+                                        in_scale: r / 127.0,
+                                        out_scale: 1.0 / 127.0,
+                                    },
+                                )
+                            }
+                            ActPrecision::F16 => {
+                                let r = threshold(out_name)
+                                    .unwrap_or(opts.f16_act_range)
+                                    .min(opts.f16_act_range);
+                                (
+                                    r,
+                                    ActKind::TanhF16 {
+                                        in_scale: r / 127.0,
+                                        out_scale: 1.0 / 127.0,
+                                    },
+                                )
+                            }
+                        };
+                        (
+                            FcParams {
+                                weight_q: w_q,
+                                bias_q,
+                                rescale: rescale_op(acc_scale / (in_range / 127.0), opts)?,
+                                activation: act,
+                                out_qtype: QType::I8,
+                            },
+                            1.0 / 127.0,
+                            QType::I8,
+                            Some(act_out.clone()),
+                        )
+                    }
+                    Some("Sigmoid") => {
+                        let act_out = &act_node.unwrap().outputs[0];
+                        let r = threshold(out_name)
+                            .unwrap_or(opts.f16_act_range)
+                            .min(opts.f16_act_range);
+                        (
+                            FcParams {
+                                weight_q: w_q,
+                                bias_q,
+                                rescale: rescale_op(acc_scale / (r / 127.0), opts)?,
+                                activation: ActKind::SigmoidF16 {
+                                    in_scale: r / 127.0,
+                                    out_scale: 1.0 / 255.0,
+                                },
+                                out_qtype: QType::U8,
+                            },
+                            1.0 / 255.0,
+                            QType::U8,
+                            Some(act_out.clone()),
+                        )
+                    }
+                    _ => {
+                        let s_y =
+                            SymmetricScale::from_max_abs(threshold(out_name)?, QType::I8)?;
+                        (
+                            FcParams {
+                                weight_q: w_q,
+                                bias_q,
+                                rescale: rescale_op(acc_scale / s_y.scale, opts)?,
+                                activation: ActKind::None,
+                                out_qtype: QType::I8,
+                            },
+                            s_y.scale,
+                            QType::I8,
+                            None,
+                        )
+                    }
+                };
+
+                let q_out = emit_fc(&mut b, &x.name, &params, &node.name);
+                let key = fused_value.clone().unwrap_or_else(|| out_name.clone());
+                if let Some(c) = fused_value.and(cons.first().copied()) {
+                    consumed.insert(c);
+                }
+                qvals.insert(
+                    key,
+                    QValue {
+                        name: q_out,
+                        scale: result_scale,
+                        qtype: result_qtype,
+                    },
+                );
+            }
+            "Conv" => {
+                let x = qvals
+                    .get(&node.inputs[0])
+                    .ok_or_else(|| {
+                        RewriteError::Graph(format!("Conv input '{}' not quantized", node.inputs[0]))
+                    })?
+                    .clone();
+                let w = g
+                    .initializer(&node.inputs[1])
+                    .ok_or_else(|| RewriteError::WeightNotInitializer(node.name.clone()))?;
+                let bias = node.inputs.get(2).and_then(|n| g.initializer(n)).cloned();
+                let mut wc = MaxRange::new();
+                wc.observe(w.as_f32()?);
+                let s_w = SymmetricScale::from_max_abs(wc.threshold(), QType::I8)?;
+                let w_q = s_w.quantize(w)?;
+                let bias_q = match &bias {
+                    Some(bt) => Some(quantize_bias(bt, s_w.scale, x.scale)?),
+                    None => None,
+                };
+                let acc_scale = s_w.scale * x.scale;
+                let out_name = &node.outputs[0];
+
+                let cons = consumers(out_name);
+                let relu_node = if cons.len() == 1 && g.nodes[cons[0]].op_type == "Relu" {
+                    Some(cons[0])
+                } else {
+                    None
+                };
+                let (value_key, qtype) = match relu_node {
+                    Some(c) => (
+                        g.nodes[c].outputs[0].clone(),
+                        if opts.relu_uint8 { QType::U8 } else { QType::I8 },
+                    ),
+                    None => (out_name.clone(), QType::I8),
+                };
+                let s_y = SymmetricScale::from_max_abs(threshold(&value_key)?, qtype)?;
+                let attrs = crate::onnx::shape::ConvAttrs::from_node(node);
+                let params = ConvParams {
+                    weight_q: w_q,
+                    bias_q,
+                    rescale: rescale_op(acc_scale / s_y.scale, opts)?,
+                    relu: relu_node.is_some(),
+                    out_qtype: qtype,
+                    strides: attrs.strides,
+                    pads: attrs.pads,
+                };
+                let q_out = emit_conv(&mut b, &x.name, &params, &node.name);
+                if let Some(c) = relu_node {
+                    consumed.insert(c);
+                }
+                qvals.insert(
+                    value_key,
+                    QValue {
+                        name: q_out,
+                        scale: s_y.scale,
+                        qtype,
+                    },
+                );
+            }
+            "MaxPool" => {
+                let x = qvals
+                    .get(&node.inputs[0])
+                    .ok_or_else(|| {
+                        RewriteError::Graph(format!(
+                            "MaxPool input '{}' not quantized",
+                            node.inputs[0]
+                        ))
+                    })?
+                    .clone();
+                // Max is order-preserving: runs directly on the quantized
+                // tensor, same scale out.
+                let attrs: Vec<(&str, Attr)> = node
+                    .attributes
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect();
+                let y = b.node("MaxPool", &[&x.name], &attrs);
+                qvals.insert(
+                    node.outputs[0].clone(),
+                    QValue {
+                        name: y,
+                        scale: x.scale,
+                        qtype: x.qtype,
+                    },
+                );
+            }
+            "Flatten" | "Reshape" => {
+                let x = qvals
+                    .get(&node.inputs[0])
+                    .ok_or_else(|| {
+                        RewriteError::Graph(format!(
+                            "{} input '{}' not quantized",
+                            node.op_type, node.inputs[0]
+                        ))
+                    })?
+                    .clone();
+                let y = if node.op_type == "Flatten" {
+                    let axis = node.attr_int("axis").unwrap_or(1);
+                    b.node("Flatten", &[&x.name], &[("axis", Attr::Int(axis))])
+                } else {
+                    let spec = g
+                        .initializer(&node.inputs[1])
+                        .ok_or_else(|| {
+                            RewriteError::Graph("Reshape spec must be initializer".into())
+                        })?
+                        .clone();
+                    let spec_name = b.init_fresh(&format!("{}_shape", node.name), spec);
+                    b.node("Reshape", &[&x.name, &spec_name], &[])
+                };
+                qvals.insert(
+                    node.outputs[0].clone(),
+                    QValue {
+                        name: y,
+                        scale: x.scale,
+                        qtype: x.qtype,
+                    },
+                );
+            }
+            "Softmax" => {
+                // Classifier tail: dequantize, softmax in f32.
+                let x = qvals
+                    .get(&node.inputs[0])
+                    .ok_or_else(|| {
+                        RewriteError::Graph(format!(
+                            "Softmax input '{}' not quantized",
+                            node.inputs[0]
+                        ))
+                    })?
+                    .clone();
+                let s = b.init_fresh(
+                    &format!("{}_deq_scale", node.name),
+                    Tensor::scalar_f32(x.scale),
+                );
+                let zp = b.init_fresh(
+                    &format!("{}_deq_zp", node.name),
+                    match x.qtype {
+                        QType::I8 => Tensor::scalar_i8(0),
+                        QType::U8 => Tensor::scalar_u8(0),
+                    },
+                );
+                let f = b.node("DequantizeLinear", &[&x.name, &s, &zp], &[]);
+                let axis = node.attr_int("axis").unwrap_or(-1);
+                let y = b.node("Softmax", &[&f], &[("axis", Attr::Int(axis))]);
+                fvals.insert(node.outputs[0].clone(), y);
+            }
+            "Identity" => {
+                if let Some(x) = qvals.get(&node.inputs[0]).cloned() {
+                    qvals.insert(node.outputs[0].clone(), x);
+                } else if let Some(f) = fvals.get(&node.inputs[0]).cloned() {
+                    fvals.insert(node.outputs[0].clone(), f);
+                }
+            }
+            op => {
+                return Err(RewriteError::Unsupported {
+                    op: op.to_string(),
+                    node: node.name.clone(),
+                })
+            }
+        }
+    }
+
+    // Wire graph outputs.
+    for out in &g.outputs {
+        if let Some(f) = fvals.get(&out.name) {
+            // Already f32 (softmax tail).
+            rename_output(&mut b, f, &out.name, DType::F32, &out.shape);
+        } else if let Some(q) = qvals.get(&out.name).cloned() {
+            if opts.float_io {
+                let s = b.init_fresh(
+                    &format!("{}_out_scale", out.name),
+                    Tensor::scalar_f32(q.scale),
+                );
+                let zp = b.init_fresh(
+                    &format!("{}_out_zp", out.name),
+                    match q.qtype {
+                        QType::I8 => Tensor::scalar_i8(0),
+                        QType::U8 => Tensor::scalar_u8(0),
+                    },
+                );
+                let f = b.node("DequantizeLinear", &[&q.name, &s, &zp], &[]);
+                rename_output(&mut b, &f, &out.name, DType::F32, &out.shape);
+            } else {
+                rename_output(&mut b, &q.name, &out.name, q.qtype.dtype(), &out.shape);
+            }
+        } else {
+            return Err(RewriteError::Graph(format!(
+                "graph output '{}' was not produced by the quantized graph",
+                out.name
+            )));
+        }
+    }
+
+    let mut m = b.finish_model();
+    m.doc = format!(
+        "pre-quantized from '{}' (strategy={}, {})",
+        g.name,
+        calibration.strategy_name,
+        if opts.two_mul { "2-Mul rescale" } else { "1-Mul rescale" },
+    );
+    m.metadata
+        .push(("quantizer".into(), "pqdl-rewrite".into()));
+    Ok(m)
+}
+
+/// Give the final value the declared output name via Identity (keeps
+/// external naming identical to the fp32 model).
+fn rename_output(
+    b: &mut GraphBuilder,
+    value: &str,
+    out_name: &str,
+    dtype: DType,
+    shape: &[Dim],
+) {
+    b.node_named("Identity", &[value], &[out_name], &[]);
+    b.output(out_name, dtype, shape);
+}
+
+fn transpose2_f32(t: &Tensor) -> Result<Tensor, RewriteError> {
+    let (r, c) = (t.shape()[0], t.shape()[1]);
+    let src = t.as_f32()?;
+    let mut dst = vec![0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            dst[j * r + i] = src[i * c + j];
+        }
+    }
+    Ok(Tensor::from_f32(&[c, r], dst)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::Session;
+    use crate::onnx::{batched, check_model, GraphBuilder};
+    use crate::rewrite::calibrate::calibrate;
+
+    /// Small fp32 MLP: Gemm -> Relu -> Gemm -> Softmax.
+    fn fp32_mlp() -> Model {
+        let mut b = GraphBuilder::new("mlp");
+        b.input("x", DType::F32, &batched(&[4]));
+        b.init(
+            "w0",
+            Tensor::from_f32(&[4, 3], (0..12).map(|i| (i as f32 - 6.0) / 6.0).collect()).unwrap(),
+        );
+        b.init("b0", Tensor::from_f32(&[3], vec![0.1, -0.2, 0.3]).unwrap());
+        let h = b.node("Gemm", &["x", "w0", "b0"], &[]);
+        let r = b.node("Relu", &[&h], &[]);
+        b.init(
+            "w1",
+            Tensor::from_f32(&[3, 2], vec![0.5, -0.5, 0.25, 0.25, -0.125, 0.75]).unwrap(),
+        );
+        b.init("b1", Tensor::from_f32(&[2], vec![0.05, -0.05]).unwrap());
+        let o = b.node("Gemm", &[&r, "w1", "b1"], &[]);
+        let sm = b.node("Softmax", &[&o], &[("axis", Attr::Int(-1))]);
+        b.output(&sm, DType::F32, &batched(&[2]));
+        b.finish_model()
+    }
+
+    fn calib_batches() -> Vec<Vec<(String, Tensor)>> {
+        (0..8)
+            .map(|i| {
+                let v: Vec<f32> = (0..4).map(|j| ((i * 4 + j) as f32 / 16.0) - 1.0).collect();
+                vec![("x".to_string(), Tensor::from_f32(&[1, 4], v).unwrap())]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantized_mlp_validates_and_tracks_fp32() {
+        let fp32 = fp32_mlp();
+        let sess = Session::new(fp32.clone()).unwrap();
+        let cal = calibrate(&sess, &calib_batches(), CalibStrategy::MaxRange).unwrap();
+        let q = quantize_model(&fp32, &cal, &QuantizeOptions::default()).unwrap();
+        check_model(&q).unwrap();
+        // All weights must now be int8/int32 initializers; no fp32 weight
+        // tensors larger than scalars remain.
+        for (name, t) in &q.graph.initializers {
+            if t.dtype() == DType::F32 {
+                assert!(t.numel() == 1, "fp32 initializer '{name}' is not a scalar");
+            }
+        }
+        let qsess = Session::new(q).unwrap();
+        let x = Tensor::from_f32(&[1, 4], vec![0.5, -0.5, 0.25, -1.0]).unwrap();
+        let yf = sess.run(&[("x", x.clone())]).unwrap();
+        let yq = qsess.run(&[("x", x)]).unwrap();
+        let f = yf[0].as_f32().unwrap();
+        let qv = yq[0].as_f32().unwrap();
+        for (a, b) in f.iter().zip(qv) {
+            assert!((a - b).abs() < 0.1, "fp32 {a} vs int8 {b}");
+        }
+        // Probabilities still sum to 1.
+        assert!((qv.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn one_mul_mode() {
+        let fp32 = fp32_mlp();
+        let sess = Session::new(fp32.clone()).unwrap();
+        let cal = calibrate(&sess, &calib_batches(), CalibStrategy::MaxRange).unwrap();
+        let opts = QuantizeOptions {
+            two_mul: false,
+            ..Default::default()
+        };
+        let q = quantize_model(&fp32, &cal, &opts).unwrap();
+        check_model(&q).unwrap();
+        // 1-Mul rescale: exactly one Mul per FC layer.
+        let muls = q.graph.nodes.iter().filter(|n| n.op_type == "Mul").count();
+        assert_eq!(muls, 2);
+    }
+
+    #[test]
+    fn two_mul_mode_has_two_muls_per_layer() {
+        let fp32 = fp32_mlp();
+        let sess = Session::new(fp32.clone()).unwrap();
+        let cal = calibrate(&sess, &calib_batches(), CalibStrategy::MaxRange).unwrap();
+        let q = quantize_model(&fp32, &cal, &QuantizeOptions::default()).unwrap();
+        let muls = q.graph.nodes.iter().filter(|n| n.op_type == "Mul").count();
+        assert_eq!(muls, 4);
+    }
+
+    #[test]
+    fn int8_io_mode_matches_figures() {
+        let fp32 = fp32_mlp();
+        let sess = Session::new(fp32.clone()).unwrap();
+        let cal = calibrate(&sess, &calib_batches(), CalibStrategy::MaxRange).unwrap();
+        let opts = QuantizeOptions {
+            float_io: false,
+            ..Default::default()
+        };
+        // Softmax tail forces an f32 output; strip it for raw-int8 mode.
+        let mut fp32_logits = fp32.clone();
+        let softmax_idx = fp32_logits
+            .graph
+            .nodes
+            .iter()
+            .position(|n| n.op_type == "Softmax")
+            .unwrap();
+        let logits_name = fp32_logits.graph.nodes[softmax_idx].inputs[0].clone();
+        fp32_logits.graph.nodes.remove(softmax_idx);
+        fp32_logits.graph.outputs[0].name = logits_name;
+        let q = quantize_model(&fp32_logits, &cal, &opts).unwrap();
+        check_model(&q).unwrap();
+        assert_eq!(q.graph.runtime_inputs()[0].dtype, DType::I8);
+        assert_eq!(q.graph.outputs[0].dtype, DType::I8);
+    }
+
+    #[test]
+    fn missing_calibration_is_error() {
+        let fp32 = fp32_mlp();
+        let cal = Calibration::default();
+        assert!(matches!(
+            quantize_model(&fp32, &cal, &QuantizeOptions::default()),
+            Err(RewriteError::MissingCalibration(_))
+        ));
+    }
+}

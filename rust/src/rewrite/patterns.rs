@@ -1,0 +1,490 @@
+//! Emitters for the paper's Figure 1–6 operator patterns.
+//!
+//! Each function appends one pre-quantized layer to a [`GraphBuilder`]
+//! using **only standard ONNX operators**, embedding every quantization
+//! parameter as an initializer (paper goals 1 & 3):
+//!
+//! * Fig. 1 — FC, rescale as 2 Mul (`Quant_scale` int-as-FLOAT, `Quant_shift` 2^-N)
+//! * Fig. 2 — FC + ReLU, rescale as 1 Mul
+//! * Fig. 3 — Conv, rescale as 1 Mul
+//! * Fig. 4 — FC + int8 Tanh (Dequantize → Tanh f32 → Quantize)
+//! * Fig. 5 — FC + fp16 Tanh (… → Cast f16 → Tanh → Cast f32 → …)
+//! * Fig. 6 — FC + fp16 Sigmoid, uint8 output
+
+use crate::onnx::ir::Attr;
+use crate::onnx::GraphBuilder;
+use crate::quant::{QType, RescaleDecomposition};
+use crate::tensor::Tensor;
+
+/// How the rescale multiplier is codified (§3.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RescaleOp {
+    /// One `Mul` by the fp32 multiplier; the integer/shift split is left
+    /// to the hardware tool chain.
+    OneMul(f32),
+    /// Two `Mul`s: integer `Quant_scale` (stored as FLOAT) then
+    /// `Quant_shift` = 2^-N — the fully hardware-explicit form.
+    TwoMul(RescaleDecomposition),
+}
+
+impl RescaleOp {
+    /// The effective multiplier this op applies.
+    pub fn multiplier(&self) -> f64 {
+        match self {
+            RescaleOp::OneMul(m) => *m as f64,
+            RescaleOp::TwoMul(d) => d.multiplier(),
+        }
+    }
+}
+
+/// Activation wired into the pattern.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActKind {
+    /// Fig. 1 / Fig. 3: no activation.
+    None,
+    /// Fig. 2: ReLU on the rescaled f32 value before requantization.
+    Relu,
+    /// Fig. 4: int8 tanh approximation — requantize to int8 mapping the
+    /// full tanh input range, Dequantize, Tanh in f32, Quantize with
+    /// `out_scale` mapping [-1,1] onto int8.
+    TanhInt8 { in_scale: f32, out_scale: f32 },
+    /// Fig. 5: tanh evaluated in genuine fp16 on a narrow input range.
+    TanhF16 { in_scale: f32, out_scale: f32 },
+    /// Fig. 6: sigmoid in fp16; output is uint8 (sigmoid >= 0).
+    SigmoidF16 { in_scale: f32, out_scale: f32 },
+}
+
+/// Parameters of one pre-quantized fully-connected layer.
+#[derive(Clone, Debug)]
+pub struct FcParams {
+    /// Quantized weights, i8 `[K, N]`.
+    pub weight_q: Tensor,
+    /// Quantized bias, i32 `[N]` at scale `scale_W * scale_X` (Eq. 6).
+    pub bias_q: Option<Tensor>,
+    pub rescale: RescaleOp,
+    pub activation: ActKind,
+    /// Output integer type of the requantization stage.
+    pub out_qtype: QType,
+}
+
+/// Parameters of one pre-quantized convolution layer (Fig. 3).
+#[derive(Clone, Debug)]
+pub struct ConvParams {
+    /// Quantized kernel, i8 `[M, C, kH, kW]`.
+    pub weight_q: Tensor,
+    /// Quantized bias, i32 `[M]`.
+    pub bias_q: Option<Tensor>,
+    pub rescale: RescaleOp,
+    /// ReLU folded after rescale (a Fig. 2-style variant of Fig. 3).
+    pub relu: bool,
+    pub out_qtype: QType,
+    pub strides: [usize; 2],
+    pub pads: [usize; 4],
+}
+
+fn zp_init(b: &mut GraphBuilder, prefix: &str, qtype: QType) -> String {
+    let t = match qtype {
+        QType::I8 => Tensor::scalar_i8(0),
+        QType::U8 => Tensor::scalar_u8(0),
+    };
+    b.init_fresh(&format!("{prefix}_zero_point"), t)
+}
+
+/// Emit the rescale Mul(s) (§3.1) on a f32 value; returns the rescaled
+/// f32 value name.
+fn emit_rescale(b: &mut GraphBuilder, x: &str, rescale: &RescaleOp, prefix: &str) -> String {
+    match rescale {
+        RescaleOp::OneMul(m) => {
+            let s = b.init_fresh(&format!("{prefix}_quant_multiplier"), Tensor::scalar_f32(*m));
+            b.node("Mul", &[x, &s], &[])
+        }
+        RescaleOp::TwoMul(d) => {
+            let qs = b.init_fresh(
+                &format!("{prefix}_quant_scale"),
+                Tensor::scalar_f32(d.quant_scale_f32()),
+            );
+            let qh = b.init_fresh(
+                &format!("{prefix}_quant_shift"),
+                Tensor::scalar_f32(d.quant_shift_f32()),
+            );
+            let m1 = b.node("Mul", &[x, &qs], &[]);
+            b.node("Mul", &[&m1, &qh], &[])
+        }
+    }
+}
+
+/// Rounding + clipping stage: `QuantizeLinear(scale=1, zero_point=0)`;
+/// the zero-point dtype selects int8 vs uint8 (§3.1).
+fn emit_round_clip(b: &mut GraphBuilder, x: &str, qtype: QType, prefix: &str) -> String {
+    let one = b.init_fresh(&format!("{prefix}_unit_scale"), Tensor::scalar_f32(1.0));
+    let zp = zp_init(b, prefix, qtype);
+    b.node("QuantizeLinear", &[x, &one, &zp], &[])
+}
+
+/// Emit the activation tail shared by Figs. 4–6: Dequantize -> (optional
+/// f16 casts) -> Tanh/Sigmoid -> Quantize(out_scale).
+fn emit_float_activation(
+    b: &mut GraphBuilder,
+    q8: &str,
+    op: &str,
+    f16: bool,
+    in_scale: f32,
+    out_scale: f32,
+    out_qtype: QType,
+    prefix: &str,
+) -> String {
+    let xs = b.init_fresh(&format!("{prefix}_x_scale"), Tensor::scalar_f32(in_scale));
+    let xzp = zp_init(b, &format!("{prefix}_x"), QType::I8);
+    let deq = b.node("DequantizeLinear", &[q8, &xs, &xzp], &[]);
+    let act_in = if f16 {
+        b.node("Cast", &[&deq], &[("to", Attr::Str("FLOAT16".into()))])
+    } else {
+        deq
+    };
+    let act = b.node(op, &[&act_in], &[]);
+    let act_f32 = if f16 {
+        b.node("Cast", &[&act], &[("to", Attr::Str("FLOAT".into()))])
+    } else {
+        act
+    };
+    let ys = b.init_fresh(&format!("{prefix}_y_scale"), Tensor::scalar_f32(out_scale));
+    let yzp = zp_init(b, &format!("{prefix}_y"), out_qtype);
+    b.node("QuantizeLinear", &[&act_f32, &ys, &yzp], &[])
+}
+
+/// Append one pre-quantized fully-connected layer (Figs. 1/2/4/5/6
+/// depending on `params`); returns the quantized output value name.
+pub fn emit_fc(b: &mut GraphBuilder, x: &str, params: &FcParams, prefix: &str) -> String {
+    let w = b.init_fresh(&format!("{prefix}_weight_q"), params.weight_q.clone());
+    // Eq. 5: Y_intermediate = W_q · X_q + B_q, all integer.
+    let mut acc = b.node("MatMulInteger", &[x, &w], &[]);
+    if let Some(bias) = &params.bias_q {
+        let bias_name = b.init_fresh(&format!("{prefix}_bias_q"), bias.clone());
+        acc = b.node("Add", &[&acc, &bias_name], &[]);
+    }
+    // Cast INT32 -> FLOAT for the Mul-codified rescale.
+    let f = b.node("Cast", &[&acc], &[("to", Attr::Str("FLOAT".into()))]);
+    let rescaled = emit_rescale(b, &f, &params.rescale, prefix);
+
+    match params.activation {
+        ActKind::None => emit_round_clip(b, &rescaled, params.out_qtype, prefix),
+        ActKind::Relu => {
+            // Fig. 2: ReLU on the rescaled f32 value, then round+clip.
+            // (Symmetric scheme: ReLU commutes with the zero-point-free
+            // quantizer, so this is equivalent to int-domain ReLU.)
+            let r = b.node("Relu", &[&rescaled], &[]);
+            emit_round_clip(b, &r, params.out_qtype, prefix)
+        }
+        ActKind::TanhInt8 {
+            in_scale,
+            out_scale,
+        } => {
+            let q8 = emit_round_clip(b, &rescaled, QType::I8, prefix);
+            emit_float_activation(
+                b, &q8, "Tanh", false, in_scale, out_scale, params.out_qtype, prefix,
+            )
+        }
+        ActKind::TanhF16 {
+            in_scale,
+            out_scale,
+        } => {
+            let q8 = emit_round_clip(b, &rescaled, QType::I8, prefix);
+            emit_float_activation(
+                b, &q8, "Tanh", true, in_scale, out_scale, params.out_qtype, prefix,
+            )
+        }
+        ActKind::SigmoidF16 {
+            in_scale,
+            out_scale,
+        } => {
+            let q8 = emit_round_clip(b, &rescaled, QType::I8, prefix);
+            // Fig. 6: sigmoid output is always positive -> uint8.
+            emit_float_activation(
+                b, &q8, "Sigmoid", true, in_scale, out_scale, QType::U8, prefix,
+            )
+        }
+    }
+}
+
+/// Append one pre-quantized convolution layer (Fig. 3); returns the
+/// quantized output value name.
+pub fn emit_conv(b: &mut GraphBuilder, x: &str, params: &ConvParams, prefix: &str) -> String {
+    let w = b.init_fresh(&format!("{prefix}_kernel_q"), params.weight_q.clone());
+    let m = params.weight_q.shape()[0];
+    let mut acc = b.node(
+        "ConvInteger",
+        &[x, &w],
+        &[
+            (
+                "strides",
+                Attr::Ints(params.strides.iter().map(|&s| s as i64).collect()),
+            ),
+            (
+                "pads",
+                Attr::Ints(params.pads.iter().map(|&p| p as i64).collect()),
+            ),
+        ],
+    );
+    if let Some(bias) = &params.bias_q {
+        // Bias [M] broadcast over NCHW needs shape [1, M, 1, 1].
+        let b4 = bias.clone().reshape(&[1, m, 1, 1]).expect("bias reshape");
+        let bias_name = b.init_fresh(&format!("{prefix}_bias_q"), b4);
+        acc = b.node("Add", &[&acc, &bias_name], &[]);
+    }
+    let f = b.node("Cast", &[&acc], &[("to", Attr::Str("FLOAT".into()))]);
+    let rescaled = emit_rescale(b, &f, &params.rescale, prefix);
+    let pre_q = if params.relu {
+        b.node("Relu", &[&rescaled], &[])
+    } else {
+        rescaled
+    };
+    emit_round_clip(b, &pre_q, params.out_qtype, prefix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::Session;
+    use crate::onnx::{batched, check_model, fixed_dims};
+    use crate::quant::decompose;
+    use crate::tensor::DType;
+
+    fn fc_params(rescale: RescaleOp, act: ActKind, out_qtype: QType) -> FcParams {
+        FcParams {
+            weight_q: Tensor::from_i8(&[4, 2], vec![1, -1, 2, -2, 3, -3, 4, -4]).unwrap(),
+            bias_q: Some(Tensor::from_i32(&[2], vec![10, -10]).unwrap()),
+            rescale,
+            activation: act,
+            out_qtype,
+        }
+    }
+
+    fn build_fc_model(params: &FcParams, out_dtype: DType) -> crate::onnx::Model {
+        let mut b = GraphBuilder::new("fc_pattern");
+        b.input("x", DType::I8, &batched(&[4]));
+        let y = emit_fc(&mut b, "x", params, "l0");
+        b.output(&y, out_dtype, &batched(&[2]));
+        b.finish_model()
+    }
+
+    #[test]
+    fn fig1_two_mul_structure_and_numerics() {
+        let d = decompose(0.25, 31).unwrap();
+        let params = fc_params(RescaleOp::TwoMul(d), ActKind::None, QType::I8);
+        let m = build_fc_model(&params, DType::I8);
+        check_model(&m).unwrap();
+        // Structure: MatMulInteger, Add, Cast, Mul, Mul, QuantizeLinear.
+        let ops: Vec<&str> = m.graph.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(
+            ops,
+            vec!["MatMulInteger", "Add", "Cast", "Mul", "Mul", "QuantizeLinear"]
+        );
+        let sess = Session::new(m).unwrap();
+        let x = Tensor::from_i8(&[1, 4], vec![10, 10, 10, 10]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        // acc = [100, -100] + bias = [110, -110]; * 0.25 = [27.5, -27.5]
+        // round-half-even -> [28, -28].
+        assert_eq!(y[0].as_i8().unwrap(), &[28, -28]);
+    }
+
+    #[test]
+    fn fig2_relu_one_mul() {
+        let params = fc_params(RescaleOp::OneMul(0.25), ActKind::Relu, QType::U8);
+        let m = build_fc_model(&params, DType::U8);
+        check_model(&m).unwrap();
+        let ops: Vec<&str> = m.graph.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(
+            ops,
+            vec!["MatMulInteger", "Add", "Cast", "Mul", "Relu", "QuantizeLinear"]
+        );
+        let sess = Session::new(m).unwrap();
+        let x = Tensor::from_i8(&[1, 4], vec![10, 10, 10, 10]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        // [110, -110] * 0.25 = [27.5, -27.5]; ReLU -> [27.5, 0]; u8 -> [28, 0].
+        assert_eq!(y[0].as_u8().unwrap(), &[28, 0]);
+    }
+
+    #[test]
+    fn fig3_conv_pattern() {
+        let params = ConvParams {
+            weight_q: Tensor::from_i8(&[1, 1, 2, 2], vec![1, 1, 1, 1]).unwrap(),
+            bias_q: Some(Tensor::from_i32(&[1], vec![4]).unwrap()),
+            rescale: RescaleOp::OneMul(0.5),
+            relu: false,
+            out_qtype: QType::I8,
+            strides: [1, 1],
+            pads: [0, 0, 0, 0],
+        };
+        let mut b = GraphBuilder::new("fig3");
+        b.input("x", DType::I8, &batched(&[1, 3, 3]));
+        let y = emit_conv(&mut b, "x", &params, "c0");
+        b.output(&y, DType::I8, &batched(&[1, 2, 2]));
+        let m = b.finish_model();
+        check_model(&m).unwrap();
+        let ops: Vec<&str> = m.graph.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(
+            ops,
+            vec!["ConvInteger", "Add", "Cast", "Mul", "QuantizeLinear"]
+        );
+        let sess = Session::new(m).unwrap();
+        let x = Tensor::from_i8(&[1, 1, 3, 3], vec![1, 2, 3, 4, 5, 6, 7, 8, 9]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        // window sums [12,16,24,28] + 4 = [16,20,28,32]; * 0.5 = [8,10,14,16].
+        assert_eq!(y[0].as_i8().unwrap(), &[8, 10, 14, 16]);
+    }
+
+    #[test]
+    fn fig4_tanh_int8_structure() {
+        let d = decompose(4.0 / 127.0 / 1.0, 31).unwrap(); // maps acc 1:1 onto tanh range
+        let params = fc_params(
+            RescaleOp::TwoMul(d),
+            ActKind::TanhInt8 {
+                in_scale: 4.0 / 127.0,
+                out_scale: 1.0 / 127.0,
+            },
+            QType::I8,
+        );
+        let m = build_fc_model(&params, DType::I8);
+        check_model(&m).unwrap();
+        let ops: Vec<&str> = m.graph.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(
+            ops,
+            vec![
+                "MatMulInteger",
+                "Add",
+                "Cast",
+                "Mul",
+                "Mul",
+                "QuantizeLinear",
+                "DequantizeLinear",
+                "Tanh",
+                "QuantizeLinear"
+            ]
+        );
+    }
+
+    #[test]
+    fn fig5_tanh_f16_structure_and_range() {
+        let d = decompose(2.0 / 127.0, 31).unwrap();
+        let params = fc_params(
+            RescaleOp::TwoMul(d),
+            ActKind::TanhF16 {
+                in_scale: 2.0 / 127.0,
+                out_scale: 1.0 / 127.0,
+            },
+            QType::I8,
+        );
+        let m = build_fc_model(&params, DType::I8);
+        check_model(&m).unwrap();
+        let ops: Vec<&str> = m.graph.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(
+            ops,
+            vec![
+                "MatMulInteger",
+                "Add",
+                "Cast",
+                "Mul",
+                "Mul",
+                "QuantizeLinear",
+                "DequantizeLinear",
+                "Cast",
+                "Tanh",
+                "Cast",
+                "QuantizeLinear"
+            ]
+        );
+        // The two casts around Tanh are f32->f16 and f16->f32.
+        let casts: Vec<&str> = m
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| n.op_type == "Cast")
+            .filter_map(|n| n.attr_str("to"))
+            .collect();
+        assert_eq!(casts, vec!["FLOAT", "FLOAT16", "FLOAT"]);
+    }
+
+    #[test]
+    fn fig5_tanh_f16_numerics() {
+        // Multiplier sized to map the saturated accumulator (|acc| <=
+        // 127*10 + 10 = 1280) onto the int8 range: m = 127/1280; tanh is
+        // then evaluated at q*2/127, i.e. +-2.0 at saturation.
+        let d = decompose(127.0 / 1280.0, 31).unwrap();
+        let params = fc_params(
+            RescaleOp::TwoMul(d),
+            ActKind::TanhF16 {
+                in_scale: 2.0 / 127.0,
+                out_scale: 1.0 / 127.0,
+            },
+            QType::I8,
+        );
+        let m = build_fc_model(&params, DType::I8);
+        let sess = Session::new(m).unwrap();
+        let x = Tensor::from_i8(&[1, 4], vec![127, 127, 127, 127]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        // acc = [1280, -1280] -> q8 [127, -127] -> tanh(+-2.0) = +-0.96403
+        // (in f16) -> round(0.964*127) = +-122.
+        assert_eq!(y[0].as_i8().unwrap(), &[122, -122]);
+    }
+
+    #[test]
+    fn fig6_sigmoid_f16_uint8_output() {
+        let params = fc_params(
+            RescaleOp::OneMul(8.0 / 127.0),
+            ActKind::SigmoidF16 {
+                in_scale: 8.0 / 127.0,
+                out_scale: 1.0 / 255.0,
+            },
+            QType::U8, // requested, and enforced regardless
+        );
+        let m = build_fc_model(&params, DType::U8);
+        check_model(&m).unwrap();
+        let sess = Session::new(m).unwrap();
+        // Zero input -> acc = bias [10, -10] -> small positive/negative
+        // -> sigmoid around 0.5.
+        let x = Tensor::from_i8(&[1, 4], vec![0, 0, 0, 0]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        let out = y[0].as_u8().unwrap();
+        assert!(out[0] > 127 && out[0] < 160, "sigmoid(+small)={}", out[0]);
+        assert!(out[1] < 128 && out[1] > 95, "sigmoid(-small)={}", out[1]);
+        // Saturated positive: acc 1290 * 8/127 clamps to 127 -> sigmoid
+        // input 8.0 -> 0.99966 -> ~255; negative column symmetric -> ~0.
+        let x = Tensor::from_i8(&[1, 4], vec![127, 127, 127, 127]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        assert!(y[0].as_u8().unwrap()[0] >= 250, "{}", y[0].as_u8().unwrap()[0]);
+        assert!(y[0].as_u8().unwrap()[1] <= 5, "{}", y[0].as_u8().unwrap()[1]);
+    }
+
+    #[test]
+    fn patterns_serialize_round_trip() {
+        let d = decompose(1.0 / 3.0, 31).unwrap();
+        let params = fc_params(RescaleOp::TwoMul(d), ActKind::None, QType::I8);
+        let m = build_fc_model(&params, DType::I8);
+        let text = crate::onnx::model_to_json(&m);
+        let back = crate::onnx::model_from_json(&text).unwrap();
+        assert_eq!(m, back);
+        // And the deserialized model still validates + runs.
+        let sess = Session::new(back).unwrap();
+        let x = Tensor::from_i8(&[1, 4], vec![3, 3, 3, 3]).unwrap();
+        sess.run(&[("x", x)]).unwrap();
+    }
+
+    #[test]
+    fn fc_no_bias() {
+        let params = FcParams {
+            weight_q: Tensor::from_i8(&[2, 2], vec![1, 0, 0, 1]).unwrap(),
+            bias_q: None,
+            rescale: RescaleOp::OneMul(1.0),
+            activation: ActKind::None,
+            out_qtype: QType::I8,
+        };
+        let mut b = GraphBuilder::new("nobias");
+        b.input("x", DType::I8, &fixed_dims(&[1, 2]));
+        let y = emit_fc(&mut b, "x", &params, "l0");
+        b.output(&y, DType::I8, &fixed_dims(&[1, 2]));
+        let sess = Session::new(b.finish_model()).unwrap();
+        let x = Tensor::from_i8(&[1, 2], vec![5, -7]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        assert_eq!(y[0].as_i8().unwrap(), &[5, -7]);
+    }
+}

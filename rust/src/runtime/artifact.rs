@@ -1,0 +1,185 @@
+//! Manifest-driven artifact registry.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) maps
+//! each Figure variant to per-batch HLO files plus a golden output for
+//! the canonical input — letting the Rust side verify the whole
+//! python→HLO→PJRT round trip without invoking Python at runtime.
+
+use super::pjrt::{CompiledHlo, PjrtEngine};
+use crate::onnx::json::Json;
+use crate::tensor::{DType, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled (variant, batch) executable with its manifest metadata.
+pub struct ArtifactEntry {
+    pub variant: String,
+    pub batch: usize,
+    pub input_dtype: DType,
+    pub input_shape: Vec<usize>,
+    pub output_dtype: DType,
+    pub output_shape: Vec<usize>,
+    /// Expected output for the canonical seed-42 input (from Python).
+    pub golden_output: Vec<i32>,
+    pub compiled: CompiledHlo,
+}
+
+impl ArtifactEntry {
+    /// Execute on an input tensor (shape must match the artifact batch).
+    pub fn run(&self, input: &Tensor) -> Result<Tensor> {
+        if input.shape() != self.input_shape.as_slice() {
+            bail!(
+                "artifact {}_b{} expects shape {:?}, got {:?}",
+                self.variant,
+                self.batch,
+                self.input_shape,
+                input.shape()
+            );
+        }
+        self.compiled.run1(input, self.output_dtype)
+    }
+}
+
+/// All artifacts for all variants, keyed by (variant, batch).
+pub struct ArtifactRegistry {
+    entries: HashMap<(String, usize), ArtifactEntry>,
+    dir: PathBuf,
+}
+
+fn parse_np_dtype(s: &str) -> Result<DType> {
+    Ok(match s {
+        "int8" => DType::I8,
+        "uint8" => DType::U8,
+        "int32" => DType::I32,
+        "float32" => DType::F32,
+        other => bail!("unknown numpy dtype '{other}' in manifest"),
+    })
+}
+
+impl ArtifactRegistry {
+    /// Load + compile every artifact listed in `dir/manifest.json`.
+    pub fn load(engine: &PjrtEngine, dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let variants = j
+            .get("variants")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?;
+
+        let mut entries = HashMap::new();
+        for (variant, batches) in variants {
+            for e in batches.as_arr().unwrap_or(&[]) {
+                let get_usize = |k: &str| {
+                    e.get(k)
+                        .and_then(Json::to_usize)
+                        .ok_or_else(|| anyhow!("manifest: missing {k}"))
+                };
+                let get_str = |k: &str| {
+                    e.get(k)
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("manifest: missing {k}"))
+                };
+                let shape_of = |k: &str| -> Result<Vec<usize>> {
+                    e.get(k)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("manifest: missing {k}"))?
+                        .iter()
+                        .map(|d| d.to_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect()
+                };
+                let batch = get_usize("batch")?;
+                let file = get_str("file")?;
+                let golden_output: Vec<i32> = e
+                    .get("golden_output")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("manifest: missing golden_output"))?
+                    .iter()
+                    .map(|v| {
+                        v.to_i64()
+                            .and_then(|x| i32::try_from(x).ok())
+                            .ok_or_else(|| anyhow!("bad golden value"))
+                    })
+                    .collect::<Result<_>>()?;
+                let compiled = engine.compile_hlo_text(&dir.join(file))?;
+                entries.insert(
+                    (variant.clone(), batch),
+                    ArtifactEntry {
+                        variant: variant.clone(),
+                        batch,
+                        input_dtype: parse_np_dtype(get_str("input_dtype")?)?,
+                        input_shape: shape_of("input_shape")?,
+                        output_dtype: parse_np_dtype(get_str("output_dtype")?)?,
+                        output_shape: shape_of("output_shape")?,
+                        golden_output,
+                        compiled,
+                    },
+                );
+            }
+        }
+        Ok(ArtifactRegistry {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, variant: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.entries.get(&(variant.to_string(), batch))
+    }
+
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .entries
+            .keys()
+            .map(|(name, _)| name.as_str())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Batch sizes available for a variant, ascending.
+    pub fn batches(&self, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .keys()
+            .filter(|(name, _)| name == variant)
+            .map(|(_, b)| *b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Verify every artifact reproduces its Python golden output on the
+    /// canonical input. Returns (variant, batch, max_lsb_diff) rows.
+    pub fn verify_golden(&self) -> Result<Vec<(String, usize, i32)>> {
+        let mut rows = Vec::new();
+        for ((variant, batch), entry) in &self.entries {
+            let fig = crate::figures::Figure::ALL
+                .iter()
+                .find(|f| f.name() == variant)
+                .ok_or_else(|| anyhow!("unknown variant {variant}"))?;
+            let x = fig.input(*batch, 42);
+            let y = entry.run(&x)?;
+            let got = y.as_quantized_i32()?;
+            if got.len() != entry.golden_output.len() {
+                bail!("{variant}_b{batch}: output len mismatch");
+            }
+            let max_diff = got
+                .iter()
+                .zip(&entry.golden_output)
+                .map(|(a, b)| (a - b).abs())
+                .max()
+                .unwrap_or(0);
+            rows.push((variant.clone(), *batch, max_diff));
+        }
+        rows.sort();
+        Ok(rows)
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime bridge to the AOT-compiled JAX/Pallas artifacts via PJRT.
+//!
+//! Python never runs here: [`pjrt::PjrtEngine`] loads HLO text files
+//! produced at build time by `python/compile/aot.py`, compiles them on
+//! the XLA CPU client and executes them from the Rust hot path.
+//! [`artifact::ArtifactRegistry`] resolves (variant, batch) pairs from
+//! the build manifest and carries golden outputs for round-trip
+//! verification.
+
+pub mod artifact;
+pub mod pjrt;
+pub mod service;
+
+pub use artifact::{ArtifactEntry, ArtifactRegistry};
+pub use pjrt::{literal_to_tensor, tensor_to_literal, CompiledHlo, PjrtEngine};
+pub use service::PjrtService;

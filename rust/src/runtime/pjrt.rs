@@ -1,0 +1,105 @@
+//! PJRT execution engine: loads the HLO-text artifacts the Python AOT
+//! pipeline produced and runs them through the XLA CPU client — the
+//! third "inference environment" of the paper's goal 3 (after the
+//! interpreter and the hardware simulator).
+//!
+//! The interchange format is HLO **text**: jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::tensor::{DType, Tensor, TensorData};
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Wrapper around one compiled HLO module.
+pub struct CompiledHlo {
+    exe: PjRtLoadedExecutable,
+}
+
+/// The PJRT engine: a CPU client plus compile/execute plumbing.
+pub struct PjrtEngine {
+    client: PjRtClient,
+}
+
+impl PjrtEngine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtEngine> {
+        Ok(PjrtEngine {
+            client: PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it for this client.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<CompiledHlo> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledHlo { exe })
+    }
+}
+
+impl CompiledHlo {
+    /// Execute with a single input tensor; the artifact returns a
+    /// 1-tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run1(&self, input: &Tensor, out_dtype: DType) -> Result<Tensor> {
+        let lit = tensor_to_literal(input)?;
+        let result = self.exe.execute::<Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        literal_to_tensor(&out, out_dtype)
+    }
+}
+
+/// Convert one of our tensors to an XLA literal (exact byte copy).
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let (ty, bytes): (ElementType, Vec<u8>) = match t.data() {
+        TensorData::I8(v) => (
+            ElementType::S8,
+            v.iter().map(|&x| x as u8).collect(),
+        ),
+        TensorData::U8(v) => (ElementType::U8, v.clone()),
+        TensorData::I32(v) => (
+            ElementType::S32,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        TensorData::I64(v) => (
+            ElementType::S64,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        TensorData::F32(v) => (
+            ElementType::F32,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        TensorData::F16(v) => (
+            ElementType::F16,
+            v.iter().flat_map(|x| x.0.to_le_bytes()).collect(),
+        ),
+        TensorData::Bool(_) => bail!("bool tensors not supported by the PJRT bridge"),
+    };
+    Literal::create_from_shape_and_untyped_data(ty, t.shape(), &bytes)
+        .map_err(|e| anyhow!("creating literal: {e}"))
+}
+
+/// Convert an XLA literal back to one of our tensors.
+pub fn literal_to_tensor(lit: &Literal, dtype: DType) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match dtype {
+        DType::I8 => TensorData::I8(lit.to_vec::<i8>()?),
+        DType::U8 => TensorData::U8(lit.to_vec::<u8>()?),
+        DType::I32 => TensorData::I32(lit.to_vec::<i32>()?),
+        DType::I64 => TensorData::I64(lit.to_vec::<i64>()?),
+        DType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+        d => bail!("unsupported output dtype {d}"),
+    };
+    Ok(Tensor::new(dims, data)?)
+}

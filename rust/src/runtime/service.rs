@@ -1,0 +1,147 @@
+//! Thread-confined PJRT service.
+//!
+//! The `xla` crate's client/executable handles are not `Send`/`Sync`
+//! (Rc-based internals over the PJRT C API), so the whole PJRT stack is
+//! confined to one service thread; the rest of the system talks to it
+//! over channels. This also matches how a real deployment pins an
+//! accelerator context to a device thread.
+
+use super::artifact::ArtifactRegistry;
+use super::pjrt::PjrtEngine;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+
+enum Job {
+    Run {
+        variant: String,
+        batch: usize,
+        input: Tensor,
+        reply: mpsc::Sender<Result<Tensor, String>>,
+    },
+    VerifyGolden {
+        reply: mpsc::Sender<Result<Vec<(String, usize, i32)>, String>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the PJRT service thread. Clone-cheap and `Send + Sync`.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: Arc<Mutex<mpsc::Sender<Job>>>,
+    /// variant -> available artifact batch sizes (ascending).
+    batches: Arc<HashMap<String, Vec<usize>>>,
+}
+
+impl PjrtService {
+    /// Spawn the service thread; loads + compiles all artifacts in `dir`
+    /// before returning (fails fast on a broken artifact set).
+    pub fn spawn(dir: PathBuf) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<HashMap<String, Vec<usize>>, String>>();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let setup = (|| -> Result<(PjrtEngine, ArtifactRegistry)> {
+                    let engine = PjrtEngine::cpu()?;
+                    let reg = ArtifactRegistry::load(&engine, &dir)?;
+                    Ok((engine, reg))
+                })();
+                let (engine, reg) = match setup {
+                    Ok(pair) => {
+                        let mut batches = HashMap::new();
+                        for v in pair.1.variants() {
+                            batches.insert(v.to_string(), pair.1.batches(v));
+                        }
+                        let _ = init_tx.send(Ok(batches));
+                        pair
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                let _engine = engine; // keep the client alive
+                for job in rx {
+                    match job {
+                        Job::Run {
+                            variant,
+                            batch,
+                            input,
+                            reply,
+                        } => {
+                            let result = reg
+                                .get(&variant, batch)
+                                .ok_or_else(|| format!("no artifact {variant}_b{batch}"))
+                                .and_then(|e| e.run(&input).map_err(|e| e.to_string()));
+                            let _ = reply.send(result);
+                        }
+                        Job::VerifyGolden { reply } => {
+                            let _ = reply.send(reg.verify_golden().map_err(|e| e.to_string()));
+                        }
+                        Job::Shutdown => return,
+                    }
+                }
+            })
+            .expect("spawning pjrt service");
+
+        let batches = init_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt service died during init"))?
+            .map_err(|e| anyhow!("pjrt init: {e}"))?;
+        Ok(PjrtService {
+            tx: Arc::new(Mutex::new(tx)),
+            batches: Arc::new(batches),
+        })
+    }
+
+    /// Variants available in the artifact set.
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.batches.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Artifact batch sizes for a variant (ascending).
+    pub fn batches(&self, variant: &str) -> Option<&[usize]> {
+        self.batches.get(variant).map(Vec::as_slice)
+    }
+
+    /// Execute an exact-batch artifact.
+    pub fn run_exact(&self, variant: &str, batch: usize, input: Tensor) -> Result<Tensor> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Run {
+                variant: variant.to_string(),
+                batch,
+                input,
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("pjrt service dropped the request"))?
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Golden verification across all artifacts.
+    pub fn verify_golden(&self) -> Result<Vec<(String, usize, i32)>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::VerifyGolden { reply })
+            .map_err(|_| anyhow!("pjrt service is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("pjrt service dropped the request"))?
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Stop the service thread.
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+    }
+}

@@ -1,0 +1,231 @@
+//! Bit-exact IEEE 754 binary16 ("half") implemented in software.
+//!
+//! The `half` crate is not available in this offline environment, and the
+//! paper's Figure 5/6 patterns require genuine fp16 activation arithmetic
+//! (`Cast FLOAT -> FLOAT16`, `Tanh FLOAT16 -> FLOAT16`, ...). This module
+//! implements conversions that are bit-exact with hardware f16 (round to
+//! nearest, ties to even; subnormals; inf/nan preserved) so the Rust
+//! interpreter, the hardware simulator and the XLA/PJRT artifact all see
+//! the same numbers.
+
+/// IEEE 754 binary16 value stored as its raw bit pattern.
+///
+/// Arithmetic is performed by converting to f32, operating, and rounding
+/// back — which is exactly what commodity fp16 hardware units (and XLA's
+/// CPU backend) do for the transcendental ops used in the paper.
+#[derive(Clone, Copy, PartialEq, Eq, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite f16 = 65504.
+    pub const MAX: F16 = F16(0x7BFF);
+
+    /// Convert from f32 with round-to-nearest-even (the IEEE default mode,
+    /// matching x86 `vcvtps2ph` and XLA's `convert` lowering).
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    /// Exact widening conversion to f32 (every f16 is representable).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    /// tanh evaluated in f32 then rounded to f16 — correctly rounded for
+    /// all f16 inputs (f32 has more than twice the precision of f16, so
+    /// double rounding cannot change the result here).
+    #[inline]
+    pub fn tanh(self) -> F16 {
+        F16::from_f32(self.to_f32().tanh())
+    }
+
+    /// Logistic sigmoid evaluated in f32 then rounded to f16.
+    #[inline]
+    pub fn sigmoid(self) -> F16 {
+        let x = self.to_f32();
+        F16::from_f32(1.0 / (1.0 + (-x).exp()))
+    }
+}
+
+impl std::fmt::Debug for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "F16({} = {:#06x})", self.to_f32(), self.0)
+    }
+}
+
+impl std::fmt::Display for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+/// f32 -> f16 bit conversion, round-to-nearest-even.
+///
+/// Handles normals, subnormals, overflow to infinity, and NaN payload
+/// preservation (quietened, top payload bits kept) identically to the
+/// x86/ARM hardware converters.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf or NaN.
+        return if mant == 0 {
+            sign | 0x7C00
+        } else {
+            // Quiet NaN, keep top 9 payload bits, ensure non-zero mantissa.
+            let payload = (mant >> 13) as u16;
+            sign | 0x7C00 | 0x0200 | payload
+        };
+    }
+
+    // Unbiased exponent; f16 bias is 15, f32 bias is 127.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        // Overflows f16 range -> infinity.
+        return sign | 0x7C00;
+    }
+    if unbiased >= -14 {
+        // Normal f16. 23-bit mantissa -> 10 bits: shift out 13 bits with
+        // round-to-nearest-even on the removed bits.
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let mant10 = (mant >> 13) as u16;
+        let rem = mant & 0x1FFF; // 13 discarded bits
+        let mut out = sign | half_exp | mant10;
+        if rem > 0x1000 || (rem == 0x1000 && (mant10 & 1) == 1) {
+            out = out.wrapping_add(1); // carries into exponent correctly
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16: implicit leading 1 becomes explicit, shifted right.
+        let full = mant | 0x0080_0000; // 24-bit significand
+        let shift = (-14 - unbiased) + 13; // total right shift, 14..=24
+        let mant_sub = (full >> shift) as u16;
+        let rem_mask = (1u32 << shift) - 1;
+        let rem = full & rem_mask;
+        let half_point = 1u32 << (shift - 1);
+        let mut out = sign | mant_sub;
+        if rem > half_point || (rem == half_point && (mant_sub & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    // Underflows to (signed) zero.
+    sign
+}
+
+/// f16 -> f32 bit conversion (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+
+    let bits = if exp == 0x1F {
+        // Inf / NaN.
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // +-0
+        } else {
+            // Subnormal: normalize.
+            let lz = mant.leading_zeros() - 22; // zeros above bit 9
+            let mant_norm = (mant << (lz + 1)) & 0x03FF;
+            let exp_f32 = 127 - 15 - lz;
+            sign | (exp_f32 << 23) | (mant_norm << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_exact_values() {
+        // All f16 bit patterns must survive f16 -> f32 -> f16 unchanged
+        // (modulo NaN payload equivalence).
+        for bits in 0u16..=0xFFFF {
+            let h = F16(bits);
+            let rt = F16::from_f32(h.to_f32());
+            if h.is_nan() {
+                assert!(rt.is_nan(), "NaN lost at {bits:#06x}");
+            } else {
+                assert_eq!(h.0, rt.0, "round-trip failed at {bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_constants() {
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(65536.0).0, 0x7C00); // overflow -> inf
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7C00);
+        assert_eq!(F16::from_f32(f32::NEG_INFINITY).0, 0xFC00);
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        // Smallest positive subnormal 2^-24.
+        assert_eq!(F16::from_f32(5.960_464_5e-8).0, 0x0001);
+        // Below half the smallest subnormal -> 0.
+        assert_eq!(F16::from_f32(2.0e-8).0, 0x0000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10); ties-to-even keeps 1.0.
+        let halfway = 1.0 + 2.0_f32.powi(-11);
+        assert_eq!(F16::from_f32(halfway).0, 0x3C00);
+        // Slightly above rounds up.
+        let above = 1.0 + 2.0_f32.powi(-11) + 2.0_f32.powi(-20);
+        assert_eq!(F16::from_f32(above).0, 0x3C01);
+        // 1 + 3*2^-11 is halfway between 0x3C01 and 0x3C02 -> even 0x3C02.
+        let halfway2 = 1.0 + 3.0 * 2.0_f32.powi(-11);
+        assert_eq!(F16::from_f32(halfway2).0, 0x3C02);
+    }
+
+    #[test]
+    fn subnormal_conversion() {
+        // 2^-15 is subnormal in f16: 0x0200.
+        assert_eq!(F16::from_f32(2.0_f32.powi(-15)).0, 0x0200);
+        assert_eq!(F16(0x0200).to_f32(), 2.0_f32.powi(-15));
+        // 2^-24 round trips.
+        assert_eq!(F16(0x0001).to_f32(), 2.0_f32.powi(-24));
+    }
+
+    #[test]
+    fn tanh_sigmoid_sane() {
+        assert_eq!(F16::from_f32(0.0).tanh().0, 0);
+        let t = F16::from_f32(1.0).tanh().to_f32();
+        assert!((t - 0.7615942).abs() < 1e-3, "tanh(1)={t}");
+        let s = F16::from_f32(0.0).sigmoid().to_f32();
+        assert!((s - 0.5).abs() < 1e-3);
+        // Saturation: tanh of large input is exactly 1.0 in f16.
+        assert_eq!(F16::from_f32(20.0).tanh().0, 0x3C00);
+    }
+}

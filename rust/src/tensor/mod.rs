@@ -1,0 +1,549 @@
+//! Dtyped dense tensors — the numeric substrate for the whole stack.
+//!
+//! Tensors are row-major contiguous. The dtype set is exactly what the
+//! paper's patterns require: `f32` (rescale path), `f16` (Fig. 5/6
+//! activation path), `i8`/`u8` (quantized tensors), `i32` (accumulators
+//! and biases), plus `i64`/`bool` for shape-carrying ONNX operators.
+
+pub mod f16;
+
+pub use f16::F16;
+
+use thiserror::Error;
+
+/// Element type of a [`Tensor`]. Mirrors the ONNX `TensorProto.DataType`
+/// subset the paper's patterns use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I8,
+    U8,
+    I32,
+    I64,
+    Bool,
+}
+
+impl DType {
+    /// Size of one element in bytes (used by the hwsim memory-traffic
+    /// model and the PJRT literal conversion).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::I8 | DType::U8 | DType::Bool => 1,
+            DType::I64 => 8,
+        }
+    }
+
+    /// ONNX textual name, used in the model serialization.
+    pub fn onnx_name(self) -> &'static str {
+        match self {
+            DType::F32 => "FLOAT",
+            DType::F16 => "FLOAT16",
+            DType::I8 => "INT8",
+            DType::U8 => "UINT8",
+            DType::I32 => "INT32",
+            DType::I64 => "INT64",
+            DType::Bool => "BOOL",
+        }
+    }
+
+    /// Parse the ONNX textual name.
+    pub fn from_onnx_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "FLOAT" => DType::F32,
+            "FLOAT16" => DType::F16,
+            "INT8" => DType::I8,
+            "UINT8" => DType::U8,
+            "INT32" => DType::I32,
+            "INT64" => DType::I64,
+            "BOOL" => DType::Bool,
+            _ => return None,
+        })
+    }
+
+    pub fn is_quantized_int(self) -> bool {
+        matches!(self, DType::I8 | DType::U8)
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F16)
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.onnx_name())
+    }
+}
+
+/// Typed storage behind a [`Tensor`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    F16(Vec<F16>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Bool(Vec<bool>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::F16(_) => DType::F16,
+            TensorData::I8(_) => DType::I8,
+            TensorData::U8(_) => DType::U8,
+            TensorData::I32(_) => DType::I32,
+            TensorData::I64(_) => DType::I64,
+            TensorData::Bool(_) => DType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::F16(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::I64(v) => v.len(),
+            TensorData::Bool(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Errors raised by tensor construction and access.
+#[derive(Error, Debug)]
+pub enum TensorError {
+    #[error("shape {shape:?} implies {expected} elements but data has {got}")]
+    ShapeMismatch {
+        shape: Vec<usize>,
+        expected: usize,
+        got: usize,
+    },
+    #[error("dtype mismatch: expected {expected}, got {got}")]
+    DTypeMismatch { expected: DType, got: DType },
+    #[error("cannot reshape {numel} elements to shape {shape:?}")]
+    BadReshape { numel: usize, shape: Vec<usize> },
+    #[error("incompatible shapes for broadcast: {a:?} vs {b:?}")]
+    BroadcastMismatch { a: Vec<usize>, b: Vec<usize> },
+}
+
+/// A dense row-major tensor: shape + typed storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+impl Tensor {
+    /// Construct from shape + typed data, validating element count.
+    pub fn new(shape: Vec<usize>, data: TensorData) -> Result<Tensor, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != data.len() {
+            return Err(TensorError::ShapeMismatch {
+                shape,
+                expected,
+                got: data.len(),
+            });
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn from_f32(shape: &[usize], v: Vec<f32>) -> Result<Tensor, TensorError> {
+        Tensor::new(shape.to_vec(), TensorData::F32(v))
+    }
+    pub fn from_f16(shape: &[usize], v: Vec<F16>) -> Result<Tensor, TensorError> {
+        Tensor::new(shape.to_vec(), TensorData::F16(v))
+    }
+    pub fn from_i8(shape: &[usize], v: Vec<i8>) -> Result<Tensor, TensorError> {
+        Tensor::new(shape.to_vec(), TensorData::I8(v))
+    }
+    pub fn from_u8(shape: &[usize], v: Vec<u8>) -> Result<Tensor, TensorError> {
+        Tensor::new(shape.to_vec(), TensorData::U8(v))
+    }
+    pub fn from_i32(shape: &[usize], v: Vec<i32>) -> Result<Tensor, TensorError> {
+        Tensor::new(shape.to_vec(), TensorData::I32(v))
+    }
+    pub fn from_i64(shape: &[usize], v: Vec<i64>) -> Result<Tensor, TensorError> {
+        Tensor::new(shape.to_vec(), TensorData::I64(v))
+    }
+
+    /// Rank-0 f32 scalar (ONNX scalar initializers such as `Quant_scale`).
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: TensorData::F32(vec![v]),
+        }
+    }
+    /// Rank-0 i8 scalar (e.g. QuantizeLinear `zero_point`).
+    pub fn scalar_i8(v: i8) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: TensorData::I8(vec![v]),
+        }
+    }
+    /// Rank-0 u8 scalar.
+    pub fn scalar_u8(v: u8) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: TensorData::U8(vec![v]),
+        }
+    }
+
+    /// All-zeros tensor of the given dtype/shape.
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => TensorData::F32(vec![0.0; n]),
+            DType::F16 => TensorData::F16(vec![F16::ZERO; n]),
+            DType::I8 => TensorData::I8(vec![0; n]),
+            DType::U8 => TensorData::U8(vec![0; n]),
+            DType::I32 => TensorData::I32(vec![0; n]),
+            DType::I64 => TensorData::I64(vec![0; n]),
+            DType::Bool => TensorData::Bool(vec![false; n]),
+        };
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn data(&self) -> &TensorData {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut TensorData {
+        &mut self.data
+    }
+
+    /// Bytes of payload (hwsim memory-traffic model).
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    /// Reshape in place to a compatible shape.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor, TensorError> {
+        let n: usize = shape.iter().product();
+        if n != self.numel() {
+            return Err(TensorError::BadReshape {
+                numel: self.numel(),
+                shape: shape.to_vec(),
+            });
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    // --- typed slice accessors -------------------------------------------
+
+    pub fn as_f32(&self) -> Result<&[f32], TensorError> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::F32,
+                got: d.dtype(),
+            }),
+        }
+    }
+    pub fn as_f16(&self) -> Result<&[F16], TensorError> {
+        match &self.data {
+            TensorData::F16(v) => Ok(v),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::F16,
+                got: d.dtype(),
+            }),
+        }
+    }
+    pub fn as_i8(&self) -> Result<&[i8], TensorError> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::I8,
+                got: d.dtype(),
+            }),
+        }
+    }
+    pub fn as_u8(&self) -> Result<&[u8], TensorError> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::U8,
+                got: d.dtype(),
+            }),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32], TensorError> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::I32,
+                got: d.dtype(),
+            }),
+        }
+    }
+    pub fn as_i64(&self) -> Result<&[i64], TensorError> {
+        match &self.data {
+            TensorData::I64(v) => Ok(v),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::I64,
+                got: d.dtype(),
+            }),
+        }
+    }
+    pub fn as_bool(&self) -> Result<&[bool], TensorError> {
+        match &self.data {
+            TensorData::Bool(v) => Ok(v),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::Bool,
+                got: d.dtype(),
+            }),
+        }
+    }
+
+    /// Read the quantized integer values widened to i32, regardless of
+    /// whether storage is i8 or u8 (the paper's patterns allow either for
+    /// layer inputs).
+    pub fn as_quantized_i32(&self) -> Result<Vec<i32>, TensorError> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v.iter().map(|&x| x as i32).collect()),
+            TensorData::U8(v) => Ok(v.iter().map(|&x| x as i32).collect()),
+            TensorData::I32(v) => Ok(v.clone()),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::I8,
+                got: d.dtype(),
+            }),
+        }
+    }
+
+    /// Convert every element to f32 (lossless for all our dtypes).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.data {
+            TensorData::F32(v) => v.clone(),
+            TensorData::F16(v) => v.iter().map(|x| x.to_f32()).collect(),
+            TensorData::I8(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::U8(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::Bool(v) => v.iter().map(|&x| x as u8 as f32).collect(),
+        }
+    }
+
+    /// ONNX `Cast` semantics: float->int truncates toward zero, float->f16
+    /// rounds to nearest-even, int widenings are exact. Saturation is NOT
+    /// applied (ONNX Cast wraps/UBs on overflow; the paper's patterns only
+    /// cast i32->f32 and f32<->f16 where this cannot occur).
+    pub fn cast(&self, to: DType) -> Tensor {
+        if to == self.dtype() {
+            return self.clone();
+        }
+        let n = self.numel();
+        let data = match to {
+            DType::F32 => TensorData::F32(self.to_f32_vec()),
+            DType::F16 => {
+                TensorData::F16(self.to_f32_vec().iter().map(|&x| F16::from_f32(x)).collect())
+            }
+            DType::I8 => TensorData::I8(match &self.data {
+                TensorData::U8(v) => v.iter().map(|&x| x as i8).collect(),
+                TensorData::I32(v) => v.iter().map(|&x| x as i8).collect(),
+                TensorData::I64(v) => v.iter().map(|&x| x as i8).collect(),
+                _ => self.to_f32_vec().iter().map(|&x| x as i8).collect(),
+            }),
+            DType::U8 => TensorData::U8(match &self.data {
+                TensorData::I8(v) => v.iter().map(|&x| x as u8).collect(),
+                TensorData::I32(v) => v.iter().map(|&x| x as u8).collect(),
+                TensorData::I64(v) => v.iter().map(|&x| x as u8).collect(),
+                _ => self.to_f32_vec().iter().map(|&x| x as u8).collect(),
+            }),
+            DType::I32 => TensorData::I32(match &self.data {
+                TensorData::I8(v) => v.iter().map(|&x| x as i32).collect(),
+                TensorData::U8(v) => v.iter().map(|&x| x as i32).collect(),
+                TensorData::I64(v) => v.iter().map(|&x| x as i32).collect(),
+                _ => self.to_f32_vec().iter().map(|&x| x as i32).collect(),
+            }),
+            DType::I64 => TensorData::I64(match &self.data {
+                TensorData::I8(v) => v.iter().map(|&x| x as i64).collect(),
+                TensorData::U8(v) => v.iter().map(|&x| x as i64).collect(),
+                TensorData::I32(v) => v.iter().map(|&x| x as i64).collect(),
+                _ => self.to_f32_vec().iter().map(|&x| x as i64).collect(),
+            }),
+            DType::Bool => {
+                TensorData::Bool(self.to_f32_vec().iter().map(|&x| x != 0.0).collect())
+            }
+        };
+        debug_assert_eq!(data.len(), n);
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+}
+
+/// Compute the broadcast result shape per ONNX/NumPy multidirectional
+/// broadcasting rules.
+pub fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>, TensorError> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            return Err(TensorError::BroadcastMismatch {
+                a: a.to_vec(),
+                b: b.to_vec(),
+            });
+        };
+    }
+    Ok(out)
+}
+
+/// Row-major strides of a shape (in elements).
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+/// Iterator mapping a flat output index to the flat index into a
+/// broadcast operand. Precomputes per-axis strides once; used by the
+/// elementwise kernels so broadcasting has no per-element allocation.
+pub struct BroadcastIndexer {
+    out_strides: Vec<usize>,
+    op_strides: Vec<usize>, // 0 on broadcast axes
+}
+
+impl BroadcastIndexer {
+    pub fn new(out_shape: &[usize], op_shape: &[usize]) -> BroadcastIndexer {
+        let rank = out_shape.len();
+        let out_strides = strides_of(out_shape);
+        let op_full: Vec<usize> = std::iter::repeat(1)
+            .take(rank - op_shape.len())
+            .chain(op_shape.iter().copied())
+            .collect();
+        let op_nat = strides_of(&op_full);
+        let op_strides = (0..rank)
+            .map(|i| if op_full[i] == 1 { 0 } else { op_nat[i] })
+            .collect();
+        BroadcastIndexer {
+            out_strides,
+            op_strides,
+        }
+    }
+
+    /// Flat index into the operand for flat output index `idx`.
+    #[inline]
+    pub fn map(&self, mut idx: usize) -> usize {
+        let mut off = 0usize;
+        for (os, ps) in self.out_strides.iter().zip(&self.op_strides) {
+            let coord = idx / os;
+            idx %= os;
+            off += coord * ps;
+        }
+        off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(t.as_i8().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_f32(&[2, 2], vec![1., 2., 3.]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let t = Tensor::from_i32(&[4], vec![1, 2, 3, 4]).unwrap();
+        let t = t.reshape(&[2, 2]).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert!(t.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn cast_i32_to_f32_exact() {
+        let t = Tensor::from_i32(&[3], vec![-128, 0, 16777216]).unwrap();
+        let f = t.cast(DType::F32);
+        assert_eq!(f.as_f32().unwrap(), &[-128.0, 0.0, 16777216.0]);
+    }
+
+    #[test]
+    fn cast_f32_to_f16_rounds() {
+        let t = Tensor::from_f32(&[2], vec![1.0, 65504.0]).unwrap();
+        let h = t.cast(DType::F16);
+        assert_eq!(h.as_f16().unwrap()[0].0, 0x3C00);
+        assert_eq!(h.as_f16().unwrap()[1].0, 0x7BFF);
+    }
+
+    #[test]
+    fn broadcast_shapes() {
+        assert_eq!(broadcast_shape(&[2, 3], &[3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shape(&[2, 1], &[1, 4]).unwrap(), vec![2, 4]);
+        assert_eq!(broadcast_shape(&[], &[5]).unwrap(), vec![5]);
+        assert!(broadcast_shape(&[2, 3], &[4]).is_err());
+    }
+
+    #[test]
+    fn broadcast_indexer_bias_row() {
+        // out [2,3], operand [3] (bias broadcast over rows).
+        let ix = BroadcastIndexer::new(&[2, 3], &[3]);
+        let got: Vec<usize> = (0..6).map(|i| ix.map(i)).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn broadcast_indexer_scalar() {
+        let ix = BroadcastIndexer::new(&[2, 2], &[]);
+        assert!((0..4).all(|i| ix.map(i) == 0));
+    }
+
+    #[test]
+    fn quantized_widen() {
+        let t = Tensor::from_u8(&[3], vec![0, 128, 255]).unwrap();
+        assert_eq!(t.as_quantized_i32().unwrap(), vec![0, 128, 255]);
+        let t = Tensor::from_i8(&[2], vec![-128, 127]).unwrap();
+        assert_eq!(t.as_quantized_i32().unwrap(), vec![-128, 127]);
+    }
+}

@@ -1,0 +1,397 @@
+//! Small fp32 CNN (Conv → ReLU → MaxPool → FC) with manual backprop —
+//! the trained-model source for the paper's Figure 3 (ConvInteger)
+//! pattern. Sized for the 8×8 synthetic-digits images.
+
+use super::data::Dataset;
+use super::rng::Rng;
+use crate::onnx::ir::Attr;
+use crate::onnx::{batched, GraphBuilder, Model};
+use crate::tensor::{DType, Tensor};
+
+/// Conv(1→F, 3×3, pad 1) + ReLU + MaxPool(2×2) + Dense(F·16 → classes).
+#[derive(Clone, Debug)]
+pub struct Cnn {
+    pub filters: usize,
+    pub classes: usize,
+    /// Kernels `[F, 1, 3, 3]`.
+    pub conv_w: Vec<f32>,
+    pub conv_b: Vec<f32>,
+    /// Dense weights `[F*16, classes]`.
+    pub fc_w: Vec<f32>,
+    pub fc_b: Vec<f32>,
+    vw_conv: Vec<f32>,
+    vb_conv: Vec<f32>,
+    vw_fc: Vec<f32>,
+    vb_fc: Vec<f32>,
+}
+
+const H: usize = 8;
+const PH: usize = 4; // pooled
+
+struct Forward {
+    conv_act: Vec<f32>,   // post-ReLU [n, F, 8, 8]
+    pool_idx: Vec<usize>, // argmax flat index into conv_act, [n, F, 4, 4]
+    pooled: Vec<f32>,     // [n, F*16]
+    logits: Vec<f32>,     // [n, classes]
+}
+
+impl Cnn {
+    pub fn new(filters: usize, classes: usize, seed: u64) -> Cnn {
+        let mut rng = Rng::new(seed);
+        let k = 9;
+        let conv_scale = (2.0 / k as f32).sqrt();
+        let fc_in = filters * PH * PH;
+        let fc_scale = (2.0 / fc_in as f32).sqrt();
+        Cnn {
+            filters,
+            classes,
+            conv_w: (0..filters * k).map(|_| conv_scale * rng.normal()).collect(),
+            conv_b: vec![0.0; filters],
+            fc_w: (0..fc_in * classes).map(|_| fc_scale * rng.normal()).collect(),
+            fc_b: vec![0.0; classes],
+            vw_conv: vec![0.0; filters * k],
+            vb_conv: vec![0.0; filters],
+            vw_fc: vec![0.0; fc_in * classes],
+            vb_fc: vec![0.0; classes],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.conv_w.len() + self.conv_b.len() + self.fc_w.len() + self.fc_b.len()
+    }
+
+    fn forward(&self, x: &[f32], n: usize) -> Forward {
+        let f = self.filters;
+        let mut conv_act = vec![0f32; n * f * H * H];
+        // 3x3 pad-1 convolution over single-channel 8x8.
+        for b in 0..n {
+            let img = &x[b * H * H..(b + 1) * H * H];
+            for fi in 0..f {
+                let kw = &self.conv_w[fi * 9..(fi + 1) * 9];
+                let out = &mut conv_act[(b * f + fi) * H * H..(b * f + fi + 1) * H * H];
+                for y in 0..H {
+                    for xx in 0..H {
+                        let mut acc = self.conv_b[fi];
+                        for ky in 0..3usize {
+                            let iy = y as isize + ky as isize - 1;
+                            if !(0..H as isize).contains(&iy) {
+                                continue;
+                            }
+                            for kx in 0..3usize {
+                                let ix = xx as isize + kx as isize - 1;
+                                if !(0..H as isize).contains(&ix) {
+                                    continue;
+                                }
+                                acc += kw[ky * 3 + kx] * img[iy as usize * H + ix as usize];
+                            }
+                        }
+                        out[y * H + xx] = acc.max(0.0); // ReLU fused
+                    }
+                }
+            }
+        }
+        // 2x2 max pool with argmax bookkeeping.
+        let mut pool_idx = vec![0usize; n * f * PH * PH];
+        let mut pooled = vec![0f32; n * f * PH * PH];
+        for b in 0..n {
+            for fi in 0..f {
+                let plane_base = (b * f + fi) * H * H;
+                for py in 0..PH {
+                    for px in 0..PH {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_i = 0usize;
+                        for dy in 0..2usize {
+                            for dx in 0..2usize {
+                                let idx = plane_base + (py * 2 + dy) * H + px * 2 + dx;
+                                if conv_act[idx] > best {
+                                    best = conv_act[idx];
+                                    best_i = idx;
+                                }
+                            }
+                        }
+                        let o = (b * f + fi) * PH * PH + py * PH + px;
+                        pooled[o] = best;
+                        pool_idx[o] = best_i;
+                    }
+                }
+            }
+        }
+        // Dense head.
+        let fc_in = f * PH * PH;
+        let mut logits = vec![0f32; n * self.classes];
+        for b in 0..n {
+            let row = &pooled[b * fc_in..(b + 1) * fc_in];
+            let out = &mut logits[b * self.classes..(b + 1) * self.classes];
+            out.copy_from_slice(&self.fc_b);
+            for (k, &a) in row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let wrow = &self.fc_w[k * self.classes..(k + 1) * self.classes];
+                for (o, &w) in out.iter_mut().zip(wrow) {
+                    *o += a * w;
+                }
+            }
+        }
+        Forward {
+            conv_act,
+            pool_idx,
+            pooled,
+            logits,
+        }
+    }
+
+    pub fn predict(&self, x: &[f32], n: usize) -> Vec<usize> {
+        let fwd = self.forward(x, n);
+        fwd.logits
+            .chunks(self.classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+
+    /// One SGD-with-momentum step; returns mean CE loss.
+    pub fn train_batch(&mut self, x: &[f32], y: &[usize], lr: f32, momentum: f32) -> f32 {
+        let n = y.len();
+        let f = self.filters;
+        let fc_in = f * PH * PH;
+        let fwd = self.forward(x, n);
+
+        // Softmax CE delta.
+        let mut delta = vec![0f32; n * self.classes];
+        let mut loss = 0f32;
+        for i in 0..n {
+            let row = &fwd.logits[i * self.classes..(i + 1) * self.classes];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for c in 0..self.classes {
+                let p = exps[c] / sum;
+                delta[i * self.classes + c] = (p - if c == y[i] { 1.0 } else { 0.0 }) / n as f32;
+                if c == y[i] {
+                    loss -= p.max(1e-12).ln();
+                }
+            }
+        }
+        loss /= n as f32;
+
+        // FC grads.
+        let mut dw_fc = vec![0f32; fc_in * self.classes];
+        let mut db_fc = vec![0f32; self.classes];
+        let mut grad_pool = vec![0f32; n * fc_in];
+        for i in 0..n {
+            let g_row = &delta[i * self.classes..(i + 1) * self.classes];
+            let a_row = &fwd.pooled[i * fc_in..(i + 1) * fc_in];
+            for (d, &g) in db_fc.iter_mut().zip(g_row) {
+                *d += g;
+            }
+            for (k, &a) in a_row.iter().enumerate() {
+                let wrow = &self.fc_w[k * self.classes..(k + 1) * self.classes];
+                let dst = &mut dw_fc[k * self.classes..(k + 1) * self.classes];
+                let mut gsum = 0f32;
+                for ((dv, &g), &w) in dst.iter_mut().zip(g_row).zip(wrow) {
+                    *dv += a * g;
+                    gsum += w * g;
+                }
+                grad_pool[i * fc_in + k] = gsum;
+            }
+        }
+
+        // Un-pool (route gradient to argmax), then ReLU mask, then conv grads.
+        let mut grad_conv = vec![0f32; n * f * H * H];
+        for (o, &src) in fwd.pool_idx.iter().enumerate() {
+            grad_conv[src] += grad_pool[o];
+        }
+        for (g, &a) in grad_conv.iter_mut().zip(&fwd.conv_act) {
+            if a <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        let mut dw_conv = vec![0f32; f * 9];
+        let mut db_conv = vec![0f32; f];
+        for b in 0..n {
+            let img = &x[b * H * H..(b + 1) * H * H];
+            for fi in 0..f {
+                let gplane = &grad_conv[(b * f + fi) * H * H..(b * f + fi + 1) * H * H];
+                for y in 0..H {
+                    for xx in 0..H {
+                        let g = gplane[y * H + xx];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        db_conv[fi] += g;
+                        for ky in 0..3usize {
+                            let iy = y as isize + ky as isize - 1;
+                            if !(0..H as isize).contains(&iy) {
+                                continue;
+                            }
+                            for kx in 0..3usize {
+                                let ix = xx as isize + kx as isize - 1;
+                                if !(0..H as isize).contains(&ix) {
+                                    continue;
+                                }
+                                dw_conv[fi * 9 + ky * 3 + kx] +=
+                                    g * img[iy as usize * H + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Momentum updates.
+        let upd = |w: &mut [f32], v: &mut [f32], d: &[f32]| {
+            for ((w, v), d) in w.iter_mut().zip(v).zip(d) {
+                *v = momentum * *v - lr * d;
+                *w += *v;
+            }
+        };
+        upd(&mut self.fc_w, &mut self.vw_fc, &dw_fc);
+        upd(&mut self.fc_b, &mut self.vb_fc, &db_fc);
+        upd(&mut self.conv_w, &mut self.vw_conv, &dw_conv);
+        upd(&mut self.conv_b, &mut self.vb_conv, &db_conv);
+        loss
+    }
+
+    /// Export as fp32 ONNX: Conv(+bias) → Relu → MaxPool → Flatten →
+    /// Gemm → Softmax, input `[N, 1, 8, 8]`.
+    pub fn to_model(&self, name: &str) -> Model {
+        let mut b = GraphBuilder::new(name);
+        b.input("x", DType::F32, &batched(&[1, H, H]));
+        let w = b.init(
+            "conv_w",
+            Tensor::from_f32(&[self.filters, 1, 3, 3], self.conv_w.clone()).unwrap(),
+        );
+        let cb = b.init(
+            "conv_b",
+            Tensor::from_f32(&[self.filters], self.conv_b.clone()).unwrap(),
+        );
+        let conv = b.node(
+            "Conv",
+            &["x", &w, &cb],
+            &[
+                ("pads", Attr::Ints(vec![1, 1, 1, 1])),
+                ("strides", Attr::Ints(vec![1, 1])),
+            ],
+        );
+        let relu = b.node("Relu", &[&conv], &[]);
+        let pool = b.node(
+            "MaxPool",
+            &[&relu],
+            &[
+                ("kernel_shape", Attr::Ints(vec![2, 2])),
+                ("strides", Attr::Ints(vec![2, 2])),
+            ],
+        );
+        let flat = b.node("Flatten", &[&pool], &[("axis", Attr::Int(1))]);
+        let fw = b.init(
+            "fc_w",
+            Tensor::from_f32(&[self.filters * PH * PH, self.classes], self.fc_w.clone())
+                .unwrap(),
+        );
+        let fb = b.init(
+            "fc_b",
+            Tensor::from_f32(&[self.classes], self.fc_b.clone()).unwrap(),
+        );
+        let logits = b.node("Gemm", &[&flat, &fw, &fb], &[]);
+        let sm = b.node("Softmax", &[&logits], &[("axis", Attr::Int(-1))]);
+        b.output(&sm, DType::F32, &batched(&[self.classes]));
+        b.finish_model()
+    }
+}
+
+/// Train on a dataset of 8×8 images; returns per-epoch loss.
+pub fn train_cnn(
+    cnn: &mut Cnn,
+    data: &Dataset,
+    epochs: usize,
+    batch: usize,
+    lr: f32,
+    momentum: f32,
+    seed: u64,
+) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut losses = Vec::with_capacity(epochs);
+    for _ in 0..epochs {
+        let perm = rng.permutation(data.len());
+        let mut epoch_loss = 0f32;
+        let mut batches = 0usize;
+        for chunk in perm.chunks(batch) {
+            let mut x = Vec::with_capacity(chunk.len() * data.dim);
+            let mut y = Vec::with_capacity(chunk.len());
+            for &i in chunk {
+                let (xi, yi) = data.sample(i);
+                x.extend_from_slice(xi);
+                y.push(yi);
+            }
+            epoch_loss += cnn.train_batch(&x, &y, lr, momentum);
+            batches += 1;
+        }
+        losses.push(epoch_loss / batches.max(1) as f32);
+    }
+    losses
+}
+
+/// Accuracy of the CNN on a dataset.
+pub fn cnn_accuracy(cnn: &Cnn, data: &Dataset) -> f32 {
+    let preds = cnn.predict(&data.x, data.len());
+    let correct = preds.iter().zip(&data.y).filter(|(p, y)| p == y).count();
+    correct as f32 / data.len().max(1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::data::synthetic_digits;
+
+    #[test]
+    fn learns_digits() {
+        let data = synthetic_digits(1000, 21);
+        let (train, test) = data.split(0.2, 22);
+        let mut cnn = Cnn::new(6, 10, 23);
+        let losses = train_cnn(&mut cnn, &train, 12, 32, 0.08, 0.9, 24);
+        assert!(
+            losses.last().unwrap() < &losses[0],
+            "loss did not decrease: {losses:?}"
+        );
+        let acc = cnn_accuracy(&cnn, &test);
+        assert!(acc > 0.85, "accuracy {acc}");
+    }
+
+    #[test]
+    fn exported_model_matches_forward() {
+        let data = synthetic_digits(300, 31);
+        let mut cnn = Cnn::new(4, 10, 32);
+        train_cnn(&mut cnn, &data, 4, 32, 0.08, 0.9, 33);
+        let model = cnn.to_model("digits_cnn");
+        crate::onnx::check_model(&model).unwrap();
+        let sess = crate::interp::Session::new(model).unwrap();
+        let mut agree = 0;
+        for i in 0..20 {
+            let (x, _) = data.sample(i);
+            let probs = sess
+                .run(&[(
+                    "x",
+                    Tensor::from_f32(&[1, 1, 8, 8], x.to_vec()).unwrap(),
+                )])
+                .unwrap();
+            let probs = probs[0].as_f32().unwrap().to_vec();
+            let onnx_pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let native_pred = cnn.predict(x, 1)[0];
+            if onnx_pred == native_pred {
+                agree += 1;
+            }
+        }
+        assert_eq!(agree, 20, "ONNX export diverges from native forward");
+    }
+}

@@ -1,0 +1,206 @@
+//! Synthetic datasets.
+//!
+//! The paper references no public dataset; these generators provide
+//! *real trainable workloads* (the e2e example trains to >90% accuracy,
+//! so the fp32-vs-int8 accuracy comparison is meaningful) while staying
+//! fully deterministic and self-contained.
+
+use super::rng::Rng;
+
+/// A labeled dataset of flat f32 feature vectors.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `n × dim`, row-major.
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+    pub dim: usize,
+    pub classes: usize,
+    /// For image data: (channels, height, width); None for tabular.
+    pub image_shape: Option<(usize, usize, usize)>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], usize) {
+        (&self.x[i * self.dim..(i + 1) * self.dim], self.y[i])
+    }
+
+    /// Split into (train, test) by a deterministic shuffle.
+    pub fn split(&self, test_fraction: f32, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(seed);
+        let perm = rng.permutation(self.len());
+        let n_test = (self.len() as f32 * test_fraction) as usize;
+        let mk = |idx: &[usize]| {
+            let mut x = Vec::with_capacity(idx.len() * self.dim);
+            let mut y = Vec::with_capacity(idx.len());
+            for &i in idx {
+                x.extend_from_slice(&self.x[i * self.dim..(i + 1) * self.dim]);
+                y.push(self.y[i]);
+            }
+            Dataset {
+                x,
+                y,
+                dim: self.dim,
+                classes: self.classes,
+                image_shape: self.image_shape,
+            }
+        };
+        (mk(&perm[n_test..]), mk(&perm[..n_test]))
+    }
+}
+
+/// 8×8 digit stencils (a compact synthetic stand-in for sklearn-digits).
+/// Each row is one digit 0-9 as an 8-byte-per-row bitmap.
+const DIGIT_STENCILS: [[u8; 8]; 10] = [
+    [0x3C, 0x66, 0x66, 0x66, 0x66, 0x66, 0x66, 0x3C], // 0
+    [0x18, 0x38, 0x18, 0x18, 0x18, 0x18, 0x18, 0x3C], // 1
+    [0x3C, 0x66, 0x06, 0x0C, 0x18, 0x30, 0x60, 0x7E], // 2
+    [0x3C, 0x66, 0x06, 0x1C, 0x06, 0x06, 0x66, 0x3C], // 3
+    [0x0C, 0x1C, 0x3C, 0x6C, 0x7E, 0x0C, 0x0C, 0x0C], // 4
+    [0x7E, 0x60, 0x60, 0x7C, 0x06, 0x06, 0x66, 0x3C], // 5
+    [0x3C, 0x66, 0x60, 0x7C, 0x66, 0x66, 0x66, 0x3C], // 6
+    [0x7E, 0x06, 0x0C, 0x0C, 0x18, 0x18, 0x30, 0x30], // 7
+    [0x3C, 0x66, 0x66, 0x3C, 0x66, 0x66, 0x66, 0x3C], // 8
+    [0x3C, 0x66, 0x66, 0x66, 0x3E, 0x06, 0x66, 0x3C], // 9
+];
+
+/// Synthetic 8×8 grayscale digits: stencil + sub-pixel jitter, random
+/// shift (±1 px), per-pixel noise, random contrast. Hard enough that a
+/// linear model does not saturate, easy enough to train in seconds.
+pub fn synthetic_digits(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dim = 64;
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let digit = rng.below(10);
+        let stencil = &DIGIT_STENCILS[digit];
+        let dx = rng.below(3) as isize - 1;
+        let dy = rng.below(3) as isize - 1;
+        let contrast = rng.range_f32(0.7, 1.3);
+        let noise = rng.range_f32(0.05, 0.25);
+        for r in 0..8usize {
+            for c in 0..8usize {
+                let sr = r as isize - dy;
+                let sc = c as isize - dx;
+                let lit = if (0..8).contains(&sr) && (0..8).contains(&sc) {
+                    (stencil[sr as usize] >> (7 - sc as usize)) & 1 == 1
+                } else {
+                    false
+                };
+                let base = if lit { contrast } else { 0.0 };
+                let v = (base + noise * rng.normal()).clamp(-0.5, 1.5);
+                x.push(v);
+            }
+        }
+        y.push(digit);
+    }
+    Dataset {
+        x,
+        y,
+        dim,
+        classes: 10,
+        image_shape: Some((1, 8, 8)),
+    }
+}
+
+/// Gaussian blobs: `classes` isotropic clusters in `dim` dimensions.
+pub fn gaussian_blobs(n: usize, dim: usize, classes: usize, spread: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    // Random but well-separated centers.
+    let centers: Vec<f32> = (0..classes * dim).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cls = rng.below(classes);
+        for d in 0..dim {
+            x.push(centers[cls * dim + d] + spread * rng.normal());
+        }
+        y.push(cls);
+    }
+    Dataset {
+        x,
+        y,
+        dim,
+        classes,
+        image_shape: None,
+    }
+}
+
+/// Two interleaved spirals — a classic nonlinear benchmark exercising
+/// the Tanh/Sigmoid activation patterns (Figs. 4–6).
+pub fn spirals(n: usize, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = i % 2;
+        let t = rng.uniform() * 3.0 * std::f32::consts::PI + 0.5;
+        let r = t / (3.0 * std::f32::consts::PI) * 2.0;
+        let phase = if cls == 0 { 0.0 } else { std::f32::consts::PI };
+        x.push(r * (t + phase).cos() + noise * rng.normal());
+        x.push(r * (t + phase).sin() + noise * rng.normal());
+        y.push(cls);
+    }
+    Dataset {
+        x,
+        y,
+        dim: 2,
+        classes: 2,
+        image_shape: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_shapes_and_labels() {
+        let d = synthetic_digits(500, 1);
+        assert_eq!(d.len(), 500);
+        assert_eq!(d.dim, 64);
+        assert!(d.y.iter().all(|&c| c < 10));
+        // All ten classes present in 500 samples.
+        for cls in 0..10 {
+            assert!(d.y.contains(&cls), "class {cls} missing");
+        }
+    }
+
+    #[test]
+    fn digits_deterministic() {
+        let a = synthetic_digits(50, 9);
+        let b = synthetic_digits(50, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = synthetic_digits(100, 2);
+        let (tr, te) = d.split(0.2, 3);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+
+    #[test]
+    fn blobs_separated() {
+        let d = gaussian_blobs(200, 4, 3, 0.1, 5);
+        assert_eq!(d.classes, 3);
+        assert_eq!(d.dim, 4);
+    }
+
+    #[test]
+    fn spirals_two_classes() {
+        let d = spirals(100, 0.01, 6);
+        assert!(d.y.iter().filter(|&&c| c == 0).count() > 30);
+        assert!(d.y.iter().filter(|&&c| c == 1).count() > 30);
+    }
+}

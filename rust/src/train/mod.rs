@@ -1,0 +1,15 @@
+//! fp32 training substrate: the source of *really trained* models for the
+//! quantization flow. MLP ([`mlp`]) and small CNN ([`cnn`]) with manual
+//! backprop, deterministic synthetic datasets ([`data`]), SplitMix64 PRNG
+//! ([`rng`]). No external ML dependency — the whole loop is
+//! reproducible from a seed.
+
+pub mod cnn;
+pub mod data;
+pub mod mlp;
+pub mod rng;
+
+pub use cnn::{cnn_accuracy, train_cnn, Cnn};
+pub use data::{gaussian_blobs, spirals, synthetic_digits, Dataset};
+pub use mlp::{accuracy, train_classifier, HiddenAct, Mlp};
+pub use rng::Rng;

@@ -1,0 +1,92 @@
+//! Integration: the coordinator serving all six figure models over
+//! interpreter + hwsim backends simultaneously, plus the validation
+//! service sweeping all of them (paper goal 3 at the system level).
+
+use pqdl::coordinator::{
+    validate, Backend, CoordinatorBuilder, HwSimBackend, InterpBackend, ServerConfig,
+};
+use pqdl::figures::Figure;
+use pqdl::hwsim::HwConfig;
+use pqdl::interp::Session;
+use pqdl::tensor::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn coordinator_serves_all_figures() {
+    let mut builder = CoordinatorBuilder::new(ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    });
+    for fig in Figure::ALL {
+        builder = builder.register(
+            fig.name(),
+            Arc::new(InterpBackend::new(fig.model()).unwrap()),
+        );
+    }
+    let coord = builder.start();
+    assert_eq!(coord.models().len(), 6);
+
+    for fig in Figure::ALL {
+        let sess = Session::new(fig.model()).unwrap();
+        for seed in 0..4u64 {
+            let x = fig.input(1, seed);
+            let resp = coord.infer(fig.name(), x.clone()).unwrap();
+            let got = resp.output.expect(fig.name());
+            let want = &sess.run(&[("x", x)]).unwrap()[0];
+            assert_eq!(&got, want, "{} seed {seed}", fig.name());
+        }
+    }
+    let report = coord.metrics.report();
+    assert!(report.contains("fig1_fc"));
+    assert!(report.contains("fig6_sigmoid_f16"));
+    coord.shutdown();
+}
+
+#[test]
+fn validation_sweep_all_figures_interp_vs_hwsim() {
+    // The GOAL3 experiment shape: every figure, interp as reference,
+    // hwsim must agree within slope-dependent LSB margins.
+    for fig in Figure::ALL {
+        let model = fig.model();
+        let backends: Vec<Arc<dyn Backend>> = vec![
+            Arc::new(InterpBackend::new(model.clone()).unwrap()),
+            Arc::new(HwSimBackend::new(&model, HwConfig::default()).unwrap()),
+        ];
+        let inputs: Vec<Tensor> = (0..20).map(|s| fig.input(4, s)).collect();
+        let report = validate(fig.name(), &backends, &inputs).unwrap();
+        // A 1-LSB pre-activation delta is amplified by the activation's
+        // local slope x in_scale x out_levels: fig4 tanh (in 4/127) <= 4,
+        // fig5 tanh (in 2/127) <= 2, fig6 sigmoid (in 8/127, x255) <= 5.
+        let tol = match fig {
+            Figure::Fig4TanhInt8 => 4,
+            Figure::Fig5TanhF16 => 2,
+            Figure::Fig6SigmoidF16 => 5,
+            _ => 1,
+        };
+        assert!(
+            report.all_within(tol),
+            "{} out of tolerance:\n{}",
+            fig.name(),
+            report.table()
+        );
+        // The overwhelming majority must be bit-exact.
+        assert!(
+            report.rows[0].report.exact_rate() > 0.95,
+            "{}: exact rate {:.4}",
+            fig.name(),
+            report.rows[0].report.exact_rate()
+        );
+    }
+}
+
+#[test]
+fn hwsim_cost_scales_with_batch() {
+    let fig = Figure::Fig1FcTwoMul;
+    let be = HwSimBackend::new(&fig.model(), HwConfig::default()).unwrap();
+    be.run_batch(&fig.input(1, 1)).unwrap();
+    let c1 = be.total_cost();
+    be.run_batch(&fig.input(8, 1)).unwrap();
+    let c9 = be.total_cost();
+    assert_eq!(c9.macs - c1.macs, 8 * c1.macs);
+}

@@ -1,0 +1,220 @@
+//! Integration: the full decoupled-quantization flow on really trained
+//! models — train fp32 → calibrate → rewrite to the paper's patterns →
+//! execute on interpreter AND hardware simulator → accuracy preserved.
+//!
+//! This is the paper's whole point operating end-to-end: the quantizer
+//! never saw the hardware, the hardware compiler never saw the fp32
+//! model, and the ONNX file in between carries everything.
+
+use pqdl::hwsim::{HwConfig, HwModule};
+use pqdl::interp::Session;
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, ActPrecision, QuantizeOptions};
+use pqdl::tensor::Tensor;
+use pqdl::train::{
+    accuracy, synthetic_digits, train_classifier, train_cnn, Cnn, HiddenAct, Mlp,
+};
+
+fn calib_batches(
+    data: &pqdl::train::Dataset,
+    n: usize,
+    shape: &[usize],
+) -> Vec<Vec<(String, Tensor)>> {
+    (0..n.min(data.len()))
+        .map(|i| {
+            let (x, _) = data.sample(i);
+            let mut dims = vec![1usize];
+            dims.extend_from_slice(shape);
+            vec![(
+                "x".to_string(),
+                Tensor::from_f32(&dims, x.to_vec()).unwrap(),
+            )]
+        })
+        .collect()
+}
+
+/// Accuracy of a quantized model (float I/O, softmax output) via argmax.
+fn quantized_accuracy(
+    sess: &Session,
+    data: &pqdl::train::Dataset,
+    shape: &[usize],
+) -> f32 {
+    let mut correct = 0usize;
+    for i in 0..data.len() {
+        let (x, y) = data.sample(i);
+        let mut dims = vec![1usize];
+        dims.extend_from_slice(shape);
+        let out = sess
+            .run(&[("x", Tensor::from_f32(&dims, x.to_vec()).unwrap())])
+            .unwrap();
+        let probs = out[0].as_f32().unwrap();
+        let pred = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == y {
+            correct += 1;
+        }
+    }
+    correct as f32 / data.len() as f32
+}
+
+fn hwsim_accuracy(hw: &HwModule, data: &pqdl::train::Dataset, shape: &[usize]) -> f32 {
+    let mut correct = 0usize;
+    for i in 0..data.len() {
+        let (x, y) = data.sample(i);
+        let mut dims = vec![1usize];
+        dims.extend_from_slice(shape);
+        let (out, _) = hw
+            .run(&Tensor::from_f32(&dims, x.to_vec()).unwrap())
+            .unwrap();
+        let probs = out.as_f32().unwrap();
+        let pred = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == y {
+            correct += 1;
+        }
+    }
+    correct as f32 / data.len() as f32
+}
+
+#[test]
+fn mlp_relu_quantization_preserves_accuracy() {
+    let data = synthetic_digits(1500, 100);
+    let (train, test) = data.split(0.2, 101);
+    let mut mlp = Mlp::new(&[64, 32, 10], HiddenAct::Relu, 102);
+    train_classifier(&mut mlp, &train, 20, 32, 0.1, 0.9, 103);
+    let fp32_acc = accuracy(&mlp, &test);
+    assert!(fp32_acc > 0.9, "fp32 acc {fp32_acc}");
+
+    let model = mlp.to_model("digits_mlp");
+    let sess = Session::new(model.clone()).unwrap();
+    let cal = calibrate(&sess, &calib_batches(&train, 64, &[64]), CalibStrategy::MaxRange)
+        .unwrap();
+    let q = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+
+    // Round-trip through serialization: the file IS the interchange.
+    let text = pqdl::onnx::model_to_json(&q);
+    let q = pqdl::onnx::model_from_json(&text).unwrap();
+
+    let qsess = Session::new(q.clone()).unwrap();
+    let q_acc = quantized_accuracy(&qsess, &test, &[64]);
+    assert!(
+        q_acc >= fp32_acc - 0.03,
+        "int8 acc {q_acc} vs fp32 {fp32_acc}"
+    );
+
+    // Same file on the integer hardware.
+    let hw = HwModule::compile(&q, HwConfig::default()).unwrap();
+    let hw_acc = hwsim_accuracy(&hw, &test, &[64]);
+    assert!(
+        (hw_acc - q_acc).abs() <= 0.02,
+        "hwsim acc {hw_acc} vs interp {q_acc}"
+    );
+}
+
+#[test]
+fn mlp_tanh_f16_pattern_end_to_end() {
+    let data = synthetic_digits(1000, 110);
+    let (train, test) = data.split(0.2, 111);
+    let mut mlp = Mlp::new(&[64, 24, 10], HiddenAct::Tanh, 112);
+    train_classifier(&mut mlp, &train, 20, 32, 0.1, 0.9, 113);
+    let fp32_acc = accuracy(&mlp, &test);
+    assert!(fp32_acc > 0.85, "fp32 acc {fp32_acc}");
+
+    let model = mlp.to_model("digits_mlp_tanh");
+    let sess = Session::new(model.clone()).unwrap();
+    let cal = calibrate(&sess, &calib_batches(&train, 64, &[64]), CalibStrategy::MaxRange)
+        .unwrap();
+    for (precision, min_drop) in [(ActPrecision::F16, 0.04), (ActPrecision::Int8, 0.06)] {
+        let opts = QuantizeOptions {
+            act_precision: precision,
+            ..Default::default()
+        };
+        let q = quantize_model(&model, &cal, &opts).unwrap();
+        let qsess = Session::new(q.clone()).unwrap();
+        let q_acc = quantized_accuracy(&qsess, &test, &[64]);
+        assert!(
+            q_acc >= fp32_acc - min_drop,
+            "{precision:?}: int8 acc {q_acc} vs fp32 {fp32_acc}"
+        );
+        // Fig. 5 structure check for the f16 path: Cast->Tanh->Cast.
+        if precision == ActPrecision::F16 {
+            let has_f16_cast = q
+                .graph
+                .nodes
+                .iter()
+                .any(|n| n.op_type == "Cast" && n.attr_str("to") == Some("FLOAT16"));
+            assert!(has_f16_cast, "f16 tanh lowering missing Cast to FLOAT16");
+        }
+        let hw = HwModule::compile(&q, HwConfig::default()).unwrap();
+        let hw_acc = hwsim_accuracy(&hw, &test, &[64]);
+        assert!((hw_acc - q_acc).abs() <= 0.03);
+    }
+}
+
+#[test]
+fn cnn_conv_pattern_end_to_end() {
+    let data = synthetic_digits(1200, 120);
+    let (train, test) = data.split(0.2, 121);
+    let mut cnn = Cnn::new(6, 10, 122);
+    train_cnn(&mut cnn, &train, 10, 32, 0.08, 0.9, 123);
+    let fp32_acc = pqdl::train::cnn_accuracy(&cnn, &test);
+    assert!(fp32_acc > 0.85, "fp32 acc {fp32_acc}");
+
+    let model = cnn.to_model("digits_cnn");
+    let sess = Session::new(model.clone()).unwrap();
+    let cal = calibrate(
+        &sess,
+        &calib_batches(&train, 64, &[1, 8, 8]),
+        CalibStrategy::MaxRange,
+    )
+    .unwrap();
+    let q = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+    // Fig. 3 structure: ConvInteger present, no custom ops, checker green.
+    assert!(q.graph.nodes.iter().any(|n| n.op_type == "ConvInteger"));
+    pqdl::onnx::check_model(&q).unwrap();
+
+    let qsess = Session::new(q.clone()).unwrap();
+    let q_acc = quantized_accuracy(&qsess, &test, &[1, 8, 8]);
+    assert!(
+        q_acc >= fp32_acc - 0.05,
+        "int8 acc {q_acc} vs fp32 {fp32_acc}"
+    );
+    let hw = HwModule::compile(&q, HwConfig::default()).unwrap();
+    let hw_acc = hwsim_accuracy(&hw, &test, &[1, 8, 8]);
+    assert!((hw_acc - q_acc).abs() <= 0.03);
+}
+
+#[test]
+fn calibration_strategy_is_swappable_without_touching_execution() {
+    // Claim D: the decoupled flow lets calibration change while the
+    // model format and every executor stay identical.
+    let data = synthetic_digits(800, 130);
+    let (train, test) = data.split(0.25, 131);
+    let mut mlp = Mlp::new(&[64, 32, 10], HiddenAct::Relu, 132);
+    train_classifier(&mut mlp, &train, 15, 32, 0.1, 0.9, 133);
+    let model = mlp.to_model("digits_mlp");
+    let sess = Session::new(model.clone()).unwrap();
+    let batches = calib_batches(&train, 64, &[64]);
+    for strategy in [
+        CalibStrategy::MaxRange,
+        CalibStrategy::Percentile(0.999),
+        CalibStrategy::Mse,
+    ] {
+        let cal = calibrate(&sess, &batches, strategy).unwrap();
+        let q = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+        pqdl::onnx::check_model(&q).unwrap();
+        let qsess = Session::new(q.clone()).unwrap();
+        let acc = quantized_accuracy(&qsess, &test, &[64]);
+        assert!(acc > 0.8, "{strategy:?}: acc {acc}");
+        // And the hardware compiler accepts all of them unchanged.
+        HwModule::compile(&q, HwConfig::default()).unwrap();
+    }
+}

@@ -1,0 +1,129 @@
+//! Integration: the python→HLO→PJRT round trip against the Rust stack.
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise so
+//! `cargo test` works on a fresh checkout).
+
+use pqdl::figures::Figure;
+use pqdl::hwsim::{HwConfig, HwModule};
+use pqdl::interp::Session;
+use pqdl::runtime::{ArtifactRegistry, PjrtEngine};
+
+fn registry() -> Option<(PjrtEngine, ArtifactRegistry)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    let engine = PjrtEngine::cpu().expect("PJRT CPU client");
+    let reg = ArtifactRegistry::load(&engine, &dir).expect("loading artifacts");
+    Some((engine, reg))
+}
+
+#[test]
+fn artifacts_reproduce_python_golden_outputs() {
+    let Some((_engine, reg)) = registry() else {
+        return;
+    };
+    let rows = reg.verify_golden().expect("golden verification");
+    assert_eq!(rows.len(), 12, "6 variants x 2 batches");
+    for (variant, batch, diff) in rows {
+        // PJRT re-executes the very HLO Python lowered: bit-exact.
+        assert_eq!(diff, 0, "{variant}_b{batch} diverged from golden");
+    }
+}
+
+#[test]
+fn pjrt_agrees_with_interpreter_within_margins() {
+    let Some((_engine, reg)) = registry() else {
+        return;
+    };
+    for fig in Figure::ALL {
+        let model = fig.model();
+        let sess = Session::new(model).unwrap();
+        for batch in reg.batches(fig.name()) {
+            let entry = reg.get(fig.name(), batch).unwrap();
+            let x = fig.input(batch, 42);
+            let interp_out = &sess.run(&[("x", x.clone())]).unwrap()[0];
+            let pjrt_out = entry.run(&x).unwrap();
+            assert_eq!(interp_out.shape(), pjrt_out.shape());
+            let a = interp_out.as_quantized_i32().unwrap();
+            let b = pjrt_out.as_quantized_i32().unwrap();
+            let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).max().unwrap();
+            // Same float contract on both sides; XLA may fold the two
+            // rescale Muls into one product, worth at most 1 LSB before
+            // an activation and its slope-amplified equivalent after.
+            let tol = match fig {
+                Figure::Fig4TanhInt8 => 4,
+                Figure::Fig5TanhF16 => 2,
+                Figure::Fig6SigmoidF16 => 5,
+                _ => 1,
+            };
+            assert!(
+                max_diff <= tol,
+                "{}_b{batch}: interp vs PJRT max LSB diff {max_diff} > {tol}",
+                fig.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_agrees_with_hwsim_within_margins() {
+    let Some((_engine, reg)) = registry() else {
+        return;
+    };
+    for fig in Figure::ALL {
+        let model = fig.model();
+        let hw = HwModule::compile(&model, HwConfig::default()).unwrap();
+        for batch in reg.batches(fig.name()) {
+            let entry = reg.get(fig.name(), batch).unwrap();
+            let x = fig.input(batch, 42);
+            let (hw_out, cost) = hw.run(&x).unwrap();
+            let pjrt_out = entry.run(&x).unwrap();
+            assert!(cost.macs > 0);
+            let a = hw_out.as_quantized_i32().unwrap();
+            let b = pjrt_out.as_quantized_i32().unwrap();
+            let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).max().unwrap();
+            let tol = match fig {
+                Figure::Fig4TanhInt8 => 5,
+                Figure::Fig5TanhF16 => 3,
+                Figure::Fig6SigmoidF16 => 6,
+                _ => 1,
+            };
+            assert!(
+                max_diff <= tol,
+                "{}_b{batch}: hwsim vs PJRT max LSB diff {max_diff} > {tol}",
+                fig.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_pads_and_chunks_odd_batches() {
+    // Artifacts exist only for batches {1, 8}; the backend must pad
+    // batch 3 up to 8 and chunk batch 20 through 8+8+4(padded), with
+    // outputs identical to the interpreter per-row.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    use pqdl::coordinator::{Backend, PjrtBackend};
+    use pqdl::runtime::PjrtService;
+    let svc = PjrtService::spawn(dir).unwrap();
+    let fig = Figure::Fig1FcTwoMul;
+    let be = PjrtBackend::new(svc.clone(), fig.name()).unwrap();
+    let sess = Session::new(fig.model()).unwrap();
+    for batch in [1usize, 3, 8, 9, 20, 64] {
+        let x = fig.input(batch, batch as u64);
+        let got = be.run_batch(&x).unwrap();
+        let want = &sess.run(&[("x", x)]).unwrap()[0];
+        assert_eq!(got.shape(), want.shape(), "batch {batch}");
+        let a = got.as_quantized_i32().unwrap();
+        let b = want.as_quantized_i32().unwrap();
+        let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).max().unwrap();
+        assert!(max_diff <= 1, "batch {batch}: max diff {max_diff}");
+    }
+    svc.shutdown();
+}
