@@ -1,0 +1,81 @@
+"""Deterministic fallback for the `hypothesis` API used by test_kernel.py.
+
+The offline image ships numpy/pytest/jax but not hypothesis. When the real
+library is importable the tests use it unchanged (CI installs it); otherwise
+this shim samples a fixed number of pseudo-random cases from the declared
+strategies with a seeded generator, so the suite still sweeps shapes/dtypes
+reproducibly instead of being skipped.
+"""
+
+import numpy as np
+
+_SEED = 0xC0FFEE
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def sample(self, rng):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Booleans(_Strategy):
+    def sample(self, rng):
+        return bool(rng.integers(0, 2))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def sample(self, rng):
+        return self.options[int(rng.integers(0, len(self.options)))]
+
+
+class st:
+    """Mirror of the tiny slice of `hypothesis.strategies` the tests use."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper():
+            rng = np.random.default_rng(_SEED)
+            examples = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            for _ in range(examples):
+                kwargs = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(**kwargs)
+
+        # Deliberately NOT functools.wraps: pytest must see a zero-argument
+        # signature, not the strategy parameters of the wrapped function.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

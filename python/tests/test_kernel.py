@@ -7,7 +7,11 @@ these are integer/quantized pipelines where "close" is not a thing.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: deterministic fallback sweep
+    from _hyp_compat import given, settings, st
 
 from compile.kernels import act as act_k
 from compile.kernels import conv_int8 as conv_k

@@ -1,9 +1,12 @@
 //! E2E serving experiment: coordinator throughput/latency on the
-//! quantized digits MLP as dynamic batching scales, closed-loop clients.
+//! quantized digits MLP as dynamic batching scales, closed-loop clients —
+//! plus the serial-vs-parallel executor comparison on multi-row batches
+//! (the acceptance measurement for the batch-parallel `Session::run`).
 
-use pqdl::bench_util::section;
+use pqdl::bench_util::{bench_auto, env_usize, section};
 use pqdl::coordinator::{CoordinatorBuilder, InterpBackend, ServerConfig};
 use pqdl::interp::Session;
+use pqdl::parallel::ThreadPool;
 use pqdl::quant::CalibStrategy;
 use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
 use pqdl::tensor::Tensor;
@@ -27,6 +30,48 @@ fn main() {
         .collect();
     let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
     let preq = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+
+    // --- serial vs parallel executor on multi-row batches ----------------
+    let target_ms = env_usize("PQDL_BENCH_TARGET_MS", 150) as u64;
+    let qsess = Session::new(preq.clone()).unwrap();
+    section(&format!(
+        "serial vs parallel Session::run on the quantized MLP ({} pool threads)",
+        ThreadPool::global().threads()
+    ));
+    println!(
+        "{:<8} | {:>14} | {:>14} | {:>8}",
+        "batch", "serial itm/s", "parallel itm/s", "speedup"
+    );
+    let batch_of = |n: usize| {
+        let mut xs = Vec::with_capacity(n * 64);
+        for i in 0..n {
+            xs.extend_from_slice(train.sample(i % train.len()).0);
+        }
+        Tensor::from_f32(&[n, 64], xs).unwrap()
+    };
+    for batch in [1usize, 8, 32, 128] {
+        let x = batch_of(batch);
+        let serial = {
+            let x = x.clone();
+            let s = &qsess;
+            bench_auto(&format!("serial b{batch}"), batch, target_ms, move || {
+                s.run_serial(&[("x", x.clone())]).expect("serial run");
+            })
+        };
+        let parallel = {
+            let x = x.clone();
+            let s = &qsess;
+            bench_auto(&format!("parallel b{batch}"), batch, target_ms, move || {
+                s.run(&[("x", x.clone())]).expect("parallel run");
+            })
+        };
+        println!(
+            "{batch:<8} | {:>14.1} | {:>14.1} | {:>7.2}x",
+            serial.throughput_per_s,
+            parallel.throughput_per_s,
+            parallel.throughput_per_s / serial.throughput_per_s
+        );
+    }
 
     section("dynamic batching sweep (16 closed-loop clients x 150 reqs)");
     println!(

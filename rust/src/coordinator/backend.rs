@@ -8,7 +8,7 @@ use crate::hwsim::{CostReport, HwConfig, HwModule};
 use crate::interp::Session;
 use crate::onnx::Model;
 use crate::runtime::PjrtService;
-use crate::tensor::{DType, Tensor, TensorData};
+use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Mutex;
 
@@ -160,73 +160,18 @@ impl Backend for PjrtBackend {
 }
 
 // --- batch tensor manipulation --------------------------------------------
-
-fn row_elems(t: &Tensor) -> usize {
-    t.shape()[1..].iter().product()
-}
-
-macro_rules! per_dtype {
-    ($t:expr, $v:ident, $body:expr) => {
-        match $t.data() {
-            TensorData::F32($v) => TensorData::F32($body),
-            TensorData::F16($v) => TensorData::F16($body),
-            TensorData::I8($v) => TensorData::I8($body),
-            TensorData::U8($v) => TensorData::U8($body),
-            TensorData::I32($v) => TensorData::I32($body),
-            TensorData::I64($v) => TensorData::I64($body),
-            TensorData::Bool($v) => TensorData::Bool($body),
-        }
-    };
-}
+//
+// Thin anyhow-flavored wrappers over the [`Tensor`] row primitives so the
+// serving layer, the PJRT padding logic and the batch-parallel executors all
+// share one implementation.
 
 /// Concatenate along axis 0. All tensors must share dtype + row shape.
 pub fn concat_batch(tensors: &[Tensor]) -> Result<Tensor> {
-    let first = tensors.first().ok_or_else(|| anyhow!("empty concat"))?;
-    let row_shape = &first.shape()[1..];
-    let dtype = first.dtype();
-    let mut total = 0usize;
-    for t in tensors {
-        if &t.shape()[1..] != row_shape || t.dtype() != dtype {
-            bail!(
-                "concat mismatch: {:?}/{} vs {:?}/{}",
-                t.shape(),
-                t.dtype(),
-                first.shape(),
-                dtype
-            );
-        }
-        total += t.shape()[0];
-    }
-    let mut shape = vec![total];
-    shape.extend_from_slice(row_shape);
-
-    macro_rules! concat_as {
-        ($variant:ident, $ty:ty) => {{
-            let mut out: Vec<$ty> = Vec::with_capacity(total * row_shape.iter().product::<usize>());
-            for t in tensors {
-                match t.data() {
-                    TensorData::$variant(v) => out.extend_from_slice(v),
-                    _ => unreachable!(),
-                }
-            }
-            TensorData::$variant(out)
-        }};
-    }
-    let data = match dtype {
-        DType::F32 => concat_as!(F32, f32),
-        DType::F16 => concat_as!(F16, crate::tensor::F16),
-        DType::I8 => concat_as!(I8, i8),
-        DType::U8 => concat_as!(U8, u8),
-        DType::I32 => concat_as!(I32, i32),
-        DType::I64 => concat_as!(I64, i64),
-        DType::Bool => concat_as!(Bool, bool),
-    };
-    Ok(Tensor::new(shape, data)?)
+    Ok(Tensor::concat_rows(tensors)?)
 }
 
 /// Split along axis 0 into chunks of the given sizes.
 pub fn split_batch(t: &Tensor, sizes: &[usize]) -> Result<Vec<Tensor>> {
-    let re = row_elems(t);
     let mut out = Vec::with_capacity(sizes.len());
     let mut off = 0usize;
     for &n in sizes {
@@ -236,7 +181,6 @@ pub fn split_batch(t: &Tensor, sizes: &[usize]) -> Result<Vec<Tensor>> {
     if off != t.shape()[0] {
         bail!("split sizes {:?} != batch {}", sizes, t.shape()[0]);
     }
-    let _ = re;
     Ok(out)
 }
 
@@ -247,15 +191,7 @@ pub fn slice_batch(t: &Tensor, n: usize) -> Result<Tensor> {
 
 /// Rows [off, off+n).
 pub fn slice_batch_range(t: &Tensor, off: usize, n: usize) -> Result<Tensor> {
-    if off + n > t.shape()[0] {
-        bail!("slice {off}+{n} out of batch {}", t.shape()[0]);
-    }
-    let re = row_elems(t);
-    let (a, b) = (off * re, (off + n) * re);
-    let data = per_dtype!(t, v, v[a..b].to_vec());
-    let mut shape = vec![n];
-    shape.extend_from_slice(&t.shape()[1..]);
-    Ok(Tensor::new(shape, data)?)
+    Ok(t.slice_rows(off, n)?)
 }
 
 /// Pad with zero rows up to `target` rows.

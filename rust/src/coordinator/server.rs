@@ -374,7 +374,7 @@ mod tests {
                 .collect();
             for (&s, rx) in seeds.iter().zip(rxs) {
                 let resp = rx.recv().map_err(|e| e.to_string())?;
-                let got = resp.output.map_err(|e| e)?;
+                let got = resp.output?;
                 let want = &sess.run(&[("x", fig.input(1, s))]).unwrap()[0];
                 if &got != want {
                     return Err(format!("mismatch for seed {s}"));

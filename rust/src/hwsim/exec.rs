@@ -25,9 +25,20 @@ use super::lut::{ActEval, ActFn, ActLut};
 use crate::onnx::ir::{Graph, Model, Node};
 use crate::onnx::shape::ConvAttrs;
 use crate::ops::matmul::gemm_i32;
+use crate::parallel::{self, ThreadPool};
 use crate::quant::QType;
 use crate::tensor::{DType, Tensor};
 use thiserror::Error;
+
+/// Smallest batch [`HwModule::run`] will split across the pool.
+pub const HW_PAR_MIN_BATCH: usize = 4;
+
+/// Fixed sub-batch height [`HwModule::run`] schedules batched inference
+/// in. This is a CONSTANT of the simulated schedule — deliberately NOT the
+/// host's core count — so the cost report (cycles, traffic, energy) for a
+/// given model + input is identical on every machine and thread-pool
+/// size; only wall-clock time varies with available workers.
+pub const HW_SPLIT_ROWS: usize = 4;
 
 #[derive(Error, Debug)]
 pub enum HwError {
@@ -48,6 +59,24 @@ fn perr(node: &Node, msg: impl Into<String>) -> HwError {
         node: node.name.clone(),
         msg: msg.into(),
     }
+}
+
+/// The sole consumer of a value, or `None` at the end of the chain. The
+/// emitted pre-quantized graphs are linear chains; a value with multiple
+/// consumers is outside this compiler's pattern language.
+fn consumer_of<'a>(g: &'a Graph, value: &str) -> Result<Option<&'a Node>, HwError> {
+    let mut found: Option<&'a Node> = None;
+    for n in &g.nodes {
+        if n.inputs.iter().any(|i| i == value) {
+            if found.is_some() {
+                return Err(HwError::Unsupported(format!(
+                    "value '{value}' has multiple consumers; hw compiler handles chains"
+                )));
+            }
+            found = Some(n);
+        }
+    }
+    Ok(found)
 }
 
 /// Integer rescale constants lifted from the model.
@@ -109,6 +138,43 @@ pub struct HwModule {
     pub cfg: HwConfig,
     stages: Vec<Stage>,
     input_dtype: DType,
+    /// True when every stage is row-independent along axis 0, enabling the
+    /// batch-parallel [`HwModule::run`] path.
+    batch_splittable: bool,
+}
+
+/// Whether the compiled pipeline treats axis 0 purely as a batch axis:
+/// every stage except an axis-0 `Flatten`, a batch-fixing `Reshape`, or a
+/// `Softmax` normalizing over axis 0 processes rows independently.
+fn stages_batch_splittable(stages: &[Stage], model: &Model) -> bool {
+    for stage in stages {
+        match stage {
+            Stage::Flatten { axis } => {
+                if *axis == 0 {
+                    return false;
+                }
+            }
+            Stage::Reshape { spec } => {
+                // Only batch-preserving specs (leading 0 = copy, or -1 =
+                // infer) keep rows independent.
+                if spec.first().map_or(true, |&d| d != 0 && d != -1) {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+    }
+    // Softmax axis-0 guard, shared with the interpreter (the stage itself
+    // does not carry shapes, so resolve against the source graph).
+    if model.graph.nodes.iter().any(|n| n.op_type == "Softmax") {
+        let Ok(types) = crate::onnx::shape::infer_graph(&model.graph) else {
+            return false;
+        };
+        if crate::onnx::shape::couples_rows_on_axis0(&model.graph, &types) {
+            return false;
+        }
+    }
+    true
 }
 
 /// Runtime tensor inside the accelerator: integers widened to i32, plus
@@ -217,22 +283,6 @@ impl HwModule {
         let input_dtype = inputs[0].dtype;
         let output_name = g.outputs[0].name.clone();
 
-        // The consumer map: emitted graphs are linear chains, enforced here.
-        let consumer_of = |value: &str| -> Result<Option<&Node>, HwError> {
-            let cons: Vec<&Node> = g
-                .nodes
-                .iter()
-                .filter(|n| n.inputs.iter().any(|i| i == value))
-                .collect();
-            match cons.len() {
-                0 => Ok(None),
-                1 => Ok(Some(cons[0])),
-                _ => Err(HwError::Unsupported(format!(
-                    "value '{value}' has multiple consumers; hw compiler handles chains"
-                ))),
-            }
-        };
-
         let mut stages = Vec::new();
         let mut cur = inputs[0].name.clone();
 
@@ -240,7 +290,7 @@ impl HwModule {
             if cur == output_name {
                 break;
             }
-            let node = match consumer_of(&cur)? {
+            let node = match consumer_of(g, &cur)? {
                 Some(n) => n,
                 None => break,
             };
@@ -253,23 +303,22 @@ impl HwModule {
                     cur = node.outputs[0].clone();
                 }
                 "MatMulInteger" => {
-                    let (stage, out) = Self::lift_fc(g, node, &cfg, consumer_of)?;
+                    let (stage, out) = Self::lift_fc(g, node, &cfg)?;
                     stages.push(stage);
                     cur = out;
                 }
                 "ConvInteger" => {
-                    let (stage, out) = Self::lift_conv(g, node, &cfg, consumer_of)?;
+                    let (stage, out) = Self::lift_conv(g, node, &cfg)?;
                     stages.push(stage);
                     cur = out;
                 }
                 "DequantizeLinear" => {
                     let in_scale = scalar_f32(g, &node.inputs[1], node)?;
                     // Look ahead: activation tail or output edge?
-                    let next = consumer_of(&node.outputs[0])?;
+                    let next = consumer_of(g, &node.outputs[0])?;
                     match next.map(|n| n.op_type.as_str()) {
                         Some("Cast") | Some("Tanh") | Some("Sigmoid") => {
-                            let (stage, out) =
-                                Self::lift_act(g, node, in_scale, &cfg, consumer_of)?;
+                            let (stage, out) = Self::lift_act(g, node, in_scale, &cfg)?;
                             stages.push(stage);
                             cur = out;
                         }
@@ -319,11 +368,18 @@ impl HwModule {
             }
         }
 
+        let batch_splittable = stages_batch_splittable(&stages, model);
         Ok(HwModule {
             cfg,
             stages,
             input_dtype,
+            batch_splittable,
         })
+    }
+
+    /// True when this program qualifies for batch-parallel execution.
+    pub fn batch_parallelizable(&self) -> bool {
+        self.batch_splittable
     }
 
     /// Lift MatMulInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
@@ -331,7 +387,6 @@ impl HwModule {
         g: &'a Graph,
         mm: &'a Node,
         cfg: &HwConfig,
-        consumer_of: impl Fn(&str) -> Result<Option<&'a Node>, HwError>,
     ) -> Result<(Stage, String), HwError> {
         let w_t = g
             .initializer(&mm.inputs[1])
@@ -343,7 +398,7 @@ impl HwModule {
         let w = w_t.as_quantized_i32()?;
 
         let mut cur = mm.outputs[0].clone();
-        let mut node = consumer_of(&cur)?.ok_or_else(|| perr(mm, "dangling FC block"))?;
+        let mut node = consumer_of(g, &cur)?.ok_or_else(|| perr(mm, "dangling FC block"))?;
 
         // Optional bias Add.
         let mut bias = None;
@@ -358,7 +413,7 @@ impl HwModule {
                 .ok_or_else(|| perr(node, "bias must be initializer"))?;
             bias = Some(b.as_i32()?.to_vec());
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
         }
 
         // Cast INT32 -> FLOAT.
@@ -366,7 +421,7 @@ impl HwModule {
             return Err(perr(node, "expected Cast to FLOAT after accumulate"));
         }
         cur = node.outputs[0].clone();
-        node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+        node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
 
         // One or two Muls.
         let mut muls = Vec::new();
@@ -378,7 +433,7 @@ impl HwModule {
             };
             muls.push(scalar_f32(g, s_name, node)?);
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
         }
         if muls.is_empty() {
             return Err(perr(node, "expected rescale Mul after Cast"));
@@ -390,7 +445,7 @@ impl HwModule {
         if node.op_type == "Relu" {
             relu = true;
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
         }
 
         // Round + clip stage.
@@ -422,7 +477,6 @@ impl HwModule {
         g: &'a Graph,
         cv: &'a Node,
         cfg: &HwConfig,
-        consumer_of: impl Fn(&str) -> Result<Option<&'a Node>, HwError>,
     ) -> Result<(Stage, String), HwError> {
         let w_t = g
             .initializer(&cv.inputs[1])
@@ -436,7 +490,7 @@ impl HwModule {
         let attrs = ConvAttrs::from_node(cv);
 
         let mut cur = cv.outputs[0].clone();
-        let mut node = consumer_of(&cur)?.ok_or_else(|| perr(cv, "dangling conv block"))?;
+        let mut node = consumer_of(g, &cur)?.ok_or_else(|| perr(cv, "dangling conv block"))?;
 
         let mut bias = None;
         if node.op_type == "Add" {
@@ -453,14 +507,14 @@ impl HwModule {
             }
             bias = Some(b.as_i32()?.to_vec());
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
         }
 
         if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
             return Err(perr(node, "expected Cast to FLOAT after conv"));
         }
         cur = node.outputs[0].clone();
-        node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+        node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
 
         let mut muls = Vec::new();
         while node.op_type == "Mul" && muls.len() < 2 {
@@ -471,7 +525,7 @@ impl HwModule {
             };
             muls.push(scalar_f32(g, s_name, node)?);
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
         }
         if muls.is_empty() {
             return Err(perr(node, "expected rescale Mul after Cast"));
@@ -482,7 +536,7 @@ impl HwModule {
         if node.op_type == "Relu" {
             relu = true;
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
         }
 
         if node.op_type != "QuantizeLinear" {
@@ -518,10 +572,9 @@ impl HwModule {
         deq: &'a Node,
         in_scale: f32,
         cfg: &HwConfig,
-        consumer_of: impl Fn(&str) -> Result<Option<&'a Node>, HwError>,
     ) -> Result<(Stage, String), HwError> {
         let mut cur = deq.outputs[0].clone();
-        let mut node = consumer_of(&cur)?.ok_or_else(|| perr(deq, "dangling act block"))?;
+        let mut node = consumer_of(g, &cur)?.ok_or_else(|| perr(deq, "dangling act block"))?;
 
         let mut f16 = false;
         if node.op_type == "Cast" {
@@ -530,7 +583,7 @@ impl HwModule {
             }
             f16 = true;
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
         }
 
         let act_fn = match node.op_type.as_str() {
@@ -539,14 +592,14 @@ impl HwModule {
             op => return Err(perr(node, format!("expected Tanh/Sigmoid, got {op}"))),
         };
         cur = node.outputs[0].clone();
-        node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after act fn"))?;
+        node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after act fn"))?;
 
         if f16 {
             if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
                 return Err(perr(node, "expected Cast back to FLOAT"));
             }
             cur = node.outputs[0].clone();
-            node = consumer_of(&cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
         }
 
         if node.op_type != "QuantizeLinear" {
@@ -568,7 +621,84 @@ impl HwModule {
 
     /// Execute one inference. Returns the output tensor and the cost
     /// report for this run.
+    ///
+    /// Batches of at least [`HW_PAR_MIN_BATCH`] rows on splittable
+    /// pipelines are scheduled as fixed [`HW_SPLIT_ROWS`]-row sub-batches
+    /// (executed across the global pool, or inline when nested/single
+    /// threaded). Outputs are bit-identical to [`HwModule::run_serial`]
+    /// (integer arithmetic on independent rows, reassembled in chunk
+    /// order). The cost report is the in-order sum of the sub-batch
+    /// reports; because the sub-batch height is a constant of the
+    /// simulated schedule, the report is machine- and thread-count-
+    /// independent (it differs from the whole-batch serial schedule only
+    /// in per-sub-batch tile fill and weight reload, by design).
     pub fn run(&self, input: &Tensor) -> Result<(Tensor, CostReport), HwError> {
+        let batch = input.shape().first().copied().unwrap_or(0);
+        if self.batch_splittable && batch >= HW_PAR_MIN_BATCH {
+            let pieces = batch.div_ceil(HW_SPLIT_ROWS);
+            if pieces >= 2 {
+                return self.run_split(input, ThreadPool::global(), pieces);
+            }
+        }
+        self.run_serial(input)
+    }
+
+    /// Execute with the batch split across `pool` whenever the pipeline and
+    /// batch allow it at all (no minimum-batch heuristic — used by the
+    /// serial-vs-parallel property tests), falling back to serial.
+    pub fn run_on(
+        &self,
+        input: &Tensor,
+        pool: &ThreadPool,
+    ) -> Result<(Tensor, CostReport), HwError> {
+        let batch = input.shape().first().copied().unwrap_or(0);
+        if self.batch_splittable && batch >= 2 && parallel::allow_pool_dispatch() {
+            let pieces = parallel::chunk_count(batch, pool.threads().max(2), 1);
+            if pieces >= 2 {
+                return self.run_split(input, pool, pieces);
+            }
+        }
+        self.run_serial(input)
+    }
+
+    fn run_split(
+        &self,
+        input: &Tensor,
+        pool: &ThreadPool,
+        pieces: usize,
+    ) -> Result<(Tensor, CostReport), HwError> {
+        let batch = input.shape()[0];
+        let chunks = parallel::ranges(batch, pieces);
+        let mut results: Vec<Option<Result<(Tensor, CostReport), HwError>>> =
+            chunks.iter().map(|_| None).collect();
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(chunks.len());
+            for (slot, range) in results.iter_mut().zip(&chunks) {
+                let range = range.clone();
+                tasks.push(Box::new(move || {
+                    let run_chunk = || -> Result<(Tensor, CostReport), HwError> {
+                        let part = input.slice_rows(range.start, range.len())?;
+                        self.run_serial(&part)
+                    };
+                    *slot = Some(run_chunk());
+                }));
+            }
+            pool.run_scoped(tasks);
+        }
+        let mut outputs = Vec::with_capacity(results.len());
+        let mut cost = CostReport::default();
+        for r in results {
+            let (out, c) = r.expect("parallel task completed")?;
+            cost.add(&c);
+            outputs.push(out);
+        }
+        Ok((Tensor::concat_rows(&outputs)?, cost))
+    }
+
+    /// Execute strictly on the calling thread (the reference path the
+    /// parallel executor is tested against).
+    pub fn run_serial(&self, input: &Tensor) -> Result<(Tensor, CostReport), HwError> {
         if input.dtype() != self.input_dtype {
             return Err(HwError::Exec(format!(
                 "input dtype {} != model input {}",
@@ -1047,6 +1177,27 @@ mod tests {
             2,
             2,
         );
+    }
+
+    #[test]
+    fn hw_parallel_run_bit_exact_vs_serial() {
+        let d = decompose(1.0 / 3.0, 31).unwrap();
+        let m = fig1_model(RescaleOp::TwoMul(d), ActKind::None, QType::I8);
+        let hw = HwModule::compile(&m, HwConfig::default()).unwrap();
+        assert!(hw.batch_parallelizable());
+        let pool = crate::parallel::ThreadPool::new(3);
+        for batch in [1usize, 2, 5, 9] {
+            let x =
+                Tensor::from_i8(&[batch, 8], random_i8(batch * 8, batch as u64 + 1)).unwrap();
+            let (serial, sc) = hw.run_serial(&x).unwrap();
+            let (par, pc) = hw.run_on(&x, &pool).unwrap();
+            assert_eq!(serial, par, "batch {batch}");
+            // MAC counts are exact under splitting; cycle estimates may
+            // differ by per-chunk tile fill, macs must not.
+            assert_eq!(sc.macs, pc.macs, "batch {batch}");
+            let (auto, _) = hw.run(&x).unwrap();
+            assert_eq!(serial, auto, "batch {batch} (auto)");
+        }
     }
 
     #[test]

@@ -8,12 +8,18 @@
 //! like any other initializer.
 
 use crate::onnx::check::{check_model, CheckError};
-use crate::onnx::ir::{Dim, Model};
+use crate::onnx::ir::{Dim, Model, ValueInfo};
+use crate::onnx::shape::ValueType;
 use crate::onnx::topo::topo_order;
 use crate::ops::{execute_node, OpError};
+use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Tensor};
 use std::collections::{BTreeMap, HashMap};
 use thiserror::Error;
+
+/// Smallest batch the auto-parallel path will split: below this the pool
+/// dispatch overhead dominates the per-row graph execution.
+pub const PAR_MIN_BATCH: usize = 4;
 
 #[derive(Error, Debug)]
 pub enum SessionError {
@@ -41,6 +47,8 @@ pub enum SessionError {
     Op { node: String, source: OpError },
     #[error("internal: value '{0}' missing during execution")]
     ValueMissing(String),
+    #[error("batch split/concat failed: {0}")]
+    Batch(#[from] crate::tensor::TensorError),
 }
 
 /// Per-node execution statistics (filled when profiling is enabled).
@@ -60,14 +68,61 @@ pub struct Session {
     /// (freed immediately after, keeping peak memory at the graph's
     /// live-set size rather than its total-values size).
     frees: Vec<Vec<String>>,
+    /// `Some(symbol)` when the graph is provably row-independent along a
+    /// leading symbolic batch axis (see [`detect_batch_symbol`]) — the
+    /// precondition for the batch-parallel execution path.
+    batch_symbol: Option<String>,
+    /// Auto-parallel batched `run` calls (on by default; disable with
+    /// [`Session::with_parallelism`] to force the serial path).
+    parallel: bool,
     profile: std::sync::Mutex<HashMap<String, NodeStats>>,
     profiling: bool,
+}
+
+/// Decide whether the model can be executed per-row along a leading
+/// symbolic batch axis. True when:
+///
+/// * every runtime input and every declared output has the SAME symbolic
+///   dim in position 0 and nowhere else (so splitting rows touches nothing
+///   but the batch), and no output is served from an initializer,
+/// * no `Softmax` normalizes over axis 0 (the only admitted operator that
+///   could couple rows; every other standard op in
+///   [`crate::onnx::check::STANDARD_OPS`] is row-independent along a
+///   leading batch axis, which shape inference enforces).
+fn detect_batch_symbol(model: &Model, types: &HashMap<String, ValueType>) -> Option<String> {
+    let g = &model.graph;
+    let inputs = g.runtime_inputs();
+    let first = inputs.first()?;
+    let sym = match first.shape.first()? {
+        Dim::Symbolic(s) => s.clone(),
+        Dim::Fixed(_) => return None,
+    };
+    let leading_only = |vi: &ValueInfo| -> bool {
+        matches!(vi.shape.first(), Some(Dim::Symbolic(s)) if *s == sym)
+            && !vi.shape[1..]
+                .iter()
+                .any(|d| matches!(d, Dim::Symbolic(s) if *s == sym))
+    };
+    if !inputs.iter().all(|vi| leading_only(vi)) {
+        return None;
+    }
+    if g.outputs.is_empty() || !g.outputs.iter().all(|vi| leading_only(vi)) {
+        return None;
+    }
+    if g.outputs.iter().any(|vi| g.initializer(&vi.name).is_some()) {
+        return None;
+    }
+    if crate::onnx::shape::couples_rows_on_axis0(g, types) {
+        return None;
+    }
+    Some(sym)
 }
 
 impl Session {
     /// Validate + plan. Fails on any malformed or non-standard model.
     pub fn new(model: Model) -> Result<Session, SessionError> {
-        check_model(&model)?;
+        let types = check_model(&model)?;
+        let batch_symbol = detect_batch_symbol(&model, &types);
         let order = topo_order(&model.graph)
             .map_err(|e| SessionError::Check(crate::onnx::shape::ShapeError::from(e).into()))?;
 
@@ -96,15 +151,30 @@ impl Session {
             model,
             order,
             frees,
+            batch_symbol,
+            parallel: true,
             profile: std::sync::Mutex::new(HashMap::new()),
             profiling: false,
         })
     }
 
     /// Enable per-node wall-clock accounting (used by the §Perf pass).
+    /// Profiling sessions always execute serially so per-node timings stay
+    /// attributable.
     pub fn with_profiling(mut self) -> Session {
         self.profiling = true;
         self
+    }
+
+    /// Enable/disable the batch-parallel `run` path (default: enabled).
+    pub fn with_parallelism(mut self, enabled: bool) -> Session {
+        self.parallel = enabled;
+        self
+    }
+
+    /// True when this model qualifies for batch-parallel execution.
+    pub fn batch_parallelizable(&self) -> bool {
+        self.batch_symbol.is_some()
     }
 
     pub fn model(&self) -> &Model {
@@ -113,8 +183,114 @@ impl Session {
 
     /// Execute the graph. `feeds` must cover every runtime input; outputs
     /// are returned in graph-output declaration order.
+    ///
+    /// Batches of at least [`PAR_MIN_BATCH`] rows on batch-splittable
+    /// models are split across the global thread pool; results are
+    /// bit-identical to [`Session::run_serial`] (rows are independent and
+    /// reassembled in order — see `tests/parallel_exec.rs`).
     pub fn run(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
-        self.run_observed(feeds, &mut |_, _| {})
+        if self.parallel && !self.profiling {
+            let pool = ThreadPool::global();
+            if let Some(chunks) = self.batch_chunks(feeds, pool, PAR_MIN_BATCH) {
+                return self.run_parallel(feeds, &chunks, pool);
+            }
+            // Not batch-split (small batch or non-splittable model): run on
+            // this thread, leaving the op-level GEMM/conv parallelism free
+            // to engage for large single calls.
+            return self.run_observed(feeds, &mut |_, _| {});
+        }
+        self.run_serial(feeds)
+    }
+
+    /// Execute strictly on the calling thread — [`parallel::serial_scope`]
+    /// also forces the op-level GEMM/conv parallelism to its serial path,
+    /// so this is a true single-thread reference.
+    pub fn run_serial(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
+        parallel::serial_scope(|| self.run_observed(feeds, &mut |_, _| {}))
+    }
+
+    /// Execute with the batch axis split across `pool` whenever the model
+    /// and batch allow it at all (no minimum-batch heuristic — used by the
+    /// serial-vs-parallel property tests), falling back to serial
+    /// otherwise.
+    pub fn run_on(
+        &self,
+        feeds: &[(&str, Tensor)],
+        pool: &ThreadPool,
+    ) -> Result<Vec<Tensor>, SessionError> {
+        if let Some(chunks) = self.batch_chunks(feeds, pool, 2) {
+            return self.run_parallel(feeds, &chunks, pool);
+        }
+        self.run_serial(feeds)
+    }
+
+    /// Plan the row ranges for a parallel run, or `None` when the serial
+    /// path should handle the call (not splittable, too small, nested in a
+    /// pool worker, or feeds that serial validation should reject).
+    fn batch_chunks(
+        &self,
+        feeds: &[(&str, Tensor)],
+        pool: &ThreadPool,
+        min_batch: usize,
+    ) -> Option<Vec<std::ops::Range<usize>>> {
+        self.batch_symbol.as_ref()?;
+        if !parallel::allow_pool_dispatch() {
+            return None;
+        }
+        let batch = feeds.first()?.1.shape().first().copied()?;
+        if feeds.iter().any(|(_, t)| t.shape().first() != Some(&batch)) {
+            return None;
+        }
+        if batch < min_batch.max(2) {
+            return None;
+        }
+        let pieces = parallel::chunk_count(batch, pool.threads().max(2), 1);
+        if pieces < 2 {
+            return None;
+        }
+        Some(parallel::ranges(batch, pieces))
+    }
+
+    /// Run each row-chunk through the serial executor on the pool and
+    /// stitch the outputs back together in chunk order.
+    fn run_parallel(
+        &self,
+        feeds: &[(&str, Tensor)],
+        chunks: &[std::ops::Range<usize>],
+        pool: &ThreadPool,
+    ) -> Result<Vec<Tensor>, SessionError> {
+        let mut results: Vec<Option<Result<Vec<Tensor>, SessionError>>> =
+            chunks.iter().map(|_| None).collect();
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(chunks.len());
+            for (slot, range) in results.iter_mut().zip(chunks) {
+                let range = range.clone();
+                tasks.push(Box::new(move || {
+                    let run_chunk = || -> Result<Vec<Tensor>, SessionError> {
+                        let mut chunk_feeds: Vec<(&str, Tensor)> =
+                            Vec::with_capacity(feeds.len());
+                        for (name, t) in feeds {
+                            chunk_feeds.push((*name, t.slice_rows(range.start, range.len())?));
+                        }
+                        self.run_serial(&chunk_feeds)
+                    };
+                    *slot = Some(run_chunk());
+                }));
+            }
+            pool.run_scoped(tasks);
+        }
+        let mut per_chunk: Vec<Vec<Tensor>> = Vec::with_capacity(results.len());
+        for r in results {
+            per_chunk.push(r.expect("parallel task completed")?);
+        }
+        let n_outputs = self.model.graph.outputs.len();
+        let mut outputs = Vec::with_capacity(n_outputs);
+        for _ in 0..n_outputs {
+            let parts: Vec<Tensor> = per_chunk.iter_mut().map(|c| c.remove(0)).collect();
+            outputs.push(Tensor::concat_rows(&parts)?);
+        }
+        Ok(outputs)
     }
 
     /// Execute while reporting every produced value (name, tensor) to
@@ -335,6 +511,37 @@ mod tests {
             sess.run(&[("nope", x)]),
             Err(SessionError::UnknownFeed(_))
         ));
+    }
+
+    #[test]
+    fn parallel_run_bit_exact_vs_serial() {
+        let sess = Session::new(fig1_model()).unwrap();
+        assert!(sess.batch_parallelizable());
+        let pool = crate::parallel::ThreadPool::new(3);
+        for batch in [1usize, 2, 5, 8, 17] {
+            let data: Vec<i8> = (0..batch * 4).map(|i| (i * 37 % 251) as u8 as i8).collect();
+            let x = Tensor::from_i8(&[batch, 4], data).unwrap();
+            let serial = sess.run_serial(&[("x", x.clone())]).unwrap();
+            let par = sess.run_on(&[("x", x.clone())], &pool).unwrap();
+            assert_eq!(serial, par, "batch {batch}");
+            let auto = sess.run(&[("x", x)]).unwrap();
+            assert_eq!(serial, auto, "batch {batch} (auto)");
+        }
+    }
+
+    #[test]
+    fn fixed_batch_model_not_parallelizable() {
+        use crate::onnx::fixed_dims;
+        let mut b = GraphBuilder::new("fixed");
+        b.input("x", DType::I8, &fixed_dims(&[2, 4]));
+        b.init("w", Tensor::from_i8(&[4, 2], vec![1; 8]).unwrap());
+        let y = b.node("MatMulInteger", &["x", "w"], &[]);
+        b.output(&y, DType::I32, &fixed_dims(&[2, 2]));
+        let sess = Session::new(b.finish_model()).unwrap();
+        assert!(!sess.batch_parallelizable());
+        // Still runs fine through the (serial) path.
+        let x = Tensor::from_i8(&[2, 4], vec![1; 8]).unwrap();
+        sess.run(&[("x", x)]).unwrap();
     }
 
     #[test]

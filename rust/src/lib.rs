@@ -24,6 +24,8 @@
 //!   with [`interp`] bit-exactly (the paper's co-design claim).
 //! * [`train`] — a small fp32 training substrate (MLP/CNN + SGD) so the
 //!   end-to-end example quantizes a really-trained model.
+//! * [`parallel`] — dependency-free thread pool powering the batch-parallel
+//!   interpreter/simulator paths and the blocked GEMM/conv kernels.
 //! * [`runtime`] — PJRT bridge executing the JAX/Pallas AOT artifacts.
 //! * [`coordinator`] — serving layer: router, dynamic batcher, worker pool,
 //!   cross-backend validation, metrics.
@@ -38,6 +40,7 @@ pub mod hwsim;
 pub mod interp;
 pub mod onnx;
 pub mod ops;
+pub mod parallel;
 pub mod proptest_util;
 pub mod quant;
 pub mod rewrite;

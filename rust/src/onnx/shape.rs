@@ -459,6 +459,31 @@ fn reshape_dims(node: &Node, input: &[Dim], spec: &[i64]) -> Result<Vec<Dim>, Sh
     Ok(out)
 }
 
+/// True when some node couples values ACROSS axis 0 — i.e. executing the
+/// graph per-row along a leading batch axis would change results. Among
+/// [`crate::onnx::check::STANDARD_OPS`] only `Softmax` normalizing over
+/// axis 0 can do so; an un-inferable input type is treated as coupling
+/// (conservative). Shared guard of the batch-parallel executors
+/// ([`crate::interp`] and [`crate::hwsim`]) so the row-coupling rule lives
+/// in exactly one place.
+pub fn couples_rows_on_axis0(graph: &Graph, types: &HashMap<String, ValueType>) -> bool {
+    for node in &graph.nodes {
+        if node.op_type != "Softmax" {
+            continue;
+        }
+        let Some(t) = node.inputs.first().and_then(|n| types.get(n.as_str())) else {
+            return true;
+        };
+        let rank = t.shape.len() as i64;
+        let axis = node.attr_int("axis").unwrap_or(-1);
+        let norm = if axis < 0 { axis + rank } else { axis };
+        if norm == 0 {
+            return true;
+        }
+    }
+    false
+}
+
 /// Infer types for every value in the graph. Returns a map from value
 /// name to [`ValueType`]; declared graph outputs are cross-checked.
 pub fn infer_graph(graph: &Graph) -> Result<HashMap<String, ValueType>, ShapeError> {

@@ -9,7 +9,12 @@
 use super::matmul::{gemm_f32, gemm_i32};
 use super::OpError;
 use crate::onnx::shape::ConvAttrs;
+use crate::parallel::{self, ThreadPool};
 use crate::tensor::Tensor;
+
+/// Minimum multiply-accumulates per inference before the conv batch loop is
+/// dispatched to the pool.
+pub const CONV_PAR_MIN_WORK: usize = 32 * 1024;
 
 /// im2col over an i32-widened NCHW input. Output layout is
 /// `[C*kH*kW, oH*oW]` per batch element (column-major patches) so the
@@ -114,16 +119,31 @@ pub fn conv_integer(
 
     let patch_rows = c * kh * kw;
     let patch = oh * ow;
-    let mut col = vec![0i32; patch_rows * patch];
     let mut out = vec![0i32; n * m * patch];
-    for b in 0..n {
-        let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
-        // NOTE on zero points: im2col pads with 0 AFTER zero-point
-        // subtraction, which matches the ONNX contract (padding value is
-        // the zero point, i.e. 0 after widening).
-        im2col(src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
-        let dst = &mut out[b * m * patch..(b + 1) * m * patch];
-        gemm_i32(&wv, &col, m, patch_rows, patch, dst);
+    // NOTE on zero points: im2col pads with 0 AFTER zero-point
+    // subtraction, which matches the ONNX contract (padding value is
+    // the zero point, i.e. 0 after widening).
+    let batch_block = |b0: usize, block: &mut [i32]| {
+        let mut col = vec![0i32; patch_rows * patch];
+        for (bi, dst) in block.chunks_mut(m * patch).enumerate() {
+            let b = b0 + bi;
+            let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+            im2col(src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
+            gemm_i32(&wv, &col, m, patch_rows, patch, dst);
+        }
+    };
+    let pool = ThreadPool::global();
+    let macs_per_image = m * patch * patch_rows;
+    if n >= 2
+        && pool.threads() > 1
+        && parallel::allow_pool_dispatch()
+        && n.saturating_mul(macs_per_image) >= CONV_PAR_MIN_WORK
+    {
+        // Batch elements are independent and each chunk owns a disjoint
+        // slice of `out`, so the parallel sweep is bit-exact vs serial.
+        parallel::par_row_chunks_mut(pool, &mut out, n, m * patch, 1, batch_block);
+    } else {
+        batch_block(0, &mut out);
     }
     Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
 }
@@ -243,6 +263,32 @@ mod tests {
         let yf = conv_f32(&xf, &wf, &attrs_default()).unwrap();
         let yi: Vec<f32> = yi.as_i32().unwrap().iter().map(|&v| v as f32).collect();
         assert_eq!(yi, yf.as_f32().unwrap());
+    }
+
+    #[test]
+    fn conv_integer_parallel_batch_matches_per_image() {
+        // Large enough that the pool path engages (when threads > 1); the
+        // batched result must equal per-image execution bit-for-bit.
+        let (n, c, h, w) = (8usize, 3usize, 16usize, 16usize);
+        let m = 8usize;
+        let mut state = 0x5EEDu64;
+        let mut rnd8 = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 56) as u8 as i8
+        };
+        let x = Tensor::from_i8(&[n, c, h, w], (0..n * c * h * w).map(|_| rnd8()).collect())
+            .unwrap();
+        let wt = Tensor::from_i8(&[m, c, 3, 3], (0..m * c * 9).map(|_| rnd8()).collect())
+            .unwrap();
+        let mut attrs = attrs_default();
+        attrs.pads = [1, 1, 1, 1];
+        let whole = conv_integer(&x, &wt, None, None, &attrs).unwrap();
+        for b in 0..n {
+            let xb = x.slice_rows(b, 1).unwrap();
+            let yb = conv_integer(&xb, &wt, None, None, &attrs).unwrap();
+            let whole_b = whole.slice_rows(b, 1).unwrap();
+            assert_eq!(yb, whole_b, "batch element {b}");
+        }
     }
 
     #[test]

@@ -7,7 +7,22 @@
 //! implemented in full).
 
 use super::OpError;
+use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Tensor};
+
+/// Below this many multiply-accumulates a GEMM is not worth dispatching to
+/// the pool (dispatch + wake-up costs a few microseconds).
+pub const GEMM_PAR_MIN_WORK: usize = 32 * 1024;
+/// Minimum output rows per parallel chunk.
+pub const GEMM_PAR_MIN_ROWS: usize = 2;
+
+/// True when an `m x k x n` GEMM is worth running on the pool.
+fn worth_parallel(pool: &ThreadPool, m: usize, k: usize, n: usize) -> bool {
+    pool.threads() > 1
+        && parallel::allow_pool_dispatch()
+        && m >= 2 * GEMM_PAR_MIN_ROWS
+        && m.saturating_mul(k).saturating_mul(n) >= GEMM_PAR_MIN_WORK
+}
 
 /// Widen an i8/u8 tensor to i32 applying an optional zero point.
 fn widen_with_zp(t: &Tensor, zp: Option<&Tensor>) -> Result<Vec<i32>, OpError> {
@@ -119,6 +134,49 @@ pub fn gemm_i8_i32(a: &[i8], b_w: &[i32], m: usize, k: usize, n: usize, c: &mut 
     }
 }
 
+/// Row-parallel wrapper over [`gemm_i8_i32`]: splits the output rows over
+/// the pool. Integer accumulation per output element is identical to the
+/// serial kernel, so the result is bit-exact regardless of the split.
+pub fn gemm_i8_i32_par(
+    pool: &ThreadPool,
+    a: &[i8],
+    b_w: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [i32],
+) {
+    if !worth_parallel(pool, m, k, n) {
+        gemm_i8_i32(a, b_w, m, k, n, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, GEMM_PAR_MIN_ROWS, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i8_i32(&a[row0 * k..(row0 + rows) * k], b_w, rows, k, n, block);
+    });
+}
+
+/// Row-parallel wrapper over [`gemm_i32`] (bit-exact, see
+/// [`gemm_i8_i32_par`]).
+pub fn gemm_i32_par(
+    pool: &ThreadPool,
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [i32],
+) {
+    if !worth_parallel(pool, m, k, n) {
+        gemm_i32(a, b, m, k, n, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, GEMM_PAR_MIN_ROWS, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i32(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, block);
+    });
+}
+
 /// ONNX `MatMulInteger`: quantized A (i8/u8), quantized B (i8/u8),
 /// optional a_zero_point / b_zero_point, i32 output.
 pub fn matmul_integer(
@@ -132,6 +190,7 @@ pub fn matmul_integer(
     if k != kb {
         return Err(OpError::Semantics(format!("K mismatch {k} vs {kb}")));
     }
+    let pool = ThreadPool::global();
     let mut c = vec![0i32; m * n];
     let a_zp_zero = a_zp.map_or(true, |z| {
         z.as_quantized_i32().map(|v| v == [0]).unwrap_or(false)
@@ -142,12 +201,12 @@ pub fn matmul_integer(
         // widened, once.
         (crate::tensor::TensorData::I8(av), true) => {
             let bw = widen_with_zp(b, b_zp)?;
-            gemm_i8_i32(av, &bw, m, k, n, &mut c);
+            gemm_i8_i32_par(pool, av, &bw, m, k, n, &mut c);
         }
         _ => {
             let aw = widen_with_zp(a, a_zp)?;
             let bw = widen_with_zp(b, b_zp)?;
-            gemm_i32(&aw, &bw, m, k, n, &mut c);
+            gemm_i32_par(pool, &aw, &bw, m, k, n, &mut c);
         }
     }
     let mut out_shape = a.shape()[..a.shape().len() - 1].to_vec();
@@ -284,6 +343,31 @@ mod tests {
         // transB with identity is unchanged
         let y2 = gemm(&a, &b, None, 2.0, 0.0, false, true).unwrap();
         assert_eq!(y2.as_f32().unwrap(), &[2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn parallel_gemm_bit_exact_vs_serial() {
+        // Big enough to clear GEMM_PAR_MIN_WORK so the pool path engages.
+        let (m, k, n) = (64, 32, 32);
+        let mut state = 0xDEADBEEFu64;
+        let mut rnd8 = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 56) as u8 as i8
+        };
+        let a: Vec<i8> = (0..m * k).map(|_| rnd8()).collect();
+        let bw: Vec<i32> = (0..k * n).map(|_| rnd8() as i32).collect();
+        let mut serial = vec![0i32; m * n];
+        gemm_i8_i32(&a, &bw, m, k, n, &mut serial);
+        for threads in [1usize, 2, 3, 8] {
+            let pool = crate::parallel::ThreadPool::new(threads);
+            let mut par = vec![0i32; m * n];
+            gemm_i8_i32_par(&pool, &a, &bw, m, k, n, &mut par);
+            assert_eq!(par, serial, "{threads} threads");
+            let aw: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+            let mut par32 = vec![0i32; m * n];
+            gemm_i32_par(&pool, &aw, &bw, m, k, n, &mut par32);
+            assert_eq!(par32, serial, "{threads} threads (i32 kernel)");
+        }
     }
 
     #[test]

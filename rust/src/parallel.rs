@@ -1,0 +1,381 @@
+//! Dependency-free thread pool for the execution hot paths.
+//!
+//! `rayon`/`tokio` are unavailable offline, so this is a small fixed pool of
+//! `std::thread` workers fed over an `mpsc` channel — the same worker shape
+//! as [`crate::coordinator::server`]'s model lanes. Three layers use it:
+//!
+//! * [`crate::interp::Session::run`] splits the batch axis across workers,
+//! * [`crate::hwsim::HwModule::run`] does the same for the simulator,
+//! * [`crate::ops::matmul`] / [`crate::ops::conv`] split GEMM output rows and
+//!   the conv batch loop for large single calls.
+//!
+//! All parallel paths are **bit-exact** with their serial counterparts: work
+//! is split on independent integer/row boundaries and results are assembled
+//! in deterministic chunk order (never reduced across threads), so thread
+//! timing can not perturb a single output bit. `tests/parallel_exec.rs`
+//! holds the property tests.
+//!
+//! Nested use is safe: a task that reaches a parallel entry point while
+//! already running on a pool worker executes inline instead of re-enqueueing,
+//! which makes pool-starvation deadlocks impossible by construction.
+
+use std::cell::Cell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+    static SERIAL_SCOPE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// True when the current thread is a pool worker (parallel entry points use
+/// this to fall back to inline execution instead of nesting).
+pub fn on_worker_thread() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// True while the current thread is inside [`serial_scope`].
+pub fn in_serial_scope() -> bool {
+    SERIAL_SCOPE.with(|c| c.get() > 0)
+}
+
+/// Should this call site dispatch work to the pool? False on pool workers
+/// (nested parallelism runs inline) and inside [`serial_scope`] (serial
+/// reference paths must stay single-threaded to be meaningful baselines).
+pub fn allow_pool_dispatch() -> bool {
+    !on_worker_thread() && !in_serial_scope()
+}
+
+/// Run `f` with every parallel entry point on this thread forced to its
+/// serial path — the guarantee behind `Session::run_serial` /
+/// `HwModule::run_serial` being true single-thread references.
+pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            SERIAL_SCOPE.with(|c| c.set(c.get() - 1));
+        }
+    }
+    SERIAL_SCOPE.with(|c| c.set(c.get() + 1));
+    let _guard = Guard;
+    f()
+}
+
+/// A fixed-size worker pool executing boxed jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = rx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pqdl-pool-{i}"))
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    loop {
+                        // Hold the lock only while receiving, not while running.
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(job) => job,
+                            Err(_) => return, // all senders dropped
+                        };
+                        job();
+                    }
+                })
+                .expect("spawning pool worker");
+            handles.push(handle);
+        }
+        ThreadPool {
+            tx: Some(tx),
+            handles,
+            threads,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The process-wide pool, sized by `PQDL_THREADS` or the machine's
+    /// available parallelism. Created on first use.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| ThreadPool::new(default_threads()))
+    }
+
+    /// Run borrowed tasks to completion. Blocks until every task has
+    /// finished (this wait is what makes handing `'scope` borrows to
+    /// `'static` workers sound). The last task runs inline on the calling
+    /// thread so the caller is never idle. Panics in tasks are caught on the
+    /// workers and re-raised here once all tasks have settled.
+    ///
+    /// When called from a pool worker (nested parallelism) every task runs
+    /// inline, guaranteeing forward progress.
+    pub fn run_scoped<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if on_worker_thread() || self.threads == 1 || tasks.len() == 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+
+        struct Barrier {
+            remaining: AtomicUsize,
+            panicked: AtomicBool,
+            lock: Mutex<()>,
+            cv: Condvar,
+        }
+        let barrier = Arc::new(Barrier {
+            remaining: AtomicUsize::new(tasks.len() - 1),
+            panicked: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+
+        let mut tasks = tasks;
+        let inline = tasks.pop().expect("tasks checked non-empty");
+        let tx = self.tx.as_ref().expect("pool is live");
+        for task in tasks {
+            // SAFETY: `task` borrows data for 'scope. We block below until
+            // `remaining` reaches zero, i.e. until every enqueued task has
+            // finished running (or panicked inside catch_unwind), before
+            // returning — so no borrow is dangling while a worker can still
+            // touch it. The transmute only erases the lifetime; the layout of
+            // Box<dyn FnOnce() + Send> is identical for both lifetimes.
+            let task: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(task)
+            };
+            let b = barrier.clone();
+            let job: Job = Box::new(move || {
+                if panic::catch_unwind(AssertUnwindSafe(task)).is_err() {
+                    b.panicked.store(true, Ordering::SeqCst);
+                }
+                if b.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _guard = b.lock.lock().unwrap();
+                    b.cv.notify_all();
+                }
+            });
+            tx.send(job).expect("pool workers are down");
+        }
+
+        let inline_panic = panic::catch_unwind(AssertUnwindSafe(inline)).is_err();
+
+        let mut guard = barrier.lock.lock().unwrap();
+        while barrier.remaining.load(Ordering::SeqCst) != 0 {
+            guard = barrier.cv.wait(guard).unwrap();
+        }
+        drop(guard);
+
+        if inline_panic || barrier.panicked.load(Ordering::SeqCst) {
+            panic!("parallel task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Disconnect the channel so workers exit their recv loop, then join.
+        self.tx = None;
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Pool size for [`ThreadPool::global`]: `PQDL_THREADS` when set, otherwise
+/// the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PQDL_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Balanced split of `0..n` into `pieces` contiguous ranges (first `n %
+/// pieces` ranges get one extra element). Deterministic; used everywhere a
+/// parallel path splits work so serial/parallel assembly order is identical.
+pub fn ranges(n: usize, pieces: usize) -> Vec<std::ops::Range<usize>> {
+    let pieces = pieces.clamp(1, n.max(1));
+    let base = n / pieces;
+    let extra = n % pieces;
+    let mut out = Vec::with_capacity(pieces);
+    let mut start = 0;
+    for i in 0..pieces {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// How many chunks to split `items` into for `threads` workers while keeping
+/// at least `min_per_chunk` items per chunk.
+pub fn chunk_count(items: usize, threads: usize, min_per_chunk: usize) -> usize {
+    if items == 0 {
+        return 1;
+    }
+    threads.min(items.div_ceil(min_per_chunk.max(1))).max(1)
+}
+
+/// Parallel iteration over disjoint row-blocks of a mutable buffer laid out
+/// as `rows` rows of `row_len` elements. `f(first_row, block)` is called for
+/// each contiguous block; blocks are split per [`ranges`], so results are
+/// identical to a serial sweep.
+pub fn par_row_chunks_mut<T, F>(
+    pool: &ThreadPool,
+    data: &mut [T],
+    rows: usize,
+    row_len: usize,
+    min_rows_per_chunk: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * row_len);
+    let pieces = chunk_count(rows, pool.threads(), min_rows_per_chunk);
+    if pieces <= 1 || on_worker_thread() {
+        f(0, data);
+        return;
+    }
+    let f = &f;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(pieces);
+    let mut rest = data;
+    for range in ranges(rows, pieces) {
+        let (block, tail) = rest.split_at_mut(range.len() * row_len);
+        rest = tail;
+        let first_row = range.start;
+        tasks.push(Box::new(move || f(first_row, block)));
+    }
+    pool.run_scoped(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_and_balance() {
+        let r = ranges(10, 3);
+        assert_eq!(r, vec![0..4, 4..7, 7..10]);
+        assert_eq!(ranges(2, 8).len(), 2);
+        assert_eq!(ranges(0, 4), vec![0..0]);
+    }
+
+    #[test]
+    fn chunk_count_respects_grain() {
+        assert_eq!(chunk_count(100, 8, 1), 8);
+        assert_eq!(chunk_count(6, 8, 4), 2);
+        assert_eq!(chunk_count(3, 8, 4), 1);
+        assert_eq!(chunk_count(0, 8, 4), 1);
+    }
+
+    #[test]
+    fn run_scoped_executes_all_with_borrows() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0usize; 64];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest = data.as_mut_slice();
+            let mut idx = 0usize;
+            while !rest.is_empty() {
+                let (head, tail) = rest.split_at_mut(8.min(rest.len()));
+                rest = tail;
+                let base = idx;
+                tasks.push(Box::new(move || {
+                    for (i, v) in head.iter_mut().enumerate() {
+                        *v = base + i;
+                    }
+                }));
+                idx += 8;
+            }
+            pool.run_scoped(tasks);
+        }
+        let want: Vec<usize> = (0..64).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn par_row_chunks_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let rows = 17;
+        let row_len = 5;
+        let mut par = vec![0i32; rows * row_len];
+        par_row_chunks_mut(&pool, &mut par, rows, row_len, 1, |first_row, block| {
+            for (r, row) in block.chunks_mut(row_len).enumerate() {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = ((first_row + r) * row_len + c) as i32;
+                }
+            }
+        });
+        let want: Vec<i32> = (0..(rows * row_len) as i32).collect();
+        assert_eq!(par, want);
+    }
+
+    #[test]
+    fn nested_parallelism_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        let hits_ref = &hits;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(move || {
+                    // Inner scoped run from a worker thread must complete
+                    // inline rather than deadlock on a saturated queue.
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            Box::new(move || {
+                                hits_ref.fetch_add(1, Ordering::SeqCst);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    ThreadPool::global().run_scoped(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn task_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("boom")),
+                Box::new(|| {}),
+            ];
+            pool.run_scoped(tasks);
+        }));
+        assert!(result.is_err());
+        // Pool stays usable after a task panic.
+        let ran = AtomicBool::new(false);
+        let ran_ref = &ran;
+        pool.run_scoped(vec![
+            Box::new(move || ran_ref.store(true, Ordering::SeqCst)),
+            Box::new(|| {}),
+        ]);
+        assert!(ran.load(Ordering::SeqCst));
+    }
+}

@@ -1,0 +1,75 @@
+//! Stub PJRT bridge (compiled when the `xla` cargo feature is disabled).
+//!
+//! The real bridge ([`pjrt.rs`](super::pjrt)) needs the `xla` crate, which is
+//! not available in the default offline build. This module mirrors its public
+//! API exactly — [`PjrtEngine`], [`CompiledHlo`], [`tensor_to_literal`],
+//! [`literal_to_tensor`] — so the artifact registry, the thread-confined
+//! service, the coordinator backend and the benches all compile unchanged;
+//! every entry point fails with a clear "built without the xla feature"
+//! error instead of executing.
+
+use crate::tensor::{DType, Tensor};
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str =
+    "pqdl was built without the `xla` feature: the PJRT bridge is unavailable \
+     (vendor the xla crate and rebuild with --features xla)";
+
+/// Placeholder for `xla::Literal` so the conversion helpers keep their
+/// signatures. Cannot be constructed.
+pub struct Literal {
+    _priv: (),
+}
+
+/// Stub of the compiled-HLO handle. Cannot be constructed.
+pub struct CompiledHlo {
+    _priv: (),
+}
+
+/// Stub of the PJRT engine. [`PjrtEngine::cpu`] always fails, so the other
+/// methods are unreachable in practice but still type-check for callers.
+pub struct PjrtEngine {
+    _priv: (),
+}
+
+impl PjrtEngine {
+    /// Always fails in the stub build.
+    pub fn cpu() -> Result<PjrtEngine> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile_hlo_text(&self, _path: &std::path::Path) -> Result<CompiledHlo> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+impl CompiledHlo {
+    pub fn run1(&self, _input: &Tensor, _out_dtype: DType) -> Result<Tensor> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Always fails in the stub build.
+pub fn tensor_to_literal(_t: &Tensor) -> Result<Literal> {
+    bail!(UNAVAILABLE)
+}
+
+/// Always fails in the stub build.
+pub fn literal_to_tensor(_lit: &Literal, _dtype: DType) -> Result<Tensor> {
+    bail!(UNAVAILABLE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjrtEngine::cpu().unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
+    }
+}

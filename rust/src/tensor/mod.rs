@@ -135,6 +135,15 @@ pub enum TensorError {
     BadReshape { numel: usize, shape: Vec<usize> },
     #[error("incompatible shapes for broadcast: {a:?} vs {b:?}")]
     BroadcastMismatch { a: Vec<usize>, b: Vec<usize> },
+    #[error("cannot concatenate along axis 0: {a:?}/{a_dtype} vs {b:?}/{b_dtype}")]
+    ConcatMismatch {
+        a: Vec<usize>,
+        a_dtype: DType,
+        b: Vec<usize>,
+        b_dtype: DType,
+    },
+    #[error("row slice [{off}, {off}+{len}) out of batch {batch}")]
+    RowSliceOutOfRange { off: usize, len: usize, batch: usize },
 }
 
 /// A dense row-major tensor: shape + typed storage.
@@ -353,6 +362,96 @@ impl Tensor {
         }
     }
 
+    /// Elements per row when axis 0 is treated as the batch axis (1 for
+    /// rank-0 tensors).
+    pub fn row_elems(&self) -> usize {
+        self.shape.get(1..).map_or(1, |s| s.iter().product())
+    }
+
+    /// Rows `[off, off + len)` along axis 0 as a new contiguous tensor.
+    /// The batch-parallel executors use this to split work; slicing then
+    /// [`Tensor::concat_rows`] is the identity.
+    pub fn slice_rows(&self, off: usize, len: usize) -> Result<Tensor, TensorError> {
+        let Some(&batch) = self.shape.first() else {
+            return Err(TensorError::RowSliceOutOfRange { off, len, batch: 0 });
+        };
+        if off + len > batch {
+            return Err(TensorError::RowSliceOutOfRange { off, len, batch });
+        }
+        let re = self.row_elems();
+        let (a, b) = (off * re, (off + len) * re);
+        let data = match &self.data {
+            TensorData::F32(v) => TensorData::F32(v[a..b].to_vec()),
+            TensorData::F16(v) => TensorData::F16(v[a..b].to_vec()),
+            TensorData::I8(v) => TensorData::I8(v[a..b].to_vec()),
+            TensorData::U8(v) => TensorData::U8(v[a..b].to_vec()),
+            TensorData::I32(v) => TensorData::I32(v[a..b].to_vec()),
+            TensorData::I64(v) => TensorData::I64(v[a..b].to_vec()),
+            TensorData::Bool(v) => TensorData::Bool(v[a..b].to_vec()),
+        };
+        let mut shape = self.shape.clone();
+        shape[0] = len;
+        Ok(Tensor { shape, data })
+    }
+
+    /// Concatenate tensors along axis 0. Every part must be rank >= 1 and
+    /// share dtype and row shape.
+    pub fn concat_rows(parts: &[Tensor]) -> Result<Tensor, TensorError> {
+        let first = parts.first().ok_or(TensorError::RowSliceOutOfRange {
+            off: 0,
+            len: 0,
+            batch: 0,
+        })?;
+        if first.shape().is_empty() {
+            return Err(TensorError::ConcatMismatch {
+                a: Vec::new(),
+                a_dtype: first.dtype(),
+                b: Vec::new(),
+                b_dtype: first.dtype(),
+            });
+        }
+        let row_shape = &first.shape()[1..];
+        let dtype = first.dtype();
+        let mut total = 0usize;
+        for t in parts {
+            if t.shape().get(1..) != Some(row_shape) || t.dtype() != dtype {
+                return Err(TensorError::ConcatMismatch {
+                    a: first.shape().to_vec(),
+                    a_dtype: dtype,
+                    b: t.shape().to_vec(),
+                    b_dtype: t.dtype(),
+                });
+            }
+            total += t.shape()[0];
+        }
+        let mut shape = vec![total];
+        shape.extend_from_slice(row_shape);
+
+        macro_rules! concat_as {
+            ($variant:ident, $ty:ty) => {{
+                let mut out: Vec<$ty> =
+                    Vec::with_capacity(total * row_shape.iter().product::<usize>());
+                for t in parts {
+                    match t.data() {
+                        TensorData::$variant(v) => out.extend_from_slice(v),
+                        _ => unreachable!("dtype checked above"),
+                    }
+                }
+                TensorData::$variant(out)
+            }};
+        }
+        let data = match dtype {
+            DType::F32 => concat_as!(F32, f32),
+            DType::F16 => concat_as!(F16, F16),
+            DType::I8 => concat_as!(I8, i8),
+            DType::U8 => concat_as!(U8, u8),
+            DType::I32 => concat_as!(I32, i32),
+            DType::I64 => concat_as!(I64, i64),
+            DType::Bool => concat_as!(Bool, bool),
+        };
+        Tensor::new(shape, data)
+    }
+
     /// ONNX `Cast` semantics: float->int truncates toward zero, float->f16
     /// rounds to nearest-even, int widenings are exact. Saturation is NOT
     /// applied (ONNX Cast wraps/UBs on overflow; the paper's patterns only
@@ -537,6 +636,32 @@ mod tests {
     fn broadcast_indexer_scalar() {
         let ix = BroadcastIndexer::new(&[2, 2], &[]);
         assert!((0..4).all(|i| ix.map(i) == 0));
+    }
+
+    #[test]
+    fn slice_concat_rows_round_trip() {
+        let t = Tensor::from_i8(&[4, 3], (0..12).collect()).unwrap();
+        let a = t.slice_rows(0, 1).unwrap();
+        let b = t.slice_rows(1, 3).unwrap();
+        assert_eq!(a.shape(), &[1, 3]);
+        assert_eq!(b.as_i8().unwrap(), &[3, 4, 5, 6, 7, 8, 9, 10, 11]);
+        let back = Tensor::concat_rows(&[a, b]).unwrap();
+        assert_eq!(back, t);
+        assert!(t.slice_rows(3, 2).is_err());
+        assert!(Tensor::scalar_f32(1.0).slice_rows(0, 1).is_err());
+    }
+
+    #[test]
+    fn concat_rows_rejects_mismatch() {
+        let a = Tensor::from_i8(&[1, 3], vec![1, 2, 3]).unwrap();
+        let b = Tensor::from_i8(&[1, 2], vec![1, 2]).unwrap();
+        assert!(Tensor::concat_rows(&[a.clone(), b]).is_err());
+        let c = Tensor::from_u8(&[1, 3], vec![1, 2, 3]).unwrap();
+        assert!(Tensor::concat_rows(&[a, c]).is_err());
+        assert!(Tensor::concat_rows(&[]).is_err());
+        // Rank-0 parts are rejected, not a panic.
+        assert!(Tensor::concat_rows(&[Tensor::scalar_f32(1.0)]).is_err());
+        assert_eq!(Tensor::scalar_f32(1.0).row_elems(), 1);
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! Property tests for the parallel executor: across random batch sizes,
+//! thread counts and figure patterns, the batch-parallel `Session::run` /
+//! `HwModule::run` paths must produce BIT-IDENTICAL outputs to the serial
+//! path. This is the contract that lets the serving layer enable
+//! parallelism unconditionally without touching the paper's narrow-margins
+//! claims.
+
+use pqdl::figures::Figure;
+use pqdl::hwsim::{HwConfig, HwModule};
+use pqdl::interp::Session;
+use pqdl::parallel::ThreadPool;
+use pqdl::proptest_util::{run_prop, Pair, RangeUsize};
+use pqdl::tensor::Tensor;
+
+/// Plan: (batch size, thread count) drawn from ranges that cover the
+/// serial fallback (batch 1, 1 thread) through oversubscribed splits.
+fn plan() -> Pair<RangeUsize, RangeUsize> {
+    Pair(
+        RangeUsize { lo: 1, hi: 33 },
+        RangeUsize { lo: 1, hi: 8 },
+    )
+}
+
+#[test]
+fn session_parallel_matches_serial_across_batches_and_threads() {
+    for fig in Figure::ALL {
+        let sess = Session::new(fig.model()).unwrap();
+        assert!(
+            sess.batch_parallelizable(),
+            "{} should be batch-splittable",
+            fig.name()
+        );
+        run_prop(
+            &format!("session_parallel::{}", fig.name()),
+            &plan(),
+            0xBA7C4 ^ fig.name().len() as u64,
+            12,
+            |&(batch, threads)| {
+                let pool = ThreadPool::new(threads);
+                let x = fig.input(batch, (batch * 31 + threads) as u64);
+                let serial = sess
+                    .run_serial(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let parallel = sess
+                    .run_on(&[("x", x.clone())], &pool)
+                    .map_err(|e| e.to_string())?;
+                if serial != parallel {
+                    return Err(format!(
+                        "{}: serial != parallel at batch {batch}, {threads} threads",
+                        fig.name()
+                    ));
+                }
+                // The default auto path must agree too.
+                let auto = sess.run(&[("x", x)]).map_err(|e| e.to_string())?;
+                if serial != auto {
+                    return Err(format!(
+                        "{}: serial != auto at batch {batch}",
+                        fig.name()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn hwsim_parallel_matches_serial_across_batches_and_threads() {
+    for fig in Figure::ALL {
+        let model = fig.model();
+        let hw = HwModule::compile(&model, HwConfig::default()).unwrap();
+        assert!(
+            hw.batch_parallelizable(),
+            "{} should be batch-splittable on hwsim",
+            fig.name()
+        );
+        run_prop(
+            &format!("hwsim_parallel::{}", fig.name()),
+            &plan(),
+            0x4A5117 ^ fig.name().len() as u64,
+            8,
+            |&(batch, threads)| {
+                let pool = ThreadPool::new(threads);
+                let x = fig.input(batch, (batch * 17 + threads) as u64);
+                let (serial, serial_cost) =
+                    hw.run_serial(&x).map_err(|e| e.to_string())?;
+                let (parallel, parallel_cost) =
+                    hw.run_on(&x, &pool).map_err(|e| e.to_string())?;
+                if serial != parallel {
+                    return Err(format!(
+                        "{}: hwsim serial != parallel at batch {batch}, {threads} threads",
+                        fig.name()
+                    ));
+                }
+                if serial_cost.macs != parallel_cost.macs {
+                    return Err(format!(
+                        "{}: MAC count drifted under splitting ({} vs {})",
+                        fig.name(),
+                        serial_cost.macs,
+                        parallel_cost.macs
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn quantized_float_io_model_parallel_matches_serial() {
+    // The serving-shaped model: float I/O, Gemm chain, Softmax head —
+    // exactly what the coordinator batches. Serial and parallel must agree
+    // bit-for-bit on the f32 outputs too.
+    use pqdl::quant::CalibStrategy;
+    use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+    use pqdl::train::{synthetic_digits, train_classifier, HiddenAct, Mlp};
+
+    let data = synthetic_digits(400, 71);
+    let mut mlp = Mlp::new(&[64, 24, 10], HiddenAct::Relu, 72);
+    train_classifier(&mut mlp, &data, 6, 32, 0.1, 0.9, 73);
+    let model = mlp.to_model("digits_par");
+    let sess = Session::new(model.clone()).unwrap();
+    let batches: Vec<_> = (0..32)
+        .map(|i| {
+            let (x, _) = data.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
+    let preq = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+    let qsess = Session::new(preq).unwrap();
+    assert!(qsess.batch_parallelizable());
+
+    run_prop(
+        "quantized_float_io_parallel",
+        &plan(),
+        0xF10A7,
+        10,
+        |&(batch, threads)| {
+            let pool = ThreadPool::new(threads);
+            let mut xs = Vec::with_capacity(batch * 64);
+            for i in 0..batch {
+                xs.extend_from_slice(data.sample((i * 7) % data.len()).0);
+            }
+            let x = Tensor::from_f32(&[batch, 64], xs).unwrap();
+            let serial = qsess
+                .run_serial(&[("x", x.clone())])
+                .map_err(|e| e.to_string())?;
+            let parallel = qsess
+                .run_on(&[("x", x)], &pool)
+                .map_err(|e| e.to_string())?;
+            if serial != parallel {
+                return Err(format!(
+                    "float-io serial != parallel at batch {batch}, {threads} threads"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
