@@ -30,8 +30,11 @@ use crate::quant::QType;
 use crate::tensor::{DType, Tensor};
 use thiserror::Error;
 
-/// Smallest batch [`HwModule::run`] will split across the pool.
-pub const HW_PAR_MIN_BATCH: usize = 4;
+/// Smallest batch [`HwModule::run`] will split: one full
+/// [`HW_SPLIT_ROWS`]-row sub-batch plus at least one extra row, so the
+/// schedule always has >= 2 pieces (a single piece would be the serial
+/// path with extra bookkeeping).
+pub const HW_PAR_MIN_BATCH: usize = HW_SPLIT_ROWS + 1;
 
 /// Fixed sub-batch height [`HwModule::run`] schedules batched inference
 /// in. This is a CONSTANT of the simulated schedule — deliberately NOT the
@@ -155,9 +158,11 @@ fn stages_batch_splittable(stages: &[Stage], model: &Model) -> bool {
                 }
             }
             Stage::Reshape { spec } => {
-                // Only batch-preserving specs (leading 0 = copy, or -1 =
-                // infer) keep rows independent.
-                if spec.first().map_or(true, |&d| d != 0 && d != -1) {
+                // Only an explicit leading 0 (copy the batch dim) provably
+                // keeps rows independent. A leading -1 can FOLD rows (e.g.
+                // spec [-1, 2*row_elems] merges row pairs), which would make
+                // the split path silently diverge from the serial one.
+                if spec.first() != Some(&0) {
                     return false;
                 }
             }
@@ -383,11 +388,7 @@ impl HwModule {
     }
 
     /// Lift MatMulInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
-    fn lift_fc<'a>(
-        g: &'a Graph,
-        mm: &'a Node,
-        cfg: &HwConfig,
-    ) -> Result<(Stage, String), HwError> {
+    fn lift_fc(g: &Graph, mm: &Node, cfg: &HwConfig) -> Result<(Stage, String), HwError> {
         let w_t = g
             .initializer(&mm.inputs[1])
             .ok_or_else(|| perr(mm, "weight must be initializer"))?;
@@ -473,11 +474,7 @@ impl HwModule {
     }
 
     /// Lift ConvInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
-    fn lift_conv<'a>(
-        g: &'a Graph,
-        cv: &'a Node,
-        cfg: &HwConfig,
-    ) -> Result<(Stage, String), HwError> {
+    fn lift_conv(g: &Graph, cv: &Node, cfg: &HwConfig) -> Result<(Stage, String), HwError> {
         let w_t = g
             .initializer(&cv.inputs[1])
             .ok_or_else(|| perr(cv, "kernel must be initializer"))?;
@@ -567,9 +564,9 @@ impl HwModule {
 
     /// Lift DequantizeLinear [+Cast f16] + Tanh/Sigmoid [+Cast f32] +
     /// QuantizeLinear into an activation ROM.
-    fn lift_act<'a>(
-        g: &'a Graph,
-        deq: &'a Node,
+    fn lift_act(
+        g: &Graph,
+        deq: &Node,
         in_scale: f32,
         cfg: &HwConfig,
     ) -> Result<(Stage, String), HwError> {
@@ -684,7 +681,17 @@ impl HwModule {
                     *slot = Some(run_chunk());
                 }));
             }
-            pool.run_scoped(tasks);
+            // Inside `serial_scope` the sub-batch SCHEDULE must stay (the
+            // cost report is a constant of it) but execution must remain
+            // single-threaded, so run the chunks inline instead of
+            // dispatching to the pool.
+            if parallel::allow_pool_dispatch() {
+                pool.run_scoped(tasks);
+            } else {
+                for task in tasks {
+                    task();
+                }
+            }
         }
         let mut outputs = Vec::with_capacity(results.len());
         let mut cost = CostReport::default();

@@ -191,8 +191,13 @@ impl Session {
     pub fn run(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
         if self.parallel && !self.profiling {
             let pool = ThreadPool::global();
-            if let Some(chunks) = self.batch_chunks(feeds, pool, PAR_MIN_BATCH) {
-                return self.run_parallel(feeds, &chunks, pool);
+            // A 1-thread pool would execute the chunks sequentially anyway,
+            // so splitting there is pure slice/concat overhead (run_on keeps
+            // chunking on tiny pools deliberately, for the property tests).
+            if pool.threads() > 1 {
+                if let Some(chunks) = self.batch_chunks(feeds, pool, PAR_MIN_BATCH) {
+                    return self.run_parallel(feeds, &chunks, pool);
+                }
             }
             // Not batch-split (small batch or non-splittable model): run on
             // this thread, leaving the op-level GEMM/conv parallelism free
