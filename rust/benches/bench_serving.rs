@@ -73,6 +73,40 @@ fn main() {
         );
     }
 
+    // --- planned vs legacy interpreter ----------------------------------
+    // Same workloads, both strictly serial: isolates the compile-once win
+    // (slot-indexed store + pre-bound kernels vs per-call string hashing +
+    // attribute re-parsing). `run_unplanned` IS the pre-plan interpreter,
+    // retained for exactly this comparison and the bit-identity proptests.
+    section("planned vs legacy interpreter (compile-once execution plans)");
+    println!(
+        "{:<8} | {:>14} | {:>14} | {:>8}",
+        "batch", "legacy itm/s", "planned itm/s", "speedup"
+    );
+    for batch in [1usize, 8, 32, 128] {
+        let x = batch_of(batch);
+        let legacy = {
+            let x = x.clone();
+            let s = &qsess;
+            bench_auto(&format!("legacy b{batch}"), batch, target_ms, move || {
+                s.run_unplanned(&[("x", x.clone())]).expect("legacy run");
+            })
+        };
+        let planned = {
+            let x = x.clone();
+            let s = &qsess;
+            bench_auto(&format!("planned b{batch}"), batch, target_ms, move || {
+                s.run_serial(&[("x", x.clone())]).expect("planned run");
+            })
+        };
+        println!(
+            "{batch:<8} | {:>14.1} | {:>14.1} | {:>7.2}x",
+            legacy.throughput_per_s,
+            planned.throughput_per_s,
+            planned.throughput_per_s / legacy.throughput_per_s
+        );
+    }
+
     section("dynamic batching sweep (16 closed-loop clients x 150 reqs)");
     println!(
         "{:<28} | {:>9} | {:>10} | {:>8} | {:>8} | {:>8}",

@@ -19,15 +19,28 @@ pub trait Backend: Send + Sync {
     fn run_batch(&self, input: &Tensor) -> Result<Tensor>;
 }
 
-/// Interpreter backend ("standard tool" path).
+/// Interpreter backend ("standard tool" path). `Session::new` compiled
+/// the model into an execution plan once; serving a batch is a plan run
+/// over the borrowed input — no per-request name resolution or feed
+/// clone.
 pub struct InterpBackend {
     session: Session,
+    input_name: String,
 }
 
 impl InterpBackend {
     pub fn new(model: Model) -> Result<InterpBackend> {
+        let session = Session::new(model).map_err(|e| anyhow!("{e}"))?;
+        let input_name = session
+            .model()
+            .graph
+            .runtime_inputs()
+            .first()
+            .map(|vi| vi.name.clone())
+            .ok_or_else(|| anyhow!("model has no inputs"))?;
         Ok(InterpBackend {
-            session: Session::new(model).map_err(|e| anyhow!("{e}"))?,
+            session,
+            input_name,
         })
     }
 }
@@ -38,17 +51,9 @@ impl Backend for InterpBackend {
     }
 
     fn run_batch(&self, input: &Tensor) -> Result<Tensor> {
-        let name = self
-            .session
-            .model()
-            .graph
-            .runtime_inputs()
-            .first()
-            .map(|vi| vi.name.clone())
-            .ok_or_else(|| anyhow!("model has no inputs"))?;
         let mut out = self
             .session
-            .run(&[(&name, input.clone())])
+            .run_refs(&[(self.input_name.as_str(), input)])
             .map_err(|e| anyhow!("{e}"))?;
         Ok(out.remove(0))
     }

@@ -64,22 +64,51 @@ fn perr(node: &Node, msg: impl Into<String>) -> HwError {
     }
 }
 
-/// The sole consumer of a value, or `None` at the end of the chain. The
-/// emitted pre-quantized graphs are linear chains; a value with multiple
-/// consumers is outside this compiler's pattern language.
-fn consumer_of<'a>(g: &'a Graph, value: &str) -> Result<Option<&'a Node>, HwError> {
-    let mut found: Option<&'a Node> = None;
-    for n in &g.nodes {
-        if n.inputs.iter().any(|i| i == value) {
-            if found.is_some() {
-                return Err(HwError::Unsupported(format!(
-                    "value '{value}' has multiple consumers; hw compiler handles chains"
-                )));
+/// Plan-time value -> consumer index, built in ONE pass over the graph so
+/// chain walking is O(1) per edge instead of an O(nodes) scan per lookup.
+/// The emitted pre-quantized graphs are linear chains; a value with
+/// multiple consumers is outside this compiler's pattern language, flagged
+/// here and reported when (and only when) the chain walk reaches it.
+enum ConsumerEntry {
+    One(usize),
+    Multiple,
+}
+
+struct ConsumerIndex<'g> {
+    map: std::collections::HashMap<&'g str, ConsumerEntry>,
+}
+
+impl<'g> ConsumerIndex<'g> {
+    fn build(g: &'g Graph) -> ConsumerIndex<'g> {
+        let mut map = std::collections::HashMap::new();
+        for (idx, n) in g.nodes.iter().enumerate() {
+            for input in &n.inputs {
+                if input.is_empty() {
+                    continue;
+                }
+                // A node listing the value twice (e.g. Mul(x, x)) is one
+                // consumer, matching the old per-node scan.
+                let entry = map.entry(input.as_str()).or_insert(ConsumerEntry::One(idx));
+                if let ConsumerEntry::One(prev) = entry {
+                    if *prev != idx {
+                        *entry = ConsumerEntry::Multiple;
+                    }
+                }
             }
-            found = Some(n);
+        }
+        ConsumerIndex { map }
+    }
+
+    /// The sole consumer of a value, or `None` at the end of the chain.
+    fn sole_consumer(&self, g: &'g Graph, value: &str) -> Result<Option<&'g Node>, HwError> {
+        match self.map.get(value) {
+            None => Ok(None),
+            Some(ConsumerEntry::One(idx)) => Ok(Some(&g.nodes[*idx])),
+            Some(ConsumerEntry::Multiple) => Err(HwError::Unsupported(format!(
+                "value '{value}' has multiple consumers; hw compiler handles chains"
+            ))),
         }
     }
-    Ok(found)
 }
 
 /// Integer rescale constants lifted from the model.
@@ -277,6 +306,10 @@ fn rescale_sat(acc: i32, r: &HwRescale, rounding: Rounding, lo: i32, hi: i32) ->
 
 impl HwModule {
     /// Compile a pre-quantized standard-ONNX model for this hardware.
+    ///
+    /// Chain walking runs over a plan-time [`ConsumerIndex`] (one pass to
+    /// build, O(1) per hop) with borrowed value names — the compile pass
+    /// allocates nothing per node beyond the lifted stages themselves.
     pub fn compile(model: &Model, cfg: HwConfig) -> Result<HwModule, HwError> {
         let g = &model.graph;
         let inputs = g.runtime_inputs();
@@ -286,16 +319,17 @@ impl HwModule {
             ));
         }
         let input_dtype = inputs[0].dtype;
-        let output_name = g.outputs[0].name.clone();
+        let output_name = g.outputs[0].name.as_str();
+        let idx = ConsumerIndex::build(g);
 
         let mut stages = Vec::new();
-        let mut cur = inputs[0].name.clone();
+        let mut cur: &str = inputs[0].name.as_str();
 
         loop {
             if cur == output_name {
                 break;
             }
-            let node = match consumer_of(g, &cur)? {
+            let node = match idx.sole_consumer(g, cur)? {
                 Some(n) => n,
                 None => break,
             };
@@ -305,31 +339,31 @@ impl HwModule {
                     let scale = scalar_f32(g, &node.inputs[1], node)?;
                     let qtype = zp_qtype(g, &node.inputs[2], node)?;
                     stages.push(Stage::QuantizeInput { scale, qtype });
-                    cur = node.outputs[0].clone();
+                    cur = node.outputs[0].as_str();
                 }
                 "MatMulInteger" => {
-                    let (stage, out) = Self::lift_fc(g, node, &cfg)?;
+                    let (stage, out) = Self::lift_fc(g, &idx, node, &cfg)?;
                     stages.push(stage);
                     cur = out;
                 }
                 "ConvInteger" => {
-                    let (stage, out) = Self::lift_conv(g, node, &cfg)?;
+                    let (stage, out) = Self::lift_conv(g, &idx, node, &cfg)?;
                     stages.push(stage);
                     cur = out;
                 }
                 "DequantizeLinear" => {
                     let in_scale = scalar_f32(g, &node.inputs[1], node)?;
                     // Look ahead: activation tail or output edge?
-                    let next = consumer_of(g, &node.outputs[0])?;
+                    let next = idx.sole_consumer(g, &node.outputs[0])?;
                     match next.map(|n| n.op_type.as_str()) {
                         Some("Cast") | Some("Tanh") | Some("Sigmoid") => {
-                            let (stage, out) = Self::lift_act(g, node, in_scale, &cfg)?;
+                            let (stage, out) = Self::lift_act(g, &idx, node, in_scale, &cfg)?;
                             stages.push(stage);
                             cur = out;
                         }
                         _ => {
                             stages.push(Stage::DequantizeOutput { scale: in_scale });
-                            cur = node.outputs[0].clone();
+                            cur = node.outputs[0].as_str();
                         }
                     }
                 }
@@ -341,13 +375,13 @@ impl HwModule {
                         kernel: [kernel[0] as usize, kernel[1] as usize],
                         attrs: ConvAttrs::from_node(node),
                     });
-                    cur = node.outputs[0].clone();
+                    cur = node.outputs[0].as_str();
                 }
                 "Flatten" => {
                     stages.push(Stage::Flatten {
                         axis: node.attr_int("axis").unwrap_or(1) as usize,
                     });
-                    cur = node.outputs[0].clone();
+                    cur = node.outputs[0].as_str();
                 }
                 "Reshape" => {
                     let spec = g
@@ -356,16 +390,16 @@ impl HwModule {
                         .as_i64()?
                         .to_vec();
                     stages.push(Stage::Reshape { spec });
-                    cur = node.outputs[0].clone();
+                    cur = node.outputs[0].as_str();
                 }
                 "Softmax" => {
                     stages.push(Stage::SoftmaxHost {
                         axis: node.attr_int("axis").unwrap_or(-1),
                     });
-                    cur = node.outputs[0].clone();
+                    cur = node.outputs[0].as_str();
                 }
                 "Identity" => {
-                    cur = node.outputs[0].clone();
+                    cur = node.outputs[0].as_str();
                 }
                 op => {
                     return Err(perr(node, format!("unsupported op '{op}' in hw chain")))
@@ -388,7 +422,12 @@ impl HwModule {
     }
 
     /// Lift MatMulInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
-    fn lift_fc(g: &Graph, mm: &Node, cfg: &HwConfig) -> Result<(Stage, String), HwError> {
+    fn lift_fc<'g>(
+        g: &'g Graph,
+        idx: &ConsumerIndex<'g>,
+        mm: &'g Node,
+        cfg: &HwConfig,
+    ) -> Result<(Stage, &'g str), HwError> {
         let w_t = g
             .initializer(&mm.inputs[1])
             .ok_or_else(|| perr(mm, "weight must be initializer"))?;
@@ -398,8 +437,10 @@ impl HwModule {
         let (k, n) = (w_t.shape()[0], w_t.shape()[1]);
         let w = w_t.as_quantized_i32()?;
 
-        let mut cur = mm.outputs[0].clone();
-        let mut node = consumer_of(g, &cur)?.ok_or_else(|| perr(mm, "dangling FC block"))?;
+        let mut cur: &str = mm.outputs[0].as_str();
+        let mut node = idx
+            .sole_consumer(g, cur)?
+            .ok_or_else(|| perr(mm, "dangling FC block"))?;
 
         // Optional bias Add.
         let mut bias = None;
@@ -413,16 +454,20 @@ impl HwModule {
                 .initializer(bias_name)
                 .ok_or_else(|| perr(node, "bias must be initializer"))?;
             bias = Some(b.as_i32()?.to_vec());
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
+            cur = node.outputs[0].as_str();
+            node = idx
+                .sole_consumer(g, cur)?
+                .ok_or_else(|| perr(node, "dangling after bias"))?;
         }
 
         // Cast INT32 -> FLOAT.
         if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
             return Err(perr(node, "expected Cast to FLOAT after accumulate"));
         }
-        cur = node.outputs[0].clone();
-        node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+        cur = node.outputs[0].as_str();
+        node = idx
+            .sole_consumer(g, cur)?
+            .ok_or_else(|| perr(node, "dangling after cast"))?;
 
         // One or two Muls.
         let mut muls = Vec::new();
@@ -433,8 +478,10 @@ impl HwModule {
                 &node.inputs[0]
             };
             muls.push(scalar_f32(g, s_name, node)?);
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
+            cur = node.outputs[0].as_str();
+            node = idx
+                .sole_consumer(g, cur)?
+                .ok_or_else(|| perr(node, "dangling after rescale"))?;
         }
         if muls.is_empty() {
             return Err(perr(node, "expected rescale Mul after Cast"));
@@ -445,8 +492,9 @@ impl HwModule {
         let mut relu = false;
         if node.op_type == "Relu" {
             relu = true;
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
+            node = idx
+                .sole_consumer(g, node.outputs[0].as_str())?
+                .ok_or_else(|| perr(node, "dangling after relu"))?;
         }
 
         // Round + clip stage.
@@ -469,12 +517,17 @@ impl HwModule {
                 relu,
                 out_qtype,
             },
-            node.outputs[0].clone(),
+            node.outputs[0].as_str(),
         ))
     }
 
     /// Lift ConvInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
-    fn lift_conv(g: &Graph, cv: &Node, cfg: &HwConfig) -> Result<(Stage, String), HwError> {
+    fn lift_conv<'g>(
+        g: &'g Graph,
+        idx: &ConsumerIndex<'g>,
+        cv: &'g Node,
+        cfg: &HwConfig,
+    ) -> Result<(Stage, &'g str), HwError> {
         let w_t = g
             .initializer(&cv.inputs[1])
             .ok_or_else(|| perr(cv, "kernel must be initializer"))?;
@@ -486,8 +539,10 @@ impl HwModule {
         let w = w_t.as_quantized_i32()?;
         let attrs = ConvAttrs::from_node(cv);
 
-        let mut cur = cv.outputs[0].clone();
-        let mut node = consumer_of(g, &cur)?.ok_or_else(|| perr(cv, "dangling conv block"))?;
+        let mut cur: &str = cv.outputs[0].as_str();
+        let mut node = idx
+            .sole_consumer(g, cur)?
+            .ok_or_else(|| perr(cv, "dangling conv block"))?;
 
         let mut bias = None;
         if node.op_type == "Add" {
@@ -503,15 +558,19 @@ impl HwModule {
                 return Err(perr(node, "conv bias must have M elements"));
             }
             bias = Some(b.as_i32()?.to_vec());
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after bias"))?;
+            cur = node.outputs[0].as_str();
+            node = idx
+                .sole_consumer(g, cur)?
+                .ok_or_else(|| perr(node, "dangling after bias"))?;
         }
 
         if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
             return Err(perr(node, "expected Cast to FLOAT after conv"));
         }
-        cur = node.outputs[0].clone();
-        node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+        cur = node.outputs[0].as_str();
+        node = idx
+            .sole_consumer(g, cur)?
+            .ok_or_else(|| perr(node, "dangling after cast"))?;
 
         let mut muls = Vec::new();
         while node.op_type == "Mul" && muls.len() < 2 {
@@ -521,8 +580,10 @@ impl HwModule {
                 &node.inputs[0]
             };
             muls.push(scalar_f32(g, s_name, node)?);
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after rescale"))?;
+            cur = node.outputs[0].as_str();
+            node = idx
+                .sole_consumer(g, cur)?
+                .ok_or_else(|| perr(node, "dangling after rescale"))?;
         }
         if muls.is_empty() {
             return Err(perr(node, "expected rescale Mul after Cast"));
@@ -532,8 +593,9 @@ impl HwModule {
         let mut relu = false;
         if node.op_type == "Relu" {
             relu = true;
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after relu"))?;
+            node = idx
+                .sole_consumer(g, node.outputs[0].as_str())?
+                .ok_or_else(|| perr(node, "dangling after relu"))?;
         }
 
         if node.op_type != "QuantizeLinear" {
@@ -558,20 +620,22 @@ impl HwModule {
                 relu,
                 out_qtype,
             },
-            node.outputs[0].clone(),
+            node.outputs[0].as_str(),
         ))
     }
 
     /// Lift DequantizeLinear [+Cast f16] + Tanh/Sigmoid [+Cast f32] +
     /// QuantizeLinear into an activation ROM.
-    fn lift_act(
-        g: &Graph,
-        deq: &Node,
+    fn lift_act<'g>(
+        g: &'g Graph,
+        idx: &ConsumerIndex<'g>,
+        deq: &'g Node,
         in_scale: f32,
         cfg: &HwConfig,
-    ) -> Result<(Stage, String), HwError> {
-        let mut cur = deq.outputs[0].clone();
-        let mut node = consumer_of(g, &cur)?.ok_or_else(|| perr(deq, "dangling act block"))?;
+    ) -> Result<(Stage, &'g str), HwError> {
+        let mut node = idx
+            .sole_consumer(g, deq.outputs[0].as_str())?
+            .ok_or_else(|| perr(deq, "dangling act block"))?;
 
         let mut f16 = false;
         if node.op_type == "Cast" {
@@ -579,8 +643,9 @@ impl HwModule {
                 return Err(perr(node, "expected Cast to FLOAT16 in act block"));
             }
             f16 = true;
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+            node = idx
+                .sole_consumer(g, node.outputs[0].as_str())?
+                .ok_or_else(|| perr(node, "dangling after cast"))?;
         }
 
         let act_fn = match node.op_type.as_str() {
@@ -588,15 +653,17 @@ impl HwModule {
             "Sigmoid" => ActFn::Sigmoid,
             op => return Err(perr(node, format!("expected Tanh/Sigmoid, got {op}"))),
         };
-        cur = node.outputs[0].clone();
-        node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after act fn"))?;
+        node = idx
+            .sole_consumer(g, node.outputs[0].as_str())?
+            .ok_or_else(|| perr(node, "dangling after act fn"))?;
 
         if f16 {
             if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
                 return Err(perr(node, "expected Cast back to FLOAT"));
             }
-            cur = node.outputs[0].clone();
-            node = consumer_of(g, &cur)?.ok_or_else(|| perr(node, "dangling after cast"))?;
+            node = idx
+                .sole_consumer(g, node.outputs[0].as_str())?
+                .ok_or_else(|| perr(node, "dangling after cast"))?;
         }
 
         if node.op_type != "QuantizeLinear" {
@@ -612,7 +679,7 @@ impl HwModule {
                 lut,
                 f16_evaluated: f16,
             },
-            node.outputs[0].clone(),
+            node.outputs[0].as_str(),
         ))
     }
 
@@ -658,6 +725,11 @@ impl HwModule {
         self.run_serial(input)
     }
 
+    /// Scatter the fixed sub-batch schedule over the pool and gather the
+    /// chunk outputs + cost reports in order, via the shared
+    /// [`parallel::scatter_gather`] (which also keeps the chunk SCHEDULE
+    /// under `serial_scope` — the cost report is a constant of it — while
+    /// running the chunks inline there).
     fn run_split(
         &self,
         input: &Tensor,
@@ -666,37 +738,13 @@ impl HwModule {
     ) -> Result<(Tensor, CostReport), HwError> {
         let batch = input.shape()[0];
         let chunks = parallel::ranges(batch, pieces);
-        let mut results: Vec<Option<Result<(Tensor, CostReport), HwError>>> =
-            chunks.iter().map(|_| None).collect();
-        {
-            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(chunks.len());
-            for (slot, range) in results.iter_mut().zip(&chunks) {
-                let range = range.clone();
-                tasks.push(Box::new(move || {
-                    let run_chunk = || -> Result<(Tensor, CostReport), HwError> {
-                        let part = input.slice_rows(range.start, range.len())?;
-                        self.run_serial(&part)
-                    };
-                    *slot = Some(run_chunk());
-                }));
-            }
-            // Inside `serial_scope` the sub-batch SCHEDULE must stay (the
-            // cost report is a constant of it) but execution must remain
-            // single-threaded, so run the chunks inline instead of
-            // dispatching to the pool.
-            if parallel::allow_pool_dispatch() {
-                pool.run_scoped(tasks);
-            } else {
-                for task in tasks {
-                    task();
-                }
-            }
-        }
+        let results = parallel::scatter_gather(pool, &chunks, |range| {
+            let part = input.slice_rows(range.start, range.len())?;
+            self.run_serial(&part)
+        })?;
         let mut outputs = Vec::with_capacity(results.len());
         let mut cost = CostReport::default();
-        for r in results {
-            let (out, c) = r.expect("parallel task completed")?;
+        for (out, c) in results {
             cost.add(&c);
             outputs.push(out);
         }

@@ -16,5 +16,5 @@ pub mod lut;
 
 pub use config::{HwConfig, Rounding};
 pub use cost::CostReport;
-pub use exec::{HwModule, HwError, Stage};
+pub use exec::{HwModule, HwError, Stage, HW_PAR_MIN_BATCH, HW_SPLIT_ROWS};
 pub use lut::{ActEval, ActFn, ActLut};

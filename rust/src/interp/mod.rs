@@ -1,11 +1,21 @@
 //! Generic graph executor — the "standard ONNX tool" of the reproduction.
 //!
-//! [`Session`] validates a model once (structure, standard-ops-only,
+//! [`Session::new`] validates a model once (structure, standard-ops-only,
 //! shape/dtype inference), plans an execution order and value lifetimes,
-//! then executes feeds with zero quantization-specific logic. A
-//! pre-quantized model runs here *because* it is expressed in standard
+//! then **lowers the graph into a [`CompiledPlan`]**: value names interned
+//! to dense slots, initializers resolved to indices, attributes parsed
+//! into pre-bound [`crate::ops::Kernel`]s, per-step frees as slot lists.
+//! Executing a feed set is then a tight loop over `Vec`-indexed slots —
+//! no string hashing, no per-node attribute parsing, no feed cloning.
+//!
+//! A pre-quantized model runs here *because* it is expressed in standard
 //! operators (paper goal 2) — the session treats `Quant_scale` exactly
-//! like any other initializer.
+//! like any other initializer. The pre-plan string-keyed interpreter is
+//! retained as [`Session::run_unplanned`], serving as the differential-
+//! test oracle (`tests/executor_plan.rs`) and the legacy baseline in
+//! `bench_serving`.
+
+mod plan;
 
 use crate::onnx::check::{check_model, CheckError};
 use crate::onnx::ir::{Dim, Model, ValueInfo};
@@ -14,12 +24,18 @@ use crate::onnx::topo::topo_order;
 use crate::ops::{execute_node, OpError};
 use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Tensor};
+use plan::{resolve_src, CompiledPlan, Src, Value};
 use std::collections::{BTreeMap, HashMap};
 use thiserror::Error;
 
 /// Smallest batch the auto-parallel path will split: below this the pool
 /// dispatch overhead dominates the per-row graph execution.
 pub const PAR_MIN_BATCH: usize = 4;
+
+/// Node inputs at or below this arity resolve into a stack array in the
+/// hot loop (every admitted operator has <= 4 inputs; the heap fallback
+/// only exists for malformed hand-built nodes).
+const STACK_INPUTS: usize = 8;
 
 #[derive(Error, Debug)]
 pub enum SessionError {
@@ -60,14 +76,23 @@ pub struct NodeStats {
     pub calls: u64,
 }
 
+/// Per-plan-step accumulator behind the profiler: stats are keyed by
+/// schedule position, so a profiled run takes ONE lock at the end instead
+/// of a `HashMap` entry lock per node.
+#[derive(Clone, Default)]
+struct StepProfile {
+    nanos: u128,
+    calls: u64,
+}
+
 /// A validated, planned, executable model.
 pub struct Session {
     model: Model,
-    order: Vec<usize>,
-    /// For each schedule position, values whose last use is that node
-    /// (freed immediately after, keeping peak memory at the graph's
-    /// live-set size rather than its total-values size).
-    frees: Vec<Vec<String>>,
+    plan: CompiledPlan,
+    /// Frees as value names, for the legacy string-keyed path only
+    /// (kept so [`Session::run_unplanned`] reproduces the pre-plan
+    /// interpreter faithfully, including its memory behavior).
+    unplanned_frees: Vec<Vec<String>>,
     /// `Some(symbol)` when the graph is provably row-independent along a
     /// leading symbolic batch axis (see [`detect_batch_symbol`]) — the
     /// precondition for the batch-parallel execution path.
@@ -75,7 +100,7 @@ pub struct Session {
     /// Auto-parallel batched `run` calls (on by default; disable with
     /// [`Session::with_parallelism`] to force the serial path).
     parallel: bool,
-    profile: std::sync::Mutex<HashMap<String, NodeStats>>,
+    profile: std::sync::Mutex<Vec<StepProfile>>,
     profiling: bool,
 }
 
@@ -119,41 +144,34 @@ fn detect_batch_symbol(model: &Model, types: &HashMap<String, ValueType>) -> Opt
 }
 
 impl Session {
-    /// Validate + plan. Fails on any malformed or non-standard model.
+    /// Validate + plan + lower. Fails on any malformed or non-standard
+    /// model — including operators the executor cannot run, which now
+    /// error here (plan time) instead of at the first `run`.
     pub fn new(model: Model) -> Result<Session, SessionError> {
         let types = check_model(&model)?;
         let batch_symbol = detect_batch_symbol(&model, &types);
         let order = topo_order(&model.graph)
             .map_err(|e| SessionError::Check(crate::onnx::shape::ShapeError::from(e).into()))?;
-
-        // Last-use analysis over the schedule.
-        let mut last_use: HashMap<&str, usize> = HashMap::new();
-        for (pos, &idx) in order.iter().enumerate() {
-            for input in &model.graph.nodes[idx].inputs {
-                if !input.is_empty() {
-                    last_use.insert(input, pos);
-                }
-            }
-        }
-        // Graph outputs live forever.
-        for out in &model.graph.outputs {
-            last_use.remove(out.name.as_str());
-        }
-        // Initializers are owned by the model, not the value store.
-        let mut frees: Vec<Vec<String>> = vec![Vec::new(); order.len()];
-        for (value, pos) in last_use {
-            if model.graph.initializer(value).is_none() {
-                frees[pos].push(value.to_string());
-            }
-        }
+        let plan = CompiledPlan::compile(&model, &order)?;
+        let unplanned_frees = plan
+            .steps
+            .iter()
+            .map(|s| {
+                s.frees
+                    .iter()
+                    .map(|&f| plan.names[f as usize].clone())
+                    .collect()
+            })
+            .collect();
+        let profile = std::sync::Mutex::new(vec![StepProfile::default(); plan.steps.len()]);
 
         Ok(Session {
             model,
-            order,
-            frees,
+            plan,
+            unplanned_frees,
             batch_symbol,
             parallel: true,
-            profile: std::sync::Mutex::new(HashMap::new()),
+            profile,
             profiling: false,
         })
     }
@@ -189,6 +207,13 @@ impl Session {
     /// bit-identical to [`Session::run_serial`] (rows are independent and
     /// reassembled in order — see `tests/parallel_exec.rs`).
     pub fn run(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
+        let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
+        self.run_refs(&refs)
+    }
+
+    /// [`Session::run`] over borrowed feeds — the serving layer's entry
+    /// point, avoiding a tensor clone per request.
+    pub fn run_refs(&self, feeds: &[(&str, &Tensor)]) -> Result<Vec<Tensor>, SessionError> {
         if self.parallel && !self.profiling {
             let pool = ThreadPool::global();
             // A 1-thread pool would execute the chunks sequentially anyway,
@@ -202,16 +227,19 @@ impl Session {
             // Not batch-split (small batch or non-splittable model): run on
             // this thread, leaving the op-level GEMM/conv parallelism free
             // to engage for large single calls.
-            return self.run_observed(feeds, &mut |_, _| {});
+            return self.execute(feeds, &mut |_, _| {});
         }
-        self.run_serial(feeds)
+        let mut noop = |_: &str, _: &Tensor| {};
+        parallel::serial_scope(|| self.execute(feeds, &mut noop))
     }
 
     /// Execute strictly on the calling thread — [`parallel::serial_scope`]
     /// also forces the op-level GEMM/conv parallelism to its serial path,
     /// so this is a true single-thread reference.
     pub fn run_serial(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
-        parallel::serial_scope(|| self.run_observed(feeds, &mut |_, _| {}))
+        let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
+        let mut noop = |_: &str, _: &Tensor| {};
+        parallel::serial_scope(|| self.execute(&refs, &mut noop))
     }
 
     /// Execute with the batch axis split across `pool` whenever the model
@@ -223,8 +251,9 @@ impl Session {
         feeds: &[(&str, Tensor)],
         pool: &ThreadPool,
     ) -> Result<Vec<Tensor>, SessionError> {
-        if let Some(chunks) = self.batch_chunks(feeds, pool, 2) {
-            return self.run_parallel(feeds, &chunks, pool);
+        let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
+        if let Some(chunks) = self.batch_chunks(&refs, pool, 2) {
+            return self.run_parallel(&refs, &chunks, pool);
         }
         self.run_serial(feeds)
     }
@@ -234,7 +263,7 @@ impl Session {
     /// pool worker, or feeds that serial validation should reject).
     fn batch_chunks(
         &self,
-        feeds: &[(&str, Tensor)],
+        feeds: &[(&str, &Tensor)],
         pool: &ThreadPool,
         min_batch: usize,
     ) -> Option<Vec<std::ops::Range<usize>>> {
@@ -256,39 +285,23 @@ impl Session {
         Some(parallel::ranges(batch, pieces))
     }
 
-    /// Run each row-chunk through the serial executor on the pool and
-    /// stitch the outputs back together in chunk order.
+    /// Run each row-chunk through the serial executor and stitch the
+    /// outputs back together in chunk order (the shared
+    /// [`parallel::scatter_gather`] does the dispatch + ordered gather).
     fn run_parallel(
         &self,
-        feeds: &[(&str, Tensor)],
+        feeds: &[(&str, &Tensor)],
         chunks: &[std::ops::Range<usize>],
         pool: &ThreadPool,
     ) -> Result<Vec<Tensor>, SessionError> {
-        let mut results: Vec<Option<Result<Vec<Tensor>, SessionError>>> =
-            chunks.iter().map(|_| None).collect();
-        {
-            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(chunks.len());
-            for (slot, range) in results.iter_mut().zip(chunks) {
-                let range = range.clone();
-                tasks.push(Box::new(move || {
-                    let run_chunk = || -> Result<Vec<Tensor>, SessionError> {
-                        let mut chunk_feeds: Vec<(&str, Tensor)> =
-                            Vec::with_capacity(feeds.len());
-                        for (name, t) in feeds {
-                            chunk_feeds.push((*name, t.slice_rows(range.start, range.len())?));
-                        }
-                        self.run_serial(&chunk_feeds)
-                    };
-                    *slot = Some(run_chunk());
-                }));
-            }
-            pool.run_scoped(tasks);
-        }
-        let mut per_chunk: Vec<Vec<Tensor>> = Vec::with_capacity(results.len());
-        for r in results {
-            per_chunk.push(r.expect("parallel task completed")?);
-        }
+        let mut per_chunk: Vec<Vec<Tensor>> =
+            parallel::scatter_gather(pool, chunks, |range| {
+                let mut chunk_feeds: Vec<(&str, Tensor)> = Vec::with_capacity(feeds.len());
+                for (name, t) in feeds {
+                    chunk_feeds.push((*name, t.slice_rows(range.start, range.len())?));
+                }
+                self.run_serial(&chunk_feeds)
+            })?;
         let n_outputs = self.model.graph.outputs.len();
         let mut outputs = Vec::with_capacity(n_outputs);
         for _ in 0..n_outputs {
@@ -300,15 +313,22 @@ impl Session {
 
     /// Execute while reporting every produced value (name, tensor) to
     /// `observer` — the hook the calibration pass uses to profile
-    /// intermediate activations without declaring them as outputs.
+    /// intermediate activations without declaring them as outputs. Names
+    /// come from the plan's interner (slot -> name), so observation adds
+    /// no per-call allocation.
     pub fn run_observed(
         &self,
         feeds: &[(&str, Tensor)],
         observer: &mut dyn FnMut(&str, &Tensor),
     ) -> Result<Vec<Tensor>, SessionError> {
-        let g = &self.model.graph;
+        let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
+        self.execute(&refs, observer)
+    }
 
-        // Validate feeds against declarations, binding symbolic dims.
+    /// Validate feeds against the declared graph inputs, binding symbolic
+    /// dims consistently across feeds.
+    fn validate_feeds(&self, feeds: &[(&str, &Tensor)]) -> Result<(), SessionError> {
+        let g = &self.model.graph;
         let mut bindings: BTreeMap<String, usize> = BTreeMap::new();
         for (name, t) in feeds {
             let vi = g
@@ -360,17 +380,128 @@ impl Session {
                 return Err(SessionError::MissingFeed(vi.name.clone()));
             }
         }
+        Ok(())
+    }
 
-        // Value store for feeds + intermediates (initializers resolved
-        // separately to avoid cloning weights per call).
+    /// The planned hot loop: slot-indexed value store, pre-bound kernels.
+    fn execute<'a>(
+        &'a self,
+        feeds: &[(&str, &'a Tensor)],
+        observer: &mut dyn FnMut(&str, &Tensor),
+    ) -> Result<Vec<Tensor>, SessionError> {
+        let g = &self.model.graph;
+        self.validate_feeds(feeds)?;
+        let inits = &g.initializers;
+
+        // Slot store: feeds borrowed in place, intermediates owned.
+        let mut store: Vec<Option<Value<'a>>> = Vec::with_capacity(self.plan.n_slots);
+        store.resize_with(self.plan.n_slots, || None);
+        for &(name, t) in feeds {
+            observer(name, t);
+            if let Some(&slot) = self.plan.feed_slots.get(name) {
+                store[slot as usize] = Some(Value::Borrowed(t));
+            }
+        }
+
+        let mut timings: Vec<u128> = if self.profiling {
+            vec![0; self.plan.steps.len()]
+        } else {
+            Vec::new()
+        };
+        for (pos, step) in self.plan.steps.iter().enumerate() {
+            // Resolve inputs on the stack — no per-node heap allocation.
+            let n_in = step.inputs.len();
+            let mut stack: [Option<&Tensor>; STACK_INPUTS] = [None; STACK_INPUTS];
+            let heap: Vec<Option<&Tensor>>;
+            let input_refs: &[Option<&Tensor>] = if n_in <= STACK_INPUTS {
+                for (dst, src) in stack.iter_mut().zip(step.inputs.iter()) {
+                    *dst = resolve_src(src, &store, inits);
+                }
+                &stack[..n_in]
+            } else {
+                heap = step
+                    .inputs
+                    .iter()
+                    .map(|src| resolve_src(src, &store, inits))
+                    .collect();
+                &heap
+            };
+            let t0 = self.profiling.then(std::time::Instant::now);
+            let out = step.kernel.run(input_refs).map_err(|source| {
+                let node = &g.nodes[step.node_idx];
+                SessionError::Op {
+                    node: node.name.clone(),
+                    source: source.with_node(&node.name),
+                }
+            })?;
+            if let Some(t0) = t0 {
+                timings[pos] = t0.elapsed().as_nanos();
+            }
+            if let Some(slot) = step.output {
+                observer(&self.plan.names[slot as usize], &out);
+                store[slot as usize] = Some(Value::Owned(out));
+            }
+            for &dead in step.frees.iter() {
+                store[dead as usize] = None;
+            }
+        }
+
+        if self.profiling {
+            // One lock per run: merge the local step timings.
+            let mut prof = self.profile.lock().unwrap();
+            for (p, &nanos) in prof.iter_mut().zip(&timings) {
+                p.nanos += nanos;
+                p.calls += 1;
+            }
+        }
+
+        let mut outputs = Vec::with_capacity(self.plan.outputs.len());
+        for (src, vi) in self.plan.outputs.iter().zip(&g.outputs) {
+            let t = match *src {
+                Src::Slot(s) => store[s as usize].take().map(Value::into_owned),
+                Src::SlotOrInit { slot, init } => store[slot as usize]
+                    .take()
+                    .map(Value::into_owned)
+                    .or_else(|| Some(inits[init as usize].1.clone())),
+                Src::Init(i) => Some(inits[i as usize].1.clone()),
+                Src::None => None,
+            };
+            outputs.push(t.ok_or_else(|| SessionError::ValueMissing(vi.name.clone()))?);
+        }
+        Ok(outputs)
+    }
+
+    /// The pre-plan string-keyed interpreter: `HashMap<String, Tensor>`
+    /// value store, per-node attribute re-parsing via
+    /// [`crate::ops::execute_node`], per-feed clones. Retained as the
+    /// differential-test oracle for the compiled plan and the legacy
+    /// baseline in `bench_serving`; always strictly serial. Unlike the
+    /// old interpreter it does NOT feed the profiler — profiling is a
+    /// planned-path (step-indexed) feature.
+    pub fn run_unplanned(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
+        let mut noop = |_: &str, _: &Tensor| {};
+        parallel::serial_scope(|| self.run_unplanned_observed(feeds, &mut noop))
+    }
+
+    /// Observer form of [`Session::run_unplanned`] (used to check the
+    /// calibration observer stream against the planned executor).
+    pub fn run_unplanned_observed(
+        &self,
+        feeds: &[(&str, Tensor)],
+        observer: &mut dyn FnMut(&str, &Tensor),
+    ) -> Result<Vec<Tensor>, SessionError> {
+        let g = &self.model.graph;
+        let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
+        self.validate_feeds(&refs)?;
+
         let mut values: HashMap<String, Tensor> = HashMap::with_capacity(feeds.len() + 16);
         for (name, t) in feeds {
             observer(name, t);
             values.insert(name.to_string(), t.clone());
         }
 
-        for (pos, &idx) in self.order.iter().enumerate() {
-            let node = &g.nodes[idx];
+        for (pos, step) in self.plan.steps.iter().enumerate() {
+            let node = &g.nodes[step.node_idx];
             let inputs: Vec<Option<&Tensor>> = node
                 .inputs
                 .iter()
@@ -382,32 +513,17 @@ impl Session {
                     }
                 })
                 .collect();
-            let t0 = if self.profiling {
-                Some(std::time::Instant::now())
-            } else {
-                None
-            };
             let outs = execute_node(node, &inputs).map_err(|source| SessionError::Op {
                 node: node.name.clone(),
                 source,
             })?;
-            if let Some(t0) = t0 {
-                let mut prof = self.profile.lock().unwrap();
-                let e = prof.entry(node.name.clone()).or_insert_with(|| NodeStats {
-                    name: node.name.clone(),
-                    op_type: node.op_type.clone(),
-                    ..Default::default()
-                });
-                e.nanos += t0.elapsed().as_nanos();
-                e.calls += 1;
-            }
             for (name, t) in node.outputs.iter().zip(outs) {
                 if !name.is_empty() {
                     observer(name, &t);
                     values.insert(name.clone(), t);
                 }
             }
-            for dead in &self.frees[pos] {
+            for dead in &self.unplanned_frees[pos] {
                 values.remove(dead);
             }
         }
@@ -435,9 +551,26 @@ impl Session {
     }
 
     /// Snapshot of per-node timings (profiling sessions only), sorted by
-    /// total time descending.
+    /// total time descending. Stats are kept per plan step; the node name
+    /// and op type are resolved here for the report.
     pub fn profile(&self) -> Vec<NodeStats> {
-        let mut v: Vec<NodeStats> = self.profile.lock().unwrap().values().cloned().collect();
+        let prof = self.profile.lock().unwrap();
+        let mut v: Vec<NodeStats> = self
+            .plan
+            .steps
+            .iter()
+            .zip(prof.iter())
+            .filter(|(_, p)| p.calls > 0)
+            .map(|(step, p)| {
+                let node = &self.model.graph.nodes[step.node_idx];
+                NodeStats {
+                    name: node.name.clone(),
+                    op_type: node.op_type.clone(),
+                    nanos: p.nanos,
+                    calls: p.calls,
+                }
+            })
+            .collect();
         v.sort_by_key(|s| std::cmp::Reverse(s.nanos));
         v
     }
@@ -553,9 +686,33 @@ mod tests {
     fn profiling_collects() {
         let sess = Session::new(fig1_model()).unwrap().with_profiling();
         let x = Tensor::from_i8(&[1, 4], vec![1; 4]).unwrap();
+        sess.run(&[("x", x.clone())]).unwrap();
         sess.run(&[("x", x)]).unwrap();
         let prof = sess.profile();
         assert!(!prof.is_empty());
         assert!(prof.iter().any(|s| s.op_type == "MatMulInteger"));
+        // Step-indexed stats: every executed step counted both runs.
+        assert!(prof.iter().all(|s| s.calls == 2));
+    }
+
+    #[test]
+    fn planned_matches_unplanned() {
+        let sess = Session::new(fig1_model()).unwrap();
+        for batch in [1usize, 2, 7] {
+            let data: Vec<i8> = (0..batch * 4).map(|i| (i * 91 % 253) as u8 as i8).collect();
+            let x = Tensor::from_i8(&[batch, 4], data).unwrap();
+            let legacy = sess.run_unplanned(&[("x", x.clone())]).unwrap();
+            let planned = sess.run_serial(&[("x", x)]).unwrap();
+            assert_eq!(legacy, planned, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn run_refs_avoids_feed_clone_and_matches() {
+        let sess = Session::new(fig1_model()).unwrap();
+        let x = Tensor::from_i8(&[2, 4], vec![3; 8]).unwrap();
+        let owned = sess.run(&[("x", x.clone())]).unwrap();
+        let by_ref = sess.run_refs(&[("x", &x)]).unwrap();
+        assert_eq!(owned, by_ref);
     }
 }

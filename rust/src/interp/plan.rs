@@ -1,0 +1,225 @@
+//! Compile-once execution plans.
+//!
+//! [`CompiledPlan::compile`] lowers a validated, scheduled model into the
+//! form the hot loop actually wants:
+//!
+//! * every value name interned to a dense slot index (`u32`) — the run
+//!   loop indexes a `Vec` instead of hashing strings,
+//! * every node input resolved once to a [`Src`]: a store slot, an
+//!   initializer index into the model's initializer table, or `None` for
+//!   omitted optional inputs,
+//! * every node lowered to a pre-bound [`Kernel`] (attributes parsed,
+//!   initializer-derived parameters baked) with a plan-time error for
+//!   unsupported operators,
+//! * per-step `frees` as slot indices (the last-use analysis over the
+//!   schedule, so peak memory stays at the live-set size).
+//!
+//! The plan holds no tensors of its own except what kernels baked;
+//! initializers stay owned by the [`Model`](crate::onnx::ir::Model) and
+//! are referenced by index.
+
+use super::SessionError;
+use crate::onnx::ir::Model;
+use crate::ops::Kernel;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Where a node input (or graph output) comes from, resolved at plan
+/// time. `SlotOrInit` covers the degenerate ONNX case of an initializer
+/// shadowed by a graph input: a feed overrides the initializer, exactly
+/// like the string-keyed interpreter's `values.get(..).or(initializer)`.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Src {
+    None,
+    Slot(u32),
+    Init(u32),
+    SlotOrInit { slot: u32, init: u32 },
+}
+
+/// One scheduled node: pre-bound kernel, resolved inputs, output slot,
+/// and the slots whose last use this step is.
+pub(crate) struct Step {
+    pub node_idx: usize,
+    pub kernel: Kernel,
+    pub inputs: Box<[Src]>,
+    /// Slot of `outputs[0]` when it is named (the admitted operator set
+    /// is single-output; extra declared outputs are never produced, as
+    /// in the string-keyed interpreter).
+    pub output: Option<u32>,
+    pub frees: Box<[u32]>,
+}
+
+/// A model lowered for execution: see the module docs.
+pub(crate) struct CompiledPlan {
+    pub steps: Vec<Step>,
+    pub n_slots: usize,
+    /// Slot index -> value name (the interner, read by the observer path
+    /// so calibration still sees string names without any per-call
+    /// allocation).
+    pub names: Vec<String>,
+    /// Graph-input name -> slot, for feed placement.
+    pub feed_slots: HashMap<String, u32>,
+    /// Graph outputs in declaration order.
+    pub outputs: Vec<Src>,
+}
+
+/// A slot's runtime occupant: feeds are borrowed straight from the
+/// caller (no per-call clone), produced values are owned.
+pub(crate) enum Value<'a> {
+    Borrowed(&'a Tensor),
+    Owned(Tensor),
+}
+
+impl Value<'_> {
+    pub fn tensor(&self) -> &Tensor {
+        match self {
+            Value::Borrowed(t) => t,
+            Value::Owned(t) => t,
+        }
+    }
+
+    pub fn into_owned(self) -> Tensor {
+        match self {
+            Value::Borrowed(t) => t.clone(),
+            Value::Owned(t) => t,
+        }
+    }
+}
+
+/// Resolve a [`Src`] against the run's slot store and the model's
+/// initializer table.
+#[inline]
+pub(crate) fn resolve_src<'v>(
+    src: &Src,
+    store: &'v [Option<Value<'_>>],
+    inits: &'v [(String, Tensor)],
+) -> Option<&'v Tensor> {
+    match *src {
+        Src::None => None,
+        Src::Slot(s) => store[s as usize].as_ref().map(Value::tensor),
+        Src::Init(i) => Some(&inits[i as usize].1),
+        Src::SlotOrInit { slot, init } => store[slot as usize]
+            .as_ref()
+            .map(Value::tensor)
+            .or(Some(&inits[init as usize].1)),
+    }
+}
+
+impl CompiledPlan {
+    /// Lower `model` (already checked) along the given schedule.
+    pub fn compile(model: &Model, order: &[usize]) -> Result<CompiledPlan, SessionError> {
+        let g = &model.graph;
+        let init_pos: HashMap<&str, u32> = g
+            .initializers
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.as_str(), i as u32))
+            .collect();
+
+        // Intern: slots for every graph input (feeds, including shadowed
+        // initializers) and every named node output.
+        fn intern<'g>(
+            name: &'g str,
+            slot_of: &mut HashMap<&'g str, u32>,
+            names: &mut Vec<String>,
+        ) -> u32 {
+            if let Some(&s) = slot_of.get(name) {
+                return s;
+            }
+            let s = names.len() as u32;
+            names.push(name.to_string());
+            slot_of.insert(name, s);
+            s
+        }
+        let mut slot_of: HashMap<&str, u32> = HashMap::new();
+        let mut names: Vec<String> = Vec::new();
+        for vi in &g.inputs {
+            intern(&vi.name, &mut slot_of, &mut names);
+        }
+        for &idx in order {
+            for out in &g.nodes[idx].outputs {
+                if !out.is_empty() {
+                    intern(out, &mut slot_of, &mut names);
+                }
+            }
+        }
+
+        let resolve = |name: &str| -> Src {
+            if name.is_empty() {
+                return Src::None;
+            }
+            match (slot_of.get(name), init_pos.get(name)) {
+                (Some(&slot), Some(&init)) => Src::SlotOrInit { slot, init },
+                (Some(&s), None) => Src::Slot(s),
+                (None, Some(&i)) => Src::Init(i),
+                // Never defined anywhere: resolves to a missing input at
+                // run time, as in the string-keyed interpreter (the
+                // checker rejects such graphs up front anyway).
+                (None, None) => Src::None,
+            }
+        };
+
+        // Lower each scheduled node.
+        let mut steps = Vec::with_capacity(order.len());
+        for &idx in order {
+            let node = &g.nodes[idx];
+            let kernel =
+                Kernel::bind_in_graph(node, g).map_err(|source| SessionError::Op {
+                    node: node.name.clone(),
+                    source,
+                })?;
+            let inputs: Box<[Src]> = node.inputs.iter().map(|n| resolve(n)).collect();
+            let output = node
+                .outputs
+                .first()
+                .filter(|n| !n.is_empty())
+                .map(|n| slot_of[n.as_str()]);
+            steps.push(Step {
+                node_idx: idx,
+                kernel,
+                inputs,
+                output,
+                frees: Box::default(),
+            });
+        }
+
+        // Last-use analysis over the schedule, on slots. Only pure-slot
+        // values are freed: initializer-backed inputs are owned by the
+        // model and graph outputs live to the end of the run.
+        let mut last_use: HashMap<u32, usize> = HashMap::new();
+        for (pos, step) in steps.iter().enumerate() {
+            for src in step.inputs.iter() {
+                if let Src::Slot(s) = src {
+                    last_use.insert(*s, pos);
+                }
+            }
+        }
+        for vi in &g.outputs {
+            if let Some(&s) = slot_of.get(vi.name.as_str()) {
+                last_use.remove(&s);
+            }
+        }
+        let mut frees: Vec<Vec<u32>> = vec![Vec::new(); steps.len()];
+        for (slot, pos) in last_use {
+            frees[pos].push(slot);
+        }
+        for (step, f) in steps.iter_mut().zip(frees) {
+            step.frees = f.into_boxed_slice();
+        }
+
+        let outputs = g.outputs.iter().map(|vi| resolve(&vi.name)).collect();
+        let feed_slots = g
+            .inputs
+            .iter()
+            .map(|vi| (vi.name.clone(), slot_of[vi.name.as_str()]))
+            .collect();
+
+        Ok(CompiledPlan {
+            steps,
+            n_slots: names.len(),
+            names,
+            feed_slots,
+            outputs,
+        })
+    }
+}

@@ -103,6 +103,7 @@ fn window_out(
 }
 
 /// Read 2-D conv/pool attributes with ONNX defaults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvAttrs {
     pub strides: [usize; 2],
     pub pads: [usize; 4], // top, left, bottom, right

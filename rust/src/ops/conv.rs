@@ -87,14 +87,11 @@ pub fn conv_integer(
     if attrs.group != 1 {
         return Err(OpError::Semantics("group conv not supported".into()));
     }
-    let (n, c, h, wd) = nchw(x)?;
+    let (_, c, _, _) = nchw(x)?;
     let (m, wc, kh, kw) = nchw(w)?;
     if wc != c {
         return Err(OpError::Semantics(format!("channel mismatch {wc} vs {c}")));
     }
-    let oh = out_spatial(h, kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0]);
-    let ow = out_spatial(wd, kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1]);
-
     let zp_of = |zp: Option<&Tensor>| -> Result<i32, OpError> {
         Ok(match zp {
             None => 0,
@@ -103,17 +100,44 @@ pub fn conv_integer(
     };
     let xz = zp_of(x_zp)?;
     let wz = zp_of(w_zp)?;
-
-    let mut xv = x.as_quantized_i32()?;
-    if xz != 0 {
-        for v in &mut xv {
-            *v -= xz;
-        }
-    }
     let mut wv = w.as_quantized_i32()?;
     if wz != 0 {
         for v in &mut wv {
             *v -= wz;
+        }
+    }
+    conv_integer_prewidened(x, &wv, m, wc, kh, kw, xz, attrs)
+}
+
+/// `ConvInteger` against an `[m, c, kh, kw]` kernel that was widened to
+/// i32 (zero point already subtracted) once at plan time, with the baked
+/// input zero point `x_zp`. Bit-identical to [`conv_integer`] — the same
+/// widened values reach the same im2col + GEMM loop.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_integer_prewidened(
+    x: &Tensor,
+    wv: &[i32],
+    m: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    x_zp: i32,
+    attrs: &ConvAttrs,
+) -> Result<Tensor, OpError> {
+    if attrs.group != 1 {
+        return Err(OpError::Semantics("group conv not supported".into()));
+    }
+    let (n, xc, h, wd) = nchw(x)?;
+    if c != xc {
+        return Err(OpError::Semantics(format!("channel mismatch {c} vs {xc}")));
+    }
+    let oh = out_spatial(h, kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0]);
+    let ow = out_spatial(wd, kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1]);
+
+    let mut xv = x.as_quantized_i32()?;
+    if x_zp != 0 {
+        for v in &mut xv {
+            *v -= x_zp;
         }
     }
 
@@ -129,7 +153,7 @@ pub fn conv_integer(
             let b = b0 + bi;
             let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
             im2col(src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
-            gemm_i32(&wv, &col, m, patch_rows, patch, dst);
+            gemm_i32(wv, &col, m, patch_rows, patch, dst);
         }
     };
     let pool = ThreadPool::global();
@@ -289,6 +313,20 @@ mod tests {
             let whole_b = whole.slice_rows(b, 1).unwrap();
             assert_eq!(yb, whole_b, "batch element {b}");
         }
+    }
+
+    #[test]
+    fn prewidened_matches_conv_integer() {
+        let x = Tensor::from_i8(&[2, 2, 3, 3], (0..36).map(|i| (i * 7 % 31) as i8 - 15).collect())
+            .unwrap();
+        let w = Tensor::from_i8(&[2, 2, 2, 2], (0..16).map(|i| (i * 3 % 17) as i8 - 8).collect())
+            .unwrap();
+        let mut attrs = attrs_default();
+        attrs.pads = [1, 0, 0, 1];
+        let want = conv_integer(&x, &w, None, None, &attrs).unwrap();
+        let wv: Vec<i32> = w.as_quantized_i32().unwrap();
+        let got = conv_integer_prewidened(&x, &wv, 2, 2, 2, 2, 0, &attrs).unwrap();
+        assert_eq!(want, got);
     }
 
     #[test]

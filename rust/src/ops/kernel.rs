@@ -1,0 +1,453 @@
+//! Pre-bound operator kernels: the plan-time / run-time split.
+//!
+//! [`Kernel::bind`] does everything that depends only on the *node* —
+//! attribute parsing (Cast's `to`, Gemm's alpha/beta/trans flags, conv
+//! and pool geometry), operator lookup, and the unsupported-op error —
+//! once, at plan time. [`Kernel::bind_in_graph`] additionally bakes
+//! parameters that live in *initializers* (a Reshape's spec tensor, a
+//! float Conv's bias pre-reshaped to `[1, M, 1, 1]`, MatMulInteger /
+//! ConvInteger weights pre-widened to i32 with their zero points folded
+//! in), so [`Kernel::run`] touches nothing but the input tensors.
+//!
+//! Every baked specialization is bit-identical to the generic path: the
+//! same values flow through the same arithmetic, just hoisted out of the
+//! per-call loop. When a prebinding precondition fails (weight produced
+//! at runtime, non-scalar zero point, dtype mismatch, shadowed
+//! initializer) the kernel falls back to the generic form so error
+//! behavior is unchanged.
+
+use super::OpError;
+use super::{conv, elementwise, matmul, pool, qlinear, shape_ops};
+use crate::onnx::ir::{Graph, Node};
+use crate::onnx::shape::ConvAttrs;
+use crate::tensor::{DType, Tensor};
+
+/// One operator, lowered: attributes parsed and static parameters baked.
+pub enum Kernel {
+    MatMulInteger,
+    /// MatMulInteger whose weight (and zero points) were initializers:
+    /// `bw` is the weight widened to i32 with its zero point subtracted,
+    /// `a_zp` the baked activation zero point.
+    MatMulIntegerPrebound {
+        bw: Vec<i32>,
+        k: usize,
+        n: usize,
+        a_zp: i32,
+    },
+    MatMul,
+    Gemm {
+        alpha: f32,
+        beta: f32,
+        trans_a: bool,
+        trans_b: bool,
+    },
+    ConvInteger {
+        attrs: ConvAttrs,
+    },
+    /// ConvInteger with an initializer kernel, pre-widened like
+    /// [`Kernel::MatMulIntegerPrebound`].
+    ConvIntegerPrebound {
+        wv: Vec<i32>,
+        m: usize,
+        c: usize,
+        kh: usize,
+        kw: usize,
+        x_zp: i32,
+        attrs: ConvAttrs,
+    },
+    /// Float Conv; `bias4` is the optional fp32 bias initializer already
+    /// reshaped to `[1, M, 1, 1]` at plan time.
+    Conv {
+        attrs: ConvAttrs,
+        bias4: Option<Tensor>,
+    },
+    Binary {
+        op: elementwise::BinOp,
+    },
+    Cast {
+        to: DType,
+    },
+    QuantizeLinear,
+    DequantizeLinear,
+    Relu,
+    Tanh,
+    Sigmoid,
+    Softmax {
+        axis: i64,
+    },
+    MaxPool {
+        kernel: Vec<i64>,
+        attrs: ConvAttrs,
+    },
+    AveragePool {
+        kernel: Vec<i64>,
+        attrs: ConvAttrs,
+    },
+    /// Reshape; `spec` is baked when the shape tensor is an initializer.
+    Reshape {
+        spec: Option<Vec<i64>>,
+    },
+    Flatten {
+        axis: usize,
+    },
+    Identity,
+}
+
+/// An initializer eligible for plan-time baking: present, and not
+/// shadowed by a graph input (a shadowed initializer can be overridden
+/// by a feed at run time, so it must stay a dynamic input).
+fn bakeable<'g>(g: &'g Graph, name: &str) -> Option<&'g Tensor> {
+    if g.input(name).is_some() {
+        return None;
+    }
+    g.initializer(name)
+}
+
+/// Baked value of an optional scalar zero-point input: `Some(0)` when the
+/// input is omitted, `Some(zp)` when it is a bakeable scalar initializer,
+/// `None` (don't prebind) otherwise.
+fn baked_zero_point(g: &Graph, node: &Node, index: usize) -> Option<i32> {
+    match node.inputs.get(index).map(String::as_str) {
+        None | Some("") => Some(0),
+        Some(name) => {
+            let z = bakeable(g, name)?;
+            if z.numel() != 1 {
+                return None;
+            }
+            z.as_quantized_i32().ok().map(|v| v[0])
+        }
+    }
+}
+
+fn prebind_matmul_integer(node: &Node, g: &Graph) -> Option<Kernel> {
+    let b = bakeable(g, node.inputs.get(1)?)?;
+    if b.rank() != 2 {
+        return None;
+    }
+    let b_zp = match node.inputs.get(3).map(String::as_str) {
+        None | Some("") => None,
+        Some(name) => Some(bakeable(g, name)?),
+    };
+    let a_zp = baked_zero_point(g, node, 2)?;
+    let bw = matmul::widen_with_zp(b, b_zp).ok()?;
+    Some(Kernel::MatMulIntegerPrebound {
+        bw,
+        k: b.shape()[0],
+        n: b.shape()[1],
+        a_zp,
+    })
+}
+
+fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) -> Option<Kernel> {
+    if attrs.group != 1 {
+        return None;
+    }
+    let w = bakeable(g, node.inputs.get(1)?)?;
+    if w.rank() != 4 {
+        return None;
+    }
+    let w_zp = baked_zero_point(g, node, 3)?;
+    let x_zp = baked_zero_point(g, node, 2)?;
+    let mut wv = w.as_quantized_i32().ok()?;
+    if w_zp != 0 {
+        for v in &mut wv {
+            *v -= w_zp;
+        }
+    }
+    let s = w.shape();
+    Some(Kernel::ConvIntegerPrebound {
+        wv,
+        m: s[0],
+        c: s[1],
+        kh: s[2],
+        kw: s[3],
+        x_zp,
+        attrs: *attrs,
+    })
+}
+
+/// Pre-reshape a float Conv's initializer bias to `[1, M, 1, 1]` (M read
+/// from the initializer weight) when both are statically known.
+fn prebind_conv_bias(node: &Node, g: &Graph) -> Option<Tensor> {
+    let name = node.inputs.get(2).map(String::as_str)?;
+    if name.is_empty() {
+        return None;
+    }
+    let b = bakeable(g, name)?;
+    let w = bakeable(g, node.inputs.get(1)?)?;
+    if w.rank() != 4 || b.numel() != w.shape()[0] {
+        return None;
+    }
+    b.clone().reshape(&[1, w.shape()[0], 1, 1]).ok()
+}
+
+fn prebind_reshape_spec(node: &Node, g: &Graph) -> Option<Vec<i64>> {
+    let spec = bakeable(g, node.inputs.get(1)?)?;
+    spec.as_i64().ok().map(|v| v.to_vec())
+}
+
+impl Kernel {
+    /// Lower a node from its attributes alone (no initializer access) —
+    /// the compat path [`super::execute_node`] uses. Fails at *bind* time
+    /// on unsupported operators and malformed attributes.
+    pub fn bind(node: &Node) -> Result<Kernel, OpError> {
+        Kernel::bind_inner(node, None)
+    }
+
+    /// Lower a node with plan-time access to the graph's initializers,
+    /// additionally baking weight/bias/spec tensors into the kernel.
+    pub fn bind_in_graph(node: &Node, g: &Graph) -> Result<Kernel, OpError> {
+        Kernel::bind_inner(node, Some(g))
+    }
+
+    fn bind_inner(node: &Node, g: Option<&Graph>) -> Result<Kernel, OpError> {
+        let kernel = match node.op_type.as_str() {
+            "MatMulInteger" => g
+                .and_then(|g| prebind_matmul_integer(node, g))
+                .unwrap_or(Kernel::MatMulInteger),
+            "MatMul" => Kernel::MatMul,
+            "Gemm" => Kernel::Gemm {
+                alpha: node.attr_float("alpha").unwrap_or(1.0),
+                beta: node.attr_float("beta").unwrap_or(1.0),
+                trans_a: node.attr_int("transA").unwrap_or(0) != 0,
+                trans_b: node.attr_int("transB").unwrap_or(0) != 0,
+            },
+            "ConvInteger" => {
+                let attrs = ConvAttrs::from_node(node);
+                g.and_then(|g| prebind_conv_integer(node, g, &attrs))
+                    .unwrap_or(Kernel::ConvInteger { attrs })
+            }
+            "Conv" => Kernel::Conv {
+                attrs: ConvAttrs::from_node(node),
+                bias4: g.and_then(|g| prebind_conv_bias(node, g)),
+            },
+            "Add" | "Mul" | "Sub" | "Div" => Kernel::Binary {
+                op: elementwise::BinOp::from_op_type(&node.op_type).unwrap(),
+            },
+            "Cast" => Kernel::Cast {
+                to: node
+                    .attr_str("to")
+                    .and_then(DType::from_onnx_name)
+                    .ok_or_else(|| OpError::Semantics("Cast: missing/unknown 'to'".into()))?,
+            },
+            "QuantizeLinear" => Kernel::QuantizeLinear,
+            "DequantizeLinear" => Kernel::DequantizeLinear,
+            "Relu" => Kernel::Relu,
+            "Tanh" => Kernel::Tanh,
+            "Sigmoid" => Kernel::Sigmoid,
+            "Softmax" => Kernel::Softmax {
+                axis: node.attr_int("axis").unwrap_or(-1),
+            },
+            "MaxPool" => Kernel::MaxPool {
+                kernel: node
+                    .attr_ints("kernel_shape")
+                    .ok_or_else(|| OpError::Semantics("MaxPool: missing kernel_shape".into()))?
+                    .to_vec(),
+                attrs: ConvAttrs::from_node(node),
+            },
+            "AveragePool" => Kernel::AveragePool {
+                kernel: node
+                    .attr_ints("kernel_shape")
+                    .ok_or_else(|| {
+                        OpError::Semantics("AveragePool: missing kernel_shape".into())
+                    })?
+                    .to_vec(),
+                attrs: ConvAttrs::from_node(node),
+            },
+            "Reshape" => Kernel::Reshape {
+                spec: g.and_then(|g| prebind_reshape_spec(node, g)),
+            },
+            "Flatten" => Kernel::Flatten {
+                axis: node.attr_int("axis").unwrap_or(1) as usize,
+            },
+            "Identity" => Kernel::Identity,
+            other => return Err(OpError::Unsupported(other.to_string())),
+        };
+        Ok(kernel)
+    }
+
+    /// Operator name reported in errors (the generic op, not the
+    /// prebound specialization).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Kernel::MatMulInteger | Kernel::MatMulIntegerPrebound { .. } => "MatMulInteger",
+            Kernel::MatMul => "MatMul",
+            Kernel::Gemm { .. } => "Gemm",
+            Kernel::ConvInteger { .. } | Kernel::ConvIntegerPrebound { .. } => "ConvInteger",
+            Kernel::Conv { .. } => "Conv",
+            Kernel::Binary { op } => match op {
+                elementwise::BinOp::Add => "Add",
+                elementwise::BinOp::Mul => "Mul",
+                elementwise::BinOp::Sub => "Sub",
+                elementwise::BinOp::Div => "Div",
+            },
+            Kernel::Cast { .. } => "Cast",
+            Kernel::QuantizeLinear => "QuantizeLinear",
+            Kernel::DequantizeLinear => "DequantizeLinear",
+            Kernel::Relu => "Relu",
+            Kernel::Tanh => "Tanh",
+            Kernel::Sigmoid => "Sigmoid",
+            Kernel::Softmax { .. } => "Softmax",
+            Kernel::MaxPool { .. } => "MaxPool",
+            Kernel::AveragePool { .. } => "AveragePool",
+            Kernel::Reshape { .. } => "Reshape",
+            Kernel::Flatten { .. } => "Flatten",
+            Kernel::Identity => "Identity",
+        }
+    }
+
+    /// Execute the pre-bound kernel on resolved inputs (`None` = omitted
+    /// optional input). All admitted operators are single-output.
+    /// `MissingInput` errors are minted without a node name; callers that
+    /// know it patch it in via [`OpError::with_node`].
+    pub fn run(&self, inputs: &[Option<&Tensor>]) -> Result<Tensor, OpError> {
+        let req = |i: usize| -> Result<&Tensor, OpError> {
+            inputs
+                .get(i)
+                .copied()
+                .flatten()
+                .ok_or_else(|| OpError::MissingInput {
+                    node: String::new(),
+                    op: self.op_name().to_string(),
+                    index: i,
+                })
+        };
+        let opt = |i: usize| -> Option<&Tensor> { inputs.get(i).copied().flatten() };
+
+        let out = match self {
+            Kernel::MatMulInteger => {
+                matmul::matmul_integer(req(0)?, req(1)?, opt(2), opt(3))?
+            }
+            Kernel::MatMulIntegerPrebound { bw, k, n, a_zp } => {
+                matmul::matmul_integer_prewidened(req(0)?, bw, *k, *n, *a_zp)?
+            }
+            Kernel::MatMul => matmul::matmul_f32(req(0)?, req(1)?)?,
+            Kernel::Gemm {
+                alpha,
+                beta,
+                trans_a,
+                trans_b,
+            } => matmul::gemm(req(0)?, req(1)?, opt(2), *alpha, *beta, *trans_a, *trans_b)?,
+            Kernel::ConvInteger { attrs } => {
+                conv::conv_integer(req(0)?, req(1)?, opt(2), opt(3), attrs)?
+            }
+            Kernel::ConvIntegerPrebound {
+                wv,
+                m,
+                c,
+                kh,
+                kw,
+                x_zp,
+                attrs,
+            } => conv::conv_integer_prewidened(req(0)?, wv, *m, *c, *kh, *kw, *x_zp, attrs)?,
+            Kernel::Conv { attrs, bias4 } => {
+                let y = conv::conv_f32(req(0)?, req(1)?, attrs)?;
+                match (opt(2), bias4) {
+                    (None, _) => y,
+                    (Some(_), Some(b4)) => {
+                        elementwise::binary(elementwise::BinOp::Add, &y, b4)?
+                    }
+                    (Some(b), None) => {
+                        let m = y.shape()[1];
+                        let b4 = b.clone().reshape(&[1, m, 1, 1])?;
+                        elementwise::binary(elementwise::BinOp::Add, &y, &b4)?
+                    }
+                }
+            }
+            Kernel::Binary { op } => elementwise::binary(*op, req(0)?, req(1)?)?,
+            Kernel::Cast { to } => req(0)?.cast(*to),
+            Kernel::QuantizeLinear => qlinear::quantize_linear(req(0)?, req(1)?, opt(2))?,
+            Kernel::DequantizeLinear => qlinear::dequantize_linear(req(0)?, req(1)?, opt(2))?,
+            Kernel::Relu => elementwise::relu(req(0)?)?,
+            Kernel::Tanh => elementwise::tanh(req(0)?)?,
+            Kernel::Sigmoid => elementwise::sigmoid(req(0)?)?,
+            Kernel::Softmax { axis } => shape_ops::softmax(req(0)?, *axis)?,
+            Kernel::MaxPool { kernel, attrs } => pool::max_pool(req(0)?, kernel, *attrs)?,
+            Kernel::AveragePool { kernel, attrs } => {
+                pool::average_pool(req(0)?, kernel, *attrs)?
+            }
+            Kernel::Reshape { spec } => match spec {
+                Some(s) => shape_ops::reshape(req(0)?, s)?,
+                None => {
+                    let s = req(1)?.as_i64()?.to_vec();
+                    shape_ops::reshape(req(0)?, &s)?
+                }
+            },
+            Kernel::Flatten { axis } => shape_ops::flatten(req(0)?, *axis)?,
+            Kernel::Identity => req(0)?.clone(),
+        };
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::ir::Attr;
+    use crate::onnx::{batched, GraphBuilder};
+
+    #[test]
+    fn bind_parses_attributes_once() {
+        let node = Node::new("g", "Gemm", &["a", "b"], &["y"])
+            .with_attr("alpha", Attr::Float(2.0))
+            .with_attr("transB", Attr::Int(1));
+        match Kernel::bind(&node).unwrap() {
+            Kernel::Gemm {
+                alpha,
+                beta,
+                trans_a,
+                trans_b,
+            } => {
+                assert_eq!(alpha, 2.0);
+                assert_eq!(beta, 1.0);
+                assert!(!trans_a);
+                assert!(trans_b);
+            }
+            _ => panic!("wrong kernel"),
+        }
+    }
+
+    #[test]
+    fn bind_rejects_unsupported_at_plan_time() {
+        let node = Node::new("n", "LSTM", &["x"], &["y"]);
+        assert!(matches!(Kernel::bind(&node), Err(OpError::Unsupported(_))));
+    }
+
+    #[test]
+    fn bind_rejects_bad_cast_at_plan_time() {
+        let node = Node::new("c", "Cast", &["x"], &["y"]);
+        assert!(matches!(Kernel::bind(&node), Err(OpError::Semantics(_))));
+    }
+
+    #[test]
+    fn prebound_matmul_matches_generic() {
+        let mut b = GraphBuilder::new("g");
+        b.input("x", DType::I8, &batched(&[4]));
+        b.init("w", Tensor::from_i8(&[4, 2], vec![1, 2, 3, 4, 5, 6, 7, 8]).unwrap());
+        let y = b.node("MatMulInteger", &["x", "w"], &[]);
+        b.output(&y, DType::I32, &batched(&[2]));
+        let model = b.finish_model();
+        let node = &model.graph.nodes[0];
+        let kernel = Kernel::bind_in_graph(node, &model.graph).unwrap();
+        assert!(matches!(kernel, Kernel::MatMulIntegerPrebound { .. }));
+        let x = Tensor::from_i8(&[3, 4], (0..12).map(|i| i as i8 - 6).collect()).unwrap();
+        let w = model.graph.initializer("w").unwrap();
+        let generic = Kernel::MatMulInteger
+            .run(&[Some(&x), Some(w)])
+            .unwrap();
+        let prebound = kernel.run(&[Some(&x), Some(w)]).unwrap();
+        assert_eq!(generic, prebound);
+    }
+
+    #[test]
+    fn runtime_weight_falls_back_to_generic() {
+        // Weight produced by another node: nothing to bake.
+        let node = Node::new("mm", "MatMulInteger", &["x", "w_dyn"], &["y"]);
+        let g = Graph {
+            name: "g".into(),
+            ..Default::default()
+        };
+        let kernel = Kernel::bind_in_graph(&node, &g).unwrap();
+        assert!(matches!(kernel, Kernel::MatMulInteger));
+    }
+}

@@ -24,8 +24,9 @@ fn worth_parallel(pool: &ThreadPool, m: usize, k: usize, n: usize) -> bool {
         && m.saturating_mul(k).saturating_mul(n) >= GEMM_PAR_MIN_WORK
 }
 
-/// Widen an i8/u8 tensor to i32 applying an optional zero point.
-fn widen_with_zp(t: &Tensor, zp: Option<&Tensor>) -> Result<Vec<i32>, OpError> {
+/// Widen an i8/u8 tensor to i32 applying an optional zero point. Also
+/// used by the plan compiler to pre-widen initializer weights once.
+pub(crate) fn widen_with_zp(t: &Tensor, zp: Option<&Tensor>) -> Result<Vec<i32>, OpError> {
     let zero = match zp {
         None => 0i32,
         Some(z) => {
@@ -178,35 +179,68 @@ pub fn gemm_i32_par(
 }
 
 /// ONNX `MatMulInteger`: quantized A (i8/u8), quantized B (i8/u8),
-/// optional a_zero_point / b_zero_point, i32 output.
+/// optional a_zero_point / b_zero_point, i32 output. Widens the weight
+/// and resolves the activation zero point, then delegates to
+/// [`matmul_integer_prewidened`] — the single copy of the GEMM dispatch
+/// the compiled plans also execute.
 pub fn matmul_integer(
     a: &Tensor,
     b: &Tensor,
     a_zp: Option<&Tensor>,
     b_zp: Option<&Tensor>,
 ) -> Result<Tensor, OpError> {
-    let (m, k) = flat_mk(a.shape());
+    let (_, k) = flat_mk(a.shape());
     let (kb, n) = (b.shape()[0], b.shape()[1]);
     if k != kb {
         return Err(OpError::Semantics(format!("K mismatch {k} vs {kb}")));
     }
+    let bw = widen_with_zp(b, b_zp)?;
+    let az = match a_zp {
+        None => 0,
+        Some(z) => {
+            if z.numel() != 1 {
+                return Err(OpError::Semantics(
+                    "per-row/col zero points not supported (paper uses per-tensor)".into(),
+                ));
+            }
+            z.as_quantized_i32()?[0]
+        }
+    };
+    matmul_integer_prewidened(a, &bw, k, n, az)
+}
+
+/// `MatMulInteger` against a `[k, n]` weight matrix that was widened to
+/// i32 (zero point already subtracted) once at plan time, with the baked
+/// activation zero point `a_zp`. Bit-identical to [`matmul_integer`]:
+/// the same widened values reach the same GEMM kernels, the widening is
+/// just hoisted out of the per-call path.
+pub fn matmul_integer_prewidened(
+    a: &Tensor,
+    bw: &[i32],
+    k: usize,
+    n: usize,
+    a_zp: i32,
+) -> Result<Tensor, OpError> {
+    let (m, ka) = flat_mk(a.shape());
+    if ka != k {
+        return Err(OpError::Semantics(format!("K mismatch {ka} vs {k}")));
+    }
     let pool = ThreadPool::global();
     let mut c = vec![0i32; m * n];
-    let a_zp_zero = a_zp.map_or(true, |z| {
-        z.as_quantized_i32().map(|v| v == [0]).unwrap_or(false)
-    });
-    match (a.data(), a_zp_zero) {
+    match (a.data(), a_zp == 0) {
         // Hot path: i8 activations, zero a-zero-point (symmetric
-        // quantization — every pattern in the paper). Only the weight is
-        // widened, once.
+        // quantization — every pattern in the paper).
         (crate::tensor::TensorData::I8(av), true) => {
-            let bw = widen_with_zp(b, b_zp)?;
-            gemm_i8_i32_par(pool, av, &bw, m, k, n, &mut c);
+            gemm_i8_i32_par(pool, av, bw, m, k, n, &mut c);
         }
         _ => {
-            let aw = widen_with_zp(a, a_zp)?;
-            let bw = widen_with_zp(b, b_zp)?;
-            gemm_i32_par(pool, &aw, &bw, m, k, n, &mut c);
+            let mut aw = a.as_quantized_i32()?;
+            if a_zp != 0 {
+                for x in &mut aw {
+                    *x -= a_zp;
+                }
+            }
+            gemm_i32_par(pool, &aw, bw, m, k, n, &mut c);
         }
     }
     let mut out_shape = a.shape()[..a.shape().len() - 1].to_vec();
@@ -331,6 +365,22 @@ mod tests {
         let c = matmul_integer(&a, &b, None, None).unwrap();
         assert_eq!(c.shape(), &[2, 1, 1]);
         assert_eq!(c.as_i32().unwrap(), &[3, 7]);
+    }
+
+    #[test]
+    fn prewidened_matches_matmul_integer() {
+        let a8 = Tensor::from_i8(&[3, 4], (0..12).map(|i| (i * 5 - 30) as i8).collect()).unwrap();
+        let b = Tensor::from_i8(&[4, 2], vec![1, -2, 3, -4, 5, -6, 7, -8]).unwrap();
+        let bw = widen_with_zp(&b, None).unwrap();
+        let want = matmul_integer(&a8, &b, None, None).unwrap();
+        let got = matmul_integer_prewidened(&a8, &bw, 4, 2, 0).unwrap();
+        assert_eq!(want, got);
+        // u8 activations with a nonzero zero point take the widened path.
+        let au = Tensor::from_u8(&[2, 4], vec![130, 126, 128, 131, 0, 255, 128, 127]).unwrap();
+        let zp = Tensor::scalar_u8(128);
+        let want = matmul_integer(&au, &b, Some(&zp), None).unwrap();
+        let got = matmul_integer_prewidened(&au, &bw, 4, 2, 128).unwrap();
+        assert_eq!(want, got);
     }
 
     #[test]

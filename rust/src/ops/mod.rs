@@ -4,17 +4,25 @@
 //! operators implement the public ONNX contracts (opset 13 subset listed
 //! in [`crate::onnx::check::STANDARD_OPS`]) with no knowledge of the
 //! paper's quantization scheme — exactly like ONNXruntime.
+//!
+//! Dispatch is split compile-style: [`Kernel::bind`] parses a node's
+//! attributes into a pre-bound kernel once, [`Kernel::run`] executes it
+//! against resolved input tensors. [`execute_node`] composes the two for
+//! callers that hold a bare node (rewrite passes, tests); the interpreter
+//! binds at plan time and only runs in its hot loop.
 
 pub mod conv;
 pub mod elementwise;
+pub mod kernel;
 pub mod matmul;
 pub mod pool;
 pub mod qlinear;
 pub mod shape_ops;
 
+pub use kernel::Kernel;
+
 use crate::onnx::ir::Node;
-use crate::onnx::shape::ConvAttrs;
-use crate::tensor::{DType, Tensor, TensorError};
+use crate::tensor::{Tensor, TensorError};
 use thiserror::Error;
 
 #[derive(Error, Debug)]
@@ -33,95 +41,29 @@ pub enum OpError {
     Unsupported(String),
 }
 
-/// Execute one node given resolved input tensors (None = omitted optional
-/// input). Returns the node's output tensors in declaration order.
-pub fn execute_node(node: &Node, inputs: &[Option<&Tensor>]) -> Result<Vec<Tensor>, OpError> {
-    let req = |i: usize| -> Result<&Tensor, OpError> {
-        inputs
-            .get(i)
-            .copied()
-            .flatten()
-            .ok_or_else(|| OpError::MissingInput {
-                node: node.name.clone(),
-                op: node.op_type.clone(),
-                index: i,
-            })
-    };
-    let opt = |i: usize| -> Option<&Tensor> { inputs.get(i).copied().flatten() };
-
-    let out = match node.op_type.as_str() {
-        "MatMulInteger" => vec![matmul::matmul_integer(req(0)?, req(1)?, opt(2), opt(3))?],
-        "MatMul" => vec![matmul::matmul_f32(req(0)?, req(1)?)?],
-        "Gemm" => {
-            let alpha = node.attr_float("alpha").unwrap_or(1.0);
-            let beta = node.attr_float("beta").unwrap_or(1.0);
-            let trans_a = node.attr_int("transA").unwrap_or(0) != 0;
-            let trans_b = node.attr_int("transB").unwrap_or(0) != 0;
-            vec![matmul::gemm(req(0)?, req(1)?, opt(2), alpha, beta, trans_a, trans_b)?]
-        }
-        "ConvInteger" => {
-            let attrs = ConvAttrs::from_node(node);
-            vec![conv::conv_integer(req(0)?, req(1)?, opt(2), opt(3), &attrs)?]
-        }
-        "Conv" => {
-            let attrs = ConvAttrs::from_node(node);
-            let y = conv::conv_f32(req(0)?, req(1)?, &attrs)?;
-            // ONNX Conv takes an optional fp32 bias input B [M].
-            match opt(2) {
-                None => vec![y],
-                Some(b) => {
-                    let m = y.shape()[1];
-                    let b4 = b.clone().reshape(&[1, m, 1, 1])?;
-                    vec![elementwise::binary(elementwise::BinOp::Add, &y, &b4)?]
-                }
+impl OpError {
+    /// Fill in the node name on errors minted inside [`Kernel::run`]
+    /// (which only knows the operator, not the node).
+    pub fn with_node(mut self, name: &str) -> OpError {
+        if let OpError::MissingInput { node, .. } = &mut self {
+            if node.is_empty() {
+                *node = name.to_string();
             }
         }
-        "Add" | "Mul" | "Sub" | "Div" => {
-            let op = elementwise::BinOp::from_op_type(&node.op_type).unwrap();
-            vec![elementwise::binary(op, req(0)?, req(1)?)?]
-        }
-        "Cast" => {
-            let to = node
-                .attr_str("to")
-                .and_then(DType::from_onnx_name)
-                .ok_or_else(|| OpError::Semantics("Cast: missing/unknown 'to'".into()))?;
-            vec![req(0)?.cast(to)]
-        }
-        "QuantizeLinear" => vec![qlinear::quantize_linear(req(0)?, req(1)?, opt(2))?],
-        "DequantizeLinear" => vec![qlinear::dequantize_linear(req(0)?, req(1)?, opt(2))?],
-        "Relu" => vec![elementwise::relu(req(0)?)?],
-        "Tanh" => vec![elementwise::tanh(req(0)?)?],
-        "Sigmoid" => vec![elementwise::sigmoid(req(0)?)?],
-        "Softmax" => {
-            let axis = node.attr_int("axis").unwrap_or(-1);
-            vec![shape_ops::softmax(req(0)?, axis)?]
-        }
-        "MaxPool" => {
-            let kernel = node
-                .attr_ints("kernel_shape")
-                .ok_or_else(|| OpError::Semantics("MaxPool: missing kernel_shape".into()))?
-                .to_vec();
-            vec![pool::max_pool(req(0)?, &kernel, ConvAttrs::from_node(node))?]
-        }
-        "AveragePool" => {
-            let kernel = node
-                .attr_ints("kernel_shape")
-                .ok_or_else(|| OpError::Semantics("AveragePool: missing kernel_shape".into()))?
-                .to_vec();
-            vec![pool::average_pool(req(0)?, &kernel, ConvAttrs::from_node(node))?]
-        }
-        "Reshape" => {
-            let spec = req(1)?.as_i64()?.to_vec();
-            vec![shape_ops::reshape(req(0)?, &spec)?]
-        }
-        "Flatten" => {
-            let axis = node.attr_int("axis").unwrap_or(1) as usize;
-            vec![shape_ops::flatten(req(0)?, axis)?]
-        }
-        "Identity" => vec![req(0)?.clone()],
-        other => return Err(OpError::Unsupported(other.to_string())),
-    };
-    Ok(out)
+        self
+    }
+}
+
+/// Execute one node given resolved input tensors (None = omitted optional
+/// input). Returns the node's output tensors in declaration order.
+///
+/// Thin bind+run compat wrapper over [`Kernel`]: attribute parsing happens
+/// on every call here, so hot paths should bind once and reuse the kernel
+/// (as [`crate::interp::Session`]'s compiled plan does).
+pub fn execute_node(node: &Node, inputs: &[Option<&Tensor>]) -> Result<Vec<Tensor>, OpError> {
+    let kernel = Kernel::bind(node)?;
+    let out = kernel.run(inputs).map_err(|e| e.with_node(&node.name))?;
+    Ok(vec![out])
 }
 
 #[cfg(test)]
@@ -153,6 +95,8 @@ mod tests {
         let a = Tensor::from_i8(&[1, 2], vec![1, 2]).unwrap();
         let err = execute_node(&node, &[Some(&a), None]).unwrap_err();
         assert!(matches!(err, OpError::MissingInput { index: 1, .. }));
+        // The compat wrapper patches the node name into the error.
+        assert!(err.to_string().contains("'mm'"));
     }
 
     #[test]

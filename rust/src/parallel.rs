@@ -236,6 +236,51 @@ pub fn chunk_count(items: usize, threads: usize, min_per_chunk: usize) -> usize 
     threads.min(items.div_ceil(min_per_chunk.max(1))).max(1)
 }
 
+/// Row-chunk scatter/gather shared by the batch-parallel executors
+/// ([`crate::interp::Session::run`] and [`crate::hwsim::HwModule::run`]):
+/// run `task` once per row range, collecting results in chunk order so
+/// reassembly is deterministic regardless of thread timing.
+///
+/// Chunks are dispatched to `pool` unless pool dispatch is disallowed on
+/// the current thread (inside [`serial_scope`], or already on a pool
+/// worker), in which case every chunk runs inline in order — preserving
+/// the chunk *schedule* (which hwsim's cost report is a constant of)
+/// while keeping execution single-threaded. The first chunk error, in
+/// chunk order, is returned.
+pub fn scatter_gather<T, E, F>(
+    pool: &ThreadPool,
+    chunks: &[std::ops::Range<usize>],
+    task: F,
+) -> Result<Vec<T>, E>
+where
+    T: Send,
+    E: Send,
+    F: Fn(std::ops::Range<usize>) -> Result<T, E> + Sync,
+{
+    let mut results: Vec<Option<Result<T, E>>> = chunks.iter().map(|_| None).collect();
+    {
+        let task = &task;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(chunks.len());
+        for (slot, range) in results.iter_mut().zip(chunks) {
+            let range = range.clone();
+            tasks.push(Box::new(move || {
+                *slot = Some(task(range));
+            }));
+        }
+        if allow_pool_dispatch() {
+            pool.run_scoped(tasks);
+        } else {
+            for t in tasks {
+                t();
+            }
+        }
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("scatter_gather task completed"))
+        .collect()
+}
+
 /// Parallel iteration over disjoint row-blocks of a mutable buffer laid out
 /// as `rows` rows of `row_len` elements. `f(first_row, block)` is called for
 /// each contiguous block; blocks are split per [`ranges`], so results are
@@ -312,6 +357,26 @@ mod tests {
         }
         let want: Vec<usize> = (0..64).collect();
         assert_eq!(data, want);
+    }
+
+    #[test]
+    fn scatter_gather_orders_results_and_propagates_errors() {
+        let pool = ThreadPool::new(3);
+        let chunks = ranges(10, 4);
+        let ok: Result<Vec<usize>, String> = scatter_gather(&pool, &chunks, |r| Ok(r.start));
+        assert_eq!(ok.unwrap(), vec![0, 3, 6, 8]);
+        let err: Result<Vec<usize>, String> = scatter_gather(&pool, &chunks, |r| {
+            if r.start == 3 {
+                Err("boom".to_string())
+            } else {
+                Ok(r.start)
+            }
+        });
+        assert_eq!(err.unwrap_err(), "boom");
+        // Inside serial_scope the same chunks run inline, in order.
+        let inline: Result<Vec<usize>, String> =
+            serial_scope(|| scatter_gather(&pool, &chunks, |r| Ok(r.start)));
+        assert_eq!(inline.unwrap(), vec![0, 3, 6, 8]);
     }
 
     #[test]

@@ -55,15 +55,7 @@ fn validation_sweep_all_figures_interp_vs_hwsim() {
         ];
         let inputs: Vec<Tensor> = (0..20).map(|s| fig.input(4, s)).collect();
         let report = validate(fig.name(), &backends, &inputs).unwrap();
-        // A 1-LSB pre-activation delta is amplified by the activation's
-        // local slope x in_scale x out_levels: fig4 tanh (in 4/127) <= 4,
-        // fig5 tanh (in 2/127) <= 2, fig6 sigmoid (in 8/127, x255) <= 5.
-        let tol = match fig {
-            Figure::Fig4TanhInt8 => 4,
-            Figure::Fig5TanhF16 => 2,
-            Figure::Fig6SigmoidF16 => 5,
-            _ => 1,
-        };
+        let tol = fig.hw_tolerance();
         assert!(
             report.all_within(tol),
             "{} out of tolerance:\n{}",

@@ -1,0 +1,193 @@
+//! Differential tests for the compiled execution plan: across all six
+//! figure models, the quantized float-I/O MLP, and the hardware
+//! simulator, the planned executor (`Session::run` / `run_serial` /
+//! `run_observed`) must produce BIT-IDENTICAL outputs — and for the
+//! calibration hook, an identical observer stream — to the legacy
+//! string-keyed interpreter (`Session::run_unplanned`), which is the
+//! pre-plan implementation retained verbatim as the oracle.
+
+use pqdl::figures::Figure;
+use pqdl::hwsim::{HwConfig, HwModule, HW_PAR_MIN_BATCH};
+use pqdl::interp::Session;
+use pqdl::proptest_util::{run_prop, RangeUsize};
+use pqdl::quant::CalibStrategy;
+use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+use pqdl::tensor::{DType, Tensor};
+use pqdl::train::{synthetic_digits, train_classifier, HiddenAct, Mlp};
+
+#[test]
+fn plan_matches_legacy_on_all_figures() {
+    for fig in Figure::ALL {
+        let sess = Session::new(fig.model()).unwrap();
+        run_prop(
+            &format!("plan_vs_legacy::{}", fig.name()),
+            &RangeUsize { lo: 1, hi: 17 },
+            0x9A7D ^ fig.name().len() as u64,
+            8,
+            |&batch| {
+                let x = fig.input(batch, batch as u64 * 131 + 7);
+                let legacy = sess
+                    .run_unplanned(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let planned = sess
+                    .run_serial(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                if legacy != planned {
+                    return Err(format!(
+                        "{}: planned serial != legacy at batch {batch}",
+                        fig.name()
+                    ));
+                }
+                // The auto (possibly batch-parallel) path must agree too.
+                let auto = sess.run(&[("x", x)]).map_err(|e| e.to_string())?;
+                if legacy != auto {
+                    return Err(format!(
+                        "{}: planned auto != legacy at batch {batch}",
+                        fig.name()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The serving-shaped model the coordinator batches: float I/O, Gemm
+/// chain, Softmax head, produced by the real quantization pipeline.
+fn quantized_digits_mlp() -> (Session, Vec<Vec<f32>>) {
+    let data = synthetic_digits(400, 91);
+    let mut mlp = Mlp::new(&[64, 24, 10], HiddenAct::Relu, 92);
+    train_classifier(&mut mlp, &data, 6, 32, 0.1, 0.9, 93);
+    let model = mlp.to_model("digits_plan");
+    let sess = Session::new(model.clone()).unwrap();
+    let batches: Vec<_> = (0..32)
+        .map(|i| {
+            let (x, _) = data.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
+    let preq = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+    let rows: Vec<Vec<f32>> = (0..48).map(|i| data.sample(i).0.to_vec()).collect();
+    (Session::new(preq).unwrap(), rows)
+}
+
+#[test]
+fn plan_matches_legacy_on_quantized_float_io_mlp() {
+    let (qsess, rows) = quantized_digits_mlp();
+    for batch in [1usize, 3, 9] {
+        let mut xs = Vec::with_capacity(batch * 64);
+        for i in 0..batch {
+            xs.extend_from_slice(&rows[(i * 5) % rows.len()]);
+        }
+        let x = Tensor::from_f32(&[batch, 64], xs).unwrap();
+        let legacy = qsess.run_unplanned(&[("x", x.clone())]).unwrap();
+        let planned = qsess.run_serial(&[("x", x.clone())]).unwrap();
+        assert_eq!(legacy, planned, "batch {batch}");
+        let auto = qsess.run(&[("x", x)]).unwrap();
+        assert_eq!(legacy, auto, "batch {batch} (auto)");
+    }
+}
+
+/// The calibration hook: the planned executor's observer stream (names
+/// and tensors, in order) must be identical to the legacy interpreter's.
+#[test]
+fn observer_stream_identical_planned_vs_legacy() {
+    for fig in Figure::ALL {
+        let sess = Session::new(fig.model()).unwrap();
+        let x = fig.input(3, 0xCA11B);
+        let mut planned: Vec<(String, Tensor)> = Vec::new();
+        sess.run_observed(&[("x", x.clone())], &mut |name, t| {
+            planned.push((name.to_string(), t.clone()));
+        })
+        .unwrap();
+        let mut legacy: Vec<(String, Tensor)> = Vec::new();
+        sess.run_unplanned_observed(&[("x", x)], &mut |name, t| {
+            legacy.push((name.to_string(), t.clone()));
+        })
+        .unwrap();
+        assert_eq!(
+            planned.len(),
+            legacy.len(),
+            "{}: observer event count",
+            fig.name()
+        );
+        for (i, (p, l)) in planned.iter().zip(&legacy).enumerate() {
+            assert_eq!(p.0, l.0, "{}: observer name at event {i}", fig.name());
+            assert_eq!(p.1, l.1, "{}: observer tensor for '{}'", fig.name(), p.0);
+        }
+    }
+}
+
+/// End-to-end calibration (the run_observed consumer) over the planned
+/// executor must reproduce the legacy thresholds exactly.
+#[test]
+fn calibration_thresholds_identical_planned_vs_legacy() {
+    let data = synthetic_digits(200, 51);
+    let mut mlp = Mlp::new(&[64, 16, 10], HiddenAct::Tanh, 52);
+    train_classifier(&mut mlp, &data, 4, 32, 0.1, 0.9, 53);
+    let model = mlp.to_model("digits_cal");
+    let sess = Session::new(model).unwrap();
+    let batches: Vec<_> = (0..16)
+        .map(|i| {
+            let (x, _) = data.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    // Planned path (what `calibrate` uses today).
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
+    // Legacy path: same strategy driven through run_unplanned_observed.
+    let mut legacy_max: std::collections::HashMap<String, f32> =
+        std::collections::HashMap::new();
+    for feeds in &batches {
+        let feeds_ref: Vec<(&str, Tensor)> = feeds
+            .iter()
+            .map(|(n, t)| (n.as_str(), t.clone()))
+            .collect();
+        sess.run_unplanned_observed(&feeds_ref, &mut |name, t| {
+            if t.dtype() == DType::F32 {
+                let m = legacy_max.entry(name.to_string()).or_insert(0.0);
+                for &v in t.as_f32().unwrap() {
+                    *m = m.max(v.abs());
+                }
+            }
+        })
+        .unwrap();
+    }
+    assert_eq!(cal.thresholds.len(), legacy_max.len());
+    for (name, &want) in &legacy_max {
+        assert_eq!(
+            cal.threshold(name),
+            Some(want),
+            "threshold for '{name}' drifted between planned and legacy"
+        );
+    }
+}
+
+/// hwsim consumes the same plan-compiled stages; its batch-split schedule
+/// must stay bit-identical to its serial path and in agreement with the
+/// (planned) interpreter within the established per-figure margins.
+#[test]
+fn hwsim_agreement_unchanged_under_planned_interp() {
+    for fig in Figure::ALL {
+        let model = fig.model();
+        let hw = HwModule::compile(&model, HwConfig::default()).unwrap();
+        let sess = Session::new(model).unwrap();
+        let batch = HW_PAR_MIN_BATCH + 2; // exercises the split schedule
+        let x = fig.input(batch, 77);
+        let (hw_out, cost) = hw.run(&x).unwrap();
+        let (hw_serial, serial_cost) = hw.run_serial(&x).unwrap();
+        assert_eq!(hw_out, hw_serial, "{}: hw split != serial", fig.name());
+        assert_eq!(cost.macs, serial_cost.macs, "{}: MACs drifted", fig.name());
+        let want = &sess.run(&[("x", x)]).unwrap()[0];
+        let wv = want.as_quantized_i32().unwrap();
+        let gv = hw_out.as_quantized_i32().unwrap();
+        let tol = fig.hw_tolerance();
+        let max_diff = wv.iter().zip(&gv).map(|(a, b)| (a - b).abs()).max().unwrap();
+        assert!(
+            max_diff <= tol,
+            "{}: interp-vs-hw max diff {max_diff} > {tol}",
+            fig.name()
+        );
+    }
+}
