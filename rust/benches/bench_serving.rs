@@ -3,7 +3,7 @@
 //! plus the serial-vs-parallel executor comparison on multi-row batches
 //! (the acceptance measurement for the batch-parallel `Session::run`).
 
-use pqdl::bench_util::{bench_auto, env_usize, section};
+use pqdl::bench_util::{bench_auto, env_usize, section, JsonReport};
 use pqdl::coordinator::{CoordinatorBuilder, InterpBackend, ServerConfig};
 use pqdl::interp::Session;
 use pqdl::parallel::ThreadPool;
@@ -34,6 +34,9 @@ fn main() {
     // --- serial vs parallel executor on multi-row batches ----------------
     let target_ms = env_usize("PQDL_BENCH_TARGET_MS", 150) as u64;
     let qsess = Session::new(preq.clone()).unwrap();
+    // Machine-readable trajectory: PQDL_BENCH_JSON=<path> writes every
+    // measured row (see EXPERIMENTS.md §Perf / BENCH_serving.json).
+    let mut json = JsonReport::new("serving");
     section(&format!(
         "serial vs parallel Session::run on the quantized MLP ({} pool threads)",
         ThreadPool::global().threads()
@@ -71,17 +74,25 @@ fn main() {
             parallel.throughput_per_s,
             parallel.throughput_per_s / serial.throughput_per_s
         );
+        json.record(&format!("serial b{batch}"), batch, &serial);
+        json.record(&format!("parallel b{batch}"), batch, &parallel);
     }
 
-    // --- planned vs legacy interpreter ----------------------------------
-    // Same workloads, both strictly serial: isolates the compile-once win
-    // (slot-indexed store + pre-bound kernels vs per-call string hashing +
-    // attribute re-parsing). `run_unplanned` IS the pre-plan interpreter,
-    // retained for exactly this comparison and the bit-identity proptests.
-    section("planned vs legacy interpreter (compile-once execution plans)");
+    // --- planned vs legacy interpreter, plus the recycled entry point ----
+    // Same workloads, all strictly serial. NOTE on attribution: since the
+    // scratch-planner PR, `run_serial` ("planned") ALREADY executes with
+    // the arena-recycled buffers and packed int8 GEMM — so the arena +
+    // packed win shows up as the change in the "planned" rows ACROSS
+    // COMMITS (pre-PR vs post-PR BENCH_serving.json), not as a column in
+    // one run. Within a run, "recycled" (`run_into` with handed-back
+    // outputs and borrowed feeds) isolates only the last two per-call
+    // allocations: the output tensors and the per-iteration feed clone.
+    // `run_unplanned` IS the pre-plan interpreter, retained for exactly
+    // this comparison and the bit-identity proptests.
+    section("planned vs legacy interpreter (compile-once plans + scratch arena)");
     println!(
-        "{:<8} | {:>14} | {:>14} | {:>8}",
-        "batch", "legacy itm/s", "planned itm/s", "speedup"
+        "{:<8} | {:>14} | {:>14} | {:>14} | {:>8} | {:>8}",
+        "batch", "legacy itm/s", "planned itm/s", "recycled itm/s", "plan x", "into x"
     );
     for batch in [1usize, 8, 32, 128] {
         let x = batch_of(batch);
@@ -99,12 +110,27 @@ fn main() {
                 s.run_serial(&[("x", x.clone())]).expect("planned run");
             })
         };
+        let recycled = {
+            let x = x.clone();
+            let s = &qsess;
+            let mut outs = Vec::new();
+            bench_auto(&format!("recycled b{batch}"), batch, target_ms, move || {
+                pqdl::parallel::serial_scope(|| {
+                    s.run_into(&[("x", &x)], &mut outs).expect("recycled run");
+                });
+            })
+        };
         println!(
-            "{batch:<8} | {:>14.1} | {:>14.1} | {:>7.2}x",
+            "{batch:<8} | {:>14.1} | {:>14.1} | {:>14.1} | {:>7.2}x | {:>7.2}x",
             legacy.throughput_per_s,
             planned.throughput_per_s,
-            planned.throughput_per_s / legacy.throughput_per_s
+            recycled.throughput_per_s,
+            planned.throughput_per_s / legacy.throughput_per_s,
+            recycled.throughput_per_s / legacy.throughput_per_s
         );
+        json.record(&format!("legacy b{batch}"), batch, &legacy);
+        json.record(&format!("planned b{batch}"), batch, &planned);
+        json.record(&format!("recycled b{batch}"), batch, &recycled);
     }
 
     section("dynamic batching sweep (16 closed-loop clients x 150 reqs)");
@@ -159,4 +185,6 @@ fn main() {
         );
         coord.shutdown();
     }
+
+    json.flush();
 }

@@ -22,7 +22,11 @@ pub trait Backend: Send + Sync {
 /// Interpreter backend ("standard tool" path). `Session::new` compiled
 /// the model into an execution plan once; serving a batch is a plan run
 /// over the borrowed input — no per-request name resolution or feed
-/// clone.
+/// clone, and the session's internal scratch-arena pool recycles every
+/// intermediate buffer across requests (the output tensor itself is the
+/// only steady-state allocation here, because its ownership leaves with
+/// the response; callers that can hand buffers back should use
+/// `Session::run_into` directly).
 pub struct InterpBackend {
     session: Session,
     input_name: String,

@@ -24,7 +24,7 @@ use super::cost::{gemm_cost, host_cost, vector_cost, CostReport};
 use super::lut::{ActEval, ActFn, ActLut};
 use crate::onnx::ir::{Graph, Model, Node};
 use crate::onnx::shape::ConvAttrs;
-use crate::ops::matmul::gemm_i32;
+use crate::ops::matmul::{gemm_i32, gemm_i32_par};
 use crate::parallel::{self, ThreadPool};
 use crate::quant::QType;
 use crate::tensor::{DType, Tensor};
@@ -842,7 +842,11 @@ impl HwModule {
                     return Err(HwError::Exec(format!("fc K mismatch {kk} vs {k}")));
                 }
                 let mut acc = vec![0i32; m * n];
-                gemm_i32(&t.data, w, m, *k, *n, &mut acc);
+                // Pool-dispatched for large single batches; bit-exact and
+                // cost-model-neutral (MACs are counted analytically below,
+                // and nested calls inside the run_split schedule fall back
+                // to the serial kernel on pool workers).
+                gemm_i32_par(ThreadPool::global(), &t.data, w, m, *k, *n, &mut acc);
                 if let Some(b) = bias {
                     for row in acc.chunks_mut(*n) {
                         for (v, bv) in row.iter_mut().zip(b) {

@@ -6,7 +6,14 @@
 //! to dense slots, initializers resolved to indices, attributes parsed
 //! into pre-bound [`crate::ops::Kernel`]s, per-step frees as slot lists.
 //! Executing a feed set is then a tight loop over `Vec`-indexed slots —
-//! no string hashing, no per-node attribute parsing, no feed cloning.
+//! no string hashing, no per-node attribute parsing, no feed cloning —
+//! and, since the scratch planner (EXPERIMENTS.md §Perf), **no
+//! steady-state heap allocation**: every intermediate buffer recycles
+//! through a per-run [`plan::ScratchArena`] checked out of a session
+//! pool, kernels write through the `run_with` out-param API, and
+//! [`Session::run_into`] recycles even the output tensors a caller
+//! hands back. `tests/alloc_regression.rs` holds the counting-allocator
+//! proof.
 //!
 //! A pre-quantized model runs here *because* it is expressed in standard
 //! operators (paper goal 2) — the session treats `Quant_scale` exactly
@@ -24,8 +31,9 @@ use crate::onnx::topo::topo_order;
 use crate::ops::{execute_node, OpError};
 use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Tensor};
-use plan::{resolve_src, CompiledPlan, Src, Value};
-use std::collections::{BTreeMap, HashMap};
+use plan::{resolve_src, CompiledPlan, ScratchArena, Src};
+use std::collections::HashMap;
+use std::sync::Mutex;
 use thiserror::Error;
 
 /// Smallest batch the auto-parallel path will split: below this the pool
@@ -36,6 +44,13 @@ pub const PAR_MIN_BATCH: usize = 4;
 /// hot loop (every admitted operator has <= 4 inputs; the heap fallback
 /// only exists for malformed hand-built nodes).
 const STACK_INPUTS: usize = 8;
+
+/// Upper bound on retained [`ScratchArena`]s per session. Arenas above
+/// the cap (created only while MORE than this many runs execute the same
+/// session concurrently) are dropped on check-in instead of pooled, so a
+/// burst of concurrency cannot pin an unbounded number of max-batch
+/// live-sets for the session's lifetime.
+const MAX_POOLED_ARENAS: usize = 32;
 
 #[derive(Error, Debug)]
 pub enum SessionError {
@@ -100,7 +115,14 @@ pub struct Session {
     /// Auto-parallel batched `run` calls (on by default; disable with
     /// [`Session::with_parallelism`] to force the serial path).
     parallel: bool,
-    profile: std::sync::Mutex<Vec<StepProfile>>,
+    /// Pool of recycled execution arenas: one is checked out per run (so
+    /// concurrent batch-parallel chunks never contend on buffers) and
+    /// returned with its store swept into the recycle table. After the
+    /// first run at a given batch size, the checked-out arena already
+    /// holds every intermediate buffer the run needs — the steady-state
+    /// zero-allocation guarantee (see `tests/alloc_regression.rs`).
+    arenas: Mutex<Vec<ScratchArena>>,
+    profile: Mutex<Vec<StepProfile>>,
     profiling: bool,
 }
 
@@ -163,7 +185,7 @@ impl Session {
                     .collect()
             })
             .collect();
-        let profile = std::sync::Mutex::new(vec![StepProfile::default(); plan.steps.len()]);
+        let profile = Mutex::new(vec![StepProfile::default(); plan.steps.len()]);
 
         Ok(Session {
             model,
@@ -171,6 +193,7 @@ impl Session {
             unplanned_frees,
             batch_symbol,
             parallel: true,
+            arenas: Mutex::new(Vec::new()),
             profile,
             profiling: false,
         })
@@ -214,6 +237,37 @@ impl Session {
     /// [`Session::run`] over borrowed feeds — the serving layer's entry
     /// point, avoiding a tensor clone per request.
     pub fn run_refs(&self, feeds: &[(&str, &Tensor)]) -> Result<Vec<Tensor>, SessionError> {
+        let mut outs = Vec::new();
+        self.run_into(feeds, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// [`Session::run_refs`] with output-buffer recycling: pass the
+    /// `outs` of the previous call back in and their storage is recycled
+    /// into the plan's output slots, closing the last per-run allocation
+    /// — at a steady batch size the whole call performs **zero heap
+    /// allocations** on the serial planned path (intermediates recycle
+    /// through the session's [`ScratchArena`] pool regardless of which
+    /// entry point is used; `tests/alloc_regression.rs` enforces this).
+    ///
+    /// On the batch-*parallel* path (splittable model, batch >=
+    /// [`PAR_MIN_BATCH`], default parallelism) outputs are assembled by
+    /// slicing + concatenation, so the handed-back buffers are replaced
+    /// rather than reused there — only the per-chunk intermediates
+    /// recycle (each chunk's `run_serial` checks out its own arena).
+    /// Disable parallelism (or stay under the split threshold) to get
+    /// the full zero-allocation contract.
+    ///
+    /// Degenerate passthrough outputs (a graph output aliasing a graph
+    /// input or initializer with no producing node) are cloned from
+    /// their source on every call, exactly as the pre-arena executor
+    /// did — there is no buffer to recycle into for a value no kernel
+    /// writes.
+    pub fn run_into(
+        &self,
+        feeds: &[(&str, &Tensor)],
+        outs: &mut Vec<Tensor>,
+    ) -> Result<(), SessionError> {
         if self.parallel && !self.profiling {
             let pool = ThreadPool::global();
             // A 1-thread pool would execute the chunks sequentially anyway,
@@ -221,16 +275,19 @@ impl Session {
             // chunking on tiny pools deliberately, for the property tests).
             if pool.threads() > 1 {
                 if let Some(chunks) = self.batch_chunks(feeds, pool, PAR_MIN_BATCH) {
-                    return self.run_parallel(feeds, &chunks, pool);
+                    let res = self.run_parallel(feeds, &chunks, pool)?;
+                    outs.clear();
+                    outs.extend(res);
+                    return Ok(());
                 }
             }
             // Not batch-split (small batch or non-splittable model): run on
             // this thread, leaving the op-level GEMM/conv parallelism free
             // to engage for large single calls.
-            return self.execute(feeds, &mut |_, _| {});
+            return self.execute_core(feeds, &mut |_, _| {}, outs);
         }
         let mut noop = |_: &str, _: &Tensor| {};
-        parallel::serial_scope(|| self.execute(feeds, &mut noop))
+        parallel::serial_scope(|| self.execute_core(feeds, &mut noop, outs))
     }
 
     /// Execute strictly on the calling thread — [`parallel::serial_scope`]
@@ -239,7 +296,9 @@ impl Session {
     pub fn run_serial(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
         let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
         let mut noop = |_: &str, _: &Tensor| {};
-        parallel::serial_scope(|| self.execute(&refs, &mut noop))
+        let mut outs = Vec::new();
+        parallel::serial_scope(|| self.execute_core(&refs, &mut noop, &mut outs))?;
+        Ok(outs)
     }
 
     /// Execute with the batch axis split across `pool` whenever the model
@@ -322,14 +381,25 @@ impl Session {
         observer: &mut dyn FnMut(&str, &Tensor),
     ) -> Result<Vec<Tensor>, SessionError> {
         let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
-        self.execute(&refs, observer)
+        let mut outs = Vec::new();
+        self.execute_core(&refs, observer, &mut outs)?;
+        Ok(outs)
     }
 
     /// Validate feeds against the declared graph inputs, binding symbolic
     /// dims consistently across feeds.
+    ///
+    /// Allocation-free on success: symbol bindings live in a small stack
+    /// array (models bind a handful of symbols — usually one, the batch
+    /// axis), spilling to a heap vector only past its capacity; the
+    /// required-feed check scans the graph inputs in place instead of
+    /// materializing `runtime_inputs()`.
     fn validate_feeds(&self, feeds: &[(&str, &Tensor)]) -> Result<(), SessionError> {
+        const INLINE_SYMS: usize = 8;
         let g = &self.model.graph;
-        let mut bindings: BTreeMap<String, usize> = BTreeMap::new();
+        let mut inline: [Option<(&str, usize)>; INLINE_SYMS] = [None; INLINE_SYMS];
+        let mut n_inline = 0usize;
+        let mut spill: Vec<(&str, usize)> = Vec::new();
         for (name, t) in feeds {
             let vi = g
                 .input(name)
@@ -360,22 +430,39 @@ impl Session {
                         }
                     }
                     Dim::Symbolic(s) => {
-                        if let Some(&prev) = bindings.get(s) {
-                            if prev != got {
-                                return Err(SessionError::SymbolClash {
-                                    sym: s.clone(),
-                                    a: prev,
-                                    b: got,
-                                });
+                        let prev = inline[..n_inline]
+                            .iter()
+                            .flatten()
+                            .chain(spill.iter())
+                            .find(|(sym, _)| *sym == s.as_str())
+                            .map(|&(_, v)| v);
+                        match prev {
+                            Some(prev) => {
+                                if prev != got {
+                                    return Err(SessionError::SymbolClash {
+                                        sym: s.clone(),
+                                        a: prev,
+                                        b: got,
+                                    });
+                                }
                             }
-                        } else {
-                            bindings.insert(s.clone(), got);
+                            None => {
+                                if n_inline < INLINE_SYMS {
+                                    inline[n_inline] = Some((s.as_str(), got));
+                                    n_inline += 1;
+                                } else {
+                                    spill.push((s.as_str(), got));
+                                }
+                            }
                         }
                     }
                 }
             }
         }
-        for vi in g.runtime_inputs() {
+        for vi in &g.inputs {
+            if g.initializer(&vi.name).is_some() {
+                continue; // initializer-backed input: feed optional
+            }
             if !feeds.iter().any(|(n, _)| *n == vi.name) {
                 return Err(SessionError::MissingFeed(vi.name.clone()));
             }
@@ -383,24 +470,63 @@ impl Session {
         Ok(())
     }
 
-    /// The planned hot loop: slot-indexed value store, pre-bound kernels.
-    fn execute<'a>(
-        &'a self,
-        feeds: &[(&str, &'a Tensor)],
+    /// The planned hot loop: slot-indexed value store, pre-bound kernels,
+    /// recycled buffers. Checks an arena out of the session pool, seeds
+    /// its output slots with the storage of the tensors the caller hands
+    /// back in `outs`, executes, and refills `outs` in graph-output
+    /// declaration order. After the first run at a batch size, the whole
+    /// call allocates nothing on the serial path.
+    fn execute_core(
+        &self,
+        feeds: &[(&str, &Tensor)],
         observer: &mut dyn FnMut(&str, &Tensor),
-    ) -> Result<Vec<Tensor>, SessionError> {
-        let g = &self.model.graph;
+        outs: &mut Vec<Tensor>,
+    ) -> Result<(), SessionError> {
         self.validate_feeds(feeds)?;
-        let inits = &g.initializers;
+        let mut arena = {
+            let mut pool = self.arenas.lock().unwrap();
+            pool.pop()
+        }
+        .unwrap_or_else(|| ScratchArena::new(self.plan.n_slots, self.plan.steps.len()));
 
-        // Slot store: feeds borrowed in place, intermediates owned.
-        let mut store: Vec<Option<Value<'a>>> = Vec::with_capacity(self.plan.n_slots);
-        store.resize_with(self.plan.n_slots, || None);
+        // Recycle the caller's previous outputs into their slots.
+        for (t, src) in outs.drain(..).zip(self.plan.outputs.iter()) {
+            match *src {
+                Src::Slot(s)
+                | Src::SlotOrInit { slot: s, .. }
+                | Src::Feed { slot: s }
+                | Src::FeedOrInit { slot: s, .. } => arena.recycle[s as usize] = Some(t),
+                Src::Init(_) | Src::None => {}
+            }
+        }
+
+        let result = self.execute_steps(&mut arena, feeds, observer, outs);
+        // Teardown: park every remaining live value for the next run and
+        // return the arena — also on the error path. Beyond the cap the
+        // arena is dropped: memory stays bounded by MAX_POOLED_ARENAS
+        // live-sets even after a burst of concurrent runs.
+        arena.sweep();
+        {
+            let mut pool = self.arenas.lock().unwrap();
+            if pool.len() < MAX_POOLED_ARENAS {
+                pool.push(arena);
+            }
+        }
+        result
+    }
+
+    fn execute_steps(
+        &self,
+        arena: &mut ScratchArena,
+        feeds: &[(&str, &Tensor)],
+        observer: &mut dyn FnMut(&str, &Tensor),
+        outs: &mut Vec<Tensor>,
+    ) -> Result<(), SessionError> {
+        let g = &self.model.graph;
+        let inits = &g.initializers;
+        let names = &self.plan.names;
         for &(name, t) in feeds {
             observer(name, t);
-            if let Some(&slot) = self.plan.feed_slots.get(name) {
-                store[slot as usize] = Some(Value::Borrowed(t));
-            }
         }
 
         let mut timings: Vec<u128> = if self.profiling {
@@ -415,34 +541,47 @@ impl Session {
             let heap: Vec<Option<&Tensor>>;
             let input_refs: &[Option<&Tensor>] = if n_in <= STACK_INPUTS {
                 for (dst, src) in stack.iter_mut().zip(step.inputs.iter()) {
-                    *dst = resolve_src(src, &store, inits);
+                    *dst = resolve_src(src, &arena.store, feeds, names, inits);
                 }
                 &stack[..n_in]
             } else {
                 heap = step
                     .inputs
                     .iter()
-                    .map(|src| resolve_src(src, &store, inits))
+                    .map(|src| resolve_src(src, &arena.store, feeds, names, inits))
                     .collect();
                 &heap
             };
+            // The step's retired output buffer from a previous run, if
+            // any, plus its two kernel-internal scratch slots.
+            let recycled = match step.output {
+                Some(slot) => arena.recycle[slot as usize].take(),
+                None => None,
+            };
             let t0 = self.profiling.then(std::time::Instant::now);
-            let out = step.kernel.run(input_refs).map_err(|source| {
-                let node = &g.nodes[step.node_idx];
-                SessionError::Op {
-                    node: node.name.clone(),
-                    source: source.with_node(&node.name),
-                }
-            })?;
+            let out = step
+                .kernel
+                .run_with(input_refs, recycled, &mut arena.scratch[pos])
+                .map_err(|source| {
+                    let node = &g.nodes[step.node_idx];
+                    SessionError::Op {
+                        node: node.name.clone(),
+                        source: source.with_node(&node.name),
+                    }
+                })?;
             if let Some(t0) = t0 {
                 timings[pos] = t0.elapsed().as_nanos();
             }
             if let Some(slot) = step.output {
-                observer(&self.plan.names[slot as usize], &out);
-                store[slot as usize] = Some(Value::Owned(out));
+                observer(&names[slot as usize], &out);
+                arena.store[slot as usize] = Some(out);
             }
+            // Last uses: park the dead value's storage for the next run
+            // instead of dropping it.
             for &dead in step.frees.iter() {
-                store[dead as usize] = None;
+                if let Some(t) = arena.store[dead as usize].take() {
+                    arena.recycle[dead as usize] = Some(t);
+                }
             }
         }
 
@@ -455,20 +594,26 @@ impl Session {
             }
         }
 
-        let mut outputs = Vec::with_capacity(self.plan.outputs.len());
+        outs.reserve(self.plan.outputs.len());
         for (src, vi) in self.plan.outputs.iter().zip(&g.outputs) {
             let t = match *src {
-                Src::Slot(s) => store[s as usize].take().map(Value::into_owned),
-                Src::SlotOrInit { slot, init } => store[slot as usize]
+                Src::Slot(s) => arena.store[s as usize].take(),
+                Src::SlotOrInit { slot, init } => arena.store[slot as usize]
                     .take()
-                    .map(Value::into_owned)
+                    .or_else(|| Some(inits[init as usize].1.clone())),
+                Src::Feed { slot } => arena.store[slot as usize]
+                    .take()
+                    .or_else(|| plan::feed_by_name(feeds, &names[slot as usize]).cloned()),
+                Src::FeedOrInit { slot, init } => arena.store[slot as usize]
+                    .take()
+                    .or_else(|| plan::feed_by_name(feeds, &names[slot as usize]).cloned())
                     .or_else(|| Some(inits[init as usize].1.clone())),
                 Src::Init(i) => Some(inits[i as usize].1.clone()),
                 Src::None => None,
             };
-            outputs.push(t.ok_or_else(|| SessionError::ValueMissing(vi.name.clone()))?);
+            outs.push(t.ok_or_else(|| SessionError::ValueMissing(vi.name.clone()))?);
         }
-        Ok(outputs)
+        Ok(())
     }
 
     /// The pre-plan string-keyed interpreter: `HashMap<String, Tensor>`
@@ -714,5 +859,48 @@ mod tests {
         let owned = sess.run(&[("x", x.clone())]).unwrap();
         let by_ref = sess.run_refs(&[("x", &x)]).unwrap();
         assert_eq!(owned, by_ref);
+    }
+
+    #[test]
+    fn run_into_recycles_outputs_and_stays_bit_identical() {
+        let sess = Session::new(fig1_model()).unwrap().with_parallelism(false);
+        let mut outs = Vec::new();
+        for round in 0..4u8 {
+            let data: Vec<i8> = (0..3 * 4).map(|i| (i as i8) - 6 + round as i8).collect();
+            let x = Tensor::from_i8(&[3, 4], data.clone()).unwrap();
+            // Recycled-path run (outs from the previous round feed the
+            // arena) vs a fresh legacy run: identical bits every round.
+            sess.run_into(&[("x", &x)], &mut outs).unwrap();
+            let legacy = sess.run_unplanned(&[("x", x)]).unwrap();
+            assert_eq!(outs, legacy, "round {round}");
+        }
+        // Changing the batch size mid-stream re-sizes buffers correctly.
+        let x = Tensor::from_i8(&[7, 4], vec![2; 28]).unwrap();
+        sess.run_into(&[("x", &x)], &mut outs).unwrap();
+        let legacy = sess.run_unplanned(&[("x", x)]).unwrap();
+        assert_eq!(outs, legacy, "after batch change");
+    }
+
+    #[test]
+    fn concurrent_runs_use_independent_arenas() {
+        // Two threads hammer the same session; arenas are checked out per
+        // run so results must stay independent and correct.
+        let sess = std::sync::Arc::new(Session::new(fig1_model()).unwrap());
+        let mut joins = Vec::new();
+        for t in 0..4u8 {
+            let sess = sess.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..20u8 {
+                    let v = (t.wrapping_mul(31).wrapping_add(i)) as i8;
+                    let x = Tensor::from_i8(&[2, 4], vec![v; 8]).unwrap();
+                    let got = sess.run(&[("x", x.clone())]).unwrap();
+                    let want = sess.run_unplanned(&[("x", x)]).unwrap();
+                    assert_eq!(got, want);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
     }
 }

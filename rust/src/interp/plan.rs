@@ -12,11 +12,14 @@
 //!   initializer-derived parameters baked) with a plan-time error for
 //!   unsupported operators,
 //! * per-step `frees` as slot indices (the last-use analysis over the
-//!   schedule, so peak memory stays at the live-set size).
+//!   schedule, so peak memory stays at the live-set size — and, through
+//!   [`ScratchArena`], so every dying buffer is parked for the next run
+//!   instead of freed: the steady-state serving path allocates nothing).
 //!
-//! The plan holds no tensors of its own except what kernels baked;
-//! initializers stay owned by the [`Model`](crate::onnx::ir::Model) and
-//! are referenced by index.
+//! The plan holds no tensors of its own except what kernels baked
+//! (pre-widened + panel-packed integer weights, pre-transposed Gemm
+//! weights); initializers stay owned by the
+//! [`Model`](crate::onnx::ir::Model) and are referenced by index.
 
 use super::SessionError;
 use crate::onnx::ir::Model;
@@ -26,14 +29,24 @@ use std::collections::HashMap;
 
 /// Where a node input (or graph output) comes from, resolved at plan
 /// time. `SlotOrInit` covers the degenerate ONNX case of an initializer
-/// shadowed by a graph input: a feed overrides the initializer, exactly
-/// like the string-keyed interpreter's `values.get(..).or(initializer)`.
+/// shadowed by a node output; the `Feed*` variants mark graph-input
+/// slots, which resolve store-first (a later node may overwrite the
+/// value) and then against the run's borrowed feeds by name — exactly
+/// the visibility the string-keyed interpreter's
+/// `values.get(..).or(initializer)` gave, with feeds placed in `values`
+/// up front. Keeping feeds OUT of the slot store lets the store hold
+/// plain owned tensors, which is what makes the store itself recyclable
+/// across runs (see [`ScratchArena`]).
 #[derive(Clone, Copy, Debug)]
 pub(crate) enum Src {
     None,
     Slot(u32),
     Init(u32),
     SlotOrInit { slot: u32, init: u32 },
+    /// Graph-input slot (slot index doubles as the name-interner index).
+    Feed { slot: u32 },
+    /// Graph input shadowing an initializer: feed overrides initializer.
+    FeedOrInit { slot: u32, init: u32 },
 }
 
 /// One scheduled node: pre-bound kernel, resolved inputs, output slot,
@@ -55,52 +68,94 @@ pub(crate) struct CompiledPlan {
     pub n_slots: usize,
     /// Slot index -> value name (the interner, read by the observer path
     /// so calibration still sees string names without any per-call
-    /// allocation).
+    /// allocation, and by [`resolve_src`] to match `Feed` slots against
+    /// the run's borrowed feeds).
     pub names: Vec<String>,
-    /// Graph-input name -> slot, for feed placement.
-    pub feed_slots: HashMap<String, u32>,
     /// Graph outputs in declaration order.
     pub outputs: Vec<Src>,
 }
 
-/// A slot's runtime occupant: feeds are borrowed straight from the
-/// caller (no per-call clone), produced values are owned.
-pub(crate) enum Value<'a> {
-    Borrowed(&'a Tensor),
-    Owned(Tensor),
+/// Per-session recycled execution state: the steady-state zero-allocation
+/// guarantee lives here. One arena serves one run at a time (the session
+/// keeps a pool of them, so concurrent batch-parallel chunks each check
+/// one out); between runs it holds every buffer the next run will write
+/// into:
+///
+/// * `store` — the slot-indexed value store. All `None` between runs
+///   (its `Vec` stays allocated).
+/// * `recycle` — per-slot retired output tensors: when a slot's value
+///   dies (its `frees` step, or the end-of-run sweep) the tensor moves
+///   here instead of being dropped, and the next run's kernel for that
+///   slot writes into its storage.
+/// * `scratch` — two per-step kernel-internal buffers (conv im2col
+///   columns, pre-bias conv results), owned by schedule position.
+///
+/// Memory stays bounded by the live-set of the largest batch seen: a
+/// shape change just re-fills the affected buffers once.
+pub(crate) struct ScratchArena {
+    pub store: Vec<Option<Tensor>>,
+    pub recycle: Vec<Option<Tensor>>,
+    pub scratch: Vec<[Option<Tensor>; 2]>,
 }
 
-impl Value<'_> {
-    pub fn tensor(&self) -> &Tensor {
-        match self {
-            Value::Borrowed(t) => t,
-            Value::Owned(t) => t,
+impl ScratchArena {
+    pub fn new(n_slots: usize, n_steps: usize) -> ScratchArena {
+        let mut store = Vec::with_capacity(n_slots);
+        store.resize_with(n_slots, || None);
+        let mut recycle = Vec::with_capacity(n_slots);
+        recycle.resize_with(n_slots, || None);
+        let mut scratch = Vec::with_capacity(n_steps);
+        scratch.resize_with(n_steps, || [None, None]);
+        ScratchArena {
+            store,
+            recycle,
+            scratch,
         }
     }
 
-    pub fn into_owned(self) -> Tensor {
-        match self {
-            Value::Borrowed(t) => t.clone(),
-            Value::Owned(t) => t,
+    /// Move every still-live store entry into the recycle table — run
+    /// teardown (covers values the schedule never freed, e.g. dead
+    /// outputs, and error exits mid-run).
+    pub fn sweep(&mut self) {
+        for i in 0..self.store.len() {
+            if let Some(t) = self.store[i].take() {
+                self.recycle[i] = Some(t);
+            }
         }
     }
 }
 
-/// Resolve a [`Src`] against the run's slot store and the model's
-/// initializer table.
+/// Find a feed by name (feeds are few — one for every serving model — so
+/// a linear scan beats any map and allocates nothing). Shared by input
+/// resolution here and the executor's output-collection path.
+#[inline]
+pub(crate) fn feed_by_name<'v>(feeds: &[(&str, &'v Tensor)], name: &str) -> Option<&'v Tensor> {
+    feeds.iter().find(|(n, _)| *n == name).map(|(_, t)| *t)
+}
+
+/// Resolve a [`Src`] against the run's slot store, its borrowed feeds,
+/// and the model's initializer table.
 #[inline]
 pub(crate) fn resolve_src<'v>(
     src: &Src,
-    store: &'v [Option<Value<'_>>],
+    store: &'v [Option<Tensor>],
+    feeds: &[(&str, &'v Tensor)],
+    names: &[String],
     inits: &'v [(String, Tensor)],
 ) -> Option<&'v Tensor> {
     match *src {
         Src::None => None,
-        Src::Slot(s) => store[s as usize].as_ref().map(Value::tensor),
+        Src::Slot(s) => store[s as usize].as_ref(),
         Src::Init(i) => Some(&inits[i as usize].1),
         Src::SlotOrInit { slot, init } => store[slot as usize]
             .as_ref()
-            .map(Value::tensor)
+            .or(Some(&inits[init as usize].1)),
+        Src::Feed { slot } => store[slot as usize]
+            .as_ref()
+            .or_else(|| feed_by_name(feeds, &names[slot as usize])),
+        Src::FeedOrInit { slot, init } => store[slot as usize]
+            .as_ref()
+            .or_else(|| feed_by_name(feeds, &names[slot as usize]))
             .or(Some(&inits[init as usize].1)),
     }
 }
@@ -148,14 +203,19 @@ impl CompiledPlan {
             if name.is_empty() {
                 return Src::None;
             }
-            match (slot_of.get(name), init_pos.get(name)) {
-                (Some(&slot), Some(&init)) => Src::SlotOrInit { slot, init },
-                (Some(&s), None) => Src::Slot(s),
-                (None, Some(&i)) => Src::Init(i),
+            // Graph-input slots resolve through the run's feeds (the
+            // store holds only node-produced values — see [`Src`]).
+            let is_feed = g.input(name).is_some();
+            match (slot_of.get(name), init_pos.get(name), is_feed) {
+                (Some(&slot), Some(&init), false) => Src::SlotOrInit { slot, init },
+                (Some(&s), None, false) => Src::Slot(s),
+                (Some(&slot), Some(&init), true) => Src::FeedOrInit { slot, init },
+                (Some(&slot), None, true) => Src::Feed { slot },
+                (None, Some(&i), _) => Src::Init(i),
                 // Never defined anywhere: resolves to a missing input at
                 // run time, as in the string-keyed interpreter (the
                 // checker rejects such graphs up front anyway).
-                (None, None) => Src::None,
+                (None, None, _) => Src::None,
             }
         };
 
@@ -208,17 +268,11 @@ impl CompiledPlan {
         }
 
         let outputs = g.outputs.iter().map(|vi| resolve(&vi.name)).collect();
-        let feed_slots = g
-            .inputs
-            .iter()
-            .map(|vi| (vi.name.clone(), slot_of[vi.name.as_str()]))
-            .collect();
 
         Ok(CompiledPlan {
             steps,
             n_slots: names.len(),
             names,
-            feed_slots,
             outputs,
         })
     }

@@ -6,11 +6,13 @@
 //! blocked GEMM the fully-connected path uses, so one hot loop serves
 //! both patterns.
 
-use super::matmul::{gemm_f32, gemm_i32};
+use super::matmul::{gemm_f32, gemm_i32, gemm_i8_packed_a, PackedA};
 use super::OpError;
 use crate::onnx::shape::ConvAttrs;
 use crate::parallel::{self, ThreadPool};
-use crate::tensor::Tensor;
+use crate::tensor::{
+    recycled_f32_zeroed, recycled_i32_zeroed, recycled_i8_zeroed, Tensor, TensorData,
+};
 
 /// Minimum multiply-accumulates per inference before the conv batch loop is
 /// dispatched to the pool.
@@ -124,6 +126,39 @@ pub fn conv_integer_prewidened(
     x_zp: i32,
     attrs: &ConvAttrs,
 ) -> Result<Tensor, OpError> {
+    conv_integer_prewidened_into(x, wv, None, m, c, kh, kw, x_zp, attrs, None, &mut None)
+}
+
+/// The compiled-plan form of [`conv_integer_prewidened`]: optionally a
+/// plan-time [`PackedA`] weight packing, recycled output storage and a
+/// recycled im2col scratch buffer from the scratch planner.
+///
+/// Fast path (i8 input, zero input zero point, packed weights — the
+/// paper's symmetric patterns): im2col runs **directly over the i8
+/// activations** into a recycled i8 column buffer feeding the packed
+/// GEMM, killing both the per-call full-tensor i32 widening and the
+/// per-call `col` allocation. Integer products are identical whether the
+/// operands were widened first or not, so the result is bit-exact vs the
+/// widened path (proven by `prewidened_matches_conv_integer` below and
+/// the plan-vs-legacy oracle).
+///
+/// NOTE on zero points: im2col pads with 0 AFTER zero-point handling,
+/// matching the ONNX contract (padding value is the zero point, i.e. 0
+/// after folding — and the fast path requires x_zp == 0).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_integer_prewidened_into(
+    x: &Tensor,
+    wv: &[i32],
+    wp: Option<&PackedA>,
+    m: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    x_zp: i32,
+    attrs: &ConvAttrs,
+    recycled: Option<Tensor>,
+    scratch: &mut Option<Tensor>,
+) -> Result<Tensor, OpError> {
     if attrs.group != 1 {
         return Err(OpError::Semantics("group conv not supported".into()));
     }
@@ -134,46 +169,92 @@ pub fn conv_integer_prewidened(
     let oh = out_spatial(h, kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0]);
     let ow = out_spatial(wd, kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1]);
 
-    let mut xv = x.as_quantized_i32()?;
-    if x_zp != 0 {
-        for v in &mut xv {
-            *v -= x_zp;
-        }
-    }
-
     let patch_rows = c * kh * kw;
     let patch = oh * ow;
-    let mut out = vec![0i32; n * m * patch];
-    // NOTE on zero points: im2col pads with 0 AFTER zero-point
-    // subtraction, which matches the ONNX contract (padding value is
-    // the zero point, i.e. 0 after widening).
-    let batch_block = |b0: usize, block: &mut [i32]| {
-        let mut col = vec![0i32; patch_rows * patch];
-        for (bi, dst) in block.chunks_mut(m * patch).enumerate() {
-            let b = b0 + bi;
-            let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
-            im2col(src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
-            gemm_i32(wv, &col, m, patch_rows, patch, dst);
-        }
-    };
+    let mut out = recycled_i32_zeroed(recycled, n * m * patch);
     let pool = ThreadPool::global();
     let macs_per_image = m * patch * patch_rows;
-    if n >= 2
+    let pool_worthy = n >= 2
         && pool.threads() > 1
         && parallel::allow_pool_dispatch()
-        && n.saturating_mul(macs_per_image) >= CONV_PAR_MIN_WORK
-    {
-        // Batch elements are independent and each chunk owns a disjoint
-        // slice of `out`, so the parallel sweep is bit-exact vs serial.
-        parallel::par_row_chunks_mut(pool, &mut out, n, m * patch, 1, batch_block);
-    } else {
-        batch_block(0, &mut out);
+        && n.saturating_mul(macs_per_image) >= CONV_PAR_MIN_WORK;
+
+    match (x.data(), x_zp, wp) {
+        (TensorData::I8(xv), 0, Some(wp)) if wp.m == m && wp.k == patch_rows => {
+            let batch_block_i8 = |col: &mut Vec<i8>, b0: usize, block: &mut [i32]| {
+                col.resize(patch_rows * patch, 0);
+                for (bi, dst) in block.chunks_mut(m * patch).enumerate() {
+                    let b = b0 + bi;
+                    let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+                    im2col(src, c, h, wd, kh, kw, attrs, oh, ow, col);
+                    gemm_i8_packed_a(wp, col, patch, dst);
+                }
+            };
+            if pool_worthy {
+                // Batch elements are independent and each chunk owns a
+                // disjoint slice of `out`, so the sweep is bit-exact vs
+                // serial; each chunk allocates its own column buffer
+                // (amortized over a large batch).
+                parallel::par_row_chunks_mut(pool, &mut out, n, m * patch, 1, |b0, block| {
+                    let mut col = Vec::new();
+                    batch_block_i8(&mut col, b0, block);
+                });
+            } else {
+                // Serial steady state: the column buffer cycles through
+                // the per-step scratch slot — zero allocations.
+                let mut col = recycled_i8_zeroed(scratch.take(), patch_rows * patch);
+                batch_block_i8(&mut col, 0, &mut out);
+                let len = col.len();
+                *scratch = Tensor::from_i8(&[len], col).ok();
+            }
+        }
+        _ => {
+            let mut xv = x.as_quantized_i32()?;
+            if x_zp != 0 {
+                for v in &mut xv {
+                    *v -= x_zp;
+                }
+            }
+            let batch_block = |col: &mut Vec<i32>, b0: usize, block: &mut [i32]| {
+                col.resize(patch_rows * patch, 0);
+                for (bi, dst) in block.chunks_mut(m * patch).enumerate() {
+                    let b = b0 + bi;
+                    let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+                    im2col(src, c, h, wd, kh, kw, attrs, oh, ow, col);
+                    gemm_i32(wv, col, m, patch_rows, patch, dst);
+                }
+            };
+            if pool_worthy {
+                parallel::par_row_chunks_mut(pool, &mut out, n, m * patch, 1, |b0, block| {
+                    let mut col = Vec::new();
+                    batch_block(&mut col, b0, block);
+                });
+            } else {
+                let mut col = recycled_i32_zeroed(scratch.take(), patch_rows * patch);
+                batch_block(&mut col, 0, &mut out);
+                let len = col.len();
+                *scratch = Tensor::from_i32(&[len], col).ok();
+            }
+        }
     }
     Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
 }
 
 /// ONNX float `Conv` (group=1), same im2col+GEMM path in f32.
 pub fn conv_f32(x: &Tensor, w: &Tensor, attrs: &ConvAttrs) -> Result<Tensor, OpError> {
+    conv_f32_into(x, w, attrs, None, &mut None)
+}
+
+/// [`conv_f32`] with recycled output/scratch storage and the batch loop
+/// dispatched to the pool for large calls — bit-exact vs serial (disjoint
+/// per-image output slices, identical per-element f32 operation order).
+pub fn conv_f32_into(
+    x: &Tensor,
+    w: &Tensor,
+    attrs: &ConvAttrs,
+    recycled: Option<Tensor>,
+    scratch: &mut Option<Tensor>,
+) -> Result<Tensor, OpError> {
     if attrs.group != 1 {
         return Err(OpError::Semantics("group conv not supported".into()));
     }
@@ -189,13 +270,32 @@ pub fn conv_f32(x: &Tensor, w: &Tensor, attrs: &ConvAttrs) -> Result<Tensor, OpE
     let wv = w.as_f32()?;
     let patch_rows = c * kh * kw;
     let patch = oh * ow;
-    let mut col = vec![0f32; patch_rows * patch];
-    let mut out = vec![0f32; n * m * patch];
-    for b in 0..n {
-        let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
-        im2col(src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
-        let dst = &mut out[b * m * patch..(b + 1) * m * patch];
-        gemm_f32(wv, &col, m, patch_rows, patch, dst);
+    let mut out = recycled_f32_zeroed(recycled, n * m * patch);
+    let batch_block = |col: &mut Vec<f32>, b0: usize, block: &mut [f32]| {
+        col.resize(patch_rows * patch, 0.0);
+        for (bi, dst) in block.chunks_mut(m * patch).enumerate() {
+            let b = b0 + bi;
+            let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+            im2col(src, c, h, wd, kh, kw, attrs, oh, ow, col);
+            gemm_f32(wv, col, m, patch_rows, patch, dst);
+        }
+    };
+    let pool = ThreadPool::global();
+    let macs_per_image = m * patch * patch_rows;
+    if n >= 2
+        && pool.threads() > 1
+        && parallel::allow_pool_dispatch()
+        && n.saturating_mul(macs_per_image) >= CONV_PAR_MIN_WORK
+    {
+        parallel::par_row_chunks_mut(pool, &mut out, n, m * patch, 1, |b0, block| {
+            let mut col = Vec::new();
+            batch_block(&mut col, b0, block);
+        });
+    } else {
+        let mut col = recycled_f32_zeroed(scratch.take(), patch_rows * patch);
+        batch_block(&mut col, 0, &mut out);
+        let len = col.len();
+        *scratch = Tensor::from_f32(&[len], col).ok();
     }
     Ok(Tensor::from_f32(&[n, m, oh, ow], out)?)
 }
@@ -327,6 +427,67 @@ mod tests {
         let wv: Vec<i32> = w.as_quantized_i32().unwrap();
         let got = conv_integer_prewidened(&x, &wv, 2, 2, 2, 2, 0, &attrs).unwrap();
         assert_eq!(want, got);
+    }
+
+    #[test]
+    fn packed_conv_matches_widened() {
+        let x = Tensor::from_i8(&[2, 2, 5, 5], (0..100).map(|i| (i * 13 % 251) as u8 as i8).collect())
+            .unwrap();
+        let w = Tensor::from_i8(&[3, 2, 2, 2], (0..24).map(|i| (i * 5 % 17) as i8 - 8).collect())
+            .unwrap();
+        let wv = w.as_quantized_i32().unwrap();
+        let wp = PackedA::pack(&wv, 3, 2 * 2 * 2).unwrap();
+        let mut attrs = attrs_default();
+        attrs.pads = [1, 0, 1, 0];
+        attrs.strides = [2, 1];
+        let want = conv_integer_prewidened(&x, &wv, 3, 2, 2, 2, 0, &attrs).unwrap();
+        let mut scratch = None;
+        let got = conv_integer_prewidened_into(
+            &x, &wv, Some(&wp), 3, 2, 2, 2, 0, &attrs, None, &mut scratch,
+        )
+        .unwrap();
+        assert_eq!(want, got);
+        // Scratch was parked for reuse; a second call recycles it and
+        // must produce the same bits.
+        let recycled_out = Some(Tensor::from_i32(&[4], vec![9; 4]).unwrap());
+        let again = conv_integer_prewidened_into(
+            &x, &wv, Some(&wp), 3, 2, 2, 2, 0, &attrs, recycled_out, &mut scratch,
+        )
+        .unwrap();
+        assert_eq!(want, again);
+        // Nonzero input zero point must bypass the packed path and still
+        // agree with conv_integer's own handling.
+        let xu = x.cast(crate::tensor::DType::U8);
+        let zp = Tensor::scalar_u8(128);
+        let want_zp = conv_integer(&xu, &w, Some(&zp), None, &attrs).unwrap();
+        let got_zp = conv_integer_prewidened_into(
+            &xu, &wv, Some(&wp), 3, 2, 2, 2, 128, &attrs, None, &mut scratch,
+        )
+        .unwrap();
+        assert_eq!(want_zp, got_zp);
+    }
+
+    #[test]
+    fn conv_f32_into_recycles_and_matches() {
+        let x = Tensor::from_f32(&[2, 1, 4, 4], (0..32).map(|i| i as f32 * 0.25 - 4.0).collect())
+            .unwrap();
+        let w = Tensor::from_f32(&[2, 1, 3, 3], (0..18).map(|i| (i as f32 - 9.0) * 0.5).collect())
+            .unwrap();
+        let mut attrs = attrs_default();
+        attrs.pads = [1, 1, 1, 1];
+        let want = conv_f32(&x, &w, &attrs).unwrap();
+        let mut scratch = None;
+        let first = conv_f32_into(&x, &w, &attrs, None, &mut scratch).unwrap();
+        let second = conv_f32_into(
+            &x,
+            &w,
+            &attrs,
+            Some(Tensor::from_f32(&[1], vec![0.0]).unwrap()),
+            &mut scratch,
+        )
+        .unwrap();
+        assert_eq!(want, first);
+        assert_eq!(want, second);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! Sigmoid in f32 or genuine f16.
 
 use super::OpError;
-use crate::tensor::{BroadcastIndexer, Tensor, TensorData};
+use crate::tensor::{
+    recycled_f16, recycled_f32, recycled_i32, recycled_i8, BroadcastIndexer, Shape, Tensor,
+    TensorData,
+};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BinOp {
@@ -58,6 +61,18 @@ fn apply_i32(op: BinOp, x: i32, y: i32) -> i32 {
 
 /// Elementwise binary op with multidirectional broadcasting.
 pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
+    binary_into(op, a, b, None)
+}
+
+/// [`binary`] writing into recycled storage (identical values element for
+/// element; the scratch planner's steady-state form — the shape
+/// classification and every fast path allocate nothing).
+pub fn binary_into(
+    op: BinOp,
+    a: &Tensor,
+    b: &Tensor,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
     if a.dtype() != b.dtype() {
         return Err(OpError::Semantics(format!(
             "dtype mismatch {} vs {}",
@@ -65,20 +80,21 @@ pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
             b.dtype()
         )));
     }
-    let out_shape = crate::tensor::broadcast_shape(a.shape(), b.shape())?;
+    let out_shape: Shape = crate::tensor::broadcast_dims(a.shape(), b.shape())?;
     let n: usize = out_shape.iter().product();
-    let same = a.shape() == out_shape.as_slice() && b.shape() == out_shape.as_slice();
+    let dims: &[usize] = &out_shape;
+    let same = a.shape() == dims && b.shape() == dims;
     // Fast-path classification (hot in every pattern: the rescale Mul is
     // tensor×scalar, the bias Add broadcasts along one axis — rows×[N]
     // for FC, [1,C,1,1] for conv. See EXPERIMENTS.md §Perf).
-    let a_full = a.shape() == out_shape.as_slice();
+    let a_full = a.shape() == dims;
     let b_scalar = b.numel() == 1;
     let a_scalar = a.numel() == 1;
     // Single-axis broadcast of b over a full-shape a: b's non-1 dims
     // reduce to one axis matching out_shape. Yields (axis_len, chunk):
     // b[j] applies to contiguous runs of `chunk` elements, cycling j.
     let b_axis: Option<(usize, usize)> = if a_full && !b_scalar {
-        let rank = out_shape.len();
+        let rank = dims.len();
         let pad = rank - b.rank();
         let mut axis = None;
         let mut ok = true;
@@ -86,7 +102,7 @@ pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
             if d == 1 {
                 continue;
             }
-            if d == out_shape[pad + i] && axis.is_none() {
+            if d == dims[pad + i] && axis.is_none() {
                 axis = Some(pad + i);
             } else {
                 ok = false;
@@ -95,8 +111,8 @@ pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
         }
         match (ok, axis) {
             (true, Some(ax)) => {
-                let chunk: usize = out_shape[ax + 1..].iter().product();
-                Some((out_shape[ax], chunk))
+                let chunk: usize = dims[ax + 1..].iter().product();
+                Some((dims[ax], chunk))
             }
             _ => None,
         }
@@ -105,18 +121,18 @@ pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
     };
 
     macro_rules! fused_loops {
-        ($av:expr, $bv:expr, $apply:expr, $wrap:expr) => {{
+        ($av:expr, $bv:expr, $apply:expr, $recycle:path, $wrap:expr) => {{
             let (av, bv) = ($av, $bv);
+            let mut out = $recycle(recycled, n);
             if same {
-                $wrap(av.iter().zip(bv).map(|(&x, &y)| $apply(op, x, y)).collect())
+                out.extend(av.iter().zip(bv).map(|(&x, &y)| $apply(op, x, y)));
             } else if b_scalar && a_full {
                 let s = bv[0];
-                $wrap(av.iter().map(|&x| $apply(op, x, s)).collect())
-            } else if a_scalar && b.shape() == out_shape.as_slice() {
+                out.extend(av.iter().map(|&x| $apply(op, x, s)));
+            } else if a_scalar && b.shape() == dims {
                 let s = av[0];
-                $wrap(bv.iter().map(|&y| $apply(op, s, y)).collect())
+                out.extend(bv.iter().map(|&y| $apply(op, s, y)));
             } else if let Some((axis_len, chunk)) = b_axis {
-                let mut out = Vec::with_capacity(n);
                 if chunk == 1 {
                     // b cycles elementwise (e.g. FC bias over rows).
                     for row in av.chunks_exact(axis_len) {
@@ -135,21 +151,21 @@ pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
                         }
                     }
                 }
-                $wrap(out)
             } else {
-                let ia = BroadcastIndexer::new(&out_shape, a.shape());
-                let ib = BroadcastIndexer::new(&out_shape, b.shape());
-                $wrap((0..n).map(|i| $apply(op, av[ia.map(i)], bv[ib.map(i)])).collect())
+                let ia = BroadcastIndexer::new(dims, a.shape());
+                let ib = BroadcastIndexer::new(dims, b.shape());
+                out.extend((0..n).map(|i| $apply(op, av[ia.map(i)], bv[ib.map(i)])));
             }
+            $wrap(out)
         }};
     }
 
     let data = match (a.data(), b.data()) {
         (TensorData::F32(av), TensorData::F32(bv)) => {
-            fused_loops!(av, bv, apply_f32, TensorData::F32)
+            fused_loops!(av, bv, apply_f32, recycled_f32, TensorData::F32)
         }
         (TensorData::I32(av), TensorData::I32(bv)) => {
-            fused_loops!(av, bv, apply_i32, TensorData::I32)
+            fused_loops!(av, bv, apply_i32, recycled_i32, TensorData::I32)
         }
         (TensorData::F16(av), TensorData::F16(bv)) => {
             // f16 arithmetic: compute in f32, round back per op (what
@@ -157,14 +173,15 @@ pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
             let f = |x: crate::tensor::F16, y: crate::tensor::F16| {
                 crate::tensor::F16::from_f32(apply_f32(op, x.to_f32(), y.to_f32()))
             };
-            let v = if same {
-                av.iter().zip(bv).map(|(&x, &y)| f(x, y)).collect()
+            let mut out = recycled_f16(recycled, n);
+            if same {
+                out.extend(av.iter().zip(bv).map(|(&x, &y)| f(x, y)));
             } else {
-                let ia = BroadcastIndexer::new(&out_shape, a.shape());
-                let ib = BroadcastIndexer::new(&out_shape, b.shape());
-                (0..n).map(|i| f(av[ia.map(i)], bv[ib.map(i)])).collect()
-            };
-            TensorData::F16(v)
+                let ia = BroadcastIndexer::new(dims, a.shape());
+                let ib = BroadcastIndexer::new(dims, b.shape());
+                out.extend((0..n).map(|i| f(av[ia.map(i)], bv[ib.map(i)])));
+            }
+            TensorData::F16(out)
         }
         _ => {
             return Err(OpError::Semantics(format!(
@@ -179,15 +196,36 @@ pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
 /// ONNX `Relu`: max(x, 0). Supports the dtypes the paper's patterns can
 /// place it on: f32, f16, i32 (pre-rescale) and i8 (post-requantize).
 pub fn relu(x: &Tensor) -> Result<Tensor, OpError> {
+    relu_into(x, None)
+}
+
+/// [`relu`] into recycled storage (identical values).
+pub fn relu_into(x: &Tensor, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
+    let n = x.numel();
     let data = match x.data() {
-        TensorData::F32(v) => TensorData::F32(v.iter().map(|&x| x.max(0.0)).collect()),
-        TensorData::F16(v) => TensorData::F16(
-            v.iter()
-                .map(|&x| if x.to_f32() > 0.0 { x } else { crate::tensor::F16::ZERO })
-                .collect(),
-        ),
-        TensorData::I32(v) => TensorData::I32(v.iter().map(|&x| x.max(0)).collect()),
-        TensorData::I8(v) => TensorData::I8(v.iter().map(|&x| x.max(0)).collect()),
+        TensorData::F32(v) => {
+            let mut o = recycled_f32(recycled, n);
+            o.extend(v.iter().map(|&x| x.max(0.0)));
+            TensorData::F32(o)
+        }
+        TensorData::F16(v) => {
+            let mut o = recycled_f16(recycled, n);
+            o.extend(
+                v.iter()
+                    .map(|&x| if x.to_f32() > 0.0 { x } else { crate::tensor::F16::ZERO }),
+            );
+            TensorData::F16(o)
+        }
+        TensorData::I32(v) => {
+            let mut o = recycled_i32(recycled, n);
+            o.extend(v.iter().map(|&x| x.max(0)));
+            TensorData::I32(o)
+        }
+        TensorData::I8(v) => {
+            let mut o = recycled_i8(recycled, n);
+            o.extend(v.iter().map(|&x| x.max(0)));
+            TensorData::I8(o)
+        }
         d => {
             return Err(OpError::Semantics(format!(
                 "Relu: unsupported dtype {}",
@@ -195,14 +233,28 @@ pub fn relu(x: &Tensor) -> Result<Tensor, OpError> {
             )))
         }
     };
-    Ok(Tensor::new(x.shape().to_vec(), data)?)
+    Ok(Tensor::new(Shape::from_slice(x.shape()), data)?)
 }
 
 /// ONNX `Tanh` — f32 or genuine f16 (Figure 5's `Tanh FLOAT16 -> FLOAT16`).
 pub fn tanh(x: &Tensor) -> Result<Tensor, OpError> {
+    tanh_into(x, None)
+}
+
+/// [`tanh`] into recycled storage (identical values).
+pub fn tanh_into(x: &Tensor, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
+    let n = x.numel();
     let data = match x.data() {
-        TensorData::F32(v) => TensorData::F32(v.iter().map(|&x| x.tanh()).collect()),
-        TensorData::F16(v) => TensorData::F16(v.iter().map(|x| x.tanh()).collect()),
+        TensorData::F32(v) => {
+            let mut o = recycled_f32(recycled, n);
+            o.extend(v.iter().map(|&x| x.tanh()));
+            TensorData::F32(o)
+        }
+        TensorData::F16(v) => {
+            let mut o = recycled_f16(recycled, n);
+            o.extend(v.iter().map(|x| x.tanh()));
+            TensorData::F16(o)
+        }
         d => {
             return Err(OpError::Semantics(format!(
                 "Tanh: unsupported dtype {}",
@@ -210,16 +262,28 @@ pub fn tanh(x: &Tensor) -> Result<Tensor, OpError> {
             )))
         }
     };
-    Ok(Tensor::new(x.shape().to_vec(), data)?)
+    Ok(Tensor::new(Shape::from_slice(x.shape()), data)?)
 }
 
 /// ONNX `Sigmoid` — f32 or genuine f16 (Figure 6).
 pub fn sigmoid(x: &Tensor) -> Result<Tensor, OpError> {
+    sigmoid_into(x, None)
+}
+
+/// [`sigmoid`] into recycled storage (identical values).
+pub fn sigmoid_into(x: &Tensor, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
+    let n = x.numel();
     let data = match x.data() {
         TensorData::F32(v) => {
-            TensorData::F32(v.iter().map(|&x| 1.0 / (1.0 + (-x).exp())).collect())
+            let mut o = recycled_f32(recycled, n);
+            o.extend(v.iter().map(|&x| 1.0 / (1.0 + (-x).exp())));
+            TensorData::F32(o)
         }
-        TensorData::F16(v) => TensorData::F16(v.iter().map(|x| x.sigmoid()).collect()),
+        TensorData::F16(v) => {
+            let mut o = recycled_f16(recycled, n);
+            o.extend(v.iter().map(|x| x.sigmoid()));
+            TensorData::F16(o)
+        }
         d => {
             return Err(OpError::Semantics(format!(
                 "Sigmoid: unsupported dtype {}",
@@ -227,7 +291,7 @@ pub fn sigmoid(x: &Tensor) -> Result<Tensor, OpError> {
             )))
         }
     };
-    Ok(Tensor::new(x.shape().to_vec(), data)?)
+    Ok(Tensor::new(Shape::from_slice(x.shape()), data)?)
 }
 
 #[cfg(test)]
@@ -293,6 +357,22 @@ mod tests {
         let y = sigmoid(&x).unwrap();
         assert_eq!(y.as_f32().unwrap()[0], 0.5);
         assert_eq!(y.as_f32().unwrap()[1], 1.0);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let acc = Tensor::from_i32(&[2, 3], vec![1, -2, 3, -4, 5, -6]).unwrap();
+        let bias = Tensor::from_i32(&[3], vec![10, 20, 30]).unwrap();
+        let spare = || Some(Tensor::from_i32(&[32], vec![7; 32]).unwrap());
+        assert_eq!(
+            binary(BinOp::Add, &acc, &bias).unwrap(),
+            binary_into(BinOp::Add, &acc, &bias, spare()).unwrap()
+        );
+        let f = Tensor::from_f32(&[4], vec![-1.5, 0.0, 2.5, -0.1]).unwrap();
+        let fspare = || Some(Tensor::from_f32(&[2], vec![0.0; 2]).unwrap());
+        assert_eq!(relu(&f).unwrap(), relu_into(&f, fspare()).unwrap());
+        assert_eq!(tanh(&f).unwrap(), tanh_into(&f, fspare()).unwrap());
+        assert_eq!(sigmoid(&f).unwrap(), sigmoid_into(&f, fspare()).unwrap());
     }
 
     #[test]

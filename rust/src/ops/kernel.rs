@@ -27,27 +27,36 @@ pub enum Kernel {
     MatMulInteger,
     /// MatMulInteger whose weight (and zero points) were initializers:
     /// `bw` is the weight widened to i32 with its zero point subtracted,
-    /// `a_zp` the baked activation zero point.
+    /// `bp` the same values packed into the cache-blocked i8 panel layout
+    /// (when they fit i8 — symmetric quantization always does; `bw` stays
+    /// as the bit-identical fallback for u8 activations / nonzero
+    /// activation zero points), `a_zp` the baked activation zero point.
     MatMulIntegerPrebound {
         bw: Vec<i32>,
+        bp: Option<matmul::PackedB>,
         k: usize,
         n: usize,
         a_zp: i32,
     },
     MatMul,
+    /// Gemm; `bt` is op(B) — the transB transpose already applied — baked
+    /// at plan time when B is an initializer, so no per-run `transpose2`.
     Gemm {
         alpha: f32,
         beta: f32,
         trans_a: bool,
         trans_b: bool,
+        bt: Option<Tensor>,
     },
     ConvInteger {
         attrs: ConvAttrs,
     },
     /// ConvInteger with an initializer kernel, pre-widened like
-    /// [`Kernel::MatMulIntegerPrebound`].
+    /// [`Kernel::MatMulIntegerPrebound`]; `wp` is the plan-time packed
+    /// `[m, c*kh*kw]` row-panel layout feeding the i8 im2col fast path.
     ConvIntegerPrebound {
         wv: Vec<i32>,
+        wp: Option<matmul::PackedA>,
         m: usize,
         c: usize,
         kh: usize,
@@ -130,12 +139,9 @@ fn prebind_matmul_integer(node: &Node, g: &Graph) -> Option<Kernel> {
     };
     let a_zp = baked_zero_point(g, node, 2)?;
     let bw = matmul::widen_with_zp(b, b_zp).ok()?;
-    Some(Kernel::MatMulIntegerPrebound {
-        bw,
-        k: b.shape()[0],
-        n: b.shape()[1],
-        a_zp,
-    })
+    let (k, n) = (b.shape()[0], b.shape()[1]);
+    let bp = matmul::PackedB::pack(&bw, k, n);
+    Some(Kernel::MatMulIntegerPrebound { bw, bp, k, n, a_zp })
 }
 
 fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) -> Option<Kernel> {
@@ -155,8 +161,10 @@ fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) -> Option<Ker
         }
     }
     let s = w.shape();
+    let wp = matmul::PackedA::pack(&wv, s[0], s[1] * s[2] * s[3]);
     Some(Kernel::ConvIntegerPrebound {
         wv,
+        wp,
         m: s[0],
         c: s[1],
         kh: s[2],
@@ -164,6 +172,21 @@ fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) -> Option<Ker
         x_zp,
         attrs: *attrs,
     })
+}
+
+/// Pre-transpose a `transB` Gemm's initializer weight at plan time, so
+/// [`Kernel::run`] skips the per-call `transpose2` allocation + O(mn)
+/// shuffle. Only baked for f32 rank-2 initializers (anything else keeps
+/// the generic path and its error behavior).
+fn prebind_gemm_bt(node: &Node, g: &Graph, trans_b: bool) -> Option<Tensor> {
+    if !trans_b {
+        return None;
+    }
+    let b = bakeable(g, node.inputs.get(1)?)?;
+    if b.rank() != 2 || b.dtype() != DType::F32 {
+        return None;
+    }
+    matmul::transpose2(b).ok()
 }
 
 /// Pre-reshape a float Conv's initializer bias to `[1, M, 1, 1]` (M read
@@ -206,12 +229,16 @@ impl Kernel {
                 .and_then(|g| prebind_matmul_integer(node, g))
                 .unwrap_or(Kernel::MatMulInteger),
             "MatMul" => Kernel::MatMul,
-            "Gemm" => Kernel::Gemm {
-                alpha: node.attr_float("alpha").unwrap_or(1.0),
-                beta: node.attr_float("beta").unwrap_or(1.0),
-                trans_a: node.attr_int("transA").unwrap_or(0) != 0,
-                trans_b: node.attr_int("transB").unwrap_or(0) != 0,
-            },
+            "Gemm" => {
+                let trans_b = node.attr_int("transB").unwrap_or(0) != 0;
+                Kernel::Gemm {
+                    alpha: node.attr_float("alpha").unwrap_or(1.0),
+                    beta: node.attr_float("beta").unwrap_or(1.0),
+                    trans_a: node.attr_int("transA").unwrap_or(0) != 0,
+                    trans_b,
+                    bt: g.and_then(|g| prebind_gemm_bt(node, g, trans_b)),
+                }
+            }
             "ConvInteger" => {
                 let attrs = ConvAttrs::from_node(node);
                 g.and_then(|g| prebind_conv_integer(node, g, &attrs))
@@ -301,6 +328,22 @@ impl Kernel {
     /// `MissingInput` errors are minted without a node name; callers that
     /// know it patch it in via [`OpError::with_node`].
     pub fn run(&self, inputs: &[Option<&Tensor>]) -> Result<Tensor, OpError> {
+        self.run_with(inputs, None, &mut [None, None])
+    }
+
+    /// [`Kernel::run`] with the scratch planner's buffers: `recycled` is
+    /// the retired output tensor of a previous run at this plan step
+    /// (its storage is reused when dtype and capacity fit), `scratch`
+    /// two per-step slots for kernel-internal intermediates (the conv
+    /// im2col column buffer, the float conv's pre-bias result). Results
+    /// are bit-identical to [`Kernel::run`] for every kernel — only the
+    /// origin of the output buffer differs.
+    pub fn run_with(
+        &self,
+        inputs: &[Option<&Tensor>],
+        recycled: Option<Tensor>,
+        scratch: &mut [Option<Tensor>; 2],
+    ) -> Result<Tensor, OpError> {
         let req = |i: usize| -> Result<&Tensor, OpError> {
             inputs
                 .get(i)
@@ -318,63 +361,125 @@ impl Kernel {
             Kernel::MatMulInteger => {
                 matmul::matmul_integer(req(0)?, req(1)?, opt(2), opt(3))?
             }
-            Kernel::MatMulIntegerPrebound { bw, k, n, a_zp } => {
-                matmul::matmul_integer_prewidened(req(0)?, bw, *k, *n, *a_zp)?
+            Kernel::MatMulIntegerPrebound { bw, bp, k, n, a_zp } => {
+                matmul::matmul_integer_prewidened_into(
+                    req(0)?,
+                    bw,
+                    bp.as_ref(),
+                    *k,
+                    *n,
+                    *a_zp,
+                    recycled,
+                )?
             }
-            Kernel::MatMul => matmul::matmul_f32(req(0)?, req(1)?)?,
+            Kernel::MatMul => matmul::matmul_f32_into(req(0)?, req(1)?, recycled)?,
             Kernel::Gemm {
                 alpha,
                 beta,
                 trans_a,
                 trans_b,
-            } => matmul::gemm(req(0)?, req(1)?, opt(2), *alpha, *beta, *trans_a, *trans_b)?,
+                bt,
+            } => match bt {
+                // transB baked at plan time: op(B) is ready, no per-run
+                // transpose (the provided weight input is the same
+                // initializer the transpose was taken from).
+                Some(bt) => {
+                    matmul::gemm_opb(req(0)?, bt, opt(2), *alpha, *beta, *trans_a, recycled)?
+                }
+                None => {
+                    matmul::gemm(req(0)?, req(1)?, opt(2), *alpha, *beta, *trans_a, *trans_b)?
+                }
+            },
             Kernel::ConvInteger { attrs } => {
                 conv::conv_integer(req(0)?, req(1)?, opt(2), opt(3), attrs)?
             }
             Kernel::ConvIntegerPrebound {
                 wv,
+                wp,
                 m,
                 c,
                 kh,
                 kw,
                 x_zp,
                 attrs,
-            } => conv::conv_integer_prewidened(req(0)?, wv, *m, *c, *kh, *kw, *x_zp, attrs)?,
+            } => conv::conv_integer_prewidened_into(
+                req(0)?,
+                wv,
+                wp.as_ref(),
+                *m,
+                *c,
+                *kh,
+                *kw,
+                *x_zp,
+                attrs,
+                recycled,
+                &mut scratch[0],
+            )?,
             Kernel::Conv { attrs, bias4 } => {
-                let y = conv::conv_f32(req(0)?, req(1)?, attrs)?;
+                let [col_scratch, y_scratch] = scratch;
                 match (opt(2), bias4) {
-                    (None, _) => y,
+                    (None, _) => {
+                        conv::conv_f32_into(req(0)?, req(1)?, attrs, recycled, col_scratch)?
+                    }
                     (Some(_), Some(b4)) => {
-                        elementwise::binary(elementwise::BinOp::Add, &y, b4)?
+                        let y = conv::conv_f32_into(
+                            req(0)?,
+                            req(1)?,
+                            attrs,
+                            y_scratch.take(),
+                            col_scratch,
+                        )?;
+                        let out =
+                            elementwise::binary_into(elementwise::BinOp::Add, &y, b4, recycled)?;
+                        *y_scratch = Some(y);
+                        out
                     }
                     (Some(b), None) => {
+                        let y = conv::conv_f32_into(
+                            req(0)?,
+                            req(1)?,
+                            attrs,
+                            y_scratch.take(),
+                            col_scratch,
+                        )?;
                         let m = y.shape()[1];
                         let b4 = b.clone().reshape(&[1, m, 1, 1])?;
-                        elementwise::binary(elementwise::BinOp::Add, &y, &b4)?
+                        let out =
+                            elementwise::binary_into(elementwise::BinOp::Add, &y, &b4, recycled)?;
+                        *y_scratch = Some(y);
+                        out
                     }
                 }
             }
-            Kernel::Binary { op } => elementwise::binary(*op, req(0)?, req(1)?)?,
-            Kernel::Cast { to } => req(0)?.cast(*to),
-            Kernel::QuantizeLinear => qlinear::quantize_linear(req(0)?, req(1)?, opt(2))?,
-            Kernel::DequantizeLinear => qlinear::dequantize_linear(req(0)?, req(1)?, opt(2))?,
-            Kernel::Relu => elementwise::relu(req(0)?)?,
-            Kernel::Tanh => elementwise::tanh(req(0)?)?,
-            Kernel::Sigmoid => elementwise::sigmoid(req(0)?)?,
-            Kernel::Softmax { axis } => shape_ops::softmax(req(0)?, *axis)?,
-            Kernel::MaxPool { kernel, attrs } => pool::max_pool(req(0)?, kernel, *attrs)?,
+            Kernel::Binary { op } => {
+                elementwise::binary_into(*op, req(0)?, req(1)?, recycled)?
+            }
+            Kernel::Cast { to } => req(0)?.cast_recycled(*to, recycled),
+            Kernel::QuantizeLinear => {
+                qlinear::quantize_linear_into(req(0)?, req(1)?, opt(2), recycled)?
+            }
+            Kernel::DequantizeLinear => {
+                qlinear::dequantize_linear_into(req(0)?, req(1)?, opt(2), recycled)?
+            }
+            Kernel::Relu => elementwise::relu_into(req(0)?, recycled)?,
+            Kernel::Tanh => elementwise::tanh_into(req(0)?, recycled)?,
+            Kernel::Sigmoid => elementwise::sigmoid_into(req(0)?, recycled)?,
+            Kernel::Softmax { axis } => shape_ops::softmax_into(req(0)?, *axis, recycled)?,
+            Kernel::MaxPool { kernel, attrs } => {
+                pool::max_pool_into(req(0)?, kernel, *attrs, recycled)?
+            }
             Kernel::AveragePool { kernel, attrs } => {
-                pool::average_pool(req(0)?, kernel, *attrs)?
+                pool::average_pool_into(req(0)?, kernel, *attrs, recycled)?
             }
             Kernel::Reshape { spec } => match spec {
-                Some(s) => shape_ops::reshape(req(0)?, s)?,
+                Some(s) => shape_ops::reshape_into(req(0)?, s, recycled)?,
                 None => {
                     let s = req(1)?.as_i64()?.to_vec();
-                    shape_ops::reshape(req(0)?, &s)?
+                    shape_ops::reshape_into(req(0)?, &s, recycled)?
                 }
             },
-            Kernel::Flatten { axis } => shape_ops::flatten(req(0)?, *axis)?,
-            Kernel::Identity => req(0)?.clone(),
+            Kernel::Flatten { axis } => shape_ops::flatten_into(req(0)?, *axis, recycled)?,
+            Kernel::Identity => req(0)?.clone_recycled(recycled),
         };
         Ok(out)
     }
@@ -397,11 +502,13 @@ mod tests {
                 beta,
                 trans_a,
                 trans_b,
+                bt,
             } => {
                 assert_eq!(alpha, 2.0);
                 assert_eq!(beta, 1.0);
                 assert!(!trans_a);
                 assert!(trans_b);
+                assert!(bt.is_none(), "no graph, nothing to bake");
             }
             _ => panic!("wrong kernel"),
         }
@@ -437,6 +544,61 @@ mod tests {
             .unwrap();
         let prebound = kernel.run(&[Some(&x), Some(w)]).unwrap();
         assert_eq!(generic, prebound);
+    }
+
+    #[test]
+    fn prebound_matmul_packs_weight_panels() {
+        let mut b = GraphBuilder::new("g");
+        b.input("x", DType::I8, &batched(&[4]));
+        b.init("w", Tensor::from_i8(&[4, 2], vec![1, 2, 3, 4, 5, 6, 7, 8]).unwrap());
+        let y = b.node("MatMulInteger", &["x", "w"], &[]);
+        b.output(&y, DType::I32, &batched(&[2]));
+        let model = b.finish_model();
+        let kernel = Kernel::bind_in_graph(&model.graph.nodes[0], &model.graph).unwrap();
+        match &kernel {
+            Kernel::MatMulIntegerPrebound { bp, .. } => {
+                assert!(bp.is_some(), "i8 weights must pack")
+            }
+            _ => panic!("wrong kernel"),
+        }
+        // Packed and recycled execution stays bit-identical to generic.
+        let x = Tensor::from_i8(&[5, 4], (0..20).map(|i| (i * 3 % 256) as u8 as i8).collect())
+            .unwrap();
+        let w = model.graph.initializer("w").unwrap();
+        let generic = Kernel::MatMulInteger.run(&[Some(&x), Some(w)]).unwrap();
+        let packed = kernel.run(&[Some(&x), Some(w)]).unwrap();
+        assert_eq!(generic, packed);
+        let spare = Some(Tensor::from_i32(&[64], vec![5; 64]).unwrap());
+        let recycled = kernel
+            .run_with(&[Some(&x), Some(w)], spare, &mut [None, None])
+            .unwrap();
+        assert_eq!(generic, recycled);
+    }
+
+    #[test]
+    fn gemm_transb_baked_at_plan_time() {
+        let mut b = GraphBuilder::new("g");
+        b.input("x", DType::F32, &batched(&[3]));
+        b.init(
+            "w",
+            Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+        );
+        let y = b.node("Gemm", &["x", "w"], &[("transB", Attr::Int(1))]);
+        b.output(&y, DType::F32, &batched(&[2]));
+        let model = b.finish_model();
+        let node = &model.graph.nodes[0];
+        let baked = Kernel::bind_in_graph(node, &model.graph).unwrap();
+        match &baked {
+            Kernel::Gemm { bt, .. } => assert!(bt.is_some(), "transB weight must bake"),
+            _ => panic!("wrong kernel"),
+        }
+        let unbaked = Kernel::bind(node).unwrap();
+        let x = Tensor::from_f32(&[4, 3], (0..12).map(|i| i as f32 * 0.5 - 3.0).collect())
+            .unwrap();
+        let w = model.graph.initializer("w").unwrap();
+        let want = unbaked.run(&[Some(&x), Some(w)]).unwrap();
+        let got = baked.run(&[Some(&x), Some(w)]).unwrap();
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::OpError;
 use crate::parallel::{self, ThreadPool};
-use crate::tensor::{DType, Tensor};
+use crate::tensor::{DType, Shape, Tensor};
 
 /// Below this many multiply-accumulates a GEMM is not worth dispatching to
 /// the pool (dispatch + wake-up costs a few microseconds).
@@ -157,6 +157,198 @@ pub fn gemm_i8_i32_par(
     });
 }
 
+// --- cache-blocked packed i8 GEMM -----------------------------------------
+//
+// The plan-time packed layout + register-tiled microkernels behind the
+// compiled plans (EXPERIMENTS.md §Perf). Weights are stored as i8 (4x less
+// memory traffic than the widened-i32 layout they replace) in L1-sized
+// panels; accumulation is i32, and because integer addition is associative
+// and commutative — and every kernel below visits k in ascending order per
+// output element anyway — results are bit-identical to the naive triple
+// loop under ANY blocking. `tests/packed_gemm.rs` proves it by property
+// test, `tests/executor_plan.rs` end to end.
+
+/// Microkernel register-tile width (output columns per B panel).
+pub const GEMM_NR: usize = 8;
+/// Microkernel register-tile height (output rows per A panel).
+pub const GEMM_MR: usize = 4;
+/// k-block size: one `[GEMM_KC x GEMM_NR]` i8 B-panel block is 2 KiB,
+/// comfortably L1-resident together with the A rows streaming against it.
+pub const GEMM_KC: usize = 256;
+
+/// A `[k, n]` B operand packed at plan time for [`gemm_i8_packed`]:
+/// `ceil(n/NR)` column panels, each `[k x NR]` row-major i8 with the
+/// ragged last panel zero-padded. Values are the zero-point-folded weights;
+/// packing refuses (returns `None`) when any folded value leaves the i8
+/// range (u8 weights, large zero points), in which case callers keep the
+/// widened-i32 kernel — identical results either way.
+pub struct PackedB {
+    data: Vec<i8>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl PackedB {
+    /// Pack widened (zero-point-folded) weights, or `None` if they don't
+    /// fit i8 (symmetric quantization — every pattern in the paper — fits).
+    pub fn pack(bw: &[i32], k: usize, n: usize) -> Option<PackedB> {
+        debug_assert_eq!(bw.len(), k * n);
+        if bw.iter().any(|&v| v < i8::MIN as i32 || v > i8::MAX as i32) {
+            return None;
+        }
+        let np = n.div_ceil(GEMM_NR);
+        let mut data = vec![0i8; np * k * GEMM_NR];
+        for jp in 0..np {
+            let j0 = jp * GEMM_NR;
+            let jw = GEMM_NR.min(n - j0);
+            let panel = &mut data[jp * k * GEMM_NR..(jp + 1) * k * GEMM_NR];
+            for kk in 0..k {
+                for jj in 0..jw {
+                    panel[kk * GEMM_NR + jj] = bw[kk * n + j0 + jj] as i8;
+                }
+            }
+        }
+        Some(PackedB { data, k, n })
+    }
+}
+
+/// i8 GEMM against a pre-packed B: C[m,n] = A[m,k] x B[k,n], i32
+/// accumulation. Loop order: B column panel (L1-resident) -> MR-row
+/// register tile -> KC-blocked k sweep. Every output element accumulates
+/// its products in ascending-k order, so the result is bit-identical to
+/// the naive triple loop and to [`gemm_i8_i32`] over widened weights.
+pub fn gemm_i8_packed(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+    let (k, n) = (bp.k, bp.n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    let np = n.div_ceil(GEMM_NR);
+    for jp in 0..np {
+        let j0 = jp * GEMM_NR;
+        let jw = GEMM_NR.min(n - j0);
+        let panel = &bp.data[jp * k * GEMM_NR..(jp + 1) * k * GEMM_NR];
+        let mut i0 = 0;
+        while i0 < m {
+            let iw = GEMM_MR.min(m - i0);
+            let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
+            let mut kb = 0;
+            while kb < k {
+                let kc = GEMM_KC.min(k - kb);
+                for kk in kb..kb + kc {
+                    let brow = &panel[kk * GEMM_NR..(kk + 1) * GEMM_NR];
+                    for r in 0..iw {
+                        let av = a[(i0 + r) * k + kk] as i32;
+                        for jj in 0..GEMM_NR {
+                            acc[r][jj] += av * brow[jj] as i32;
+                        }
+                    }
+                }
+                kb += kc;
+            }
+            for r in 0..iw {
+                let base = (i0 + r) * n + j0;
+                c[base..base + jw].copy_from_slice(&acc[r][..jw]);
+            }
+            i0 += GEMM_MR;
+        }
+    }
+}
+
+/// Row-parallel wrapper over [`gemm_i8_packed`] (bit-exact: disjoint row
+/// blocks, identical per-element accumulation order).
+pub fn gemm_i8_packed_par(pool: &ThreadPool, a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+    let (k, n) = (bp.k, bp.n);
+    if !worth_parallel(pool, m, k, n) {
+        gemm_i8_packed(a, bp, m, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, GEMM_PAR_MIN_ROWS, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i8_packed(&a[row0 * k..(row0 + rows) * k], bp, rows, block);
+    });
+}
+
+/// An `[m, k]` A operand (the conv weight matrix) packed at plan time for
+/// [`gemm_i8_packed_a`]: `ceil(m/MR)` row panels, each `[k x MR]` with the
+/// MR row-values for one k interleaved (so the microkernel loads them as
+/// one contiguous word per k step); ragged last panel zero-padded.
+pub struct PackedA {
+    data: Vec<i8>,
+    pub m: usize,
+    pub k: usize,
+}
+
+impl PackedA {
+    /// Pack widened (zero-point-folded) weights, or `None` if out of i8
+    /// range — see [`PackedB::pack`].
+    pub fn pack(aw: &[i32], m: usize, k: usize) -> Option<PackedA> {
+        debug_assert_eq!(aw.len(), m * k);
+        if aw.iter().any(|&v| v < i8::MIN as i32 || v > i8::MAX as i32) {
+            return None;
+        }
+        let mp = m.div_ceil(GEMM_MR);
+        let mut data = vec![0i8; mp * k * GEMM_MR];
+        for ip in 0..mp {
+            let i0 = ip * GEMM_MR;
+            let iw = GEMM_MR.min(m - i0);
+            let panel = &mut data[ip * k * GEMM_MR..(ip + 1) * k * GEMM_MR];
+            for kk in 0..k {
+                for r in 0..iw {
+                    panel[kk * GEMM_MR + r] = aw[(i0 + r) * k + kk] as i8;
+                }
+            }
+        }
+        Some(PackedA { data, m, k })
+    }
+}
+
+/// i8 GEMM against a pre-packed A and a runtime row-major i8 B (the conv
+/// im2col columns): C[m,n] = A[m,k] x B[k,n], i32 accumulation, ascending
+/// k per element — bit-identical to the naive loop (see module note).
+pub fn gemm_i8_packed_a(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
+    let (m, k) = (ap.m, ap.k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mp = m.div_ceil(GEMM_MR);
+    for ip in 0..mp {
+        let i0 = ip * GEMM_MR;
+        let iw = GEMM_MR.min(m - i0);
+        let panel = &ap.data[ip * k * GEMM_MR..(ip + 1) * k * GEMM_MR];
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = GEMM_NR.min(n - j0);
+            let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
+            if jw == GEMM_NR {
+                for kk in 0..k {
+                    let arow = &panel[kk * GEMM_MR..(kk + 1) * GEMM_MR];
+                    let brow = &b[kk * n + j0..kk * n + j0 + GEMM_NR];
+                    for r in 0..GEMM_MR {
+                        let av = arow[r] as i32;
+                        for jj in 0..GEMM_NR {
+                            acc[r][jj] += av * brow[jj] as i32;
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    let arow = &panel[kk * GEMM_MR..(kk + 1) * GEMM_MR];
+                    let brow = &b[kk * n + j0..kk * n + j0 + jw];
+                    for r in 0..GEMM_MR {
+                        let av = arow[r] as i32;
+                        for (jj, &bv) in brow.iter().enumerate() {
+                            acc[r][jj] += av * bv as i32;
+                        }
+                    }
+                }
+            }
+            for r in 0..iw {
+                let base = (i0 + r) * n + j0;
+                c[base..base + jw].copy_from_slice(&acc[r][..jw]);
+            }
+            j0 += GEMM_NR;
+        }
+    }
+}
+
 /// Row-parallel wrapper over [`gemm_i32`] (bit-exact, see
 /// [`gemm_i8_i32_par`]).
 pub fn gemm_i32_par(
@@ -221,16 +413,35 @@ pub fn matmul_integer_prewidened(
     n: usize,
     a_zp: i32,
 ) -> Result<Tensor, OpError> {
+    matmul_integer_prewidened_into(a, bw, None, k, n, a_zp, None)
+}
+
+/// The compiled-plan form of [`matmul_integer_prewidened`]: optionally a
+/// plan-time [`PackedB`] (preferred when the activations are i8 with a
+/// zero a-zero-point — symmetric quantization, every pattern in the
+/// paper), and recycled output storage from the scratch planner. All
+/// three kernels below produce identical bits for the same operands.
+pub fn matmul_integer_prewidened_into(
+    a: &Tensor,
+    bw: &[i32],
+    bp: Option<&PackedB>,
+    k: usize,
+    n: usize,
+    a_zp: i32,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
     let (m, ka) = flat_mk(a.shape());
     if ka != k {
         return Err(OpError::Semantics(format!("K mismatch {ka} vs {k}")));
     }
     let pool = ThreadPool::global();
-    let mut c = vec![0i32; m * n];
-    match (a.data(), a_zp == 0) {
-        // Hot path: i8 activations, zero a-zero-point (symmetric
-        // quantization — every pattern in the paper).
-        (crate::tensor::TensorData::I8(av), true) => {
+    let mut c = crate::tensor::recycled_i32_zeroed(recycled, m * n);
+    match (a.data(), a_zp == 0, bp) {
+        // Hot path: i8 activations, zero zero-point, packed panels.
+        (crate::tensor::TensorData::I8(av), true, Some(bp)) => {
+            gemm_i8_packed_par(pool, av, bp, m, &mut c);
+        }
+        (crate::tensor::TensorData::I8(av), true, None) => {
             gemm_i8_i32_par(pool, av, bw, m, k, n, &mut c);
         }
         _ => {
@@ -243,20 +454,49 @@ pub fn matmul_integer_prewidened(
             gemm_i32_par(pool, &aw, bw, m, k, n, &mut c);
         }
     }
-    let mut out_shape = a.shape()[..a.shape().len() - 1].to_vec();
+    let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
     out_shape.push(n);
-    Ok(Tensor::from_i32(&out_shape, c)?)
+    Ok(Tensor::new(out_shape, crate::tensor::TensorData::I32(c))?)
+}
+
+/// Row-parallel wrapper over [`gemm_f32`]. Bit-exact with the serial
+/// kernel: the row split only changes WHICH thread computes an output
+/// row; every element still accumulates its k-products in the identical
+/// sequential order, so f32 non-associativity never enters.
+pub fn gemm_f32_par(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) {
+    if !worth_parallel(pool, m, k, n) {
+        gemm_f32(a, b, m, k, n, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, GEMM_PAR_MIN_ROWS, |row0, block| {
+        let rows = block.len() / n;
+        gemm_f32(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, block);
+    });
 }
 
 /// ONNX float `MatMul` (A rank>=2, B rank-2).
 pub fn matmul_f32(a: &Tensor, b: &Tensor) -> Result<Tensor, OpError> {
+    matmul_f32_into(a, b, None)
+}
+
+/// [`matmul_f32`] with recycled output storage and pool dispatch for
+/// large calls (bit-exact — see [`gemm_f32_par`]).
+pub fn matmul_f32_into(a: &Tensor, b: &Tensor, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
     let (m, k) = flat_mk(a.shape());
     let n = b.shape()[1];
-    let mut c = vec![0f32; m * n];
-    gemm_f32(a.as_f32()?, b.as_f32()?, m, k, n, &mut c);
-    let mut out_shape = a.shape()[..a.shape().len() - 1].to_vec();
+    let mut c = crate::tensor::recycled_f32_zeroed(recycled, m * n);
+    gemm_f32_par(ThreadPool::global(), a.as_f32()?, b.as_f32()?, m, k, n, &mut c);
+    let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
     out_shape.push(n);
-    Ok(Tensor::from_f32(&out_shape, c)?)
+    Ok(Tensor::new(out_shape, crate::tensor::TensorData::F32(c))?)
 }
 
 /// ONNX `Gemm`: alpha * op(A) * op(B) + beta * C (C broadcast).
@@ -269,6 +509,30 @@ pub fn gemm(
     trans_a: bool,
     trans_b: bool,
 ) -> Result<Tensor, OpError> {
+    let bt;
+    let b_op = if trans_b {
+        bt = transpose2(b)?;
+        &bt
+    } else {
+        b
+    };
+    gemm_opb(a, b_op, c, alpha, beta, trans_a, None)
+}
+
+/// [`gemm`] against an already-resolved op(B) — the form the compiled
+/// plans call with the `transB` transpose baked at plan time (the
+/// per-run `transpose2` allocation + O(mn) shuffle this replaces ran on
+/// every request). Identical arithmetic: the same op(B) values flow
+/// through the same kernel.
+pub fn gemm_opb(
+    a: &Tensor,
+    b_op: &Tensor,
+    c: Option<&Tensor>,
+    alpha: f32,
+    beta: f32,
+    trans_a: bool,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
     let at;
     let a = if trans_a {
         at = transpose2(a)?;
@@ -276,36 +540,39 @@ pub fn gemm(
     } else {
         a
     };
-    let bt;
-    let b = if trans_b {
-        bt = transpose2(b)?;
-        &bt
-    } else {
-        b
-    };
     let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    let (kb, n) = (b_op.shape()[0], b_op.shape()[1]);
     if k != kb {
         return Err(OpError::Semantics(format!("Gemm K mismatch {k} vs {kb}")));
     }
-    let mut out = vec![0f32; m * n];
-    gemm_f32(a.as_f32()?, b.as_f32()?, m, k, n, &mut out);
+    let mut out = crate::tensor::recycled_f32_zeroed(recycled, m * n);
+    gemm_f32_par(ThreadPool::global(), a.as_f32()?, b_op.as_f32()?, m, k, n, &mut out);
     if alpha != 1.0 {
         for v in &mut out {
             *v *= alpha;
         }
     }
     if let Some(c) = c {
-        let ix = crate::tensor::BroadcastIndexer::new(&[m, n], c.shape());
+        // Fast bias forms (no indexer construction): full-width row bias
+        // `[n]` / `[1, n]`, else the generic broadcast indexer.
         let cv = c.as_f32()?;
-        for (i, v) in out.iter_mut().enumerate() {
-            *v += beta * cv[ix.map(i)];
+        if (cv.len() == n && c.shape().last().copied() == Some(n)) || (n == 1 && cv.len() == 1) {
+            for row in out.chunks_mut(n) {
+                for (v, &bv) in row.iter_mut().zip(cv) {
+                    *v += beta * bv;
+                }
+            }
+        } else {
+            let ix = crate::tensor::BroadcastIndexer::new(&[m, n], c.shape());
+            for (i, v) in out.iter_mut().enumerate() {
+                *v += beta * cv[ix.map(i)];
+            }
         }
     }
     Ok(Tensor::from_f32(&[m, n], out)?)
 }
 
-fn transpose2(t: &Tensor) -> Result<Tensor, OpError> {
+pub(crate) fn transpose2(t: &Tensor) -> Result<Tensor, OpError> {
     if t.rank() != 2 {
         return Err(OpError::Semantics("transpose expects rank-2".into()));
     }
@@ -418,6 +685,95 @@ mod tests {
             gemm_i32_par(&pool, &aw, &bw, m, k, n, &mut par32);
             assert_eq!(par32, serial, "{threads} threads (i32 kernel)");
         }
+    }
+
+    #[test]
+    fn packed_b_gemm_matches_widened_kernel() {
+        let mut state = 0xBADC0FFEu64;
+        let mut rnd8 = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 56) as u8 as i8
+        };
+        // Shapes crossing every remainder path: m % MR != 0, n < NR,
+        // n % NR != 0, k % KC != 0 and k % 4 != 0.
+        for (m, k, n) in [(1, 3, 1), (5, 7, 3), (4, 13, 8), (9, 300, 11), (2, 4, 20)] {
+            let a: Vec<i8> = (0..m * k).map(|_| rnd8()).collect();
+            let bw: Vec<i32> = (0..k * n).map(|_| rnd8() as i32).collect();
+            let bp = PackedB::pack(&bw, k, n).expect("i8 range");
+            let mut want = vec![0i32; m * n];
+            gemm_i8_i32(&a, &bw, m, k, n, &mut want);
+            let mut got = vec![0i32; m * n];
+            gemm_i8_packed(&a, &bp, m, &mut got);
+            assert_eq!(want, got, "packed B ({m},{k},{n})");
+            // Packed-A kernel on the transposed role: C = A x B with A
+            // packed; use the same operands with A as the packed side.
+            let aw: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+            let ap = PackedA::pack(&aw, m, k).expect("i8 range");
+            let b8: Vec<i8> = bw.iter().map(|&x| x as i8).collect();
+            let mut got_a = vec![0i32; m * n];
+            gemm_i8_packed_a(&ap, &b8, n, &mut got_a);
+            assert_eq!(want, got_a, "packed A ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn pack_refuses_out_of_range_values() {
+        // A folded value of -200 (u8 weight minus large zero point) must
+        // refuse to pack so the widened kernel keeps serving it.
+        assert!(PackedB::pack(&[1, -200], 2, 1).is_none());
+        assert!(PackedA::pack(&[300, 0], 1, 2).is_none());
+    }
+
+    #[test]
+    fn prewidened_into_packed_matches_unpacked() {
+        let a8 = Tensor::from_i8(&[5, 6], (0..30).map(|i| (i * 11 % 251) as u8 as i8).collect())
+            .unwrap();
+        let bw: Vec<i32> = (0..6 * 3).map(|i| ((i * 7 % 31) as i32) - 15).collect();
+        let bp = PackedB::pack(&bw, 6, 3).unwrap();
+        let plain = matmul_integer_prewidened(&a8, &bw, 6, 3, 0).unwrap();
+        let packed =
+            matmul_integer_prewidened_into(&a8, &bw, Some(&bp), 6, 3, 0, None).unwrap();
+        assert_eq!(plain, packed);
+        // Recycled storage changes nothing but the buffer's origin.
+        let spare = Tensor::from_i32(&[100], vec![7; 100]).unwrap();
+        let recycled =
+            matmul_integer_prewidened_into(&a8, &bw, Some(&bp), 6, 3, 0, Some(spare)).unwrap();
+        assert_eq!(plain, recycled);
+    }
+
+    #[test]
+    fn gemm_f32_parallel_bit_exact_vs_serial() {
+        let (m, k, n) = (64usize, 32, 32);
+        let mut state = 0xF00Du64;
+        let mut rnd = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 40) as i32 % 1000) as f32 / 99.0
+        };
+        let a: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let mut serial = vec![0f32; m * n];
+        gemm_f32(&a, &b, m, k, n, &mut serial);
+        for threads in [1usize, 2, 3, 8] {
+            let pool = crate::parallel::ThreadPool::new(threads);
+            let mut par = vec![0f32; m * n];
+            gemm_f32_par(&pool, &a, &b, m, k, n, &mut par);
+            // Bit-exact: compare raw bits, not approximate equality.
+            let sb: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = par.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, pb, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn gemm_opb_matches_gemm_with_transb() {
+        let a = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::from_f32(&[4, 3], (0..12).map(|i| i as f32 * 0.5 - 2.0).collect())
+            .unwrap();
+        let c = Tensor::from_f32(&[4], vec![1., -1., 2., -2.]).unwrap();
+        let want = gemm(&a, &b, Some(&c), 1.5, 0.5, false, true).unwrap();
+        let bt = transpose2(&b).unwrap();
+        let got = gemm_opb(&a, &bt, Some(&c), 1.5, 0.5, false, None).unwrap();
+        assert_eq!(want, got);
     }
 
     #[test]

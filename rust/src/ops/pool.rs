@@ -6,7 +6,9 @@
 
 use super::OpError;
 use crate::onnx::shape::ConvAttrs;
-use crate::tensor::{Tensor, TensorData};
+use crate::tensor::{
+    recycled_f32, recycled_i8, recycled_u8, Shape, Tensor, TensorData,
+};
 
 struct PoolGeom {
     n: usize,
@@ -42,19 +44,26 @@ fn geometry(x: &Tensor, kernel: &[i64], attrs: ConvAttrs) -> Result<PoolGeom, Op
     })
 }
 
-fn pool_windows<T: Copy, F: FnMut(&mut Vec<T>) -> T>(
+/// Sweep every pooling window in output order, folding the in-window
+/// values (in the same row-major in-window order the old `Vec`-collecting
+/// sweep pushed them, so non-associative f32 reductions are bit-identical)
+/// into `out`. No per-window buffer: the window state lives in `state`
+/// seeded by `init` and finished by `fin(state, count)`.
+fn pool_fold<T: Copy, S: Copy, FA: FnMut(S, T) -> S, FF: FnMut(S, usize) -> T>(
     src: &[T],
     g: &PoolGeom,
-    mut reduce: F,
-) -> Vec<T> {
-    let mut out = Vec::with_capacity(g.n * g.c * g.oh * g.ow);
-    let mut window: Vec<T> = Vec::with_capacity(g.kh * g.kw);
+    out: &mut Vec<T>,
+    init: S,
+    mut acc: FA,
+    mut fin: FF,
+) {
     for b in 0..g.n {
         for ci in 0..g.c {
             let plane = &src[(b * g.c + ci) * g.h * g.w..(b * g.c + ci + 1) * g.h * g.w];
             for oy in 0..g.oh {
                 for ox in 0..g.ow {
-                    window.clear();
+                    let mut state = init;
+                    let mut count = 0usize;
                     for ky in 0..g.kh {
                         let iy = (oy * g.attrs.strides[0] + ky) as isize - g.attrs.pads[0] as isize;
                         if iy < 0 || iy as usize >= g.h {
@@ -66,30 +75,47 @@ fn pool_windows<T: Copy, F: FnMut(&mut Vec<T>) -> T>(
                             if ix < 0 || ix as usize >= g.w {
                                 continue;
                             }
-                            window.push(plane[iy as usize * g.w + ix as usize]);
+                            state = acc(state, plane[iy as usize * g.w + ix as usize]);
+                            count += 1;
                         }
                     }
-                    out.push(reduce(&mut window));
+                    out.push(fin(state, count));
                 }
             }
         }
     }
-    out
 }
 
 /// ONNX `MaxPool` over f32 / i8 / u8.
 pub fn max_pool(x: &Tensor, kernel: &[i64], attrs: ConvAttrs) -> Result<Tensor, OpError> {
+    max_pool_into(x, kernel, attrs, None)
+}
+
+/// [`max_pool`] into recycled storage (identical values).
+pub fn max_pool_into(
+    x: &Tensor,
+    kernel: &[i64],
+    attrs: ConvAttrs,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
     let g = geometry(x, kernel, attrs)?;
-    let shape = vec![g.n, g.c, g.oh, g.ow];
+    let n_out = g.n * g.c * g.oh * g.ow;
+    let shape = Shape::from_slice(&[g.n, g.c, g.oh, g.ow]);
     let data = match x.data() {
-        TensorData::F32(v) => TensorData::F32(pool_windows(v, &g, |w| {
-            w.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
-        })),
+        TensorData::F32(v) => {
+            let mut out = recycled_f32(recycled, n_out);
+            pool_fold(v, &g, &mut out, f32::NEG_INFINITY, f32::max, |s, _| s);
+            TensorData::F32(out)
+        }
         TensorData::I8(v) => {
-            TensorData::I8(pool_windows(v, &g, |w| *w.iter().max().unwrap_or(&i8::MIN)))
+            let mut out = recycled_i8(recycled, n_out);
+            pool_fold(v, &g, &mut out, i8::MIN, i8::max, |s, _| s);
+            TensorData::I8(out)
         }
         TensorData::U8(v) => {
-            TensorData::U8(pool_windows(v, &g, |w| *w.iter().max().unwrap_or(&u8::MIN)))
+            let mut out = recycled_u8(recycled, n_out);
+            pool_fold(v, &g, &mut out, u8::MIN, u8::max, |s, _| s);
+            TensorData::U8(out)
         }
         d => {
             return Err(OpError::Semantics(format!(
@@ -103,17 +129,31 @@ pub fn max_pool(x: &Tensor, kernel: &[i64], attrs: ConvAttrs) -> Result<Tensor, 
 
 /// ONNX `AveragePool` (f32, count_include_pad=0).
 pub fn average_pool(x: &Tensor, kernel: &[i64], attrs: ConvAttrs) -> Result<Tensor, OpError> {
+    average_pool_into(x, kernel, attrs, None)
+}
+
+/// [`average_pool`] into recycled storage (identical values: same
+/// in-window summation order as the old collecting sweep).
+pub fn average_pool_into(
+    x: &Tensor,
+    kernel: &[i64],
+    attrs: ConvAttrs,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
     let g = geometry(x, kernel, attrs)?;
-    let shape = vec![g.n, g.c, g.oh, g.ow];
+    let n_out = g.n * g.c * g.oh * g.ow;
+    let shape = Shape::from_slice(&[g.n, g.c, g.oh, g.ow]);
     match x.data() {
         TensorData::F32(v) => {
-            let out = pool_windows(v, &g, |w| {
-                if w.is_empty() {
-                    0.0
-                } else {
-                    w.iter().sum::<f32>() / w.len() as f32
-                }
-            });
+            let mut out = recycled_f32(recycled, n_out);
+            pool_fold(
+                v,
+                &g,
+                &mut out,
+                0.0f32,
+                |s, x| s + x,
+                |s, count| if count == 0 { 0.0 } else { s / count as f32 },
+            );
             Ok(Tensor::new(shape, TensorData::F32(out))?)
         }
         d => Err(OpError::Semantics(format!(

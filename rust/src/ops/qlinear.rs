@@ -9,7 +9,7 @@
 //! round-half-to-nearest-even, matching ONNXruntime bit-for-bit.
 
 use super::OpError;
-use crate::tensor::{DType, Tensor, TensorData};
+use crate::tensor::{recycled_f32, recycled_i8, recycled_u8, DType, Shape, Tensor, TensorData};
 
 /// Round half to even ("banker's rounding"), the rounding ONNX specifies
 /// for QuantizeLinear. `f32::round` rounds half away from zero, which
@@ -38,6 +38,17 @@ pub fn quantize_linear(
     y_scale: &Tensor,
     y_zero_point: Option<&Tensor>,
 ) -> Result<Tensor, OpError> {
+    quantize_linear_into(x, y_scale, y_zero_point, None)
+}
+
+/// [`quantize_linear`] into recycled storage (identical values; the
+/// zero-point scalar is read without the widening `Vec` of the old path).
+pub fn quantize_linear_into(
+    x: &Tensor,
+    y_scale: &Tensor,
+    y_zero_point: Option<&Tensor>,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
     let scale = y_scale.as_f32()?[0];
     if scale <= 0.0 || !scale.is_finite() {
         return Err(OpError::Semantics(format!("invalid y_scale {scale}")));
@@ -45,23 +56,25 @@ pub fn quantize_linear(
     let xv = x.as_f32()?;
     let (out_dtype, zp) = match y_zero_point {
         None => (DType::U8, 0i32),
-        Some(z) => (z.dtype(), z.as_quantized_i32()?[0]),
+        Some(z) => (z.dtype(), z.quantized_scalar_i32()?),
     };
     let inv = 1.0 / scale;
     match out_dtype {
         DType::I8 => {
-            let v: Vec<i8> = xv
-                .iter()
-                .map(|&x| saturate_i8(round_half_even(x * inv) + zp as f32))
-                .collect();
-            Ok(Tensor::new(x.shape().to_vec(), TensorData::I8(v))?)
+            let mut v = recycled_i8(recycled, xv.len());
+            v.extend(
+                xv.iter()
+                    .map(|&x| saturate_i8(round_half_even(x * inv) + zp as f32)),
+            );
+            Ok(Tensor::new(Shape::from_slice(x.shape()), TensorData::I8(v))?)
         }
         DType::U8 => {
-            let v: Vec<u8> = xv
-                .iter()
-                .map(|&x| saturate_u8(round_half_even(x * inv) + zp as f32))
-                .collect();
-            Ok(Tensor::new(x.shape().to_vec(), TensorData::U8(v))?)
+            let mut v = recycled_u8(recycled, xv.len());
+            v.extend(
+                xv.iter()
+                    .map(|&x| saturate_u8(round_half_even(x * inv) + zp as f32)),
+            );
+            Ok(Tensor::new(Shape::from_slice(x.shape()), TensorData::U8(v))?)
         }
         d => Err(OpError::Semantics(format!(
             "QuantizeLinear zero_point must be INT8/UINT8, got {d}"
@@ -75,17 +88,38 @@ pub fn dequantize_linear(
     x_scale: &Tensor,
     x_zero_point: Option<&Tensor>,
 ) -> Result<Tensor, OpError> {
+    dequantize_linear_into(x, x_scale, x_zero_point, None)
+}
+
+/// [`dequantize_linear`] into recycled storage. The per-source loops
+/// widen inline (same `(q - zp) as f32 * scale` arithmetic), replacing
+/// the old path's whole-tensor `as_quantized_i32` intermediate — the
+/// second steady-state allocation on the Figs. 4–6 activation path.
+pub fn dequantize_linear_into(
+    x: &Tensor,
+    x_scale: &Tensor,
+    x_zero_point: Option<&Tensor>,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
     let scale = x_scale.as_f32()?[0];
     let zp = match x_zero_point {
         None => 0i32,
-        Some(z) => z.as_quantized_i32()?[0],
+        Some(z) => z.quantized_scalar_i32()?,
     };
-    let v: Vec<f32> = x
-        .as_quantized_i32()?
-        .iter()
-        .map(|&q| (q - zp) as f32 * scale)
-        .collect();
-    Ok(Tensor::from_f32(x.shape(), v)?)
+    let mut v = recycled_f32(recycled, x.numel());
+    match x.data() {
+        TensorData::I8(q) => v.extend(q.iter().map(|&q| (q as i32 - zp) as f32 * scale)),
+        TensorData::U8(q) => v.extend(q.iter().map(|&q| (q as i32 - zp) as f32 * scale)),
+        TensorData::I32(q) => v.extend(q.iter().map(|&q| (q - zp) as f32 * scale)),
+        // Same error the old whole-tensor widening surfaced.
+        d => {
+            return Err(OpError::Tensor(crate::tensor::TensorError::DTypeMismatch {
+                expected: DType::I8,
+                got: d.dtype(),
+            }))
+        }
+    }
+    Ok(Tensor::new(Shape::from_slice(x.shape()), TensorData::F32(v))?)
 }
 
 #[cfg(test)]

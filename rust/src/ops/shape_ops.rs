@@ -1,11 +1,18 @@
 //! Shape-manipulating operators (Reshape, Flatten, Identity) and Softmax.
 
 use super::OpError;
-use crate::tensor::Tensor;
+use crate::tensor::{recycled_f32_zeroed, Shape, Tensor};
 
 /// ONNX `Reshape` with 0 (copy) and -1 (infer) semantics.
 pub fn reshape(x: &Tensor, spec: &[i64]) -> Result<Tensor, OpError> {
-    let mut dims: Vec<usize> = Vec::with_capacity(spec.len());
+    reshape_into(x, spec, None)
+}
+
+/// [`reshape`] copying into recycled storage (the planned executor's
+/// form: data copy + inline-shape computation, no steady-state
+/// allocation).
+pub fn reshape_into(x: &Tensor, spec: &[i64], recycled: Option<Tensor>) -> Result<Tensor, OpError> {
+    let mut dims = Shape::empty();
     let mut infer_at = None;
     for (i, &s) in spec.iter().enumerate() {
         match s {
@@ -28,7 +35,12 @@ pub fn reshape(x: &Tensor, spec: &[i64]) -> Result<Tensor, OpError> {
         }
     }
     if let Some(at) = infer_at {
-        let rest: usize = dims.iter().enumerate().filter(|(i, _)| *i != at).map(|(_, &d)| d).product();
+        let rest: usize = dims
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != at)
+            .map(|(_, &d)| d)
+            .product();
         if rest == 0 || x.numel() % rest != 0 {
             return Err(OpError::Semantics(format!(
                 "cannot infer -1: numel {} over {}",
@@ -36,24 +48,34 @@ pub fn reshape(x: &Tensor, spec: &[i64]) -> Result<Tensor, OpError> {
                 rest
             )));
         }
-        dims[at] = x.numel() / rest;
+        dims.as_mut_slice()[at] = x.numel() / rest;
     }
-    Ok(x.clone().reshape(&dims)?)
+    Ok(x.clone_recycled(recycled).reshape(&dims)?)
 }
 
 /// ONNX `Flatten`.
 pub fn flatten(x: &Tensor, axis: usize) -> Result<Tensor, OpError> {
+    flatten_into(x, axis, None)
+}
+
+/// [`flatten`] copying into recycled storage.
+pub fn flatten_into(x: &Tensor, axis: usize, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
     if axis > x.rank() {
         return Err(OpError::Semantics("axis out of range".into()));
     }
     let d0: usize = x.shape()[..axis].iter().product();
     let d1: usize = x.shape()[axis..].iter().product();
-    Ok(x.clone().reshape(&[d0, d1])?)
+    Ok(x.clone_recycled(recycled).reshape(&[d0, d1])?)
 }
 
 /// ONNX `Softmax` along `axis` (f32). Numerically-stable max-subtraction
 /// form; used by the fp32 reference models and accuracy evaluation.
 pub fn softmax(x: &Tensor, axis: i64) -> Result<Tensor, OpError> {
+    softmax_into(x, axis, None)
+}
+
+/// [`softmax`] into recycled storage (identical values).
+pub fn softmax_into(x: &Tensor, axis: i64, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
     let rank = x.rank() as i64;
     let axis = if axis < 0 { axis + rank } else { axis };
     if axis < 0 || axis >= rank {
@@ -65,7 +87,7 @@ pub fn softmax(x: &Tensor, axis: i64) -> Result<Tensor, OpError> {
     let axis_len = shape[axis];
     let inner: usize = shape[axis + 1..].iter().product();
     let outer: usize = shape[..axis].iter().product();
-    let mut out = vec![0f32; v.len()];
+    let mut out = recycled_f32_zeroed(recycled, v.len());
     for o in 0..outer {
         for i in 0..inner {
             let idx = |a: usize| (o * axis_len + a) * inner + i;

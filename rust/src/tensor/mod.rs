@@ -78,6 +78,121 @@ impl std::fmt::Display for DType {
     }
 }
 
+/// Ranks up to this many dims are stored inline in [`Shape`] — every
+/// shape the paper's patterns produce (NCHW is rank 4; Reshape specs in
+/// the admitted models never exceed this). Higher ranks fall back to a
+/// heap vector, trading the zero-allocation guarantee for generality.
+pub const SHAPE_INLINE: usize = 6;
+
+/// A tensor shape with inline storage for small ranks, so constructing,
+/// cloning, and extending shapes on the execution hot path allocates
+/// nothing (see EXPERIMENTS.md §Perf — shape `Vec`s were one of the
+/// per-node steady-state allocations the scratch planner eliminates).
+///
+/// Dereferences to `&[usize]`, so all slice-based call sites keep
+/// working unchanged.
+#[derive(Clone, Debug)]
+pub enum Shape {
+    Inline { len: u8, dims: [usize; SHAPE_INLINE] },
+    Heap(Vec<usize>),
+}
+
+impl Shape {
+    /// Rank-0 shape (scalars).
+    pub fn empty() -> Shape {
+        Shape::Inline {
+            len: 0,
+            dims: [0; SHAPE_INLINE],
+        }
+    }
+
+    /// Copy a dim slice (inline when rank permits — no allocation).
+    pub fn from_slice(s: &[usize]) -> Shape {
+        if s.len() <= SHAPE_INLINE {
+            let mut dims = [0usize; SHAPE_INLINE];
+            dims[..s.len()].copy_from_slice(s);
+            Shape::Inline {
+                len: s.len() as u8,
+                dims,
+            }
+        } else {
+            Shape::Heap(s.to_vec())
+        }
+    }
+
+    /// Append a trailing dim (promotes to heap storage past
+    /// [`SHAPE_INLINE`]).
+    pub fn push(&mut self, d: usize) {
+        match self {
+            Shape::Inline { len, dims } => {
+                if (*len as usize) < SHAPE_INLINE {
+                    dims[*len as usize] = d;
+                    *len += 1;
+                } else {
+                    let mut v = dims.to_vec();
+                    v.push(d);
+                    *self = Shape::Heap(v);
+                }
+            }
+            Shape::Heap(v) => v.push(d),
+        }
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        match self {
+            Shape::Inline { len, dims } => &dims[..*len as usize],
+            Shape::Heap(v) => v,
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [usize] {
+        match self {
+            Shape::Inline { len, dims } => &mut dims[..*len as usize],
+            Shape::Heap(v) => v,
+        }
+    }
+
+    /// Total element count implied by the shape.
+    pub fn numel(&self) -> usize {
+        self.as_slice().iter().product()
+    }
+}
+
+impl std::ops::Deref for Shape {
+    type Target = [usize];
+    fn deref(&self) -> &[usize] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for Shape {
+    fn eq(&self, other: &Shape) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(s: &[usize]) -> Shape {
+        Shape::from_slice(s)
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Shape {
+        if v.len() <= SHAPE_INLINE {
+            Shape::from_slice(&v)
+        } else {
+            Shape::Heap(v)
+        }
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for Shape {
+    fn from(s: [usize; N]) -> Shape {
+        Shape::from_slice(&s)
+    }
+}
+
 /// Typed storage behind a [`Tensor`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
@@ -149,17 +264,18 @@ pub enum TensorError {
 /// A dense row-major tensor: shape + typed storage.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
-    shape: Vec<usize>,
+    shape: Shape,
     data: TensorData,
 }
 
 impl Tensor {
     /// Construct from shape + typed data, validating element count.
-    pub fn new(shape: Vec<usize>, data: TensorData) -> Result<Tensor, TensorError> {
-        let expected: usize = shape.iter().product();
+    pub fn new(shape: impl Into<Shape>, data: TensorData) -> Result<Tensor, TensorError> {
+        let shape = shape.into();
+        let expected = shape.numel();
         if expected != data.len() {
             return Err(TensorError::ShapeMismatch {
-                shape,
+                shape: shape.to_vec(),
                 expected,
                 got: data.len(),
             });
@@ -168,42 +284,42 @@ impl Tensor {
     }
 
     pub fn from_f32(shape: &[usize], v: Vec<f32>) -> Result<Tensor, TensorError> {
-        Tensor::new(shape.to_vec(), TensorData::F32(v))
+        Tensor::new(Shape::from_slice(shape), TensorData::F32(v))
     }
     pub fn from_f16(shape: &[usize], v: Vec<F16>) -> Result<Tensor, TensorError> {
-        Tensor::new(shape.to_vec(), TensorData::F16(v))
+        Tensor::new(Shape::from_slice(shape), TensorData::F16(v))
     }
     pub fn from_i8(shape: &[usize], v: Vec<i8>) -> Result<Tensor, TensorError> {
-        Tensor::new(shape.to_vec(), TensorData::I8(v))
+        Tensor::new(Shape::from_slice(shape), TensorData::I8(v))
     }
     pub fn from_u8(shape: &[usize], v: Vec<u8>) -> Result<Tensor, TensorError> {
-        Tensor::new(shape.to_vec(), TensorData::U8(v))
+        Tensor::new(Shape::from_slice(shape), TensorData::U8(v))
     }
     pub fn from_i32(shape: &[usize], v: Vec<i32>) -> Result<Tensor, TensorError> {
-        Tensor::new(shape.to_vec(), TensorData::I32(v))
+        Tensor::new(Shape::from_slice(shape), TensorData::I32(v))
     }
     pub fn from_i64(shape: &[usize], v: Vec<i64>) -> Result<Tensor, TensorError> {
-        Tensor::new(shape.to_vec(), TensorData::I64(v))
+        Tensor::new(Shape::from_slice(shape), TensorData::I64(v))
     }
 
     /// Rank-0 f32 scalar (ONNX scalar initializers such as `Quant_scale`).
     pub fn scalar_f32(v: f32) -> Tensor {
         Tensor {
-            shape: vec![],
+            shape: Shape::empty(),
             data: TensorData::F32(vec![v]),
         }
     }
     /// Rank-0 i8 scalar (e.g. QuantizeLinear `zero_point`).
     pub fn scalar_i8(v: i8) -> Tensor {
         Tensor {
-            shape: vec![],
+            shape: Shape::empty(),
             data: TensorData::I8(vec![v]),
         }
     }
     /// Rank-0 u8 scalar.
     pub fn scalar_u8(v: u8) -> Tensor {
         Tensor {
-            shape: vec![],
+            shape: Shape::empty(),
             data: TensorData::U8(vec![v]),
         }
     }
@@ -221,13 +337,13 @@ impl Tensor {
             DType::Bool => TensorData::Bool(vec![false; n]),
         };
         Tensor {
-            shape: shape.to_vec(),
+            shape: Shape::from_slice(shape),
             data,
         }
     }
 
     pub fn shape(&self) -> &[usize] {
-        &self.shape
+        self.shape.as_slice()
     }
 
     pub fn dtype(&self) -> DType {
@@ -250,6 +366,12 @@ impl Tensor {
         &mut self.data
     }
 
+    /// Consume the tensor, yielding its typed storage (the entry point of
+    /// the buffer-recycling helpers below).
+    pub fn into_data(self) -> TensorData {
+        self.data
+    }
+
     /// Bytes of payload (hwsim memory-traffic model).
     pub fn size_bytes(&self) -> usize {
         self.numel() * self.dtype().size_bytes()
@@ -264,7 +386,7 @@ impl Tensor {
                 shape: shape.to_vec(),
             });
         }
-        self.shape = shape.to_vec();
+        self.shape = Shape::from_slice(shape);
         Ok(self)
     }
 
@@ -349,6 +471,21 @@ impl Tensor {
         }
     }
 
+    /// First element of an i8/u8/i32 tensor widened to i32, without the
+    /// intermediate `Vec` of [`Tensor::as_quantized_i32`] — the zero-point
+    /// read on the QuantizeLinear/DequantizeLinear hot path.
+    pub fn quantized_scalar_i32(&self) -> Result<i32, TensorError> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v[0] as i32),
+            TensorData::U8(v) => Ok(v[0] as i32),
+            TensorData::I32(v) => Ok(v[0]),
+            d => Err(TensorError::DTypeMismatch {
+                expected: DType::I8,
+                got: d.dtype(),
+            }),
+        }
+    }
+
     /// Convert every element to f32 (lossless for all our dtypes).
     pub fn to_f32_vec(&self) -> Vec<f32> {
         match &self.data {
@@ -390,7 +527,7 @@ impl Tensor {
             TensorData::Bool(v) => TensorData::Bool(v[a..b].to_vec()),
         };
         let mut shape = self.shape.clone();
-        shape[0] = len;
+        shape.as_mut_slice()[0] = len;
         Ok(Tensor { shape, data })
     }
 
@@ -424,8 +561,11 @@ impl Tensor {
             }
             total += t.shape()[0];
         }
-        let mut shape = vec![total];
-        shape.extend_from_slice(row_shape);
+        let mut shape = Shape::empty();
+        shape.push(total);
+        for &d in row_shape {
+            shape.push(d);
+        }
 
         macro_rules! concat_as {
             ($variant:ident, $ty:ty) => {{
@@ -457,41 +597,75 @@ impl Tensor {
     /// applied (ONNX Cast wraps/UBs on overflow; the paper's patterns only
     /// cast i32->f32 and f32<->f16 where this cannot occur).
     pub fn cast(&self, to: DType) -> Tensor {
+        self.cast_recycled(to, None)
+    }
+
+    /// [`Tensor::cast`] writing into recycled storage: identical values
+    /// element for element, the output buffer just comes from `recycled`
+    /// when its dtype matches and its capacity suffices (the scratch
+    /// planner's steady state). Also replaces the `to_f32_vec`
+    /// intermediate of the old cast with direct per-source loops, so the
+    /// hot i32->f32 cast after every integer accumulate allocates nothing.
+    pub fn cast_recycled(&self, to: DType, recycled: Option<Tensor>) -> Tensor {
         if to == self.dtype() {
-            return self.clone();
+            return self.clone_recycled(recycled);
         }
         let n = self.numel();
         let data = match to {
-            DType::F32 => TensorData::F32(self.to_f32_vec()),
-            DType::F16 => {
-                TensorData::F16(self.to_f32_vec().iter().map(|&x| F16::from_f32(x)).collect())
+            DType::F32 => {
+                let mut o = recycled_f32(recycled, n);
+                map_to_f32(&self.data, &mut o, |x| x);
+                TensorData::F32(o)
             }
-            DType::I8 => TensorData::I8(match &self.data {
-                TensorData::U8(v) => v.iter().map(|&x| x as i8).collect(),
-                TensorData::I32(v) => v.iter().map(|&x| x as i8).collect(),
-                TensorData::I64(v) => v.iter().map(|&x| x as i8).collect(),
-                _ => self.to_f32_vec().iter().map(|&x| x as i8).collect(),
-            }),
-            DType::U8 => TensorData::U8(match &self.data {
-                TensorData::I8(v) => v.iter().map(|&x| x as u8).collect(),
-                TensorData::I32(v) => v.iter().map(|&x| x as u8).collect(),
-                TensorData::I64(v) => v.iter().map(|&x| x as u8).collect(),
-                _ => self.to_f32_vec().iter().map(|&x| x as u8).collect(),
-            }),
-            DType::I32 => TensorData::I32(match &self.data {
-                TensorData::I8(v) => v.iter().map(|&x| x as i32).collect(),
-                TensorData::U8(v) => v.iter().map(|&x| x as i32).collect(),
-                TensorData::I64(v) => v.iter().map(|&x| x as i32).collect(),
-                _ => self.to_f32_vec().iter().map(|&x| x as i32).collect(),
-            }),
-            DType::I64 => TensorData::I64(match &self.data {
-                TensorData::I8(v) => v.iter().map(|&x| x as i64).collect(),
-                TensorData::U8(v) => v.iter().map(|&x| x as i64).collect(),
-                TensorData::I32(v) => v.iter().map(|&x| x as i64).collect(),
-                _ => self.to_f32_vec().iter().map(|&x| x as i64).collect(),
-            }),
+            DType::F16 => {
+                let mut o = recycled_f16(recycled, n);
+                map_to_f32(&self.data, &mut o, F16::from_f32);
+                TensorData::F16(o)
+            }
+            DType::I8 => {
+                let mut o = recycled_i8(recycled, n);
+                match &self.data {
+                    TensorData::U8(v) => o.extend(v.iter().map(|&x| x as i8)),
+                    TensorData::I32(v) => o.extend(v.iter().map(|&x| x as i8)),
+                    TensorData::I64(v) => o.extend(v.iter().map(|&x| x as i8)),
+                    d => map_to_f32(d, &mut o, |x| x as i8),
+                }
+                TensorData::I8(o)
+            }
+            DType::U8 => {
+                let mut o = recycled_u8(recycled, n);
+                match &self.data {
+                    TensorData::I8(v) => o.extend(v.iter().map(|&x| x as u8)),
+                    TensorData::I32(v) => o.extend(v.iter().map(|&x| x as u8)),
+                    TensorData::I64(v) => o.extend(v.iter().map(|&x| x as u8)),
+                    d => map_to_f32(d, &mut o, |x| x as u8),
+                }
+                TensorData::U8(o)
+            }
+            DType::I32 => {
+                let mut o = recycled_i32(recycled, n);
+                match &self.data {
+                    TensorData::I8(v) => o.extend(v.iter().map(|&x| x as i32)),
+                    TensorData::U8(v) => o.extend(v.iter().map(|&x| x as i32)),
+                    TensorData::I64(v) => o.extend(v.iter().map(|&x| x as i32)),
+                    d => map_to_f32(d, &mut o, |x| x as i32),
+                }
+                TensorData::I32(o)
+            }
+            DType::I64 => {
+                let mut o = recycled_i64(recycled, n);
+                match &self.data {
+                    TensorData::I8(v) => o.extend(v.iter().map(|&x| x as i64)),
+                    TensorData::U8(v) => o.extend(v.iter().map(|&x| x as i64)),
+                    TensorData::I32(v) => o.extend(v.iter().map(|&x| x as i64)),
+                    d => map_to_f32(d, &mut o, |x| x as i64),
+                }
+                TensorData::I64(o)
+            }
             DType::Bool => {
-                TensorData::Bool(self.to_f32_vec().iter().map(|&x| x != 0.0).collect())
+                let mut o = recycled_bool(recycled, n);
+                map_to_f32(&self.data, &mut o, |x| x != 0.0);
+                TensorData::Bool(o)
             }
         };
         debug_assert_eq!(data.len(), n);
@@ -500,17 +674,118 @@ impl Tensor {
             data,
         }
     }
+
+    /// Bitwise copy of this tensor into recycled storage (the Identity /
+    /// Reshape / Flatten path of the scratch planner): same values and
+    /// shape as `self.clone()`, zero allocations once `recycled` carries a
+    /// matching-dtype buffer of sufficient capacity.
+    pub fn clone_recycled(&self, recycled: Option<Tensor>) -> Tensor {
+        let n = self.numel();
+        macro_rules! copy_into {
+            ($variant:ident, $recycle:ident, $v:expr) => {{
+                let mut o = $recycle(recycled, n);
+                o.extend_from_slice($v);
+                TensorData::$variant(o)
+            }};
+        }
+        let data = match &self.data {
+            TensorData::F32(v) => copy_into!(F32, recycled_f32, v),
+            TensorData::F16(v) => copy_into!(F16, recycled_f16, v),
+            TensorData::I8(v) => copy_into!(I8, recycled_i8, v),
+            TensorData::U8(v) => copy_into!(U8, recycled_u8, v),
+            TensorData::I32(v) => copy_into!(I32, recycled_i32, v),
+            TensorData::I64(v) => copy_into!(I64, recycled_i64, v),
+            TensorData::Bool(v) => copy_into!(Bool, recycled_bool, v),
+        };
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+}
+
+/// Map every element of `src` to f32 and feed it through `f` into `out`
+/// — the per-source conversions are exactly [`Tensor::to_f32_vec`]'s,
+/// minus its intermediate allocation.
+fn map_to_f32<T>(src: &TensorData, out: &mut Vec<T>, f: impl Fn(f32) -> T) {
+    match src {
+        TensorData::F32(v) => out.extend(v.iter().map(|&x| f(x))),
+        TensorData::F16(v) => out.extend(v.iter().map(|x| f(x.to_f32()))),
+        TensorData::I8(v) => out.extend(v.iter().map(|&x| f(x as f32))),
+        TensorData::U8(v) => out.extend(v.iter().map(|&x| f(x as f32))),
+        TensorData::I32(v) => out.extend(v.iter().map(|&x| f(x as f32))),
+        TensorData::I64(v) => out.extend(v.iter().map(|&x| f(x as f32))),
+        TensorData::Bool(v) => out.extend(v.iter().map(|&x| f(x as u8 as f32))),
+    }
+}
+
+// --- recycled-storage helpers ---------------------------------------------
+//
+// Each takes the storage of a retired tensor (from the execution plan's
+// ScratchArena or a caller handing back last run's outputs) and returns an
+// EMPTY Vec of the requested element type with that buffer's capacity when
+// the dtype matches — so `extend`/`resize` up to the previous length
+// performs no heap allocation. On a dtype mismatch (or no recycled tensor)
+// a fresh Vec with `cap` reserved is returned; that happens once per
+// (slot, shape) and is the "first request warms the arena" cost.
+
+macro_rules! recycled_fn {
+    ($name:ident, $variant:ident, $ty:ty) => {
+        /// See the module note on recycled-storage helpers.
+        pub fn $name(src: Option<Tensor>, cap: usize) -> Vec<$ty> {
+            match src.map(Tensor::into_data) {
+                Some(TensorData::$variant(mut v)) => {
+                    v.clear();
+                    v.reserve(cap);
+                    v
+                }
+                _ => Vec::with_capacity(cap),
+            }
+        }
+    };
+}
+
+recycled_fn!(recycled_f32, F32, f32);
+recycled_fn!(recycled_f16, F16, F16);
+recycled_fn!(recycled_i8, I8, i8);
+recycled_fn!(recycled_u8, U8, u8);
+recycled_fn!(recycled_i32, I32, i32);
+recycled_fn!(recycled_i64, I64, i64);
+recycled_fn!(recycled_bool, Bool, bool);
+
+/// [`recycled_i32`] pre-sized to `n` zeros — the GEMM output form (the
+/// kernels overwrite every element, the zeroing just keeps the buffer
+/// initialized for the remainder paths).
+pub fn recycled_i32_zeroed(src: Option<Tensor>, n: usize) -> Vec<i32> {
+    let mut v = recycled_i32(src, n);
+    v.resize(n, 0);
+    v
+}
+
+/// [`recycled_f32`] pre-sized to `n` zeros.
+pub fn recycled_f32_zeroed(src: Option<Tensor>, n: usize) -> Vec<f32> {
+    let mut v = recycled_f32(src, n);
+    v.resize(n, 0.0);
+    v
+}
+
+/// [`recycled_i8`] pre-sized to `n` zeros (the i8 im2col scratch form).
+pub fn recycled_i8_zeroed(src: Option<Tensor>, n: usize) -> Vec<i8> {
+    let mut v = recycled_i8(src, n);
+    v.resize(n, 0);
+    v
 }
 
 /// Compute the broadcast result shape per ONNX/NumPy multidirectional
-/// broadcasting rules.
-pub fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>, TensorError> {
+/// broadcasting rules, as an (inline, allocation-free for rank <=
+/// [`SHAPE_INLINE`]) [`Shape`] — the form the elementwise hot path uses.
+pub fn broadcast_dims(a: &[usize], b: &[usize]) -> Result<Shape, TensorError> {
     let rank = a.len().max(b.len());
-    let mut out = vec![0usize; rank];
+    let mut out = Shape::empty();
     for i in 0..rank {
         let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
         let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
-        out[i] = if da == db {
+        let d = if da == db {
             da
         } else if da == 1 {
             db
@@ -522,8 +797,14 @@ pub fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>, TensorErr
                 b: b.to_vec(),
             });
         };
+        out.push(d);
     }
     Ok(out)
+}
+
+/// [`broadcast_dims`] as a `Vec` (compatibility form).
+pub fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>, TensorError> {
+    Ok(broadcast_dims(a, b)?.to_vec())
 }
 
 /// Row-major strides of a shape (in elements).
@@ -662,6 +943,73 @@ mod tests {
         // Rank-0 parts are rejected, not a panic.
         assert!(Tensor::concat_rows(&[Tensor::scalar_f32(1.0)]).is_err());
         assert_eq!(Tensor::scalar_f32(1.0).row_elems(), 1);
+    }
+
+    #[test]
+    fn shape_inline_and_heap_agree() {
+        let s = Shape::from_slice(&[2, 3, 4]);
+        assert_eq!(s.as_slice(), &[2, 3, 4]);
+        assert_eq!(s.numel(), 24);
+        let mut s2 = Shape::empty();
+        for d in [2usize, 3, 4] {
+            s2.push(d);
+        }
+        assert_eq!(s, s2);
+        // Past SHAPE_INLINE dims the shape promotes to heap storage and
+        // still compares equal by dims.
+        let long: Vec<usize> = (1..=SHAPE_INLINE + 2).collect();
+        let heap = Shape::from_slice(&long);
+        let mut pushed = Shape::empty();
+        for &d in &long {
+            pushed.push(d);
+        }
+        assert_eq!(heap, pushed);
+        assert_eq!(heap.as_slice(), &long[..]);
+    }
+
+    #[test]
+    fn recycled_buffers_reuse_matching_dtype() {
+        let t = Tensor::from_i32(&[4], vec![1, 2, 3, 4]).unwrap();
+        let v = recycled_i32(Some(t), 4);
+        assert!(v.is_empty());
+        assert!(v.capacity() >= 4);
+        // Mismatched dtype falls back to a fresh buffer.
+        let t = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+        let v = recycled_i32(Some(t), 8);
+        assert!(v.is_empty());
+        assert!(v.capacity() >= 8);
+        let z = recycled_i32_zeroed(None, 3);
+        assert_eq!(z, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn cast_recycled_matches_cast() {
+        let t = Tensor::from_i32(&[3], vec![-7, 0, 42]).unwrap();
+        for to in [DType::F32, DType::F16, DType::I8, DType::U8, DType::I64, DType::Bool] {
+            let plain = t.cast(to);
+            let spare = Tensor::from_f32(&[5], vec![9.0; 5]).unwrap();
+            let rec = t.cast_recycled(to, Some(spare));
+            assert_eq!(plain, rec, "cast to {to}");
+        }
+        let f = Tensor::from_f32(&[2], vec![1.5, -2.5]).unwrap();
+        for to in [DType::I8, DType::U8, DType::I32, DType::I64] {
+            assert_eq!(f.cast(to), f.cast_recycled(to, None), "f32 cast to {to}");
+        }
+    }
+
+    #[test]
+    fn clone_recycled_matches_clone() {
+        let t = Tensor::from_i8(&[2, 2], vec![1, -2, 3, -4]).unwrap();
+        let spare = Tensor::from_i8(&[9], vec![0; 9]).unwrap();
+        assert_eq!(t.clone(), t.clone_recycled(Some(spare)));
+        assert_eq!(t.clone(), t.clone_recycled(None));
+    }
+
+    #[test]
+    fn quantized_scalar_reads_without_alloc_path() {
+        assert_eq!(Tensor::scalar_i8(-3).quantized_scalar_i32().unwrap(), -3);
+        assert_eq!(Tensor::scalar_u8(200).quantized_scalar_i32().unwrap(), 200);
+        assert!(Tensor::scalar_f32(1.0).quantized_scalar_i32().is_err());
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Allocation-regression proof for the scratch planner: after the first
+//! `Session::run_into` at a given batch size, subsequent runs at that
+//! batch size perform **zero heap allocations** on the serial planned
+//! path.
+//!
+//! Mechanism: a counting `#[global_allocator]` gated on a thread-local
+//! flag, so only allocations made BY THE MEASURED CALL on the test
+//! thread are counted (idle pool workers, the test harness, and TLS
+//! teardown can't pollute the count). This file holds a single test for
+//! exactly that reason — libtest running a second test concurrently
+//! would be harmless for correctness but could confuse a debugging
+//! session reading the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use pqdl::interp::Session;
+use pqdl::onnx::ir::Attr;
+use pqdl::onnx::{batched, GraphBuilder};
+use pqdl::tensor::{DType, Tensor};
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static COUNT_HERE: Cell<bool> = const { Cell::new(false) };
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn tick() {
+        // try_with: never panic inside the allocator (TLS teardown).
+        if COUNT_HERE.try_with(|c| c.get()).unwrap_or(false) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::tick();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::tick();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::tick();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // Frees are not counted: recycling parks buffers instead of
+        // freeing them, but a steady-state drop would not be a leak bug.
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+/// Count allocations performed by `f` on this thread.
+fn counted<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNT_HERE.with(|c| c.set(true));
+    let r = f();
+    COUNT_HERE.with(|c| c.set(false));
+    (ALLOCS.load(Ordering::SeqCst), r)
+}
+
+/// The paper's Figure-1 serving chain: MatMulInteger (prebound + packed)
+/// -> Add bias -> Cast FLOAT -> Mul(Quant_scale) -> Mul(Quant_shift) ->
+/// QuantizeLinear. Every kernel on it has a recycled fast path.
+fn fig1_like() -> pqdl::onnx::ir::Model {
+    let mut b = GraphBuilder::new("alloc_fig1");
+    b.input("x", DType::I8, &batched(&[4]));
+    b.init("w", Tensor::from_i8(&[4, 2], vec![1, 2, 3, 4, 5, 6, 7, 8]).unwrap());
+    b.init("bias", Tensor::from_i32(&[2], vec![100, -100]).unwrap());
+    b.init("quant_scale", Tensor::scalar_f32(3.0));
+    b.init("quant_shift", Tensor::scalar_f32(1.0 / 8.0));
+    b.init("q_one", Tensor::scalar_f32(1.0));
+    b.init("q_zp", Tensor::scalar_i8(0));
+    let acc = b.node("MatMulInteger", &["x", "w"], &[]);
+    let accb = b.node("Add", &[&acc, "bias"], &[]);
+    let f = b.node("Cast", &[&accb], &[("to", Attr::Str("FLOAT".into()))]);
+    let m1 = b.node("Mul", &[&f, "quant_scale"], &[]);
+    let m2 = b.node("Mul", &[&m1, "quant_shift"], &[]);
+    let y = b.node("QuantizeLinear", &[&m2, "q_one", "q_zp"], &[]);
+    b.output(&y, DType::I8, &batched(&[2]));
+    b.finish_model()
+}
+
+fn batch_input(batch: usize, seed: u8) -> Tensor {
+    let data: Vec<i8> = (0..batch * 4)
+        .map(|i| ((i as u8).wrapping_mul(37).wrapping_add(seed)) as i8)
+        .collect();
+    Tensor::from_i8(&[batch, 4], data).unwrap()
+}
+
+#[test]
+fn second_run_at_fixed_batch_allocates_nothing() {
+    // Sanity: the counter actually counts.
+    let (n, _) = counted(|| {
+        let v: Vec<u8> = Vec::with_capacity(128);
+        std::hint::black_box(&v);
+    });
+    assert!(n >= 1, "counting allocator is not engaged");
+
+    let sess = Session::new(fig1_like()).unwrap().with_parallelism(false);
+    let x8 = batch_input(8, 3);
+    let expected8 = sess.run_unplanned(&[("x", x8.clone())]).unwrap();
+
+    // Run 1: warms the arena (allocates every buffer once) and fills
+    // `outs` whose storage run 2 recycles.
+    let mut outs = Vec::new();
+    sess.run_into(&[("x", &x8)], &mut outs).unwrap();
+    assert_eq!(outs, expected8, "run 1 output");
+
+    // Run 2 at the same batch size: the acceptance criterion — ZERO
+    // heap allocations on the hot path.
+    let (allocs, result) = counted(|| sess.run_into(&[("x", &x8)], &mut outs));
+    result.unwrap();
+    assert_eq!(outs, expected8, "run 2 output");
+    assert_eq!(
+        allocs, 0,
+        "second run at a fixed batch size must not allocate (steady-state arena)"
+    );
+
+    // And it stays at zero (run 3, different input values, same shape).
+    let x8b = batch_input(8, 111);
+    let expected8b = sess.run_unplanned(&[("x", x8b.clone())]).unwrap();
+    let (allocs, result) = counted(|| sess.run_into(&[("x", &x8b)], &mut outs));
+    result.unwrap();
+    assert_eq!(outs, expected8b, "run 3 output");
+    assert_eq!(allocs, 0, "third run must not allocate either");
+
+    // A batch-size change may allocate once (buffers re-size)...
+    let x3 = batch_input(3, 7);
+    let expected3 = sess.run_unplanned(&[("x", x3.clone())]).unwrap();
+    sess.run_into(&[("x", &x3)], &mut outs).unwrap();
+    assert_eq!(outs, expected3, "post-resize output");
+    // ...after which the new size is steady-state again. (Shrinking
+    // reuses capacity, so this holds immediately.)
+    let (allocs, result) = counted(|| sess.run_into(&[("x", &x3)], &mut outs));
+    result.unwrap();
+    assert_eq!(outs, expected3, "steady small-batch output");
+    assert_eq!(allocs, 0, "steady state at the new batch size");
+}

@@ -1,0 +1,120 @@
+//! Property tests for the cache-blocked packed int8 GEMM: across random
+//! shapes — explicitly including k % 4 != 0, n smaller than one panel
+//! (GEMM_NR), m not a multiple of the register tile (GEMM_MR), and k
+//! crossing the KC block boundary — the packed kernels must match a
+//! naive triple loop bit for bit, serial and pool-dispatched alike.
+
+use pqdl::ops::matmul::{
+    gemm_i8_i32, gemm_i8_i32_par, gemm_i8_packed, gemm_i8_packed_a, gemm_i8_packed_par,
+    PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR,
+};
+use pqdl::parallel::ThreadPool;
+use pqdl::proptest_util::{run_prop, Pair, RangeUsize};
+use pqdl::train::Rng;
+
+/// The oracle: C[i,j] = sum_k A[i,k] * B[k,j], ascending k, plain i32.
+fn naive(a: &[i8], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += a[i * k + kk] as i32 * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn rand_i8(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.i8()).collect()
+}
+
+#[test]
+fn packed_kernels_match_naive_triple_loop() {
+    let shapes = Pair(
+        Pair(RangeUsize { lo: 1, hi: 9 }, RangeUsize { lo: 1, hi: 70 }),
+        RangeUsize { lo: 1, hi: 21 },
+    );
+    run_prop(
+        "packed_gemm_vs_naive",
+        &shapes,
+        0x9ACC_ED,
+        60,
+        |&((m, k), n)| {
+            let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
+            let a = rand_i8(&mut rng, m * k);
+            let b8 = rand_i8(&mut rng, k * n);
+            let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+            let want = naive(&a, &bw, m, k, n);
+
+            let bp = PackedB::pack(&bw, k, n).ok_or("PackedB refused i8 data")?;
+            let mut got = vec![0i32; m * n];
+            gemm_i8_packed(&a, &bp, m, &mut got);
+            if got != want {
+                return Err(format!("packed B mismatch at ({m},{k},{n})"));
+            }
+
+            let aw: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+            let ap = PackedA::pack(&aw, m, k).ok_or("PackedA refused i8 data")?;
+            let mut got_a = vec![0i32; m * n];
+            gemm_i8_packed_a(&ap, &b8, n, &mut got_a);
+            if got_a != want {
+                return Err(format!("packed A mismatch at ({m},{k},{n})"));
+            }
+
+            // The pre-existing unpacked kernel stays the cross-check.
+            let mut got_u = vec![0i32; m * n];
+            gemm_i8_i32(&a, &bw, m, k, n, &mut got_u);
+            if got_u != want {
+                return Err(format!("unpacked kernel mismatch at ({m},{k},{n})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_gemm_crosses_kc_block_boundary() {
+    // k spanning one full KC block plus a remainder, n rag below/above a
+    // panel, m ragged vs the register tile.
+    for (m, k, n) in [
+        (GEMM_MR + 1, GEMM_KC + 5, GEMM_NR - 1),
+        (2 * GEMM_MR - 1, GEMM_KC, GEMM_NR + 3),
+        (1, 2 * GEMM_KC + 1, 1),
+    ] {
+        let mut rng = Rng::new(k as u64 * 31 + n as u64);
+        let a = rand_i8(&mut rng, m * k);
+        let b8 = rand_i8(&mut rng, k * n);
+        let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+        let want = naive(&a, &bw, m, k, n);
+        let bp = PackedB::pack(&bw, k, n).unwrap();
+        let mut got = vec![0i32; m * n];
+        gemm_i8_packed(&a, &bp, m, &mut got);
+        assert_eq!(want, got, "({m},{k},{n})");
+    }
+}
+
+#[test]
+fn packed_parallel_bit_exact_across_pool_sizes() {
+    // Large enough to clear GEMM_PAR_MIN_WORK so dispatch engages.
+    let (m, k, n) = (64usize, 48, 33);
+    let mut rng = Rng::new(0xBADu64);
+    let a = rand_i8(&mut rng, m * k);
+    let b8 = rand_i8(&mut rng, k * n);
+    let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+    let bp = PackedB::pack(&bw, k, n).unwrap();
+    let mut serial = vec![0i32; m * n];
+    gemm_i8_packed(&a, &bp, m, &mut serial);
+    assert_eq!(serial, naive(&a, &bw, m, k, n));
+    for threads in [1usize, 2, 3, 8] {
+        let pool = ThreadPool::new(threads);
+        let mut par = vec![0i32; m * n];
+        gemm_i8_packed_par(&pool, &a, &bp, m, &mut par);
+        assert_eq!(serial, par, "{threads} threads (packed)");
+        let mut par_u = vec![0i32; m * n];
+        gemm_i8_i32_par(&pool, &a, &bw, m, k, n, &mut par_u);
+        assert_eq!(serial, par_u, "{threads} threads (unpacked)");
+    }
+}
