@@ -153,6 +153,9 @@ fn main() -> anyhow::Result<()> {
         let coord = CoordinatorBuilder::new(ServerConfig {
             max_batch,
             max_wait: Duration::from_micros(max_wait_us),
+            // One replica: this section isolates the batching policy.
+            replicas: 1,
+            ..ServerConfig::default()
         })
         .register("digits", Arc::new(InterpBackend::new(preq.clone())?))
         .register(

@@ -35,6 +35,10 @@ fn main() -> anyhow::Result<()> {
     let mut builder = CoordinatorBuilder::new(ServerConfig {
         max_batch: 8,
         max_wait: Duration::from_micros(500),
+        // Default `replicas: 0` = auto — the machine-level budget is
+        // split across the 12-18 lanes this demo registers, so the
+        // thread count stays sane without hand-tuning.
+        ..ServerConfig::default()
     });
     let mut lanes = Vec::new();
     for fig in Figure::ALL {

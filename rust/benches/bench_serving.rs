@@ -150,6 +150,9 @@ fn main() {
             CoordinatorBuilder::new(ServerConfig {
                 max_batch,
                 max_wait: Duration::from_micros(wait_us),
+                // One replica so the sweep isolates the batching policy.
+                replicas: 1,
+                ..ServerConfig::default()
             })
             .register("digits", Arc::new(InterpBackend::new(preq.clone()).unwrap()))
             .start(),
@@ -182,6 +185,127 @@ fn main() {
             stats.e2e.quantile_us(0.50),
             stats.e2e.quantile_us(0.95),
             stats.e2e.quantile_us(0.99),
+        );
+        coord.shutdown();
+    }
+
+    // --- replica sweep: same closed-loop load, scaling lane replicas -----
+    // Replicas share ONE compiled plan (Session::fork_replica); the sweep
+    // shows the pool soaking up concurrency the single-worker lane
+    // serialized. Closed-loop: req/s is the end-to-end acceptance number.
+    section("replica sweep (16 closed-loop clients x 200 reqs, max_batch 8, wait 200us)");
+    println!(
+        "{:<12} | {:>9} | {:>10} | {:>10} | {:>8} | {:>8}",
+        "replicas", "req/s", "mean reqs", "mean rows", "p50 us", "p99 us"
+    );
+    let mut replica_rps: Vec<(usize, f64)> = Vec::new();
+    for replicas in [1usize, 2, 4, 8] {
+        let coord = Arc::new(
+            CoordinatorBuilder::new(ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                replicas,
+                ..ServerConfig::default()
+            })
+            .register("digits", Arc::new(InterpBackend::new(preq.clone()).unwrap()))
+            .start(),
+        );
+        let n_clients = 16;
+        let per_client = 200;
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..n_clients {
+            let coord = coord.clone();
+            let train = train.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per_client {
+                    let (x, _) = train.sample((c * per_client + i) % train.len());
+                    let t = Tensor::from_f32(&[1, 64], x.to_vec()).unwrap();
+                    coord.infer("digits", t).unwrap().output.unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let rps = (n_clients * per_client) as f64 / elapsed.as_secs_f64();
+        let stats = coord.metrics.snapshot("digits").unwrap();
+        println!(
+            "{replicas:<12} | {rps:>9.0} | {:>10.2} | {:>10.2} | {:>8} | {:>8}",
+            stats.mean_batch(),
+            stats.mean_rows(),
+            stats.e2e.quantile_us(0.50),
+            stats.e2e.quantile_us(0.99),
+        );
+        json.record_raw(
+            &format!("replicas {replicas}"),
+            n_clients * per_client,
+            rps,
+            stats.e2e.quantile_us(0.50) as f64,
+            stats.e2e.quantile_us(0.99) as f64,
+        );
+        replica_rps.push((replicas, rps));
+        coord.shutdown();
+    }
+    if let (Some((_, r1)), Some((_, r4))) = (
+        replica_rps.iter().find(|(r, _)| *r == 1),
+        replica_rps.iter().find(|(r, _)| *r == 4),
+    ) {
+        println!("replicas=4 vs replicas=1 speedup: {:.2}x", r4 / r1);
+    }
+
+    // --- saturation: open-loop burst against a bounded queue --------------
+    // Admission control under overload: a burst far past queue_depth must
+    // be shed with QueueFull (never queued unboundedly), accepted work
+    // still completes, and the shed rate is reported per configuration.
+    section("saturation burst (open-loop 4000-request burst, queue_depth 128, deadline 50ms)");
+    println!(
+        "{:<12} | {:>9} | {:>9} | {:>10} | {:>10} | {:>9}",
+        "replicas", "ok", "shed", "queue-full", "deadline", "shed rate"
+    );
+    for replicas in [1usize, 4] {
+        let coord = Arc::new(
+            CoordinatorBuilder::new(ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+                replicas,
+                queue_depth: 128,
+                deadline: Some(Duration::from_millis(50)),
+            })
+            .register("digits", Arc::new(InterpBackend::new(preq.clone()).unwrap()))
+            .start(),
+        );
+        let burst = 4000;
+        let mut rxs = Vec::with_capacity(burst);
+        for i in 0..burst {
+            let (x, _) = train.sample(i % train.len());
+            let t = Tensor::from_f32(&[1, 64], x.to_vec()).unwrap();
+            rxs.push(coord.submit("digits", t).unwrap());
+        }
+        let mut ok = 0usize;
+        let mut shed = 0usize;
+        for rx in rxs {
+            let resp = rx.recv().expect("every request gets one response");
+            if resp.output.is_ok() {
+                ok += 1;
+            } else {
+                shed += 1;
+            }
+        }
+        let stats = coord.metrics.snapshot("digits").unwrap();
+        println!(
+            "{replicas:<12} | {ok:>9} | {shed:>9} | {:>10} | {:>10} | {:>8.1}%",
+            stats.shed_queue_full,
+            stats.shed_deadline,
+            100.0 * stats.shed_rate(),
+        );
+        json.record_raw(
+            &format!("saturation r{replicas} shed_rate_pct"),
+            burst,
+            100.0 * stats.shed_rate(),
+            stats.shed_queue_full as f64,
+            stats.shed_deadline as f64,
         );
         coord.shutdown();
     }

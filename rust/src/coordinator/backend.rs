@@ -4,19 +4,39 @@
 //! exactly the portability story of the paper (one model file, many
 //! inference environments).
 
+use super::validate::InputSpec;
 use crate::hwsim::{CostReport, HwConfig, HwModule};
 use crate::interp::Session;
 use crate::onnx::Model;
 use crate::runtime::PjrtService;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// A batched inference engine for one model.
 pub trait Backend: Send + Sync {
     fn name(&self) -> &str;
     /// Execute a batch (axis 0 = batch).
     fn run_batch(&self, input: &Tensor) -> Result<Tensor>;
+
+    /// A cheap per-replica handle over the SAME compiled state, owning
+    /// only its own mutable scratch — what a lane spawns one of per
+    /// worker. `None` (the default) means the backend has no per-replica
+    /// state worth isolating and every replica may share `self` directly;
+    /// `run_batch` must then tolerate concurrent callers (all three
+    /// built-in backends do).
+    fn fork_replica(&self) -> Option<Arc<dyn Backend>> {
+        None
+    }
+
+    /// The admission contract for this lane, when the backend can state
+    /// one: the coordinator checks each request against it at `submit`,
+    /// rejecting malformed tensors with a typed `InvalidInput` BEFORE
+    /// they can poison a fused batch. `None` disables admission
+    /// validation (requests then fail, batched, at execution).
+    fn input_spec(&self) -> Option<InputSpec> {
+        None
+    }
 }
 
 /// Interpreter backend ("standard tool" path). `Session::new` compiled
@@ -30,10 +50,12 @@ pub trait Backend: Send + Sync {
 pub struct InterpBackend {
     session: Session,
     input_name: String,
+    spec: Option<InputSpec>,
 }
 
 impl InterpBackend {
     pub fn new(model: Model) -> Result<InterpBackend> {
+        let spec = InputSpec::from_model(&model);
         let session = Session::new(model).map_err(|e| anyhow!("{e}"))?;
         let input_name = session
             .model()
@@ -45,6 +67,7 @@ impl InterpBackend {
         Ok(InterpBackend {
             session,
             input_name,
+            spec,
         })
     }
 }
@@ -61,12 +84,29 @@ impl Backend for InterpBackend {
             .map_err(|e| anyhow!("{e}"))?;
         Ok(out.remove(0))
     }
+
+    /// Replicas share one `CompiledPlan` (and the model's weights) via
+    /// [`Session::fork_replica`] — each costs a handful of `Arc` bumps
+    /// plus the scratch arenas it warms up, and replicas never contend on
+    /// each other's arena pool locks.
+    fn fork_replica(&self) -> Option<Arc<dyn Backend>> {
+        Some(Arc::new(InterpBackend {
+            session: self.session.fork_replica(),
+            input_name: self.input_name.clone(),
+            spec: self.spec.clone(),
+        }))
+    }
+
+    fn input_spec(&self) -> Option<InputSpec> {
+        self.spec.clone()
+    }
 }
 
 /// Hardware-simulator backend (integer-only path) with accumulated cost.
 pub struct HwSimBackend {
     module: HwModule,
     total_cost: Mutex<CostReport>,
+    spec: Option<InputSpec>,
 }
 
 impl HwSimBackend {
@@ -74,6 +114,7 @@ impl HwSimBackend {
         Ok(HwSimBackend {
             module: HwModule::compile(model, cfg).map_err(|e| anyhow!("{e}"))?,
             total_cost: Mutex::new(CostReport::default()),
+            spec: InputSpec::from_model(model),
         })
     }
 
@@ -92,6 +133,14 @@ impl Backend for HwSimBackend {
         let (out, cost) = self.module.run(input).map_err(|e| anyhow!("{e}"))?;
         self.total_cost.lock().unwrap().add(&cost);
         Ok(out)
+    }
+
+    // No `fork_replica`: the module is stateless during `run` and the
+    // cost accumulator is meant to aggregate across all replicas of the
+    // lane, so replicas share `self`.
+
+    fn input_spec(&self) -> Option<InputSpec> {
+        self.spec.clone()
     }
 }
 
@@ -163,7 +212,7 @@ impl Backend for PjrtBackend {
                 outs.push(slice_batch(&out, take)?);
                 off += take;
             }
-            concat_batch(&outs)
+            concat_batch_owned(&outs)
         }
     }
 }
@@ -175,7 +224,16 @@ impl Backend for PjrtBackend {
 // share one implementation.
 
 /// Concatenate along axis 0. All tensors must share dtype + row shape.
-pub fn concat_batch(tensors: &[Tensor]) -> Result<Tensor> {
+/// Takes references: fusion only reads its parts, so the serving worker
+/// can fuse queued request tensors without cloning a single one (the
+/// fused buffer is the only allocation — see `tests/alloc_regression.rs`).
+pub fn concat_batch(tensors: &[&Tensor]) -> Result<Tensor> {
+    Ok(Tensor::concat_rows_refs(tensors)?)
+}
+
+/// [`concat_batch`] over owned tensors, for callers that already hold a
+/// `Vec<Tensor>` (the PJRT chunking path).
+pub fn concat_batch_owned(tensors: &[Tensor]) -> Result<Tensor> {
     Ok(Tensor::concat_rows(tensors)?)
 }
 
@@ -215,7 +273,7 @@ pub fn pad_batch(t: &Tensor, target: usize) -> Result<Tensor> {
     let mut shape = vec![target - n];
     shape.extend_from_slice(&t.shape()[1..]);
     let zeros = Tensor::zeros(t.dtype(), &shape);
-    concat_batch(&[t.clone(), zeros])
+    concat_batch(&[t, &zeros])
 }
 
 #[cfg(test)]
@@ -227,20 +285,23 @@ mod tests {
     fn concat_split_round_trip() {
         let a = Tensor::from_i8(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
         let b = Tensor::from_i8(&[1, 3], vec![7, 8, 9]).unwrap();
-        let c = concat_batch(&[a.clone(), b.clone()]).unwrap();
+        let c = concat_batch(&[&a, &b]).unwrap();
         assert_eq!(c.shape(), &[3, 3]);
         let parts = split_batch(&c, &[2, 1]).unwrap();
         assert_eq!(parts[0], a);
         assert_eq!(parts[1], b);
+        // The owned-slice form agrees.
+        let c2 = concat_batch_owned(&[a, b]).unwrap();
+        assert_eq!(c, c2);
     }
 
     #[test]
     fn concat_rejects_mismatch() {
         let a = Tensor::from_i8(&[1, 3], vec![1, 2, 3]).unwrap();
         let b = Tensor::from_i8(&[1, 2], vec![1, 2]).unwrap();
-        assert!(concat_batch(&[a.clone(), b]).is_err());
+        assert!(concat_batch(&[&a, &b]).is_err());
         let c = Tensor::from_u8(&[1, 3], vec![1, 2, 3]).unwrap();
-        assert!(concat_batch(&[a, c]).is_err());
+        assert!(concat_batch(&[&a, &c]).is_err());
     }
 
     #[test]
@@ -268,6 +329,22 @@ mod tests {
                 &whole.as_i8().unwrap()[i * 32..(i + 1) * 32]
             );
         }
+    }
+
+    #[test]
+    fn interp_replica_is_bit_identical_and_keeps_the_spec() {
+        let fig = Figure::Fig1FcTwoMul;
+        let be = InterpBackend::new(fig.model()).unwrap();
+        let replica = be.fork_replica().expect("interp forks replicas");
+        let spec = replica.input_spec().expect("interp lanes have a spec");
+        let x = fig.input(3, 5);
+        assert!(spec.check(&x).is_ok());
+        assert_eq!(
+            be.run_batch(&x).unwrap(),
+            replica.run_batch(&x).unwrap()
+        );
+        let bad = Tensor::from_f32(&[1, 64], vec![0.0; 64]).unwrap();
+        assert!(spec.check(&bad).is_err());
     }
 
     #[test]

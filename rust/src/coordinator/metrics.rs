@@ -69,24 +69,76 @@ impl LatencyHist {
     }
 }
 
+/// Why the coordinator shed a request without executing it. Mirrors
+/// `server::RejectReason` shorn of payloads (metrics count, they don't
+/// describe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedKind {
+    QueueFull,
+    DeadlineExceeded,
+    InvalidInput,
+}
+
 /// Per-model serving statistics.
+///
+/// Two distinct batch notions are tracked (they diverge as soon as a
+/// client submits a multi-row tensor): `batch_requests_sum` counts fused
+/// REQUESTS per execution, `batch_rows_sum` counts fused ROWS — the old
+/// single `batch_size` conflated them (requests in the metrics, rows in
+/// the response).
 #[derive(Clone, Debug, Default)]
 pub struct ModelStats {
+    /// Requests that reached execution (shed requests are NOT counted
+    /// here — see the `shed_*` counters).
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
-    pub batch_size_sum: u64,
+    /// Sum over batches of fused request counts.
+    pub batch_requests_sum: u64,
+    /// Sum over batches of fused row counts (axis-0 extents).
+    pub batch_rows_sum: u64,
+    /// Admission-shed: lane queue was at its depth cap.
+    pub shed_queue_full: u64,
+    /// Shed at dequeue: the request's deadline had already passed.
+    pub shed_deadline: u64,
+    /// Admission-rejected: dtype/rank/dims failed the lane's `InputSpec`.
+    pub shed_invalid: u64,
     pub queue: LatencyHist,
     pub exec: LatencyHist,
     pub e2e: LatencyHist,
 }
 
 impl ModelStats {
+    /// Mean fused requests per executed batch.
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {
-            self.batch_size_sum as f64 / self.batches as f64
+            self.batch_requests_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean fused rows per executed batch.
+    pub fn mean_rows(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_rows_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Total requests shed without execution, all causes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_full + self.shed_deadline + self.shed_invalid
+    }
+
+    /// Shed fraction of everything submitted (shed + executed).
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.requests + self.shed_total();
+        if total == 0 {
+            0.0
+        } else {
+            self.shed_total() as f64 / total as f64
         }
     }
 }
@@ -98,27 +150,42 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Record one executed batch: `requests` fused requests spanning
+    /// `rows` axis-0 rows.
     pub fn record_batch(
         &self,
         model: &str,
-        batch: usize,
+        requests: usize,
+        rows: usize,
         queue_times: &[Duration],
         exec: Duration,
         errored: bool,
     ) {
         let mut m = self.inner.lock().unwrap();
         let s = m.entry(model.to_string()).or_default();
-        s.requests += batch as u64;
+        s.requests += requests as u64;
         s.batches += 1;
-        s.batch_size_sum += batch as u64;
+        s.batch_requests_sum += requests as u64;
+        s.batch_rows_sum += rows as u64;
         if errored {
-            s.errors += batch as u64;
+            s.errors += requests as u64;
         }
         for &q in queue_times {
             s.queue.record(q);
             s.e2e.record(q + exec);
         }
         s.exec.record(exec);
+    }
+
+    /// Record one request shed without execution.
+    pub fn record_shed(&self, model: &str, kind: ShedKind) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(model.to_string()).or_default();
+        match kind {
+            ShedKind::QueueFull => s.shed_queue_full += 1,
+            ShedKind::DeadlineExceeded => s.shed_deadline += 1,
+            ShedKind::InvalidInput => s.shed_invalid += 1,
+        }
     }
 
     pub fn snapshot(&self, model: &str) -> Option<ModelStats> {
@@ -137,12 +204,18 @@ impl Metrics {
         for model in self.models() {
             if let Some(s) = self.snapshot(&model) {
                 out.push_str(&format!(
-                    "{model}: {} reqs in {} batches (mean batch {:.2}, {} errors)\n  \
+                    "{model}: {} reqs in {} batches (mean {:.2} reqs / {:.2} rows per batch, \
+                     {} errors, shed {}: {} queue-full / {} deadline / {} invalid)\n  \
                      e2e p50 {}us p95 {}us p99 {}us max {}us | exec mean {:.0}us | queue mean {:.0}us\n",
                     s.requests,
                     s.batches,
                     s.mean_batch(),
+                    s.mean_rows(),
                     s.errors,
+                    s.shed_total(),
+                    s.shed_queue_full,
+                    s.shed_deadline,
+                    s.shed_invalid,
                     s.e2e.quantile_us(0.5),
                     s.e2e.quantile_us(0.95),
                     s.e2e.quantile_us(0.99),
@@ -174,8 +247,11 @@ mod tests {
     #[test]
     fn metrics_accumulate() {
         let m = Metrics::default();
+        // 4 single-row requests fused, then 2 requests spanning 7 rows
+        // (one of them multi-row): requests and rows diverge.
         m.record_batch(
             "fig1",
+            4,
             4,
             &[Duration::from_micros(5); 4],
             Duration::from_micros(100),
@@ -184,6 +260,7 @@ mod tests {
         m.record_batch(
             "fig1",
             2,
+            7,
             &[Duration::from_micros(5); 2],
             Duration::from_micros(80),
             false,
@@ -192,6 +269,31 @@ mod tests {
         assert_eq!(s.requests, 6);
         assert_eq!(s.batches, 2);
         assert_eq!(s.mean_batch(), 3.0);
+        assert_eq!(s.mean_rows(), 5.5);
         assert!(m.report().contains("fig1"));
+    }
+
+    #[test]
+    fn shed_counters_accumulate_by_kind() {
+        let m = Metrics::default();
+        m.record_shed("fig1", ShedKind::QueueFull);
+        m.record_shed("fig1", ShedKind::QueueFull);
+        m.record_shed("fig1", ShedKind::DeadlineExceeded);
+        m.record_shed("fig1", ShedKind::InvalidInput);
+        m.record_batch(
+            "fig1",
+            1,
+            1,
+            &[Duration::from_micros(5)],
+            Duration::from_micros(10),
+            false,
+        );
+        let s = m.snapshot("fig1").unwrap();
+        assert_eq!(s.shed_queue_full, 2);
+        assert_eq!(s.shed_deadline, 1);
+        assert_eq!(s.shed_invalid, 1);
+        assert_eq!(s.shed_total(), 4);
+        assert_eq!(s.shed_rate(), 0.8);
+        assert!(m.report().contains("shed 4"));
     }
 }

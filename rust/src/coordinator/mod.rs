@@ -1,11 +1,14 @@
 //! L3 serving coordinator.
 //!
-//! Thread-based (tokio is unavailable offline; a std-thread worker per
-//! model lane is the right shape for a CPU inference server anyway):
-//! request router + dynamic batcher ([`server`]), pluggable execution
-//! backends ([`backend`]: interpreter / hwsim / PJRT artifacts), serving
-//! metrics ([`metrics`]) and the cross-backend narrow-margins validation
-//! service ([`validate`]).
+//! Thread-based (tokio is unavailable offline; std-thread replica pools
+//! per model lane are the right shape for a CPU inference server
+//! anyway): request router + sharded dynamic batcher with admission
+//! control ([`server`]: bounded lane queues, N replicas per lane sharing
+//! one compiled plan, typed [`server::RejectReason`] shedding, graceful
+//! drain), pluggable execution backends ([`backend`]: interpreter /
+//! hwsim / PJRT artifacts), serving metrics ([`metrics`]) and the
+//! cross-backend narrow-margins validation service plus the per-lane
+//! admission contract ([`validate`]).
 
 pub mod backend;
 pub mod metrics;
@@ -13,9 +16,12 @@ pub mod server;
 pub mod validate;
 
 pub use backend::{
-    concat_batch, pad_batch, slice_batch, split_batch, Backend, HwSimBackend, InterpBackend,
-    PjrtBackend,
+    concat_batch, concat_batch_owned, pad_batch, slice_batch, split_batch, Backend, HwSimBackend,
+    InterpBackend, PjrtBackend,
 };
-pub use metrics::{LatencyHist, Metrics, ModelStats};
-pub use server::{Coordinator, CoordinatorBuilder, Response, ServerConfig};
-pub use validate::{validate, ValidationReport, ValidationRow};
+pub use metrics::{LatencyHist, Metrics, ModelStats, ShedKind};
+pub use server::{
+    default_replicas, Coordinator, CoordinatorBuilder, RejectReason, Response, ServeError,
+    ServerConfig,
+};
+pub use validate::{validate, InputSpec, ValidationReport, ValidationRow};

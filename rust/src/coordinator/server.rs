@@ -1,28 +1,67 @@
-//! The serving loop: per-model worker threads with dynamic batching.
+//! The serving loop: sharded replica pools with admission control.
 //!
-//! Size + deadline policy: a worker takes the first queued request,
-//! then keeps admitting requests until either `max_batch` is reached or
-//! `max_wait` has elapsed since the batch opened; the batch is fused
-//! along axis 0 (the models' symbolic `N`), executed once, and split
-//! back per request.
+//! Each model lane owns a **bounded** queue and N **replica** workers
+//! pulling from it (`ServerConfig::replicas`); interpreter replicas share
+//! one compiled plan via [`Session::fork_replica`](crate::interp::Session::fork_replica),
+//! so a replica costs a few `Arc` bumps plus the scratch it warms up.
+//!
+//! Admission control happens at [`Coordinator::submit`]: requests are
+//! validated against the lane's [`InputSpec`] (dtype/rank/fixed dims) and
+//! shed with a typed [`RejectReason`] when malformed, when the lane queue
+//! is at its depth cap, or — at dequeue — when their per-request deadline
+//! has already passed. A shed request still receives exactly one
+//! [`Response`], and nothing queues unboundedly. On lanes whose backend
+//! states an `InputSpec` (interpreter and hwsim do) a bad tensor is
+//! rejected alone and can never poison a fused batch; spec-less lanes
+//! (PJRT, whose artifacts carry no model signature) still fail such a
+//! batch at execution, with a typed `Exec` error.
+//!
+//! Size + deadline batching policy: a replica takes the first queued
+//! request, then keeps admitting while the TOTAL fused row count stays
+//! within `max_batch` (row counts are peeked before admission — a
+//! multi-row request that would overshoot is deferred to open the next
+//! batch) and `max_wait` has not elapsed; the batch is fused along axis 0
+//! (the models' symbolic `N`) without cloning any input, executed once,
+//! and split back per request.
+//!
+//! Shutdown is graceful by default: [`Coordinator::shutdown`] closes
+//! intake, drains every queued request, and joins the replicas;
+//! [`Coordinator::shutdown_now`] is the old hard stop (queued requests
+//! get channel errors).
 
 use super::backend::{concat_batch, split_batch, Backend};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ShedKind};
+use super::validate::InputSpec;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Maximum requests fused into one execution.
+    /// Maximum rows fused into one execution (a single request larger
+    /// than this still runs, alone).
     pub max_batch: usize,
     /// Maximum time a batch stays open waiting for more requests.
     pub max_wait: Duration,
+    /// Worker replicas per model lane, all pulling from the lane's shared
+    /// queue. Interpreter replicas share one compiled plan. `0` (the
+    /// default) means auto: the machine-level [`default_replicas`] budget
+    /// divided evenly across the registered lanes, so multi-model
+    /// coordinators do not oversubscribe the machine.
+    pub replicas: usize,
+    /// Lane queue depth cap: a submit finding this many requests queued
+    /// is shed immediately with [`RejectReason::QueueFull`].
+    pub queue_depth: usize,
+    /// Per-request deadline, measured from `submit`. A request whose
+    /// deadline has passed by the time a replica would execute it is shed
+    /// with [`RejectReason::DeadlineExceeded`] instead of running late.
+    /// `None` disables deadline shedding.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -30,40 +69,145 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            replicas: 0, // auto: default_replicas() split across lanes
+            queue_depth: 256,
+            deadline: None,
         }
     }
 }
 
-/// A completed inference.
+/// Machine-level replica budget backing the auto (`replicas: 0`)
+/// setting: half the machine's threads (the other half stays available
+/// to the kernel-level pool the replicas dispatch into for large
+/// batches), at least 1, capped at 8. [`CoordinatorBuilder::start`]
+/// divides it evenly across the registered lanes; an explicit
+/// `ServerConfig::replicas` value is taken per lane, verbatim.
+pub fn default_replicas() -> usize {
+    (crate::parallel::default_threads() / 2).clamp(1, 8)
+}
+
+/// Why the coordinator refused to execute a request. Every variant is a
+/// deliberate, immediate shed — the request was never run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The lane queue was at `ServerConfig::queue_depth`.
+    QueueFull,
+    /// The request's `ServerConfig::deadline` passed before a replica
+    /// could execute it.
+    DeadlineExceeded,
+    /// The tensor failed the lane's [`InputSpec`] (dtype/rank/dims); the
+    /// payload says exactly what mismatched.
+    InvalidInput(String),
+}
+
+impl RejectReason {
+    fn shed_kind(&self) -> ShedKind {
+        match self {
+            RejectReason::QueueFull => ShedKind::QueueFull,
+            RejectReason::DeadlineExceeded => ShedKind::DeadlineExceeded,
+            RejectReason::InvalidInput(_) => ShedKind::InvalidInput,
+        }
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "queue full"),
+            RejectReason::DeadlineExceeded => write!(f, "deadline exceeded"),
+            RejectReason::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+        }
+    }
+}
+
+/// What a request's `output` can fail with: a typed admission-control
+/// shed (the request never ran) or an execution error (it ran and the
+/// backend failed). Callers distinguishing the two is the point — shed
+/// load is a policy outcome to retry elsewhere, an `Exec` error is a bug
+/// or a poisoned lane to investigate.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum ServeError {
+    #[error("rejected: {0}")]
+    Rejected(RejectReason),
+    #[error("execution failed: {0}")]
+    Exec(String),
+}
+
+/// A completed inference (or a typed refusal to perform one).
 #[derive(Debug)]
 pub struct Response {
     pub id: u64,
-    pub output: Result<Tensor, String>,
-    /// Time spent queued before execution started.
+    pub output: Result<Tensor, ServeError>,
+    /// Time spent queued before execution started (for shed requests:
+    /// time queued until the shed).
     pub queue_time: Duration,
-    /// Execution wall time of the fused batch.
+    /// Execution wall time of the fused batch (zero for shed requests).
     pub exec_time: Duration,
-    /// Size of the batch this request was fused into.
-    pub batch_size: usize,
+    /// How many REQUESTS were fused into this request's batch (zero for
+    /// shed requests).
+    pub batch_requests: usize,
+    /// How many axis-0 ROWS the fused batch spanned (zero for shed
+    /// requests). Diverges from `batch_requests` as soon as any fused
+    /// request carries more than one row.
+    pub batch_rows: usize,
+}
+
+impl Response {
+    /// The typed rejection, when this response is a shed.
+    pub fn reject_reason(&self) -> Option<&RejectReason> {
+        match &self.output {
+            Err(ServeError::Rejected(r)) => Some(r),
+            _ => None,
+        }
+    }
+
+    fn rejected(id: u64, reason: RejectReason, queue_time: Duration) -> Response {
+        Response {
+            id,
+            output: Err(ServeError::Rejected(reason)),
+            queue_time,
+            exec_time: Duration::ZERO,
+            batch_requests: 0,
+            batch_rows: 0,
+        }
+    }
 }
 
 struct Request {
     id: u64,
     input: Tensor,
     enqueued: Instant,
+    /// `enqueued + ServerConfig::deadline`, when one is configured.
+    deadline: Option<Instant>,
     resp: mpsc::Sender<Response>,
 }
 
-struct ModelLane {
-    tx: mpsc::Sender<Request>,
+fn rows_of(t: &Tensor) -> usize {
+    t.shape().first().copied().unwrap_or(1)
 }
 
-/// The coordinator: routes requests to per-model batching workers.
+struct LaneState {
+    queue: VecDeque<Request>,
+    /// Intake open: false once a shutdown begins (graceful or hard).
+    open: bool,
+    /// Hard stop: replicas exit without draining the queue.
+    stop: bool,
+}
+
+/// One model lane: the bounded queue its replicas share, plus the
+/// admission contract checked at submit.
+struct Lane {
+    state: Mutex<LaneState>,
+    cv: Condvar,
+    spec: Option<InputSpec>,
+}
+
+/// The coordinator: routes requests to per-model replica pools.
 pub struct Coordinator {
-    lanes: HashMap<String, ModelLane>,
+    lanes: HashMap<String, Arc<Lane>>,
+    cfg: ServerConfig,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    shutdown: Arc<AtomicBool>,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -87,52 +231,122 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Spawn the workers and return the running coordinator.
+    /// Spawn the replica pools and return the running coordinator.
     pub fn start(self) -> Coordinator {
         let metrics = Arc::new(Metrics::default());
-        let shutdown = Arc::new(AtomicBool::new(false));
         let mut lanes = HashMap::new();
         let mut handles = Vec::new();
+        // replicas = 0 is the auto setting: split the machine-level
+        // budget across lanes so a many-model coordinator does not spawn
+        // lanes x budget threads.
+        let replicas = match self.config.replicas {
+            0 => (default_replicas() / self.backends.len().max(1)).max(1),
+            n => n,
+        };
         for (model, backend) in self.backends {
-            let (tx, rx) = mpsc::channel::<Request>();
-            let cfg = self.config.clone();
-            let m = metrics.clone();
-            let stop = shutdown.clone();
-            let model_name = model.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("lane-{model}"))
-                .spawn(move || batch_worker(rx, backend, cfg, m, stop, model_name))
-                .expect("spawning lane worker");
-            lanes.insert(model, ModelLane { tx });
-            handles.push(handle);
+            let lane = Arc::new(Lane {
+                state: Mutex::new(LaneState {
+                    queue: VecDeque::new(),
+                    open: true,
+                    stop: false,
+                }),
+                cv: Condvar::new(),
+                spec: backend.input_spec(),
+            });
+            for r in 0..replicas {
+                // Replica 0 serves through the registered backend; the
+                // rest through cheap forks sharing its compiled state
+                // (backends without per-replica state share directly).
+                let be = if r == 0 {
+                    backend.clone()
+                } else {
+                    backend.fork_replica().unwrap_or_else(|| backend.clone())
+                };
+                let lane = lane.clone();
+                let cfg = self.config.clone();
+                let m = metrics.clone();
+                let model_name = model.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("lane-{model}-r{r}"))
+                    .spawn(move || replica_worker(lane, be, cfg, m, model_name))
+                    .expect("spawning lane replica");
+                handles.push(handle);
+            }
+            lanes.insert(model, lane);
         }
         Coordinator {
             lanes,
+            cfg: self.config,
             metrics,
             next_id: AtomicU64::new(1),
-            shutdown,
             handles: Mutex::new(handles),
         }
     }
 }
 
 impl Coordinator {
-    /// Submit one request; returns a receiver for its response.
+    /// Submit one request; returns a receiver for its response. Every
+    /// accepted submit yields EXACTLY one response on the receiver — a
+    /// real output, an execution error, or a typed rejection (shed
+    /// requests are answered immediately). `Err` is returned only for an
+    /// unknown model or a lane already shut down.
     pub fn submit(&self, model: &str, input: Tensor) -> Result<mpsc::Receiver<Response>> {
         let lane = self
             .lanes
             .get(model)
             .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
         let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+
+        let mut st = lane.state.lock().unwrap();
+        // Liveness first: a shut-down lane refuses EVERY submission the
+        // same way, malformed or not.
+        if !st.open {
+            return Err(anyhow!("lane for '{model}' is shut down"));
+        }
+        // Admission-time validation: a malformed tensor is rejected here,
+        // alone, before it can be fused with (and fail) anyone else. The
+        // check is a handful of dtype/dim comparisons, cheap enough to
+        // hold the lane lock across.
+        if let Some(spec) = &lane.spec {
+            if let Err(msg) = spec.check(&input) {
+                drop(st);
+                let reason = RejectReason::InvalidInput(msg);
+                self.metrics.record_shed(model, reason.shed_kind());
+                let _ = tx.send(Response::rejected(id, reason, Duration::ZERO));
+                return Ok(rx);
+            }
+        }
+        let now = Instant::now();
+        // Purge already-expired requests from the queue front before
+        // judging capacity: under short deadlines and a busy replica the
+        // queue can be full of dead entries, and shedding a live submit
+        // as QueueFull against those would both waste capacity and
+        // misattribute the shed in the metrics. Deadlines are uniform
+        // (config-wide), so expiry order is FIFO and a front sweep
+        // suffices; the shed responses go out after the lock is dropped.
+        let mut expired: Vec<Request> = Vec::new();
+        while st.queue.front().is_some_and(|r| past_deadline(r, now)) {
+            expired.push(st.queue.pop_front().expect("front checked"));
+        }
+        if st.queue.len() >= self.cfg.queue_depth.max(1) {
+            drop(st);
+            shed_expired(&mut expired, &self.metrics, model);
+            let reason = RejectReason::QueueFull;
+            self.metrics.record_shed(model, reason.shed_kind());
+            let _ = tx.send(Response::rejected(id, reason, Duration::ZERO));
+            return Ok(rx);
+        }
+        st.queue.push_back(Request {
+            id,
             input,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: self.cfg.deadline.map(|d| now + d),
             resp: tx,
-        };
-        lane.tx
-            .send(req)
-            .map_err(|_| anyhow!("lane for '{model}' is down"))?;
+        });
+        drop(st);
+        shed_expired(&mut expired, &self.metrics, model);
+        lane.cv.notify_one();
         Ok(rx)
     }
 
@@ -148,10 +362,35 @@ impl Coordinator {
         v
     }
 
-    /// Stop all workers (drains nothing; pending requests get channel
-    /// errors, matching a hard shutdown).
+    /// Graceful shutdown: stop intake, DRAIN every queued request (each
+    /// receives a real response), then join the replicas. Blocks until
+    /// the drain completes.
     pub fn shutdown(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        for lane in self.lanes.values() {
+            lane.state.lock().unwrap().open = false;
+            lane.cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Hard stop: stop intake and DROP queued requests (their receivers
+    /// observe channel errors — the old hard-shutdown contract). Batches
+    /// already executing still complete.
+    pub fn shutdown_now(&self) {
+        for lane in self.lanes.values() {
+            let dropped: Vec<Request> = {
+                let mut st = lane.state.lock().unwrap();
+                st.open = false;
+                st.stop = true;
+                st.queue.drain(..).collect()
+            };
+            lane.cv.notify_all();
+            // Dropping the requests outside the lock drops their response
+            // senders; pending receivers error out.
+            drop(dropped);
+        }
         for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
@@ -160,97 +399,208 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.shutdown();
+        // Hard stop, NOT the graceful drain: a drop during unwinding (or
+        // a forgotten explicit shutdown) must never block on a slow or
+        // wedged backend working through a deep queue. Call
+        // [`Coordinator::shutdown`] explicitly to drain.
+        self.shutdown_now();
     }
 }
 
-fn batch_worker(
-    rx: mpsc::Receiver<Request>,
+/// Respond to requests shed at dequeue because their deadline passed.
+fn shed_expired(expired: &mut Vec<Request>, metrics: &Metrics, model: &str) {
+    for req in expired.drain(..) {
+        let reason = RejectReason::DeadlineExceeded;
+        metrics.record_shed(model, reason.shed_kind());
+        let queue_time = req.enqueued.elapsed();
+        let _ = req
+            .resp
+            .send(Response::rejected(req.id, reason, queue_time));
+    }
+}
+
+fn past_deadline(req: &Request, now: Instant) -> bool {
+    req.deadline.is_some_and(|d| d <= now)
+}
+
+/// One lane replica: pull the batch-opening request, admit more while the
+/// fused ROW count fits `max_batch` (peeked before admission — never
+/// overshooting) and the window is open, execute once over borrowed
+/// inputs, split, respond. Exits when hard-stopped or when intake is
+/// closed and the queue has drained.
+fn replica_worker(
+    lane: Arc<Lane>,
     backend: Arc<dyn Backend>,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
     model: String,
 ) {
-    loop {
-        // Wait for the batch-opening request.
-        let first = match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(r) => r,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if shutdown.load(Ordering::SeqCst) {
-                    return;
+    let mut expired: Vec<Request> = Vec::new();
+    'serve: loop {
+        // -- acquire the batch-opening request ---------------------------
+        let first = 'acquire: loop {
+            let (req, exit) = {
+                let mut st = lane.state.lock().unwrap();
+                loop {
+                    if st.stop {
+                        break (None, true);
+                    }
+                    let now = Instant::now();
+                    while st.queue.front().is_some_and(|r| past_deadline(r, now)) {
+                        expired.push(st.queue.pop_front().expect("front checked"));
+                    }
+                    if let Some(r) = st.queue.pop_front() {
+                        break (Some(r), false);
+                    }
+                    if !st.open {
+                        break (None, true); // drained
+                    }
+                    if !expired.is_empty() {
+                        // Answer the shed requests without holding the lock,
+                        // then come back.
+                        break (None, false);
+                    }
+                    let (guard, _) = lane
+                        .cv
+                        .wait_timeout(st, Duration::from_millis(50))
+                        .unwrap();
+                    st = guard;
                 }
-                continue;
+            };
+            shed_expired(&mut expired, &metrics, &model);
+            match (req, exit) {
+                (Some(r), _) => break 'acquire r,
+                (None, true) => return,
+                (None, false) => continue 'acquire,
             }
-            Err(mpsc::RecvTimeoutError::Disconnected) => return,
         };
+
+        // -- admit until the fused rows fill max_batch or the window ends -
         let opened = Instant::now();
+        let mut rows = rows_of(&first.input);
         let mut batch = vec![first];
-        let mut rows = batch[0].input.shape().first().copied().unwrap_or(1);
-        // Admit until size or deadline; requests are whole tensors whose
-        // row counts add up (clients usually send single rows).
-        while rows < cfg.max_batch {
+        'fill: while rows < cfg.max_batch {
             let elapsed = opened.elapsed();
             if elapsed >= cfg.max_wait {
                 break;
             }
-            match rx.recv_timeout(cfg.max_wait - elapsed) {
-                Ok(r) => {
-                    rows += r.input.shape().first().copied().unwrap_or(1);
-                    batch.push(r);
+            let window = cfg.max_wait - elapsed;
+            let mut st = lane.state.lock().unwrap();
+            // At most ONE wait per lock acquisition: `window` is computed
+            // from the batch-open time above, so waiting with it twice
+            // (e.g. after a wake that admitted a request) would restart
+            // the batch window and hold the batch open for up to
+            // max_batch x max_wait. After a wait, an empty queue always
+            // bounces to 'fill to recompute the remaining window.
+            let mut waited = false;
+            loop {
+                if st.stop {
+                    // Hard stop: run what was already claimed, then exit
+                    // at the top of 'serve.
+                    break 'fill;
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                let now = Instant::now();
+                // Peek the front request (expiry + row count) before
+                // deciding; the borrow ends here so the queue can be
+                // popped below.
+                let front = st
+                    .queue
+                    .front()
+                    .map(|r| (past_deadline(r, now), rows_of(&r.input)));
+                let front_rows = match front {
+                    Some((true, _)) => {
+                        expired.push(st.queue.pop_front().expect("front checked"));
+                        continue;
+                    }
+                    Some((false, n)) => n,
+                    None => {
+                        if !st.open {
+                            break 'fill; // draining: nothing more arrives
+                        }
+                        if waited {
+                            // Recompute the remaining window (releases
+                            // the lock on the way) instead of re-waiting
+                            // with the stale one.
+                            continue 'fill;
+                        }
+                        let (guard, _) = lane.cv.wait_timeout(st, window).unwrap();
+                        st = guard;
+                        waited = true;
+                        continue;
+                    }
+                };
+                if rows + front_rows > cfg.max_batch {
+                    // THE overshoot fix: row count is peeked BEFORE
+                    // admission. A request that would push the fused batch
+                    // past max_batch stays queued and opens the next batch
+                    // instead of silently inflating this one.
+                    break 'fill;
+                }
+                let r = st.queue.pop_front().expect("front checked");
+                rows += front_rows;
+                batch.push(r);
+                if rows >= cfg.max_batch {
+                    break 'fill;
+                }
             }
         }
+        shed_expired(&mut expired, &metrics, &model);
 
+        // A batch can close leaving work queued (overshoot deferral, or
+        // filling up while more requests arrived whose submit-time
+        // notifies this worker consumed into the open batch). Wake an
+        // idle replica NOW rather than letting that work ride out a poll
+        // timeout; a spurious notify is harmless — wakers re-check the
+        // queue under the lock.
+        lane.cv.notify_one();
+
+        // -- fuse (borrowed — no input clones), execute once, split ------
         let exec_start = Instant::now();
         let queue_times: Vec<Duration> = batch
             .iter()
             .map(|r| exec_start.duration_since(r.enqueued))
             .collect();
-        let inputs: Vec<Tensor> = batch.iter().map(|r| r.input.clone()).collect();
-        let sizes: Vec<usize> = inputs
-            .iter()
-            .map(|t| t.shape().first().copied().unwrap_or(1))
-            .collect();
-
-        let result = concat_batch(&inputs).and_then(|fused| {
-            let out = backend.run_batch(&fused)?;
-            split_batch(&out, &sizes)
-        });
+        let sizes: Vec<usize> = batch.iter().map(|r| rows_of(&r.input)).collect();
+        let result = {
+            let inputs: Vec<&Tensor> = batch.iter().map(|r| &r.input).collect();
+            concat_batch(&inputs).and_then(|fused| {
+                let out = backend.run_batch(&fused)?;
+                split_batch(&out, &sizes)
+            })
+        };
         let exec_time = exec_start.elapsed();
+        let batch_requests = batch.len();
 
         match result {
             Ok(outputs) => {
-                metrics.record_batch(&model, batch.len(), &queue_times, exec_time, false);
+                metrics.record_batch(&model, batch_requests, rows, &queue_times, exec_time, false);
                 for ((req, out), q) in batch.into_iter().zip(outputs).zip(&queue_times) {
                     let _ = req.resp.send(Response {
                         id: req.id,
                         output: Ok(out),
                         queue_time: *q,
                         exec_time,
-                        batch_size: rows,
+                        batch_requests,
+                        batch_rows: rows,
                     });
                 }
             }
             Err(e) => {
-                metrics.record_batch(&model, batch.len(), &queue_times, exec_time, true);
-                let msg = e.to_string();
+                metrics.record_batch(&model, batch_requests, rows, &queue_times, exec_time, true);
+                let err = ServeError::Exec(e.to_string());
                 for (req, q) in batch.into_iter().zip(&queue_times) {
                     let _ = req.resp.send(Response {
                         id: req.id,
-                        output: Err(msg.clone()),
+                        output: Err(err.clone()),
                         queue_time: *q,
                         exec_time,
-                        batch_size: rows,
+                        batch_requests,
+                        batch_rows: rows,
                     });
                 }
             }
         }
-        if shutdown.load(Ordering::SeqCst) {
-            return;
-        }
+        continue 'serve;
     }
 }
 
@@ -261,17 +611,56 @@ mod tests {
     use crate::figures::Figure;
     use crate::interp::Session;
 
-    fn coordinator(max_batch: usize, max_wait_ms: u64) -> Coordinator {
-        let fig = Figure::Fig1FcTwoMul;
-        CoordinatorBuilder::new(ServerConfig {
+    /// A backend wrapper that sleeps before executing — the test lever
+    /// for keeping a replica busy while the queue fills.
+    struct SlowBackend {
+        inner: InterpBackend,
+        delay: Duration,
+    }
+
+    impl SlowBackend {
+        fn new(fig: Figure, delay_ms: u64) -> SlowBackend {
+            SlowBackend {
+                inner: InterpBackend::new(fig.model()).unwrap(),
+                delay: Duration::from_millis(delay_ms),
+            }
+        }
+    }
+
+    impl Backend for SlowBackend {
+        fn name(&self) -> &str {
+            "slow"
+        }
+        fn run_batch(&self, input: &Tensor) -> Result<Tensor> {
+            std::thread::sleep(self.delay);
+            self.inner.run_batch(input)
+        }
+        fn input_spec(&self) -> Option<InputSpec> {
+            self.inner.input_spec()
+        }
+    }
+
+    fn config(max_batch: usize, max_wait_ms: u64, replicas: usize) -> ServerConfig {
+        ServerConfig {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
-        })
-        .register(
-            "fig1_fc",
-            Arc::new(InterpBackend::new(fig.model()).unwrap()),
+            replicas,
+            queue_depth: 1024,
+            deadline: None,
+        }
+    }
+
+    fn coordinator_with(cfg: ServerConfig, backend: Arc<dyn Backend>) -> Coordinator {
+        CoordinatorBuilder::new(cfg)
+            .register("fig1_fc", backend)
+            .start()
+    }
+
+    fn coordinator(max_batch: usize, max_wait_ms: u64) -> Coordinator {
+        coordinator_with(
+            config(max_batch, max_wait_ms, 1),
+            Arc::new(InterpBackend::new(Figure::Fig1FcTwoMul.model()).unwrap()),
         )
-        .start()
     }
 
     #[test]
@@ -281,6 +670,8 @@ mod tests {
         let x = fig.input(1, 3);
         let resp = coord.infer("fig1_fc", x.clone()).unwrap();
         let out = resp.output.unwrap();
+        assert_eq!(resp.batch_requests, 1);
+        assert_eq!(resp.batch_rows, 1);
         // Must equal a direct session run.
         let sess = Session::new(fig.model()).unwrap();
         let want = &sess.run(&[("x", x)]).unwrap()[0];
@@ -294,6 +685,26 @@ mod tests {
         assert!(coord
             .submit("nope", Figure::Fig1FcTwoMul.input(1, 1))
             .is_err());
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let coord = coordinator(8, 1);
+        coord.shutdown();
+        assert!(coord
+            .submit("fig1_fc", Figure::Fig1FcTwoMul.input(1, 1))
+            .is_err());
+        // Malformed submissions refuse identically (liveness is checked
+        // before validation) and leave the shed counters untouched.
+        let bad = Tensor::from_i8(&[1, 63], vec![0; 63]).unwrap();
+        assert!(coord.submit("fig1_fc", bad).is_err());
+        // No entry may even exist: nothing was executed or shed.
+        let shed = coord
+            .metrics
+            .snapshot("fig1_fc")
+            .map(|s| s.shed_total())
+            .unwrap_or(0);
+        assert_eq!(shed, 0);
     }
 
     #[test]
@@ -324,10 +735,14 @@ mod tests {
         for j in joins {
             for (seed, x, resp) in j.join().unwrap() {
                 let want = &sess.run(&[("x", x)]).unwrap()[0];
-                let got = resp.output.unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                let got = resp
+                    .output
+                    .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
                 assert_eq!(&got, want, "seed {seed}");
-                assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
-                if resp.batch_size > 1 {
+                // Single-row clients: requests == rows, both within cap.
+                assert!(resp.batch_requests >= 1 && resp.batch_requests <= 8);
+                assert_eq!(resp.batch_rows, resp.batch_requests);
+                if resp.batch_requests > 1 {
                     batched_over_1 += 1;
                 }
                 total += 1;
@@ -340,22 +755,341 @@ mod tests {
         let stats = coord.metrics.snapshot("fig1_fc").unwrap();
         assert_eq!(stats.requests, (n_threads * per_thread) as u64);
         assert!(stats.mean_batch() > 1.0);
+        assert_eq!(stats.shed_total(), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn replica_pool_answers_everything_correctly() {
+        // 4 replicas over one shared plan; correctness must be identical
+        // to the single-worker lane.
+        let coord = Arc::new(coordinator_with(
+            config(4, 1, 4),
+            Arc::new(InterpBackend::new(Figure::Fig1FcTwoMul.model()).unwrap()),
+        ));
+        let sess = Session::new(Figure::Fig1FcTwoMul.model()).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let coord = coord.clone();
+            joins.push(std::thread::spawn(move || {
+                let fig = Figure::Fig1FcTwoMul;
+                (0..12u64)
+                    .map(|i| {
+                        let seed = t * 100 + i;
+                        let x = fig.input(1, seed);
+                        (x.clone(), coord.infer("fig1_fc", x).unwrap())
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        let mut total = 0;
+        for j in joins {
+            for (x, resp) in j.join().unwrap() {
+                let want = &sess.run(&[("x", x)]).unwrap()[0];
+                assert_eq!(&resp.output.unwrap(), want);
+                total += 1;
+            }
+        }
+        assert_eq!(total, 8 * 12);
+        assert_eq!(
+            coord.metrics.snapshot("fig1_fc").unwrap().requests,
+            8 * 12
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn multi_row_requests_never_overshoot_max_batch() {
+        // Regression for the overshoot bug: the old batcher checked
+        // `rows < max_batch` BEFORE adding a request's rows, so two 3-row
+        // requests fused into a 6-row batch under max_batch = 4.
+        let fig = Figure::Fig1FcTwoMul;
+        let sess = Session::new(fig.model()).unwrap();
+        let coord = coordinator_with(
+            config(4, 25, 1),
+            Arc::new(SlowBackend::new(fig, 30)),
+        );
+        // r1 occupies the replica; r2 + r3 queue up and MUST NOT fuse
+        // (3 + 3 > 4), even though both sit queued together.
+        let x1 = fig.input(3, 1);
+        let x2 = fig.input(3, 2);
+        let x3 = fig.input(3, 3);
+        let rx1 = coord.submit("fig1_fc", x1.clone()).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let rx2 = coord.submit("fig1_fc", x2.clone()).unwrap();
+        let rx3 = coord.submit("fig1_fc", x3.clone()).unwrap();
+        for (rx, x) in [(rx1, x1), (rx2, x2), (rx3, x3)] {
+            let resp = rx.recv().unwrap();
+            assert!(
+                resp.batch_rows <= 4,
+                "fused {} rows past max_batch 4",
+                resp.batch_rows
+            );
+            assert_eq!(resp.batch_requests, 1, "3-row requests must not fuse");
+            assert_eq!(resp.batch_rows, 3);
+            let want = &sess.run(&[("x", x)]).unwrap()[0];
+            assert_eq!(&resp.output.unwrap(), want);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn oversized_single_request_runs_alone() {
+        // A request larger than max_batch cannot be split; it runs alone.
+        let fig = Figure::Fig1FcTwoMul;
+        let sess = Session::new(fig.model()).unwrap();
+        let coord = coordinator(4, 1);
+        let x = fig.input(9, 77);
+        let resp = coord.infer("fig1_fc", x.clone()).unwrap();
+        assert_eq!(resp.batch_requests, 1);
+        assert_eq!(resp.batch_rows, 9);
+        let want = &sess.run(&[("x", x)]).unwrap()[0];
+        assert_eq!(&resp.output.unwrap(), want);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_rejected_alone_good_ones_answered() {
+        // Regression for the poison-batch bug: a bad tensor used to fail
+        // concat (or the backend) for every co-batched request. Now it is
+        // rejected at admission, alone.
+        let fig = Figure::Fig1FcTwoMul;
+        let sess = Session::new(fig.model()).unwrap();
+        let coord = coordinator_with(
+            config(8, 20, 1),
+            Arc::new(SlowBackend::new(fig, 20)),
+        );
+        // Occupy the replica so good + bad would have co-batched.
+        let occupier = coord.submit("fig1_fc", fig.input(1, 9)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let good1 = fig.input(1, 10);
+        let good2 = fig.input(1, 11);
+        let rx_good1 = coord.submit("fig1_fc", good1.clone()).unwrap();
+        // Wrong feature dim (63 instead of 64).
+        let bad = Tensor::from_i8(&[1, 63], vec![0; 63]).unwrap();
+        let rx_bad = coord.submit("fig1_fc", bad).unwrap();
+        let rx_good2 = coord.submit("fig1_fc", good2.clone()).unwrap();
+
+        // The bad request is shed immediately with a typed reason...
+        let resp = rx_bad
+            .recv_timeout(Duration::from_millis(100))
+            .expect("rejection must not wait for a batch");
+        match resp.reject_reason() {
+            Some(RejectReason::InvalidInput(msg)) => {
+                assert!(msg.contains("axis 1"), "unexpected message: {msg}")
+            }
+            other => panic!("expected InvalidInput, got {other:?}"),
+        }
+        // ...and every good request is answered correctly.
+        for (rx, x) in [(rx_good1, good1), (rx_good2, good2)] {
+            let resp = rx.recv().unwrap();
+            let want = &sess.run(&[("x", x)]).unwrap()[0];
+            assert_eq!(&resp.output.unwrap(), want);
+        }
+        occupier.recv().unwrap().output.unwrap();
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        assert_eq!(stats.shed_invalid, 1);
+        assert_eq!(stats.errors, 0, "no fused batch may have errored");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn wrong_dtype_rejected_with_typed_reason() {
+        let coord = coordinator(8, 1);
+        let bad = Tensor::from_f32(&[1, 64], vec![0.0; 64]).unwrap();
+        let resp = coord
+            .submit("fig1_fc", bad)
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(matches!(
+            resp.reject_reason(),
+            Some(RejectReason::InvalidInput(_))
+        ));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn queue_full_sheds_immediately() {
+        let fig = Figure::Fig1FcTwoMul;
+        let mut cfg = config(1, 1, 1);
+        cfg.queue_depth = 2;
+        let coord = coordinator_with(cfg, Arc::new(SlowBackend::new(fig, 200)));
+        // First request occupies the replica (60ms > the worker's 50ms
+        // poll interval, so pickup is certain even if a wakeup is lost)...
+        let _busy = coord.submit("fig1_fc", fig.input(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        // ...two fill the queue to its cap...
+        let _q1 = coord.submit("fig1_fc", fig.input(1, 2)).unwrap();
+        let _q2 = coord.submit("fig1_fc", fig.input(1, 3)).unwrap();
+        // ...and the next is shed instantly, not queued unboundedly.
+        let t0 = Instant::now();
+        let resp = coord
+            .submit("fig1_fc", fig.input(1, 4))
+            .unwrap()
+            .recv_timeout(Duration::from_millis(100))
+            .expect("shed must be immediate");
+        assert!(matches!(
+            resp.reject_reason(),
+            Some(RejectReason::QueueFull)
+        ));
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert_eq!(
+            coord.metrics.snapshot("fig1_fc").unwrap().shed_queue_full,
+            1
+        );
+        coord.shutdown_now();
+    }
+
+    #[test]
+    fn submit_purges_expired_queue_entries_before_depth_check() {
+        // A queue full of already-dead requests must not shed live
+        // submits as QueueFull: submit sweeps expired entries from the
+        // front (answering them DeadlineExceeded) before judging depth.
+        let fig = Figure::Fig1FcTwoMul;
+        let mut cfg = config(1, 1, 1);
+        cfg.queue_depth = 2;
+        cfg.deadline = Some(Duration::from_millis(30));
+        let coord = coordinator_with(cfg, Arc::new(SlowBackend::new(fig, 300)));
+        let _busy = coord.submit("fig1_fc", fig.input(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(60)); // replica is busy now
+        // Fill the queue to its cap; both entries die 30ms later.
+        let rx_d1 = coord.submit("fig1_fc", fig.input(1, 2)).unwrap();
+        let rx_d2 = coord.submit("fig1_fc", fig.input(1, 3)).unwrap();
+        std::thread::sleep(Duration::from_millis(40)); // both expired
+        // The next submit purges the dead fronts and is ACCEPTED.
+        let _rx_live = coord.submit("fig1_fc", fig.input(1, 4)).unwrap();
+        for rx in [rx_d1, rx_d2] {
+            let resp = rx
+                .recv_timeout(Duration::from_millis(100))
+                .expect("dead entries are answered at submit-time purge");
+            assert!(matches!(
+                resp.reject_reason(),
+                Some(RejectReason::DeadlineExceeded)
+            ));
+        }
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        assert_eq!(stats.shed_queue_full, 0, "live submit misattributed");
+        assert_eq!(stats.shed_deadline, 2);
+        coord.shutdown_now();
+    }
+
+    #[test]
+    fn deadline_exceeded_requests_are_shed() {
+        let fig = Figure::Fig1FcTwoMul;
+        let mut cfg = config(1, 1, 1);
+        cfg.deadline = Some(Duration::from_millis(40));
+        let coord = coordinator_with(cfg, Arc::new(SlowBackend::new(fig, 120)));
+        let rx_a = coord.submit("fig1_fc", fig.input(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        // Queued behind a 120ms execution with a 40ms deadline: shed.
+        let rx_b = coord.submit("fig1_fc", fig.input(1, 2)).unwrap();
+        let resp_b = rx_b.recv().unwrap();
+        assert!(matches!(
+            resp_b.reject_reason(),
+            Some(RejectReason::DeadlineExceeded)
+        ));
+        assert!(resp_b.queue_time >= Duration::from_millis(40));
+        // The in-flight request still completes normally.
+        rx_a.recv().unwrap().output.unwrap();
+        assert_eq!(coord.metrics.snapshot("fig1_fc").unwrap().shed_deadline, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_every_accepted_request() {
+        let fig = Figure::Fig1FcTwoMul;
+        let sess = Session::new(fig.model()).unwrap();
+        let coord = coordinator_with(
+            config(1, 1, 1),
+            Arc::new(SlowBackend::new(fig, 10)),
+        );
+        let mut pending = Vec::new();
+        for i in 0..8u64 {
+            let x = fig.input(1, i);
+            pending.push((x.clone(), coord.submit("fig1_fc", x).unwrap()));
+        }
+        // Graceful shutdown: blocks until the queue is drained...
+        coord.shutdown();
+        // ...so every accepted request has a REAL response waiting.
+        for (x, rx) in pending {
+            let resp = rx.try_recv().expect("response must exist post-drain");
+            let want = &sess.run(&[("x", x)]).unwrap()[0];
+            assert_eq!(&resp.output.unwrap(), want);
+        }
+        assert_eq!(coord.metrics.snapshot("fig1_fc").unwrap().requests, 8);
+    }
+
+    #[test]
+    fn shutdown_now_drops_queued_requests() {
+        let fig = Figure::Fig1FcTwoMul;
+        let coord = coordinator_with(
+            config(1, 1, 1),
+            Arc::new(SlowBackend::new(fig, 100)),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            rxs.push(coord.submit("fig1_fc", fig.input(1, i)).unwrap());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        coord.shutdown_now();
+        // Hard stop returns without draining ~500ms of queued work.
+        assert!(t0.elapsed() < Duration::from_millis(450));
+        let mut answered = 0;
+        let mut dropped = 0;
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(resp) => {
+                    resp.output.unwrap();
+                    answered += 1;
+                }
+                Err(_) => dropped += 1,
+            }
+        }
+        assert_eq!(answered + dropped, 6);
+        assert!(dropped >= 1, "hard stop must drop queued requests");
+    }
+
+    #[test]
+    fn batch_rows_and_requests_diverge_for_multi_row_submissions() {
+        let fig = Figure::Fig1FcTwoMul;
+        let coord = coordinator(8, 1);
+        let resp = coord.infer("fig1_fc", fig.input(4, 5)).unwrap();
+        resp.output.unwrap();
+        assert_eq!(resp.batch_requests, 1);
+        assert_eq!(resp.batch_rows, 4);
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.mean_batch(), 1.0);
+        assert_eq!(stats.mean_rows(), 4.0);
         coord.shutdown();
     }
 
     #[test]
     fn batch_transparency_property() {
-        // Property: for any request interleaving, coordinator output ==
-        // direct per-request execution (batching must be invisible).
-        use crate::proptest_util::{run_prop, Gen, RangeUsize};
+        // Property: for ANY request interleaving, ANY replica count, and
+        // ANY mix of well-formed and malformed submissions, serving is
+        // transparent — well-formed outputs are bit-identical to direct
+        // Session runs, malformed ones get a typed rejection, and every
+        // submission receives EXACTLY one response.
+        use crate::proptest_util::{run_prop, Gen};
         struct Plan;
         impl Gen for Plan {
-            type Value = Vec<u64>;
-            fn generate(&self, rng: &mut crate::train::Rng) -> Vec<u64> {
+            /// (seed, rows) per request; rows == 0 encodes a malformed
+            /// submission (wrong feature dim).
+            type Value = Vec<(u64, usize)>;
+            fn generate(&self, rng: &mut crate::train::Rng) -> Vec<(u64, usize)> {
                 let n = 1 + rng.below(12);
-                (0..n).map(|_| rng.next_u64() % 1000).collect()
+                (0..n)
+                    .map(|_| {
+                        let seed = rng.next_u64() % 1000;
+                        let rows = rng.below(4); // 0 => malformed
+                        (seed, rows)
+                    })
+                    .collect()
             }
-            fn shrink(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+            fn shrink(&self, v: &Vec<(u64, usize)>) -> Vec<Vec<(u64, usize)>> {
                 if v.len() > 1 {
                     vec![v[..v.len() / 2].to_vec()]
                 } else {
@@ -363,25 +1097,62 @@ mod tests {
                 }
             }
         }
-        let _ = RangeUsize { lo: 0, hi: 1 }; // keep import used
-        let coord = coordinator(4, 1);
         let fig = Figure::Fig1FcTwoMul;
         let sess = Session::new(fig.model()).unwrap();
-        run_prop("batch_transparency", &Plan, 7, 20, |seeds| {
-            let rxs: Vec<_> = seeds
-                .iter()
-                .map(|&s| coord.submit("fig1_fc", fig.input(1, s)).unwrap())
-                .collect();
-            for (&s, rx) in seeds.iter().zip(rxs) {
-                let resp = rx.recv().map_err(|e| e.to_string())?;
-                let got = resp.output?;
-                let want = &sess.run(&[("x", fig.input(1, s))]).unwrap()[0];
-                if &got != want {
-                    return Err(format!("mismatch for seed {s}"));
-                }
-            }
-            Ok(())
-        });
-        coord.shutdown();
+        for replicas in [1usize, 3] {
+            let coord = coordinator_with(
+                config(4, 1, replicas),
+                Arc::new(InterpBackend::new(fig.model()).unwrap()),
+            );
+            run_prop(
+                &format!("batch_transparency_r{replicas}"),
+                &Plan,
+                7 + replicas as u64,
+                20,
+                |reqs| {
+                    let rxs: Vec<_> = reqs
+                        .iter()
+                        .map(|&(s, rows)| {
+                            let x = if rows == 0 {
+                                // Malformed: wrong feature dim.
+                                Tensor::from_i8(&[1, 63], vec![0; 63]).unwrap()
+                            } else {
+                                fig.input(rows, s)
+                            };
+                            coord.submit("fig1_fc", x).unwrap()
+                        })
+                        .collect();
+                    for (&(s, rows), rx) in reqs.iter().zip(rxs) {
+                        let resp = rx.recv().map_err(|e| e.to_string())?;
+                        if rows == 0 {
+                            match resp.reject_reason() {
+                                Some(RejectReason::InvalidInput(_)) => {}
+                                other => {
+                                    return Err(format!(
+                                        "malformed request: expected InvalidInput, got {other:?}"
+                                    ))
+                                }
+                            }
+                            continue;
+                        }
+                        let got = resp.output.map_err(|e| e.to_string())?;
+                        let want =
+                            &sess.run(&[("x", fig.input(rows, s))]).unwrap()[0];
+                        if &got != want {
+                            return Err(format!(
+                                "mismatch for seed {s} ({rows} rows, {replicas} replicas)"
+                            ));
+                        }
+                        // Exactly-once: a second receive must find the
+                        // channel empty (sender consumed by the send).
+                        if rx.try_recv().is_ok() {
+                            return Err(format!("seed {s}: more than one response"));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+            coord.shutdown();
+        }
     }
 }

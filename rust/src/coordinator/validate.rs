@@ -1,13 +1,84 @@
 //! Cross-backend validation — the paper's goal 3 ("closely matching
 //! output (within narrow margins) on all inference environments") as an
 //! operational service: fan one input set out to every backend and
-//! aggregate LSB-level match reports against a designated reference.
+//! aggregate LSB-level match reports against a designated reference —
+//! plus [`InputSpec`], the per-lane admission contract the coordinator
+//! checks at `submit` so a malformed request is rejected alone instead
+//! of poisoning a fused batch.
 
 use super::backend::Backend;
 use crate::compare::{compare_quantized, MatchReport};
-use crate::tensor::Tensor;
+use crate::onnx::ir::{Dim, Model};
+use crate::tensor::{DType, Tensor};
 use anyhow::Result;
 use std::sync::Arc;
+
+/// What a lane accepts: dtype, rank, and the fixed dims of the model's
+/// (single) runtime input. Axis constraints of `None` (symbolic dims —
+/// the batch axis, typically) accept any extent. Checked at admission
+/// time by [`Coordinator::submit`](super::Coordinator::submit), BEFORE a
+/// request can be fused with others: one bad request then costs only
+/// itself a typed `InvalidInput` rejection, never a co-batched
+/// neighbor's answer.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub dtype: DType,
+    /// Per-axis expectation, index 0 = batch axis.
+    pub dims: Vec<Option<usize>>,
+}
+
+impl InputSpec {
+    /// The admission contract of `model`'s first runtime input (the
+    /// coordinator serves single-input models), or `None` when the model
+    /// declares no runtime inputs.
+    pub fn from_model(model: &Model) -> Option<InputSpec> {
+        let vi = model.graph.runtime_inputs().first().copied()?;
+        Some(InputSpec {
+            dtype: vi.dtype,
+            dims: vi
+                .shape
+                .iter()
+                .map(|d| match d {
+                    Dim::Fixed(n) => Some(*n),
+                    Dim::Symbolic(_) => None,
+                })
+                .collect(),
+        })
+    }
+
+    /// Validate one request tensor against the contract. The error string
+    /// names exactly what mismatched (it travels to the client inside
+    /// `RejectReason::InvalidInput`).
+    pub fn check(&self, t: &Tensor) -> Result<(), String> {
+        if t.dtype() != self.dtype {
+            return Err(format!(
+                "dtype {} does not match the model input dtype {}",
+                t.dtype(),
+                self.dtype
+            ));
+        }
+        if t.shape().len() != self.dims.len() {
+            return Err(format!(
+                "rank {} does not match the model input rank {}",
+                t.shape().len(),
+                self.dims.len()
+            ));
+        }
+        for (axis, (&got, want)) in t.shape().iter().zip(&self.dims).enumerate() {
+            if let Some(want) = want {
+                if got != *want {
+                    return Err(format!(
+                        "axis {axis} has extent {got}, model requires {want}"
+                    ));
+                }
+            }
+        }
+        if !self.dims.is_empty() && t.shape()[0] == 0 {
+            return Err("empty batch (0 rows)".to_string());
+        }
+        Ok(())
+    }
+}
 
 /// Agreement of one backend against the reference backend.
 #[derive(Debug)]
@@ -89,6 +160,27 @@ mod tests {
     use crate::coordinator::backend::{HwSimBackend, InterpBackend};
     use crate::figures::Figure;
     use crate::hwsim::HwConfig;
+
+    #[test]
+    fn input_spec_checks_dtype_rank_and_fixed_dims() {
+        let fig = Figure::Fig1FcTwoMul;
+        let spec = InputSpec::from_model(&fig.model()).unwrap();
+        // The fig models take [N, 64] i8 inputs: batch axis free.
+        assert!(spec.check(&fig.input(1, 0)).is_ok());
+        assert!(spec.check(&fig.input(7, 0)).is_ok());
+        // Wrong dtype.
+        let bad = Tensor::from_f32(&[1, 64], vec![0.0; 64]).unwrap();
+        assert!(spec.check(&bad).unwrap_err().contains("dtype"));
+        // Wrong rank.
+        let bad = Tensor::from_i8(&[64], vec![0; 64]).unwrap();
+        assert!(spec.check(&bad).unwrap_err().contains("rank"));
+        // Wrong feature dim.
+        let bad = Tensor::from_i8(&[1, 63], vec![0; 63]).unwrap();
+        assert!(spec.check(&bad).unwrap_err().contains("axis 1"));
+        // Empty batch.
+        let bad = Tensor::from_i8(&[0, 64], vec![]).unwrap();
+        assert!(spec.check(&bad).unwrap_err().contains("empty"));
+    }
 
     #[test]
     fn interp_vs_hwsim_narrow_margins() {

@@ -33,7 +33,7 @@ use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Tensor};
 use plan::{resolve_src, CompiledPlan, ScratchArena, Src};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use thiserror::Error;
 
 /// Smallest batch the auto-parallel path will split: below this the pool
@@ -101,13 +101,22 @@ struct StepProfile {
 }
 
 /// A validated, planned, executable model.
+///
+/// The compiled state (model, plan, legacy free lists) is immutable after
+/// [`Session::new`] and held behind `Arc`s, so [`Session::fork_replica`]
+/// can hand out additional sessions over the SAME plan at the cost of a
+/// few reference counts — each replica owns only its own arena pool and
+/// profiler. This is what makes a serving replica
+/// (`coordinator::server`) nearly free: N replicas share one set of
+/// pre-bound kernels and packed weights, and never contend on each
+/// other's arena locks.
 pub struct Session {
-    model: Model,
-    plan: CompiledPlan,
+    model: Arc<Model>,
+    plan: Arc<CompiledPlan>,
     /// Frees as value names, for the legacy string-keyed path only
     /// (kept so [`Session::run_unplanned`] reproduces the pre-plan
     /// interpreter faithfully, including its memory behavior).
-    unplanned_frees: Vec<Vec<String>>,
+    unplanned_frees: Arc<Vec<Vec<String>>>,
     /// `Some(symbol)` when the graph is provably row-independent along a
     /// leading symbolic batch axis (see [`detect_batch_symbol`]) — the
     /// precondition for the batch-parallel execution path.
@@ -175,7 +184,7 @@ impl Session {
         let order = topo_order(&model.graph)
             .map_err(|e| SessionError::Check(crate::onnx::shape::ShapeError::from(e).into()))?;
         let plan = CompiledPlan::compile(&model, &order)?;
-        let unplanned_frees = plan
+        let unplanned_frees: Vec<Vec<String>> = plan
             .steps
             .iter()
             .map(|s| {
@@ -188,15 +197,35 @@ impl Session {
         let profile = Mutex::new(vec![StepProfile::default(); plan.steps.len()]);
 
         Ok(Session {
-            model,
-            plan,
-            unplanned_frees,
+            model: Arc::new(model),
+            plan: Arc::new(plan),
+            unplanned_frees: Arc::new(unplanned_frees),
             batch_symbol,
             parallel: true,
             arenas: Mutex::new(Vec::new()),
             profile,
             profiling: false,
         })
+    }
+
+    /// A new session over the SAME compiled plan, model, and baked
+    /// kernels (shared by `Arc`, not recompiled), with its own arena pool
+    /// and profiler. Replicas therefore cost a few pointers plus whatever
+    /// scratch they warm up, and concurrent replicas never touch each
+    /// other's `arenas` mutex — the serving layer's per-replica checkout.
+    /// Results are bit-identical to the parent by construction (same plan,
+    /// same kernels).
+    pub fn fork_replica(&self) -> Session {
+        Session {
+            model: self.model.clone(),
+            plan: self.plan.clone(),
+            unplanned_frees: self.unplanned_frees.clone(),
+            batch_symbol: self.batch_symbol.clone(),
+            parallel: self.parallel,
+            arenas: Mutex::new(Vec::new()),
+            profile: Mutex::new(vec![StepProfile::default(); self.plan.steps.len()]),
+            profiling: self.profiling,
+        }
     }
 
     /// Enable per-node wall-clock accounting (used by the §Perf pass).
@@ -879,6 +908,44 @@ mod tests {
         sess.run_into(&[("x", &x)], &mut outs).unwrap();
         let legacy = sess.run_unplanned(&[("x", x)]).unwrap();
         assert_eq!(outs, legacy, "after batch change");
+    }
+
+    #[test]
+    fn fork_replica_shares_plan_and_matches_bit_for_bit() {
+        let sess = Session::new(fig1_model()).unwrap();
+        let replica = sess.fork_replica();
+        // The plan and model are shared, not recompiled.
+        assert!(Arc::ptr_eq(&sess.plan, &replica.plan));
+        assert!(Arc::ptr_eq(&sess.model, &replica.model));
+        for batch in [1usize, 3, 8] {
+            let data: Vec<i8> = (0..batch * 4).map(|i| (i * 53 % 251) as u8 as i8).collect();
+            let x = Tensor::from_i8(&[batch, 4], data).unwrap();
+            let a = sess.run(&[("x", x.clone())]).unwrap();
+            let b = replica.run(&[("x", x)]).unwrap();
+            assert_eq!(a, b, "batch {batch}");
+        }
+        // Replicas of replicas still share the original plan.
+        let grand = replica.fork_replica();
+        assert!(Arc::ptr_eq(&sess.plan, &grand.plan));
+        // Concurrent replicas hammer their own arena pools.
+        let parent = Arc::new(sess);
+        let mut joins = Vec::new();
+        for t in 0..3u8 {
+            let rep = parent.fork_replica();
+            let parent = parent.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..15u8 {
+                    let v = (t.wrapping_mul(17).wrapping_add(i)) as i8;
+                    let x = Tensor::from_i8(&[2, 4], vec![v; 8]).unwrap();
+                    let got = rep.run(&[("x", x.clone())]).unwrap();
+                    let want = parent.run_unplanned(&[("x", x)]).unwrap();
+                    assert_eq!(got, want);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
     }
 
     #[test]

@@ -63,6 +63,13 @@ pub(crate) struct Step {
 }
 
 /// A model lowered for execution: see the module docs.
+///
+/// Immutable after [`CompiledPlan::compile`] — every field (including the
+/// kernels' baked packed weights) is read-only during execution, which is
+/// what lets [`Session`](super::Session) hold it behind an `Arc` and
+/// [`fork_replica`](super::Session::fork_replica) share ONE plan across
+/// every serving replica: all mutable per-run state lives in the
+/// [`ScratchArena`] a run checks out, never here.
 pub(crate) struct CompiledPlan {
     pub steps: Vec<Step>,
     pub n_slots: usize,

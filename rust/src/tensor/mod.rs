@@ -534,7 +534,16 @@ impl Tensor {
     /// Concatenate tensors along axis 0. Every part must be rank >= 1 and
     /// share dtype and row shape.
     pub fn concat_rows(parts: &[Tensor]) -> Result<Tensor, TensorError> {
-        let first = parts.first().ok_or(TensorError::RowSliceOutOfRange {
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        Tensor::concat_rows_refs(&refs)
+    }
+
+    /// [`Tensor::concat_rows`] over borrowed parts — concatenation only
+    /// reads, so callers that merely hold references (the serving layer
+    /// fusing queued request tensors) need not clone a single input. The
+    /// only allocation is the fused output buffer.
+    pub fn concat_rows_refs(parts: &[&Tensor]) -> Result<Tensor, TensorError> {
+        let first = *parts.first().ok_or(TensorError::RowSliceOutOfRange {
             off: 0,
             len: 0,
             batch: 0,

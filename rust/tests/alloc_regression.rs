@@ -147,4 +147,22 @@ fn second_run_at_fixed_batch_allocates_nothing() {
     result.unwrap();
     assert_eq!(outs, expected3, "steady small-batch output");
     assert_eq!(allocs, 0, "steady state at the new batch size");
+
+    // -- serving-path fusion discipline ---------------------------------
+    // The batch worker fuses queued request tensors by REFERENCE
+    // (`concat_batch(&[&Tensor])`): the fused buffer is the only
+    // allocation, independent of how many requests are fused. The old
+    // worker cloned every input first, adding one data allocation PER
+    // REQUEST — the bound below (fused data + slack for the enum wrap)
+    // would trip immediately if the clones came back.
+    let requests: Vec<pqdl::tensor::Tensor> = (0..4).map(|i| batch_input(2, i)).collect();
+    let refs: Vec<&pqdl::tensor::Tensor> = requests.iter().collect();
+    let (allocs, fused) = counted(|| pqdl::coordinator::concat_batch(&refs));
+    let fused = fused.unwrap();
+    assert_eq!(fused.shape(), &[8, 4]);
+    assert!(
+        allocs <= 2,
+        "fusing 4 borrowed requests must only allocate the fused buffer \
+         (got {allocs} allocations; per-request input clones are back?)"
+    );
 }

@@ -17,6 +17,10 @@ fn coordinator_serves_all_figures() {
     let mut builder = CoordinatorBuilder::new(ServerConfig {
         max_batch: 4,
         max_wait: Duration::from_millis(1),
+        // Two replicas per lane: the integration test exercises the
+        // shared-plan replica path across every figure model.
+        replicas: 2,
+        ..ServerConfig::default()
     });
     for fig in Figure::ALL {
         builder = builder.register(

@@ -107,6 +107,82 @@ fn hwsim_parallel_matches_serial_across_batches_and_threads() {
 }
 
 #[test]
+fn replica_serving_is_transparent_on_the_quantized_model() {
+    // The serving path end to end on the serving-shaped model (float
+    // I/O, Gemm chain, Softmax head): a replica pool fusing borrowed
+    // request tensors must answer every request bit-identically to a
+    // direct Session run — multi-row requests included — for any
+    // interleaving the client threads produce.
+    use pqdl::coordinator::{CoordinatorBuilder, InterpBackend, ServerConfig};
+    use pqdl::quant::CalibStrategy;
+    use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
+    use pqdl::train::{synthetic_digits, train_classifier, HiddenAct, Mlp};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let data = synthetic_digits(300, 171);
+    let mut mlp = Mlp::new(&[64, 16, 10], HiddenAct::Relu, 172);
+    train_classifier(&mut mlp, &data, 4, 32, 0.1, 0.9, 173);
+    let model = mlp.to_model("digits_serve");
+    let sess = Session::new(model.clone()).unwrap();
+    let batches: Vec<_> = (0..16)
+        .map(|i| {
+            let (x, _) = data.sample(i);
+            vec![("x".to_string(), Tensor::from_f32(&[1, 64], x.to_vec()).unwrap())]
+        })
+        .collect();
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
+    let preq = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+    let qsess = Session::new(preq.clone()).unwrap();
+
+    let coord = Arc::new(
+        CoordinatorBuilder::new(ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(300),
+            replicas: 3,
+            ..ServerConfig::default()
+        })
+        .register("digits", Arc::new(InterpBackend::new(preq).unwrap()))
+        .start(),
+    );
+    let mut joins = Vec::new();
+    for t in 0..4usize {
+        let coord = coord.clone();
+        let data = data.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut results = Vec::new();
+            for i in 0..10usize {
+                // Rows 1..=3: multi-row requests ride along.
+                let rows = 1 + (t + i) % 3;
+                let mut xs = Vec::with_capacity(rows * 64);
+                for r in 0..rows {
+                    xs.extend_from_slice(data.sample((t * 40 + i + r) % data.len()).0);
+                }
+                let x = Tensor::from_f32(&[rows, 64], xs).unwrap();
+                let resp = coord.infer("digits", x.clone()).unwrap();
+                results.push((x, resp));
+            }
+            results
+        }));
+    }
+    let mut total = 0;
+    for j in joins {
+        for (x, resp) in j.join().unwrap() {
+            let want = &qsess.run(&[("x", x)]).unwrap()[0];
+            let got = resp.output.expect("serving must not fail");
+            assert_eq!(&got, want);
+            assert!(resp.batch_rows >= resp.batch_requests);
+            total += 1;
+        }
+    }
+    assert_eq!(total, 40);
+    let stats = coord.metrics.snapshot("digits").unwrap();
+    assert_eq!(stats.requests, 40);
+    assert_eq!(stats.shed_total(), 0);
+    coord.shutdown();
+}
+
+#[test]
 fn quantized_float_io_model_parallel_matches_serial() {
     // The serving-shaped model: float I/O, Gemm chain, Softmax head —
     // exactly what the coordinator batches. Serial and parallel must agree
