@@ -41,12 +41,14 @@ fn main() -> anyhow::Result<()> {
         ..ServerConfig::default()
     });
     let mut lanes = Vec::new();
+    println!("plan-time fusion coverage (interp lanes):");
     for fig in Figure::ALL {
         let model = fig.model();
-        builder = builder.register(
-            &format!("{}/interp", fig.name()),
-            Arc::new(InterpBackend::new(model.clone())?),
-        );
+        let interp = InterpBackend::new(model.clone())?;
+        // Fusion coverage per lane: the paper's whole chain collapses to
+        // one fused step per figure (two where an activation LUT folds).
+        println!("  {:<18} {}", fig.name(), interp.plan_stats());
+        builder = builder.register(&format!("{}/interp", fig.name()), Arc::new(interp));
         builder = builder.register(
             &format!("{}/hwsim", fig.name()),
             Arc::new(HwSimBackend::new(&model, HwConfig::default())?),

@@ -5,7 +5,7 @@
 
 use pqdl::bench_util::{bench_auto, env_usize, section, JsonReport};
 use pqdl::coordinator::{CoordinatorBuilder, InterpBackend, ServerConfig};
-use pqdl::interp::Session;
+use pqdl::interp::{PlanOptions, Session};
 use pqdl::parallel::ThreadPool;
 use pqdl::quant::CalibStrategy;
 use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
@@ -131,6 +131,48 @@ fn main() {
         json.record(&format!("legacy b{batch}"), batch, &legacy);
         json.record(&format!("planned b{batch}"), batch, &planned);
         json.record(&format!("recycled b{batch}"), batch, &recycled);
+    }
+
+    // --- fused vs unfused plan (plan-time graph optimizer) ----------------
+    // `qsess` (the default session) executes the FUSED plan — its chains
+    // collapse into FusedQFc kernels doing rescale+saturate in one pass.
+    // The unfused session is the same model with `PlanOptions { fuse:
+    // false }`: the pre-optimizer node-per-step plan, bit-identical by
+    // the executor_plan differential contract. NOTE for cross-commit
+    // attribution: the "planned" rows above ALSO run fused now — this
+    // section isolates the fusion win within one run.
+    let unfused_sess =
+        Session::new_with_options(preq.clone(), PlanOptions { fuse: false }).unwrap();
+    let pstats = qsess.plan_stats();
+    section(&format!("fused vs unfused plan — {pstats}"));
+    println!(
+        "{:<8} | {:>14} | {:>14} | {:>8}",
+        "batch", "unfused itm/s", "fused itm/s", "speedup"
+    );
+    for batch in [1usize, 8, 32, 128] {
+        let x = batch_of(batch);
+        let unfused = {
+            let x = x.clone();
+            let s = &unfused_sess;
+            bench_auto(&format!("unfused b{batch}"), batch, target_ms, move || {
+                s.run_serial(&[("x", x.clone())]).expect("unfused run");
+            })
+        };
+        let fused = {
+            let x = x.clone();
+            let s = &qsess;
+            bench_auto(&format!("fused b{batch}"), batch, target_ms, move || {
+                s.run_serial(&[("x", x.clone())]).expect("fused run");
+            })
+        };
+        println!(
+            "{batch:<8} | {:>14.1} | {:>14.1} | {:>7.2}x",
+            unfused.throughput_per_s,
+            fused.throughput_per_s,
+            fused.throughput_per_s / unfused.throughput_per_s
+        );
+        json.record(&format!("unfused b{batch}"), batch, &unfused);
+        json.record(&format!("fused b{batch}"), batch, &fused);
     }
 
     section("dynamic batching sweep (16 closed-loop clients x 150 reqs)");

@@ -70,6 +70,13 @@ impl InterpBackend {
             spec,
         })
     }
+
+    /// Fusion coverage of the lane's compiled plan (the plan every
+    /// replica shares — see [`Backend::fork_replica`]). Printed by
+    /// `examples/serve_demo.rs` so coverage is observable in serving.
+    pub fn plan_stats(&self) -> crate::interp::PlanStats {
+        self.session.plan_stats()
+    }
 }
 
 impl Backend for InterpBackend {
@@ -88,7 +95,10 @@ impl Backend for InterpBackend {
     /// Replicas share one `CompiledPlan` (and the model's weights) via
     /// [`Session::fork_replica`] — each costs a handful of `Arc` bumps
     /// plus the scratch arenas it warms up, and replicas never contend on
-    /// each other's arena pool locks.
+    /// each other's arena pool locks. Since the plan-time optimizer, the
+    /// shared plan is the FUSED one: every replica serves the fused
+    /// quantized kernels (and the shared unfused plan exists only for
+    /// observation/oracle paths).
     fn fork_replica(&self) -> Option<Arc<dyn Backend>> {
         Some(Arc::new(InterpBackend {
             session: self.session.fork_replica(),

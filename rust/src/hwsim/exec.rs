@@ -21,10 +21,14 @@
 
 use super::config::{HwConfig, Rounding};
 use super::cost::{gemm_cost, host_cost, vector_cost, CostReport};
-use super::lut::{ActEval, ActFn, ActLut};
+use super::lut::{ActEval, ActLut};
 use crate::onnx::ir::{Graph, Model, Node};
 use crate::onnx::shape::ConvAttrs;
 use crate::ops::matmul::{gemm_i32, gemm_i32_par};
+use crate::opt::matcher::{
+    act_chain_follows, match_act_chain, match_q_chain, ConsumerIndex, InitPolicy, MatchFail,
+    QChain,
+};
 use crate::parallel::{self, ThreadPool};
 use crate::quant::QType;
 use crate::tensor::{DType, Tensor};
@@ -64,50 +68,16 @@ fn perr(node: &Node, msg: impl Into<String>) -> HwError {
     }
 }
 
-/// Plan-time value -> consumer index, built in ONE pass over the graph so
-/// chain walking is O(1) per edge instead of an O(nodes) scan per lookup.
+/// Map a shared-matcher failure into this compiler's error vocabulary.
 /// The emitted pre-quantized graphs are linear chains; a value with
-/// multiple consumers is outside this compiler's pattern language, flagged
-/// here and reported when (and only when) the chain walk reaches it.
-enum ConsumerEntry {
-    One(usize),
-    Multiple,
-}
-
-struct ConsumerIndex<'g> {
-    map: std::collections::HashMap<&'g str, ConsumerEntry>,
-}
-
-impl<'g> ConsumerIndex<'g> {
-    fn build(g: &'g Graph) -> ConsumerIndex<'g> {
-        let mut map = std::collections::HashMap::new();
-        for (idx, n) in g.nodes.iter().enumerate() {
-            for input in &n.inputs {
-                if input.is_empty() {
-                    continue;
-                }
-                // A node listing the value twice (e.g. Mul(x, x)) is one
-                // consumer, matching the old per-node scan.
-                let entry = map.entry(input.as_str()).or_insert(ConsumerEntry::One(idx));
-                if let ConsumerEntry::One(prev) = entry {
-                    if *prev != idx {
-                        *entry = ConsumerEntry::Multiple;
-                    }
-                }
-            }
-        }
-        ConsumerIndex { map }
-    }
-
-    /// The sole consumer of a value, or `None` at the end of the chain.
-    fn sole_consumer(&self, g: &'g Graph, value: &str) -> Result<Option<&'g Node>, HwError> {
-        match self.map.get(value) {
-            None => Ok(None),
-            Some(ConsumerEntry::One(idx)) => Ok(Some(&g.nodes[*idx])),
-            Some(ConsumerEntry::Multiple) => Err(HwError::Unsupported(format!(
-                "value '{value}' has multiple consumers; hw compiler handles chains"
-            ))),
-        }
+/// multiple consumers is outside the pattern language and reported as
+/// `Unsupported`, any structural deviation as a `Pattern` error.
+fn match_err(e: MatchFail) -> HwError {
+    match e {
+        MatchFail::MultiConsumer { value } => HwError::Unsupported(format!(
+            "value '{value}' has multiple consumers; hw compiler handles chains"
+        )),
+        MatchFail::Mismatch { node, msg } => HwError::Pattern { node, msg },
     }
 }
 
@@ -307,9 +277,14 @@ fn rescale_sat(acc: i32, r: &HwRescale, rounding: Rounding, lo: i32, hi: i32) ->
 impl HwModule {
     /// Compile a pre-quantized standard-ONNX model for this hardware.
     ///
-    /// Chain walking runs over a plan-time [`ConsumerIndex`] (one pass to
-    /// build, O(1) per hop) with borrowed value names — the compile pass
-    /// allocates nothing per node beyond the lifted stages themselves.
+    /// Pattern recognition runs on the SHARED matcher
+    /// ([`crate::opt::matcher`]) — the same chain queries the
+    /// interpreter's plan-time fusion passes use, so the recognition
+    /// logic exists exactly once; this compiler only adds its
+    /// hardware-specific lifting (integer rescale derivation, ROM
+    /// construction, the `scale == 1.0` requantize contract). Chain
+    /// walking is O(1) per edge over the one-pass [`ConsumerIndex`] with
+    /// borrowed value names.
     pub fn compile(model: &Model, cfg: HwConfig) -> Result<HwModule, HwError> {
         let g = &model.graph;
         let inputs = g.runtime_inputs();
@@ -329,7 +304,7 @@ impl HwModule {
             if cur == output_name {
                 break;
             }
-            let node = match idx.sole_consumer(g, cur)? {
+            let (node_idx, node) = match idx.sole_consumer(g, cur).map_err(match_err)? {
                 Some(n) => n,
                 None => break,
             };
@@ -342,29 +317,40 @@ impl HwModule {
                     cur = node.outputs[0].as_str();
                 }
                 "MatMulInteger" => {
-                    let (stage, out) = Self::lift_fc(g, &idx, node, &cfg)?;
-                    stages.push(stage);
-                    cur = out;
+                    let chain = match_q_chain(g, &idx, node_idx, InitPolicy::AnyInitializer)
+                        .map_err(match_err)?;
+                    stages.push(Self::lift_fc(g, &chain, &cfg)?);
+                    cur = chain.output;
                 }
                 "ConvInteger" => {
-                    let (stage, out) = Self::lift_conv(g, &idx, node, &cfg)?;
-                    stages.push(stage);
-                    cur = out;
+                    let chain = match_q_chain(g, &idx, node_idx, InitPolicy::AnyInitializer)
+                        .map_err(match_err)?;
+                    stages.push(Self::lift_conv(g, &chain, &cfg)?);
+                    cur = chain.output;
                 }
                 "DequantizeLinear" => {
-                    let in_scale = scalar_f32(g, &node.inputs[1], node)?;
                     // Look ahead: activation tail or output edge?
-                    let next = idx.sole_consumer(g, &node.outputs[0])?;
-                    match next.map(|n| n.op_type.as_str()) {
-                        Some("Cast") | Some("Tanh") | Some("Sigmoid") => {
-                            let (stage, out) = Self::lift_act(g, &idx, node, in_scale, &cfg)?;
-                            stages.push(stage);
-                            cur = out;
-                        }
-                        _ => {
-                            stages.push(Stage::DequantizeOutput { scale: in_scale });
-                            cur = node.outputs[0].as_str();
-                        }
+                    if act_chain_follows(g, &idx, node).map_err(match_err)? {
+                        let chain = match_act_chain(g, &idx, node_idx, InitPolicy::AnyInitializer)
+                            .map_err(match_err)?;
+                        let eval = if chain.f16 { ActEval::F16 } else { ActEval::F32 };
+                        let lut = ActLut::build(
+                            chain.act,
+                            eval,
+                            chain.in_scale,
+                            chain.out_scale,
+                            chain.out_qtype,
+                            cfg.lut_bits,
+                        );
+                        stages.push(Stage::Act {
+                            lut,
+                            f16_evaluated: chain.f16,
+                        });
+                        cur = chain.output;
+                    } else {
+                        let in_scale = scalar_f32(g, &node.inputs[1], node)?;
+                        stages.push(Stage::DequantizeOutput { scale: in_scale });
+                        cur = node.outputs[0].as_str();
                     }
                 }
                 "MaxPool" => {
@@ -421,266 +407,74 @@ impl HwModule {
         self.batch_splittable
     }
 
-    /// Lift MatMulInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
-    fn lift_fc<'g>(
-        g: &'g Graph,
-        idx: &ConsumerIndex<'g>,
-        mm: &'g Node,
-        cfg: &HwConfig,
-    ) -> Result<(Stage, &'g str), HwError> {
-        let w_t = g
-            .initializer(&mm.inputs[1])
-            .ok_or_else(|| perr(mm, "weight must be initializer"))?;
-        if w_t.rank() != 2 {
-            return Err(perr(mm, "weight must be rank-2"));
-        }
+    /// Lift a matched `MatMulInteger + Add + Cast + Mul(s) [+Relu] +
+    /// QuantizeLinear` chain into the FC integer block.
+    fn lift_fc(g: &Graph, chain: &QChain<'_>, cfg: &HwConfig) -> Result<Stage, HwError> {
+        let w_t = chain.weight; // rank-2, enforced by the matcher
         let (k, n) = (w_t.shape()[0], w_t.shape()[1]);
         let w = w_t.as_quantized_i32()?;
-
-        let mut cur: &str = mm.outputs[0].as_str();
-        let mut node = idx
-            .sole_consumer(g, cur)?
-            .ok_or_else(|| perr(mm, "dangling FC block"))?;
-
-        // Optional bias Add.
-        let mut bias = None;
-        if node.op_type == "Add" {
-            let bias_name = if node.inputs[0] == cur {
-                &node.inputs[1]
-            } else {
-                &node.inputs[0]
-            };
-            let b = g
-                .initializer(bias_name)
-                .ok_or_else(|| perr(node, "bias must be initializer"))?;
-            bias = Some(b.as_i32()?.to_vec());
-            cur = node.outputs[0].as_str();
-            node = idx
-                .sole_consumer(g, cur)?
-                .ok_or_else(|| perr(node, "dangling after bias"))?;
-        }
-
-        // Cast INT32 -> FLOAT.
-        if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
-            return Err(perr(node, "expected Cast to FLOAT after accumulate"));
-        }
-        cur = node.outputs[0].as_str();
-        node = idx
-            .sole_consumer(g, cur)?
-            .ok_or_else(|| perr(node, "dangling after cast"))?;
-
-        // One or two Muls.
-        let mut muls = Vec::new();
-        while node.op_type == "Mul" && muls.len() < 2 {
-            let s_name = if node.inputs[0] == cur {
-                &node.inputs[1]
-            } else {
-                &node.inputs[0]
-            };
-            muls.push(scalar_f32(g, s_name, node)?);
-            cur = node.outputs[0].as_str();
-            node = idx
-                .sole_consumer(g, cur)?
-                .ok_or_else(|| perr(node, "dangling after rescale"))?;
-        }
-        if muls.is_empty() {
-            return Err(perr(node, "expected rescale Mul after Cast"));
-        }
-        let rescale = lift_rescale(&muls, cfg.max_shift)?;
-
-        // Optional ReLU.
-        let mut relu = false;
-        if node.op_type == "Relu" {
-            relu = true;
-            node = idx
-                .sole_consumer(g, node.outputs[0].as_str())?
-                .ok_or_else(|| perr(node, "dangling after relu"))?;
-        }
-
-        // Round + clip stage.
-        if node.op_type != "QuantizeLinear" {
-            return Err(perr(node, "expected QuantizeLinear (round+clip)"));
-        }
-        let unit = scalar_f32(g, &node.inputs[1], node)?;
-        if unit != 1.0 {
-            return Err(perr(node, format!("requantize scale must be 1.0, got {unit}")));
-        }
-        let out_qtype = zp_qtype(g, &node.inputs[2], node)?;
-
-        Ok((
-            Stage::Fc {
-                w,
-                k,
-                n,
-                bias,
-                rescale,
-                relu,
-                out_qtype,
-            },
-            node.outputs[0].as_str(),
-        ))
+        let bias = match chain.bias {
+            Some(b) => Some(b.as_i32()?.to_vec()),
+            None => None,
+        };
+        let rescale = lift_rescale(&chain.muls, cfg.max_shift)?;
+        Self::check_unit_requantize(g, chain)?;
+        Ok(Stage::Fc {
+            w,
+            k,
+            n,
+            bias,
+            rescale,
+            relu: chain.relu,
+            out_qtype: chain.out_qtype,
+        })
     }
 
-    /// Lift ConvInteger + Add + Cast + Mul(s) [+Relu] + QuantizeLinear.
-    fn lift_conv<'g>(
-        g: &'g Graph,
-        idx: &ConsumerIndex<'g>,
-        cv: &'g Node,
-        cfg: &HwConfig,
-    ) -> Result<(Stage, &'g str), HwError> {
-        let w_t = g
-            .initializer(&cv.inputs[1])
-            .ok_or_else(|| perr(cv, "kernel must be initializer"))?;
-        if w_t.rank() != 4 {
-            return Err(perr(cv, "kernel must be rank-4"));
-        }
+    /// Lift the same chain over `ConvInteger` into the conv integer
+    /// block.
+    fn lift_conv(g: &Graph, chain: &QChain<'_>, cfg: &HwConfig) -> Result<Stage, HwError> {
+        let w_t = chain.weight; // rank-4, enforced by the matcher
         let s = w_t.shape();
         let (m, c, kh, kw) = (s[0], s[1], s[2], s[3]);
         let w = w_t.as_quantized_i32()?;
-        let attrs = ConvAttrs::from_node(cv);
-
-        let mut cur: &str = cv.outputs[0].as_str();
-        let mut node = idx
-            .sole_consumer(g, cur)?
-            .ok_or_else(|| perr(cv, "dangling conv block"))?;
-
-        let mut bias = None;
-        if node.op_type == "Add" {
-            let bias_name = if node.inputs[0] == cur {
-                &node.inputs[1]
-            } else {
-                &node.inputs[0]
-            };
-            let b = g
-                .initializer(bias_name)
-                .ok_or_else(|| perr(node, "bias must be initializer"))?;
-            if b.numel() != m {
-                return Err(perr(node, "conv bias must have M elements"));
+        let attrs = ConvAttrs::from_node(&g.nodes[chain.anchor]);
+        let bias = match chain.bias {
+            Some(b) => {
+                if b.numel() != m {
+                    let add = &g.nodes[chain.bias_node.unwrap_or(chain.anchor)];
+                    return Err(perr(add, "conv bias must have M elements"));
+                }
+                Some(b.as_i32()?.to_vec())
             }
-            bias = Some(b.as_i32()?.to_vec());
-            cur = node.outputs[0].as_str();
-            node = idx
-                .sole_consumer(g, cur)?
-                .ok_or_else(|| perr(node, "dangling after bias"))?;
-        }
-
-        if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
-            return Err(perr(node, "expected Cast to FLOAT after conv"));
-        }
-        cur = node.outputs[0].as_str();
-        node = idx
-            .sole_consumer(g, cur)?
-            .ok_or_else(|| perr(node, "dangling after cast"))?;
-
-        let mut muls = Vec::new();
-        while node.op_type == "Mul" && muls.len() < 2 {
-            let s_name = if node.inputs[0] == cur {
-                &node.inputs[1]
-            } else {
-                &node.inputs[0]
-            };
-            muls.push(scalar_f32(g, s_name, node)?);
-            cur = node.outputs[0].as_str();
-            node = idx
-                .sole_consumer(g, cur)?
-                .ok_or_else(|| perr(node, "dangling after rescale"))?;
-        }
-        if muls.is_empty() {
-            return Err(perr(node, "expected rescale Mul after Cast"));
-        }
-        let rescale = lift_rescale(&muls, cfg.max_shift)?;
-
-        let mut relu = false;
-        if node.op_type == "Relu" {
-            relu = true;
-            node = idx
-                .sole_consumer(g, node.outputs[0].as_str())?
-                .ok_or_else(|| perr(node, "dangling after relu"))?;
-        }
-
-        if node.op_type != "QuantizeLinear" {
-            return Err(perr(node, "expected QuantizeLinear (round+clip)"));
-        }
-        let unit = scalar_f32(g, &node.inputs[1], node)?;
-        if unit != 1.0 {
-            return Err(perr(node, "requantize scale must be 1.0"));
-        }
-        let out_qtype = zp_qtype(g, &node.inputs[2], node)?;
-
-        Ok((
-            Stage::Conv {
-                w,
-                m,
-                c,
-                kh,
-                kw,
-                attrs,
-                bias,
-                rescale,
-                relu,
-                out_qtype,
-            },
-            node.outputs[0].as_str(),
-        ))
+            None => None,
+        };
+        let rescale = lift_rescale(&chain.muls, cfg.max_shift)?;
+        Self::check_unit_requantize(g, chain)?;
+        Ok(Stage::Conv {
+            w,
+            m,
+            c,
+            kh,
+            kw,
+            attrs,
+            bias,
+            rescale,
+            relu: chain.relu,
+            out_qtype: chain.out_qtype,
+        })
     }
 
-    /// Lift DequantizeLinear [+Cast f16] + Tanh/Sigmoid [+Cast f32] +
-    /// QuantizeLinear into an activation ROM.
-    fn lift_act<'g>(
-        g: &'g Graph,
-        idx: &ConsumerIndex<'g>,
-        deq: &'g Node,
-        in_scale: f32,
-        cfg: &HwConfig,
-    ) -> Result<(Stage, &'g str), HwError> {
-        let mut node = idx
-            .sole_consumer(g, deq.outputs[0].as_str())?
-            .ok_or_else(|| perr(deq, "dangling act block"))?;
-
-        let mut f16 = false;
-        if node.op_type == "Cast" {
-            if node.attr_str("to") != Some("FLOAT16") {
-                return Err(perr(node, "expected Cast to FLOAT16 in act block"));
-            }
-            f16 = true;
-            node = idx
-                .sole_consumer(g, node.outputs[0].as_str())?
-                .ok_or_else(|| perr(node, "dangling after cast"))?;
+    /// The hardware rescale unit has no second multiplier: the final
+    /// `QuantizeLinear` must be the pure round+clip stage (`scale == 1`).
+    fn check_unit_requantize(g: &Graph, chain: &QChain<'_>) -> Result<(), HwError> {
+        if chain.q_scale != 1.0 {
+            let qnode = &g.nodes[*chain.nodes.last().unwrap()];
+            return Err(perr(
+                qnode,
+                format!("requantize scale must be 1.0, got {}", chain.q_scale),
+            ));
         }
-
-        let act_fn = match node.op_type.as_str() {
-            "Tanh" => ActFn::Tanh,
-            "Sigmoid" => ActFn::Sigmoid,
-            op => return Err(perr(node, format!("expected Tanh/Sigmoid, got {op}"))),
-        };
-        node = idx
-            .sole_consumer(g, node.outputs[0].as_str())?
-            .ok_or_else(|| perr(node, "dangling after act fn"))?;
-
-        if f16 {
-            if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
-                return Err(perr(node, "expected Cast back to FLOAT"));
-            }
-            node = idx
-                .sole_consumer(g, node.outputs[0].as_str())?
-                .ok_or_else(|| perr(node, "dangling after cast"))?;
-        }
-
-        if node.op_type != "QuantizeLinear" {
-            return Err(perr(node, "expected final QuantizeLinear in act block"));
-        }
-        let out_scale = scalar_f32(g, &node.inputs[1], node)?;
-        let out_qtype = zp_qtype(g, &node.inputs[2], node)?;
-
-        let eval = if f16 { ActEval::F16 } else { ActEval::F32 };
-        let lut = ActLut::build(act_fn, eval, in_scale, out_scale, out_qtype, cfg.lut_bits);
-        Ok((
-            Stage::Act {
-                lut,
-                f16_evaluated: f16,
-            },
-            node.outputs[0].as_str(),
-        ))
+        Ok(())
     }
 
     /// Execute one inference. Returns the output tensor and the cost

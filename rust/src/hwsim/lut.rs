@@ -1,138 +1,11 @@
-//! Activation lookup tables.
+//! Activation ROM — re-export shim.
 //!
-//! On fixed-point hardware any pure elementwise int8→int8 function is a
-//! 256-entry ROM. The table is built by composing exactly the float
-//! pipeline the ONNX model codifies (Dequantize → [f16 cast] → Tanh /
-//! Sigmoid → Quantize), so an 8-bit LUT reproduces the standard-tool
-//! output *bit-exactly*; narrower indices (`lut_bits < 8`) quantize the
-//! index and expose the accuracy/area trade-off in the co-design sweep.
+//! The LUT builder moved to [`crate::quant::lut`] so the interpreter's
+//! plan-time graph optimizer (`crate::opt`, LUT-folding pass) and the
+//! hardware simulator share one implementation: the simulator keeps using
+//! [`ActLut::build`] (hardware ROM semantics, narrowable index), the
+//! optimizer uses [`ActLut::build_exact`] (bit-identical to the
+//! interpreter's node chain). Existing `hwsim::lut` paths keep working
+//! through this shim.
 
-use crate::ops::qlinear::round_half_even;
-use crate::quant::QType;
-use crate::tensor::f16::F16;
-
-/// Which activation function the stage computes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ActFn {
-    Tanh,
-    Sigmoid,
-}
-
-/// Precision the (simulated) hardware evaluates the function in when
-/// building the ROM — mirrors the model's Fig. 4 (f32) vs Fig. 5/6 (f16)
-/// variants.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ActEval {
-    F32,
-    F16,
-}
-
-/// A ROM mapping the int8 stage input to the quantized activation output.
-#[derive(Clone, Debug)]
-pub struct ActLut {
-    /// 256 entries indexed by (q8 as u8); values are the output integer
-    /// (i8 or u8 domain per `out_qtype`), stored widened.
-    table: Vec<i16>,
-    pub out_qtype: QType,
-    pub index_bits: u32,
-}
-
-impl ActLut {
-    /// Build the ROM from the codified parameters.
-    pub fn build(
-        f: ActFn,
-        eval: ActEval,
-        in_scale: f32,
-        out_scale: f32,
-        out_qtype: QType,
-        index_bits: u32,
-    ) -> ActLut {
-        let (lo, hi) = out_qtype.range();
-        let mut table = vec![0i16; 256];
-        let index_mask: i32 = !0i32 << (8 - index_bits.min(8)); // top index_bits kept
-        for raw in -128..=127i32 {
-            // Narrow index: truncate low bits (hardware drops them).
-            let idx = raw & index_mask;
-            let x = idx as f32 * in_scale;
-            let y = match (f, eval) {
-                (ActFn::Tanh, ActEval::F32) => x.tanh(),
-                (ActFn::Sigmoid, ActEval::F32) => 1.0 / (1.0 + (-x).exp()),
-                (ActFn::Tanh, ActEval::F16) => F16::from_f32(x).tanh().to_f32(),
-                (ActFn::Sigmoid, ActEval::F16) => F16::from_f32(x).sigmoid().to_f32(),
-            };
-            let q = round_half_even(y / out_scale).clamp(lo as f32, hi as f32) as i16;
-            table[(raw as u8) as usize] = q;
-        }
-        ActLut {
-            table,
-            out_qtype,
-            index_bits,
-        }
-    }
-
-    /// Look up one int8 input.
-    #[inline]
-    pub fn get(&self, q: i8) -> i16 {
-        self.table[(q as u8) as usize]
-    }
-
-    /// Apply to a widened-i32 slice in place (values must be in i8 range;
-    /// the preceding requantize stage guarantees it).
-    pub fn apply(&self, xs: &mut [i32]) {
-        for v in xs {
-            *v = self.get(*v as i8) as i32;
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn full_width_lut_matches_float_pipeline() {
-        let in_scale = 4.0 / 127.0;
-        let out_scale = 1.0 / 127.0;
-        let lut = ActLut::build(ActFn::Tanh, ActEval::F32, in_scale, out_scale, QType::I8, 8);
-        for q in -128..=127i32 {
-            let x = q as f32 * in_scale;
-            let want = round_half_even(x.tanh() / out_scale).clamp(-128.0, 127.0) as i16;
-            assert_eq!(lut.get(q as i8), want, "q={q}");
-        }
-    }
-
-    #[test]
-    fn sigmoid_lut_is_uint8_monotone() {
-        let lut = ActLut::build(
-            ActFn::Sigmoid,
-            ActEval::F16,
-            8.0 / 127.0,
-            1.0 / 255.0,
-            QType::U8,
-            8,
-        );
-        let mut prev = -1i16;
-        for q in -128..=127i32 {
-            let v = lut.get(q as i8);
-            assert!((0..=255).contains(&v));
-            assert!(v >= prev, "monotonicity broken at {q}");
-            prev = v;
-        }
-        assert_eq!(lut.get(-128), 0);
-        assert_eq!(lut.get(127), 255);
-    }
-
-    #[test]
-    fn narrow_index_coarsens() {
-        let fine = ActLut::build(ActFn::Tanh, ActEval::F32, 0.03, 1.0 / 127.0, QType::I8, 8);
-        let coarse = ActLut::build(ActFn::Tanh, ActEval::F32, 0.03, 1.0 / 127.0, QType::I8, 5);
-        // Coarse LUT is piecewise constant over 2^3-wide input bins.
-        assert_eq!(coarse.get(8), coarse.get(9));
-        assert_eq!(coarse.get(8), coarse.get(15));
-        // And differs from the fine LUT somewhere.
-        let diffs = (-128..=127)
-            .filter(|&q| fine.get(q as i8) != coarse.get(q as i8))
-            .count();
-        assert!(diffs > 0);
-    }
-}
+pub use crate::quant::lut::{ActEval, ActFn, ActLut};

@@ -36,6 +36,8 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use thiserror::Error;
 
+pub use crate::opt::PlanOptions;
+
 /// Smallest batch the auto-parallel path will split: below this the pool
 /// dispatch overhead dominates the per-row graph execution.
 pub const PAR_MIN_BATCH: usize = 4;
@@ -91,6 +93,40 @@ pub struct NodeStats {
     pub calls: u64,
 }
 
+/// What plan compilation did to this session's model: step counts before
+/// and after the plan-time graph optimizer, and the fused-kernel counts
+/// by kind — fusion coverage observable without a debugger (printed by
+/// `examples/serve_demo.rs`, asserted by the CI fusion smoke).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Scheduled graph nodes (= steps of the unfused plan).
+    pub nodes: usize,
+    /// Steps of the execution plan after fusion/elimination.
+    pub steps: usize,
+    /// Graph nodes absorbed into fused steps (sum of the fused spans).
+    pub fused_nodes: usize,
+    pub fused_qfc: usize,
+    pub fused_qconv: usize,
+    pub fused_act_lut: usize,
+    pub eliminated: usize,
+}
+
+impl std::fmt::Display for PlanStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} eliminated)",
+            self.nodes,
+            self.steps,
+            self.fused_qfc,
+            self.fused_qconv,
+            self.fused_act_lut,
+            self.fused_nodes,
+            self.eliminated
+        )
+    }
+}
+
 /// Per-plan-step accumulator behind the profiler: stats are keyed by
 /// schedule position, so a profiled run takes ONE lock at the end instead
 /// of a `HashMap` entry lock per node.
@@ -112,7 +148,15 @@ struct StepProfile {
 /// other's arena locks.
 pub struct Session {
     model: Arc<Model>,
+    /// The execution plan: fused by the plan-time optimizer
+    /// (`crate::opt`) unless compiled with `PlanOptions { fuse: false }`
+    /// or no pass changed anything (then it IS `unfused`, shared).
     plan: Arc<CompiledPlan>,
+    /// The 1:1 node-per-step plan. Serves [`Session::run_observed`] (so
+    /// calibration sees every intermediate value exactly as the legacy
+    /// interpreter streamed it), profiling sessions (per-NODE timing
+    /// attribution), and the `run_unplanned` oracle's schedule.
+    unfused: Arc<CompiledPlan>,
     /// Frees as value names, for the legacy string-keyed path only
     /// (kept so [`Session::run_unplanned`] reproduces the pre-plan
     /// interpreter faithfully, including its memory behavior).
@@ -175,30 +219,58 @@ fn detect_batch_symbol(model: &Model, types: &HashMap<String, ValueType>) -> Opt
 }
 
 impl Session {
-    /// Validate + plan + lower. Fails on any malformed or non-standard
-    /// model — including operators the executor cannot run, which now
-    /// error here (plan time) instead of at the first `run`.
+    /// Validate + plan + lower (with the plan-time graph optimizer on —
+    /// the default). Fails on any malformed or non-standard model —
+    /// including operators the executor cannot run, which error here
+    /// (plan time) instead of at the first `run`.
     pub fn new(model: Model) -> Result<Session, SessionError> {
+        Session::new_with_options(model, PlanOptions::default())
+    }
+
+    /// [`Session::new`] with explicit [`PlanOptions`]. `fuse: false`
+    /// compiles only the 1:1 node-per-step plan (useful as the
+    /// fused-vs-unfused baseline in benches and differential tests); the
+    /// unfused plan is always compiled regardless, because the observer
+    /// and oracle paths run on it.
+    pub fn new_with_options(model: Model, opts: PlanOptions) -> Result<Session, SessionError> {
         let types = check_model(&model)?;
         let batch_symbol = detect_batch_symbol(&model, &types);
         let order = topo_order(&model.graph)
             .map_err(|e| SessionError::Check(crate::onnx::shape::ShapeError::from(e).into()))?;
-        let plan = CompiledPlan::compile(&model, &order)?;
-        let unplanned_frees: Vec<Vec<String>> = plan
+        // Compile the execution plan first (optimizer on when requested).
+        // If no pass changed anything, that plan IS the 1:1 lowering and
+        // serves both roles — the common unfusible model pays ONE compile
+        // and bakes every weight once; only sessions where fusion
+        // actually fired compile the second (unfused) plan for the
+        // observer/profiling/oracle paths.
+        let first = Arc::new(CompiledPlan::compile(&model, &order, &types, &opts)?);
+        let (plan, unfused) = if opts.fuse && first.stats.changed() {
+            let unfused = Arc::new(CompiledPlan::compile(
+                &model,
+                &order,
+                &types,
+                &PlanOptions { fuse: false },
+            )?);
+            (first, unfused)
+        } else {
+            (first.clone(), first)
+        };
+        let unplanned_frees: Vec<Vec<String>> = unfused
             .steps
             .iter()
             .map(|s| {
                 s.frees
                     .iter()
-                    .map(|&f| plan.names[f as usize].clone())
+                    .map(|&f| unfused.names[f as usize].clone())
                     .collect()
             })
             .collect();
-        let profile = Mutex::new(vec![StepProfile::default(); plan.steps.len()]);
+        let profile = Mutex::new(vec![StepProfile::default(); unfused.steps.len()]);
 
         Ok(Session {
             model: Arc::new(model),
-            plan: Arc::new(plan),
+            plan,
+            unfused,
             unplanned_frees: Arc::new(unplanned_frees),
             batch_symbol,
             parallel: true,
@@ -219,21 +291,35 @@ impl Session {
         Session {
             model: self.model.clone(),
             plan: self.plan.clone(),
+            unfused: self.unfused.clone(),
             unplanned_frees: self.unplanned_frees.clone(),
             batch_symbol: self.batch_symbol.clone(),
             parallel: self.parallel,
             arenas: Mutex::new(Vec::new()),
-            profile: Mutex::new(vec![StepProfile::default(); self.plan.steps.len()]),
+            profile: Mutex::new(vec![StepProfile::default(); self.unfused.steps.len()]),
             profiling: self.profiling,
         }
     }
 
     /// Enable per-node wall-clock accounting (used by the §Perf pass).
-    /// Profiling sessions always execute serially so per-node timings stay
-    /// attributable.
+    /// Profiling sessions always execute serially — and on the UNFUSED
+    /// plan — so per-node timings stay attributable to single operators.
     pub fn with_profiling(mut self) -> Session {
         self.profiling = true;
+        // Pooled arenas are sized for the execution plan, which just
+        // changed to the unfused one — drop any warmed-up arenas.
+        self.arenas = Mutex::new(Vec::new());
         self
+    }
+
+    /// The plan `run`/`run_into`/`run_serial` execute: the fused plan,
+    /// except for profiling sessions (per-node attribution).
+    fn exec_plan(&self) -> &Arc<CompiledPlan> {
+        if self.profiling {
+            &self.unfused
+        } else {
+            &self.plan
+        }
     }
 
     /// Enable/disable the batch-parallel `run` path (default: enabled).
@@ -249,6 +335,21 @@ impl Session {
 
     pub fn model(&self) -> &Model {
         &self.model
+    }
+
+    /// Fusion coverage of this session's execution plan — see
+    /// [`PlanStats`].
+    pub fn plan_stats(&self) -> PlanStats {
+        let s = self.plan.stats;
+        PlanStats {
+            nodes: self.unfused.steps.len(),
+            steps: self.plan.steps.len(),
+            fused_nodes: self.plan.steps.iter().map(|st| st.span.len()).sum(),
+            fused_qfc: s.fused_qfc,
+            fused_qconv: s.fused_qconv,
+            fused_act_lut: s.fused_act_lut,
+            eliminated: s.eliminated,
+        }
     }
 
     /// Execute the graph. `feeds` must cover every runtime input; outputs
@@ -313,10 +414,9 @@ impl Session {
             // Not batch-split (small batch or non-splittable model): run on
             // this thread, leaving the op-level GEMM/conv parallelism free
             // to engage for large single calls.
-            return self.execute_core(feeds, &mut |_, _| {}, outs);
+            return self.execute_core(feeds, outs);
         }
-        let mut noop = |_: &str, _: &Tensor| {};
-        parallel::serial_scope(|| self.execute_core(feeds, &mut noop, outs))
+        parallel::serial_scope(|| self.execute_core(feeds, outs))
     }
 
     /// Execute strictly on the calling thread — [`parallel::serial_scope`]
@@ -324,9 +424,8 @@ impl Session {
     /// so this is a true single-thread reference.
     pub fn run_serial(&self, feeds: &[(&str, Tensor)]) -> Result<Vec<Tensor>, SessionError> {
         let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
-        let mut noop = |_: &str, _: &Tensor| {};
         let mut outs = Vec::new();
-        parallel::serial_scope(|| self.execute_core(&refs, &mut noop, &mut outs))?;
+        parallel::serial_scope(|| self.execute_core(&refs, &mut outs))?;
         Ok(outs)
     }
 
@@ -404,14 +503,24 @@ impl Session {
     /// intermediate activations without declaring them as outputs. Names
     /// come from the plan's interner (slot -> name), so observation adds
     /// no per-call allocation.
+    ///
+    /// Always runs the UNFUSED plan: a fused span materializes none of
+    /// its mid-chain values, so observing it would silently drop events.
+    /// On the unfused plan the observer stream is bit-identical to the
+    /// legacy interpreter's (regression-pinned in
+    /// `tests/executor_plan.rs`). Uses a fresh arena (the session pool's
+    /// arenas are sized for the execution plan) — this is the calibration
+    /// path, not a serving hot path.
     pub fn run_observed(
         &self,
         feeds: &[(&str, Tensor)],
         observer: &mut dyn FnMut(&str, &Tensor),
     ) -> Result<Vec<Tensor>, SessionError> {
         let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
+        self.validate_feeds(&refs)?;
         let mut outs = Vec::new();
-        self.execute_core(&refs, observer, &mut outs)?;
+        let mut arena = ScratchArena::new(self.unfused.n_slots, self.unfused.steps.len());
+        self.execute_steps(&self.unfused, &mut arena, &refs, observer, &mut outs, false)?;
         Ok(outs)
     }
 
@@ -508,18 +617,18 @@ impl Session {
     fn execute_core(
         &self,
         feeds: &[(&str, &Tensor)],
-        observer: &mut dyn FnMut(&str, &Tensor),
         outs: &mut Vec<Tensor>,
     ) -> Result<(), SessionError> {
         self.validate_feeds(feeds)?;
+        let plan = self.exec_plan();
         let mut arena = {
             let mut pool = self.arenas.lock().unwrap();
             pool.pop()
         }
-        .unwrap_or_else(|| ScratchArena::new(self.plan.n_slots, self.plan.steps.len()));
+        .unwrap_or_else(|| ScratchArena::new(plan.n_slots, plan.steps.len()));
 
         // Recycle the caller's previous outputs into their slots.
-        for (t, src) in outs.drain(..).zip(self.plan.outputs.iter()) {
+        for (t, src) in outs.drain(..).zip(plan.outputs.iter()) {
             match *src {
                 Src::Slot(s)
                 | Src::SlotOrInit { slot: s, .. }
@@ -529,7 +638,9 @@ impl Session {
             }
         }
 
-        let result = self.execute_steps(&mut arena, feeds, observer, outs);
+        let mut noop = |_: &str, _: &Tensor| {};
+        let result =
+            self.execute_steps(plan, &mut arena, feeds, &mut noop, outs, self.profiling);
         // Teardown: park every remaining live value for the next run and
         // return the arena — also on the error path. Beyond the cap the
         // arena is dropped: memory stays bounded by MAX_POOLED_ARENAS
@@ -544,26 +655,29 @@ impl Session {
         result
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn execute_steps(
         &self,
+        plan: &CompiledPlan,
         arena: &mut ScratchArena,
         feeds: &[(&str, &Tensor)],
         observer: &mut dyn FnMut(&str, &Tensor),
         outs: &mut Vec<Tensor>,
+        profile: bool,
     ) -> Result<(), SessionError> {
         let g = &self.model.graph;
         let inits = &g.initializers;
-        let names = &self.plan.names;
+        let names = &plan.names;
         for &(name, t) in feeds {
             observer(name, t);
         }
 
-        let mut timings: Vec<u128> = if self.profiling {
-            vec![0; self.plan.steps.len()]
+        let mut timings: Vec<u128> = if profile {
+            vec![0; plan.steps.len()]
         } else {
             Vec::new()
         };
-        for (pos, step) in self.plan.steps.iter().enumerate() {
+        for (pos, step) in plan.steps.iter().enumerate() {
             // Resolve inputs on the stack — no per-node heap allocation.
             let n_in = step.inputs.len();
             let mut stack: [Option<&Tensor>; STACK_INPUTS] = [None; STACK_INPUTS];
@@ -587,7 +701,7 @@ impl Session {
                 Some(slot) => arena.recycle[slot as usize].take(),
                 None => None,
             };
-            let t0 = self.profiling.then(std::time::Instant::now);
+            let t0 = profile.then(std::time::Instant::now);
             let out = step
                 .kernel
                 .run_with(input_refs, recycled, &mut arena.scratch[pos])
@@ -614,7 +728,7 @@ impl Session {
             }
         }
 
-        if self.profiling {
+        if profile {
             // One lock per run: merge the local step timings.
             let mut prof = self.profile.lock().unwrap();
             for (p, &nanos) in prof.iter_mut().zip(&timings) {
@@ -623,8 +737,8 @@ impl Session {
             }
         }
 
-        outs.reserve(self.plan.outputs.len());
-        for (src, vi) in self.plan.outputs.iter().zip(&g.outputs) {
+        outs.reserve(plan.outputs.len());
+        for (src, vi) in plan.outputs.iter().zip(&g.outputs) {
             let t = match *src {
                 Src::Slot(s) => arena.store[s as usize].take(),
                 Src::SlotOrInit { slot, init } => arena.store[slot as usize]
@@ -674,7 +788,7 @@ impl Session {
             values.insert(name.to_string(), t.clone());
         }
 
-        for (pos, step) in self.plan.steps.iter().enumerate() {
+        for (pos, step) in self.unfused.steps.iter().enumerate() {
             let node = &g.nodes[step.node_idx];
             let inputs: Vec<Option<&Tensor>> = node
                 .inputs
@@ -730,7 +844,7 @@ impl Session {
     pub fn profile(&self) -> Vec<NodeStats> {
         let prof = self.profile.lock().unwrap();
         let mut v: Vec<NodeStats> = self
-            .plan
+            .unfused
             .steps
             .iter()
             .zip(prof.iter())

@@ -23,7 +23,9 @@
 
 use super::SessionError;
 use crate::onnx::ir::Model;
+use crate::onnx::shape::ValueType;
 use crate::ops::Kernel;
+use crate::opt::{self, OptStats, PlanItem, PlanOptions};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -49,10 +51,16 @@ pub(crate) enum Src {
     FeedOrInit { slot: u32, init: u32 },
 }
 
-/// One scheduled node: pre-bound kernel, resolved inputs, output slot,
-/// and the slots whose last use this step is.
+/// One scheduled step: pre-bound kernel, resolved inputs, output slot,
+/// and the slots whose last use this step is. A step is usually one
+/// graph node; after the plan-time optimizer (`crate::opt`) it may cover
+/// a whole fused chain, recorded in `span`.
 pub(crate) struct Step {
+    /// Anchor graph-node index (error reporting, profiling labels).
     pub node_idx: usize,
+    /// All graph-node indices this step covers, in chain order — empty
+    /// for ordinary 1:1 steps (the anchor alone).
+    pub span: Box<[u32]>,
     pub kernel: Kernel,
     pub inputs: Box<[Src]>,
     /// Slot of `outputs[0]` when it is named (the admitted operator set
@@ -80,6 +88,8 @@ pub(crate) struct CompiledPlan {
     pub names: Vec<String>,
     /// Graph outputs in declaration order.
     pub outputs: Vec<Src>,
+    /// What the plan-time optimizer did (zeroed for unfused plans).
+    pub stats: OptStats,
 }
 
 /// Per-session recycled execution state: the steady-state zero-allocation
@@ -168,40 +178,65 @@ pub(crate) fn resolve_src<'v>(
 }
 
 impl CompiledPlan {
-    /// Lower `model` (already checked) along the given schedule.
-    pub fn compile(model: &Model, order: &[usize]) -> Result<CompiledPlan, SessionError> {
+    /// Lower `model` (already checked) along the given schedule, running
+    /// the plan-time optimizer first when `opts.fuse` is set. `types` is
+    /// the checker's value-type map (consumed by the optimizer's LUT
+    /// pass). With `fuse: false` the lowering is the 1:1 node-per-step
+    /// form the differential oracle and observer path rely on.
+    pub fn compile(
+        model: &Model,
+        order: &[usize],
+        types: &HashMap<String, ValueType>,
+        opts: &PlanOptions,
+    ) -> Result<CompiledPlan, SessionError> {
         let g = &model.graph;
+        let opt::Optimized {
+            items,
+            aliases,
+            stats,
+        } = opt::optimize(model, order, types, opts);
         let init_pos: HashMap<&str, u32> = g
             .initializers
             .iter()
             .enumerate()
             .map(|(i, (n, _))| (n.as_str(), i as u32))
             .collect();
+        // Eliminated no-op steps leave their output name as an alias of
+        // their input; every name resolution canonicalizes through this
+        // map first (empty for unfused plans).
+        let canon = |name: &str| -> &str {
+            aliases.get(name).map(String::as_str).unwrap_or(name)
+        };
 
         // Intern: slots for every graph input (feeds, including shadowed
-        // initializers) and every named node output.
-        fn intern<'g>(
-            name: &'g str,
-            slot_of: &mut HashMap<&'g str, u32>,
-            names: &mut Vec<String>,
-        ) -> u32 {
+        // initializers) and every value a surviving step produces
+        // (mid-chain values of fused spans are never materialized and get
+        // no slot).
+        fn intern(name: &str, slot_of: &mut HashMap<String, u32>, names: &mut Vec<String>) -> u32 {
             if let Some(&s) = slot_of.get(name) {
                 return s;
             }
             let s = names.len() as u32;
             names.push(name.to_string());
-            slot_of.insert(name, s);
+            slot_of.insert(name.to_string(), s);
             s
         }
-        let mut slot_of: HashMap<&str, u32> = HashMap::new();
+        let mut slot_of: HashMap<String, u32> = HashMap::new();
         let mut names: Vec<String> = Vec::new();
         for vi in &g.inputs {
             intern(&vi.name, &mut slot_of, &mut names);
         }
-        for &idx in order {
-            for out in &g.nodes[idx].outputs {
-                if !out.is_empty() {
-                    intern(out, &mut slot_of, &mut names);
+        for item in &items {
+            match item {
+                PlanItem::Node(idx) => {
+                    for out in &g.nodes[*idx].outputs {
+                        if !out.is_empty() {
+                            intern(out, &mut slot_of, &mut names);
+                        }
+                    }
+                }
+                PlanItem::Fused { output, .. } => {
+                    intern(output, &mut slot_of, &mut names);
                 }
             }
         }
@@ -210,6 +245,7 @@ impl CompiledPlan {
             if name.is_empty() {
                 return Src::None;
             }
+            let name = canon(name);
             // Graph-input slots resolve through the run's feeds (the
             // store holds only node-produced values — see [`Src`]).
             let is_feed = g.input(name).is_some();
@@ -226,33 +262,58 @@ impl CompiledPlan {
             }
         };
 
-        // Lower each scheduled node.
-        let mut steps = Vec::with_capacity(order.len());
-        for &idx in order {
-            let node = &g.nodes[idx];
-            let kernel =
-                Kernel::bind_in_graph(node, g).map_err(|source| SessionError::Op {
-                    node: node.name.clone(),
-                    source,
-                })?;
-            let inputs: Box<[Src]> = node.inputs.iter().map(|n| resolve(n)).collect();
-            let output = node
-                .outputs
-                .first()
-                .filter(|n| !n.is_empty())
-                .map(|n| slot_of[n.as_str()]);
-            steps.push(Step {
-                node_idx: idx,
-                kernel,
-                inputs,
-                output,
-                frees: Box::default(),
-            });
+        // Lower each surviving item.
+        let mut steps = Vec::with_capacity(items.len());
+        for item in items {
+            match item {
+                PlanItem::Node(idx) => {
+                    let node = &g.nodes[idx];
+                    let kernel =
+                        Kernel::bind_in_graph(node, g).map_err(|source| SessionError::Op {
+                            node: node.name.clone(),
+                            source,
+                        })?;
+                    let inputs: Box<[Src]> = node.inputs.iter().map(|n| resolve(n)).collect();
+                    let output = node
+                        .outputs
+                        .first()
+                        .filter(|n| !n.is_empty())
+                        .map(|n| slot_of[canon(n)]);
+                    steps.push(Step {
+                        node_idx: idx,
+                        span: Box::default(),
+                        kernel,
+                        inputs,
+                        output,
+                        frees: Box::default(),
+                    });
+                }
+                PlanItem::Fused {
+                    nodes,
+                    kernel,
+                    input,
+                    output,
+                } => {
+                    let inputs: Box<[Src]> = [resolve(&input)].into();
+                    let out_slot = slot_of[output.as_str()];
+                    steps.push(Step {
+                        node_idx: nodes[0],
+                        span: nodes.iter().map(|&n| n as u32).collect(),
+                        kernel,
+                        inputs,
+                        output: Some(out_slot),
+                        frees: Box::default(),
+                    });
+                }
+            }
         }
+
+        let outputs: Vec<Src> = g.outputs.iter().map(|vi| resolve(&vi.name)).collect();
 
         // Last-use analysis over the schedule, on slots. Only pure-slot
         // values are freed: initializer-backed inputs are owned by the
-        // model and graph outputs live to the end of the run.
+        // model, and any slot a graph output resolves to (directly or
+        // through an alias) lives to the end of the run.
         let mut last_use: HashMap<u32, usize> = HashMap::new();
         for (pos, step) in steps.iter().enumerate() {
             for src in step.inputs.iter() {
@@ -261,9 +322,15 @@ impl CompiledPlan {
                 }
             }
         }
-        for vi in &g.outputs {
-            if let Some(&s) = slot_of.get(vi.name.as_str()) {
-                last_use.remove(&s);
+        for src in &outputs {
+            match *src {
+                Src::Slot(s)
+                | Src::SlotOrInit { slot: s, .. }
+                | Src::Feed { slot: s }
+                | Src::FeedOrInit { slot: s, .. } => {
+                    last_use.remove(&s);
+                }
+                Src::Init(_) | Src::None => {}
             }
         }
         let mut frees: Vec<Vec<u32>> = vec![Vec::new(); steps.len()];
@@ -274,13 +341,12 @@ impl CompiledPlan {
             step.frees = f.into_boxed_slice();
         }
 
-        let outputs = g.outputs.iter().map(|vi| resolve(&vi.name)).collect();
-
         Ok(CompiledPlan {
             steps,
             n_slots: names.len(),
             names,
             outputs,
+            stats,
         })
     }
 }

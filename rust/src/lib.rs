@@ -14,6 +14,10 @@
 //!   patterns use (MatMulInteger, ConvInteger, QuantizeLinear, ...).
 //! * [`interp`] — a generic graph executor ("ONNXruntime" stand-in): it has
 //!   no quantization-specific logic, it simply runs standard operators.
+//! * [`opt`] — the plan-time graph optimizer: a shared DAG pattern matcher
+//!   over the codified chains plus fusion / LUT-folding / elimination
+//!   passes, feeding both the interpreter's compiled plans and (through
+//!   the matcher) the hwsim pattern compiler.
 //! * [`quant`] — the decoupled quantization toolchain: calibration,
 //!   symmetric scales, and the §3.1 integer-multiplier + right-shift
 //!   rescale decomposition.
@@ -40,6 +44,7 @@ pub mod hwsim;
 pub mod interp;
 pub mod onnx;
 pub mod ops;
+pub mod opt;
 pub mod parallel;
 pub mod proptest_util;
 pub mod quant;

@@ -1,0 +1,419 @@
+//! Fused quantized kernels — the execution half of the plan-time graph
+//! optimizer (`crate::opt`).
+//!
+//! Each kernel replaces a whole codified operator chain with one step:
+//!
+//! * [`FusedQFc`] / [`FusedQConv`] — the integer accumulate (reusing the
+//!   packed int8 GEMM / im2col kernels through their existing `_into`
+//!   entry points, accumulator parked in per-step scratch) followed by a
+//!   SINGLE epilogue pass doing bias add, the Mul-codified rescale, the
+//!   optional ReLU, and the round+saturate requantization — writing the
+//!   final i8/u8 output directly. The unfused chain executes the same
+//!   arithmetic as 5–7 separate full passes over the activation tensor
+//!   with an intermediate buffer each.
+//! * [`FusedActLut`] — the Dequantize → (f16) activation → Quantize chain
+//!   as a 256-entry table lookup ([`ActLut::build_exact`]).
+//!
+//! **Bit-identity contract:** every per-element operation here is the
+//! same f32/i32 scalar sequence the unfused kernels perform, in the same
+//! order — `(acc +wrap bias) as f32 * s1 [* s2] [max 0] * (1/scale)`,
+//! `round_half_even`, `+ zp`, saturate — so fused plans are bit-identical
+//! to unfused plans and to the legacy interpreter on every input
+//! (differential proof: `tests/executor_plan.rs`; the epilogue is
+//! elementwise, so the GEMM's blocking/parallelism guarantees carry over
+//! unchanged).
+
+use super::OpError;
+use super::{conv, matmul, qlinear};
+use crate::onnx::shape::ConvAttrs;
+use crate::quant::lut::ActLut;
+use crate::quant::QType;
+use crate::tensor::{recycled_i8, recycled_u8, Shape, Tensor, TensorData};
+
+/// The baked scalar tail of a quantized FC/conv chain: `Cast → Mul(s1)
+/// [→ Mul(s2)] [→ Relu] → QuantizeLinear(1/inv_scale, zp)`.
+pub struct QEpilogue {
+    pub s1: f32,
+    pub s2: Option<f32>,
+    pub relu: bool,
+    /// `1.0 / q_scale`, the same reciprocal `quantize_linear_into`
+    /// computes per call (baking it changes nothing: same f32 value).
+    pub inv_scale: f32,
+    pub zp: i32,
+    pub out_qtype: QType,
+}
+
+impl QEpilogue {
+    /// The exact unfused per-element sequence on a post-bias accumulator
+    /// value, up to (but not including) the saturating cast.
+    #[inline]
+    fn rescale(&self, v: i32) -> f32 {
+        let mut x = v as f32; // Cast INT32 -> FLOAT
+        x *= self.s1; // Mul(Quant_scale)
+        if let Some(s2) = self.s2 {
+            x *= s2; // Mul(Quant_shift)
+        }
+        if self.relu {
+            x = x.max(0.0); // Relu (f32)
+        }
+        qlinear::round_half_even(x * self.inv_scale) + self.zp as f32
+    }
+}
+
+/// How the chain's bias Add broadcasts over the accumulator.
+pub enum BiasLayout<'a> {
+    None,
+    /// FC: bias `[N]` (or `[1, N]`) cycling per output row.
+    PerColumn(&'a [i32]),
+    /// Conv: bias `[1, M, 1, 1]`, constant over each `oh*ow` patch.
+    PerChannel { bias: &'a [i32], patch: usize },
+}
+
+/// One pass over the i32 accumulator: bias add (wrapping, exactly the
+/// unfused i32 `Add`), epilogue rescale, saturate, write the quantized
+/// output into recycled storage.
+fn write_quantized(
+    acc: &[i32],
+    bias: BiasLayout<'_>,
+    epi: &QEpilogue,
+    shape: Shape,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
+    let n = acc.len();
+    macro_rules! emit {
+        ($recycle:ident, $sat:path, $variant:ident) => {{
+            let mut o = $recycle(recycled, n);
+            match bias {
+                BiasLayout::PerColumn(b) if !b.is_empty() => {
+                    for row in acc.chunks_exact(b.len()) {
+                        o.extend(
+                            row.iter()
+                                .zip(b)
+                                .map(|(&v, &bv)| $sat(epi.rescale(v.wrapping_add(bv)))),
+                        );
+                    }
+                }
+                BiasLayout::PerChannel { bias: b, patch } if !b.is_empty() && patch > 0 => {
+                    let mut pos = 0;
+                    while pos < n {
+                        for &bv in b {
+                            o.extend(
+                                acc[pos..pos + patch]
+                                    .iter()
+                                    .map(|&v| $sat(epi.rescale(v.wrapping_add(bv)))),
+                            );
+                            pos += patch;
+                        }
+                    }
+                }
+                _ => o.extend(acc.iter().map(|&v| $sat(epi.rescale(v)))),
+            }
+            TensorData::$variant(o)
+        }};
+    }
+    let data = match epi.out_qtype {
+        QType::I8 => emit!(recycled_i8, qlinear::saturate_i8, I8),
+        QType::U8 => emit!(recycled_u8, qlinear::saturate_u8, U8),
+    };
+    Ok(Tensor::new(shape, data)?)
+}
+
+/// Fused quantized fully-connected block: `MatMulInteger [+Add] + Cast +
+/// Mul[+Mul] [+Relu] + QuantizeLinear` as one kernel. The weight fields
+/// mirror [`super::Kernel::MatMulIntegerPrebound`] (packed i8 panels with
+/// the widened-i32 fallback).
+pub struct FusedQFc {
+    pub bw: Vec<i32>,
+    pub bp: Option<matmul::PackedB>,
+    pub k: usize,
+    pub n: usize,
+    pub a_zp: i32,
+    /// Row-broadcast bias, length `n`.
+    pub bias: Option<Vec<i32>>,
+    pub epi: QEpilogue,
+}
+
+impl FusedQFc {
+    /// `scratch[0]` parks the i32 accumulator between runs (the only
+    /// intermediate buffer of the whole chain); `recycled` is the retired
+    /// quantized output — steady state allocates nothing
+    /// (`tests/alloc_regression.rs`).
+    pub fn run(
+        &self,
+        x: &Tensor,
+        recycled: Option<Tensor>,
+        scratch: &mut [Option<Tensor>; 2],
+    ) -> Result<Tensor, OpError> {
+        let acc = matmul::matmul_integer_prewidened_into(
+            x,
+            &self.bw,
+            self.bp.as_ref(),
+            self.k,
+            self.n,
+            self.a_zp,
+            scratch[0].take(),
+        )?;
+        let bias = match &self.bias {
+            Some(b) => BiasLayout::PerColumn(b),
+            None => BiasLayout::None,
+        };
+        let out = write_quantized(
+            acc.as_i32()?,
+            bias,
+            &self.epi,
+            Shape::from_slice(acc.shape()),
+            recycled,
+        )?;
+        scratch[0] = Some(acc);
+        Ok(out)
+    }
+}
+
+/// Fused quantized convolution block: the same chain over `ConvInteger`.
+/// Weight fields mirror [`super::Kernel::ConvIntegerPrebound`].
+pub struct FusedQConv {
+    pub wv: Vec<i32>,
+    pub wp: Option<matmul::PackedA>,
+    pub m: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub x_zp: i32,
+    pub attrs: ConvAttrs,
+    /// Per-output-channel bias, length `m` (from the `[1, M, 1, 1]`
+    /// initializer).
+    pub bias: Option<Vec<i32>>,
+    pub epi: QEpilogue,
+}
+
+impl FusedQConv {
+    /// `scratch[0]` is the im2col column buffer, `scratch[1]` parks the
+    /// i32 accumulator; `recycled` the retired quantized output.
+    pub fn run(
+        &self,
+        x: &Tensor,
+        recycled: Option<Tensor>,
+        scratch: &mut [Option<Tensor>; 2],
+    ) -> Result<Tensor, OpError> {
+        let [col_scratch, acc_scratch] = scratch;
+        let acc = conv::conv_integer_prewidened_into(
+            x,
+            &self.wv,
+            self.wp.as_ref(),
+            self.m,
+            self.c,
+            self.kh,
+            self.kw,
+            self.x_zp,
+            &self.attrs,
+            acc_scratch.take(),
+            col_scratch,
+        )?;
+        let shape = acc.shape(); // [nb, m, oh, ow]
+        let patch = shape[2] * shape[3];
+        let bias = match &self.bias {
+            Some(b) => BiasLayout::PerChannel { bias: b, patch },
+            None => BiasLayout::None,
+        };
+        let out = write_quantized(
+            acc.as_i32()?,
+            bias,
+            &self.epi,
+            Shape::from_slice(acc.shape()),
+            recycled,
+        )?;
+        *acc_scratch = Some(acc);
+        Ok(out)
+    }
+}
+
+/// Fused activation chain as a 256-entry table over the 8-bit input —
+/// see [`ActLut::build_exact`] for why a lookup is bit-identical to the
+/// node chain.
+pub struct FusedActLut {
+    pub lut: ActLut,
+    /// The planned input domain (i8 vs u8 — fixed by the checker's type
+    /// of the dequantize input at plan time).
+    pub in_qtype: QType,
+}
+
+impl FusedActLut {
+    pub fn run(&self, x: &Tensor, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
+        let n = x.numel();
+        let shape = Shape::from_slice(x.shape());
+        let data = match (x.data(), self.in_qtype, self.lut.out_qtype) {
+            (TensorData::I8(v), QType::I8, QType::I8) => {
+                let mut o = recycled_i8(recycled, n);
+                o.extend(v.iter().map(|&q| self.lut.get_raw(q as u8) as i8));
+                TensorData::I8(o)
+            }
+            (TensorData::I8(v), QType::I8, QType::U8) => {
+                let mut o = recycled_u8(recycled, n);
+                o.extend(v.iter().map(|&q| self.lut.get_raw(q as u8) as u8));
+                TensorData::U8(o)
+            }
+            (TensorData::U8(v), QType::U8, QType::I8) => {
+                let mut o = recycled_i8(recycled, n);
+                o.extend(v.iter().map(|&q| self.lut.get_raw(q) as i8));
+                TensorData::I8(o)
+            }
+            (TensorData::U8(v), QType::U8, QType::U8) => {
+                let mut o = recycled_u8(recycled, n);
+                o.extend(v.iter().map(|&q| self.lut.get_raw(q) as u8));
+                TensorData::U8(o)
+            }
+            _ => {
+                return Err(OpError::Semantics(format!(
+                    "FusedActLut: input dtype {} does not match planned {:?} domain",
+                    x.dtype(),
+                    self.in_qtype
+                )))
+            }
+        };
+        Ok(Tensor::new(shape, data)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{elementwise, qlinear as ql};
+    use crate::tensor::DType;
+
+    fn epi(s1: f32, s2: Option<f32>, relu: bool, scale: f32, zp: i32, out: QType) -> QEpilogue {
+        QEpilogue {
+            s1,
+            s2,
+            relu,
+            inv_scale: 1.0 / scale,
+            zp,
+            out_qtype: out,
+        }
+    }
+
+    /// Reference: run the actual unfused kernels over the accumulator.
+    #[allow(clippy::too_many_arguments)]
+    fn reference_chain(
+        acc: &Tensor,
+        bias: Option<&Tensor>,
+        s1: f32,
+        s2: Option<f32>,
+        relu: bool,
+        scale: f32,
+        zp: i32,
+        out: QType,
+    ) -> Tensor {
+        let mut t = match bias {
+            Some(b) => elementwise::binary(elementwise::BinOp::Add, acc, b).unwrap(),
+            None => acc.clone(),
+        };
+        t = t.cast(DType::F32);
+        t = elementwise::binary(
+            elementwise::BinOp::Mul,
+            &t,
+            &Tensor::scalar_f32(s1),
+        )
+        .unwrap();
+        if let Some(s2) = s2 {
+            t = elementwise::binary(
+                elementwise::BinOp::Mul,
+                &t,
+                &Tensor::scalar_f32(s2),
+            )
+            .unwrap();
+        }
+        if relu {
+            t = elementwise::relu(&t).unwrap();
+        }
+        let zp = match out {
+            QType::I8 => Tensor::scalar_i8(zp as i8),
+            QType::U8 => Tensor::scalar_u8(zp as u8),
+        };
+        ql::quantize_linear(&t, &Tensor::scalar_f32(scale), Some(&zp)).unwrap()
+    }
+
+    #[test]
+    fn epilogue_matches_unfused_chain_elementwise() {
+        // Accumulators spanning sign changes, saturation, and .5 ties.
+        let (m, n) = (4usize, 3usize);
+        let acc_v: Vec<i32> = (0..m * n as usize)
+            .map(|i| (i as i32 * 977 - 5000) * 3)
+            .collect();
+        let acc = Tensor::from_i32(&[m, n], acc_v.clone()).unwrap();
+        let bias_v = vec![100, -250, 7];
+        let bias = Tensor::from_i32(&[n], bias_v.clone()).unwrap();
+        // Includes asymmetric zero points (§3.1 uint8 zp=128 and a
+        // nonzero i8 zp): the `round -> + zp -> saturate` order must
+        // match the unfused QuantizeLinear exactly.
+        for (s1, s2, relu, scale, zp, out) in [
+            (3.0, Some(1.0 / 8.0), false, 1.0, 0, QType::I8),
+            (0.017, None, true, 1.0, 0, QType::U8),
+            (5.0, Some(1.0 / 64.0), true, 0.5, 0, QType::I8),
+            (0.02, None, false, 1.0, 128, QType::U8),
+            (0.013, Some(0.5), true, 0.25, -16, QType::I8),
+        ] {
+            let want = reference_chain(&acc, Some(&bias), s1, s2, relu, scale, zp, out);
+            let got = write_quantized(
+                &acc_v,
+                BiasLayout::PerColumn(&bias_v),
+                &epi(s1, s2, relu, scale, zp, out),
+                Shape::from_slice(&[m, n]),
+                None,
+            )
+            .unwrap();
+            assert_eq!(want, got, "s1={s1} s2={s2:?} relu={relu} zp={zp}");
+            // No-bias form.
+            let want = reference_chain(&acc, None, s1, s2, relu, scale, zp, out);
+            let got = write_quantized(
+                &acc_v,
+                BiasLayout::None,
+                &epi(s1, s2, relu, scale, zp, out),
+                Shape::from_slice(&[m, n]),
+                None,
+            )
+            .unwrap();
+            assert_eq!(want, got, "no-bias s1={s1} zp={zp}");
+        }
+    }
+
+    #[test]
+    fn per_channel_bias_matches_conv_broadcast() {
+        // [nb=2, m=3, oh*ow=4] accumulator vs the [1, M, 1, 1] Add.
+        let (nb, m, patch) = (2usize, 3usize, 4usize);
+        let acc_v: Vec<i32> = (0..nb * m * patch).map(|i| i as i32 * 31 - 300).collect();
+        let acc = Tensor::from_i32(&[nb, m, 2, 2], acc_v.clone()).unwrap();
+        let bias_v = vec![10, -20, 1000];
+        let bias4 = Tensor::from_i32(&[1, m, 1, 1], bias_v.clone()).unwrap();
+        let want = reference_chain(&acc, Some(&bias4), 0.5, None, false, 1.0, 0, QType::I8);
+        let got = write_quantized(
+            &acc_v,
+            BiasLayout::PerChannel {
+                bias: &bias_v,
+                patch,
+            },
+            &epi(0.5, None, false, 1.0, 0, QType::I8),
+            Shape::from_slice(&[nb, m, 2, 2]),
+            None,
+        )
+        .unwrap();
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn wrapping_bias_add_matches_i32_add_semantics() {
+        let acc_v = vec![i32::MAX, 0];
+        let acc = Tensor::from_i32(&[1, 2], acc_v.clone()).unwrap();
+        let bias_v = vec![1, 2];
+        let bias = Tensor::from_i32(&[2], bias_v.clone()).unwrap();
+        let want = reference_chain(&acc, Some(&bias), 1e-9, None, false, 1.0, 0, QType::I8);
+        let got = write_quantized(
+            &acc_v,
+            BiasLayout::PerColumn(&bias_v),
+            &epi(1e-9, None, false, 1.0, 0, QType::I8),
+            Shape::from_slice(&[1, 2]),
+            None,
+        )
+        .unwrap();
+        assert_eq!(want, got);
+    }
+}

@@ -17,7 +17,7 @@
 //! behavior is unchanged.
 
 use super::OpError;
-use super::{conv, elementwise, matmul, pool, qlinear, shape_ops};
+use super::{conv, elementwise, fused, matmul, pool, qlinear, shape_ops};
 use crate::onnx::ir::{Graph, Node};
 use crate::onnx::shape::ConvAttrs;
 use crate::tensor::{DType, Tensor};
@@ -100,6 +100,14 @@ pub enum Kernel {
         axis: usize,
     },
     Identity,
+    /// Fused quantized-FC chain (plan-time optimizer only — never
+    /// produced by [`Kernel::bind`]; see [`crate::opt`]).
+    FusedQFc(fused::FusedQFc),
+    /// Fused quantized-conv chain (plan-time optimizer only).
+    FusedQConv(fused::FusedQConv),
+    /// Folded Dequantize→activation→Quantize chain (plan-time optimizer
+    /// only).
+    FusedActLut(fused::FusedActLut),
 }
 
 /// An initializer eligible for plan-time baking: present, and not
@@ -128,7 +136,7 @@ fn baked_zero_point(g: &Graph, node: &Node, index: usize) -> Option<i32> {
     }
 }
 
-fn prebind_matmul_integer(node: &Node, g: &Graph) -> Option<Kernel> {
+pub(crate) fn prebind_matmul_integer(node: &Node, g: &Graph) -> Option<Kernel> {
     let b = bakeable(g, node.inputs.get(1)?)?;
     if b.rank() != 2 {
         return None;
@@ -144,7 +152,7 @@ fn prebind_matmul_integer(node: &Node, g: &Graph) -> Option<Kernel> {
     Some(Kernel::MatMulIntegerPrebound { bw, bp, k, n, a_zp })
 }
 
-fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) -> Option<Kernel> {
+pub(crate) fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) -> Option<Kernel> {
     if attrs.group != 1 {
         return None;
     }
@@ -320,6 +328,9 @@ impl Kernel {
             Kernel::Reshape { .. } => "Reshape",
             Kernel::Flatten { .. } => "Flatten",
             Kernel::Identity => "Identity",
+            Kernel::FusedQFc(_) => "FusedQFc",
+            Kernel::FusedQConv(_) => "FusedQConv",
+            Kernel::FusedActLut(_) => "FusedActLut",
         }
     }
 
@@ -480,6 +491,9 @@ impl Kernel {
             },
             Kernel::Flatten { axis } => shape_ops::flatten_into(req(0)?, *axis, recycled)?,
             Kernel::Identity => req(0)?.clone_recycled(recycled),
+            Kernel::FusedQFc(f) => f.run(req(0)?, recycled, scratch)?,
+            Kernel::FusedQConv(f) => f.run(req(0)?, recycled, scratch)?,
+            Kernel::FusedActLut(f) => f.run(req(0)?, recycled)?,
         };
         Ok(out)
     }

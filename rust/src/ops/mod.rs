@@ -13,6 +13,7 @@
 
 pub mod conv;
 pub mod elementwise;
+pub mod fused;
 pub mod kernel;
 pub mod matmul;
 pub mod pool;

@@ -22,13 +22,16 @@ pub fn round_half_even(x: f32) -> f32 {
     x.round_ties_even()
 }
 
+/// Saturating f32 -> i8 cast of QuantizeLinear (shared with the fused
+/// epilogue in [`super::fused`], which must replicate it bit for bit).
 #[inline]
-fn saturate_i8(v: f32) -> i8 {
+pub(crate) fn saturate_i8(v: f32) -> i8 {
     v.clamp(-128.0, 127.0) as i8
 }
 
+/// See [`saturate_i8`].
 #[inline]
-fn saturate_u8(v: f32) -> u8 {
+pub(crate) fn saturate_u8(v: f32) -> u8 {
     v.clamp(0.0, 255.0) as u8
 }
 

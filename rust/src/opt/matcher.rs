@@ -1,0 +1,580 @@
+//! The shared DAG pattern matcher: single-consumer chain walking over a
+//! plan-time [`ConsumerIndex`], with initializer-aware operand
+//! predicates.
+//!
+//! This is the ONE copy of the recognition logic for the paper's codified
+//! patterns (Figures 1–6). Two very different consumers drive it:
+//!
+//! * the interpreter's plan-time fusion passes ([`super`]) — a failed
+//!   match means "decline fusion, keep executing node by node", so every
+//!   structural requirement here is conservative: a mid-chain value with
+//!   a second consumer, a rescale multiplier that is not a scalar
+//!   initializer, a chain value that doubles as a graph output — all
+//!   return [`MatchFail`] and leave execution bit-identical to the
+//!   unfused plan;
+//! * the hardware-simulator compiler ([`crate::hwsim::exec`]) — a failed
+//!   match is a hard compile error (the accelerator has no node-by-node
+//!   fallback), so [`MatchFail`] carries the offending node and message
+//!   for the error report.
+//!
+//! The matcher validates *structure* (operator sequence, scalar
+//! initializers, sole consumers). Backend-specific value constraints —
+//! hwsim's `requantize scale == 1.0`, the interpreter's bias-layout and
+//! packed-weight preconditions — stay with the backend that imposes them.
+
+use crate::onnx::ir::{Graph, Node};
+use crate::quant::lut::ActFn;
+use crate::quant::QType;
+use crate::tensor::{DType, Tensor};
+use std::collections::HashMap;
+
+/// Why a pattern match gave up.
+#[derive(Debug)]
+pub enum MatchFail {
+    /// A chain value has more than one consumer: outside the pattern
+    /// language (the emitted pre-quantized graphs are linear chains).
+    MultiConsumer { value: String },
+    /// The chain deviates structurally at `node`.
+    Mismatch { node: String, msg: String },
+}
+
+fn mismatch(node: &Node, msg: impl Into<String>) -> MatchFail {
+    MatchFail::Mismatch {
+        node: node.name.clone(),
+        msg: msg.into(),
+    }
+}
+
+/// Plan-time value -> consumer index, built in ONE pass over the graph so
+/// chain walking is O(1) per edge instead of an O(nodes) scan per lookup.
+enum ConsumerEntry {
+    One(usize),
+    Multiple,
+}
+
+pub struct ConsumerIndex<'g> {
+    map: HashMap<&'g str, ConsumerEntry>,
+}
+
+impl<'g> ConsumerIndex<'g> {
+    pub fn build(g: &'g Graph) -> ConsumerIndex<'g> {
+        let mut map = HashMap::new();
+        for (idx, n) in g.nodes.iter().enumerate() {
+            for input in &n.inputs {
+                if input.is_empty() {
+                    continue;
+                }
+                // A node listing the value twice (e.g. Mul(x, x)) is one
+                // consumer.
+                let entry = map.entry(input.as_str()).or_insert(ConsumerEntry::One(idx));
+                if let ConsumerEntry::One(prev) = entry {
+                    if *prev != idx {
+                        *entry = ConsumerEntry::Multiple;
+                    }
+                }
+            }
+        }
+        ConsumerIndex { map }
+    }
+
+    /// The sole consumer of a value (index + node), `None` at the end of
+    /// the chain, or [`MatchFail::MultiConsumer`].
+    pub fn sole_consumer(
+        &self,
+        g: &'g Graph,
+        value: &str,
+    ) -> Result<Option<(usize, &'g Node)>, MatchFail> {
+        match self.map.get(value) {
+            None => Ok(None),
+            Some(ConsumerEntry::One(idx)) => Ok(Some((*idx, &g.nodes[*idx]))),
+            Some(ConsumerEntry::Multiple) => Err(MatchFail::MultiConsumer {
+                value: value.to_string(),
+            }),
+        }
+    }
+}
+
+/// How initializer-stored pattern operands are admitted. The recognition
+/// logic is shared; what a backend may soundly READ from the model is
+/// not:
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitPolicy {
+    /// Plan-time baking (the interpreter's fusion passes): the
+    /// initializer must not be shadowed by a graph input (a feed could
+    /// override the value at run time) and "scalars" must be rank <= 2
+    /// (a rank-3+ scalar would rank-EXTEND the chain value under ONNX
+    /// broadcasting, changing the unfused output shape the fused kernel
+    /// must reproduce bit for bit). Violations decline the fusion.
+    Bakeable,
+    /// Pattern lifting for a backend with its own execution contract
+    /// (the hw compiler): any initializer, shadowed or not — `HwModule`'s
+    /// run API never accepts feeds for those inputs, so reading the
+    /// stored value is sound, and stage shapes are the backend's own.
+    /// This preserves the acceptance of the pre-matcher bespoke walk
+    /// (e.g. models exported with `keep_initializers_as_inputs`).
+    AnyInitializer,
+}
+
+/// An initializer usable as a pattern operand under `policy`.
+pub fn pattern_init<'g>(g: &'g Graph, name: &str, policy: InitPolicy) -> Option<&'g Tensor> {
+    if policy == InitPolicy::Bakeable && g.input(name).is_some() {
+        return None;
+    }
+    g.initializer(name)
+}
+
+/// Scalar f32 pattern initializer, by value (see [`InitPolicy`] for the
+/// rank cap applied under `Bakeable`).
+pub fn scalar_f32_init(g: &Graph, name: &str, policy: InitPolicy) -> Option<f32> {
+    let t = pattern_init(g, name, policy)?;
+    if t.numel() != 1 {
+        return None;
+    }
+    if policy == InitPolicy::Bakeable && t.rank() > 2 {
+        return None;
+    }
+    t.as_f32().ok().map(|v| v[0])
+}
+
+/// i8/u8 zero-point pattern initializer, with the quantized type its
+/// dtype selects (§3.1: "an uint8 zero_point argument results in uint8
+/// output"). `Bakeable` requires a scalar (the value gets baked);
+/// `AnyInitializer` reads only the dtype, like the old hw walk.
+fn scalar_zp_init<'g>(
+    g: &'g Graph,
+    name: &str,
+    policy: InitPolicy,
+) -> Option<(&'g Tensor, QType)> {
+    let t = pattern_init(g, name, policy)?;
+    if policy == InitPolicy::Bakeable && t.numel() != 1 {
+        return None;
+    }
+    match t.dtype() {
+        DType::I8 => Some((t, QType::I8)),
+        DType::U8 => Some((t, QType::U8)),
+        _ => None,
+    }
+}
+
+/// True when `name` can be absorbed into a fused chain (or aliased away
+/// by the elimination passes): produced and consumed strictly inside the
+/// graph's dataflow — not a declared output, and not shadowing a graph
+/// input or initializer.
+pub(crate) fn chain_internal(g: &Graph, name: &str) -> bool {
+    g.output(name).is_none() && g.input(name).is_none() && g.initializer(name).is_none()
+}
+
+/// Chain-walk cursor: `cur` is the value the next node must solely
+/// consume; `nodes` accumulates matched node indices in chain order.
+struct Walk<'g, 'i> {
+    g: &'g Graph,
+    idx: &'i ConsumerIndex<'g>,
+    cur: &'g str,
+    nodes: Vec<usize>,
+}
+
+impl<'g, 'i> Walk<'g, 'i> {
+    fn start(g: &'g Graph, idx: &'i ConsumerIndex<'g>, anchor_idx: usize) -> Result<Walk<'g, 'i>, MatchFail> {
+        let anchor = &g.nodes[anchor_idx];
+        let out = anchor
+            .outputs
+            .first()
+            .filter(|n| !n.is_empty())
+            .ok_or_else(|| mismatch(anchor, "anchor has no output"))?;
+        Ok(Walk {
+            g,
+            idx,
+            cur: out.as_str(),
+            nodes: vec![anchor_idx],
+        })
+    }
+
+    /// Advance to the sole consumer of `cur`, requiring `cur` to be
+    /// chain-internal (fusing would otherwise lose an externally visible
+    /// value).
+    fn step(&mut self, from: &Node) -> Result<(usize, &'g Node), MatchFail> {
+        if !chain_internal(self.g, self.cur) {
+            return Err(mismatch(
+                from,
+                format!("value '{}' is externally visible; chain must be internal", self.cur),
+            ));
+        }
+        match self.idx.sole_consumer(self.g, self.cur)? {
+            Some((i, n)) => Ok((i, n)),
+            None => Err(mismatch(from, "dangling chain")),
+        }
+    }
+
+    /// Record `node` as matched and move the cursor past its output.
+    fn consume(&mut self, idx: usize, node: &'g Node) -> Result<(), MatchFail> {
+        let out = node
+            .outputs
+            .first()
+            .filter(|n| !n.is_empty())
+            .ok_or_else(|| mismatch(node, "chain node has no output"))?;
+        self.nodes.push(idx);
+        self.cur = out.as_str();
+        Ok(())
+    }
+}
+
+/// The matched quantized-FC/conv epilogue chain (Figures 1–3 and the
+/// accumulate half of 4–6): `MatMulInteger|ConvInteger [+ Add(bias)] +
+/// Cast(FLOAT) + Mul[+Mul] [+ Relu] + QuantizeLinear`.
+pub struct QChain<'g> {
+    /// Anchor node index (the MatMulInteger / ConvInteger).
+    pub anchor: usize,
+    /// The anchor's weight initializer (rank-2 for FC, rank-4 for conv).
+    pub weight: &'g Tensor,
+    /// Bias initializer + the Add node's index, when the chain has one.
+    pub bias: Option<&'g Tensor>,
+    pub bias_node: Option<usize>,
+    /// The 1–2 scalar rescale multipliers, in application order (§3.1).
+    pub muls: Vec<f32>,
+    pub relu: bool,
+    /// Final `QuantizeLinear` scale (scalar initializer, by value).
+    pub q_scale: f32,
+    /// Final `QuantizeLinear` zero-point initializer (scalar i8/u8).
+    pub q_zp: &'g Tensor,
+    /// Output integer type, selected by the zero point's dtype.
+    pub out_qtype: QType,
+    /// Every matched node index, in chain order (anchor first).
+    pub nodes: Vec<usize>,
+    /// The chain's final value name (the QuantizeLinear output).
+    pub output: &'g str,
+}
+
+/// Match the quantized epilogue chain hanging off `anchor_idx` (which
+/// must be a `MatMulInteger` or `ConvInteger` with an initializer
+/// weight). See the module docs for the decline-vs-error contract.
+pub fn match_q_chain<'g>(
+    g: &'g Graph,
+    idx: &ConsumerIndex<'g>,
+    anchor_idx: usize,
+    policy: InitPolicy,
+) -> Result<QChain<'g>, MatchFail> {
+    let anchor = &g.nodes[anchor_idx];
+    let want_rank = match anchor.op_type.as_str() {
+        "MatMulInteger" => 2,
+        "ConvInteger" => 4,
+        op => {
+            return Err(mismatch(
+                anchor,
+                format!("'{op}' is not a quantized-chain anchor"),
+            ))
+        }
+    };
+    let w_name = anchor
+        .inputs
+        .get(1)
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(anchor, "missing weight input"))?;
+    let weight = pattern_init(g, w_name, policy)
+        .ok_or_else(|| mismatch(anchor, "weight must be an initializer"))?;
+    if weight.rank() != want_rank {
+        return Err(mismatch(anchor, format!("weight must be rank-{want_rank}")));
+    }
+
+    let mut walk = Walk::start(g, idx, anchor_idx)?;
+    let (mut node_idx, mut node) = walk.step(anchor)?;
+
+    // Optional bias Add (the initializer may sit on either operand).
+    let mut bias = None;
+    let mut bias_node = None;
+    if node.op_type == "Add" {
+        let bias_name = if node.inputs.first().map(String::as_str) == Some(walk.cur) {
+            node.inputs.get(1)
+        } else {
+            node.inputs.first()
+        }
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(node, "malformed bias Add"))?;
+        bias = Some(
+            pattern_init(g, bias_name, policy)
+                .ok_or_else(|| mismatch(node, "bias must be an initializer"))?,
+        );
+        bias_node = Some(node_idx);
+        walk.consume(node_idx, node)?;
+        (node_idx, node) = walk.step(node)?;
+    }
+
+    // Cast INT32 -> FLOAT before the Mul-codified rescale.
+    if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
+        return Err(mismatch(node, "expected Cast to FLOAT after accumulate"));
+    }
+    walk.consume(node_idx, node)?;
+    (node_idx, node) = walk.step(node)?;
+
+    // One or two scalar rescale Muls (§3.1: 1-Mul or 2-Mul codification).
+    let mut muls = Vec::new();
+    while node.op_type == "Mul" && muls.len() < 2 {
+        let s_name = if node.inputs.first().map(String::as_str) == Some(walk.cur) {
+            node.inputs.get(1)
+        } else {
+            node.inputs.first()
+        }
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(node, "malformed rescale Mul"))?;
+        muls.push(
+            scalar_f32_init(g, s_name, policy)
+                .ok_or_else(|| mismatch(node, "rescale multiplier must be a scalar initializer"))?,
+        );
+        walk.consume(node_idx, node)?;
+        (node_idx, node) = walk.step(node)?;
+    }
+    if muls.is_empty() {
+        return Err(mismatch(node, "expected rescale Mul after Cast"));
+    }
+
+    // Optional ReLU on the rescaled f32 value (Fig. 2).
+    let mut relu = false;
+    if node.op_type == "Relu" {
+        relu = true;
+        walk.consume(node_idx, node)?;
+        (node_idx, node) = walk.step(node)?;
+    }
+
+    // Rounding + clipping stage.
+    if node.op_type != "QuantizeLinear" {
+        return Err(mismatch(node, "expected QuantizeLinear (round+clip)"));
+    }
+    let s_name = node
+        .inputs
+        .get(1)
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(node, "QuantizeLinear missing scale"))?;
+    let q_scale = scalar_f32_init(g, s_name, policy)
+        .ok_or_else(|| mismatch(node, "requantize scale must be a scalar initializer"))?;
+    let zp_name = node
+        .inputs
+        .get(2)
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(node, "QuantizeLinear missing zero point"))?;
+    let (q_zp, out_qtype) = scalar_zp_init(g, zp_name, policy)
+        .ok_or_else(|| mismatch(node, "zero point must be a scalar i8/u8 initializer"))?;
+    walk.consume(node_idx, node)?;
+
+    Ok(QChain {
+        anchor: anchor_idx,
+        weight,
+        bias,
+        bias_node,
+        muls,
+        relu,
+        q_scale,
+        q_zp,
+        out_qtype,
+        nodes: walk.nodes,
+        output: walk.cur,
+    })
+}
+
+/// The matched activation chain (Figures 4–6): `DequantizeLinear
+/// [+ Cast f16] + Tanh|Sigmoid [+ Cast f32] + QuantizeLinear`.
+pub struct ActChain<'g> {
+    /// The DequantizeLinear node index.
+    pub deq: usize,
+    /// True for the f16-evaluated variants (Figs. 5/6).
+    pub f16: bool,
+    pub act: ActFn,
+    /// Dequantize scale (scalar initializer, by value) and zero point
+    /// (scalar i8/u8 initializer when present; the paper's patterns emit
+    /// 0).
+    pub in_scale: f32,
+    pub in_zp: Option<&'g Tensor>,
+    /// Requantize scale + zero point of the final QuantizeLinear.
+    pub out_scale: f32,
+    pub out_zp: &'g Tensor,
+    pub out_qtype: QType,
+    pub nodes: Vec<usize>,
+    pub output: &'g str,
+}
+
+/// Look ahead from a `DequantizeLinear`: does an activation chain follow
+/// (vs an output-edge dequantization)? Errors only on a multi-consumer
+/// dequantize output.
+pub fn act_chain_follows(
+    g: &Graph,
+    idx: &ConsumerIndex<'_>,
+    deq: &Node,
+) -> Result<bool, MatchFail> {
+    let Some(out) = deq.outputs.first().filter(|n| !n.is_empty()) else {
+        return Ok(false);
+    };
+    Ok(matches!(
+        idx.sole_consumer(g, out)?.map(|(_, n)| n.op_type.as_str()),
+        Some("Cast") | Some("Tanh") | Some("Sigmoid")
+    ))
+}
+
+/// Match the activation chain anchored at the `DequantizeLinear` node
+/// `deq_idx`.
+pub fn match_act_chain<'g>(
+    g: &'g Graph,
+    idx: &ConsumerIndex<'g>,
+    deq_idx: usize,
+    policy: InitPolicy,
+) -> Result<ActChain<'g>, MatchFail> {
+    let deq = &g.nodes[deq_idx];
+    if deq.op_type != "DequantizeLinear" {
+        return Err(mismatch(deq, "activation chain must start at DequantizeLinear"));
+    }
+    let s_name = deq
+        .inputs
+        .get(1)
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(deq, "DequantizeLinear missing scale"))?;
+    let in_scale = scalar_f32_init(g, s_name, policy)
+        .ok_or_else(|| mismatch(deq, "dequantize scale must be a scalar initializer"))?;
+    let in_zp = match deq.inputs.get(2).map(String::as_str) {
+        None | Some("") => None,
+        Some(name) => Some(
+            scalar_zp_init(g, name, policy)
+                .ok_or_else(|| mismatch(deq, "dequantize zero point must be a scalar i8/u8 initializer"))?
+                .0,
+        ),
+    };
+
+    let mut walk = Walk::start(g, idx, deq_idx)?;
+    let (mut node_idx, mut node) = walk.step(deq)?;
+
+    // Optional Cast FLOAT -> FLOAT16 (Figs. 5/6).
+    let mut f16 = false;
+    if node.op_type == "Cast" {
+        if node.attr_str("to") != Some("FLOAT16") {
+            return Err(mismatch(node, "expected Cast to FLOAT16 in act block"));
+        }
+        f16 = true;
+        walk.consume(node_idx, node)?;
+        (node_idx, node) = walk.step(node)?;
+    }
+
+    let act = match node.op_type.as_str() {
+        "Tanh" => ActFn::Tanh,
+        "Sigmoid" => ActFn::Sigmoid,
+        op => return Err(mismatch(node, format!("expected Tanh/Sigmoid, got {op}"))),
+    };
+    walk.consume(node_idx, node)?;
+    (node_idx, node) = walk.step(node)?;
+
+    if f16 {
+        if node.op_type != "Cast" || node.attr_str("to") != Some("FLOAT") {
+            return Err(mismatch(node, "expected Cast back to FLOAT"));
+        }
+        walk.consume(node_idx, node)?;
+        (node_idx, node) = walk.step(node)?;
+    }
+
+    if node.op_type != "QuantizeLinear" {
+        return Err(mismatch(node, "expected final QuantizeLinear in act block"));
+    }
+    let s_name = node
+        .inputs
+        .get(1)
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(node, "QuantizeLinear missing scale"))?;
+    let out_scale = scalar_f32_init(g, s_name, policy)
+        .ok_or_else(|| mismatch(node, "requantize scale must be a scalar initializer"))?;
+    let zp_name = node
+        .inputs
+        .get(2)
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| mismatch(node, "QuantizeLinear missing zero point"))?;
+    let (out_zp, out_qtype) = scalar_zp_init(g, zp_name, policy)
+        .ok_or_else(|| mismatch(node, "zero point must be a scalar i8/u8 initializer"))?;
+    walk.consume(node_idx, node)?;
+
+    Ok(ActChain {
+        deq: deq_idx,
+        f16,
+        act,
+        in_scale,
+        in_zp,
+        out_scale,
+        out_zp,
+        out_qtype,
+        nodes: walk.nodes,
+        output: walk.cur,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::Figure;
+
+    fn names(g: &Graph, nodes: &[usize]) -> Vec<String> {
+        nodes.iter().map(|&i| g.nodes[i].op_type.clone()).collect()
+    }
+
+    #[test]
+    fn matches_all_fc_and_conv_figures() {
+        for fig in Figure::ALL {
+            let m = fig.model();
+            let g = &m.graph;
+            let idx = ConsumerIndex::build(g);
+            let anchor = g
+                .nodes
+                .iter()
+                .position(|n| n.op_type == "MatMulInteger" || n.op_type == "ConvInteger")
+                .unwrap();
+            let chain = match_q_chain(g, &idx, anchor, InitPolicy::Bakeable)
+                .unwrap_or_else(|_| panic!("{}: q-chain must match", fig.name()));
+            assert!(chain.bias.is_some(), "{}", fig.name());
+            assert!(!chain.muls.is_empty() && chain.muls.len() <= 2, "{}", fig.name());
+            assert_eq!(chain.q_scale, 1.0, "{}", fig.name());
+            // The chain covers the anchor through the first QuantizeLinear.
+            assert_eq!(names(g, &chain.nodes).last().unwrap(), "QuantizeLinear");
+        }
+    }
+
+    #[test]
+    fn matches_act_chains_on_figures_4_to_6() {
+        for (fig, f16, len) in [
+            (Figure::Fig4TanhInt8, false, 3),
+            (Figure::Fig5TanhF16, true, 5),
+            (Figure::Fig6SigmoidF16, true, 5),
+        ] {
+            let m = fig.model();
+            let g = &m.graph;
+            let idx = ConsumerIndex::build(g);
+            let deq = g
+                .nodes
+                .iter()
+                .position(|n| n.op_type == "DequantizeLinear")
+                .unwrap();
+            let chain = match_act_chain(g, &idx, deq, InitPolicy::Bakeable)
+                .unwrap_or_else(|_| panic!("{}: act chain must match", fig.name()));
+            assert_eq!(chain.f16, f16, "{}", fig.name());
+            assert_eq!(chain.nodes.len(), len, "{}", fig.name());
+            assert_eq!(chain.output, m.graph.outputs[0].name, "{}", fig.name());
+        }
+    }
+
+    #[test]
+    fn multi_consumer_mid_chain_fails_with_multiconsumer() {
+        use crate::onnx::ir::Attr;
+        use crate::onnx::{batched, GraphBuilder};
+        use crate::tensor::{DType, Tensor};
+        let mut b = GraphBuilder::new("mc");
+        b.input("x", DType::I8, &batched(&[4]));
+        b.init("w", Tensor::from_i8(&[4, 2], vec![1; 8]).unwrap());
+        b.init("s", Tensor::scalar_f32(0.5));
+        b.init("one", Tensor::scalar_f32(1.0));
+        b.init("zp", Tensor::scalar_i8(0));
+        let acc = b.node("MatMulInteger", &["x", "w"], &[]);
+        let f = b.node("Cast", &[&acc], &[("to", Attr::Str("FLOAT".into()))]);
+        let m1 = b.node("Mul", &[&f, "s"], &[]);
+        let y = b.node("QuantizeLinear", &[&m1, "one", "zp"], &[]);
+        // Second consumer of the Cast output.
+        let extra = b.node("Relu", &[&f], &[]);
+        b.output(&y, DType::I8, &batched(&[2]));
+        b.output(&extra, DType::F32, &batched(&[2]));
+        let m = b.finish_model();
+        let idx = ConsumerIndex::build(&m.graph);
+        assert!(matches!(
+            match_q_chain(&m.graph, &idx, 0, InitPolicy::Bakeable),
+            Err(MatchFail::MultiConsumer { .. })
+        ));
+    }
+}

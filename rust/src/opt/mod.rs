@@ -1,0 +1,461 @@
+//! Plan-time graph optimizer: the pass pipeline between model checking
+//! and [`CompiledPlan::compile`](crate::interp) lowering.
+//!
+//! The paper's whole point is that the pre-quantized patterns (Figures
+//! 1–6) are *recognizable* from the standard ONNX stream, so a backend
+//! can lift them into fused fixed-point stages. `hwsim::compile` has done
+//! exactly that from the start — this module makes the recognition a
+//! shared layer (the [`matcher`]) and gives the production interpreter
+//! the same lift: instead of executing a `MatMulInteger + Add + Cast +
+//! Mul(+Mul) [+Relu] + QuantizeLinear` chain as 6–7 steps with 6–7
+//! intermediate tensors and as many full passes over the activation, the
+//! compiled plan runs ONE fused kernel (packed int8 GEMM + a single
+//! integer-rescale/saturate epilogue pass — [`crate::ops::fused`]).
+//!
+//! Passes, in order:
+//! 1. **Quantized-FC fusion** — the FC chain above → [`Kernel::FusedQFc`].
+//! 2. **Quantized-conv fusion** — the same chain over `ConvInteger` →
+//!    [`Kernel::FusedQConv`].
+//! 3. **LUT folding** — `DequantizeLinear [+Cast f16] + Tanh/Sigmoid
+//!    [+Cast f32] + QuantizeLinear` → a 256-entry table
+//!    ([`Kernel::FusedActLut`], sharing `quant::lut::ActLut` with hwsim).
+//! 4. **Identity / no-op-reshape elimination** — `Identity` nodes and
+//!    `Reshape/Flatten/Identity` feeding a 0-free-spec `Reshape` become
+//!    value aliases instead of copy steps.
+//! 5. **Dead-node elimination** — steps whose outputs reach no graph
+//!    output are dropped (reverse liveness sweep).
+//!
+//! Every fused kernel is **bit-identical** to its node chain: the same
+//! scalar arithmetic in the same order, just without materializing the
+//! intermediates (the LUT precomputes the chain per 8-bit input; see
+//! `quant::lut::ActLut::build_exact`). Any precondition failure — an
+//! extra consumer on a mid-chain value, a non-initializer scale, a bias
+//! layout the epilogue can't bake — declines the fusion and leaves those
+//! nodes executing one by one, so correctness never depends on a pattern
+//! firing (`tests/executor_plan.rs` proves both directions).
+
+pub mod matcher;
+
+use crate::onnx::ir::{Graph, Model};
+use crate::onnx::shape::ValueType;
+use crate::ops::fused::{FusedActLut, FusedQConv, FusedQFc, QEpilogue};
+use crate::ops::kernel::{prebind_conv_integer, prebind_matmul_integer};
+use crate::ops::Kernel;
+use crate::quant::lut::{ActEval, ActLut};
+use crate::quant::QType;
+use crate::tensor::DType;
+use matcher::{match_act_chain, match_q_chain, ConsumerIndex, InitPolicy, QChain};
+use std::collections::{HashMap, HashSet};
+
+/// Plan-compilation options. `fuse` (default: on) runs the pass pipeline;
+/// sessions compile an unfused plan alongside regardless, for the
+/// observer/calibration path and the `run_unplanned` oracle.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    pub fuse: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions { fuse: true }
+    }
+}
+
+/// What the pass pipeline did to a plan (per-kind fused-kernel counts +
+/// eliminated steps). Surfaced through `Session::plan_stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptStats {
+    pub fused_qfc: usize,
+    pub fused_qconv: usize,
+    pub fused_act_lut: usize,
+    pub eliminated: usize,
+}
+
+impl OptStats {
+    pub fn fused_total(&self) -> usize {
+        self.fused_qfc + self.fused_qconv + self.fused_act_lut
+    }
+
+    /// True when the optimized plan differs from the 1:1 lowering at all
+    /// (used to share one plan allocation when it doesn't).
+    pub fn changed(&self) -> bool {
+        self.fused_total() + self.eliminated > 0
+    }
+}
+
+/// One schedulable unit after optimization: a single graph node, or a
+/// fused span executing as one kernel.
+pub(crate) enum PlanItem {
+    Node(usize),
+    Fused {
+        /// Covered graph-node indices, in chain order (anchor first).
+        nodes: Vec<usize>,
+        kernel: Kernel,
+        /// The chain's single external data input (value name).
+        input: String,
+        /// The chain's output value name.
+        output: String,
+    },
+}
+
+/// The optimizer's output: the item schedule, value aliases from
+/// eliminated no-op nodes (resolved transitively), and the stats.
+pub(crate) struct Optimized {
+    pub items: Vec<PlanItem>,
+    pub aliases: HashMap<String, String>,
+    pub stats: OptStats,
+}
+
+/// Run the pass pipeline over a checked model's schedule. `types` is the
+/// checker's value-type map (used to pin the LUT input domain).
+pub(crate) fn optimize(
+    model: &Model,
+    order: &[usize],
+    types: &HashMap<String, ValueType>,
+    opts: &PlanOptions,
+) -> Optimized {
+    let g = &model.graph;
+    if !opts.fuse {
+        return Optimized {
+            items: order.iter().map(|&i| PlanItem::Node(i)).collect(),
+            aliases: HashMap::new(),
+            stats: OptStats::default(),
+        };
+    }
+
+    let idx = ConsumerIndex::build(g);
+    let mut stats = OptStats::default();
+
+    // --- fusion passes (chain matching over the consumer index) ---------
+    let mut claimed = vec![false; g.nodes.len()];
+    let mut items: Vec<PlanItem> = Vec::with_capacity(order.len());
+    for &i in order {
+        if claimed[i] {
+            continue; // absorbed into an earlier fused span
+        }
+        let fused = match g.nodes[i].op_type.as_str() {
+            "MatMulInteger" => try_fuse_qfc(g, &idx, i),
+            "ConvInteger" => try_fuse_qconv(g, &idx, i),
+            "DequantizeLinear" => try_fuse_act_lut(g, &idx, i, types),
+            _ => None,
+        };
+        match fused {
+            Some(PlanItem::Fused { nodes, kernel, input, output })
+                // Guard: a member already absorbed elsewhere (cannot
+                // happen for the disjoint chain anchors, but cheap).
+                if !nodes.iter().any(|&n| claimed[n]) =>
+            {
+                for &n in &nodes {
+                    claimed[n] = true;
+                }
+                match &kernel {
+                    Kernel::FusedQFc(_) => stats.fused_qfc += 1,
+                    Kernel::FusedQConv(_) => stats.fused_qconv += 1,
+                    Kernel::FusedActLut(_) => stats.fused_act_lut += 1,
+                    _ => {}
+                }
+                items.push(PlanItem::Fused { nodes, kernel, input, output });
+            }
+            _ => items.push(PlanItem::Node(i)),
+        }
+    }
+
+    // --- identity / no-op-reshape elimination (value aliasing) ----------
+    let mut removed = vec![false; items.len()];
+    let mut aliases: HashMap<String, String> = HashMap::new();
+    // An output name can alias away only if nothing outside the graph's
+    // dataflow can see it — the same visibility rule the chain matcher
+    // applies to fused mid-chain values.
+    let eliminable = matcher::chain_internal;
+    let canon = |aliases: &HashMap<String, String>, name: &str| -> String {
+        aliases.get(name).cloned().unwrap_or_else(|| name.to_string())
+    };
+    for (pos, item) in items.iter().enumerate() {
+        let PlanItem::Node(i) = item else { continue };
+        let node = &g.nodes[*i];
+        if node.op_type != "Identity" {
+            continue;
+        }
+        let (Some(inp), Some(out)) = (node.inputs.first(), node.outputs.first()) else {
+            continue;
+        };
+        if inp.is_empty() || out.is_empty() || !eliminable(g, out) {
+            continue;
+        }
+        // Aliases stay transitively resolved because items are visited in
+        // schedule order (the input's own alias, if any, already exists).
+        let target = canon(&aliases, inp);
+        aliases.insert(out.clone(), target);
+        removed[pos] = true;
+        stats.eliminated += 1;
+    }
+
+    // No-op reshape chains: `Reshape/Flatten/Identity -> Reshape(spec)`
+    // collapses to the outer Reshape alone when the outer spec has no 0
+    // entries (its result then depends only on element count, which the
+    // inner shape-op preserves) and the inner value is chain-internal.
+    let producer: HashMap<&str, usize> = items
+        .iter()
+        .enumerate()
+        .filter_map(|(pos, item)| match item {
+            PlanItem::Node(i) => g.nodes[*i]
+                .outputs
+                .first()
+                .filter(|n| !n.is_empty())
+                .map(|n| (n.as_str(), pos)),
+            PlanItem::Fused { .. } => None,
+        })
+        .collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for pos in 0..items.len() {
+            if removed[pos] {
+                continue;
+            }
+            let PlanItem::Node(i) = &items[pos] else { continue };
+            let node = &g.nodes[*i];
+            if node.op_type != "Reshape" {
+                continue;
+            }
+            let Some(spec_name) = node.inputs.get(1).filter(|n| !n.is_empty()) else {
+                continue;
+            };
+            let spec_ok = matcher::pattern_init(g, spec_name, InitPolicy::Bakeable)
+                .and_then(|t| t.as_i64().ok())
+                .is_some_and(|s| !s.is_empty() && s.iter().all(|&d| d != 0));
+            if !spec_ok {
+                continue;
+            }
+            let Some(data) = node.inputs.first().filter(|n| !n.is_empty()) else {
+                continue;
+            };
+            let Some(&inner_pos) = producer.get(data.as_str()) else {
+                continue;
+            };
+            if removed[inner_pos] || inner_pos == pos {
+                continue;
+            }
+            let PlanItem::Node(inner_i) = &items[inner_pos] else {
+                continue;
+            };
+            let inner = &g.nodes[*inner_i];
+            if !matches!(inner.op_type.as_str(), "Reshape" | "Flatten" | "Identity") {
+                continue;
+            }
+            // The inner value must feed ONLY this Reshape and be invisible
+            // outside the chain.
+            let sole = matches!(
+                idx.sole_consumer(g, data),
+                Ok(Some((consumer, _))) if consumer == *i
+            );
+            if !sole || !eliminable(g, data) {
+                continue;
+            }
+            let Some(inner_in) = inner.inputs.first().filter(|n| !n.is_empty()) else {
+                continue;
+            };
+            let target = canon(&aliases, inner_in);
+            aliases.insert(data.clone(), target);
+            removed[inner_pos] = true;
+            stats.eliminated += 1;
+            changed = true;
+        }
+    }
+
+    // --- dead-node elimination (reverse liveness over the schedule) ------
+    let mut live: HashSet<String> = g
+        .outputs
+        .iter()
+        .map(|vi| canon(&aliases, &vi.name))
+        .collect();
+    for pos in (0..items.len()).rev() {
+        if removed[pos] {
+            continue;
+        }
+        let (outputs, inputs): (Vec<&str>, Vec<&str>) = match &items[pos] {
+            PlanItem::Node(i) => {
+                let n = &g.nodes[*i];
+                (
+                    n.outputs.iter().filter(|o| !o.is_empty()).map(String::as_str).collect(),
+                    n.inputs.iter().filter(|o| !o.is_empty()).map(String::as_str).collect(),
+                )
+            }
+            PlanItem::Fused { input, output, .. } => {
+                (vec![output.as_str()], vec![input.as_str()])
+            }
+        };
+        if outputs.iter().any(|o| live.contains(&canon(&aliases, o))) {
+            for inp in inputs {
+                live.insert(canon(&aliases, inp));
+            }
+        } else {
+            removed[pos] = true;
+            stats.eliminated += 1;
+        }
+    }
+
+    let items = items
+        .into_iter()
+        .zip(removed)
+        .filter_map(|(item, dead)| (!dead).then_some(item))
+        .collect();
+    Optimized {
+        items,
+        aliases,
+        stats,
+    }
+}
+
+/// Backend-side preconditions shared by both fused epilogue builders:
+/// the requantize scale must be one the unfused `QuantizeLinear` would
+/// accept (a fused kernel must never turn a runtime error into silence).
+fn build_epilogue(chain: &QChain<'_>) -> Option<QEpilogue> {
+    if chain.q_scale <= 0.0 || !chain.q_scale.is_finite() {
+        return None;
+    }
+    let zp = chain.q_zp.quantized_scalar_i32().ok()?;
+    Some(QEpilogue {
+        s1: chain.muls[0],
+        s2: chain.muls.get(1).copied(),
+        relu: chain.relu,
+        inv_scale: 1.0 / chain.q_scale,
+        zp,
+        out_qtype: chain.out_qtype,
+    })
+}
+
+fn fused_item(nodes: Vec<usize>, kernel: Kernel, g: &Graph) -> PlanItem {
+    let anchor = &g.nodes[nodes[0]];
+    PlanItem::Fused {
+        input: anchor.inputs[0].clone(),
+        output: g.nodes[*nodes.last().unwrap()].outputs[0].clone(),
+        nodes,
+        kernel,
+    }
+}
+
+/// Quantized-FC fusion: requires the matcher's chain plus the packed /
+/// pre-widened weight baking (`prebind_matmul_integer`) and a bias the
+/// row-broadcast epilogue reproduces exactly (`[N]` or `[1, N]` i32).
+fn try_fuse_qfc(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<PlanItem> {
+    g.nodes[anchor].inputs.first().filter(|n| !n.is_empty())?;
+    let chain = match_q_chain(g, idx, anchor, InitPolicy::Bakeable).ok()?;
+    let Kernel::MatMulIntegerPrebound { bw, bp, k, n, a_zp } =
+        prebind_matmul_integer(&g.nodes[anchor], g)?
+    else {
+        return None;
+    };
+    let bias = match chain.bias {
+        None => None,
+        Some(b) => {
+            // `[N]` or `[1, N]` only: exactly the layouts whose broadcast
+            // preserves the accumulator's shape (a rank-3+ bias would
+            // rank-extend the unfused output; the anchor output is always
+            // rank >= 2, so rank <= 2 suffices).
+            if b.numel() != n || b.shape().last() != Some(&n) || b.rank() > 2 {
+                return None; // layout the per-column epilogue can't bake
+            }
+            Some(b.as_i32().ok()?.to_vec())
+        }
+    };
+    let epi = build_epilogue(&chain)?;
+    let kernel = Kernel::FusedQFc(FusedQFc {
+        bw,
+        bp,
+        k,
+        n,
+        a_zp,
+        bias,
+        epi,
+    });
+    Some(fused_item(chain.nodes, kernel, g))
+}
+
+/// Quantized-conv fusion: the conv chain with a `[1, M, 1, 1]` i32 bias
+/// (exactly the layout the emitted Fig. 3 pattern broadcasts).
+fn try_fuse_qconv(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<PlanItem> {
+    g.nodes[anchor].inputs.first().filter(|n| !n.is_empty())?;
+    let chain = match_q_chain(g, idx, anchor, InitPolicy::Bakeable).ok()?;
+    let Kernel::ConvIntegerPrebound {
+        wv,
+        wp,
+        m,
+        c,
+        kh,
+        kw,
+        x_zp,
+        attrs,
+    } = prebind_conv_integer(
+        &g.nodes[anchor],
+        g,
+        &crate::onnx::shape::ConvAttrs::from_node(&g.nodes[anchor]),
+    )?
+    else {
+        return None;
+    };
+    let bias = match chain.bias {
+        None => None,
+        Some(b) => {
+            if b.shape() != [1, m, 1, 1] {
+                return None;
+            }
+            Some(b.as_i32().ok()?.to_vec())
+        }
+    };
+    let epi = build_epilogue(&chain)?;
+    let kernel = Kernel::FusedQConv(FusedQConv {
+        wv,
+        wp,
+        m,
+        c,
+        kh,
+        kw,
+        x_zp,
+        attrs,
+        bias,
+        epi,
+    });
+    Some(fused_item(chain.nodes, kernel, g))
+}
+
+/// LUT folding: the activation chain becomes a 256-entry table built by
+/// composing the interpreter's exact per-element arithmetic
+/// ([`ActLut::build_exact`]). The input domain (i8 vs u8) comes from the
+/// checker's type of the dequantize input; anything else declines.
+fn try_fuse_act_lut(
+    g: &Graph,
+    idx: &ConsumerIndex<'_>,
+    anchor: usize,
+    types: &HashMap<String, ValueType>,
+) -> Option<PlanItem> {
+    let chain = match_act_chain(g, idx, anchor, InitPolicy::Bakeable).ok()?;
+    let deq = &g.nodes[anchor];
+    let in_name = deq.inputs.first().filter(|n| !n.is_empty())?;
+    let in_qtype = match types.get(in_name.as_str()).map(|t| t.dtype) {
+        Some(DType::I8) => QType::I8,
+        Some(DType::U8) => QType::U8,
+        _ => return None,
+    };
+    let in_zp = match chain.in_zp {
+        None => 0,
+        Some(t) => t.quantized_scalar_i32().ok()?,
+    };
+    if chain.out_scale <= 0.0 || !chain.out_scale.is_finite() {
+        return None; // the unfused QuantizeLinear would error at run time
+    }
+    let out_zp = chain.out_zp.quantized_scalar_i32().ok()?;
+    let eval = if chain.f16 { ActEval::F16 } else { ActEval::F32 };
+    let lut = ActLut::build_exact(
+        chain.act,
+        eval,
+        chain.in_scale,
+        in_zp,
+        in_qtype,
+        chain.out_scale,
+        out_zp,
+        chain.out_qtype,
+    );
+    let kernel = Kernel::FusedActLut(FusedActLut { lut, in_qtype });
+    Some(fused_item(chain.nodes, kernel, g))
+}

@@ -1,0 +1,294 @@
+//! Activation lookup tables — shared by the hardware simulator's ROM
+//! stages and the interpreter's plan-time LUT-folding pass.
+//!
+//! On fixed-point hardware any pure elementwise int8→int8 function is a
+//! 256-entry ROM. [`ActLut::build`] composes the float pipeline the ONNX
+//! model codifies (Dequantize → [f16 cast] → Tanh / Sigmoid → Quantize)
+//! the way the simulated hardware evaluates it; narrower indices
+//! (`lut_bits < 8`) quantize the index and expose the accuracy/area
+//! trade-off in the co-design sweep. [`ActLut::build_exact`] composes the
+//! *interpreter's* per-element operator implementations instead — zero
+//! points included, quantization as multiply-by-reciprocal — so a fused
+//! interpreter step that replaces the node chain with a table lookup is
+//! bit-identical to executing the chain node by node (the `opt` module's
+//! LUT-folding pass; differential proof in `tests/executor_plan.rs`).
+//!
+//! This module lived in `hwsim::lut` until the plan-time graph optimizer
+//! needed it too; `hwsim::lut` remains as a re-export shim.
+
+use crate::ops::qlinear::round_half_even;
+use crate::quant::QType;
+use crate::tensor::f16::F16;
+
+/// Which activation function the stage computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActFn {
+    Tanh,
+    Sigmoid,
+}
+
+/// Precision the function is evaluated in when building the table —
+/// mirrors the model's Fig. 4 (f32) vs Fig. 5/6 (f16) variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActEval {
+    F32,
+    F16,
+}
+
+/// A ROM mapping an 8-bit stage input to the quantized activation output.
+#[derive(Clone, Debug)]
+pub struct ActLut {
+    /// 256 entries indexed by the raw byte pattern of the input (for an
+    /// i8 domain, `(q as u8) as usize`); values are the output integer
+    /// (i8 or u8 domain per `out_qtype`), stored widened.
+    table: Vec<i16>,
+    pub out_qtype: QType,
+    pub index_bits: u32,
+}
+
+impl ActLut {
+    /// Build the ROM from the codified parameters, hardware-style: the
+    /// index is the i8 input (optionally truncated to `index_bits`), the
+    /// zero points are assumed symmetric (0), and requantization divides
+    /// by the output scale — [`super::QType::range`]-saturated.
+    pub fn build(
+        f: ActFn,
+        eval: ActEval,
+        in_scale: f32,
+        out_scale: f32,
+        out_qtype: QType,
+        index_bits: u32,
+    ) -> ActLut {
+        let (lo, hi) = out_qtype.range();
+        let mut table = vec![0i16; 256];
+        let index_mask: i32 = !0i32 << (8 - index_bits.min(8)); // top index_bits kept
+        for raw in -128..=127i32 {
+            // Narrow index: truncate low bits (hardware drops them).
+            let idx = raw & index_mask;
+            let x = idx as f32 * in_scale;
+            let y = eval_act(f, eval, x);
+            let q = round_half_even(y / out_scale).clamp(lo as f32, hi as f32) as i16;
+            table[(raw as u8) as usize] = q;
+        }
+        ActLut {
+            table,
+            out_qtype,
+            index_bits,
+        }
+    }
+
+    /// Build the ROM by composing EXACTLY the interpreter's per-element
+    /// operator arithmetic for `DequantizeLinear → [Cast f16] → act →
+    /// [Cast f32] → QuantizeLinear`:
+    ///
+    /// * dequantize: `(q - in_zp) as f32 * in_scale`
+    ///   (`ops::qlinear::dequantize_linear_into`),
+    /// * the activation exactly as `ops::elementwise` evaluates it (f32,
+    ///   or round-tripped through the software f16),
+    /// * quantize: `round_half_even(y * (1.0 / out_scale)) + out_zp`,
+    ///   then saturate (`ops::qlinear::quantize_linear_into` — note the
+    ///   multiply-by-reciprocal, which can differ from `build`'s division
+    ///   in the last ULP).
+    ///
+    /// The index domain is the full 8 bits of `in_qtype` (i8 or u8, by
+    /// raw byte pattern — see [`ActLut::get_raw`]). Because the chain is
+    /// a pure function of the 8-bit input, a table built this way makes
+    /// the fused step bit-identical to running the nodes one by one.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_exact(
+        f: ActFn,
+        eval: ActEval,
+        in_scale: f32,
+        in_zp: i32,
+        in_qtype: QType,
+        out_scale: f32,
+        out_zp: i32,
+        out_qtype: QType,
+    ) -> ActLut {
+        let (lo, hi) = out_qtype.range();
+        let inv = 1.0 / out_scale;
+        let mut table = vec![0i16; 256];
+        for b in 0..=255u16 {
+            let b = b as u8;
+            let q = match in_qtype {
+                QType::I8 => (b as i8) as i32,
+                QType::U8 => b as i32,
+            };
+            let x = (q - in_zp) as f32 * in_scale;
+            let y = eval_act(f, eval, x);
+            let r = round_half_even(y * inv) + out_zp as f32;
+            table[b as usize] = r.clamp(lo as f32, hi as f32) as i16;
+        }
+        ActLut {
+            table,
+            out_qtype,
+            index_bits: 8,
+        }
+    }
+
+    /// Look up one int8 input.
+    #[inline]
+    pub fn get(&self, q: i8) -> i16 {
+        self.table[(q as u8) as usize]
+    }
+
+    /// Look up by raw byte pattern (the u8-domain form of [`ActLut::get`]).
+    #[inline]
+    pub fn get_raw(&self, b: u8) -> i16 {
+        self.table[b as usize]
+    }
+
+    /// Apply to a widened-i32 slice in place (values must be in i8 range;
+    /// the preceding requantize stage guarantees it).
+    pub fn apply(&self, xs: &mut [i32]) {
+        for v in xs {
+            *v = self.get(*v as i8) as i32;
+        }
+    }
+}
+
+/// One activation evaluation, in the requested precision. The f16 path is
+/// bit-identical to the interpreter's `Cast f16 → act → Cast f32` node
+/// sequence: `F16::from_f32` is the Cast, `F16::{tanh, sigmoid}` evaluate
+/// in f32 and round the result to f16 (exactly `ops::elementwise`'s f16
+/// arms), and `to_f32` is the exact widening Cast back.
+#[inline]
+fn eval_act(f: ActFn, eval: ActEval, x: f32) -> f32 {
+    match (f, eval) {
+        (ActFn::Tanh, ActEval::F32) => x.tanh(),
+        (ActFn::Sigmoid, ActEval::F32) => 1.0 / (1.0 + (-x).exp()),
+        (ActFn::Tanh, ActEval::F16) => F16::from_f32(x).tanh().to_f32(),
+        (ActFn::Sigmoid, ActEval::F16) => F16::from_f32(x).sigmoid().to_f32(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_width_lut_matches_float_pipeline() {
+        let in_scale = 4.0 / 127.0;
+        let out_scale = 1.0 / 127.0;
+        let lut = ActLut::build(ActFn::Tanh, ActEval::F32, in_scale, out_scale, QType::I8, 8);
+        for q in -128..=127i32 {
+            let x = q as f32 * in_scale;
+            let want = round_half_even(x.tanh() / out_scale).clamp(-128.0, 127.0) as i16;
+            assert_eq!(lut.get(q as i8), want, "q={q}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_lut_is_uint8_monotone() {
+        let lut = ActLut::build(
+            ActFn::Sigmoid,
+            ActEval::F16,
+            8.0 / 127.0,
+            1.0 / 255.0,
+            QType::U8,
+            8,
+        );
+        let mut prev = -1i16;
+        for q in -128..=127i32 {
+            let v = lut.get(q as i8);
+            assert!((0..=255).contains(&v));
+            assert!(v >= prev, "monotonicity broken at {q}");
+            prev = v;
+        }
+        assert_eq!(lut.get(-128), 0);
+        assert_eq!(lut.get(127), 255);
+    }
+
+    #[test]
+    fn narrow_index_coarsens() {
+        let fine = ActLut::build(ActFn::Tanh, ActEval::F32, 0.03, 1.0 / 127.0, QType::I8, 8);
+        let coarse = ActLut::build(ActFn::Tanh, ActEval::F32, 0.03, 1.0 / 127.0, QType::I8, 5);
+        // Coarse LUT is piecewise constant over 2^3-wide input bins.
+        assert_eq!(coarse.get(8), coarse.get(9));
+        assert_eq!(coarse.get(8), coarse.get(15));
+        // And differs from the fine LUT somewhere.
+        let diffs = (-128..=127)
+            .filter(|&q| fine.get(q as i8) != coarse.get(q as i8))
+            .count();
+        assert!(diffs > 0);
+    }
+
+    #[test]
+    fn exact_lut_replicates_interpreter_ops_per_element() {
+        use crate::ops::{elementwise, qlinear};
+        use crate::tensor::{DType, Tensor};
+        // Every 8-bit input, both domains, f32 and f16 evaluation: the
+        // table entry must equal running the actual operator kernels.
+        let (in_scale, out_scale) = (2.0 / 127.0, 1.0 / 127.0);
+        for (eval, f16) in [(ActEval::F32, false), (ActEval::F16, true)] {
+            let lut = ActLut::build_exact(
+                ActFn::Tanh,
+                eval,
+                in_scale,
+                0,
+                QType::I8,
+                out_scale,
+                0,
+                QType::I8,
+            );
+            let q: Vec<i8> = (-128..=127).map(|v| v as i8).collect();
+            let x = Tensor::from_i8(&[256], q.clone()).unwrap();
+            let deq = qlinear::dequantize_linear(
+                &x,
+                &Tensor::scalar_f32(in_scale),
+                Some(&Tensor::scalar_i8(0)),
+            )
+            .unwrap();
+            let act_in = if f16 { deq.cast(DType::F16) } else { deq };
+            let act = elementwise::tanh(&act_in).unwrap();
+            let act_f32 = if f16 { act.cast(DType::F32) } else { act };
+            let want = qlinear::quantize_linear(
+                &act_f32,
+                &Tensor::scalar_f32(out_scale),
+                Some(&Tensor::scalar_i8(0)),
+            )
+            .unwrap();
+            for (qi, &w) in q.iter().zip(want.as_i8().unwrap()) {
+                assert_eq!(lut.get(*qi) as i8, w, "eval {eval:?} q={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_lut_u8_domain_and_zero_points() {
+        use crate::ops::qlinear;
+        use crate::tensor::Tensor;
+        // Nonzero zero points on BOTH edges (the asymmetric-u8 case the
+        // paper's §3.1 dtype-selection rule exists for).
+        let lut = ActLut::build_exact(
+            ActFn::Sigmoid,
+            ActEval::F32,
+            0.05,
+            128,
+            QType::U8,
+            1.0 / 255.0,
+            10,
+            QType::U8,
+        );
+        let q: Vec<u8> = (0..=255).map(|v| v as u8).collect();
+        let x = Tensor::from_u8(&[256], q.clone()).unwrap();
+        let deq = qlinear::dequantize_linear(
+            &x,
+            &Tensor::scalar_f32(0.05),
+            Some(&Tensor::scalar_u8(128)),
+        )
+        .unwrap();
+        let s = deq.as_f32().unwrap();
+        let act: Vec<f32> = s.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect();
+        let act = Tensor::from_f32(&[256], act).unwrap();
+        let want = qlinear::quantize_linear(
+            &act,
+            &Tensor::scalar_f32(1.0 / 255.0),
+            Some(&Tensor::scalar_u8(10)),
+        )
+        .unwrap();
+        for (b, &w) in q.iter().zip(want.as_u8().unwrap()) {
+            assert_eq!(lut.get_raw(*b) as u8, w, "b={b}");
+        }
+    }
+}

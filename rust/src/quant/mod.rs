@@ -9,10 +9,12 @@
 //! Figure 1–6 operator patterns.
 
 pub mod calib;
+pub mod lut;
 pub mod rescale;
 pub mod scheme;
 
 pub use calib::{AbsHistogram, Calibrator, MaxRange, MseOptimal, Percentile};
+pub use lut::{ActEval, ActFn, ActLut};
 pub use rescale::{apply_integer, decompose, RescaleDecomposition, MAX_EXACT_F32_INT};
 pub use scheme::{quantize_bias, QType, QuantError, SymmetricScale};
 

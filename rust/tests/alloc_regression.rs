@@ -15,7 +15,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use pqdl::interp::Session;
+use pqdl::interp::{PlanOptions, Session};
 use pqdl::onnx::ir::Attr;
 use pqdl::onnx::{batched, GraphBuilder};
 use pqdl::tensor::{DType, Tensor};
@@ -99,6 +99,35 @@ fn batch_input(batch: usize, seed: u8) -> Tensor {
     Tensor::from_i8(&[batch, 4], data).unwrap()
 }
 
+/// Fig. 3-like conv chain (fuses to one FusedQConv step): ConvInteger ->
+/// Add([1,M,1,1] bias) -> Cast -> Mul -> QuantizeLinear.
+fn fig3_like() -> pqdl::onnx::ir::Model {
+    let mut b = GraphBuilder::new("alloc_fig3");
+    b.input("x", DType::I8, &batched(&[1, 4, 4]));
+    b.init(
+        "w",
+        Tensor::from_i8(&[2, 1, 3, 3], (0..18).map(|i| (i as i8) - 9).collect()).unwrap(),
+    );
+    b.init("bias", Tensor::from_i32(&[1, 2, 1, 1], vec![50, -50]).unwrap());
+    b.init("mult", Tensor::scalar_f32(1.0 / 16.0));
+    b.init("q_one", Tensor::scalar_f32(1.0));
+    b.init("q_zp", Tensor::scalar_i8(0));
+    let acc = b.node(
+        "ConvInteger",
+        &["x", "w"],
+        &[
+            ("strides", Attr::Ints(vec![1, 1])),
+            ("pads", Attr::Ints(vec![1, 1, 1, 1])),
+        ],
+    );
+    let accb = b.node("Add", &[&acc, "bias"], &[]);
+    let f = b.node("Cast", &[&accb], &[("to", Attr::Str("FLOAT".into()))]);
+    let m1 = b.node("Mul", &[&f, "mult"], &[]);
+    let y = b.node("QuantizeLinear", &[&m1, "q_one", "q_zp"], &[]);
+    b.output(&y, DType::I8, &batched(&[2, 4, 4]));
+    b.finish_model()
+}
+
 #[test]
 fn second_run_at_fixed_batch_allocates_nothing() {
     // Sanity: the counter actually counts.
@@ -108,7 +137,12 @@ fn second_run_at_fixed_batch_allocates_nothing() {
     });
     assert!(n >= 1, "counting allocator is not engaged");
 
+    // Since the plan-time optimizer, the default session runs this chain
+    // as ONE FusedQFc step — so everything below proves the FUSED path's
+    // steady state (the kernel's accumulator parks in per-step scratch,
+    // the output recycles through `run_into`).
     let sess = Session::new(fig1_like()).unwrap().with_parallelism(false);
+    assert_eq!(sess.plan_stats().fused_qfc, 1, "fig1 chain must fuse");
     let x8 = batch_input(8, 3);
     let expected8 = sess.run_unplanned(&[("x", x8.clone())]).unwrap();
 
@@ -147,6 +181,39 @@ fn second_run_at_fixed_batch_allocates_nothing() {
     result.unwrap();
     assert_eq!(outs, expected3, "steady small-batch output");
     assert_eq!(allocs, 0, "steady state at the new batch size");
+
+    // -- unfused plan keeps its zero-allocation steady state -------------
+    // `PlanOptions { fuse: false }` is the differential baseline; its
+    // node-per-step execution must not have regressed.
+    let unfused = Session::new_with_options(fig1_like(), PlanOptions { fuse: false })
+        .unwrap()
+        .with_parallelism(false);
+    assert_eq!(unfused.plan_stats().fused_qfc, 0);
+    let mut uouts = Vec::new();
+    unfused.run_into(&[("x", &x8)], &mut uouts).unwrap();
+    assert_eq!(uouts, expected8, "unfused run 1 output");
+    let (allocs, result) = counted(|| unfused.run_into(&[("x", &x8)], &mut uouts));
+    result.unwrap();
+    assert_eq!(uouts, expected8, "unfused run 2 output");
+    assert_eq!(allocs, 0, "unfused plan steady state must stay allocation-free");
+
+    // -- fused conv chain (FusedQConv: im2col scratch + accumulator
+    //    scratch + recycled output) ---------------------------------------
+    let conv = Session::new(fig3_like()).unwrap().with_parallelism(false);
+    assert_eq!(conv.plan_stats().fused_qconv, 1, "fig3 chain must fuse");
+    let cx = Tensor::from_i8(
+        &[2, 1, 4, 4],
+        (0..32).map(|i| ((i * 23 % 251) as u8) as i8).collect(),
+    )
+    .unwrap();
+    let cexpected = conv.run_unplanned(&[("x", cx.clone())]).unwrap();
+    let mut couts = Vec::new();
+    conv.run_into(&[("x", &cx)], &mut couts).unwrap();
+    assert_eq!(couts, cexpected, "fused conv run 1 output");
+    let (allocs, result) = counted(|| conv.run_into(&[("x", &cx)], &mut couts));
+    result.unwrap();
+    assert_eq!(couts, cexpected, "fused conv run 2 output");
+    assert_eq!(allocs, 0, "fused conv steady state must be allocation-free");
 
     // -- serving-path fusion discipline ---------------------------------
     // The batch worker fuses queued request tensors by REFERENCE

@@ -1,19 +1,25 @@
 //! Differential tests for the compiled execution plan: across all six
-//! figure models, the quantized float-I/O MLP, and the hardware
+//! figure models, the quantized float-I/O MLP and CNN, and the hardware
 //! simulator, the planned executor (`Session::run` / `run_serial` /
 //! `run_observed`) must produce BIT-IDENTICAL outputs — and for the
 //! calibration hook, an identical observer stream — to the legacy
 //! string-keyed interpreter (`Session::run_unplanned`), which is the
 //! pre-plan implementation retained verbatim as the oracle.
+//!
+//! Since the plan-time graph optimizer (`pqdl::opt`), the contract is
+//! three-way: FUSED plan == UNFUSED plan == legacy interpreter, plus
+//! coverage pins (the six figures must fuse to their expected step
+//! counts) and decline proofs (breaking a fusion precondition must leave
+//! results bit-identical with no fused kernel in the plan).
 
 use pqdl::figures::Figure;
 use pqdl::hwsim::{HwConfig, HwModule, HW_PAR_MIN_BATCH};
-use pqdl::interp::Session;
-use pqdl::proptest_util::{run_prop, RangeUsize};
+use pqdl::interp::{PlanOptions, Session};
+use pqdl::proptest_util::{run_prop, Pair, RangeUsize};
 use pqdl::quant::CalibStrategy;
 use pqdl::rewrite::{calibrate, quantize_model, QuantizeOptions};
 use pqdl::tensor::{DType, Tensor};
-use pqdl::train::{synthetic_digits, train_classifier, HiddenAct, Mlp};
+use pqdl::train::{synthetic_digits, train_classifier, train_cnn, Cnn, HiddenAct, Mlp};
 
 #[test]
 fn plan_matches_legacy_on_all_figures() {
@@ -91,10 +97,21 @@ fn plan_matches_legacy_on_quantized_float_io_mlp() {
 
 /// The calibration hook: the planned executor's observer stream (names
 /// and tensors, in order) must be identical to the legacy interpreter's.
+///
+/// Regression pin for the plan-time optimizer: these sessions run FUSED
+/// plans (asserted below), whose steps never materialize mid-chain
+/// values — `run_observed` must therefore force the unfused plan, or
+/// every mid-chain observation (the bulk of the calibration signal)
+/// would silently vanish from the stream.
 #[test]
 fn observer_stream_identical_planned_vs_legacy() {
     for fig in Figure::ALL {
         let sess = Session::new(fig.model()).unwrap();
+        assert!(
+            sess.plan_stats().steps < sess.plan_stats().nodes,
+            "{}: session must be fused for this regression to bite",
+            fig.name()
+        );
         let x = fig.input(3, 0xCA11B);
         let mut planned: Vec<(String, Tensor)> = Vec::new();
         sess.run_observed(&[("x", x.clone())], &mut |name, t| {
@@ -162,6 +179,229 @@ fn calibration_thresholds_identical_planned_vs_legacy() {
             "threshold for '{name}' drifted between planned and legacy"
         );
     }
+}
+
+/// The three-way fusion contract on every figure model: fused plan,
+/// unfused plan, and the legacy interpreter agree bit for bit across
+/// batch sizes (serial and auto/batch-parallel paths).
+#[test]
+fn fused_vs_unfused_vs_legacy_three_way_on_all_figures() {
+    for fig in Figure::ALL {
+        let fused = Session::new(fig.model()).unwrap();
+        let unfused =
+            Session::new_with_options(fig.model(), PlanOptions { fuse: false }).unwrap();
+        let stats = fused.plan_stats();
+        assert!(
+            stats.steps < stats.nodes,
+            "{}: fusion must shrink the plan ({stats})",
+            fig.name()
+        );
+        assert_eq!(unfused.plan_stats().steps, unfused.plan_stats().nodes, "{}", fig.name());
+        run_prop(
+            &format!("fused_three_way::{}", fig.name()),
+            &RangeUsize { lo: 1, hi: 17 },
+            0xF05E ^ fig.name().len() as u64,
+            8,
+            |&batch| {
+                let x = fig.input(batch, batch as u64 * 211 + 3);
+                let legacy = fused
+                    .run_unplanned(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let f = fused
+                    .run_serial(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let u = unfused
+                    .run_serial(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let f_auto = fused.run(&[("x", x)]).map_err(|e| e.to_string())?;
+                if legacy != f || legacy != u || legacy != f_auto {
+                    return Err(format!(
+                        "{}: three-way divergence at batch {batch}",
+                        fig.name()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Fusion coverage pins for the six canonical figures (the CI fusion
+/// smoke): the whole accumulate chain collapses to ONE FusedQFc /
+/// FusedQConv step, plus one FusedActLut where Figs. 4–6 fold their
+/// activation tail.
+#[test]
+fn fusion_coverage_expected_step_counts() {
+    // (figure, nodes, steps, fused_qfc, fused_qconv, fused_act_lut)
+    let expect = [
+        (Figure::Fig1FcTwoMul, 6, 1, 1, 0, 0),
+        (Figure::Fig2FcReluOneMul, 6, 1, 1, 0, 0),
+        (Figure::Fig3Conv, 5, 1, 0, 1, 0),
+        (Figure::Fig4TanhInt8, 9, 2, 1, 0, 1),
+        (Figure::Fig5TanhF16, 11, 2, 1, 0, 1),
+        (Figure::Fig6SigmoidF16, 11, 2, 1, 0, 1),
+    ];
+    for (fig, nodes, steps, qfc, qconv, lut) in expect {
+        let sess = Session::new(fig.model()).unwrap();
+        let s = sess.plan_stats();
+        assert_eq!(s.nodes, nodes, "{}: node count", fig.name());
+        assert_eq!(s.steps, steps, "{}: fused step count", fig.name());
+        assert_eq!(s.fused_qfc, qfc, "{}: FusedQFc count", fig.name());
+        assert_eq!(s.fused_qconv, qconv, "{}: FusedQConv count", fig.name());
+        assert_eq!(s.fused_act_lut, lut, "{}: FusedActLut count", fig.name());
+        assert_eq!(s.eliminated, 0, "{}: nothing to eliminate", fig.name());
+    }
+}
+
+/// The quantized float-I/O MLP and CNN (real calibration + rewrite
+/// output) under the same three-way contract — and both must actually
+/// fuse (the rewrite emits exactly the codified chains).
+#[test]
+fn fused_three_way_on_quantized_mlp_and_cnn() {
+    // MLP (Gemm chain + Softmax head, quantized to Fig. 1/2 patterns).
+    let (qsess, rows) = quantized_digits_mlp();
+    let qmodel = qsess.model().clone();
+    let unfused = Session::new_with_options(qmodel, PlanOptions { fuse: false }).unwrap();
+    let stats = qsess.plan_stats();
+    assert!(stats.fused_qfc >= 2, "quantized MLP must fuse its FC chains ({stats})");
+    for batch in [1usize, 3, 9] {
+        let mut xs = Vec::with_capacity(batch * 64);
+        for i in 0..batch {
+            xs.extend_from_slice(&rows[(i * 7) % rows.len()]);
+        }
+        let x = Tensor::from_f32(&[batch, 64], xs).unwrap();
+        let legacy = qsess.run_unplanned(&[("x", x.clone())]).unwrap();
+        let f = qsess.run_serial(&[("x", x.clone())]).unwrap();
+        let u = unfused.run_serial(&[("x", x.clone())]).unwrap();
+        let auto = qsess.run(&[("x", x)]).unwrap();
+        assert_eq!(legacy, f, "mlp batch {batch} (fused)");
+        assert_eq!(legacy, u, "mlp batch {batch} (unfused)");
+        assert_eq!(legacy, auto, "mlp batch {batch} (auto)");
+    }
+
+    // CNN (ConvInteger chain + pool/flatten + FC head). Training quality
+    // is irrelevant here — only the quantized structure matters.
+    let data = synthetic_digits(300, 171);
+    let mut cnn = Cnn::new(4, 10, 172);
+    train_cnn(&mut cnn, &data, 2, 32, 0.08, 0.9, 173);
+    let model = cnn.to_model("digits_cnn_fused");
+    let sess = Session::new(model.clone()).unwrap();
+    let batches: Vec<_> = (0..16)
+        .map(|i| {
+            let (x, _) = data.sample(i);
+            vec![(
+                "x".to_string(),
+                Tensor::from_f32(&[1, 1, 8, 8], x.to_vec()).unwrap(),
+            )]
+        })
+        .collect();
+    let cal = calibrate(&sess, &batches, CalibStrategy::MaxRange).unwrap();
+    let q = quantize_model(&model, &cal, &QuantizeOptions::default()).unwrap();
+    let qcnn = Session::new(q.clone()).unwrap();
+    let ucnn = Session::new_with_options(q, PlanOptions { fuse: false }).unwrap();
+    let stats = qcnn.plan_stats();
+    assert!(stats.fused_qconv >= 1, "quantized CNN must fuse its conv chain ({stats})");
+    for batch in [1usize, 4] {
+        let mut xs = Vec::with_capacity(batch * 64);
+        for i in 0..batch {
+            xs.extend_from_slice(data.sample((i * 3) % data.len()).0);
+        }
+        let x = Tensor::from_f32(&[batch, 1, 8, 8], xs).unwrap();
+        let legacy = qcnn.run_unplanned(&[("x", x.clone())]).unwrap();
+        let f = qcnn.run_serial(&[("x", x.clone())]).unwrap();
+        let u = ucnn.run_serial(&[("x", x)]).unwrap();
+        assert_eq!(legacy, f, "cnn batch {batch} (fused)");
+        assert_eq!(legacy, u, "cnn batch {batch} (unfused)");
+    }
+}
+
+/// Breaking a fusion precondition must make the matcher DECLINE (no
+/// fused kernel in the plan) while results stay bit-identical to the
+/// legacy interpreter — fusion is an optimization, never a semantic
+/// dependency.
+#[test]
+fn broken_fusion_preconditions_decline_and_stay_bit_identical() {
+    use pqdl::onnx::ir::Attr;
+    use pqdl::onnx::{batched, GraphBuilder};
+
+    /// Fig. 1-like chain with one precondition broken per mutation:
+    /// 1 = extra consumer on the accumulator (mid-chain value),
+    /// 2 = extra consumer on the rescale Mul output,
+    /// 3 = requantize scale is a runtime input, not an initializer,
+    /// 4 = rescale multiplier is a non-scalar initializer,
+    /// 5 = bias is a runtime input, not an initializer.
+    fn model(mutation: usize) -> pqdl::onnx::Model {
+        let mut b = GraphBuilder::new("break_fusion");
+        b.input("x", DType::I8, &batched(&[4]));
+        b.init("w", Tensor::from_i8(&[4, 2], vec![1, -3, 5, -7, 2, -4, 6, -8]).unwrap());
+        if mutation == 5 {
+            b.input("bias", DType::I32, &pqdl::onnx::fixed_dims(&[2]));
+        } else {
+            b.init("bias", Tensor::from_i32(&[2], vec![40, -60]).unwrap());
+        }
+        if mutation == 4 {
+            b.init("scale1", Tensor::from_f32(&[2], vec![0.5, 0.25]).unwrap());
+        } else {
+            b.init("scale1", Tensor::scalar_f32(0.5));
+        }
+        if mutation == 3 {
+            b.input("q_one", DType::F32, &pqdl::onnx::fixed_dims(&[]));
+        } else {
+            b.init("q_one", Tensor::scalar_f32(1.0));
+        }
+        b.init("q_zp", Tensor::scalar_i8(0));
+        let acc = b.node("MatMulInteger", &["x", "w"], &[]);
+        let accb = b.node("Add", &[&acc, "bias"], &[]);
+        let f = b.node("Cast", &[&accb], &[("to", Attr::Str("FLOAT".into()))]);
+        let m1 = b.node("Mul", &[&f, "scale1"], &[]);
+        let y = b.node("QuantizeLinear", &[&m1, "q_one", "q_zp"], &[]);
+        b.output(&y, DType::I8, &batched(&[2]));
+        if mutation == 1 {
+            let extra = b.node("Relu", &[&acc], &[]);
+            b.output(&extra, DType::I32, &batched(&[2]));
+        }
+        if mutation == 2 {
+            let extra = b.node("Relu", &[&m1], &[]);
+            b.output(&extra, DType::F32, &batched(&[2]));
+        }
+        b.finish_model()
+    }
+
+    // Sanity: the unmutated chain DOES fuse (so the declines below mean
+    // something).
+    let base = Session::new(model(0)).unwrap();
+    assert_eq!(base.plan_stats().fused_qfc, 1, "baseline must fuse");
+
+    run_prop(
+        "broken_preconditions_decline",
+        &Pair(RangeUsize { lo: 1, hi: 5 }, RangeUsize { lo: 1, hi: 9 }),
+        0xDEC1,
+        24,
+        |&(mutation, batch)| {
+            let sess = Session::new(model(mutation)).map_err(|e| e.to_string())?;
+            let stats = sess.plan_stats();
+            if stats.fused_qfc != 0 {
+                return Err(format!("mutation {mutation}: matcher must decline ({stats})"));
+            }
+            let data: Vec<i8> = (0..batch * 4)
+                .map(|i| ((i * 89 + mutation * 41) % 251) as u8 as i8)
+                .collect();
+            let x = Tensor::from_i8(&[batch, 4], data).unwrap();
+            let mut feeds: Vec<(&str, Tensor)> = vec![("x", x)];
+            if mutation == 3 {
+                feeds.push(("q_one", Tensor::scalar_f32(1.0)));
+            }
+            if mutation == 5 {
+                feeds.push(("bias", Tensor::from_i32(&[2], vec![40, -60]).unwrap()));
+            }
+            let legacy = sess.run_unplanned(&feeds).map_err(|e| e.to_string())?;
+            let planned = sess.run_serial(&feeds).map_err(|e| e.to_string())?;
+            if legacy != planned {
+                return Err(format!("mutation {mutation}: bit divergence at batch {batch}"));
+            }
+            Ok(())
+        },
+    );
 }
 
 /// hwsim consumes the same plan-compiled stages; its batch-split schedule
