@@ -41,6 +41,15 @@ fn main() -> anyhow::Result<()> {
         ..ServerConfig::default()
     });
     let mut lanes = Vec::new();
+    println!(
+        "kernel isa: {} (host supports: {})",
+        pqdl::ops::Isa::active(),
+        pqdl::ops::Isa::available()
+            .iter()
+            .map(|i| i.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     println!("plan-time fusion coverage (interp lanes):");
     for fig in Figure::ALL {
         let model = fig.model();

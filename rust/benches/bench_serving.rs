@@ -175,6 +175,81 @@ fn main() {
         json.record(&format!("fused b{batch}"), batch, &fused);
     }
 
+    // --- per-ISA microkernel rows (plan-time kernel dispatch) -------------
+    // The same packed int8 GEMM and fused FC kernel, forced through every
+    // ISA variant this host supports (scalar always present — it is the
+    // differential oracle, so these rows double as a sanity check that
+    // the variants measure the same work). Rows land in the JSON
+    // trajectory so BENCH_serving.json can compare ISA lanes across
+    // commits; `PQDL_FORCE_ISA` pins an entire serving run instead.
+    {
+        use pqdl::ops::fused::{FusedQFc, QEpilogue};
+        use pqdl::ops::matmul::{self, PackedB};
+        use pqdl::ops::Isa;
+        use pqdl::quant::QType;
+        use pqdl::train::Rng;
+
+        let (k, n) = (64usize, 128usize);
+        let mut rng = Rng::new(0x15A);
+        let bw: Vec<i32> = (0..k * n).map(|_| rng.i8() as i32).collect();
+        let bp = PackedB::pack(&bw, k, n).expect("i8-ranged weights must pack");
+        let bias: Vec<i32> = (0..n).map(|j| j as i32 * 7 - 400).collect();
+        section(&format!(
+            "per-ISA packed GEMM + fused FC (k={k}, n={n}; plan default: {})",
+            Isa::active()
+        ));
+        println!(
+            "{:<8} | {:<8} | {:>14} | {:>14}",
+            "isa", "batch", "gemm itm/s", "fused itm/s"
+        );
+        for batch in [8usize, 128] {
+            let a: Vec<i8> = (0..batch * k).map(|_| rng.i8()).collect();
+            let x = Tensor::from_i8(&[batch, k], a.clone()).unwrap();
+            for isa in Isa::available() {
+                let gemm = {
+                    let a = &a;
+                    let bp = &bp;
+                    let mut c = vec![0i32; batch * n];
+                    bench_auto(&format!("isa {isa} gemm b{batch}"), batch, target_ms, move || {
+                        matmul::gemm_i8_packed_isa(isa, a, bp, batch, &mut c);
+                    })
+                };
+                let fc = FusedQFc {
+                    bw: bw.clone(),
+                    bp: PackedB::pack(&bw, k, n),
+                    k,
+                    n,
+                    a_zp: 0,
+                    bias: Some(bias.clone()),
+                    isa,
+                    epi: QEpilogue {
+                        s1: 0.013,
+                        s2: None,
+                        relu: true,
+                        inv_scale: 1.0 / 0.11,
+                        zp: 3,
+                        out_qtype: QType::I8,
+                    },
+                };
+                let fused = {
+                    let x = x.clone();
+                    let mut scratch = [None, None];
+                    bench_auto(&format!("isa {isa} fc b{batch}"), batch, target_ms, move || {
+                        fc.run(&x, None, &mut scratch).expect("fused fc run");
+                    })
+                };
+                println!(
+                    "{:<8} | {batch:<8} | {:>14.1} | {:>14.1}",
+                    isa.name(),
+                    gemm.throughput_per_s,
+                    fused.throughput_per_s
+                );
+                json.record(&format!("isa {isa} gemm b{batch}"), batch, &gemm);
+                json.record(&format!("isa {isa} fc b{batch}"), batch, &fused);
+            }
+        }
+    }
+
     section("dynamic batching sweep (16 closed-loop clients x 150 reqs)");
     println!(
         "{:<28} | {:>9} | {:>10} | {:>8} | {:>8} | {:>8}",

@@ -28,7 +28,7 @@ use crate::onnx::check::{check_model, CheckError};
 use crate::onnx::ir::{Dim, Model, ValueInfo};
 use crate::onnx::shape::ValueType;
 use crate::onnx::topo::topo_order;
-use crate::ops::{execute_node, OpError};
+use crate::ops::{execute_node, Isa, OpError};
 use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Tensor};
 use plan::{resolve_src, CompiledPlan, ScratchArena, Src};
@@ -109,20 +109,28 @@ pub struct PlanStats {
     pub fused_qconv: usize,
     pub fused_act_lut: usize,
     pub eliminated: usize,
+    /// Kernel instruction set the plan's quantized microkernels were
+    /// stamped with at compile time (see [`crate::ops::Isa::active`]).
+    pub isa: Isa,
+    /// Steps dispatching through that ISA (pre-bound + fused int8
+    /// GEMM/conv kernels) — the plan's ISA coverage.
+    pub isa_steps: usize,
 }
 
 impl std::fmt::Display for PlanStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} eliminated)",
+            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} eliminated; isa {} on {} steps)",
             self.nodes,
             self.steps,
             self.fused_qfc,
             self.fused_qconv,
             self.fused_act_lut,
             self.fused_nodes,
-            self.eliminated
+            self.eliminated,
+            self.isa,
+            self.isa_steps
         )
     }
 }
@@ -349,6 +357,13 @@ impl Session {
             fused_qconv: s.fused_qconv,
             fused_act_lut: s.fused_act_lut,
             eliminated: s.eliminated,
+            isa: self.plan.isa,
+            isa_steps: self
+                .plan
+                .steps
+                .iter()
+                .filter(|st| st.kernel.isa().is_some())
+                .count(),
         }
     }
 

@@ -24,7 +24,7 @@
 use super::SessionError;
 use crate::onnx::ir::Model;
 use crate::onnx::shape::ValueType;
-use crate::ops::Kernel;
+use crate::ops::{Isa, Kernel};
 use crate::opt::{self, OptStats, PlanItem, PlanOptions};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
@@ -90,6 +90,10 @@ pub(crate) struct CompiledPlan {
     pub outputs: Vec<Src>,
     /// What the plan-time optimizer did (zeroed for unfused plans).
     pub stats: OptStats,
+    /// Kernel ISA the lowering stamped into the plan's dispatched steps
+    /// ([`Isa::active`] at compile time — recorded here so `plan_stats()`
+    /// and serving reports can name the variant actually running).
+    pub isa: Isa,
 }
 
 /// Per-session recycled execution state: the steady-state zero-allocation
@@ -341,12 +345,22 @@ impl CompiledPlan {
             step.frees = f.into_boxed_slice();
         }
 
+        // The stamped ISA is uniform across a plan (every prebind calls
+        // `Isa::active()` under one compile), so the first dispatched
+        // step names it; plans with no dispatched step report the
+        // selection that WOULD apply.
+        let isa = steps
+            .iter()
+            .find_map(|s| s.kernel.isa())
+            .unwrap_or_else(Isa::active);
+
         Ok(CompiledPlan {
             steps,
             n_slots: names.len(),
             names,
             outputs,
             stats,
+            isa,
         })
     }
 }

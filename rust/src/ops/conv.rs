@@ -6,7 +6,8 @@
 //! blocked GEMM the fully-connected path uses, so one hot loop serves
 //! both patterns.
 
-use super::matmul::{gemm_f32, gemm_i32, gemm_i8_packed_a, PackedA};
+use super::isa::Isa;
+use super::matmul::{gemm_f32, gemm_i32, gemm_i8_packed_a_isa, PackedA};
 use super::OpError;
 use crate::onnx::shape::ConvAttrs;
 use crate::parallel::{self, ThreadPool};
@@ -62,6 +63,149 @@ fn im2col<T: Copy + Default>(
                     }
                 }
             }
+        }
+    }
+}
+
+/// i8 im2col through a plan-selected ISA. For the common `stride_w == 1,
+/// dil_w == 1` geometry each output row decomposes into left zero-pad +
+/// one contiguous source run + right zero-pad, and the run is copied with
+/// ISA-wide loads; any other geometry (and `Isa::Scalar`) falls back to
+/// the generic per-element loop above. The decomposition moves exactly
+/// the elements the generic loop moves (`ix = ox + kj*dil_w - pad_l`,
+/// in-bounds ox solved in closed form), so the column buffer is
+/// bit-identical either way — the differential conv tests prove it per
+/// available ISA.
+#[allow(clippy::too_many_arguments)]
+fn im2col_i8(
+    isa: Isa,
+    src: &[i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    attrs: &ConvAttrs,
+    oh: usize,
+    ow: usize,
+    dst: &mut [i8],
+) {
+    let [stride_h, stride_w] = attrs.strides;
+    let [pad_t, pad_l, _, _] = attrs.pads;
+    let [dil_h, dil_w] = attrs.dilations;
+    if matches!(isa, Isa::Scalar) || stride_w != 1 || dil_w != 1 {
+        im2col(src, c, h, w, kh, kw, attrs, oh, ow, dst);
+        return;
+    }
+    let patch = oh * ow;
+    for ci in 0..c {
+        for ki in 0..kh {
+            for kj in 0..kw {
+                let row = (ci * kh * kw + ki * kw + kj) * patch;
+                // With stride_w == dil_w == 1: ix = ox + off.
+                let off = kj as isize - pad_l as isize;
+                let lo = (-off).clamp(0, ow as isize) as usize;
+                let hi = (w as isize - off).clamp(lo as isize, ow as isize) as usize;
+                for oy in 0..oh {
+                    let iy = (oy * stride_h + ki * dil_h) as isize - pad_t as isize;
+                    let base = row + oy * ow;
+                    if iy < 0 || iy as usize >= h {
+                        dst[base..base + ow].fill(0);
+                        continue;
+                    }
+                    dst[base..base + lo].fill(0);
+                    dst[base + hi..base + ow].fill(0);
+                    if hi > lo {
+                        let src_row = (ci * h + iy as usize) * w;
+                        let s0 = (lo as isize + off) as usize;
+                        copy_i8(
+                            isa,
+                            &src[src_row + s0..src_row + s0 + (hi - lo)],
+                            &mut dst[base + lo..base + hi],
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Equal-length i8 copy through ISA-wide unaligned loads (the im2col
+/// inner move). Unsupported values degrade to `copy_from_slice`.
+fn copy_i8(isa: Isa, src: &[i8], dst: &mut [i8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::copy_i8_avx2(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::copy_i8_sse41(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: normalized() admits Neon only on aarch64 hosts.
+        Isa::Neon => unsafe { arm::copy_i8_neon(src, dst) },
+        _ => dst.copy_from_slice(src),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::x86_64::*;
+
+    /// Safety: caller verified AVX2 and `src.len() == dst.len()`; every
+    /// 32-byte load/store stays inside the main-loop bound `i + 32 <= len`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn copy_i8_avx2(src: &[i8], dst: &mut [i8]) {
+        let len = src.len();
+        let (sp, dp) = (src.as_ptr(), dst.as_mut_ptr());
+        let mut i = 0;
+        while i + 32 <= len {
+            let v = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            _mm256_storeu_si256(dp.add(i) as *mut __m256i, v);
+            i += 32;
+        }
+        if i < len {
+            dst[i..].copy_from_slice(&src[i..]);
+        }
+    }
+
+    /// Safety: caller verified SSE4.1; bounds as in [`copy_i8_avx2`]
+    /// with 16-byte chunks.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn copy_i8_sse41(src: &[i8], dst: &mut [i8]) {
+        let len = src.len();
+        let (sp, dp) = (src.as_ptr(), dst.as_mut_ptr());
+        let mut i = 0;
+        while i + 16 <= len {
+            let v = _mm_loadu_si128(sp.add(i) as *const __m128i);
+            _mm_storeu_si128(dp.add(i) as *mut __m128i, v);
+            i += 16;
+        }
+        if i < len {
+            dst[i..].copy_from_slice(&src[i..]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::aarch64::*;
+
+    /// Safety: NEON is baseline on aarch64; bounds as in the x86 twins
+    /// with 16-byte chunks.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn copy_i8_neon(src: &[i8], dst: &mut [i8]) {
+        let len = src.len();
+        let (sp, dp) = (src.as_ptr(), dst.as_mut_ptr());
+        let mut i = 0;
+        while i + 16 <= len {
+            vst1q_s8(dp.add(i), vld1q_s8(sp.add(i)));
+            i += 16;
+        }
+        if i < len {
+            dst[i..].copy_from_slice(&src[i..]);
         }
     }
 }
@@ -126,7 +270,22 @@ pub fn conv_integer_prewidened(
     x_zp: i32,
     attrs: &ConvAttrs,
 ) -> Result<Tensor, OpError> {
-    conv_integer_prewidened_into(x, wv, None, m, c, kh, kw, x_zp, attrs, None, &mut None)
+    // The unplanned path stays strictly scalar: it is the differential
+    // oracle the planned (possibly SIMD) path is tested against.
+    conv_integer_prewidened_into(
+        x,
+        wv,
+        None,
+        m,
+        c,
+        kh,
+        kw,
+        x_zp,
+        attrs,
+        Isa::Scalar,
+        None,
+        &mut None,
+    )
 }
 
 /// The compiled-plan form of [`conv_integer_prewidened`]: optionally a
@@ -156,6 +315,7 @@ pub fn conv_integer_prewidened_into(
     kw: usize,
     x_zp: i32,
     attrs: &ConvAttrs,
+    isa: Isa,
     recycled: Option<Tensor>,
     scratch: &mut Option<Tensor>,
 ) -> Result<Tensor, OpError> {
@@ -186,8 +346,8 @@ pub fn conv_integer_prewidened_into(
                 for (bi, dst) in block.chunks_mut(m * patch).enumerate() {
                     let b = b0 + bi;
                     let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
-                    im2col(src, c, h, wd, kh, kw, attrs, oh, ow, col);
-                    gemm_i8_packed_a(wp, col, patch, dst);
+                    im2col_i8(isa, src, c, h, wd, kh, kw, attrs, oh, ow, col);
+                    gemm_i8_packed_a_isa(isa, wp, col, patch, dst);
                 }
             };
             if pool_worthy {
@@ -443,7 +603,7 @@ mod tests {
         let want = conv_integer_prewidened(&x, &wv, 3, 2, 2, 2, 0, &attrs).unwrap();
         let mut scratch = None;
         let got = conv_integer_prewidened_into(
-            &x, &wv, Some(&wp), 3, 2, 2, 2, 0, &attrs, None, &mut scratch,
+            &x, &wv, Some(&wp), 3, 2, 2, 2, 0, &attrs, Isa::Scalar, None, &mut scratch,
         )
         .unwrap();
         assert_eq!(want, got);
@@ -451,7 +611,7 @@ mod tests {
         // must produce the same bits.
         let recycled_out = Some(Tensor::from_i32(&[4], vec![9; 4]).unwrap());
         let again = conv_integer_prewidened_into(
-            &x, &wv, Some(&wp), 3, 2, 2, 2, 0, &attrs, recycled_out, &mut scratch,
+            &x, &wv, Some(&wp), 3, 2, 2, 2, 0, &attrs, Isa::Scalar, recycled_out, &mut scratch,
         )
         .unwrap();
         assert_eq!(want, again);
@@ -461,10 +621,52 @@ mod tests {
         let zp = Tensor::scalar_u8(128);
         let want_zp = conv_integer(&xu, &w, Some(&zp), None, &attrs).unwrap();
         let got_zp = conv_integer_prewidened_into(
-            &xu, &wv, Some(&wp), 3, 2, 2, 2, 128, &attrs, None, &mut scratch,
+            &xu, &wv, Some(&wp), 3, 2, 2, 2, 128, &attrs, Isa::Scalar, None, &mut scratch,
         )
         .unwrap();
         assert_eq!(want_zp, got_zp);
+    }
+
+    #[test]
+    fn packed_conv_isa_variants_match_scalar() {
+        // Every available ISA must reproduce the scalar fast path bit for
+        // bit, across geometries that hit both im2col_i8 branches: the
+        // segmented copy (stride_w == dil_w == 1, with and without
+        // padding) and the generic fallback (strided / dilated width).
+        let x = Tensor::from_i8(
+            &[2, 3, 9, 9],
+            (0..2 * 3 * 81).map(|i| (i * 29 % 251) as u8 as i8).collect(),
+        )
+        .unwrap();
+        let w = Tensor::from_i8(
+            &[4, 3, 3, 3],
+            (0..4 * 3 * 9).map(|i| (i * 11 % 17) as i8 - 8).collect(),
+        )
+        .unwrap();
+        let wv = w.as_quantized_i32().unwrap();
+        let wp = PackedA::pack(&wv, 4, 3 * 3 * 3).unwrap();
+        let cases = [
+            ([1, 1], [0, 0, 0, 0], [1, 1]),
+            ([1, 1], [1, 2, 2, 1], [1, 1]),
+            ([2, 1], [1, 1, 1, 1], [1, 1]),
+            ([1, 2], [0, 1, 1, 0], [1, 1]),
+            ([1, 1], [2, 2, 2, 2], [2, 2]),
+        ];
+        for (strides, pads, dilations) in cases {
+            let attrs = ConvAttrs { strides, pads, dilations, group: 1 };
+            let mut scratch = None;
+            let want = conv_integer_prewidened_into(
+                &x, &wv, Some(&wp), 4, 3, 3, 3, 0, &attrs, Isa::Scalar, None, &mut scratch,
+            )
+            .unwrap();
+            for isa in Isa::available() {
+                let got = conv_integer_prewidened_into(
+                    &x, &wv, Some(&wp), 4, 3, 3, 3, 0, &attrs, isa, None, &mut scratch,
+                )
+                .unwrap();
+                assert_eq!(want, got, "{isa} attrs {attrs:?}");
+            }
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@
 //! elementwise, so the GEMM's blocking/parallelism guarantees carry over
 //! unchanged).
 
+use super::isa::Isa;
 use super::OpError;
 use super::{conv, matmul, qlinear};
 use crate::onnx::shape::ConvAttrs;
@@ -69,16 +70,234 @@ pub enum BiasLayout<'a> {
     PerChannel { bias: &'a [i32], patch: usize },
 }
 
+/// Bias source for one contiguous accumulator run.
+enum BiasSrc<'a> {
+    /// One bias value for the whole run (per-channel patch, or no-bias
+    /// as 0 — `v.wrapping_add(0) == v`, so the sequences coincide).
+    Splat(i32),
+    /// One bias value per element (a per-column row), same length as the
+    /// run.
+    Slice(&'a [i32]),
+}
+
+/// Lanes per epilogue vector step (the AVX2 width; the 128-bit ISAs run
+/// two half-width steps per call so every ISA shares this blocking).
+const EPI_LANES: usize = 8;
+
+/// Rescale + saturate one accumulator run into `o`. The SIMD path runs
+/// the float sequence [`EPI_LANES`] at a time into a stack buffer; the
+/// final saturating cast stays SCALAR per lane deliberately: Rust's
+/// `NaN as i8` is 0 while the vector float->int conversions return an
+/// `INT_MIN` sentinel on NaN/out-of-range, so a vectorized cast would
+/// diverge from the scalar kernel exactly on the degenerate epilogues
+/// (inf/NaN scales). Every vector lane upstream of the cast performs the
+/// same IEEE-754 single-precision operation sequence as
+/// [`QEpilogue::rescale`], so the f32 bits entering the cast are
+/// identical — see EXPERIMENTS.md §SIMD for the full argument.
+fn emit_run<T>(
+    o: &mut Vec<T>,
+    run: &[i32],
+    bias: BiasSrc<'_>,
+    epi: &QEpilogue,
+    isa: Isa,
+    sat: impl Fn(f32) -> T,
+) {
+    let len = run.len();
+    let mut i = 0;
+    if !matches!(isa, Isa::Scalar) {
+        let mut tmp = [0f32; EPI_LANES];
+        let splat = match bias {
+            BiasSrc::Splat(v) => [v; EPI_LANES],
+            BiasSrc::Slice(_) => [0; EPI_LANES],
+        };
+        while i + EPI_LANES <= len {
+            let bl = match bias {
+                BiasSrc::Splat(_) => &splat[..],
+                BiasSrc::Slice(b) => &b[i..i + EPI_LANES],
+            };
+            rescale_lanes(isa, &run[i..i + EPI_LANES], bl, epi, &mut tmp);
+            for &x in &tmp {
+                o.push(sat(x));
+            }
+            i += EPI_LANES;
+        }
+    }
+    for j in i..len {
+        let bv = match bias {
+            BiasSrc::Splat(v) => v,
+            BiasSrc::Slice(b) => b[j],
+        };
+        o.push(sat(epi.rescale(run[j].wrapping_add(bv))));
+    }
+}
+
+/// One 8-lane vector step of [`QEpilogue::rescale`] over
+/// `acc[i] +wrap bias[i]`. The `_` arm replays the scalar sequence, so
+/// the function is total even if a SIMD value reaches it on a target
+/// with no vector body (unreachable after [`Isa::normalized`]).
+fn rescale_lanes(
+    isa: Isa,
+    acc: &[i32],
+    bias: &[i32],
+    epi: &QEpilogue,
+    out: &mut [f32; EPI_LANES],
+) {
+    debug_assert!(acc.len() >= EPI_LANES && bias.len() >= EPI_LANES);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: write_quantized normalized the ISA for this host, and
+        // both slices cover at least EPI_LANES i32s (asserted above).
+        Isa::Avx2 => unsafe {
+            x86::rescale8_avx2(acc.as_ptr(), bias.as_ptr(), epi, out.as_mut_ptr())
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above; two disjoint half-width steps.
+        Isa::Sse41 => unsafe {
+            x86::rescale4_sse41(acc.as_ptr(), bias.as_ptr(), epi, out.as_mut_ptr());
+            x86::rescale4_sse41(
+                acc.as_ptr().add(4),
+                bias.as_ptr().add(4),
+                epi,
+                out.as_mut_ptr().add(4),
+            );
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; bounds as above.
+        Isa::Neon => unsafe {
+            arm::rescale4_neon(acc.as_ptr(), bias.as_ptr(), epi, out.as_mut_ptr());
+            arm::rescale4_neon(
+                acc.as_ptr().add(4),
+                bias.as_ptr().add(4),
+                epi,
+                out.as_mut_ptr().add(4),
+            );
+        },
+        _ => {
+            for l in 0..EPI_LANES {
+                out[l] = epi.rescale(acc[l].wrapping_add(bias[l]));
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::QEpilogue;
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::x86_64::*;
+
+    /// 8 lanes of the epilogue float sequence. Lane-for-lane IEEE-754
+    /// twins of the scalar ops: `vpaddd` wraps like `wrapping_add`,
+    /// `vcvtdq2ps` rounds-to-nearest-even like `as f32`, `vmulps` is the
+    /// scalar `*`, `vmaxps(x, 0)` returns 0 for NaN exactly like
+    /// `f32::max(NaN, 0.0)`, and `vroundps` with mode 8 (nearest-even,
+    /// no-exc) IS `round_ties_even`.
+    ///
+    /// Safety: caller verified AVX2 and that `acc`/`bias` point at >= 8
+    /// readable i32s and `out` at >= 8 writable f32s.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn rescale8_avx2(
+        acc: *const i32,
+        bias: *const i32,
+        epi: &QEpilogue,
+        out: *mut f32,
+    ) {
+        let v = _mm256_add_epi32(
+            _mm256_loadu_si256(acc as *const __m256i),
+            _mm256_loadu_si256(bias as *const __m256i),
+        );
+        let mut x = _mm256_cvtepi32_ps(v);
+        x = _mm256_mul_ps(x, _mm256_set1_ps(epi.s1));
+        if let Some(s2) = epi.s2 {
+            x = _mm256_mul_ps(x, _mm256_set1_ps(s2));
+        }
+        if epi.relu {
+            x = _mm256_max_ps(x, _mm256_setzero_ps());
+        }
+        x = _mm256_mul_ps(x, _mm256_set1_ps(epi.inv_scale));
+        x = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x);
+        x = _mm256_add_ps(x, _mm256_set1_ps(epi.zp as f32));
+        _mm256_storeu_ps(out, x);
+    }
+
+    /// 4 lanes of the epilogue float sequence (see [`rescale8_avx2`] for
+    /// the per-op equivalence argument — same instructions, 128-bit).
+    ///
+    /// Safety: caller verified SSE4.1; pointers cover >= 4 elements.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn rescale4_sse41(
+        acc: *const i32,
+        bias: *const i32,
+        epi: &QEpilogue,
+        out: *mut f32,
+    ) {
+        let v = _mm_add_epi32(
+            _mm_loadu_si128(acc as *const __m128i),
+            _mm_loadu_si128(bias as *const __m128i),
+        );
+        let mut x = _mm_cvtepi32_ps(v);
+        x = _mm_mul_ps(x, _mm_set1_ps(epi.s1));
+        if let Some(s2) = epi.s2 {
+            x = _mm_mul_ps(x, _mm_set1_ps(s2));
+        }
+        if epi.relu {
+            x = _mm_max_ps(x, _mm_setzero_ps());
+        }
+        x = _mm_mul_ps(x, _mm_set1_ps(epi.inv_scale));
+        x = _mm_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x);
+        x = _mm_add_ps(x, _mm_set1_ps(epi.zp as f32));
+        _mm_storeu_ps(out, x);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::QEpilogue;
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::aarch64::*;
+
+    /// 4 lanes of the epilogue float sequence. `scvtf` converts i32->f32
+    /// with round-to-nearest-even like `as f32`, `fmaxnm` matches Rust
+    /// `f32::max` (returns the non-NaN operand — plain `fmax` would
+    /// propagate NaN and diverge), and `frintn` IS `round_ties_even`.
+    ///
+    /// Safety: NEON is baseline on aarch64; pointers cover >= 4 elements.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn rescale4_neon(
+        acc: *const i32,
+        bias: *const i32,
+        epi: &QEpilogue,
+        out: *mut f32,
+    ) {
+        let v = vaddq_s32(vld1q_s32(acc), vld1q_s32(bias));
+        let mut x = vcvtq_f32_s32(v);
+        x = vmulq_n_f32(x, epi.s1);
+        if let Some(s2) = epi.s2 {
+            x = vmulq_n_f32(x, s2);
+        }
+        if epi.relu {
+            x = vmaxnmq_f32(x, vdupq_n_f32(0.0));
+        }
+        x = vmulq_n_f32(x, epi.inv_scale);
+        x = vrndnq_f32(x);
+        x = vaddq_f32(x, vdupq_n_f32(epi.zp as f32));
+        vst1q_f32(out, x);
+    }
+}
+
 /// One pass over the i32 accumulator: bias add (wrapping, exactly the
-/// unfused i32 `Add`), epilogue rescale, saturate, write the quantized
-/// output into recycled storage.
+/// unfused i32 `Add`), epilogue rescale (ISA-dispatched, bit-identical —
+/// see [`emit_run`]), saturate, write the quantized output into recycled
+/// storage.
 fn write_quantized(
     acc: &[i32],
     bias: BiasLayout<'_>,
     epi: &QEpilogue,
     shape: Shape,
+    isa: Isa,
     recycled: Option<Tensor>,
 ) -> Result<Tensor, OpError> {
+    let isa = isa.normalized();
     let n = acc.len();
     macro_rules! emit {
         ($recycle:ident, $sat:path, $variant:ident) => {{
@@ -86,27 +305,26 @@ fn write_quantized(
             match bias {
                 BiasLayout::PerColumn(b) if !b.is_empty() => {
                     for row in acc.chunks_exact(b.len()) {
-                        o.extend(
-                            row.iter()
-                                .zip(b)
-                                .map(|(&v, &bv)| $sat(epi.rescale(v.wrapping_add(bv)))),
-                        );
+                        emit_run(&mut o, row, BiasSrc::Slice(b), epi, isa, $sat);
                     }
                 }
                 BiasLayout::PerChannel { bias: b, patch } if !b.is_empty() && patch > 0 => {
                     let mut pos = 0;
                     while pos < n {
                         for &bv in b {
-                            o.extend(
-                                acc[pos..pos + patch]
-                                    .iter()
-                                    .map(|&v| $sat(epi.rescale(v.wrapping_add(bv)))),
+                            emit_run(
+                                &mut o,
+                                &acc[pos..pos + patch],
+                                BiasSrc::Splat(bv),
+                                epi,
+                                isa,
+                                $sat,
                             );
                             pos += patch;
                         }
                     }
                 }
-                _ => o.extend(acc.iter().map(|&v| $sat(epi.rescale(v)))),
+                _ => emit_run(&mut o, acc, BiasSrc::Splat(0), epi, isa, $sat),
             }
             TensorData::$variant(o)
         }};
@@ -130,6 +348,10 @@ pub struct FusedQFc {
     pub a_zp: i32,
     /// Row-broadcast bias, length `n`.
     pub bias: Option<Vec<i32>>,
+    /// Plan-time kernel ISA for the packed GEMM and the epilogue pass
+    /// (stamped by the optimizer from [`Isa::active`]; bit-identical
+    /// results whatever it names).
+    pub isa: Isa,
     pub epi: QEpilogue,
 }
 
@@ -151,6 +373,7 @@ impl FusedQFc {
             self.k,
             self.n,
             self.a_zp,
+            self.isa,
             scratch[0].take(),
         )?;
         let bias = match &self.bias {
@@ -162,6 +385,7 @@ impl FusedQFc {
             bias,
             &self.epi,
             Shape::from_slice(acc.shape()),
+            self.isa,
             recycled,
         )?;
         scratch[0] = Some(acc);
@@ -183,6 +407,8 @@ pub struct FusedQConv {
     /// Per-output-channel bias, length `m` (from the `[1, M, 1, 1]`
     /// initializer).
     pub bias: Option<Vec<i32>>,
+    /// Plan-time kernel ISA (see [`FusedQFc::isa`]).
+    pub isa: Isa,
     pub epi: QEpilogue,
 }
 
@@ -206,6 +432,7 @@ impl FusedQConv {
             self.kw,
             self.x_zp,
             &self.attrs,
+            self.isa,
             acc_scratch.take(),
             col_scratch,
         )?;
@@ -220,6 +447,7 @@ impl FusedQConv {
             bias,
             &self.epi,
             Shape::from_slice(acc.shape()),
+            self.isa,
             recycled,
         )?;
         *acc_scratch = Some(acc);
@@ -335,12 +563,12 @@ mod tests {
     #[test]
     fn epilogue_matches_unfused_chain_elementwise() {
         // Accumulators spanning sign changes, saturation, and .5 ties.
-        let (m, n) = (4usize, 3usize);
-        let acc_v: Vec<i32> = (0..m * n as usize)
-            .map(|i| (i as i32 * 977 - 5000) * 3)
-            .collect();
+        // n = 19 makes each per-column row 2 vector steps + a 3-wide
+        // scalar tail, so every ISA exercises both paths of emit_run.
+        let (m, n) = (4usize, 19usize);
+        let acc_v: Vec<i32> = (0..m * n).map(|i| (i as i32 * 977 - 5000) * 3).collect();
         let acc = Tensor::from_i32(&[m, n], acc_v.clone()).unwrap();
-        let bias_v = vec![100, -250, 7];
+        let bias_v: Vec<i32> = (0..n).map(|j| j as i32 * 97 - 250).collect();
         let bias = Tensor::from_i32(&[n], bias_v.clone()).unwrap();
         // Includes asymmetric zero points (§3.1 uint8 zp=128 and a
         // nonzero i8 zp): the `round -> + zp -> saturate` order must
@@ -352,68 +580,82 @@ mod tests {
             (0.02, None, false, 1.0, 128, QType::U8),
             (0.013, Some(0.5), true, 0.25, -16, QType::I8),
         ] {
-            let want = reference_chain(&acc, Some(&bias), s1, s2, relu, scale, zp, out);
-            let got = write_quantized(
-                &acc_v,
-                BiasLayout::PerColumn(&bias_v),
-                &epi(s1, s2, relu, scale, zp, out),
-                Shape::from_slice(&[m, n]),
-                None,
-            )
-            .unwrap();
-            assert_eq!(want, got, "s1={s1} s2={s2:?} relu={relu} zp={zp}");
-            // No-bias form.
-            let want = reference_chain(&acc, None, s1, s2, relu, scale, zp, out);
-            let got = write_quantized(
-                &acc_v,
-                BiasLayout::None,
-                &epi(s1, s2, relu, scale, zp, out),
-                Shape::from_slice(&[m, n]),
-                None,
-            )
-            .unwrap();
-            assert_eq!(want, got, "no-bias s1={s1} zp={zp}");
+            for isa in Isa::available() {
+                let want = reference_chain(&acc, Some(&bias), s1, s2, relu, scale, zp, out);
+                let got = write_quantized(
+                    &acc_v,
+                    BiasLayout::PerColumn(&bias_v),
+                    &epi(s1, s2, relu, scale, zp, out),
+                    Shape::from_slice(&[m, n]),
+                    isa,
+                    None,
+                )
+                .unwrap();
+                assert_eq!(want, got, "{isa} s1={s1} s2={s2:?} relu={relu} zp={zp}");
+                // No-bias form.
+                let want = reference_chain(&acc, None, s1, s2, relu, scale, zp, out);
+                let got = write_quantized(
+                    &acc_v,
+                    BiasLayout::None,
+                    &epi(s1, s2, relu, scale, zp, out),
+                    Shape::from_slice(&[m, n]),
+                    isa,
+                    None,
+                )
+                .unwrap();
+                assert_eq!(want, got, "{isa} no-bias s1={s1} zp={zp}");
+            }
         }
     }
 
     #[test]
     fn per_channel_bias_matches_conv_broadcast() {
-        // [nb=2, m=3, oh*ow=4] accumulator vs the [1, M, 1, 1] Add.
-        let (nb, m, patch) = (2usize, 3usize, 4usize);
+        // [nb=2, m=3, oh*ow=10] accumulator vs the [1, M, 1, 1] Add —
+        // patch = 10 gives each per-channel run one vector step plus a
+        // scalar tail on the SIMD ISAs.
+        let (nb, m, patch) = (2usize, 3usize, 10usize);
         let acc_v: Vec<i32> = (0..nb * m * patch).map(|i| i as i32 * 31 - 300).collect();
-        let acc = Tensor::from_i32(&[nb, m, 2, 2], acc_v.clone()).unwrap();
+        let acc = Tensor::from_i32(&[nb, m, 2, 5], acc_v.clone()).unwrap();
         let bias_v = vec![10, -20, 1000];
         let bias4 = Tensor::from_i32(&[1, m, 1, 1], bias_v.clone()).unwrap();
         let want = reference_chain(&acc, Some(&bias4), 0.5, None, false, 1.0, 0, QType::I8);
-        let got = write_quantized(
-            &acc_v,
-            BiasLayout::PerChannel {
-                bias: &bias_v,
-                patch,
-            },
-            &epi(0.5, None, false, 1.0, 0, QType::I8),
-            Shape::from_slice(&[nb, m, 2, 2]),
-            None,
-        )
-        .unwrap();
-        assert_eq!(want, got);
+        for isa in Isa::available() {
+            let got = write_quantized(
+                &acc_v,
+                BiasLayout::PerChannel {
+                    bias: &bias_v,
+                    patch,
+                },
+                &epi(0.5, None, false, 1.0, 0, QType::I8),
+                Shape::from_slice(&[nb, m, 2, 5]),
+                isa,
+                None,
+            )
+            .unwrap();
+            assert_eq!(want, got, "{isa}");
+        }
     }
 
     #[test]
     fn wrapping_bias_add_matches_i32_add_semantics() {
-        let acc_v = vec![i32::MAX, 0];
-        let acc = Tensor::from_i32(&[1, 2], acc_v.clone()).unwrap();
-        let bias_v = vec![1, 2];
-        let bias = Tensor::from_i32(&[2], bias_v.clone()).unwrap();
+        // 10 elements: the vector add (`vpaddd`/`vaddq_s32` — wrapping,
+        // like `wrapping_add`) covers the overflow lanes on SIMD ISAs.
+        let acc_v = vec![i32::MAX, 0, i32::MIN, -1, i32::MAX, i32::MIN, 7, -7, 100, -100];
+        let acc = Tensor::from_i32(&[1, 10], acc_v.clone()).unwrap();
+        let bias_v = vec![1, 2, -1, -2, i32::MAX, i32::MIN, 3, -3, 0, 0];
+        let bias = Tensor::from_i32(&[10], bias_v.clone()).unwrap();
         let want = reference_chain(&acc, Some(&bias), 1e-9, None, false, 1.0, 0, QType::I8);
-        let got = write_quantized(
-            &acc_v,
-            BiasLayout::PerColumn(&bias_v),
-            &epi(1e-9, None, false, 1.0, 0, QType::I8),
-            Shape::from_slice(&[1, 2]),
-            None,
-        )
-        .unwrap();
-        assert_eq!(want, got);
+        for isa in Isa::available() {
+            let got = write_quantized(
+                &acc_v,
+                BiasLayout::PerColumn(&bias_v),
+                &epi(1e-9, None, false, 1.0, 0, QType::I8),
+                Shape::from_slice(&[1, 10]),
+                isa,
+                None,
+            )
+            .unwrap();
+            assert_eq!(want, got, "{isa}");
+        }
     }
 }

@@ -1,0 +1,207 @@
+//! Plan-time ISA selection for the quantized microkernels.
+//!
+//! The paper codifies quantized models in standard ONNX precisely so a
+//! backend can lower them to hardware-native operations; this module is
+//! the lowering decision. The instruction set is detected ONCE (first
+//! use, cached), the opt/ pass pipeline stamps it into every pre-bound
+//! and fused kernel it emits, and the hot loop dispatches on the stamped
+//! value — no per-call feature probing, no per-call branching beyond one
+//! match.
+//!
+//! Contract with the kernels:
+//!
+//! - `Isa::Scalar` is always available and is the differential oracle:
+//!   every SIMD variant must produce bit-identical results (the integer
+//!   lanes replay the exact ascending-k i32 accumulation; the float
+//!   epilogue lanes perform the same IEEE-754 single operations per
+//!   element — see EXPERIMENTS.md §SIMD for the full argument, and
+//!   `tests/packed_gemm.rs` for the proof).
+//! - A dispatch site never trusts an `Isa` value blindly: it runs the
+//!   value through [`Isa::normalized`] first, so a forced or stale value
+//!   can never route into an intrinsic the host does not support. This
+//!   is what makes `PQDL_FORCE_ISA=avx2` safe on any machine — on a
+//!   non-AVX2 host it degrades to scalar instead of faulting, which is
+//!   also how the CI feature matrix "skips unsupported ISAs gracefully".
+//!
+//! Knob: `PQDL_FORCE_ISA=scalar|sse41|avx2|neon` pins the selection for
+//! testing (read once; unknown or unsupported names fall back to scalar).
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// A kernel instruction-set variant. `Scalar` is the portable reference
+/// implementation; the rest are `std::arch` intrinsic twins selected at
+/// plan time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable Rust loops — always available, the differential oracle.
+    Scalar,
+    /// x86_64 SSE4.1 (128-bit lanes; `pmulld`/`roundps`).
+    Sse41,
+    /// x86_64 AVX2 (256-bit lanes).
+    Avx2,
+    /// aarch64 NEON (128-bit lanes; baseline on AArch64).
+    Neon,
+}
+
+static ACTIVE: OnceLock<Isa> = OnceLock::new();
+
+impl Isa {
+    /// Every variant, in preference order (later = preferred when
+    /// supported).
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Neon, Isa::Sse41, Isa::Avx2];
+
+    /// Stable lowercase name (the `PQDL_FORCE_ISA` vocabulary and the
+    /// bench/JSON row label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse41 => "sse41",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a (case-insensitive, whitespace-tolerant) ISA name.
+    pub fn from_name(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "sse41" | "sse4.1" => Some(Isa::Sse41),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// True when this host can execute the variant. Scalar is always
+    /// true; SIMD variants require both the right target architecture
+    /// (compile time) and the CPU feature bit (runtime).
+    pub fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse41 => std::arch::is_x86_feature_detected!("sse4.1"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// This value if the host supports it, else `Scalar`. Every dispatch
+    /// site applies this before entering an `unsafe` intrinsic body —
+    /// the soundness guard that makes forcing any ISA on any host safe.
+    pub fn normalized(self) -> Isa {
+        if self.supported() {
+            self
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    /// Best ISA the host supports (ignores the env override).
+    pub fn detect() -> Isa {
+        detect_arch()
+    }
+
+    /// The plan-time selection: `PQDL_FORCE_ISA` if set (normalized to
+    /// scalar when unknown/unsupported — graceful degradation for the CI
+    /// matrix), else [`Isa::detect`]. Read once and cached, so steady-
+    /// state plan execution never touches the environment (the
+    /// allocation-regression test depends on this being warm after
+    /// `Session::new`).
+    pub fn active() -> Isa {
+        *ACTIVE.get_or_init(|| match std::env::var("PQDL_FORCE_ISA") {
+            Ok(s) => Isa::from_name(&s).unwrap_or(Isa::Scalar).normalized(),
+            Err(_) => Isa::detect(),
+        })
+    }
+
+    /// Every variant this host supports, scalar first. This is the test
+    /// and bench matrix: differential suites iterate it so the SIMD
+    /// twins are exercised wherever they can run.
+    pub fn available() -> Vec<Isa> {
+        Isa::ALL.iter().copied().filter(|i| i.supported()).collect()
+    }
+}
+
+impl fmt::Display for Isa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Isa {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Isa::Avx2
+    } else if std::arch::is_x86_feature_detected!("sse4.1") {
+        Isa::Sse41
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Isa {
+    Isa::Scalar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::from_name(isa.name()), Some(isa));
+            assert_eq!(format!("{isa}"), isa.name());
+        }
+        assert_eq!(Isa::from_name(" AVX2\n"), Some(Isa::Avx2));
+        assert_eq!(Isa::from_name("sse4.1"), Some(Isa::Sse41));
+        assert_eq!(Isa::from_name("avx512"), None);
+    }
+
+    #[test]
+    fn scalar_always_available() {
+        assert!(Isa::Scalar.supported());
+        assert_eq!(Isa::Scalar.normalized(), Isa::Scalar);
+        let avail = Isa::available();
+        assert!(avail.contains(&Isa::Scalar));
+        assert!(avail.contains(&Isa::detect()));
+        // available() only lists what supported() admits, and every
+        // listed variant normalizes to itself.
+        for isa in avail {
+            assert!(isa.supported());
+            assert_eq!(isa.normalized(), isa);
+        }
+    }
+
+    #[test]
+    fn unsupported_normalizes_to_scalar() {
+        for isa in Isa::ALL {
+            if !isa.supported() {
+                assert_eq!(isa.normalized(), Isa::Scalar);
+            }
+        }
+        // detect() must itself be supported (it only returns what the
+        // feature probe admitted).
+        assert!(Isa::detect().supported());
+    }
+
+    #[test]
+    fn active_is_supported_and_stable() {
+        // Whatever the environment says, active() lands on a supported
+        // variant and keeps answering the same thing (OnceLock).
+        let first = Isa::active();
+        assert!(first.supported());
+        assert_eq!(Isa::active(), first);
+    }
+}

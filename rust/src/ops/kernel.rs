@@ -16,6 +16,7 @@
 //! initializer) the kernel falls back to the generic form so error
 //! behavior is unchanged.
 
+use super::isa::Isa;
 use super::OpError;
 use super::{conv, elementwise, fused, matmul, pool, qlinear, shape_ops};
 use crate::onnx::ir::{Graph, Node};
@@ -30,13 +31,15 @@ pub enum Kernel {
     /// `bp` the same values packed into the cache-blocked i8 panel layout
     /// (when they fit i8 — symmetric quantization always does; `bw` stays
     /// as the bit-identical fallback for u8 activations / nonzero
-    /// activation zero points), `a_zp` the baked activation zero point.
+    /// activation zero points), `a_zp` the baked activation zero point,
+    /// `isa` the plan-time kernel instruction set (see [`Isa::active`]).
     MatMulIntegerPrebound {
         bw: Vec<i32>,
         bp: Option<matmul::PackedB>,
         k: usize,
         n: usize,
         a_zp: i32,
+        isa: Isa,
     },
     MatMul,
     /// Gemm; `bt` is op(B) — the transB transpose already applied — baked
@@ -63,6 +66,7 @@ pub enum Kernel {
         kw: usize,
         x_zp: i32,
         attrs: ConvAttrs,
+        isa: Isa,
     },
     /// Float Conv; `bias4` is the optional fp32 bias initializer already
     /// reshaped to `[1, M, 1, 1]` at plan time.
@@ -149,7 +153,14 @@ pub(crate) fn prebind_matmul_integer(node: &Node, g: &Graph) -> Option<Kernel> {
     let bw = matmul::widen_with_zp(b, b_zp).ok()?;
     let (k, n) = (b.shape()[0], b.shape()[1]);
     let bp = matmul::PackedB::pack(&bw, k, n);
-    Some(Kernel::MatMulIntegerPrebound { bw, bp, k, n, a_zp })
+    Some(Kernel::MatMulIntegerPrebound {
+        bw,
+        bp,
+        k,
+        n,
+        a_zp,
+        isa: Isa::active(),
+    })
 }
 
 pub(crate) fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) -> Option<Kernel> {
@@ -179,6 +190,7 @@ pub(crate) fn prebind_conv_integer(node: &Node, g: &Graph, attrs: &ConvAttrs) ->
         kw: s[3],
         x_zp,
         attrs: *attrs,
+        isa: Isa::active(),
     })
 }
 
@@ -334,6 +346,21 @@ impl Kernel {
         }
     }
 
+    /// The plan-time kernel ISA stamped into this kernel, when it routes
+    /// through the ISA-dispatched quantized microkernels ([`None`] for
+    /// everything else — generic ops never leave the scalar path). This
+    /// is the observability hook behind `Session::plan_stats()` and the
+    /// bench per-ISA rows.
+    pub fn isa(&self) -> Option<Isa> {
+        match self {
+            Kernel::MatMulIntegerPrebound { isa, .. }
+            | Kernel::ConvIntegerPrebound { isa, .. } => Some(*isa),
+            Kernel::FusedQFc(f) => Some(f.isa),
+            Kernel::FusedQConv(f) => Some(f.isa),
+            _ => None,
+        }
+    }
+
     /// Execute the pre-bound kernel on resolved inputs (`None` = omitted
     /// optional input). All admitted operators are single-output.
     /// `MissingInput` errors are minted without a node name; callers that
@@ -372,17 +399,23 @@ impl Kernel {
             Kernel::MatMulInteger => {
                 matmul::matmul_integer(req(0)?, req(1)?, opt(2), opt(3))?
             }
-            Kernel::MatMulIntegerPrebound { bw, bp, k, n, a_zp } => {
-                matmul::matmul_integer_prewidened_into(
-                    req(0)?,
-                    bw,
-                    bp.as_ref(),
-                    *k,
-                    *n,
-                    *a_zp,
-                    recycled,
-                )?
-            }
+            Kernel::MatMulIntegerPrebound {
+                bw,
+                bp,
+                k,
+                n,
+                a_zp,
+                isa,
+            } => matmul::matmul_integer_prewidened_into(
+                req(0)?,
+                bw,
+                bp.as_ref(),
+                *k,
+                *n,
+                *a_zp,
+                *isa,
+                recycled,
+            )?,
             Kernel::MatMul => matmul::matmul_f32_into(req(0)?, req(1)?, recycled)?,
             Kernel::Gemm {
                 alpha,
@@ -413,6 +446,7 @@ impl Kernel {
                 kw,
                 x_zp,
                 attrs,
+                isa,
             } => conv::conv_integer_prewidened_into(
                 req(0)?,
                 wv,
@@ -423,6 +457,7 @@ impl Kernel {
                 *kw,
                 *x_zp,
                 attrs,
+                *isa,
                 recycled,
                 &mut scratch[0],
             )?,

@@ -6,6 +6,7 @@
 //! quantization, i.e. zero points of 0, but the operator contract is
 //! implemented in full).
 
+use super::isa::Isa;
 use super::OpError;
 use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Shape, Tensor};
@@ -349,6 +350,400 @@ pub fn gemm_i8_packed_a(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
     }
 }
 
+// --- plan-time ISA dispatch over the packed kernels -------------------------
+//
+// Each SIMD variant below is a lane-for-lane transcription of its scalar
+// twin: the GEMM_NR-wide `jj` loop becomes one widening i8->i32 load plus
+// a 32-bit-lane multiply-accumulate, still visiting k in ascending order
+// per output element. i32 lane arithmetic is exact (i8 x i8 products fit
+// i32 for any realistic k) and the accumulation ORDER is unchanged, so the
+// results are bit-identical to the scalar kernels — which stay compiled on
+// every target as the always-available differential oracle
+// (`tests/packed_gemm.rs` proves the equivalence per available ISA).
+//
+// All `unsafe` is confined to `#[target_feature]` functions that are only
+// reachable through `Isa::normalized()`, so a forced/unsupported ISA value
+// degrades to scalar instead of executing illegal instructions. The
+// in-bounds argument for every raw 8-byte load is given at each function.
+
+/// [`gemm_i8_packed`] through a plan-selected ISA. Values the host does
+/// not support degrade to the scalar kernel — identical bits either way.
+pub fn gemm_i8_packed_isa(isa: Isa, a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::gemm_i8_packed_avx2(a, bp, m, c) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::gemm_i8_packed_sse41(a, bp, m, c) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: normalized() admits Neon only on aarch64 hosts.
+        Isa::Neon => unsafe { arm::gemm_i8_packed_neon(a, bp, m, c) },
+        _ => gemm_i8_packed(a, bp, m, c),
+    }
+}
+
+/// [`gemm_i8_packed_a`] through a plan-selected ISA (same contract as
+/// [`gemm_i8_packed_isa`]).
+pub fn gemm_i8_packed_a_isa(isa: Isa, ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::gemm_i8_packed_a_avx2(ap, b, n, c) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::gemm_i8_packed_a_sse41(ap, b, n, c) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: normalized() admits Neon only on aarch64 hosts.
+        Isa::Neon => unsafe { arm::gemm_i8_packed_a_neon(ap, b, n, c) },
+        _ => gemm_i8_packed_a(ap, b, n, c),
+    }
+}
+
+/// [`gemm_i8_packed_par`] through a plan-selected ISA: the pool split is
+/// unchanged (disjoint row blocks), each block runs the ISA-dispatched
+/// serial kernel — still bit-exact across thread counts for the same
+/// reason the scalar parallel wrapper is.
+pub fn gemm_i8_packed_par_isa(
+    pool: &ThreadPool,
+    isa: Isa,
+    a: &[i8],
+    bp: &PackedB,
+    m: usize,
+    c: &mut [i32],
+) {
+    let (k, n) = (bp.k, bp.n);
+    if !worth_parallel(pool, m, k, n) {
+        gemm_i8_packed_isa(isa, a, bp, m, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, GEMM_PAR_MIN_ROWS, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i8_packed_isa(isa, &a[row0 * k..(row0 + rows) * k], bp, rows, block);
+    });
+}
+
+/// Scalar ragged right edge (jw < GEMM_NR) of [`gemm_i8_packed_a`], shared
+/// by the SIMD variants. Byte-for-byte the scalar kernel's ragged branch:
+/// same ascending-k accumulation, so splitting the column blocks between
+/// vector body and scalar tail cannot change any output bit.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn packed_a_ragged_tail(
+    panel: &[i8],
+    b: &[i8],
+    n: usize,
+    c: &mut [i32],
+    i0: usize,
+    iw: usize,
+    j0: usize,
+    k: usize,
+) {
+    let jw = n - j0;
+    let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
+    for kk in 0..k {
+        let arow = &panel[kk * GEMM_MR..(kk + 1) * GEMM_MR];
+        let brow = &b[kk * n + j0..kk * n + j0 + jw];
+        for r in 0..GEMM_MR {
+            let av = arow[r] as i32;
+            for (jj, &bv) in brow.iter().enumerate() {
+                acc[r][jj] += av * bv as i32;
+            }
+        }
+    }
+    for r in 0..iw {
+        let base = (i0 + r) * n + j0;
+        c[base..base + jw].copy_from_slice(&acc[r][..jw]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR};
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::x86_64::*;
+
+    /// AVX2 twin of [`super::gemm_i8_packed`]: identical loop structure,
+    /// with the GEMM_NR-wide `jj` loop as one 8-lane i32 vector (widening
+    /// B load `vpmovsxbd`, then `vpmulld`+`vpaddd` accumulate).
+    ///
+    /// Safety: caller must have verified AVX2 (`Isa::normalized`). Every
+    /// raw 8-byte B load reads `panel[kk*NR .. kk*NR+8]` with `kk < k`
+    /// and `panel.len() == k*NR`, `NR == 8` — always in bounds.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_i8_packed_avx2(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+        let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        let np = n.div_ceil(GEMM_NR);
+        for jp in 0..np {
+            let j0 = jp * GEMM_NR;
+            let jw = GEMM_NR.min(n - j0);
+            let panel = &bp.data[jp * k * GEMM_NR..(jp + 1) * k * GEMM_NR];
+            let mut i0 = 0;
+            while i0 < m {
+                let iw = GEMM_MR.min(m - i0);
+                let mut acc = [_mm256_setzero_si256(); GEMM_MR];
+                let mut kb = 0;
+                while kb < k {
+                    let kc = GEMM_KC.min(k - kb);
+                    for kk in kb..kb + kc {
+                        let bv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                            panel.as_ptr().add(kk * GEMM_NR) as *const __m128i,
+                        ));
+                        for r in 0..iw {
+                            let av = _mm256_set1_epi32(a[(i0 + r) * k + kk] as i32);
+                            acc[r] = _mm256_add_epi32(acc[r], _mm256_mullo_epi32(av, bv));
+                        }
+                    }
+                    kb += kc;
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc[r]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + jw].copy_from_slice(&tmp[..jw]);
+                }
+                i0 += GEMM_MR;
+            }
+        }
+    }
+
+    /// SSE4.1 twin of [`super::gemm_i8_packed`]: the 8-wide panel row as
+    /// two 4-lane halves (`pmovsxbd` + `pmulld`/`paddd`).
+    ///
+    /// Safety: caller verified SSE4.1; load bounds as in the AVX2 twin.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn gemm_i8_packed_sse41(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+        let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        let np = n.div_ceil(GEMM_NR);
+        for jp in 0..np {
+            let j0 = jp * GEMM_NR;
+            let jw = GEMM_NR.min(n - j0);
+            let panel = &bp.data[jp * k * GEMM_NR..(jp + 1) * k * GEMM_NR];
+            let mut i0 = 0;
+            while i0 < m {
+                let iw = GEMM_MR.min(m - i0);
+                let mut lo = [_mm_setzero_si128(); GEMM_MR];
+                let mut hi = [_mm_setzero_si128(); GEMM_MR];
+                let mut kb = 0;
+                while kb < k {
+                    let kc = GEMM_KC.min(k - kb);
+                    for kk in kb..kb + kc {
+                        let b8 = _mm_loadl_epi64(
+                            panel.as_ptr().add(kk * GEMM_NR) as *const __m128i
+                        );
+                        let blo = _mm_cvtepi8_epi32(b8);
+                        let bhi = _mm_cvtepi8_epi32(_mm_srli_si128::<4>(b8));
+                        for r in 0..iw {
+                            let av = _mm_set1_epi32(a[(i0 + r) * k + kk] as i32);
+                            lo[r] = _mm_add_epi32(lo[r], _mm_mullo_epi32(av, blo));
+                            hi[r] = _mm_add_epi32(hi[r], _mm_mullo_epi32(av, bhi));
+                        }
+                    }
+                    kb += kc;
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, lo[r]);
+                    _mm_storeu_si128(tmp.as_mut_ptr().add(4) as *mut __m128i, hi[r]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + jw].copy_from_slice(&tmp[..jw]);
+                }
+                i0 += GEMM_MR;
+            }
+        }
+    }
+
+    /// AVX2 twin of [`super::gemm_i8_packed_a`] for full GEMM_NR column
+    /// blocks; the ragged right edge runs the shared scalar tail.
+    ///
+    /// Safety: caller verified AVX2. The raw 8-byte B loads read
+    /// `b[kk*n + j0 ..][..8]` under `j0 + GEMM_NR <= n` and `kk < k`, so
+    /// they end at `kk*n + j0 + 8 <= (kk+1)*n <= b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_i8_packed_a_avx2(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
+        let (m, k) = (ap.m, ap.k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mp = m.div_ceil(GEMM_MR);
+        for ip in 0..mp {
+            let i0 = ip * GEMM_MR;
+            let iw = GEMM_MR.min(m - i0);
+            let panel = &ap.data[ip * k * GEMM_MR..(ip + 1) * k * GEMM_MR];
+            let mut j0 = 0;
+            while j0 + GEMM_NR <= n {
+                let mut acc = [_mm256_setzero_si256(); GEMM_MR];
+                for kk in 0..k {
+                    let bv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                        b.as_ptr().add(kk * n + j0) as *const __m128i,
+                    ));
+                    let arow = &panel[kk * GEMM_MR..(kk + 1) * GEMM_MR];
+                    for r in 0..GEMM_MR {
+                        let av = _mm256_set1_epi32(arow[r] as i32);
+                        acc[r] = _mm256_add_epi32(acc[r], _mm256_mullo_epi32(av, bv));
+                    }
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc[r]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + GEMM_NR].copy_from_slice(&tmp);
+                }
+                j0 += GEMM_NR;
+            }
+            if j0 < n {
+                super::packed_a_ragged_tail(panel, b, n, c, i0, iw, j0, k);
+            }
+        }
+    }
+
+    /// SSE4.1 twin of [`super::gemm_i8_packed_a`] (two 4-lane halves);
+    /// ragged right edge via the shared scalar tail.
+    ///
+    /// Safety: caller verified SSE4.1; load bounds as in the AVX2 twin.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn gemm_i8_packed_a_sse41(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
+        let (m, k) = (ap.m, ap.k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mp = m.div_ceil(GEMM_MR);
+        for ip in 0..mp {
+            let i0 = ip * GEMM_MR;
+            let iw = GEMM_MR.min(m - i0);
+            let panel = &ap.data[ip * k * GEMM_MR..(ip + 1) * k * GEMM_MR];
+            let mut j0 = 0;
+            while j0 + GEMM_NR <= n {
+                let mut lo = [_mm_setzero_si128(); GEMM_MR];
+                let mut hi = [_mm_setzero_si128(); GEMM_MR];
+                for kk in 0..k {
+                    let b8 = _mm_loadl_epi64(b.as_ptr().add(kk * n + j0) as *const __m128i);
+                    let blo = _mm_cvtepi8_epi32(b8);
+                    let bhi = _mm_cvtepi8_epi32(_mm_srli_si128::<4>(b8));
+                    let arow = &panel[kk * GEMM_MR..(kk + 1) * GEMM_MR];
+                    for r in 0..GEMM_MR {
+                        let av = _mm_set1_epi32(arow[r] as i32);
+                        lo[r] = _mm_add_epi32(lo[r], _mm_mullo_epi32(av, blo));
+                        hi[r] = _mm_add_epi32(hi[r], _mm_mullo_epi32(av, bhi));
+                    }
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, lo[r]);
+                    _mm_storeu_si128(tmp.as_mut_ptr().add(4) as *mut __m128i, hi[r]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + GEMM_NR].copy_from_slice(&tmp);
+                }
+                j0 += GEMM_NR;
+            }
+            if j0 < n {
+                super::packed_a_ragged_tail(panel, b, n, c, i0, iw, j0, k);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR};
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::aarch64::*;
+
+    /// NEON twin of [`super::gemm_i8_packed`]: the 8-wide panel row as
+    /// two 4-lane i32 halves (`sshll` widening, `mla` accumulate).
+    ///
+    /// Safety: NEON is baseline on aarch64 (guarded by `Isa::normalized`
+    /// anyway). Load bounds as in the x86 twins: 8 bytes at
+    /// `panel[kk*NR..]` with `kk < k`, `panel.len() == k*NR`, `NR == 8`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_i8_packed_neon(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+        let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        let np = n.div_ceil(GEMM_NR);
+        for jp in 0..np {
+            let j0 = jp * GEMM_NR;
+            let jw = GEMM_NR.min(n - j0);
+            let panel = &bp.data[jp * k * GEMM_NR..(jp + 1) * k * GEMM_NR];
+            let mut i0 = 0;
+            while i0 < m {
+                let iw = GEMM_MR.min(m - i0);
+                let mut lo = [vdupq_n_s32(0); GEMM_MR];
+                let mut hi = [vdupq_n_s32(0); GEMM_MR];
+                let mut kb = 0;
+                while kb < k {
+                    let kc = GEMM_KC.min(k - kb);
+                    for kk in kb..kb + kc {
+                        let b16 = vmovl_s8(vld1_s8(panel.as_ptr().add(kk * GEMM_NR)));
+                        let blo = vmovl_s16(vget_low_s16(b16));
+                        let bhi = vmovl_s16(vget_high_s16(b16));
+                        for r in 0..iw {
+                            let av = vdupq_n_s32(a[(i0 + r) * k + kk] as i32);
+                            lo[r] = vmlaq_s32(lo[r], av, blo);
+                            hi[r] = vmlaq_s32(hi[r], av, bhi);
+                        }
+                    }
+                    kb += kc;
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    vst1q_s32(tmp.as_mut_ptr(), lo[r]);
+                    vst1q_s32(tmp.as_mut_ptr().add(4), hi[r]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + jw].copy_from_slice(&tmp[..jw]);
+                }
+                i0 += GEMM_MR;
+            }
+        }
+    }
+
+    /// NEON twin of [`super::gemm_i8_packed_a`]; ragged right edge via
+    /// the shared scalar tail.
+    ///
+    /// Safety: NEON baseline; B load bounds as in the x86 packed-A twins
+    /// (`j0 + GEMM_NR <= n` keeps every 8-byte load inside row `kk`).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_i8_packed_a_neon(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
+        let (m, k) = (ap.m, ap.k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mp = m.div_ceil(GEMM_MR);
+        for ip in 0..mp {
+            let i0 = ip * GEMM_MR;
+            let iw = GEMM_MR.min(m - i0);
+            let panel = &ap.data[ip * k * GEMM_MR..(ip + 1) * k * GEMM_MR];
+            let mut j0 = 0;
+            while j0 + GEMM_NR <= n {
+                let mut lo = [vdupq_n_s32(0); GEMM_MR];
+                let mut hi = [vdupq_n_s32(0); GEMM_MR];
+                for kk in 0..k {
+                    let b16 = vmovl_s8(vld1_s8(b.as_ptr().add(kk * n + j0)));
+                    let blo = vmovl_s16(vget_low_s16(b16));
+                    let bhi = vmovl_s16(vget_high_s16(b16));
+                    let arow = &panel[kk * GEMM_MR..(kk + 1) * GEMM_MR];
+                    for r in 0..GEMM_MR {
+                        let av = vdupq_n_s32(arow[r] as i32);
+                        lo[r] = vmlaq_s32(lo[r], av, blo);
+                        hi[r] = vmlaq_s32(hi[r], av, bhi);
+                    }
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    vst1q_s32(tmp.as_mut_ptr(), lo[r]);
+                    vst1q_s32(tmp.as_mut_ptr().add(4), hi[r]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + GEMM_NR].copy_from_slice(&tmp);
+                }
+                j0 += GEMM_NR;
+            }
+            if j0 < n {
+                super::packed_a_ragged_tail(panel, b, n, c, i0, iw, j0, k);
+            }
+        }
+    }
+}
+
 /// Row-parallel wrapper over [`gemm_i32`] (bit-exact, see
 /// [`gemm_i8_i32_par`]).
 pub fn gemm_i32_par(
@@ -413,14 +808,18 @@ pub fn matmul_integer_prewidened(
     n: usize,
     a_zp: i32,
 ) -> Result<Tensor, OpError> {
-    matmul_integer_prewidened_into(a, bw, None, k, n, a_zp, None)
+    // The unplanned path stays strictly scalar: it is the differential
+    // oracle the planned (possibly SIMD) path is tested against.
+    matmul_integer_prewidened_into(a, bw, None, k, n, a_zp, Isa::Scalar, None)
 }
 
 /// The compiled-plan form of [`matmul_integer_prewidened`]: optionally a
 /// plan-time [`PackedB`] (preferred when the activations are i8 with a
 /// zero a-zero-point — symmetric quantization, every pattern in the
-/// paper), and recycled output storage from the scratch planner. All
-/// three kernels below produce identical bits for the same operands.
+/// paper), the plan-selected `isa` for the packed kernel, and recycled
+/// output storage from the scratch planner. All kernels below produce
+/// identical bits for the same operands, whichever ISA is stamped.
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_integer_prewidened_into(
     a: &Tensor,
     bw: &[i32],
@@ -428,6 +827,7 @@ pub fn matmul_integer_prewidened_into(
     k: usize,
     n: usize,
     a_zp: i32,
+    isa: Isa,
     recycled: Option<Tensor>,
 ) -> Result<Tensor, OpError> {
     let (m, ka) = flat_mk(a.shape());
@@ -437,9 +837,10 @@ pub fn matmul_integer_prewidened_into(
     let pool = ThreadPool::global();
     let mut c = crate::tensor::recycled_i32_zeroed(recycled, m * n);
     match (a.data(), a_zp == 0, bp) {
-        // Hot path: i8 activations, zero zero-point, packed panels.
+        // Hot path: i8 activations, zero zero-point, packed panels,
+        // ISA-dispatched microkernel.
         (crate::tensor::TensorData::I8(av), true, Some(bp)) => {
-            gemm_i8_packed_par(pool, av, bp, m, &mut c);
+            gemm_i8_packed_par_isa(pool, isa, av, bp, m, &mut c);
         }
         (crate::tensor::TensorData::I8(av), true, None) => {
             gemm_i8_i32_par(pool, av, bw, m, k, n, &mut c);
@@ -732,13 +1133,69 @@ mod tests {
         let bp = PackedB::pack(&bw, 6, 3).unwrap();
         let plain = matmul_integer_prewidened(&a8, &bw, 6, 3, 0).unwrap();
         let packed =
-            matmul_integer_prewidened_into(&a8, &bw, Some(&bp), 6, 3, 0, None).unwrap();
+            matmul_integer_prewidened_into(&a8, &bw, Some(&bp), 6, 3, 0, Isa::Scalar, None)
+                .unwrap();
         assert_eq!(plain, packed);
         // Recycled storage changes nothing but the buffer's origin.
         let spare = Tensor::from_i32(&[100], vec![7; 100]).unwrap();
-        let recycled =
-            matmul_integer_prewidened_into(&a8, &bw, Some(&bp), 6, 3, 0, Some(spare)).unwrap();
+        let recycled = matmul_integer_prewidened_into(
+            &a8,
+            &bw,
+            Some(&bp),
+            6,
+            3,
+            0,
+            Isa::Scalar,
+            Some(spare),
+        )
+        .unwrap();
         assert_eq!(plain, recycled);
+        // Every ISA this host supports lands on the same bits.
+        for isa in Isa::available() {
+            let got =
+                matmul_integer_prewidened_into(&a8, &bw, Some(&bp), 6, 3, 0, isa, None).unwrap();
+            assert_eq!(plain, got, "{isa}");
+        }
+    }
+
+    #[test]
+    fn isa_dispatch_matches_scalar_kernels() {
+        // Direct differential check of the dispatchers on shapes hitting
+        // the ragged edges (m % MR, n % NR, odd k); tests/packed_gemm.rs
+        // extends this with proptests and saturation extremes.
+        let mut state = 0x15A_D15Fu64;
+        let mut rnd8 = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 56) as u8 as i8
+        };
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (4, 13, 8), (9, 33, 11), (6, 300, 20)] {
+            let a: Vec<i8> = (0..m * k).map(|_| rnd8()).collect();
+            let bw: Vec<i32> = (0..k * n).map(|_| rnd8() as i32).collect();
+            let bp = PackedB::pack(&bw, k, n).expect("i8 range");
+            let mut want = vec![0i32; m * n];
+            gemm_i8_packed(&a, &bp, m, &mut want);
+            let aw: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+            let ap = PackedA::pack(&aw, m, k).expect("i8 range");
+            let b8: Vec<i8> = bw.iter().map(|&x| x as i8).collect();
+            let mut want_a = vec![0i32; m * n];
+            gemm_i8_packed_a(&ap, &b8, n, &mut want_a);
+            assert_eq!(want, want_a, "scalar twins disagree ({m},{k},{n})");
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i8_packed_isa(isa, &a, &bp, m, &mut got);
+                assert_eq!(want, got, "{isa} packed B ({m},{k},{n})");
+                let mut got_a = vec![0i32; m * n];
+                gemm_i8_packed_a_isa(isa, &ap, &b8, n, &mut got_a);
+                assert_eq!(want, got_a, "{isa} packed A ({m},{k},{n})");
+            }
+            // An ISA the host may NOT support must degrade to scalar,
+            // not fault — this is the CI matrix's graceful-skip contract.
+            for isa in Isa::ALL {
+                let mut got = vec![0i32; m * n];
+                gemm_i8_packed_isa(isa, &a, &bp, m, &mut got);
+                assert_eq!(want, got, "{isa} (normalized) packed B ({m},{k},{n})");
+            }
+        }
     }
 
     #[test]

@@ -14,12 +14,14 @@
 pub mod conv;
 pub mod elementwise;
 pub mod fused;
+pub mod isa;
 pub mod kernel;
 pub mod matmul;
 pub mod pool;
 pub mod qlinear;
 pub mod shape_ops;
 
+pub use isa::Isa;
 pub use kernel::Kernel;
 
 use crate::onnx::ir::Node;

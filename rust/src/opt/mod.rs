@@ -341,8 +341,14 @@ fn fused_item(nodes: Vec<usize>, kernel: Kernel, g: &Graph) -> PlanItem {
 fn try_fuse_qfc(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<PlanItem> {
     g.nodes[anchor].inputs.first().filter(|n| !n.is_empty())?;
     let chain = match_q_chain(g, idx, anchor, InitPolicy::Bakeable).ok()?;
-    let Kernel::MatMulIntegerPrebound { bw, bp, k, n, a_zp } =
-        prebind_matmul_integer(&g.nodes[anchor], g)?
+    let Kernel::MatMulIntegerPrebound {
+        bw,
+        bp,
+        k,
+        n,
+        a_zp,
+        isa,
+    } = prebind_matmul_integer(&g.nodes[anchor], g)?
     else {
         return None;
     };
@@ -367,6 +373,7 @@ fn try_fuse_qfc(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<Pla
         n,
         a_zp,
         bias,
+        isa,
         epi,
     });
     Some(fused_item(chain.nodes, kernel, g))
@@ -386,6 +393,7 @@ fn try_fuse_qconv(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<P
         kw,
         x_zp,
         attrs,
+        isa,
     } = prebind_conv_integer(
         &g.nodes[anchor],
         g,
@@ -414,6 +422,7 @@ fn try_fuse_qconv(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<P
         x_zp,
         attrs,
         bias,
+        isa,
         epi,
     });
     Some(fused_item(chain.nodes, kernel, g))

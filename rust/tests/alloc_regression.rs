@@ -143,6 +143,19 @@ fn second_run_at_fixed_batch_allocates_nothing() {
     // the output recycles through `run_into`).
     let sess = Session::new(fig1_like()).unwrap().with_parallelism(false);
     assert_eq!(sess.plan_stats().fused_qfc, 1, "fig1 chain must fuse");
+    // The plan is stamped with the host's active ISA at compile time
+    // (the `Isa::active()` OnceLock is warm from here on, so the
+    // zero-allocation proof below covers the SIMD dispatch path wherever
+    // the host — or a PQDL_FORCE_ISA override — selects one).
+    assert_eq!(
+        sess.plan_stats().isa,
+        pqdl::ops::Isa::active(),
+        "plan must carry the active kernel ISA"
+    );
+    assert!(
+        sess.plan_stats().isa_steps >= 1,
+        "the fused FC step must report ISA dispatch"
+    );
     let x8 = batch_input(8, 3);
     let expected8 = sess.run_unplanned(&[("x", x8.clone())]).unwrap();
 

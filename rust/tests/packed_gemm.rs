@@ -5,11 +5,14 @@
 //! naive triple loop bit for bit, serial and pool-dispatched alike.
 
 use pqdl::ops::matmul::{
-    gemm_i8_i32, gemm_i8_i32_par, gemm_i8_packed, gemm_i8_packed_a, gemm_i8_packed_par,
-    PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR,
+    gemm_i8_i32, gemm_i8_i32_par, gemm_i8_packed, gemm_i8_packed_a, gemm_i8_packed_a_isa,
+    gemm_i8_packed_isa, gemm_i8_packed_par, gemm_i8_packed_par_isa, matmul_integer_prewidened,
+    matmul_integer_prewidened_into, PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR,
 };
+use pqdl::ops::Isa;
 use pqdl::parallel::ThreadPool;
 use pqdl::proptest_util::{run_prop, Pair, RangeUsize};
+use pqdl::tensor::Tensor;
 use pqdl::train::Rng;
 
 /// The oracle: C[i,j] = sum_k A[i,k] * B[k,j], ascending k, plain i32.
@@ -73,6 +76,144 @@ fn packed_kernels_match_naive_triple_loop() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn isa_variants_match_naive_triple_loop() {
+    // The SIMD microkernels under the same differential contract: every
+    // ISA this host supports (scalar always among them) must reproduce
+    // the naive ascending-k i32 accumulation bit for bit — across odd
+    // k/n, sub-panel n, and ragged m, same generator as the scalar
+    // proptest above.
+    let shapes = Pair(
+        Pair(RangeUsize { lo: 1, hi: 9 }, RangeUsize { lo: 1, hi: 70 }),
+        RangeUsize { lo: 1, hi: 21 },
+    );
+    run_prop(
+        "isa_gemm_vs_naive",
+        &shapes,
+        0x51_3D_9ACC,
+        60,
+        |&((m, k), n)| {
+            let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64 ^ 0x151A);
+            let a = rand_i8(&mut rng, m * k);
+            let b8 = rand_i8(&mut rng, k * n);
+            let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+            let want = naive(&a, &bw, m, k, n);
+            let bp = PackedB::pack(&bw, k, n).ok_or("PackedB refused i8 data")?;
+            let aw: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+            let ap = PackedA::pack(&aw, m, k).ok_or("PackedA refused i8 data")?;
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i8_packed_isa(isa, &a, &bp, m, &mut got);
+                if got != want {
+                    return Err(format!("{isa} packed-B mismatch at ({m},{k},{n})"));
+                }
+                let mut got_a = vec![0i32; m * n];
+                gemm_i8_packed_a_isa(isa, &ap, &b8, n, &mut got_a);
+                if got_a != want {
+                    return Err(format!("{isa} packed-A mismatch at ({m},{k},{n})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn isa_variants_at_saturation_extremes() {
+    // Worst-case accumulator growth: every product at |a*b| = 16384
+    // (i8::MIN * i8::MIN), k deep enough to cross the KC boundary. The
+    // i32 accumulator holds (16384 * k << i32::MAX for any admitted k);
+    // all ISAs must agree exactly, including on the mixed-sign block
+    // where partial sums swing between large positive and negative.
+    let (m, n) = (GEMM_MR + 2, GEMM_NR + 3);
+    for k in [1usize, 7, GEMM_KC + 5] {
+        for (av, bv) in [
+            (i8::MIN, i8::MIN),
+            (i8::MIN, i8::MAX),
+            (i8::MAX, i8::MAX),
+        ] {
+            let a = vec![av; m * k];
+            let b8 = vec![bv; k * n];
+            let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+            let want = naive(&a, &bw, m, k, n);
+            let bp = PackedB::pack(&bw, k, n).unwrap();
+            let aw: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+            let ap = PackedA::pack(&aw, m, k).unwrap();
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i8_packed_isa(isa, &a, &bp, m, &mut got);
+                assert_eq!(want, got, "{isa} packed-B ({m},{k},{n}) a={av} b={bv}");
+                let mut got_a = vec![0i32; m * n];
+                gemm_i8_packed_a_isa(isa, &ap, &b8, n, &mut got_a);
+                assert_eq!(want, got_a, "{isa} packed-A ({m},{k},{n}) a={av} b={bv}");
+            }
+        }
+    }
+    // Alternating-sign columns: partial sums cancel, exposing any lane
+    // that reorders the ascending-k accumulation.
+    let (m, k, n) = (3usize, GEMM_KC + 1, GEMM_NR * 2 + 1);
+    let a: Vec<i8> = (0..m * k)
+        .map(|i| if i % 2 == 0 { i8::MAX } else { i8::MIN })
+        .collect();
+    let b8: Vec<i8> = (0..k * n)
+        .map(|i| if (i / n) % 2 == 0 { i8::MIN } else { i8::MAX })
+        .collect();
+    let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+    let want = naive(&a, &bw, m, k, n);
+    let bp = PackedB::pack(&bw, k, n).unwrap();
+    for isa in Isa::available() {
+        let mut got = vec![0i32; m * n];
+        gemm_i8_packed_isa(isa, &a, &bp, m, &mut got);
+        assert_eq!(want, got, "{isa} alternating-sign");
+    }
+}
+
+#[test]
+fn isa_prewidened_matches_scalar_at_zp_edges() {
+    // Zero-point edge cases through the tensor-level entry point: every
+    // ISA (and, for nonzero a_zp, the bit-identical unpacked fallback it
+    // routes to) must agree with the strictly scalar oracle wrapper.
+    let (m, k, n) = (5usize, 19, GEMM_NR + 3);
+    let mut rng = Rng::new(0x2ED6E5);
+    let a = Tensor::from_i8(&[m, k], rand_i8(&mut rng, m * k)).unwrap();
+    let b8 = rand_i8(&mut rng, k * n);
+    let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+    let bp = PackedB::pack(&bw, k, n).unwrap();
+    for a_zp in [-128i32, -1, 0, 1, 127] {
+        let want = matmul_integer_prewidened(&a, &bw, k, n, a_zp).unwrap();
+        for isa in Isa::available() {
+            let got =
+                matmul_integer_prewidened_into(&a, &bw, Some(&bp), k, n, a_zp, isa, None)
+                    .unwrap();
+            assert_eq!(want, got, "{isa} a_zp={a_zp}");
+        }
+    }
+}
+
+#[test]
+fn isa_parallel_wrapper_bit_exact_across_pool_sizes() {
+    // The pool-dispatched ISA wrapper splits rows exactly like the scalar
+    // one; every (isa, threads) combination must agree with the serial
+    // scalar kernel bit for bit.
+    let (m, k, n) = (64usize, 48, 33);
+    let mut rng = Rng::new(0x15A_BADu64);
+    let a = rand_i8(&mut rng, m * k);
+    let b8 = rand_i8(&mut rng, k * n);
+    let bw: Vec<i32> = b8.iter().map(|&x| x as i32).collect();
+    let bp = PackedB::pack(&bw, k, n).unwrap();
+    let mut serial = vec![0i32; m * n];
+    gemm_i8_packed(&a, &bp, m, &mut serial);
+    assert_eq!(serial, naive(&a, &bw, m, k, n));
+    for isa in Isa::available() {
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut par = vec![0i32; m * n];
+            gemm_i8_packed_par_isa(&pool, isa, &a, &bp, m, &mut par);
+            assert_eq!(serial, par, "{isa}, {threads} threads");
+        }
+    }
 }
 
 #[test]
