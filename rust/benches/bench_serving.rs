@@ -250,6 +250,127 @@ fn main() {
         }
     }
 
+    // --- tuned vs default GEMM tile (plan-time micro-tuner) ---------------
+    // The micro-tuner measures its winner for this machine fresh (own
+    // in-memory cache, so the bench never inherits a stale winner), then
+    // both configs run the same packed GEMM and fused FC workload. The
+    // incumbent default competes in the tuner's shortlist, so tuned can
+    // at worst tie it.
+    {
+        use pqdl::ops::fused::{FusedQFc, QEpilogue};
+        use pqdl::ops::matmul::{self, PackedB};
+        use pqdl::ops::Isa;
+        use pqdl::quant::QType;
+        use pqdl::train::Rng;
+        use pqdl::tune::tuner::tune_gemms_with;
+        use pqdl::tune::{GemmConfig, GemmProblem, ProblemKind, TuneCache, TuneMode};
+
+        let (k, n) = (64usize, 128usize);
+        let mut rng = Rng::new(0x7E5);
+        let bw: Vec<i32> = (0..k * n).map(|_| rng.i8() as i32).collect();
+        let isa = Isa::active();
+        let cache = TuneCache::new(None);
+        let problems = [GemmProblem {
+            w: &bw,
+            k,
+            out: n,
+            kind: ProblemKind::PackedBGemm,
+        }];
+        let outcome = tune_gemms_with(
+            &cache,
+            0xBE7C4,
+            &problems,
+            isa,
+            ThreadPool::global().threads(),
+            TuneMode::Full,
+        );
+        let tuned_cfg = outcome.cfg;
+        section(&format!(
+            "tuned vs default GEMM tile (k={k}, n={n}, isa {isa}; winner {tuned_cfg})"
+        ));
+        println!(
+            "{:<8} | {:<26} | {:>14} | {:>14}",
+            "batch", "config", "gemm itm/s", "fc itm/s"
+        );
+        for batch in [8usize, 128] {
+            let a: Vec<i8> = (0..batch * k).map(|_| rng.i8()).collect();
+            let x = Tensor::from_i8(&[batch, k], a.clone()).unwrap();
+            for (label, cfg) in [("default", GemmConfig::DEFAULT), ("tuned", tuned_cfg)] {
+                let bp = PackedB::pack_with(&bw, k, n, cfg).expect("i8-ranged weights must pack");
+                let gemm = {
+                    let a = &a;
+                    let bp = &bp;
+                    let mut c = vec![0i32; batch * n];
+                    bench_auto(&format!("{label} gemm b{batch}"), batch, target_ms, move || {
+                        matmul::gemm_i8_packed_par_isa(
+                            ThreadPool::global(),
+                            isa,
+                            a,
+                            bp,
+                            batch,
+                            &mut c,
+                        );
+                    })
+                };
+                let fc = FusedQFc {
+                    bw: bw.clone(),
+                    bp: PackedB::pack_with(&bw, k, n, cfg),
+                    k,
+                    n,
+                    a_zp: 0,
+                    bias: None,
+                    isa,
+                    epi: QEpilogue {
+                        s1: 0.013,
+                        s2: None,
+                        relu: true,
+                        inv_scale: 1.0 / 0.11,
+                        zp: 3,
+                        out_qtype: QType::I8,
+                    },
+                };
+                let fused = {
+                    let x = x.clone();
+                    let mut scratch = [None, None];
+                    bench_auto(&format!("{label} fc b{batch}"), batch, target_ms, move || {
+                        fc.run(&x, None, &mut scratch).expect("fused fc run");
+                    })
+                };
+                println!(
+                    "{batch:<8} | {:<26} | {:>14.1} | {:>14.1}",
+                    format!("{label} ({cfg})"),
+                    gemm.throughput_per_s,
+                    fused.throughput_per_s
+                );
+                json.record(&format!("{label} gemm b{batch}"), batch, &gemm);
+                json.record(&format!("{label} fc b{batch}"), batch, &fused);
+            }
+        }
+    }
+
+    // --- plan memory: lazy unfused twin -----------------------------------
+    // A pure-serving fused session carries ONE plan's baked weights; the
+    // first observer/profiling use compiles the unfused twin and pays the
+    // second copy. Both sizes land in the JSON trajectory so plan-memory
+    // regressions show up across commits.
+    {
+        let serving = Session::new(preq.clone()).unwrap();
+        let lean = serving.baked_plan_bytes();
+        let twin_before = serving.plan_stats().twin_compiled;
+        serving
+            .run_observed(&[("x", batch_of(1))], &mut |_, _| {})
+            .expect("observed run");
+        let full = serving.baked_plan_bytes();
+        section("plan memory — lazy unfused twin");
+        println!(
+            "serving-only: {lean} baked bytes (twin compiled: {twin_before}) | \
+             after first observed run: {full} baked bytes (twin compiled: {})",
+            serving.plan_stats().twin_compiled
+        );
+        json.record_raw("plan bytes serving", 1, lean as f64, 0.0, 0.0);
+        json.record_raw("plan bytes +twin", 1, full as f64, 0.0, 0.0);
+    }
+
     section("dynamic batching sweep (16 closed-loop clients x 150 reqs)");
     println!(
         "{:<28} | {:>9} | {:>10} | {:>8} | {:>8} | {:>8}",
@@ -389,6 +510,7 @@ fn main() {
                 replicas,
                 queue_depth: 128,
                 deadline: Some(Duration::from_millis(50)),
+                controller: None,
             })
             .register("digits", Arc::new(InterpBackend::new(preq.clone()).unwrap()))
             .start(),

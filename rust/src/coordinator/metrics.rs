@@ -64,6 +64,13 @@ impl LatencyHist {
         self.count
     }
 
+    /// Cumulative sum of recorded latencies (microseconds) — lets the
+    /// serving controller compute exact per-interval means by diffing
+    /// two snapshots.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
     pub fn max_us(&self) -> u64 {
         self.max_us
     }

@@ -5,7 +5,10 @@
 //! anyway): request router + sharded dynamic batcher with admission
 //! control ([`server`]: bounded lane queues, N replicas per lane sharing
 //! one compiled plan, typed [`server::RejectReason`] shedding, graceful
-//! drain), pluggable execution backends ([`backend`]: interpreter /
+//! drain, and an optional serving-time controller — see
+//! [`crate::tune::ControllerConfig`] — that retargets per-lane replica
+//! counts and batch windows from live metrics), pluggable execution
+//! backends ([`backend`]: interpreter /
 //! hwsim / PJRT artifacts), serving metrics ([`metrics`]) and the
 //! cross-backend narrow-margins validation service plus the per-lane
 //! admission contract ([`validate`]).

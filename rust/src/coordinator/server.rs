@@ -30,12 +30,13 @@
 //! get channel errors).
 
 use super::backend::{concat_batch, split_batch, Backend};
-use super::metrics::{Metrics, ShedKind};
+use super::metrics::{LatencyHist, Metrics, ModelStats, ShedKind};
 use super::validate::InputSpec;
 use crate::tensor::Tensor;
+use crate::tune::{Controller, ControllerConfig, LaneObservation};
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -62,6 +63,15 @@ pub struct ServerConfig {
     /// with [`RejectReason::DeadlineExceeded`] instead of running late.
     /// `None` disables deadline shedding.
     pub deadline: Option<Duration>,
+    /// Serving-time feedback controller ([`crate::tune::controller`]):
+    /// when set, a ticker thread diffs the live metrics every
+    /// `ControllerConfig::tick` and steers each lane's active replica
+    /// count (within the controller's bounds — workers above the target
+    /// park on the lane condvar, holding no work) and its batch window
+    /// (replacing `max_wait` as the live value; `max_wait` becomes the
+    /// launch point, clamped into the controller's window bounds).
+    /// `None` (the default) keeps both fixed at their configured values.
+    pub controller: Option<ControllerConfig>,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +82,7 @@ impl Default for ServerConfig {
             replicas: 0, // auto: default_replicas() split across lanes
             queue_depth: 256,
             deadline: None,
+            controller: None,
         }
     }
 }
@@ -194,12 +205,43 @@ struct LaneState {
     stop: bool,
 }
 
+/// The controller's live targets for one lane — written by the ticker,
+/// read lock-free by every replica at its next batch (plain launch
+/// values, never rewritten, when no controller is configured).
+struct LaneDynamics {
+    /// Current batch window, microseconds (the live `max_wait`).
+    wait_us: AtomicU64,
+    /// Replicas allowed to pull work. Workers with index >= this park on
+    /// the lane condvar holding nothing; raising it reactivates them
+    /// (they were spawned up to the controller's `max_replicas` at
+    /// start, so scale-up never spawns threads or re-forks a backend).
+    target_replicas: AtomicUsize,
+}
+
+impl LaneDynamics {
+    fn new(replicas: usize, wait: Duration) -> LaneDynamics {
+        LaneDynamics {
+            wait_us: AtomicU64::new(wait.as_micros() as u64),
+            target_replicas: AtomicUsize::new(replicas.max(1)),
+        }
+    }
+
+    fn wait(&self) -> Duration {
+        Duration::from_micros(self.wait_us.load(Ordering::Relaxed))
+    }
+
+    fn replicas(&self) -> usize {
+        self.target_replicas.load(Ordering::Relaxed)
+    }
+}
+
 /// One model lane: the bounded queue its replicas share, plus the
 /// admission contract checked at submit.
 struct Lane {
     state: Mutex<LaneState>,
     cv: Condvar,
     spec: Option<InputSpec>,
+    dynamics: LaneDynamics,
 }
 
 /// The coordinator: routes requests to per-model replica pools.
@@ -209,6 +251,9 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Stops the controller ticker (set by both shutdown flavors; the
+    /// ticker's handle lives in `handles` and is joined with the rest).
+    ctl_stop: Arc<AtomicBool>,
 }
 
 /// Builder registering (model name -> backend) lanes.
@@ -231,11 +276,13 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Spawn the replica pools and return the running coordinator.
+    /// Spawn the replica pools (and the controller ticker, when one is
+    /// configured) and return the running coordinator.
     pub fn start(self) -> Coordinator {
         let metrics = Arc::new(Metrics::default());
         let mut lanes = HashMap::new();
         let mut handles = Vec::new();
+        let ctl_stop = Arc::new(AtomicBool::new(false));
         // replicas = 0 is the auto setting: split the machine-level
         // budget across lanes so a many-model coordinator does not spawn
         // lanes x budget threads.
@@ -243,7 +290,25 @@ impl CoordinatorBuilder {
             0 => (default_replicas() / self.backends.len().max(1)).max(1),
             n => n,
         };
+        // With a controller, spawn workers up to its replica ceiling and
+        // let the live target (clamped launch count) decide who pulls
+        // work — scale-up later is an atomic store, not a thread spawn.
+        let mut ctl_lanes: Vec<(String, Arc<Lane>, Controller)> = Vec::new();
         for (model, backend) in self.backends {
+            let (workers, controller) = match self.config.controller {
+                Some(c) => {
+                    let ctl = Controller::new(c, replicas, self.config.max_wait);
+                    (c.max_replicas.max(1), Some(ctl))
+                }
+                None => (replicas, None),
+            };
+            let launch = controller
+                .as_ref()
+                .map(|c| c.current())
+                .unwrap_or(crate::tune::Decision {
+                    replicas,
+                    wait: self.config.max_wait,
+                });
             let lane = Arc::new(Lane {
                 state: Mutex::new(LaneState {
                     queue: VecDeque::new(),
@@ -252,8 +317,9 @@ impl CoordinatorBuilder {
                 }),
                 cv: Condvar::new(),
                 spec: backend.input_spec(),
+                dynamics: LaneDynamics::new(launch.replicas, launch.wait),
             });
-            for r in 0..replicas {
+            for r in 0..workers {
                 // Replica 0 serves through the registered backend; the
                 // rest through cheap forks sharing its compiled state
                 // (backends without per-replica state share directly).
@@ -268,11 +334,24 @@ impl CoordinatorBuilder {
                 let model_name = model.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("lane-{model}-r{r}"))
-                    .spawn(move || replica_worker(lane, be, cfg, m, model_name))
+                    .spawn(move || replica_worker(lane, be, cfg, m, model_name, r))
                     .expect("spawning lane replica");
                 handles.push(handle);
             }
+            if let Some(ctl) = controller {
+                ctl_lanes.push((model.clone(), lane.clone(), ctl));
+            }
             lanes.insert(model, lane);
+        }
+        if !ctl_lanes.is_empty() {
+            let m = metrics.clone();
+            let stop = ctl_stop.clone();
+            let max_batch = self.config.max_batch;
+            let handle = std::thread::Builder::new()
+                .name("lane-controller".into())
+                .spawn(move || controller_ticker(ctl_lanes, m, max_batch, stop))
+                .expect("spawning controller ticker");
+            handles.push(handle);
         }
         Coordinator {
             lanes,
@@ -280,6 +359,7 @@ impl CoordinatorBuilder {
             metrics,
             next_id: AtomicU64::new(1),
             handles: Mutex::new(handles),
+            ctl_stop,
         }
     }
 }
@@ -362,10 +442,20 @@ impl Coordinator {
         v
     }
 
+    /// The live (active replicas, batch window) targets of a lane —
+    /// launch values until the serving-time controller moves them, or
+    /// forever when no controller is configured. Observability for tests
+    /// and the serving demo; the hot path reads the same atomics.
+    pub fn lane_targets(&self, model: &str) -> Option<(usize, Duration)> {
+        let lane = self.lanes.get(model)?;
+        Some((lane.dynamics.replicas(), lane.dynamics.wait()))
+    }
+
     /// Graceful shutdown: stop intake, DRAIN every queued request (each
     /// receives a real response), then join the replicas. Blocks until
     /// the drain completes.
     pub fn shutdown(&self) {
+        self.ctl_stop.store(true, Ordering::Relaxed);
         for lane in self.lanes.values() {
             lane.state.lock().unwrap().open = false;
             lane.cv.notify_all();
@@ -379,6 +469,7 @@ impl Coordinator {
     /// observe channel errors — the old hard-shutdown contract). Batches
     /// already executing still complete.
     pub fn shutdown_now(&self) {
+        self.ctl_stop.store(true, Ordering::Relaxed);
         for lane in self.lanes.values() {
             let dropped: Vec<Request> = {
                 let mut st = lane.state.lock().unwrap();
@@ -434,6 +525,7 @@ fn replica_worker(
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
     model: String,
+    idx: usize,
 ) {
     let mut expired: Vec<Request> = Vec::new();
     'serve: loop {
@@ -444,6 +536,18 @@ fn replica_worker(
                 loop {
                     if st.stop {
                         break (None, true);
+                    }
+                    // Parked by the controller: workers above the live
+                    // replica target hold no work and wait to be scaled
+                    // back in. Only while intake is open — every worker
+                    // helps drain a graceful shutdown.
+                    if st.open && idx >= lane.dynamics.replicas() {
+                        let (guard, _) = lane
+                            .cv
+                            .wait_timeout(st, Duration::from_millis(50))
+                            .unwrap();
+                        st = guard;
+                        continue;
                     }
                     let now = Instant::now();
                     while st.queue.front().is_some_and(|r| past_deadline(r, now)) {
@@ -477,14 +581,18 @@ fn replica_worker(
 
         // -- admit until the fused rows fill max_batch or the window ends -
         let opened = Instant::now();
+        // The live batch window: `cfg.max_wait` unless the controller is
+        // steering it. Read once per batch — a mid-batch retarget applies
+        // from the next batch.
+        let max_wait = lane.dynamics.wait();
         let mut rows = rows_of(&first.input);
         let mut batch = vec![first];
         'fill: while rows < cfg.max_batch {
             let elapsed = opened.elapsed();
-            if elapsed >= cfg.max_wait {
+            if elapsed >= max_wait {
                 break;
             }
-            let window = cfg.max_wait - elapsed;
+            let window = max_wait - elapsed;
             let mut st = lane.state.lock().unwrap();
             // At most ONE wait per lock acquisition: `window` is computed
             // from the batch-open time above, so waiting with it twice
@@ -604,6 +712,86 @@ fn replica_worker(
     }
 }
 
+/// Diff two cumulative metric snapshots into one controller tick's
+/// [`LaneObservation`] — the controller consumes per-tick DELTAS, while
+/// [`Metrics`] accumulates forever.
+fn tick_observation(prev: &ModelStats, cur: &ModelStats, max_batch: usize) -> LaneObservation {
+    let interval_mean = |c: &LatencyHist, p: &LatencyHist| -> f64 {
+        let n = c.count().saturating_sub(p.count());
+        if n == 0 {
+            0.0
+        } else {
+            c.sum_us().saturating_sub(p.sum_us()) as f64 / n as f64
+        }
+    };
+    let batches = cur.batches.saturating_sub(prev.batches);
+    LaneObservation {
+        requests: cur.requests.saturating_sub(prev.requests),
+        // Load sheds only: invalid inputs are a client bug no replica
+        // count fixes, so they must not drive scaling.
+        shed: (cur.shed_queue_full + cur.shed_deadline)
+            .saturating_sub(prev.shed_queue_full + prev.shed_deadline),
+        queue_mean_us: interval_mean(&cur.queue, &prev.queue),
+        exec_mean_us: interval_mean(&cur.exec, &prev.exec),
+        mean_rows: if batches == 0 {
+            0.0
+        } else {
+            cur.batch_rows_sum.saturating_sub(prev.batch_rows_sum) as f64 / batches as f64
+        },
+        max_batch,
+    }
+}
+
+/// The serving-time feedback loop: every `ControllerConfig::tick`, diff
+/// each lane's metrics since the previous tick, step its [`Controller`],
+/// and publish the decision into the lane's [`LaneDynamics`]. Parked
+/// workers are woken on scale-up; scale-down needs no wake (active
+/// workers re-check the target before every batch). All convergence
+/// logic (deadband, hysteresis, bounds) lives in the pure controller —
+/// this thread only moves data.
+fn controller_ticker(
+    mut ctl_lanes: Vec<(String, Arc<Lane>, Controller)>,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    stop: Arc<AtomicBool>,
+) {
+    let mut prev: Vec<ModelStats> = ctl_lanes.iter().map(|_| ModelStats::default()).collect();
+    'tick: loop {
+        // Sleep the tick in small slices so shutdown join never waits a
+        // whole period.
+        let tick = ctl_lanes
+            .first()
+            .map(|(_, _, c)| c.config().tick)
+            .unwrap_or(Duration::from_millis(100));
+        let mut slept = Duration::ZERO;
+        while slept < tick {
+            if stop.load(Ordering::Relaxed) {
+                break 'tick;
+            }
+            let slice = (tick - slept).min(Duration::from_millis(10));
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        for ((model, lane, ctl), prev_stats) in ctl_lanes.iter_mut().zip(prev.iter_mut()) {
+            let cur = metrics.snapshot(model).unwrap_or_default();
+            let obs = tick_observation(prev_stats, &cur, max_batch);
+            *prev_stats = cur;
+            let was = lane.dynamics.replicas();
+            let d = ctl.step(&obs);
+            lane.dynamics
+                .wait_us
+                .store(d.wait.as_micros() as u64, Ordering::Relaxed);
+            lane.dynamics
+                .target_replicas
+                .store(d.replicas, Ordering::Relaxed);
+            if d.replicas > was {
+                // Wake parked workers now instead of on their next poll.
+                lane.cv.notify_all();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -647,6 +835,7 @@ mod tests {
             replicas,
             queue_depth: 1024,
             deadline: None,
+            controller: None,
         }
     }
 
@@ -1154,5 +1343,134 @@ mod tests {
             );
             coord.shutdown();
         }
+    }
+
+    #[test]
+    fn tick_observation_diffs_cumulative_snapshots() {
+        let m = Metrics::default();
+        m.record_batch(
+            "lane",
+            4,
+            8,
+            &[Duration::from_micros(100); 4],
+            Duration::from_micros(400),
+            false,
+        );
+        let first = m.snapshot("lane").unwrap();
+        let obs = tick_observation(&ModelStats::default(), &first, 8);
+        assert_eq!(obs.requests, 4);
+        assert_eq!(obs.shed, 0);
+        assert_eq!(obs.mean_rows, 8.0);
+        assert_eq!(obs.queue_mean_us, 100.0);
+        assert_eq!(obs.exec_mean_us, 400.0);
+        // Second interval: one 2-row batch, one load shed, one invalid
+        // (which must NOT count — no replica count fixes a client bug).
+        m.record_batch(
+            "lane",
+            2,
+            2,
+            &[Duration::from_micros(300); 2],
+            Duration::from_micros(600),
+            false,
+        );
+        m.record_shed("lane", ShedKind::QueueFull);
+        m.record_shed("lane", ShedKind::InvalidInput);
+        let second = m.snapshot("lane").unwrap();
+        let obs = tick_observation(&first, &second, 8);
+        assert_eq!(obs.requests, 2);
+        assert_eq!(obs.shed, 1);
+        assert_eq!(obs.mean_rows, 2.0);
+        assert_eq!(obs.queue_mean_us, 300.0);
+        assert_eq!(obs.exec_mean_us, 600.0);
+        // An idle interval is all zeros — the controller's hold state.
+        let obs = tick_observation(&second, &second, 8);
+        let idle = LaneObservation {
+            max_batch: 8,
+            ..LaneObservation::default()
+        };
+        assert_eq!(obs, idle);
+    }
+
+    #[test]
+    fn lane_targets_stay_fixed_without_a_controller() {
+        let fig = Figure::Fig1FcTwoMul;
+        let coord = coordinator(8, 2);
+        assert_eq!(
+            coord.lane_targets("fig1_fc"),
+            Some((1, Duration::from_millis(2)))
+        );
+        coord.infer("fig1_fc", fig.input(1, 1)).unwrap().output.unwrap();
+        assert_eq!(
+            coord.lane_targets("fig1_fc"),
+            Some((1, Duration::from_millis(2))),
+            "no controller may rewrite the launch targets"
+        );
+        assert_eq!(coord.lane_targets("nope"), None);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn controller_scales_replicas_up_under_sustained_backlog() {
+        let fig = Figure::Fig1FcTwoMul;
+        let mut cfg = config(1, 1, 1);
+        cfg.controller = Some(ControllerConfig {
+            min_replicas: 1,
+            max_replicas: 3,
+            min_wait: Duration::from_micros(200),
+            max_wait: Duration::from_millis(4),
+            dwell_ticks: 2,
+            tick: Duration::from_millis(20),
+            ..ControllerConfig::default()
+        });
+        let coord = Arc::new(coordinator_with(cfg, Arc::new(SlowBackend::new(fig, 5))));
+        // Launch targets: the configured count clamped into bounds.
+        let (r0, w0) = coord.lane_targets("fig1_fc").unwrap();
+        assert_eq!(r0, 1);
+        assert_eq!(w0, Duration::from_millis(1), "launch window is max_wait");
+        // Offered load far beyond one 5ms-per-request replica: queue wait
+        // dominates exec time, so the controller must add replicas —
+        // waking workers that were spawned parked.
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut feeders = Vec::new();
+        for t in 0..4u64 {
+            let coord = coord.clone();
+            let stop = stop.clone();
+            feeders.push(std::thread::spawn(move || {
+                let fig = Figure::Fig1FcTwoMul;
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let x = fig.input(1, t * 100_000 + i);
+                    if let Ok(rx) = coord.submit("fig1_fc", x) {
+                        let _ = rx.recv();
+                    }
+                    i += 1;
+                }
+            }));
+        }
+        let t0 = Instant::now();
+        let mut peak = 1usize;
+        while t0.elapsed() < Duration::from_secs(5) {
+            let (r, _) = coord.lane_targets("fig1_fc").unwrap();
+            assert!(r <= 3, "replica target exceeded the controller bound");
+            peak = peak.max(r);
+            if peak > 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for f in feeders {
+            f.join().unwrap();
+        }
+        assert!(peak > 1, "sustained backlog never scaled the lane up");
+        // Everything submitted was answered correctly throughout the
+        // scale-up (receivers in the feeder loops asserted delivery);
+        // spot-check correctness after it.
+        let sess = Session::new(fig.model()).unwrap();
+        let x = fig.input(1, 424242);
+        let resp = coord.infer("fig1_fc", x.clone()).unwrap();
+        let want = &sess.run(&[("x", x)]).unwrap()[0];
+        assert_eq!(&resp.output.unwrap(), want);
+        coord.shutdown();
     }
 }

@@ -80,6 +80,31 @@ pub fn gemm_cost(cfg: &HwConfig, m: usize, k: usize, n: usize) -> CostReport {
     }
 }
 
+/// Plan-time tuner seed ([`crate::tune::tuner`]): estimated relative cost
+/// of running an `m x k x n` GEMM with an `mr x nr` register tile and
+/// `kc` k-blocking on the HOST CPU. Reuses [`gemm_cost`] with the MAC
+/// array sized to the register tile (an `mr x nr` tile of independent
+/// accumulators is the CPU analogue of an output-stationary array), plus
+/// a panel-traffic term the systolic model has no reason to charge for:
+/// every MR-row tile re-streams each B panel block, and a `kc x nr`
+/// panel that outgrows a 32 KiB L1 tile budget pays a spill penalty.
+/// Units are arbitrary "cycles" — only the RANKING matters; the top few
+/// candidates get real wall-clock measurement.
+pub fn gemm_tile_estimate(mr: usize, nr: usize, kc: usize, m: usize, k: usize, n: usize) -> u64 {
+    let cfg = HwConfig::default().with_array(mr.max(1), nr.max(1));
+    let compute = gemm_cost(&cfg, m, k, n).cycles;
+    let tiles_m = m.div_ceil(mr.max(1)) as u64;
+    let blocks_k = k.div_ceil(kc.max(1)) as u64;
+    let panels_n = n.div_ceil(nr.max(1)) as u64;
+    let panel_bytes = (kc.min(k) * nr) as u64;
+    let mut traffic = tiles_m * blocks_k * panels_n * panel_bytes;
+    if kc * nr > 32 * 1024 {
+        traffic *= 4; // panel no longer L1-resident
+    }
+    // ~8 bytes/cycle effective load bandwidth for the i8 panels.
+    compute + traffic / 8
+}
+
 /// Cost of an elementwise vector stage over `n` elements (`lanes` wide,
 /// one op per element).
 pub fn vector_cost(cfg: &HwConfig, n: usize, ops_per_elem: u64) -> CostReport {
@@ -121,6 +146,20 @@ mod tests {
         let cb = gemm_cost(&big, 32, 256, 32);
         assert!(cb.cycles < cs.cycles);
         assert!(cb.utilization(&big) < cs.utilization(&small));
+    }
+
+    #[test]
+    fn tile_estimate_ranks_sanely() {
+        // More work costs more, for any tile.
+        let small = gemm_tile_estimate(4, 8, 256, 64, 64, 64);
+        let big = gemm_tile_estimate(4, 8, 256, 64, 256, 64);
+        assert!(big > small);
+        // A panel far past the L1 budget is penalized vs one inside it.
+        let fits = gemm_tile_estimate(4, 8, 256, 64, 100_000, 8);
+        let spills = gemm_tile_estimate(4, 8, 100_000, 64, 100_000, 8);
+        assert!(spills > fits);
+        // Degenerate inputs don't panic or divide by zero.
+        assert!(gemm_tile_estimate(4, 8, 256, 0, 0, 0) < u64::MAX);
     }
 
     #[test]

@@ -42,10 +42,12 @@ pub const HW_PAR_MIN_BATCH: usize = HW_SPLIT_ROWS + 1;
 
 /// Fixed sub-batch height [`HwModule::run`] schedules batched inference
 /// in. This is a CONSTANT of the simulated schedule — deliberately NOT the
-/// host's core count — so the cost report (cycles, traffic, energy) for a
-/// given model + input is identical on every machine and thread-pool
-/// size; only wall-clock time varies with available workers.
-pub const HW_SPLIT_ROWS: usize = 4;
+/// host's core count (and deliberately NOT auto-tuned) — so the cost
+/// report (cycles, traffic, energy) for a given model + input is identical
+/// on every machine and thread-pool size; only wall-clock time varies with
+/// available workers. Defined through [`crate::tune::Thresholds`] so every
+/// split threshold has one home.
+pub const HW_SPLIT_ROWS: usize = crate::tune::Thresholds::DEFAULT.hw_split_rows;
 
 #[derive(Error, Debug)]
 pub enum HwError {

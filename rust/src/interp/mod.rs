@@ -31,6 +31,7 @@ use crate::onnx::topo::topo_order;
 use crate::ops::{execute_node, Isa, OpError};
 use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Tensor};
+use crate::tune::{model_digest, tune_gemms, GemmConfig, TuneMode, TuneOutcome, TuneSource};
 use plan::{resolve_src, CompiledPlan, ScratchArena, Src};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -39,8 +40,9 @@ use thiserror::Error;
 pub use crate::opt::PlanOptions;
 
 /// Smallest batch the auto-parallel path will split: below this the pool
-/// dispatch overhead dominates the per-row graph execution.
-pub const PAR_MIN_BATCH: usize = 4;
+/// dispatch overhead dominates the per-row graph execution. Alias of the
+/// unified [`crate::tune::Thresholds`] policy.
+pub const PAR_MIN_BATCH: usize = crate::tune::Thresholds::DEFAULT.batch_par_min;
 
 /// Node inputs at or below this arity resolve into a stack array in the
 /// hot loop (every admitted operator has <= 4 inputs; the heap fallback
@@ -115,13 +117,26 @@ pub struct PlanStats {
     /// Steps dispatching through that ISA (pre-bound + fused int8
     /// GEMM/conv kernels) — the plan's ISA coverage.
     pub isa_steps: usize,
+    /// Packed-GEMM tile config the plan's quantized kernels were stamped
+    /// with (kc / nr / parallel split thresholds) — the plan-time
+    /// micro-tuner's pick, or [`GemmConfig::DEFAULT`] when tuning is off,
+    /// found nothing better, or the model has no packed GEMM.
+    pub tile: GemmConfig,
+    /// Where `tile` came from (default / tuning-cache hit / measured).
+    pub tuned: TuneSource,
+    /// Whether the 1:1 unfused twin plan exists right now. Lazily
+    /// compiled (first observer / oracle / profiling use), so a
+    /// pure-serving fused session reports `false` and pays no double
+    /// baked-weight memory; sessions where fusion changed nothing share
+    /// ONE plan for both roles and report `true` at no extra cost.
+    pub twin_compiled: bool,
 }
 
 impl std::fmt::Display for PlanStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} eliminated; isa {} on {} steps)",
+            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} eliminated; isa {} on {} steps; tile {} [{}]; twin {})",
             self.nodes,
             self.steps,
             self.fused_qfc,
@@ -130,7 +145,10 @@ impl std::fmt::Display for PlanStats {
             self.fused_nodes,
             self.eliminated,
             self.isa,
-            self.isa_steps
+            self.isa_steps,
+            self.tile,
+            self.tuned.name(),
+            if self.twin_compiled { "compiled" } else { "lazy" }
         )
     }
 }
@@ -142,6 +160,56 @@ impl std::fmt::Display for PlanStats {
 struct StepProfile {
     nanos: u128,
     calls: u64,
+}
+
+/// The 1:1 node-per-step twin plan plus the legacy string-keyed free
+/// lists derived from it — everything the observer, oracle, and profiling
+/// paths need that the fused execution plan cannot provide.
+struct TwinPlan {
+    unfused: Arc<CompiledPlan>,
+    /// Frees as value names, for [`Session::run_unplanned`] only (kept so
+    /// the legacy path reproduces the pre-plan interpreter faithfully,
+    /// including its memory behavior).
+    unplanned_frees: Vec<Vec<String>>,
+}
+
+impl TwinPlan {
+    fn new(unfused: Arc<CompiledPlan>) -> TwinPlan {
+        let unplanned_frees = unfused
+            .steps
+            .iter()
+            .map(|s| {
+                s.frees
+                    .iter()
+                    .map(|&f| unfused.names[f as usize].clone())
+                    .collect()
+            })
+            .collect();
+        TwinPlan {
+            unfused,
+            unplanned_frees,
+        }
+    }
+}
+
+/// Lazily compiled unfused twin. Sessions where fusion fired used to
+/// compile BOTH plans eagerly, so every pure-serving process paid double
+/// baked-weight memory for observer/oracle/profiling plans it never ran.
+/// The twin now compiles on first use — the retained schedule and type
+/// map make that possible long after [`Session::new`] returned — and is
+/// shared across [`Session::fork_replica`] clones, so one compile serves
+/// a whole replica pool. When fusion changed nothing (or was disabled)
+/// the slot is seeded eagerly with the execution plan itself: same
+/// `Arc`, zero extra memory.
+struct LazyTwin {
+    /// Topological schedule the session compiled with.
+    order: Vec<usize>,
+    /// The checker's value-type map (the optimizer's LUT pass input).
+    types: HashMap<String, ValueType>,
+    /// Scheduled node count (= the unfused plan's step count), stored
+    /// eagerly so [`Session::plan_stats`] never forces the compile.
+    nodes: usize,
+    slot: Mutex<Option<Arc<TwinPlan>>>,
 }
 
 /// A validated, planned, executable model.
@@ -160,15 +228,10 @@ pub struct Session {
     /// (`crate::opt`) unless compiled with `PlanOptions { fuse: false }`
     /// or no pass changed anything (then it IS `unfused`, shared).
     plan: Arc<CompiledPlan>,
-    /// The 1:1 node-per-step plan. Serves [`Session::run_observed`] (so
-    /// calibration sees every intermediate value exactly as the legacy
-    /// interpreter streamed it), profiling sessions (per-NODE timing
-    /// attribution), and the `run_unplanned` oracle's schedule.
-    unfused: Arc<CompiledPlan>,
-    /// Frees as value names, for the legacy string-keyed path only
-    /// (kept so [`Session::run_unplanned`] reproduces the pre-plan
-    /// interpreter faithfully, including its memory behavior).
-    unplanned_frees: Arc<Vec<Vec<String>>>,
+    /// The 1:1 node-per-step plan (plus legacy free lists), compiled on
+    /// first use by [`Session::run_observed`], the `run_unplanned`
+    /// oracle, or a profiling run — see [`LazyTwin`].
+    twin: Arc<LazyTwin>,
     /// `Some(symbol)` when the graph is provably row-independent along a
     /// leading symbolic batch axis (see [`detect_batch_symbol`]) — the
     /// precondition for the batch-parallel execution path.
@@ -237,55 +300,125 @@ impl Session {
 
     /// [`Session::new`] with explicit [`PlanOptions`]. `fuse: false`
     /// compiles only the 1:1 node-per-step plan (useful as the
-    /// fused-vs-unfused baseline in benches and differential tests); the
-    /// unfused plan is always compiled regardless, because the observer
-    /// and oracle paths run on it.
+    /// fused-vs-unfused baseline in benches and differential tests).
+    /// When fusion fires, the 1:1 twin the observer / oracle / profiling
+    /// paths need is compiled lazily on first use — see [`LazyTwin`] —
+    /// so a serving session holds exactly one set of baked weights.
     pub fn new_with_options(model: Model, opts: PlanOptions) -> Result<Session, SessionError> {
         let types = check_model(&model)?;
         let batch_symbol = detect_batch_symbol(&model, &types);
         let order = topo_order(&model.graph)
             .map_err(|e| SessionError::Check(crate::onnx::shape::ShapeError::from(e).into()))?;
-        // Compile the execution plan first (optimizer on when requested).
-        // If no pass changed anything, that plan IS the 1:1 lowering and
-        // serves both roles — the common unfusible model pays ONE compile
-        // and bakes every weight once; only sessions where fusion
-        // actually fired compile the second (unfused) plan for the
-        // observer/profiling/oracle paths.
-        let first = Arc::new(CompiledPlan::compile(&model, &order, &types, &opts)?);
-        let (plan, unfused) = if opts.fuse && first.stats.changed() {
-            let unfused = Arc::new(CompiledPlan::compile(
-                &model,
-                &order,
-                &types,
-                &PlanOptions { fuse: false },
-            )?);
-            (first, unfused)
-        } else {
-            (first.clone(), first)
+        // Compile the execution plan (optimizer on when requested).
+        let mut first = CompiledPlan::compile(&model, &order, &types, &opts)?;
+
+        // Plan-time micro-tuner (`crate::tune`): pick a packed-GEMM tile
+        // config for this (model, shapes, ISA, nthreads) point — cache
+        // hit, or measured on the real machine with the actual baked
+        // weight panels under `PQDL_TUNE=full`. Runs BEFORE the plan is
+        // frozen behind its `Arc`, while the kernels are still mutable:
+        // a non-default winner repacks every baked panel via
+        // `Kernel::retune`. Every candidate computes bit-identically to
+        // the default (`tests/tuner.rs`), so this is a pure perf choice.
+        let outcome = {
+            let problems: Vec<_> = first
+                .steps
+                .iter()
+                .filter_map(|s| s.kernel.tune_problem())
+                .collect();
+            let mode = TuneMode::active();
+            if matches!(mode, TuneMode::Off) || problems.is_empty() {
+                TuneOutcome::DEFAULT
+            } else {
+                tune_gemms(
+                    model_digest(&model),
+                    &problems,
+                    first.isa,
+                    ThreadPool::global().threads(),
+                    mode,
+                )
+            }
         };
-        let unplanned_frees: Vec<Vec<String>> = unfused
-            .steps
-            .iter()
-            .map(|s| {
-                s.frees
-                    .iter()
-                    .map(|&f| unfused.names[f as usize].clone())
-                    .collect()
-            })
-            .collect();
-        let profile = Mutex::new(vec![StepProfile::default(); unfused.steps.len()]);
+        if !outcome.cfg.is_default() {
+            for step in &mut first.steps {
+                step.kernel.retune(outcome.cfg);
+            }
+        }
+        first.tile = outcome.cfg;
+        first.tuned = outcome.source;
+        let plan = Arc::new(first);
+
+        // The 1:1 twin plan is LAZY: if no optimizer pass changed
+        // anything, the execution plan IS the 1:1 lowering and serves
+        // both roles (seeded below — same `Arc`, zero extra memory);
+        // otherwise the twin compiles on its first observer / oracle /
+        // profiling use, so pure-serving sessions never pay the second
+        // set of baked weights.
+        let nodes = order.len();
+        let twin = LazyTwin {
+            order,
+            types,
+            nodes,
+            slot: Mutex::new(None),
+        };
+        if !(opts.fuse && plan.stats.changed()) {
+            *twin.slot.lock().unwrap() = Some(Arc::new(TwinPlan::new(plan.clone())));
+        }
+        let profile = Mutex::new(vec![StepProfile::default(); nodes]);
 
         Ok(Session {
             model: Arc::new(model),
             plan,
-            unfused,
-            unplanned_frees: Arc::new(unplanned_frees),
+            twin: Arc::new(twin),
             batch_symbol,
             parallel: true,
             arenas: Mutex::new(Vec::new()),
             profile,
             profiling: false,
         })
+    }
+
+    /// The unfused twin (compiling it now if this is the first use).
+    fn twin_plan(&self) -> Result<Arc<TwinPlan>, SessionError> {
+        let mut slot = self.twin.slot.lock().unwrap();
+        if let Some(t) = slot.as_ref() {
+            return Ok(t.clone());
+        }
+        let unfused = Arc::new(CompiledPlan::compile(
+            &self.model,
+            &self.twin.order,
+            &self.twin.types,
+            &PlanOptions { fuse: false },
+        )?);
+        let t = Arc::new(TwinPlan::new(unfused));
+        *slot = Some(t.clone());
+        Ok(t)
+    }
+
+    /// Bytes of baked kernel weights (widened int32 copies, packed
+    /// panels, bias vectors) held by this session's compiled plans: the
+    /// execution plan, plus the unfused twin only once it actually
+    /// exists. The lazy-twin plan-memory claim is observable here —
+    /// `bench_serving` and `tests/tuner.rs` read it before and after
+    /// forcing the twin.
+    pub fn baked_plan_bytes(&self) -> usize {
+        let mut bytes: usize = self
+            .plan
+            .steps
+            .iter()
+            .map(|s| s.kernel.baked_bytes())
+            .sum();
+        if let Some(t) = self.twin.slot.lock().unwrap().as_ref() {
+            if !Arc::ptr_eq(&t.unfused, &self.plan) {
+                bytes += t
+                    .unfused
+                    .steps
+                    .iter()
+                    .map(|s| s.kernel.baked_bytes())
+                    .sum::<usize>();
+            }
+        }
+        bytes
     }
 
     /// A new session over the SAME compiled plan, model, and baked
@@ -299,12 +432,11 @@ impl Session {
         Session {
             model: self.model.clone(),
             plan: self.plan.clone(),
-            unfused: self.unfused.clone(),
-            unplanned_frees: self.unplanned_frees.clone(),
+            twin: self.twin.clone(),
             batch_symbol: self.batch_symbol.clone(),
             parallel: self.parallel,
             arenas: Mutex::new(Vec::new()),
-            profile: Mutex::new(vec![StepProfile::default(); self.unfused.steps.len()]),
+            profile: Mutex::new(vec![StepProfile::default(); self.twin.nodes]),
             profiling: self.profiling,
         }
     }
@@ -321,12 +453,13 @@ impl Session {
     }
 
     /// The plan `run`/`run_into`/`run_serial` execute: the fused plan,
-    /// except for profiling sessions (per-node attribution).
-    fn exec_plan(&self) -> &Arc<CompiledPlan> {
+    /// except for profiling sessions (per-node attribution), whose first
+    /// run forces the lazy twin compile.
+    fn exec_plan(&self) -> Result<Arc<CompiledPlan>, SessionError> {
         if self.profiling {
-            &self.unfused
+            Ok(self.twin_plan()?.unfused.clone())
         } else {
-            &self.plan
+            Ok(self.plan.clone())
         }
     }
 
@@ -350,7 +483,7 @@ impl Session {
     pub fn plan_stats(&self) -> PlanStats {
         let s = self.plan.stats;
         PlanStats {
-            nodes: self.unfused.steps.len(),
+            nodes: self.twin.nodes,
             steps: self.plan.steps.len(),
             fused_nodes: self.plan.steps.iter().map(|st| st.span.len()).sum(),
             fused_qfc: s.fused_qfc,
@@ -364,6 +497,9 @@ impl Session {
                 .iter()
                 .filter(|st| st.kernel.isa().is_some())
                 .count(),
+            tile: self.plan.tile,
+            tuned: self.plan.tuned,
+            twin_compiled: self.twin.slot.lock().unwrap().is_some(),
         }
     }
 
@@ -533,9 +669,11 @@ impl Session {
     ) -> Result<Vec<Tensor>, SessionError> {
         let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
         self.validate_feeds(&refs)?;
+        let twin = self.twin_plan()?;
+        let unfused = &twin.unfused;
         let mut outs = Vec::new();
-        let mut arena = ScratchArena::new(self.unfused.n_slots, self.unfused.steps.len());
-        self.execute_steps(&self.unfused, &mut arena, &refs, observer, &mut outs, false)?;
+        let mut arena = ScratchArena::new(unfused.n_slots, unfused.steps.len());
+        self.execute_steps(unfused, &mut arena, &refs, observer, &mut outs, false)?;
         Ok(outs)
     }
 
@@ -635,7 +773,7 @@ impl Session {
         outs: &mut Vec<Tensor>,
     ) -> Result<(), SessionError> {
         self.validate_feeds(feeds)?;
-        let plan = self.exec_plan();
+        let plan = self.exec_plan()?;
         let mut arena = {
             let mut pool = self.arenas.lock().unwrap();
             pool.pop()
@@ -655,7 +793,7 @@ impl Session {
 
         let mut noop = |_: &str, _: &Tensor| {};
         let result =
-            self.execute_steps(plan, &mut arena, feeds, &mut noop, outs, self.profiling);
+            self.execute_steps(&plan, &mut arena, feeds, &mut noop, outs, self.profiling);
         // Teardown: park every remaining live value for the next run and
         // return the arena — also on the error path. Beyond the cap the
         // arena is dropped: memory stays bounded by MAX_POOLED_ARENAS
@@ -796,6 +934,7 @@ impl Session {
         let g = &self.model.graph;
         let refs: Vec<(&str, &Tensor)> = feeds.iter().map(|(n, t)| (*n, t)).collect();
         self.validate_feeds(&refs)?;
+        let twin = self.twin_plan()?;
 
         let mut values: HashMap<String, Tensor> = HashMap::with_capacity(feeds.len() + 16);
         for (name, t) in feeds {
@@ -803,7 +942,7 @@ impl Session {
             values.insert(name.to_string(), t.clone());
         }
 
-        for (pos, step) in self.unfused.steps.iter().enumerate() {
+        for (pos, step) in twin.unfused.steps.iter().enumerate() {
             let node = &g.nodes[step.node_idx];
             let inputs: Vec<Option<&Tensor>> = node
                 .inputs
@@ -826,7 +965,7 @@ impl Session {
                     values.insert(name.clone(), t);
                 }
             }
-            for dead in &self.unplanned_frees[pos] {
+            for dead in &twin.unplanned_frees[pos] {
                 values.remove(dead);
             }
         }
@@ -857,8 +996,14 @@ impl Session {
     /// total time descending. Stats are kept per plan step; the node name
     /// and op type are resolved here for the report.
     pub fn profile(&self) -> Vec<NodeStats> {
+        // No twin means no profiled run ever executed (profiling runs
+        // force it) — nothing to report, and nothing worth compiling.
+        let twin = match self.twin.slot.lock().unwrap().as_ref() {
+            Some(t) => t.clone(),
+            None => return Vec::new(),
+        };
         let prof = self.profile.lock().unwrap();
-        let mut v: Vec<NodeStats> = self
+        let mut v: Vec<NodeStats> = twin
             .unfused
             .steps
             .iter()

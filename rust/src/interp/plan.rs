@@ -27,6 +27,7 @@ use crate::onnx::shape::ValueType;
 use crate::ops::{Isa, Kernel};
 use crate::opt::{self, OptStats, PlanItem, PlanOptions};
 use crate::tensor::Tensor;
+use crate::tune::{GemmConfig, TuneSource};
 use std::collections::HashMap;
 
 /// Where a node input (or graph output) comes from, resolved at plan
@@ -94,6 +95,16 @@ pub(crate) struct CompiledPlan {
     /// ([`Isa::active`] at compile time — recorded here so `plan_stats()`
     /// and serving reports can name the variant actually running).
     pub isa: Isa,
+    /// Packed-GEMM tile config (kc / nr / parallel thresholds) the plan's
+    /// quantized kernels run with. `compile` stamps the default; the
+    /// session's plan-time micro-tuner ([`crate::tune::tuner`]) may repack
+    /// the baked panels and overwrite this — always BEFORE the plan is
+    /// frozen behind its `Arc`, extending the ISA stamp above with the
+    /// second half of the dispatch decision.
+    pub tile: GemmConfig,
+    /// Where `tile` came from: untouched default, tuning-cache hit, or a
+    /// fresh on-machine measurement.
+    pub tuned: TuneSource,
 }
 
 /// Per-session recycled execution state: the steady-state zero-allocation
@@ -361,6 +372,8 @@ impl CompiledPlan {
             outputs,
             stats,
             isa,
+            tile: GemmConfig::DEFAULT,
+            tuned: TuneSource::Default,
         })
     }
 }

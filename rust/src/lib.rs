@@ -52,5 +52,6 @@ pub mod rewrite;
 pub mod runtime;
 pub mod tensor;
 pub mod train;
+pub mod tune;
 
 pub use tensor::{DType, Tensor};

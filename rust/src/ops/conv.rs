@@ -16,8 +16,9 @@ use crate::tensor::{
 };
 
 /// Minimum multiply-accumulates per inference before the conv batch loop is
-/// dispatched to the pool.
-pub const CONV_PAR_MIN_WORK: usize = 32 * 1024;
+/// dispatched to the pool. Alias of the unified [`crate::tune::Thresholds`]
+/// policy.
+pub const CONV_PAR_MIN_WORK: usize = crate::tune::Thresholds::DEFAULT.conv_par_min_work;
 
 /// im2col over an i32-widened NCHW input. Output layout is
 /// `[C*kH*kW, oH*oW]` per batch element (column-major patches) so the

@@ -361,6 +361,88 @@ impl Kernel {
         }
     }
 
+    /// The packed-GEMM problem this kernel will run in steady state, for
+    /// the plan-time tuner ([`crate::tune::tuner`]): the baked widened
+    /// weights plus their shape. `None` for kernels with no packed GEMM
+    /// (either not quantized-prebound, or the weights refused to pack).
+    pub fn tune_problem(&self) -> Option<crate::tune::GemmProblem<'_>> {
+        use crate::tune::{GemmProblem, ProblemKind};
+        match self {
+            Kernel::MatMulIntegerPrebound { bw, bp, k, n, .. } if bp.is_some() => {
+                Some(GemmProblem {
+                    w: bw,
+                    k: *k,
+                    out: *n,
+                    kind: ProblemKind::PackedBGemm,
+                })
+            }
+            Kernel::FusedQFc(f) if f.bp.is_some() => Some(GemmProblem {
+                w: &f.bw,
+                k: f.k,
+                out: f.n,
+                kind: ProblemKind::PackedBGemm,
+            }),
+            Kernel::ConvIntegerPrebound {
+                wv, wp, m, c, kh, kw, ..
+            } if wp.is_some() => Some(GemmProblem {
+                w: wv,
+                k: c * kh * kw,
+                out: *m,
+                kind: ProblemKind::PackedAGemm,
+            }),
+            Kernel::FusedQConv(f) if f.wp.is_some() => Some(GemmProblem {
+                w: &f.wv,
+                k: f.c * f.kh * f.kw,
+                out: f.m,
+                kind: ProblemKind::PackedAGemm,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Repack this kernel's baked weight panels with a tuned tile config
+    /// (no-op for kernels without a packed GEMM). Bit-exactness is free:
+    /// the panels hold the same widened values in a different layout, and
+    /// every tile config accumulates in the same ascending-k order.
+    pub fn retune(&mut self, cfg: crate::tune::GemmConfig) {
+        use crate::ops::matmul::{PackedA, PackedB};
+        match self {
+            Kernel::MatMulIntegerPrebound { bw, bp, k, n, .. } if bp.is_some() => {
+                *bp = PackedB::pack_with(bw, *k, *n, cfg);
+            }
+            Kernel::FusedQFc(f) if f.bp.is_some() => {
+                f.bp = PackedB::pack_with(&f.bw, f.k, f.n, cfg);
+            }
+            Kernel::ConvIntegerPrebound {
+                wv, wp, m, c, kh, kw, ..
+            } if wp.is_some() => {
+                *wp = PackedA::pack_with(wv, *m, *c * *kh * *kw, cfg);
+            }
+            Kernel::FusedQConv(f) if f.wp.is_some() => {
+                f.wp = PackedA::pack_with(&f.wv, f.m, f.c * f.kh * f.kw, cfg);
+            }
+            _ => {}
+        }
+    }
+
+    /// Bytes of baked quantized-weight storage this kernel holds (the
+    /// widened i32 copy, the packed i8 panels, the folded bias) — the
+    /// plan-memory number behind the lazy-twin accounting. Float-path
+    /// bakes (Gemm `bt`, Conv `bias4`) are excluded: they are not
+    /// duplicated between fused and unfused twins in the paper patterns.
+    pub fn baked_bytes(&self) -> usize {
+        let opt_panel_b = |bp: &Option<matmul::PackedB>| bp.as_ref().map_or(0, |p| p.bytes());
+        let opt_panel_a = |wp: &Option<matmul::PackedA>| wp.as_ref().map_or(0, |p| p.bytes());
+        let opt_bias = |b: &Option<Vec<i32>>| b.as_ref().map_or(0, |v| v.len() * 4);
+        match self {
+            Kernel::MatMulIntegerPrebound { bw, bp, .. } => bw.len() * 4 + opt_panel_b(bp),
+            Kernel::ConvIntegerPrebound { wv, wp, .. } => wv.len() * 4 + opt_panel_a(wp),
+            Kernel::FusedQFc(f) => f.bw.len() * 4 + opt_panel_b(&f.bp) + opt_bias(&f.bias),
+            Kernel::FusedQConv(f) => f.wv.len() * 4 + opt_panel_a(&f.wp) + opt_bias(&f.bias),
+            _ => 0,
+        }
+    }
+
     /// Execute the pre-bound kernel on resolved inputs (`None` = omitted
     /// optional input). All admitted operators are single-output.
     /// `MissingInput` errors are minted without a node name; callers that

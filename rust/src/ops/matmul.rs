@@ -10,19 +10,36 @@ use super::isa::Isa;
 use super::OpError;
 use crate::parallel::{self, ThreadPool};
 use crate::tensor::{DType, Shape, Tensor};
+use crate::tune::{GemmConfig, Thresholds};
 
 /// Below this many multiply-accumulates a GEMM is not worth dispatching to
-/// the pool (dispatch + wake-up costs a few microseconds).
-pub const GEMM_PAR_MIN_WORK: usize = 32 * 1024;
-/// Minimum output rows per parallel chunk.
-pub const GEMM_PAR_MIN_ROWS: usize = 2;
+/// the pool (dispatch + wake-up costs a few microseconds). Alias of the
+/// unified [`Thresholds`] policy; the packed kernels read the (possibly
+/// tuned) copy in their operand's [`GemmConfig`] instead.
+pub const GEMM_PAR_MIN_WORK: usize = Thresholds::DEFAULT.gemm_par_min_work;
+/// Minimum output rows per parallel chunk (alias of [`Thresholds`]).
+pub const GEMM_PAR_MIN_ROWS: usize = Thresholds::DEFAULT.gemm_par_min_rows;
 
-/// True when an `m x k x n` GEMM is worth running on the pool.
-fn worth_parallel(pool: &ThreadPool, m: usize, k: usize, n: usize) -> bool {
+/// True when an `m x k x n` GEMM is worth running on the pool, under
+/// explicit thresholds (the packed kernels pass their operand's tuned
+/// config; everything else uses [`worth_parallel`]).
+fn worth_parallel_cfg(
+    pool: &ThreadPool,
+    m: usize,
+    k: usize,
+    n: usize,
+    min_rows: usize,
+    min_work: usize,
+) -> bool {
     pool.threads() > 1
         && parallel::allow_pool_dispatch()
-        && m >= 2 * GEMM_PAR_MIN_ROWS
-        && m.saturating_mul(k).saturating_mul(n) >= GEMM_PAR_MIN_WORK
+        && m >= 2 * min_rows
+        && m.saturating_mul(k).saturating_mul(n) >= min_work
+}
+
+/// [`worth_parallel_cfg`] at the default thresholds.
+fn worth_parallel(pool: &ThreadPool, m: usize, k: usize, n: usize) -> bool {
+    worth_parallel_cfg(pool, m, k, n, GEMM_PAR_MIN_ROWS, GEMM_PAR_MIN_WORK)
 }
 
 /// Widen an i8/u8 tensor to i32 applying an optional zero point. Also
@@ -168,48 +185,78 @@ pub fn gemm_i8_i32_par(
 // output element anyway — results are bit-identical to the naive triple
 // loop under ANY blocking. `tests/packed_gemm.rs` proves it by property
 // test, `tests/executor_plan.rs` end to end.
+//
+// Since the auto-tuner landed, the panel width NR and k-block KC are not
+// constants but per-operand [`GemmConfig`] fields chosen at pack time
+// (GEMM_NR/GEMM_KC below are the untuned defaults). The tile choice is a
+// pure performance knob: NR changes the packed LAYOUT and register-tile
+// shape, KC only the k-loop blocking — neither touches the ascending-k
+// per-element accumulation order, so every candidate stays bit-identical
+// to the scalar oracle (`tests/tuner.rs` proptests the whole space).
 
-/// Microkernel register-tile width (output columns per B panel).
+/// Default microkernel register-tile width (output columns per B panel).
 pub const GEMM_NR: usize = 8;
-/// Microkernel register-tile height (output rows per A panel).
+/// Largest panel width any [`GemmConfig`] candidate may use (fallback
+/// kernels size their stack accumulators with it).
+pub const GEMM_NR_MAX: usize = 16;
+/// Microkernel register-tile height (output rows per A panel). Not
+/// tunable: the SIMD twins and the PackedA layout bake it in.
 pub const GEMM_MR: usize = 4;
-/// k-block size: one `[GEMM_KC x GEMM_NR]` i8 B-panel block is 2 KiB,
-/// comfortably L1-resident together with the A rows streaming against it.
+/// Default k-block size: one `[GEMM_KC x GEMM_NR]` i8 B-panel block is
+/// 2 KiB, comfortably L1-resident with the A rows streaming against it.
 pub const GEMM_KC: usize = 256;
 
 /// A `[k, n]` B operand packed at plan time for [`gemm_i8_packed`]:
-/// `ceil(n/NR)` column panels, each `[k x NR]` row-major i8 with the
-/// ragged last panel zero-padded. Values are the zero-point-folded weights;
-/// packing refuses (returns `None`) when any folded value leaves the i8
-/// range (u8 weights, large zero points), in which case callers keep the
-/// widened-i32 kernel — identical results either way.
+/// `ceil(n/nr)` column panels, each `[k x nr]` row-major i8 with the
+/// ragged last panel zero-padded (`nr` from the pack-time [`GemmConfig`]).
+/// Values are the zero-point-folded weights; packing refuses (returns
+/// `None`) when any folded value leaves the i8 range (u8 weights, large
+/// zero points), in which case callers keep the widened-i32 kernel —
+/// identical results either way.
 pub struct PackedB {
     data: Vec<i8>,
     pub k: usize,
     pub n: usize,
+    /// Tile config this operand was packed with: `nr` fixes the panel
+    /// LAYOUT, `kc` and the parallel thresholds steer the kernels at run
+    /// time.
+    pub cfg: GemmConfig,
 }
 
 impl PackedB {
-    /// Pack widened (zero-point-folded) weights, or `None` if they don't
-    /// fit i8 (symmetric quantization — every pattern in the paper — fits).
+    /// Pack widened (zero-point-folded) weights with the default tile
+    /// config, or `None` if they don't fit i8 (symmetric quantization —
+    /// every pattern in the paper — fits).
     pub fn pack(bw: &[i32], k: usize, n: usize) -> Option<PackedB> {
+        PackedB::pack_with(bw, k, n, GemmConfig::DEFAULT)
+    }
+
+    /// Pack with an explicit (tuned) tile config.
+    pub fn pack_with(bw: &[i32], k: usize, n: usize, cfg: GemmConfig) -> Option<PackedB> {
         debug_assert_eq!(bw.len(), k * n);
+        assert!(cfg.nr > 0 && cfg.nr <= GEMM_NR_MAX, "bad panel width {}", cfg.nr);
         if bw.iter().any(|&v| v < i8::MIN as i32 || v > i8::MAX as i32) {
             return None;
         }
-        let np = n.div_ceil(GEMM_NR);
-        let mut data = vec![0i8; np * k * GEMM_NR];
+        let nr = cfg.nr;
+        let np = n.div_ceil(nr);
+        let mut data = vec![0i8; np * k * nr];
         for jp in 0..np {
-            let j0 = jp * GEMM_NR;
-            let jw = GEMM_NR.min(n - j0);
-            let panel = &mut data[jp * k * GEMM_NR..(jp + 1) * k * GEMM_NR];
+            let j0 = jp * nr;
+            let jw = nr.min(n - j0);
+            let panel = &mut data[jp * k * nr..(jp + 1) * k * nr];
             for kk in 0..k {
                 for jj in 0..jw {
-                    panel[kk * GEMM_NR + jj] = bw[kk * n + j0 + jj] as i8;
+                    panel[kk * nr + jj] = bw[kk * n + j0 + jj] as i8;
                 }
             }
         }
-        Some(PackedB { data, k, n })
+        Some(PackedB { data, k, n, cfg })
+    }
+
+    /// Bytes held by the packed panels (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
     }
 }
 
@@ -218,28 +265,66 @@ impl PackedB {
 /// register tile -> KC-blocked k sweep. Every output element accumulates
 /// its products in ascending-k order, so the result is bit-identical to
 /// the naive triple loop and to [`gemm_i8_i32`] over widened weights.
+/// Dispatches on the pack-time panel width so the common widths keep
+/// compile-time-bounded (fully unrolled) accumulator loops.
 pub fn gemm_i8_packed(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+    match bp.cfg.nr {
+        4 => gemm_i8_packed_tile::<4>(a, bp, m, c, 4),
+        8 => gemm_i8_packed_tile::<8>(a, bp, m, c, 8),
+        16 => gemm_i8_packed_tile::<16>(a, bp, m, c, 16),
+        nr => gemm_i8_packed_tile::<GEMM_NR_MAX>(a, bp, m, c, nr),
+    }
+}
+
+/// The [`gemm_i8_packed`] body, generic over the stack-accumulator
+/// CAPACITY. `nr` is the runtime panel width (== `NR_CAP` for the
+/// specialized widths; `<=` for the catch-all), and the `nr == NR_CAP`
+/// branch around the k sweep lets the compiler unroll the fast path while
+/// the same source handles any width — both sides accumulate in identical
+/// ascending-k order.
+fn gemm_i8_packed_tile<const NR_CAP: usize>(
+    a: &[i8],
+    bp: &PackedB,
+    m: usize,
+    c: &mut [i32],
+    nr: usize,
+) {
     let (k, n) = (bp.k, bp.n);
+    debug_assert_eq!(nr, bp.cfg.nr);
+    debug_assert!(nr > 0 && nr <= NR_CAP);
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(c.len(), m * n);
-    let np = n.div_ceil(GEMM_NR);
+    let kc_blk = bp.cfg.kc.max(1);
+    let np = n.div_ceil(nr);
     for jp in 0..np {
-        let j0 = jp * GEMM_NR;
-        let jw = GEMM_NR.min(n - j0);
-        let panel = &bp.data[jp * k * GEMM_NR..(jp + 1) * k * GEMM_NR];
+        let j0 = jp * nr;
+        let jw = nr.min(n - j0);
+        let panel = &bp.data[jp * k * nr..(jp + 1) * k * nr];
         let mut i0 = 0;
         while i0 < m {
             let iw = GEMM_MR.min(m - i0);
-            let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
+            let mut acc = [[0i32; NR_CAP]; GEMM_MR];
             let mut kb = 0;
             while kb < k {
-                let kc = GEMM_KC.min(k - kb);
-                for kk in kb..kb + kc {
-                    let brow = &panel[kk * GEMM_NR..(kk + 1) * GEMM_NR];
-                    for r in 0..iw {
-                        let av = a[(i0 + r) * k + kk] as i32;
-                        for jj in 0..GEMM_NR {
-                            acc[r][jj] += av * brow[jj] as i32;
+                let kc = kc_blk.min(k - kb);
+                if nr == NR_CAP {
+                    for kk in kb..kb + kc {
+                        let brow = &panel[kk * NR_CAP..(kk + 1) * NR_CAP];
+                        for r in 0..iw {
+                            let av = a[(i0 + r) * k + kk] as i32;
+                            for jj in 0..NR_CAP {
+                                acc[r][jj] += av * brow[jj] as i32;
+                            }
+                        }
+                    }
+                } else {
+                    for kk in kb..kb + kc {
+                        let brow = &panel[kk * nr..(kk + 1) * nr];
+                        for r in 0..iw {
+                            let av = a[(i0 + r) * k + kk] as i32;
+                            for (jj, &bv) in brow.iter().enumerate() {
+                                acc[r][jj] += av * bv as i32;
+                            }
                         }
                     }
                 }
@@ -255,14 +340,16 @@ pub fn gemm_i8_packed(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
 }
 
 /// Row-parallel wrapper over [`gemm_i8_packed`] (bit-exact: disjoint row
-/// blocks, identical per-element accumulation order).
+/// blocks, identical per-element accumulation order). The dispatch
+/// thresholds come from the operand's (possibly tuned) config.
 pub fn gemm_i8_packed_par(pool: &ThreadPool, a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
     let (k, n) = (bp.k, bp.n);
-    if !worth_parallel(pool, m, k, n) {
+    let min_rows = bp.cfg.par_min_rows.max(1);
+    if !worth_parallel_cfg(pool, m, k, n, min_rows, bp.cfg.par_min_work) {
         gemm_i8_packed(a, bp, m, c);
         return;
     }
-    parallel::par_row_chunks_mut(pool, c, m, n, GEMM_PAR_MIN_ROWS, |row0, block| {
+    parallel::par_row_chunks_mut(pool, c, m, n, min_rows, |row0, block| {
         let rows = block.len() / n;
         gemm_i8_packed(&a[row0 * k..(row0 + rows) * k], bp, rows, block);
     });
@@ -276,13 +363,25 @@ pub struct PackedA {
     data: Vec<i8>,
     pub m: usize,
     pub k: usize,
+    /// Tile config this operand was packed with (see [`PackedA::pack_with`]
+    /// for which fields matter on the packed-A path).
+    pub cfg: GemmConfig,
 }
 
 impl PackedA {
-    /// Pack widened (zero-point-folded) weights, or `None` if out of i8
-    /// range — see [`PackedB::pack`].
+    /// Pack widened (zero-point-folded) weights with the default tile
+    /// config, or `None` if out of i8 range — see [`PackedB::pack`].
     pub fn pack(aw: &[i32], m: usize, k: usize) -> Option<PackedA> {
+        PackedA::pack_with(aw, m, k, GemmConfig::DEFAULT)
+    }
+
+    /// Pack with an explicit (tuned) tile config. The PANEL layout only
+    /// depends on the fixed `GEMM_MR` — `cfg.nr` steers the runtime
+    /// column-block width of [`gemm_i8_packed_a`] (and `cfg.kc` is
+    /// unused: that kernel streams B rows once, nothing to k-block).
+    pub fn pack_with(aw: &[i32], m: usize, k: usize, cfg: GemmConfig) -> Option<PackedA> {
         debug_assert_eq!(aw.len(), m * k);
+        assert!(cfg.nr > 0 && cfg.nr <= GEMM_NR_MAX, "bad panel width {}", cfg.nr);
         if aw.iter().any(|&v| v < i8::MIN as i32 || v > i8::MAX as i32) {
             return None;
         }
@@ -298,15 +397,41 @@ impl PackedA {
                 }
             }
         }
-        Some(PackedA { data, m, k })
+        Some(PackedA { data, m, k, cfg })
+    }
+
+    /// Bytes held by the packed panels (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
     }
 }
 
 /// i8 GEMM against a pre-packed A and a runtime row-major i8 B (the conv
 /// im2col columns): C[m,n] = A[m,k] x B[k,n], i32 accumulation, ascending
 /// k per element — bit-identical to the naive loop (see module note).
+/// Dispatches on the config's column-block width like [`gemm_i8_packed`].
 pub fn gemm_i8_packed_a(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
+    match ap.cfg.nr {
+        4 => gemm_i8_packed_a_tile::<4>(ap, b, n, c, 4),
+        8 => gemm_i8_packed_a_tile::<8>(ap, b, n, c, 8),
+        16 => gemm_i8_packed_a_tile::<16>(ap, b, n, c, 16),
+        nr => gemm_i8_packed_a_tile::<GEMM_NR_MAX>(ap, b, n, c, nr),
+    }
+}
+
+/// The [`gemm_i8_packed_a`] body; capacity/width split as in
+/// [`gemm_i8_packed_tile`]. `jw == NR_CAP` implies `nr == NR_CAP` (jw
+/// never exceeds nr), so the fast branch is compile-time bounded.
+fn gemm_i8_packed_a_tile<const NR_CAP: usize>(
+    ap: &PackedA,
+    b: &[i8],
+    n: usize,
+    c: &mut [i32],
+    nr: usize,
+) {
     let (m, k) = (ap.m, ap.k);
+    debug_assert_eq!(nr, ap.cfg.nr);
+    debug_assert!(nr > 0 && nr <= NR_CAP);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     let mp = m.div_ceil(GEMM_MR);
@@ -316,15 +441,15 @@ pub fn gemm_i8_packed_a(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
         let panel = &ap.data[ip * k * GEMM_MR..(ip + 1) * k * GEMM_MR];
         let mut j0 = 0;
         while j0 < n {
-            let jw = GEMM_NR.min(n - j0);
-            let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
-            if jw == GEMM_NR {
+            let jw = nr.min(n - j0);
+            let mut acc = [[0i32; NR_CAP]; GEMM_MR];
+            if jw == NR_CAP {
                 for kk in 0..k {
                     let arow = &panel[kk * GEMM_MR..(kk + 1) * GEMM_MR];
-                    let brow = &b[kk * n + j0..kk * n + j0 + GEMM_NR];
+                    let brow = &b[kk * n + j0..kk * n + j0 + NR_CAP];
                     for r in 0..GEMM_MR {
                         let av = arow[r] as i32;
-                        for jj in 0..GEMM_NR {
+                        for jj in 0..NR_CAP {
                             acc[r][jj] += av * brow[jj] as i32;
                         }
                     }
@@ -345,7 +470,7 @@ pub fn gemm_i8_packed_a(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
                 let base = (i0 + r) * n + j0;
                 c[base..base + jw].copy_from_slice(&acc[r][..jw]);
             }
-            j0 += GEMM_NR;
+            j0 += nr;
         }
     }
 }
@@ -368,7 +493,14 @@ pub fn gemm_i8_packed_a(ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
 
 /// [`gemm_i8_packed`] through a plan-selected ISA. Values the host does
 /// not support degrade to the scalar kernel — identical bits either way.
+/// The SIMD twins are written for the default 8-lane panel width, so any
+/// other tuned width runs the (bit-identical) scalar kernels; the tuner
+/// measures each candidate through this exact gate, so a non-8 width only
+/// ever wins if its scalar path is genuinely faster on this machine.
 pub fn gemm_i8_packed_isa(isa: Isa, a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
+    if bp.cfg.nr != GEMM_NR {
+        return gemm_i8_packed(a, bp, m, c);
+    }
     match isa.normalized() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: normalized() verified the feature bit on this host.
@@ -386,6 +518,9 @@ pub fn gemm_i8_packed_isa(isa: Isa, a: &[i8], bp: &PackedB, m: usize, c: &mut [i
 /// [`gemm_i8_packed_a`] through a plan-selected ISA (same contract as
 /// [`gemm_i8_packed_isa`]).
 pub fn gemm_i8_packed_a_isa(isa: Isa, ap: &PackedA, b: &[i8], n: usize, c: &mut [i32]) {
+    if ap.cfg.nr != GEMM_NR {
+        return gemm_i8_packed_a(ap, b, n, c);
+    }
     match isa.normalized() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: normalized() verified the feature bit on this host.
@@ -413,11 +548,12 @@ pub fn gemm_i8_packed_par_isa(
     c: &mut [i32],
 ) {
     let (k, n) = (bp.k, bp.n);
-    if !worth_parallel(pool, m, k, n) {
+    let min_rows = bp.cfg.par_min_rows.max(1);
+    if !worth_parallel_cfg(pool, m, k, n, min_rows, bp.cfg.par_min_work) {
         gemm_i8_packed_isa(isa, a, bp, m, c);
         return;
     }
-    parallel::par_row_chunks_mut(pool, c, m, n, GEMM_PAR_MIN_ROWS, |row0, block| {
+    parallel::par_row_chunks_mut(pool, c, m, n, min_rows, |row0, block| {
         let rows = block.len() / n;
         gemm_i8_packed_isa(isa, &a[row0 * k..(row0 + rows) * k], bp, rows, block);
     });
@@ -458,7 +594,7 @@ fn packed_a_ragged_tail(
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::{PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR};
+    use super::{PackedA, PackedB, GEMM_MR, GEMM_NR};
     #[allow(clippy::wildcard_imports)]
     use std::arch::x86_64::*;
 
@@ -468,10 +604,13 @@ mod x86 {
     ///
     /// Safety: caller must have verified AVX2 (`Isa::normalized`). Every
     /// raw 8-byte B load reads `panel[kk*NR .. kk*NR+8]` with `kk < k`
-    /// and `panel.len() == k*NR`, `NR == 8` — always in bounds.
+    /// and `panel.len() == k*NR`, `NR == 8` (the ISA dispatchers route
+    /// every other tuned width to the scalar kernels) — always in bounds.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gemm_i8_packed_avx2(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
         let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(bp.cfg.nr, GEMM_NR);
+        let kc_blk = bp.cfg.kc.max(1);
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(c.len(), m * n);
         let np = n.div_ceil(GEMM_NR);
@@ -485,7 +624,7 @@ mod x86 {
                 let mut acc = [_mm256_setzero_si256(); GEMM_MR];
                 let mut kb = 0;
                 while kb < k {
-                    let kc = GEMM_KC.min(k - kb);
+                    let kc = kc_blk.min(k - kb);
                     for kk in kb..kb + kc {
                         let bv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
                             panel.as_ptr().add(kk * GEMM_NR) as *const __m128i,
@@ -515,6 +654,8 @@ mod x86 {
     #[target_feature(enable = "sse4.1")]
     pub(super) unsafe fn gemm_i8_packed_sse41(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
         let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(bp.cfg.nr, GEMM_NR);
+        let kc_blk = bp.cfg.kc.max(1);
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(c.len(), m * n);
         let np = n.div_ceil(GEMM_NR);
@@ -529,7 +670,7 @@ mod x86 {
                 let mut hi = [_mm_setzero_si128(); GEMM_MR];
                 let mut kb = 0;
                 while kb < k {
-                    let kc = GEMM_KC.min(k - kb);
+                    let kc = kc_blk.min(k - kb);
                     for kk in kb..kb + kc {
                         let b8 = _mm_loadl_epi64(
                             panel.as_ptr().add(kk * GEMM_NR) as *const __m128i
@@ -646,7 +787,7 @@ mod x86 {
 
 #[cfg(target_arch = "aarch64")]
 mod arm {
-    use super::{PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR};
+    use super::{PackedA, PackedB, GEMM_MR, GEMM_NR};
     #[allow(clippy::wildcard_imports)]
     use std::arch::aarch64::*;
 
@@ -659,6 +800,8 @@ mod arm {
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn gemm_i8_packed_neon(a: &[i8], bp: &PackedB, m: usize, c: &mut [i32]) {
         let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(bp.cfg.nr, GEMM_NR);
+        let kc_blk = bp.cfg.kc.max(1);
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(c.len(), m * n);
         let np = n.div_ceil(GEMM_NR);
@@ -673,7 +816,7 @@ mod arm {
                 let mut hi = [vdupq_n_s32(0); GEMM_MR];
                 let mut kb = 0;
                 while kb < k {
-                    let kc = GEMM_KC.min(k - kb);
+                    let kc = kc_blk.min(k - kb);
                     for kk in kb..kb + kc {
                         let b16 = vmovl_s8(vld1_s8(panel.as_ptr().add(kk * GEMM_NR)));
                         let blo = vmovl_s16(vget_low_s16(b16));

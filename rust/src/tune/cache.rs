@@ -1,0 +1,248 @@
+//! Tuning-result store: winner configs keyed by (model digest, GEMM
+//! shapes, ISA, nthreads), so measurement is paid once per deployment.
+//!
+//! The store is process-global and in-memory; when `PQDL_TUNE_CACHE`
+//! names a file it is loaded once at first use and appended to on every
+//! store, so the cache survives restarts (a deployment tunes on first
+//! boot, every later boot is a pure cache hit). The format is one text
+//! line per entry — human-diffable, no serde needed offline:
+//!
+//! ```text
+//! v1 <digest-hex> <shapes> <isa> <nthreads> <kc> <nr> <par_min_work> <par_min_rows>
+//! ```
+//!
+//! where `<shapes>` is a comma-joined, kind-prefixed `k`x`out` list
+//! (e.g. `b64x32,a27x8`). The first five fields ARE the key: change any
+//! of model weights (digest), GEMM shapes, ISA, or thread count and the
+//! entry no longer matches — invalidation is structural, not TTL-based.
+//! Round-trip + invalidation are covered by `tests/tuner.rs`.
+
+use super::GemmConfig;
+use crate::onnx::{model_to_json, Model};
+use crate::ops::Isa;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// FNV-1a 64-bit over a byte stream.
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Digest of everything that affects a compiled plan's tuned kernels:
+/// the full model — graph structure AND initializer bytes — via the
+/// bit-exact JSON serialization (f16 as raw bits, round-trip decimal
+/// floats). Two models digest equal iff they serialize equal, so a
+/// changed weight invalidates cached tuning the same way a changed
+/// graph does.
+pub fn model_digest(model: &Model) -> u64 {
+    fnv1a(0xcbf2_9ce4_8422_2325, model_to_json(model).as_bytes())
+}
+
+/// Counters that make cache behavior observable — the
+/// "second `Session::new` must hit the cache without re-measuring"
+/// acceptance test reads these, and the CI cache-hit smoke asserts
+/// `measurements` does not grow across a second plan compile.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TuneCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Times the tuner actually ran a measurement sweep (cache misses in
+    /// `full` mode).
+    pub measurements: u64,
+}
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+static MEASUREMENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide cache counters (monotonic; never reset).
+pub fn stats() -> TuneCacheStats {
+    TuneCacheStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+        measurements: MEASUREMENTS.load(Ordering::Relaxed),
+    }
+}
+
+pub(crate) fn count_measurement() {
+    MEASUREMENTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// In-memory winner store with an optional line-format disk mirror.
+/// Construct directly for tests ([`TuneCache::new`]); production code
+/// uses [`TuneCache::global`], whose disk path comes from
+/// `PQDL_TUNE_CACHE`.
+#[derive(Default)]
+pub struct TuneCache {
+    map: Mutex<HashMap<String, GemmConfig>>,
+    /// Disk mirror path; `None` = memory only.
+    path: Option<std::path::PathBuf>,
+    load_once: Once,
+}
+
+impl TuneCache {
+    pub fn new(path: Option<std::path::PathBuf>) -> TuneCache {
+        TuneCache {
+            map: Mutex::new(HashMap::new()),
+            path,
+            load_once: Once::new(),
+        }
+    }
+
+    /// The process-global cache. The disk mirror is read from
+    /// `PQDL_TUNE_CACHE` once — the same warm-once discipline as every
+    /// other knob, so steady-state serving never touches the
+    /// environment.
+    pub fn global() -> &'static TuneCache {
+        static CACHE: OnceLock<TuneCache> = OnceLock::new();
+        CACHE.get_or_init(|| TuneCache::new(std::env::var_os("PQDL_TUNE_CACHE").map(Into::into)))
+    }
+
+    fn ensure_loaded(&self) {
+        self.load_once.call_once(|| {
+            let Some(path) = &self.path else { return };
+            let Ok(text) = std::fs::read_to_string(path) else {
+                return; // absent/unreadable file = empty cache
+            };
+            let mut map = self.map.lock().unwrap();
+            for line in text.lines() {
+                if let Some((key, cfg)) = parse_line(line) {
+                    // Later lines win: appends overwrite earlier entries.
+                    map.insert(key, cfg);
+                }
+            }
+        });
+    }
+
+    /// Look up a winner; counts a hit or miss.
+    pub fn lookup(&self, key: &str) -> Option<GemmConfig> {
+        self.ensure_loaded();
+        let got = self.map.lock().unwrap().get(key).copied();
+        match got {
+            Some(_) => HITS.fetch_add(1, Ordering::Relaxed),
+            None => MISSES.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Store a winner; appends to the disk mirror when configured.
+    /// Disk write failures are non-fatal (the in-memory entry still
+    /// serves this process; next boot re-measures).
+    pub fn store(&self, key: &str, cfg: GemmConfig) {
+        self.ensure_loaded();
+        self.map.lock().unwrap().insert(key.to_string(), cfg);
+        if let Some(path) = &self.path {
+            use std::io::Write;
+            let line = format_line(key, cfg);
+            let res = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .and_then(|mut f| writeln!(f, "{line}"));
+            if let Err(e) = res {
+                eprintln!("[pqdl-tune] cache append to {} failed: {e}", path.display());
+            }
+        }
+    }
+
+    /// Number of distinct keys currently held (test observability).
+    pub fn len(&self) -> usize {
+        self.ensure_loaded();
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Canonical key line: `v1 <digest-hex> <shapes> <isa> <nthreads>`.
+/// `shapes` entries are pre-encoded by the tuner (kind-prefixed, comma
+/// joined, space free) and must arrive sorted for determinism.
+pub fn key_line(digest: u64, shapes: &[String], isa: Isa, nthreads: usize) -> String {
+    let joined = if shapes.is_empty() {
+        "-".to_string()
+    } else {
+        shapes.join(",")
+    };
+    format!("v1 {digest:016x} {joined} {} {nthreads}", isa.name())
+}
+
+fn format_line(key: &str, cfg: GemmConfig) -> String {
+    format!(
+        "{key} {} {} {} {}",
+        cfg.kc, cfg.nr, cfg.par_min_work, cfg.par_min_rows
+    )
+}
+
+/// Parse one disk line into (key, config); `None` on any malformed or
+/// differently-versioned line (forward compatible: unknown lines are
+/// skipped, never an error).
+fn parse_line(line: &str) -> Option<(String, GemmConfig)> {
+    let fields: Vec<&str> = line.split_whitespace().collect();
+    if fields.len() != 9 || fields[0] != "v1" {
+        return None;
+    }
+    let key = fields[..5].join(" ");
+    let cfg = GemmConfig {
+        kc: fields[5].parse().ok()?,
+        nr: fields[6].parse().ok()?,
+        par_min_work: fields[7].parse().ok()?,
+        par_min_rows: fields[8].parse().ok()?,
+    };
+    Some((key, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::Figure;
+
+    #[test]
+    fn digest_is_stable_and_weight_sensitive() {
+        let m1 = Figure::Fig1FcTwoMul.model();
+        let m2 = Figure::Fig1FcTwoMul.model();
+        assert_eq!(model_digest(&m1), model_digest(&m2));
+        let other = Figure::Fig2FcReluOneMul.model();
+        assert_ne!(model_digest(&m1), model_digest(&other));
+    }
+
+    #[test]
+    fn line_round_trip() {
+        let key = key_line(0xDEAD_BEEF, &["b64x32".into(), "a27x8".into()], Isa::Scalar, 4);
+        let cfg = GemmConfig {
+            kc: 512,
+            nr: 16,
+            par_min_work: 16 * 1024,
+            par_min_rows: 2,
+        };
+        let (k2, c2) = parse_line(&format_line(&key, cfg)).expect("round trip");
+        assert_eq!(k2, key);
+        assert_eq!(c2, cfg);
+        assert_eq!(parse_line("v0 junk"), None);
+        assert_eq!(parse_line(""), None);
+        assert_eq!(parse_line("v1 x y z"), None);
+    }
+
+    #[test]
+    fn memory_store_lookup() {
+        let c = TuneCache::new(None);
+        let key = key_line(1, &["b8x8".into()], Isa::Scalar, 1);
+        assert_eq!(c.lookup(&key), None);
+        let cfg = GemmConfig {
+            kc: 128,
+            ..GemmConfig::DEFAULT
+        };
+        c.store(&key, cfg);
+        assert_eq!(c.lookup(&key), Some(cfg));
+        // A different nthreads is a different key.
+        let key2 = key_line(1, &["b8x8".into()], Isa::Scalar, 2);
+        assert_eq!(c.lookup(&key2), None);
+    }
+}

@@ -1,0 +1,327 @@
+//! Serving-time feedback controller: adjusts per-lane replica counts and
+//! batch windows from the live metrics the coordinator already records.
+//!
+//! Pure decision logic — no threads, no clocks, no atomics. The
+//! coordinator ticks it with per-interval [`LaneObservation`] deltas
+//! (diffed from the cumulative `Metrics` snapshots) and applies the
+//! returned [`Decision`]; that split keeps the policy property-testable
+//! with synthetic traces (`tests/tuner.rs`).
+//!
+//! Convergence is by construction, not tuning luck:
+//!
+//! * **Deadband**: the scale-up condition (backlog) and the scale-down
+//!   condition (light) are separated by a gap — queue time must exceed
+//!   `backlog_frac × exec` to grow but fall below a tenth of that to
+//!   shrink. A load level inside the gap produces no change forever.
+//! * **Hysteresis**: a condition must hold for `dwell_ticks`
+//!   CONSECUTIVE ticks before acting, and every action resets all
+//!   streaks, so the fastest possible oscillation period is
+//!   `2 × dwell_ticks` and one noisy tick resets the clock.
+//! * **Bounds**: replicas clamp to `[min_replicas, max_replicas]`, the
+//!   batch window to `[min_wait, max_wait]`; a persistent extreme pegs
+//!   the decision at a bound and holds it there (a fixed point).
+
+use std::time::Duration;
+
+/// Bounds and gains of the feedback loop. The defaults are deliberately
+/// conservative (act after 3 consistent ticks, one step at a time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControllerConfig {
+    /// Replica-count bounds per lane.
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Batch-window bounds.
+    pub min_wait: Duration,
+    pub max_wait: Duration,
+    /// Consecutive ticks a condition must hold before a change.
+    pub dwell_ticks: u32,
+    /// Backlog when mean queue wait exceeds this fraction of mean exec
+    /// time (work is waiting longer than a good share of its service
+    /// time — more parallelism pays).
+    pub backlog_frac: f64,
+    /// Backlog when the interval shed rate exceeds this.
+    pub shed_high: f64,
+    /// Batches are "sparse" when mean rows per batch is below this
+    /// fraction of `max_batch` — widening the window coalesces better.
+    pub sparse_batch_frac: f64,
+    /// Controller tick period (used by the coordinator's ticker thread,
+    /// carried here so one struct configures the whole loop).
+    pub tick: Duration,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> ControllerConfig {
+        ControllerConfig {
+            min_replicas: 1,
+            max_replicas: 8,
+            min_wait: Duration::from_micros(500),
+            max_wait: Duration::from_millis(8),
+            dwell_ticks: 3,
+            backlog_frac: 0.5,
+            shed_high: 0.01,
+            sparse_batch_frac: 0.25,
+            tick: Duration::from_millis(100),
+        }
+    }
+}
+
+/// What one lane did during one controller tick — DELTAS over the tick,
+/// not cumulative totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LaneObservation {
+    /// Requests admitted this tick.
+    pub requests: u64,
+    /// Requests shed this tick (queue full + deadline).
+    pub shed: u64,
+    /// Mean queue wait of this tick's batches, microseconds.
+    pub queue_mean_us: f64,
+    /// Mean execution time of this tick's batches, microseconds.
+    pub exec_mean_us: f64,
+    /// Mean rows per executed batch this tick.
+    pub mean_rows: f64,
+    /// The lane's configured batch capacity.
+    pub max_batch: usize,
+}
+
+impl LaneObservation {
+    fn shed_rate(&self) -> f64 {
+        let offered = self.requests + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+}
+
+/// The controller's current targets for one lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub replicas: usize,
+    pub wait: Duration,
+}
+
+/// Per-lane feedback controller; one instance per model lane.
+#[derive(Debug)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    current: Decision,
+    up_streak: u32,
+    down_streak: u32,
+    widen_streak: u32,
+    narrow_streak: u32,
+}
+
+impl Controller {
+    /// Start from the lane's launch configuration, clamped into bounds.
+    pub fn new(cfg: ControllerConfig, replicas: usize, wait: Duration) -> Controller {
+        let current = Decision {
+            replicas: replicas.clamp(cfg.min_replicas, cfg.max_replicas),
+            wait: wait.clamp(cfg.min_wait, cfg.max_wait),
+        };
+        Controller {
+            cfg,
+            current,
+            up_streak: 0,
+            down_streak: 0,
+            widen_streak: 0,
+            narrow_streak: 0,
+        }
+    }
+
+    pub fn current(&self) -> Decision {
+        self.current
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Consume one tick's observation, return the (possibly updated)
+    /// targets. At most one replica step and one window step per call.
+    pub fn step(&mut self, obs: &LaneObservation) -> Decision {
+        let cfg = self.cfg;
+        if obs.requests + obs.shed == 0 {
+            // Idle tick: hold everything and restart the evidence clock.
+            // (Scaling down on silence would make cold lanes thrash on
+            // the next burst; idle replicas park in a condvar wait.)
+            self.reset_replica_streaks();
+            self.reset_window_streaks();
+            return self.current;
+        }
+
+        // --- replica count -------------------------------------------------
+        let backlog = obs.shed_rate() > cfg.shed_high
+            || obs.queue_mean_us > cfg.backlog_frac * obs.exec_mean_us;
+        // Deadband: "light" is 10x stricter than "not backlogged".
+        let light = obs.shed == 0 && obs.queue_mean_us < 0.1 * cfg.backlog_frac * obs.exec_mean_us;
+        if backlog {
+            self.down_streak = 0;
+            self.up_streak += 1;
+            if self.up_streak >= cfg.dwell_ticks && self.current.replicas < cfg.max_replicas {
+                self.current.replicas += 1;
+                self.reset_replica_streaks();
+            }
+        } else if light {
+            self.up_streak = 0;
+            self.down_streak += 1;
+            if self.down_streak >= cfg.dwell_ticks && self.current.replicas > cfg.min_replicas {
+                self.current.replicas -= 1;
+                self.reset_replica_streaks();
+            }
+        } else {
+            self.reset_replica_streaks();
+        }
+
+        // --- batch window --------------------------------------------------
+        // Sparse batches with headroom: widen to coalesce. Queue-dominated
+        // latency: narrow so admitted work ships sooner. The conditions
+        // are mutually exclusive (sparse requires !backlog).
+        let sparse = !backlog
+            && obs.max_batch > 1
+            && obs.mean_rows < cfg.sparse_batch_frac * obs.max_batch as f64;
+        let queue_bound = backlog && obs.queue_mean_us > obs.exec_mean_us;
+        if sparse {
+            self.narrow_streak = 0;
+            self.widen_streak += 1;
+            if self.widen_streak >= cfg.dwell_ticks && self.current.wait < cfg.max_wait {
+                self.current.wait = (self.current.wait * 2).clamp(cfg.min_wait, cfg.max_wait);
+                self.reset_window_streaks();
+            }
+        } else if queue_bound {
+            self.widen_streak = 0;
+            self.narrow_streak += 1;
+            if self.narrow_streak >= cfg.dwell_ticks && self.current.wait > cfg.min_wait {
+                self.current.wait = (self.current.wait / 2).clamp(cfg.min_wait, cfg.max_wait);
+                self.reset_window_streaks();
+            }
+        } else {
+            self.reset_window_streaks();
+        }
+
+        self.current
+    }
+
+    fn reset_replica_streaks(&mut self) {
+        self.up_streak = 0;
+        self.down_streak = 0;
+    }
+
+    fn reset_window_streaks(&mut self) {
+        self.widen_streak = 0;
+        self.narrow_streak = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig::default()
+    }
+
+    fn overload() -> LaneObservation {
+        LaneObservation {
+            requests: 90,
+            shed: 10,
+            queue_mean_us: 5000.0,
+            exec_mean_us: 1000.0,
+            mean_rows: 7.5,
+            max_batch: 8,
+        }
+    }
+
+    fn idle_ish() -> LaneObservation {
+        LaneObservation {
+            requests: 5,
+            shed: 0,
+            queue_mean_us: 1.0,
+            exec_mean_us: 1000.0,
+            mean_rows: 1.0,
+            max_batch: 8,
+        }
+    }
+
+    #[test]
+    fn scales_up_under_sustained_backlog_and_respects_the_bound() {
+        let mut c = Controller::new(cfg(), 2, Duration::from_millis(2));
+        let mut d = c.current();
+        for _ in 0..100 {
+            d = c.step(&overload());
+            assert!(d.replicas <= cfg().max_replicas);
+        }
+        assert_eq!(d.replicas, cfg().max_replicas); // pegged, not oscillating
+        // Queue-bound overload also narrows the window to the floor.
+        assert_eq!(d.wait, cfg().min_wait);
+    }
+
+    #[test]
+    fn scales_down_when_light_and_holds_at_min() {
+        let mut c = Controller::new(cfg(), 4, Duration::from_millis(2));
+        let mut d = c.current();
+        for _ in 0..100 {
+            d = c.step(&idle_ish());
+            assert!(d.replicas >= cfg().min_replicas);
+        }
+        assert_eq!(d.replicas, cfg().min_replicas);
+        // Sparse batches widened the window to the ceiling.
+        assert_eq!(d.wait, cfg().max_wait);
+    }
+
+    #[test]
+    fn change_needs_dwell_consecutive_ticks() {
+        let mut c = Controller::new(cfg(), 2, Duration::from_millis(2));
+        // dwell-1 backlogged ticks, then a calm one: no change ever.
+        for _ in 0..(cfg().dwell_ticks - 1) {
+            assert_eq!(c.step(&overload()).replicas, 2);
+        }
+        let calm = LaneObservation {
+            requests: 50,
+            shed: 0,
+            queue_mean_us: 300.0, // inside the deadband
+            exec_mean_us: 1000.0,
+            mean_rows: 4.0,
+            max_batch: 8,
+        };
+        assert_eq!(c.step(&calm).replicas, 2);
+        // The streak restarted: dwell-1 more backlog ticks still hold.
+        for _ in 0..(cfg().dwell_ticks - 1) {
+            assert_eq!(c.step(&overload()).replicas, 2);
+        }
+        assert_eq!(c.step(&overload()).replicas, 3);
+    }
+
+    #[test]
+    fn deadband_load_is_a_fixed_point() {
+        let mut c = Controller::new(cfg(), 3, Duration::from_millis(2));
+        let steady = LaneObservation {
+            requests: 100,
+            shed: 0,
+            queue_mean_us: 300.0, // between 0.1*frac*exec=50 and frac*exec=500
+            exec_mean_us: 1000.0,
+            mean_rows: 4.0, // above sparse_batch_frac * 8 = 2
+            max_batch: 8,
+        };
+        let before = c.current();
+        for _ in 0..50 {
+            assert_eq!(c.step(&steady), before);
+        }
+    }
+
+    #[test]
+    fn idle_ticks_hold_state() {
+        let mut c = Controller::new(cfg(), 3, Duration::from_millis(2));
+        let before = c.current();
+        for _ in 0..20 {
+            assert_eq!(c.step(&LaneObservation::default()), before);
+        }
+    }
+
+    #[test]
+    fn new_clamps_launch_config_into_bounds() {
+        let c = Controller::new(cfg(), 100, Duration::from_secs(10));
+        assert_eq!(c.current().replicas, cfg().max_replicas);
+        assert_eq!(c.current().wait, cfg().max_wait);
+    }
+}

@@ -1,0 +1,209 @@
+//! Cost-model-driven auto-tuning (ROADMAP item: close the loop between
+//! the hwsim cost model and the real machine).
+//!
+//! The compilation side of the paper's co-design split used to hardcode
+//! every performance-critical constant: GEMM tiles (KC=256, NR=8), the
+//! `worth_parallel` thresholds, replica counts, batch windows. This
+//! module replaces hand-picked constants with measured decisions at two
+//! timescales:
+//!
+//! * **Plan time** ([`tuner`]): the packed int8 GEMM kernels are
+//!   parameterized over a small candidate space ([`GemmConfig`]: KC ∈
+//!   {128, 256, 512}, NR ∈ {4, 8, 16}, parallel row-split thresholds).
+//!   Candidates are ranked by the `hwsim::cost` model, the top few are
+//!   timed on the real machine with the model's actual baked weight
+//!   panels, and the winner is stamped into the `CompiledPlan`
+//!   (extending the plan-time ISA stamping pattern). Results are cached
+//!   ([`cache`]) keyed by (model digest, GEMM shapes, ISA, nthreads) so
+//!   tuning is paid once per deployment.
+//! * **Serving time** ([`controller`]): a feedback loop over the
+//!   coordinator's live metrics adjusts per-lane replica counts and
+//!   batch windows, with hysteresis and bounds so it converges instead
+//!   of oscillating.
+//!
+//! Every candidate kernel configuration is bit-identical to the scalar
+//! differential oracle — per-element accumulation order is ascending-k
+//! under ANY blocking (see `ops::matmul`), so tuning can never change an
+//! output bit (proptested in `tests/tuner.rs`).
+//!
+//! Knobs: `PQDL_TUNE=off|cached|full` ([`TuneMode`]), `PQDL_TUNE_CACHE`
+//! (on-disk cache path; in-memory only when unset), `PQDL_TUNE_TOPK`
+//! (measured candidates per shortlist, default 3).
+
+pub mod cache;
+pub mod controller;
+pub mod thresholds;
+pub mod tuner;
+
+pub use cache::{model_digest, TuneCache, TuneCacheStats};
+pub use controller::{Controller, ControllerConfig, Decision, LaneObservation};
+pub use thresholds::Thresholds;
+pub use tuner::{tune_gemms, GemmProblem, ProblemKind, TuneOutcome, TuneSource};
+
+use crate::ops::matmul::{GEMM_KC, GEMM_NR};
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Tile + parallel-threshold configuration of the packed int8 GEMM
+/// kernels — the plan-time tuner's search space. Carried by `PackedB` /
+/// `PackedA` (set at pack time, read by the kernels at run time) and
+/// stamped into every `CompiledPlan` alongside the ISA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmConfig {
+    /// k-block size of the packed-B microkernel sweep.
+    pub kc: usize,
+    /// Column-panel width (output columns per register tile). Affects
+    /// the packed memory LAYOUT; the SIMD twins engage only at the
+    /// 8-lane width and every other value runs the (bit-identical)
+    /// scalar kernels.
+    pub nr: usize,
+    /// Minimum `m*k*n` before the packed GEMM dispatches to the pool.
+    pub par_min_work: usize,
+    /// Minimum output rows per parallel chunk.
+    pub par_min_rows: usize,
+}
+
+impl GemmConfig {
+    /// The hand-picked constants every release so far shipped with.
+    /// `PQDL_TUNE=off` uses exactly this — asserted by `tests/tuner.rs`.
+    pub const DEFAULT: GemmConfig = GemmConfig {
+        kc: GEMM_KC,
+        nr: GEMM_NR,
+        par_min_work: Thresholds::DEFAULT.gemm_par_min_work,
+        par_min_rows: Thresholds::DEFAULT.gemm_par_min_rows,
+    };
+
+    /// The full candidate space the tuner ranks: KC ∈ {128, 256, 512} ×
+    /// NR ∈ {4, 8, 16} × par_min_work ∈ {16 Ki, 32 Ki}. Small by design —
+    /// the cost-model seed cuts it to a shortlist before anything is
+    /// timed, so plan-time tuning stays bounded.
+    pub fn candidates() -> Vec<GemmConfig> {
+        let mut v = Vec::with_capacity(18);
+        for &kc in &[128usize, 256, 512] {
+            for &nr in &[4usize, 8, 16] {
+                for &par_min_work in &[16 * 1024usize, 32 * 1024] {
+                    v.push(GemmConfig {
+                        kc,
+                        nr,
+                        par_min_work,
+                        par_min_rows: Thresholds::DEFAULT.gemm_par_min_rows,
+                    });
+                }
+            }
+        }
+        v
+    }
+
+    pub fn is_default(&self) -> bool {
+        *self == GemmConfig::DEFAULT
+    }
+}
+
+impl Default for GemmConfig {
+    fn default() -> GemmConfig {
+        GemmConfig::DEFAULT
+    }
+}
+
+impl fmt::Display for GemmConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "kc{} nr{} parw{} parr{}",
+            self.kc, self.nr, self.par_min_work, self.par_min_rows
+        )
+    }
+}
+
+/// The `PQDL_TUNE` knob: how much work plan compilation may spend on
+/// tuning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneMode {
+    /// No tuning, no cache: today's hand-picked constants, exactly.
+    Off,
+    /// Use a cached winner when one exists for (digest, shapes, ISA,
+    /// nthreads); NEVER measure. The default: a warmed deployment gets
+    /// its tuned plan for free, a cold one behaves like `off`.
+    Cached,
+    /// Cache hit, else measure the shortlist and store the winner.
+    Full,
+}
+
+impl TuneMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneMode::Off => "off",
+            TuneMode::Cached => "cached",
+            TuneMode::Full => "full",
+        }
+    }
+
+    /// Parse a knob value; unknown strings are `None` (callers fall back
+    /// to the default mode rather than failing — same contract as
+    /// `PQDL_FORCE_ISA`).
+    pub fn from_name(s: &str) -> Option<TuneMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Some(TuneMode::Off),
+            "cached" => Some(TuneMode::Cached),
+            "full" => Some(TuneMode::Full),
+            _ => None,
+        }
+    }
+
+    /// The process-wide mode: `PQDL_TUNE` if set (unknown values fall
+    /// back to `cached`), else `cached`. Decided once (`OnceLock`) so
+    /// plan compilation never re-reads the environment — the same
+    /// warm-once pattern as `Isa::active`.
+    pub fn active() -> TuneMode {
+        static ACTIVE: OnceLock<TuneMode> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            std::env::var("PQDL_TUNE")
+                .ok()
+                .and_then(|v| TuneMode::from_name(&v))
+                .unwrap_or(TuneMode::Cached)
+        })
+    }
+}
+
+impl fmt::Display for TuneMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_the_historical_constants() {
+        let d = GemmConfig::DEFAULT;
+        assert_eq!(d.kc, 256);
+        assert_eq!(d.nr, 8);
+        assert_eq!(d.par_min_work, 32 * 1024);
+        assert_eq!(d.par_min_rows, 2);
+        assert!(d.is_default());
+    }
+
+    #[test]
+    fn candidate_space_covers_the_issue_spec() {
+        let c = GemmConfig::candidates();
+        assert_eq!(c.len(), 18);
+        // The default must be in the space (so "tuned" can mean "keep").
+        assert!(c.contains(&GemmConfig::DEFAULT));
+        for cfg in &c {
+            assert!([128, 256, 512].contains(&cfg.kc));
+            assert!([4, 8, 16].contains(&cfg.nr));
+            assert!(cfg.nr <= crate::ops::matmul::GEMM_NR_MAX);
+        }
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in [TuneMode::Off, TuneMode::Cached, TuneMode::Full] {
+            assert_eq!(TuneMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(TuneMode::from_name(" FULL "), Some(TuneMode::Full));
+        assert_eq!(TuneMode::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,82 @@
+//! The single home of the "is this worth parallelizing" thresholds.
+//!
+//! Before the tuning subsystem these lived as per-file magic constants
+//! (`ops/matmul.rs`, `ops/conv.rs`, the interp batch split, the hwsim
+//! sub-batch schedule). They are gathered here so (a) there is exactly
+//! one place to read the parallelism policy, and (b) the tunable subset
+//! (the GEMM thresholds, via [`super::GemmConfig`]) has an authoritative
+//! default to be measured against. The per-file `pub const`s survive as
+//! aliases of [`Thresholds::DEFAULT`] fields, so existing call sites and
+//! tests keep compiling unchanged.
+
+/// Every execution-layer parallelism threshold, in one struct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Thresholds {
+    /// Minimum `m*k*n` multiply-accumulates before a GEMM dispatches to
+    /// the pool (dispatch + wake-up costs a few microseconds).
+    /// Was `ops::matmul::GEMM_PAR_MIN_WORK`.
+    pub gemm_par_min_work: usize,
+    /// Minimum output rows per parallel GEMM chunk.
+    /// Was `ops::matmul::GEMM_PAR_MIN_ROWS`.
+    pub gemm_par_min_rows: usize,
+    /// Minimum `batch * macs_per_image` before a convolution dispatches
+    /// its batch images to the pool. Was `ops::conv::CONV_PAR_MIN_WORK`.
+    pub conv_par_min_work: usize,
+    /// Minimum leading-axis rows before `interp::Session::run` splits a
+    /// batch across the pool. Was `interp::PAR_MIN_BATCH`.
+    pub batch_par_min: usize,
+    /// Fixed sub-batch height of the hwsim schedule. NOT tunable: it is
+    /// a constant of the SIMULATED hardware schedule, deliberately
+    /// machine-independent so cost reports are identical everywhere —
+    /// it lives here only so every split threshold is defined in one
+    /// place. Was `hwsim::HW_SPLIT_ROWS`.
+    pub hw_split_rows: usize,
+}
+
+impl Thresholds {
+    /// The historical hand-picked values. `PQDL_TUNE=off` (and every
+    /// untuned path) reproduces exactly these — asserted by
+    /// `tests/tuner.rs`.
+    pub const DEFAULT: Thresholds = Thresholds {
+        gemm_par_min_work: 32 * 1024,
+        gemm_par_min_rows: 2,
+        conv_par_min_work: 32 * 1024,
+        batch_par_min: 4,
+        hw_split_rows: 4,
+    };
+}
+
+impl Default for Thresholds {
+    fn default() -> Thresholds {
+        Thresholds::DEFAULT
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_file_aliases_agree_with_the_struct() {
+        // The unification contract: the old per-file constants are this
+        // struct's fields, not independent copies.
+        assert_eq!(
+            crate::ops::matmul::GEMM_PAR_MIN_WORK,
+            Thresholds::DEFAULT.gemm_par_min_work
+        );
+        assert_eq!(
+            crate::ops::matmul::GEMM_PAR_MIN_ROWS,
+            Thresholds::DEFAULT.gemm_par_min_rows
+        );
+        assert_eq!(
+            crate::ops::conv::CONV_PAR_MIN_WORK,
+            Thresholds::DEFAULT.conv_par_min_work
+        );
+        assert_eq!(crate::interp::PAR_MIN_BATCH, Thresholds::DEFAULT.batch_par_min);
+        assert_eq!(crate::hwsim::HW_SPLIT_ROWS, Thresholds::DEFAULT.hw_split_rows);
+        assert_eq!(
+            crate::hwsim::HW_PAR_MIN_BATCH,
+            Thresholds::DEFAULT.hw_split_rows + 1
+        );
+    }
+}

@@ -1,0 +1,344 @@
+//! Plan-time micro-tuner for the packed int8 GEMM kernels.
+//!
+//! The tuner answers one question at `Session::new` time: which
+//! [`GemmConfig`] should this plan's packed kernels run with on THIS
+//! machine? The pipeline is cost-seeded measurement:
+//!
+//! 1. collect the plan's GEMM problems — the actual baked weight
+//!    matrices behind `MatMulIntegerPrebound` / `FusedQFc` (packed-B
+//!    side) and `ConvIntegerPrebound` / `FusedQConv` (packed-A side);
+//! 2. rank the full candidate space with the `hwsim::cost` model
+//!    ([`crate::hwsim::cost::gemm_tile_estimate`]) — cheap, no timing;
+//! 3. time only the top `PQDL_TUNE_TOPK` (default 3, plus the baseline
+//!    default config) on the real machine: each candidate repacks the
+//!    real weights and runs the real dispatch path against deterministic
+//!    probe activations, best-of-3 wall time;
+//! 4. the lowest total time wins and is stored in the [`super::cache`].
+//!
+//! Correctness never depends on the choice: every candidate visits k in
+//! ascending order per output element (see `ops::matmul`), so all 18
+//! configs produce bit-identical outputs — proptested in
+//! `tests/tuner.rs`. Tuning can only move time, never bits.
+
+use super::cache::{self, TuneCache};
+use super::{GemmConfig, TuneMode};
+use crate::ops::matmul::{
+    gemm_i8_packed_a_isa, gemm_i8_packed_par_isa, PackedA, PackedB, GEMM_MR,
+};
+use crate::ops::Isa;
+use crate::parallel::ThreadPool;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Probe batch height (packed-B GEMMs) / im2col column count (packed-A
+/// GEMMs) used for candidate timing: big enough to engage the parallel
+/// split candidates, small enough that an 18-candidate shortlist sweep
+/// stays in the low milliseconds for figure-scale models.
+pub const TUNE_PROBE_ROWS: usize = 64;
+/// Timed repetitions per candidate; the minimum is kept (standard
+/// best-of-N to reject scheduler noise).
+pub const TUNE_PROBE_REPS: usize = 3;
+
+/// Which side of the GEMM the plan pre-packed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// Weights are the B operand (`[k, out]`), activations stream as A —
+    /// the FC / MatMulInteger shape.
+    PackedBGemm,
+    /// Weights are the A operand (`[out, k]`), im2col patches stream as
+    /// B — the conv shape.
+    PackedAGemm,
+}
+
+/// One GEMM a compiled plan will run in steady state: the real widened
+/// weight matrix plus its shape. Borrowed from the kernel that owns it —
+/// tuning measures the exact panels serving will use.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmProblem<'a> {
+    /// Widened (zero-point-folded) weights; layout per `kind`.
+    pub w: &'a [i32],
+    /// Reduction length.
+    pub k: usize,
+    /// Output features (B columns or A rows).
+    pub out: usize,
+    pub kind: ProblemKind,
+}
+
+impl GemmProblem<'_> {
+    /// Cache-key shape token, e.g. `b64x32` / `a27x8`.
+    fn shape_token(&self) -> String {
+        let tag = match self.kind {
+            ProblemKind::PackedBGemm => 'b',
+            ProblemKind::PackedAGemm => 'a',
+        };
+        format!("{tag}{}x{}", self.k, self.out)
+    }
+}
+
+/// Where a plan's tuned config came from (surfaced via `plan_stats()`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneSource {
+    /// No tuning ran (mode off, cache miss in `cached` mode, or nothing
+    /// to tune): the historical constants.
+    Default,
+    /// A prior measurement for the same (digest, shapes, ISA, nthreads).
+    CacheHit,
+    /// Measured in this process.
+    Measured,
+}
+
+impl TuneSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneSource::Default => "default",
+            TuneSource::CacheHit => "cache-hit",
+            TuneSource::Measured => "measured",
+        }
+    }
+}
+
+/// The tuner's verdict for one plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneOutcome {
+    pub cfg: GemmConfig,
+    pub source: TuneSource,
+}
+
+impl TuneOutcome {
+    pub const DEFAULT: TuneOutcome = TuneOutcome {
+        cfg: GemmConfig::DEFAULT,
+        source: TuneSource::Default,
+    };
+}
+
+/// Sorted shape tokens for the cache key — sorted so kernel iteration
+/// order (which follows plan step order) cannot perturb the key.
+pub fn shape_key(problems: &[GemmProblem]) -> Vec<String> {
+    let mut v: Vec<String> = problems.iter().map(|p| p.shape_token()).collect();
+    v.sort();
+    v
+}
+
+fn topk() -> usize {
+    static TOPK: OnceLock<usize> = OnceLock::new();
+    *TOPK.get_or_init(|| {
+        std::env::var("PQDL_TUNE_TOPK")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or(3)
+    })
+}
+
+/// Tune against the process-global cache (the `Session::new` path).
+pub fn tune_gemms(
+    digest: u64,
+    problems: &[GemmProblem],
+    isa: Isa,
+    nthreads: usize,
+    mode: TuneMode,
+) -> TuneOutcome {
+    tune_gemms_with(TuneCache::global(), digest, problems, isa, nthreads, mode)
+}
+
+/// Tune against an explicit cache (tests construct their own so they
+/// never race on the global store or the environment).
+pub fn tune_gemms_with(
+    cache: &TuneCache,
+    digest: u64,
+    problems: &[GemmProblem],
+    isa: Isa,
+    nthreads: usize,
+    mode: TuneMode,
+) -> TuneOutcome {
+    if mode == TuneMode::Off || problems.is_empty() {
+        return TuneOutcome::DEFAULT;
+    }
+    let key = cache::key_line(digest, &shape_key(problems), isa, nthreads);
+    if let Some(cfg) = cache.lookup(&key) {
+        return TuneOutcome {
+            cfg,
+            source: TuneSource::CacheHit,
+        };
+    }
+    if mode == TuneMode::Cached {
+        return TuneOutcome::DEFAULT;
+    }
+    // Full mode, cache miss: measure, remember, count (the CI cache-hit
+    // smoke asserts this counter stays flat on the second compile).
+    cache::count_measurement();
+    let cfg = measure_best(problems, isa).unwrap_or(GemmConfig::DEFAULT);
+    cache.store(&key, cfg);
+    TuneOutcome {
+        cfg,
+        source: TuneSource::Measured,
+    }
+}
+
+/// Cost-model seed for one candidate over the whole problem set: ranks
+/// without timing anything, so only a shortlist is ever measured.
+fn seed_cost(cfg: &GemmConfig, problems: &[GemmProblem]) -> u64 {
+    problems
+        .iter()
+        .map(|p| {
+            let (m, n) = match p.kind {
+                ProblemKind::PackedBGemm => (TUNE_PROBE_ROWS, p.out),
+                ProblemKind::PackedAGemm => (p.out, TUNE_PROBE_ROWS),
+            };
+            crate::hwsim::cost::gemm_tile_estimate(GEMM_MR, cfg.nr, cfg.kc, m, p.k, n)
+        })
+        .sum()
+}
+
+/// Deterministic i8 probe activations (LCG; tuning must not depend on a
+/// random source, or the winner would be irreproducible).
+fn probe_i8(len: usize, seed: u64) -> Vec<i8> {
+    let mut s = seed | 1;
+    (0..len)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) & 0xff) as u8 as i8
+        })
+        .collect()
+}
+
+/// Best-of-[`TUNE_PROBE_REPS`] wall time of one candidate over every
+/// problem, through the exact dispatch path serving uses. `None` when a
+/// problem's weights refuse to pack (out of i8 range) — the caller keeps
+/// the default config, same as the plan compiler would.
+fn measure_candidate(cfg: GemmConfig, problems: &[GemmProblem], isa: Isa) -> Option<u64> {
+    let pool = ThreadPool::global();
+    let mut total = 0u64;
+    for (idx, p) in problems.iter().enumerate() {
+        let seed = 0x9e37_79b9_7f4a_7c15 ^ (idx as u64);
+        let mut best = u64::MAX;
+        match p.kind {
+            ProblemKind::PackedBGemm => {
+                let bp = PackedB::pack_with(p.w, p.k, p.out, cfg)?;
+                let a = probe_i8(TUNE_PROBE_ROWS * p.k, seed);
+                let mut c = vec![0i32; TUNE_PROBE_ROWS * p.out];
+                // One untimed warmup rep per problem (page faults, branch
+                // history), then timed reps.
+                gemm_i8_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c);
+                for _ in 0..TUNE_PROBE_REPS {
+                    let t = Instant::now();
+                    gemm_i8_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c);
+                    best = best.min(t.elapsed().as_nanos() as u64);
+                }
+            }
+            ProblemKind::PackedAGemm => {
+                let ap = PackedA::pack_with(p.w, p.out, p.k, cfg)?;
+                let b = probe_i8(p.k * TUNE_PROBE_ROWS, seed);
+                let mut c = vec![0i32; p.out * TUNE_PROBE_ROWS];
+                gemm_i8_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c);
+                for _ in 0..TUNE_PROBE_REPS {
+                    let t = Instant::now();
+                    gemm_i8_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c);
+                    best = best.min(t.elapsed().as_nanos() as u64);
+                }
+            }
+        }
+        total = total.saturating_add(best);
+    }
+    Some(total)
+}
+
+/// Rank the candidate space by cost model, time the shortlist (top
+/// `PQDL_TUNE_TOPK` + the default), return the fastest.
+fn measure_best(problems: &[GemmProblem], isa: Isa) -> Option<GemmConfig> {
+    let mut ranked: Vec<(u64, GemmConfig)> = GemmConfig::candidates()
+        .into_iter()
+        .map(|c| (seed_cost(&c, problems), c))
+        .collect();
+    ranked.sort_by_key(|&(s, _)| s);
+    let mut shortlist: Vec<GemmConfig> =
+        ranked.iter().take(topk()).map(|&(_, c)| c).collect();
+    // The incumbent always competes: "tuned" may legitimately mean
+    // "keep the hand-picked constants".
+    if !shortlist.contains(&GemmConfig::DEFAULT) {
+        shortlist.push(GemmConfig::DEFAULT);
+    }
+    let mut best: Option<(u64, GemmConfig)> = None;
+    for cfg in shortlist {
+        let ns = measure_candidate(cfg, problems, isa)?;
+        if best.map_or(true, |(b, _)| ns < b) {
+            best = Some((ns, cfg));
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_problems() -> (Vec<i32>, Vec<i32>) {
+        let bw: Vec<i32> = (0..12 * 10).map(|i| ((i * 7) % 31) - 15).collect();
+        let aw: Vec<i32> = (0..6 * 9).map(|i| ((i * 5) % 23) - 11).collect();
+        (bw, aw)
+    }
+
+    #[test]
+    fn shape_key_is_order_independent() {
+        let (bw, aw) = toy_problems();
+        let p1 = GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm };
+        let p2 = GemmProblem { w: &aw, k: 9, out: 6, kind: ProblemKind::PackedAGemm };
+        assert_eq!(shape_key(&[p1, p2]), shape_key(&[p2, p1]));
+        assert_eq!(shape_key(&[p1, p2]), vec!["a9x6".to_string(), "b12x10".to_string()]);
+    }
+
+    #[test]
+    fn off_and_empty_return_default_without_touching_the_cache() {
+        let cache = TuneCache::new(None);
+        let (bw, _) = toy_problems();
+        let p = GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm };
+        let out = tune_gemms_with(&cache, 1, &[p], Isa::Scalar, 1, TuneMode::Off);
+        assert_eq!(out, TuneOutcome::DEFAULT);
+        let out = tune_gemms_with(&cache, 1, &[], Isa::Scalar, 1, TuneMode::Full);
+        assert_eq!(out, TuneOutcome::DEFAULT);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn cached_mode_never_measures_and_full_mode_populates() {
+        let cache = TuneCache::new(None);
+        let (bw, aw) = toy_problems();
+        let ps = [
+            GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm },
+            GemmProblem { w: &aw, k: 9, out: 6, kind: ProblemKind::PackedAGemm },
+        ];
+        // Cold cache in `cached` mode: default, nothing stored.
+        let out = tune_gemms_with(&cache, 42, &ps, Isa::Scalar, 2, TuneMode::Cached);
+        assert_eq!(out.source, TuneSource::Default);
+        assert!(cache.is_empty());
+        // `full` measures and stores a winner from the candidate space.
+        let out = tune_gemms_with(&cache, 42, &ps, Isa::Scalar, 2, TuneMode::Full);
+        assert_eq!(out.source, TuneSource::Measured);
+        assert!(GemmConfig::candidates().contains(&out.cfg));
+        assert_eq!(cache.len(), 1);
+        // Same key now hits — in `cached` AND `full` mode.
+        for mode in [TuneMode::Cached, TuneMode::Full] {
+            let hit = tune_gemms_with(&cache, 42, &ps, Isa::Scalar, 2, mode);
+            assert_eq!(hit.source, TuneSource::CacheHit);
+            assert_eq!(hit.cfg, out.cfg);
+        }
+        // Perturb any key component: miss again.
+        let miss = tune_gemms_with(&cache, 43, &ps, Isa::Scalar, 2, TuneMode::Cached);
+        assert_eq!(miss.source, TuneSource::Default);
+        let miss = tune_gemms_with(&cache, 42, &ps, Isa::Scalar, 3, TuneMode::Cached);
+        assert_eq!(miss.source, TuneSource::Default);
+    }
+
+    #[test]
+    fn unpackable_weights_fall_back_to_default_config() {
+        let cache = TuneCache::new(None);
+        let bw = vec![1000i32; 8 * 8]; // out of i8 range: pack refuses
+        let p = GemmProblem { w: &bw, k: 8, out: 8, kind: ProblemKind::PackedBGemm };
+        let out = tune_gemms_with(&cache, 7, &[p], Isa::Scalar, 1, TuneMode::Full);
+        assert_eq!(out.cfg, GemmConfig::DEFAULT);
+        assert_eq!(out.source, TuneSource::Measured);
+        // The fallback is remembered too — no repeated futile measuring.
+        let hit = tune_gemms_with(&cache, 7, &[p], Isa::Scalar, 1, TuneMode::Full);
+        assert_eq!(hit.source, TuneSource::CacheHit);
+    }
+}
