@@ -8,6 +8,7 @@ use super::validate::InputSpec;
 use crate::hwsim::{CostReport, HwConfig, HwModule};
 use crate::interp::Session;
 use crate::onnx::Model;
+use crate::parallel::lock_recover;
 use crate::runtime::PjrtService;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
@@ -17,6 +18,15 @@ use std::sync::{Arc, Mutex};
 pub trait Backend: Send + Sync {
     fn name(&self) -> &str;
     /// Execute a batch (axis 0 = batch).
+    ///
+    /// The serving worker treats this call as untrusted: an `Err` is a
+    /// typed per-batch failure, and a PANIC is caught (`catch_unwind`),
+    /// answered as `ServeError::BackendPanic`, and isolated to the one
+    /// batch — implementations therefore need not uphold any
+    /// cross-batch invariant across a panic, but any internal locks
+    /// should recover from poisoning (see
+    /// [`crate::parallel::lock_recover`]) since a panicking call CAN
+    /// leave them poisoned for the next batch.
     fn run_batch(&self, input: &Tensor) -> Result<Tensor>;
 
     /// A cheap per-replica handle over the SAME compiled state, owning
@@ -130,7 +140,7 @@ impl HwSimBackend {
 
     /// Total accumulated cost across all served batches.
     pub fn total_cost(&self) -> CostReport {
-        self.total_cost.lock().unwrap().clone()
+        lock_recover(&self.total_cost).clone()
     }
 }
 
@@ -141,7 +151,7 @@ impl Backend for HwSimBackend {
 
     fn run_batch(&self, input: &Tensor) -> Result<Tensor> {
         let (out, cost) = self.module.run(input).map_err(|e| anyhow!("{e}"))?;
-        self.total_cost.lock().unwrap().add(&cost);
+        lock_recover(&self.total_cost).add(&cost);
         Ok(out)
     }
 

@@ -1,0 +1,277 @@
+//! Per-lane circuit breaker.
+//!
+//! When a lane's backend fails batch after batch (a wedged simulator, a
+//! miscompiled kernel, an accelerator that lost its device), continuing
+//! to queue traffic into it only converts every request into a slow
+//! failure after `max_wait` + an exec attempt. The breaker converts
+//! that into a *fast*, typed failure at admission time
+//! (`RejectReason::CircuitOpen`), then probes the backend with a
+//! trickle of real traffic before re-opening the floodgates.
+//!
+//! Classic three-state machine (Nygard, *Release It!*):
+//!
+//! ```text
+//!          K consecutive failed batches
+//!   Closed ───────────────────────────▶ Open ⟲ (sheds, cooldown)
+//!     ▲                                  │ cooldown elapsed,
+//!     │ probe batch succeeds             │ next admit becomes a probe
+//!     └──────────── HalfOpen ◀───────────┘
+//!                      │ probe batch fails → back to Open (fresh cooldown)
+//! ```
+//!
+//! The struct is **pure state**: every transition takes `now: Instant`
+//! as a parameter and nothing inside reads the clock, so unit tests
+//! drive the full cycle deterministically with synthetic instants. The
+//! coordinator stores it behind a tiny `Mutex` in `Lane` (uncontended:
+//! admission and batch-completion touch it for nanoseconds) and calls:
+//!
+//! * [`CircuitBreaker::admit`] from `submit()` after spec validation —
+//!   `false` means shed with `CircuitOpen`;
+//! * [`CircuitBreaker::on_batch`] from `replica_worker` after each
+//!   batch with its success/failure fate.
+//!
+//! A batch fails for breaker purposes when `run_batch` returns an error
+//! or panics — a lane-level "backend is sick" signal. Per-request sheds
+//! (queue full, deadline) never count: those are load problems, and the
+//! breaker must not open under load the controller should absorb.
+
+use std::time::{Duration, Instant};
+
+/// Breaker tuning knobs (`ServerConfig::breaker`; `None` disables the
+/// breaker entirely — the default, preserving pre-fault behavior).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failed batches that trip Closed → Open.
+    pub failures_to_open: u32,
+    /// How long Open sheds before allowing half-open probes.
+    pub cooldown: Duration,
+    /// Requests admitted as probes while HalfOpen (further admits shed
+    /// until a probe batch reports back).
+    pub half_open_probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            failures_to_open: 5,
+            cooldown: Duration::from_millis(250),
+            half_open_probes: 2,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: admitting everything, counting consecutive failures.
+    Closed,
+    /// Tripped: shedding everything until the cooldown deadline.
+    Open,
+    /// Probing: a bounded number of requests admitted; their batch fate
+    /// decides Closed (success) or Open again (failure).
+    HalfOpen,
+}
+
+#[derive(Debug)]
+enum State {
+    Closed { consecutive_failures: u32 },
+    Open { until: Instant },
+    HalfOpen { admitted: u32 },
+}
+
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: State,
+    /// Lifetime Closed/HalfOpen→Open transitions (metrics surface this).
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: State::Closed {
+                consecutive_failures: 0,
+            },
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match self.state {
+            State::Closed { .. } => BreakerState::Closed,
+            State::Open { .. } => BreakerState::Open,
+            State::HalfOpen { .. } => BreakerState::HalfOpen,
+        }
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Admission check for one request. `true` ⇒ let it into the queue;
+    /// `false` ⇒ shed with `RejectReason::CircuitOpen`. Transitions
+    /// Open → HalfOpen when the cooldown has elapsed (the admitted
+    /// request IS the first probe).
+    pub fn admit(&mut self, now: Instant) -> bool {
+        match &mut self.state {
+            State::Closed { .. } => true,
+            State::Open { until } => {
+                if now < *until {
+                    false
+                } else {
+                    self.state = State::HalfOpen { admitted: 1 };
+                    true
+                }
+            }
+            State::HalfOpen { admitted } => {
+                if *admitted < self.cfg.half_open_probes {
+                    *admitted += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record the fate of one executed batch (`ok = false` for an exec
+    /// error or a caught panic). Returns `true` when this call tripped
+    /// the breaker open (the caller records a metrics event). Late
+    /// results arriving while Open — a probe batch from a previous
+    /// half-open round, an in-flight batch from before the trip — are
+    /// ignored rather than extending or resetting the cooldown.
+    pub fn on_batch(&mut self, ok: bool, now: Instant) -> bool {
+        match &mut self.state {
+            State::Closed {
+                consecutive_failures,
+            } => {
+                if ok {
+                    *consecutive_failures = 0;
+                    false
+                } else {
+                    *consecutive_failures += 1;
+                    if *consecutive_failures >= self.cfg.failures_to_open {
+                        self.trip(now);
+                        true
+                    } else {
+                        false
+                    }
+                }
+            }
+            State::Open { .. } => false,
+            State::HalfOpen { .. } => {
+                if ok {
+                    self.state = State::Closed {
+                        consecutive_failures: 0,
+                    };
+                    false
+                } else {
+                    self.trip(now);
+                    true
+                }
+            }
+        }
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.trips += 1;
+        self.state = State::Open {
+            until: now + self.cfg.cooldown,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BreakerConfig {
+        BreakerConfig {
+            failures_to_open: 3,
+            cooldown: Duration::from_millis(100),
+            half_open_probes: 2,
+        }
+    }
+
+    #[test]
+    fn full_cycle_closed_open_half_open_closed() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(cfg());
+        assert_eq!(b.state(), BreakerState::Closed);
+
+        // Two failures: still closed, still admitting.
+        assert!(!b.on_batch(false, t0));
+        assert!(!b.on_batch(false, t0));
+        assert!(b.admit(t0));
+        // Third consecutive failure trips it.
+        assert!(b.on_batch(false, t0));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+
+        // Sheds for the whole cooldown.
+        assert!(!b.admit(t0));
+        assert!(!b.admit(t0 + Duration::from_millis(99)));
+
+        // Cooldown over: first admit becomes probe #1 (HalfOpen).
+        let t1 = t0 + Duration::from_millis(101);
+        assert!(b.admit(t1));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // Probe #2 admitted, #3 shed (probe cap).
+        assert!(b.admit(t1));
+        assert!(!b.admit(t1));
+
+        // Probe batch succeeds: closed again, admitting freely.
+        assert!(!b.on_batch(true, t1));
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit(t1));
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_cooldown() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(cfg());
+        for _ in 0..3 {
+            b.on_batch(false, t0);
+        }
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(b.admit(t1)); // half-open probe
+        assert!(b.on_batch(false, t1)); // probe fails → trips again
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        // The cooldown restarts from t1, not t0.
+        assert!(!b.admit(t1 + Duration::from_millis(99)));
+        assert!(b.admit(t1 + Duration::from_millis(101)));
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_failure_count() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(cfg());
+        // failure, failure, success, failure, failure … never reaches 3.
+        for _ in 0..4 {
+            assert!(!b.on_batch(false, t0));
+            assert!(!b.on_batch(false, t0));
+            assert!(!b.on_batch(true, t0));
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn late_results_while_open_are_ignored() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(cfg());
+        for _ in 0..3 {
+            b.on_batch(false, t0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // In-flight batches from before the trip report in: no state
+        // change, no extra trips, cooldown deadline untouched.
+        assert!(!b.on_batch(true, t0 + Duration::from_millis(50)));
+        assert!(!b.on_batch(false, t0 + Duration::from_millis(60)));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        assert!(b.admit(t0 + Duration::from_millis(101)));
+    }
+}

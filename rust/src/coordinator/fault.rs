@@ -1,0 +1,339 @@
+//! Deterministic fault injection for the serving layer.
+//!
+//! Production co-design treats the backend as the *untrusted* half of
+//! the stack: kernels panic, simulators reject inputs, accelerator
+//! calls hang. This module makes those failures a first-class, fully
+//! reproducible test input: [`FaultInjectingBackend`] wraps any real
+//! [`Backend`] and injects panics / errors / delays / replica aborts
+//! according to a [`FaultPlan`] — a schedule keyed by the lane-global
+//! **call counter**, never by wall clock or OS randomness, so the same
+//! plan replays the same fault sequence on every run (modulo which
+//! replica thread happens to pick up which call, which is exactly the
+//! nondeterminism the chaos tests are meant to range over).
+//!
+//! The fault fates map onto the serving taxonomy one-to-one:
+//!
+//! | injected                 | observed by the client                     |
+//! |--------------------------|--------------------------------------------|
+//! | [`FaultKind::Error`]     | `ServeError::Exec` (typed execution error) |
+//! | [`FaultKind::Panic`]     | `ServeError::BackendPanic` (isolated)      |
+//! | [`FaultKind::Abort`]     | `ServeError::BackendPanic`, then the replica
+//! |                          | thread exits (supervisor territory)        |
+//! | [`FaultKind::Delay`]     | a normal answer, late (deadline/breaker    |
+//! |                          | territory)                                 |
+//!
+//! Used by `tests/fault_injection.rs` (the chaos suite, armed in CI by
+//! the `fault-injection` job via `PQDL_CHAOS=full`) and the fault
+//! extension of the batch-transparency property in `server.rs`.
+
+use super::backend::Backend;
+use super::validate::InputSpec;
+use crate::tensor::Tensor;
+use crate::train::Rng;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What a scheduled fault does to the wrapped `run_batch` call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return an error (surfaces as `ServeError::Exec`).
+    Error,
+    /// Panic with a string payload (surfaces as
+    /// `ServeError::BackendPanic`; the serving worker survives).
+    Panic,
+    /// Panic with the [`ReplicaAbort`] marker payload: the serving
+    /// worker answers the whole batch `BackendPanic`, then exits its
+    /// thread — the deterministic stand-in for a replica whose thread is
+    /// lost (what the supervisor's restart budget exists for).
+    Abort,
+    /// Sleep [`FaultPlan::delay`], then execute normally (exercises
+    /// deadline shedding and breaker half-open timing).
+    Delay,
+}
+
+/// Marker panic payload for [`FaultKind::Abort`]. The serving worker
+/// downcasts caught panic payloads against this type; a match means
+/// "answer the batch, then recycle this replica thread".
+pub struct ReplicaAbort;
+
+/// Best-effort human-readable text of a caught panic payload (the
+/// standard `&str` / `String` payloads `panic!` produces; anything else
+/// is summarized, never dropped).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if payload.is::<ReplicaAbort>() {
+        "replica aborted (injected)".to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A deterministic fault schedule over the lane-global call counter.
+///
+/// Two layers, both wall-clock-free:
+///
+/// * **explicit**: [`FaultPlan::at`] pins a fault to one exact call
+///   index — unit tests script precise sequences with it;
+/// * **seeded**: [`FaultPlan::seeded`] derives a per-call decision by
+///   hashing (seed, call index) through SplitMix64, so an arbitrarily
+///   long run has a fixed fault pattern at a configured rate — chaos
+///   tests sweep seeds, not sleep timings.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Fault probability numerator per 1000 calls (0 = seeded layer off).
+    rate_per_mille: u64,
+    /// Kinds the seeded layer draws from (uniformly).
+    kinds: Vec<FaultKind>,
+    /// Explicit call-index pins, consulted before the seeded layer.
+    at: Vec<(u64, FaultKind)>,
+    /// Sleep injected by [`FaultKind::Delay`].
+    pub delay: Duration,
+}
+
+impl FaultPlan {
+    /// The empty plan: never faults (the wrapper becomes transparent).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            rate_per_mille: 0,
+            kinds: Vec::new(),
+            at: Vec::new(),
+            delay: Duration::from_millis(1),
+        }
+    }
+
+    /// A seeded random schedule: each call faults with probability
+    /// `rate_per_mille`/1000, drawing uniformly from `kinds`.
+    pub fn seeded(seed: u64, rate_per_mille: u64, kinds: &[FaultKind]) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rate_per_mille: rate_per_mille.min(1000),
+            kinds: kinds.to_vec(),
+            at: Vec::new(),
+            delay: Duration::from_millis(1),
+        }
+    }
+
+    /// Pin `kind` to exactly call `call` (0-based; overrides the seeded
+    /// layer for that call).
+    pub fn at(mut self, call: u64, kind: FaultKind) -> FaultPlan {
+        self.at.push((call, kind));
+        self
+    }
+
+    /// Set the sleep injected by [`FaultKind::Delay`].
+    pub fn with_delay(mut self, delay: Duration) -> FaultPlan {
+        self.delay = delay;
+        self
+    }
+
+    /// The fault scheduled for call index `call`, if any. Pure: same
+    /// plan + same index ⇒ same answer, on every thread, forever.
+    pub fn fault_for(&self, call: u64) -> Option<FaultKind> {
+        if let Some(&(_, kind)) = self.at.iter().find(|&&(c, _)| c == call) {
+            return Some(kind);
+        }
+        if self.rate_per_mille == 0 || self.kinds.is_empty() {
+            return None;
+        }
+        // Key the PRNG on (seed, call) so the decision for call N never
+        // depends on how many other calls ran first — replica counts and
+        // interleavings change WHO hits the fault, never WHERE it is.
+        let mut rng = Rng::new(self.seed ^ call.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if rng.next_u64() % 1000 < self.rate_per_mille {
+            Some(self.kinds[rng.below(self.kinds.len())])
+        } else {
+            None
+        }
+    }
+}
+
+/// Injection counters, shared across every replica of the wrapped lane
+/// (tests assert against them; `total_injected` covers all kinds).
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// Calls observed (faulted or not) — the schedule cursor.
+    pub calls: AtomicU64,
+    pub errors: AtomicU64,
+    pub panics: AtomicU64,
+    pub aborts: AtomicU64,
+    pub delays: AtomicU64,
+}
+
+impl FaultCounters {
+    pub fn total_injected(&self) -> u64 {
+        self.errors.load(Ordering::SeqCst)
+            + self.panics.load(Ordering::SeqCst)
+            + self.aborts.load(Ordering::SeqCst)
+            + self.delays.load(Ordering::SeqCst)
+    }
+}
+
+/// A [`Backend`] decorator executing a [`FaultPlan`]. Forked replicas
+/// share one call counter and one plan, so the schedule is **lane**-
+/// global: "call #7 panics" holds no matter which replica serves it.
+pub struct FaultInjectingBackend {
+    inner: Arc<dyn Backend>,
+    plan: Arc<FaultPlan>,
+    counters: Arc<FaultCounters>,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(inner: Arc<dyn Backend>, plan: FaultPlan) -> FaultInjectingBackend {
+        FaultInjectingBackend {
+            inner,
+            plan: Arc::new(plan),
+            counters: Arc::new(FaultCounters::default()),
+        }
+    }
+
+    /// The shared injection counters (one instance per lane).
+    pub fn counters(&self) -> Arc<FaultCounters> {
+        self.counters.clone()
+    }
+}
+
+impl Backend for FaultInjectingBackend {
+    fn name(&self) -> &str {
+        "fault-inject"
+    }
+
+    fn run_batch(&self, input: &Tensor) -> Result<Tensor> {
+        let call = self.counters.calls.fetch_add(1, Ordering::SeqCst);
+        match self.plan.fault_for(call) {
+            None => self.inner.run_batch(input),
+            Some(FaultKind::Error) => {
+                self.counters.errors.fetch_add(1, Ordering::SeqCst);
+                bail!("injected error at call {call}")
+            }
+            Some(FaultKind::Panic) => {
+                self.counters.panics.fetch_add(1, Ordering::SeqCst);
+                panic!("injected panic at call {call}")
+            }
+            Some(FaultKind::Abort) => {
+                self.counters.aborts.fetch_add(1, Ordering::SeqCst);
+                std::panic::panic_any(ReplicaAbort)
+            }
+            Some(FaultKind::Delay) => {
+                self.counters.delays.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(self.plan.delay);
+                self.inner.run_batch(input)
+            }
+        }
+    }
+
+    fn fork_replica(&self) -> Option<Arc<dyn Backend>> {
+        // Replicas fork the inner backend as usual but SHARE the plan,
+        // counter, and counters — the schedule stays lane-global.
+        let inner = self
+            .inner
+            .fork_replica()
+            .unwrap_or_else(|| self.inner.clone());
+        Some(Arc::new(FaultInjectingBackend {
+            inner,
+            plan: self.plan.clone(),
+            counters: self.counters.clone(),
+        }))
+    }
+
+    fn input_spec(&self) -> Option<InputSpec> {
+        self.inner.input_spec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::InterpBackend;
+    use crate::figures::Figure;
+
+    #[test]
+    fn schedule_is_deterministic_and_counter_keyed() {
+        let plan = FaultPlan::seeded(0xFA17, 250, &[FaultKind::Error, FaultKind::Panic]);
+        let a: Vec<Option<FaultKind>> = (0..512).map(|c| plan.fault_for(c)).collect();
+        let b: Vec<Option<FaultKind>> = (0..512).map(|c| plan.fault_for(c)).collect();
+        assert_eq!(a, b, "same plan must replay the same schedule");
+        let hits = a.iter().filter(|f| f.is_some()).count();
+        // ~25% of 512 with generous slack: the rate is real, not 0 or 1.
+        assert!((60..200).contains(&hits), "got {hits} faults");
+        // A different seed is a different schedule.
+        let other = FaultPlan::seeded(0xBEEF, 250, &[FaultKind::Error, FaultKind::Panic]);
+        let c: Vec<Option<FaultKind>> = (0..512).map(|n| other.fault_for(n)).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn explicit_pins_override_the_seeded_layer() {
+        let plan = FaultPlan::none()
+            .at(3, FaultKind::Panic)
+            .at(5, FaultKind::Error);
+        assert_eq!(plan.fault_for(0), None);
+        assert_eq!(plan.fault_for(3), Some(FaultKind::Panic));
+        assert_eq!(plan.fault_for(5), Some(FaultKind::Error));
+        assert_eq!(plan.fault_for(6), None);
+        // Rate 1000 faults every call; a pin still wins on its index.
+        let always = FaultPlan::seeded(9, 1000, &[FaultKind::Error]).at(2, FaultKind::Panic);
+        assert_eq!(always.fault_for(2), Some(FaultKind::Panic));
+        for c in [0u64, 1, 3, 4, 100] {
+            assert_eq!(always.fault_for(c), Some(FaultKind::Error));
+        }
+    }
+
+    #[test]
+    fn wrapper_is_transparent_without_faults_and_injects_with() {
+        let fig = Figure::Fig1FcTwoMul;
+        let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+        let clean = FaultInjectingBackend::new(inner.clone(), FaultPlan::none());
+        let x = fig.input(2, 7);
+        assert_eq!(
+            clean.run_batch(&x).unwrap(),
+            inner.run_batch(&x).unwrap(),
+            "no-fault wrapper must be bit-transparent"
+        );
+        assert!(clean.input_spec().is_some());
+
+        let faulty =
+            FaultInjectingBackend::new(inner.clone(), FaultPlan::none().at(0, FaultKind::Error));
+        let counters = faulty.counters();
+        let err = faulty.run_batch(&x).unwrap_err();
+        assert!(err.to_string().contains("injected error at call 0"));
+        // Call 1 is clean again — faults are per-call, not sticky.
+        assert_eq!(faulty.run_batch(&x).unwrap(), inner.run_batch(&x).unwrap());
+        assert_eq!(counters.calls.load(Ordering::SeqCst), 2);
+        assert_eq!(counters.errors.load(Ordering::SeqCst), 1);
+        assert_eq!(counters.total_injected(), 1);
+    }
+
+    #[test]
+    fn forked_replicas_share_the_schedule_cursor() {
+        let fig = Figure::Fig1FcTwoMul;
+        let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+        let be = FaultInjectingBackend::new(inner, FaultPlan::none().at(1, FaultKind::Error));
+        let counters = be.counters();
+        let replica = be.fork_replica().expect("wrapper forks");
+        let x = fig.input(1, 1);
+        // Call 0 through the root, call 1 through the REPLICA: the
+        // replica consumes the shared cursor and hits the pinned fault.
+        be.run_batch(&x).unwrap();
+        assert!(replica.run_batch(&x).is_err());
+        assert_eq!(counters.calls.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn panic_messages_extract_standard_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("plain str")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "plain str");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 42)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "formatted 42");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(ReplicaAbort)).unwrap_err();
+        assert!(panic_message(p.as_ref()).contains("replica aborted"));
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(17u32)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+}

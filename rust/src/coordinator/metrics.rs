@@ -1,7 +1,12 @@
 //! Serving metrics: request counters, latency histograms, batch-size
-//! accounting. Lock-guarded (std-thread coordinator; contention is a
-//! few atomics per request, far off the hot path of the actual math).
+//! accounting, and fault/supervision event counters. Lock-guarded
+//! (std-thread coordinator; contention is a few atomics per request,
+//! far off the hot path of the actual math). All locks go through
+//! [`crate::parallel::lock_recover`]: metrics must stay observable
+//! *especially* while replicas are panicking, which is exactly when a
+//! poisoning `lock().unwrap()` would take the whole store down.
 
+use crate::parallel::lock_recover;
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -84,6 +89,38 @@ pub enum ShedKind {
     QueueFull,
     DeadlineExceeded,
     InvalidInput,
+    /// The lane's circuit breaker was open (backend failing, shedding
+    /// fast instead of queueing into a sick lane).
+    CircuitOpen,
+}
+
+/// How one executed batch ended — every fused request in it shares this
+/// fate (batch transparency holds for failures too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchFate {
+    /// `run_batch` returned `Ok` and the split matched the fused rows.
+    Success,
+    /// `run_batch` returned a typed error (`ServeError::Exec`).
+    Error,
+    /// `run_batch` (or concat/split) panicked and was isolated
+    /// (`ServeError::BackendPanic`).
+    Panic,
+}
+
+/// Supervision/fault events — rare, lane-level occurrences counted
+/// separately from the per-request flow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// The supervisor respawned a dead replica worker.
+    ReplicaRestart,
+    /// The supervisor flagged a live-but-silent replica (heartbeat
+    /// older than the configured timeout; likely wedged in a backend
+    /// call it cannot be forced out of).
+    ReplicaWedged,
+    /// A replica slot ran out of restart budget and was abandoned.
+    RestartBudgetExhausted,
+    /// The lane's circuit breaker tripped open.
+    BreakerOpen,
 }
 
 /// Per-model serving statistics.
@@ -99,7 +136,10 @@ pub struct ModelStats {
     /// here — see the `shed_*` counters).
     pub requests: u64,
     pub batches: u64,
+    /// Requests answered with a typed execution error.
     pub errors: u64,
+    /// Requests answered `BackendPanic` (isolated backend panics).
+    pub panics: u64,
     /// Sum over batches of fused request counts.
     pub batch_requests_sum: u64,
     /// Sum over batches of fused row counts (axis-0 extents).
@@ -110,6 +150,16 @@ pub struct ModelStats {
     pub shed_deadline: u64,
     /// Admission-rejected: dtype/rank/dims failed the lane's `InputSpec`.
     pub shed_invalid: u64,
+    /// Admission-shed: the lane's circuit breaker was open.
+    pub shed_circuit: u64,
+    /// Replica workers respawned by the supervisor.
+    pub restarts: u64,
+    /// Wedged-replica detections (heartbeat silence past the timeout).
+    pub wedged: u64,
+    /// Circuit-breaker trips (Closed/HalfOpen → Open transitions).
+    pub breaker_opens: u64,
+    /// Replica slots abandoned after exhausting their restart budget.
+    pub restart_budget_exhausted: u64,
     pub queue: LatencyHist,
     pub exec: LatencyHist,
     pub e2e: LatencyHist,
@@ -136,7 +186,7 @@ impl ModelStats {
 
     /// Total requests shed without execution, all causes.
     pub fn shed_total(&self) -> u64 {
-        self.shed_queue_full + self.shed_deadline + self.shed_invalid
+        self.shed_queue_full + self.shed_deadline + self.shed_invalid + self.shed_circuit
     }
 
     /// Shed fraction of everything submitted (shed + executed).
@@ -158,7 +208,7 @@ pub struct Metrics {
 
 impl Metrics {
     /// Record one executed batch: `requests` fused requests spanning
-    /// `rows` axis-0 rows.
+    /// `rows` axis-0 rows, all sharing `fate`.
     pub fn record_batch(
         &self,
         model: &str,
@@ -166,16 +216,18 @@ impl Metrics {
         rows: usize,
         queue_times: &[Duration],
         exec: Duration,
-        errored: bool,
+        fate: BatchFate,
     ) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_recover(&self.inner);
         let s = m.entry(model.to_string()).or_default();
         s.requests += requests as u64;
         s.batches += 1;
         s.batch_requests_sum += requests as u64;
         s.batch_rows_sum += rows as u64;
-        if errored {
-            s.errors += requests as u64;
+        match fate {
+            BatchFate::Success => {}
+            BatchFate::Error => s.errors += requests as u64,
+            BatchFate::Panic => s.panics += requests as u64,
         }
         for &q in queue_times {
             s.queue.record(q);
@@ -186,21 +238,34 @@ impl Metrics {
 
     /// Record one request shed without execution.
     pub fn record_shed(&self, model: &str, kind: ShedKind) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_recover(&self.inner);
         let s = m.entry(model.to_string()).or_default();
         match kind {
             ShedKind::QueueFull => s.shed_queue_full += 1,
             ShedKind::DeadlineExceeded => s.shed_deadline += 1,
             ShedKind::InvalidInput => s.shed_invalid += 1,
+            ShedKind::CircuitOpen => s.shed_circuit += 1,
+        }
+    }
+
+    /// Record one lane-level fault/supervision event.
+    pub fn record_fault_event(&self, model: &str, event: FaultEvent) {
+        let mut m = lock_recover(&self.inner);
+        let s = m.entry(model.to_string()).or_default();
+        match event {
+            FaultEvent::ReplicaRestart => s.restarts += 1,
+            FaultEvent::ReplicaWedged => s.wedged += 1,
+            FaultEvent::RestartBudgetExhausted => s.restart_budget_exhausted += 1,
+            FaultEvent::BreakerOpen => s.breaker_opens += 1,
         }
     }
 
     pub fn snapshot(&self, model: &str) -> Option<ModelStats> {
-        self.inner.lock().unwrap().get(model).cloned()
+        lock_recover(&self.inner).get(model).cloned()
     }
 
     pub fn models(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.inner.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = lock_recover(&self.inner).keys().cloned().collect();
         v.sort();
         v
     }
@@ -212,17 +277,19 @@ impl Metrics {
             if let Some(s) = self.snapshot(&model) {
                 out.push_str(&format!(
                     "{model}: {} reqs in {} batches (mean {:.2} reqs / {:.2} rows per batch, \
-                     {} errors, shed {}: {} queue-full / {} deadline / {} invalid)\n  \
+                     {} errors, {} panics, shed {}: {} queue-full / {} deadline / {} invalid / {} circuit)\n  \
                      e2e p50 {}us p95 {}us p99 {}us max {}us | exec mean {:.0}us | queue mean {:.0}us\n",
                     s.requests,
                     s.batches,
                     s.mean_batch(),
                     s.mean_rows(),
                     s.errors,
+                    s.panics,
                     s.shed_total(),
                     s.shed_queue_full,
                     s.shed_deadline,
                     s.shed_invalid,
+                    s.shed_circuit,
                     s.e2e.quantile_us(0.5),
                     s.e2e.quantile_us(0.95),
                     s.e2e.quantile_us(0.99),
@@ -230,6 +297,12 @@ impl Metrics {
                     s.exec.mean_us(),
                     s.queue.mean_us(),
                 ));
+                if s.restarts + s.wedged + s.breaker_opens + s.restart_budget_exhausted > 0 {
+                    out.push_str(&format!(
+                        "  faults: {} restarts / {} wedged / {} breaker-opens / {} budget-exhausted\n",
+                        s.restarts, s.wedged, s.breaker_opens, s.restart_budget_exhausted,
+                    ));
+                }
             }
         }
         out
@@ -262,7 +335,7 @@ mod tests {
             4,
             &[Duration::from_micros(5); 4],
             Duration::from_micros(100),
-            false,
+            BatchFate::Success,
         );
         m.record_batch(
             "fig1",
@@ -270,7 +343,7 @@ mod tests {
             7,
             &[Duration::from_micros(5); 2],
             Duration::from_micros(80),
-            false,
+            BatchFate::Success,
         );
         let s = m.snapshot("fig1").unwrap();
         assert_eq!(s.requests, 6);
@@ -287,20 +360,86 @@ mod tests {
         m.record_shed("fig1", ShedKind::QueueFull);
         m.record_shed("fig1", ShedKind::DeadlineExceeded);
         m.record_shed("fig1", ShedKind::InvalidInput);
+        m.record_shed("fig1", ShedKind::CircuitOpen);
         m.record_batch(
             "fig1",
             1,
             1,
             &[Duration::from_micros(5)],
             Duration::from_micros(10),
-            false,
+            BatchFate::Success,
         );
         let s = m.snapshot("fig1").unwrap();
         assert_eq!(s.shed_queue_full, 2);
         assert_eq!(s.shed_deadline, 1);
         assert_eq!(s.shed_invalid, 1);
-        assert_eq!(s.shed_total(), 4);
-        assert_eq!(s.shed_rate(), 0.8);
-        assert!(m.report().contains("shed 4"));
+        assert_eq!(s.shed_circuit, 1);
+        assert_eq!(s.shed_total(), 5);
+        assert_eq!(s.shed_rate(), 5.0 / 6.0);
+        assert!(m.report().contains("shed 5"));
+    }
+
+    #[test]
+    fn batch_fates_split_error_and_panic_counters() {
+        let m = Metrics::default();
+        let q = [Duration::from_micros(5); 2];
+        m.record_batch("f", 2, 2, &q, Duration::from_micros(10), BatchFate::Error);
+        m.record_batch("f", 2, 2, &q, Duration::from_micros(10), BatchFate::Panic);
+        m.record_batch("f", 2, 2, &q, Duration::from_micros(10), BatchFate::Success);
+        let s = m.snapshot("f").unwrap();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.errors, 2);
+        assert_eq!(s.panics, 2);
+        assert!(m.report().contains("2 panics"));
+    }
+
+    #[test]
+    fn fault_events_accumulate() {
+        let m = Metrics::default();
+        m.record_fault_event("f", FaultEvent::ReplicaRestart);
+        m.record_fault_event("f", FaultEvent::ReplicaRestart);
+        m.record_fault_event("f", FaultEvent::ReplicaWedged);
+        m.record_fault_event("f", FaultEvent::BreakerOpen);
+        m.record_fault_event("f", FaultEvent::RestartBudgetExhausted);
+        let s = m.snapshot("f").unwrap();
+        assert_eq!(s.restarts, 2);
+        assert_eq!(s.wedged, 1);
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.restart_budget_exhausted, 1);
+        assert!(m.report().contains("2 restarts"));
+    }
+
+    /// Regression for the pre-fault-tolerance cascade: a thread
+    /// panicking while holding the metrics lock used to poison it, and
+    /// every later `record_*`/`snapshot` — i.e. every request on every
+    /// lane — would then panic in `lock().unwrap()`. With
+    /// `lock_recover` the store survives and keeps counting.
+    #[test]
+    fn metrics_survive_a_poisoned_lock() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let m = Metrics::default();
+        m.record_shed("f", ShedKind::QueueFull);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = m.inner.lock().unwrap();
+            panic!("die holding the metrics lock");
+        }));
+        assert!(m.inner.is_poisoned(), "setup must actually poison");
+        // Every entry point still works on the poisoned mutex.
+        m.record_shed("f", ShedKind::QueueFull);
+        m.record_batch(
+            "f",
+            1,
+            1,
+            &[Duration::from_micros(1)],
+            Duration::from_micros(1),
+            BatchFate::Success,
+        );
+        m.record_fault_event("f", FaultEvent::BreakerOpen);
+        let s = m.snapshot("f").unwrap();
+        assert_eq!(s.shed_queue_full, 2);
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.breaker_opens, 1);
+        assert!(!m.models().is_empty());
+        assert!(!m.report().is_empty());
     }
 }

@@ -12,8 +12,18 @@
 //! hwsim / PJRT artifacts), serving metrics ([`metrics`]) and the
 //! cross-backend narrow-margins validation service plus the per-lane
 //! admission contract ([`validate`]).
+//!
+//! Fault tolerance rides through the same layers: backend panics are
+//! unwind-isolated into typed `BackendPanic` responses, every lock
+//! recovers from poisoning, a per-lane circuit breaker ([`breaker`])
+//! sheds fast while a backend is sick, heartbeat supervision respawns
+//! dead replicas under a restart budget, and a deterministic
+//! fault-injection harness ([`fault`]) drives all of it in tests
+//! without wall-clock randomness.
 
 pub mod backend;
+pub mod breaker;
+pub mod fault;
 pub mod metrics;
 pub mod server;
 pub mod validate;
@@ -22,9 +32,11 @@ pub use backend::{
     concat_batch, concat_batch_owned, pad_batch, slice_batch, split_batch, Backend, HwSimBackend,
     InterpBackend, PjrtBackend,
 };
-pub use metrics::{LatencyHist, Metrics, ModelStats, ShedKind};
+pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
+pub use fault::{FaultCounters, FaultInjectingBackend, FaultKind, FaultPlan, ReplicaAbort};
+pub use metrics::{BatchFate, FaultEvent, LatencyHist, Metrics, ModelStats, ShedKind};
 pub use server::{
     default_replicas, Coordinator, CoordinatorBuilder, RejectReason, Response, ServeError,
-    ServerConfig,
+    ServerConfig, SupervisorConfig,
 };
 pub use validate::{validate, InputSpec, ValidationReport, ValidationRow};

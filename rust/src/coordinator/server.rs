@@ -28,14 +28,30 @@
 //! intake, drains every queued request, and joins the replicas;
 //! [`Coordinator::shutdown_now`] is the old hard stop (queued requests
 //! get channel errors).
+//!
+//! Fault tolerance: the fuse/execute/split step is unwind-isolated
+//! (`catch_unwind`), so a panicking kernel answers its batch with a
+//! typed [`ServeError::BackendPanic`] instead of killing the worker;
+//! every coordinator lock goes through
+//! [`crate::parallel::lock_recover`], so no panic can poison `submit`
+//! or sibling replicas; [`ServerConfig::breaker`] adds a per-lane
+//! circuit breaker shedding [`RejectReason::CircuitOpen`] while the
+//! backend is sick; [`ServerConfig::supervisor`] adds heartbeat-based
+//! replica supervision with exponential-backoff respawns (both opt-in,
+//! default off). The deterministic fault-injection harness that drives
+//! all of this in tests lives in [`super::fault`].
 
 use super::backend::{concat_batch, split_batch, Backend};
-use super::metrics::{LatencyHist, Metrics, ModelStats, ShedKind};
+use super::breaker::{BreakerConfig, CircuitBreaker};
+use super::fault::{panic_message, ReplicaAbort};
+use super::metrics::{BatchFate, FaultEvent, LatencyHist, Metrics, ModelStats, ShedKind};
 use super::validate::InputSpec;
+use crate::parallel::{lock_recover, wait_timeout_recover};
 use crate::tensor::Tensor;
 use crate::tune::{Controller, ControllerConfig, LaneObservation};
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -72,6 +88,17 @@ pub struct ServerConfig {
     /// launch point, clamped into the controller's window bounds).
     /// `None` (the default) keeps both fixed at their configured values.
     pub controller: Option<ControllerConfig>,
+    /// Per-lane circuit breaker ([`super::breaker`]): after
+    /// `failures_to_open` consecutive failed batches the lane sheds
+    /// instantly with [`RejectReason::CircuitOpen`] for a cooldown, then
+    /// re-admits a few probe requests before closing again. `None` (the
+    /// default) disables breaking.
+    pub breaker: Option<BreakerConfig>,
+    /// Replica supervision: when set, the lane ticker thread watches
+    /// per-worker heartbeats, counts wedged replicas, and respawns dead
+    /// ones under an exponential-backoff restart budget. `None` (the
+    /// default) leaves worker death permanent (pre-fault behavior).
+    pub supervisor: Option<SupervisorConfig>,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +110,40 @@ impl Default for ServerConfig {
             queue_depth: 256,
             deadline: None,
             controller: None,
+            breaker: None,
+            supervisor: None,
+        }
+    }
+}
+
+/// Supervision knobs ([`ServerConfig::supervisor`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// A live worker silent for longer than this is counted wedged
+    /// (stuck inside a backend call it cannot be forced out of — the
+    /// counter is the operator signal; the breaker keeps traffic away).
+    pub heartbeat_timeout: Duration,
+    /// Restart budget per worker slot; once spent the slot is abandoned
+    /// (and counted in `ModelStats::restart_budget_exhausted`).
+    pub max_restarts: u32,
+    /// The backoff before restart k of a slot is `backoff_base * 2^k`,
+    /// capped at `backoff_cap` — a crash-looping backend must not be
+    /// respawned into at full speed.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Supervision scan period (the lane ticker runs at the smallest of
+    /// this and the controller tick).
+    pub tick: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            heartbeat_timeout: Duration::from_secs(2),
+            max_restarts: 5,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            tick: Duration::from_millis(50),
         }
     }
 }
@@ -109,6 +170,11 @@ pub enum RejectReason {
     /// The tensor failed the lane's [`InputSpec`] (dtype/rank/dims); the
     /// payload says exactly what mismatched.
     InvalidInput(String),
+    /// The lane's circuit breaker was open: the backend failed
+    /// `BreakerConfig::failures_to_open` consecutive batches and the
+    /// cooldown has not elapsed — shedding fast beats queueing into a
+    /// sick lane.
+    CircuitOpen,
 }
 
 impl RejectReason {
@@ -117,6 +183,7 @@ impl RejectReason {
             RejectReason::QueueFull => ShedKind::QueueFull,
             RejectReason::DeadlineExceeded => ShedKind::DeadlineExceeded,
             RejectReason::InvalidInput(_) => ShedKind::InvalidInput,
+            RejectReason::CircuitOpen => ShedKind::CircuitOpen,
         }
     }
 }
@@ -127,6 +194,7 @@ impl std::fmt::Display for RejectReason {
             RejectReason::QueueFull => write!(f, "queue full"),
             RejectReason::DeadlineExceeded => write!(f, "deadline exceeded"),
             RejectReason::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+            RejectReason::CircuitOpen => write!(f, "circuit open"),
         }
     }
 }
@@ -142,6 +210,14 @@ pub enum ServeError {
     Rejected(RejectReason),
     #[error("execution failed: {0}")]
     Exec(String),
+    /// The backend panicked mid-batch; the panic was caught and isolated
+    /// (this worker, its siblings, and every coordinator lock survive).
+    #[error("backend panicked: {0}")]
+    BackendPanic(String),
+    /// The serving worker vanished with the request in flight (hard stop
+    /// mid-queue, or every replica lost with its restart budget spent).
+    #[error("serving worker lost")]
+    WorkerLost,
 }
 
 /// A completed inference (or a typed refusal to perform one).
@@ -235,13 +311,61 @@ impl LaneDynamics {
     }
 }
 
+/// Liveness record for one replica worker slot, shared between the
+/// worker (writer) and the supervisor (reader).
+#[derive(Default)]
+struct WorkerHealth {
+    /// Last heartbeat, as microseconds since `Lane::epoch` (an `Instant`
+    /// cannot live in an atomic; the offset encoding can).
+    heartbeat_us: AtomicU64,
+    /// Flipped false by the worker's [`AliveGuard`] drop — i.e. on ANY
+    /// exit path: normal return, `ReplicaAbort`, or an escaped unwind.
+    alive: AtomicBool,
+}
+
 /// One model lane: the bounded queue its replicas share, plus the
-/// admission contract checked at submit.
+/// admission contract checked at submit and the health/breaker state
+/// the fault-tolerance layer hangs off it.
 struct Lane {
     state: Mutex<LaneState>,
     cv: Condvar,
     spec: Option<InputSpec>,
     dynamics: LaneDynamics,
+    /// Time origin for the heartbeat encoding.
+    epoch: Instant,
+    /// One slot per spawned worker (controller lanes: per ceiling slot).
+    health: Vec<WorkerHealth>,
+    /// Per-lane circuit breaker ([`ServerConfig::breaker`]; `None` =
+    /// off). The mutex is uncontended: admission and batch completion
+    /// each hold it for a few integer compares.
+    breaker: Option<Mutex<CircuitBreaker>>,
+}
+
+impl Lane {
+    /// Record a heartbeat for worker slot `idx` (one atomic store —
+    /// cheap enough for every loop iteration).
+    fn beat(&self, idx: usize) {
+        if let Some(h) = self.health.get(idx) {
+            h.heartbeat_us
+                .store(self.epoch.elapsed().as_micros() as u64, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Flips a worker slot's `alive` flag on ANY thread exit — normal
+/// return, `ReplicaAbort`, or an unwind escaping the worker loop — so
+/// the supervisor sees dead workers without polling thread handles.
+struct AliveGuard {
+    lane: Arc<Lane>,
+    idx: usize,
+}
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        if let Some(h) = self.lane.health.get(self.idx) {
+            h.alive.store(false, Ordering::SeqCst);
+        }
+    }
 }
 
 /// The coordinator: routes requests to per-model replica pools.
@@ -276,8 +400,8 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Spawn the replica pools (and the controller ticker, when one is
-    /// configured) and return the running coordinator.
+    /// Spawn the replica pools (and the lane ticker, when a controller
+    /// or supervisor is configured) and return the running coordinator.
     pub fn start(self) -> Coordinator {
         let metrics = Arc::new(Metrics::default());
         let mut lanes = HashMap::new();
@@ -293,7 +417,8 @@ impl CoordinatorBuilder {
         // With a controller, spawn workers up to its replica ceiling and
         // let the live target (clamped launch count) decide who pulls
         // work — scale-up later is an atomic store, not a thread spawn.
-        let mut ctl_lanes: Vec<(String, Arc<Lane>, Controller)> = Vec::new();
+        let want_ticker = self.config.controller.is_some() || self.config.supervisor.is_some();
+        let mut ticker_lanes: Vec<TickerLane> = Vec::new();
         for (model, backend) in self.backends {
             let (workers, controller) = match self.config.controller {
                 Some(c) => {
@@ -318,6 +443,12 @@ impl CoordinatorBuilder {
                 cv: Condvar::new(),
                 spec: backend.input_spec(),
                 dynamics: LaneDynamics::new(launch.replicas, launch.wait),
+                epoch: Instant::now(),
+                health: (0..workers).map(|_| WorkerHealth::default()).collect(),
+                breaker: self
+                    .config
+                    .breaker
+                    .map(|b| Mutex::new(CircuitBreaker::new(b))),
             });
             for r in 0..workers {
                 // Replica 0 serves through the registered backend; the
@@ -328,29 +459,38 @@ impl CoordinatorBuilder {
                 } else {
                     backend.fork_replica().unwrap_or_else(|| backend.clone())
                 };
-                let lane = lane.clone();
-                let cfg = self.config.clone();
-                let m = metrics.clone();
-                let model_name = model.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("lane-{model}-r{r}"))
-                    .spawn(move || replica_worker(lane, be, cfg, m, model_name, r))
-                    .expect("spawning lane replica");
-                handles.push(handle);
+                handles.push(spawn_replica(
+                    lane.clone(),
+                    be,
+                    self.config.clone(),
+                    metrics.clone(),
+                    model.clone(),
+                    r,
+                ));
             }
-            if let Some(ctl) = controller {
-                ctl_lanes.push((model.clone(), lane.clone(), ctl));
+            if want_ticker {
+                let sup = match self.config.supervisor {
+                    Some(_) => (0..workers).map(|_| SupSlot::default()).collect(),
+                    None => Vec::new(),
+                };
+                ticker_lanes.push(TickerLane {
+                    model: model.clone(),
+                    lane: lane.clone(),
+                    root: backend.clone(),
+                    ctl: controller,
+                    sup,
+                });
             }
             lanes.insert(model, lane);
         }
-        if !ctl_lanes.is_empty() {
+        if !ticker_lanes.is_empty() {
             let m = metrics.clone();
             let stop = ctl_stop.clone();
-            let max_batch = self.config.max_batch;
+            let cfg = self.config.clone();
             let handle = std::thread::Builder::new()
-                .name("lane-controller".into())
-                .spawn(move || controller_ticker(ctl_lanes, m, max_batch, stop))
-                .expect("spawning controller ticker");
+                .name("lane-ticker".into())
+                .spawn(move || lane_ticker(ticker_lanes, m, cfg, stop))
+                .expect("spawning lane ticker");
             handles.push(handle);
         }
         Coordinator {
@@ -371,6 +511,14 @@ impl Coordinator {
     /// requests are answered immediately). `Err` is returned only for an
     /// unknown model or a lane already shut down.
     pub fn submit(&self, model: &str, input: Tensor) -> Result<mpsc::Receiver<Response>> {
+        self.submit_inner(model, input).map(|(_, rx)| rx)
+    }
+
+    fn submit_inner(
+        &self,
+        model: &str,
+        input: Tensor,
+    ) -> Result<(u64, mpsc::Receiver<Response>)> {
         let lane = self
             .lanes
             .get(model)
@@ -378,7 +526,7 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
 
-        let mut st = lane.state.lock().unwrap();
+        let mut st = lock_recover(&lane.state);
         // Liveness first: a shut-down lane refuses EVERY submission the
         // same way, malformed or not.
         if !st.open {
@@ -394,7 +542,19 @@ impl Coordinator {
                 let reason = RejectReason::InvalidInput(msg);
                 self.metrics.record_shed(model, reason.shed_kind());
                 let _ = tx.send(Response::rejected(id, reason, Duration::ZERO));
-                return Ok(rx);
+                return Ok((id, rx));
+            }
+        }
+        // Circuit breaker AFTER validation, so malformed inputs keep
+        // their deterministic InvalidInput classification even while the
+        // lane's backend is mid-outage.
+        if let Some(b) = &lane.breaker {
+            if !lock_recover(b).admit(Instant::now()) {
+                drop(st);
+                let reason = RejectReason::CircuitOpen;
+                self.metrics.record_shed(model, reason.shed_kind());
+                let _ = tx.send(Response::rejected(id, reason, Duration::ZERO));
+                return Ok((id, rx));
             }
         }
         let now = Instant::now();
@@ -415,7 +575,7 @@ impl Coordinator {
             let reason = RejectReason::QueueFull;
             self.metrics.record_shed(model, reason.shed_kind());
             let _ = tx.send(Response::rejected(id, reason, Duration::ZERO));
-            return Ok(rx);
+            return Ok((id, rx));
         }
         st.queue.push_back(Request {
             id,
@@ -427,13 +587,28 @@ impl Coordinator {
         drop(st);
         shed_expired(&mut expired, &self.metrics, model);
         lane.cv.notify_one();
-        Ok(rx)
+        Ok((id, rx))
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit and wait. A worker dying with the request in
+    /// flight (hard stop mid-queue, or every replica lost with its
+    /// restart budget spent) surfaces as a typed
+    /// [`ServeError::WorkerLost`] response — every failure stays inside
+    /// the `ServeError` taxonomy instead of leaking a bare channel
+    /// error.
     pub fn infer(&self, model: &str, input: Tensor) -> Result<Response> {
-        let rx = self.submit(model, input)?;
-        rx.recv().map_err(|_| anyhow!("response channel closed"))
+        let (id, rx) = self.submit_inner(model, input)?;
+        match rx.recv() {
+            Ok(resp) => Ok(resp),
+            Err(_) => Ok(Response {
+                id,
+                output: Err(ServeError::WorkerLost),
+                queue_time: Duration::ZERO,
+                exec_time: Duration::ZERO,
+                batch_requests: 0,
+                batch_rows: 0,
+            }),
+        }
     }
 
     pub fn models(&self) -> Vec<&str> {
@@ -457,11 +632,29 @@ impl Coordinator {
     pub fn shutdown(&self) {
         self.ctl_stop.store(true, Ordering::Relaxed);
         for lane in self.lanes.values() {
-            lane.state.lock().unwrap().open = false;
+            lock_recover(&lane.state).open = false;
             lane.cv.notify_all();
         }
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in lock_recover(&self.handles).drain(..) {
             let _ = h.join();
+        }
+        // Normally the workers drained everything before exiting. The
+        // exception: every replica of a lane died (restart budget spent,
+        // or no supervisor configured) with requests still queued. Those
+        // still get their exactly-one response — a typed WorkerLost.
+        for lane in self.lanes.values() {
+            let leftover: Vec<Request> = lock_recover(&lane.state).queue.drain(..).collect();
+            for req in leftover {
+                let queue_time = req.enqueued.elapsed();
+                let _ = req.resp.send(Response {
+                    id: req.id,
+                    output: Err(ServeError::WorkerLost),
+                    queue_time,
+                    exec_time: Duration::ZERO,
+                    batch_requests: 0,
+                    batch_rows: 0,
+                });
+            }
         }
     }
 
@@ -472,7 +665,7 @@ impl Coordinator {
         self.ctl_stop.store(true, Ordering::Relaxed);
         for lane in self.lanes.values() {
             let dropped: Vec<Request> = {
-                let mut st = lane.state.lock().unwrap();
+                let mut st = lock_recover(&lane.state);
                 st.open = false;
                 st.stop = true;
                 st.queue.drain(..).collect()
@@ -482,7 +675,7 @@ impl Coordinator {
             // senders; pending receivers error out.
             drop(dropped);
         }
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in lock_recover(&self.handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -514,11 +707,34 @@ fn past_deadline(req: &Request, now: Instant) -> bool {
     req.deadline.is_some_and(|d| d <= now)
 }
 
+/// Spawn (or respawn) one replica worker for `lane` slot `idx`, marking
+/// the slot alive and freshly heartbeaten BEFORE the thread runs so the
+/// supervisor never flags a just-spawned worker as dead or stale.
+fn spawn_replica(
+    lane: Arc<Lane>,
+    backend: Arc<dyn Backend>,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+    model: String,
+    idx: usize,
+) -> JoinHandle<()> {
+    if let Some(h) = lane.health.get(idx) {
+        h.heartbeat_us
+            .store(lane.epoch.elapsed().as_micros() as u64, Ordering::SeqCst);
+        h.alive.store(true, Ordering::SeqCst);
+    }
+    std::thread::Builder::new()
+        .name(format!("lane-{model}-r{idx}"))
+        .spawn(move || replica_worker(lane, backend, cfg, metrics, model, idx))
+        .expect("spawning lane replica")
+}
+
 /// One lane replica: pull the batch-opening request, admit more while the
 /// fused ROW count fits `max_batch` (peeked before admission — never
 /// overshooting) and the window is open, execute once over borrowed
-/// inputs, split, respond. Exits when hard-stopped or when intake is
-/// closed and the queue has drained.
+/// inputs, split, respond. Exits when hard-stopped, when intake is
+/// closed and the queue has drained, or when an injected `ReplicaAbort`
+/// recycles the thread (the supervisor's restart path).
 fn replica_worker(
     lane: Arc<Lane>,
     backend: Arc<dyn Backend>,
@@ -527,13 +743,18 @@ fn replica_worker(
     model: String,
     idx: usize,
 ) {
+    let _alive = AliveGuard {
+        lane: lane.clone(),
+        idx,
+    };
     let mut expired: Vec<Request> = Vec::new();
     'serve: loop {
         // -- acquire the batch-opening request ---------------------------
         let first = 'acquire: loop {
             let (req, exit) = {
-                let mut st = lane.state.lock().unwrap();
+                let mut st = lock_recover(&lane.state);
                 loop {
+                    lane.beat(idx);
                     if st.stop {
                         break (None, true);
                     }
@@ -542,11 +763,7 @@ fn replica_worker(
                     // back in. Only while intake is open — every worker
                     // helps drain a graceful shutdown.
                     if st.open && idx >= lane.dynamics.replicas() {
-                        let (guard, _) = lane
-                            .cv
-                            .wait_timeout(st, Duration::from_millis(50))
-                            .unwrap();
-                        st = guard;
+                        st = wait_timeout_recover(&lane.cv, st, Duration::from_millis(50));
                         continue;
                     }
                     let now = Instant::now();
@@ -564,11 +781,7 @@ fn replica_worker(
                         // then come back.
                         break (None, false);
                     }
-                    let (guard, _) = lane
-                        .cv
-                        .wait_timeout(st, Duration::from_millis(50))
-                        .unwrap();
-                    st = guard;
+                    st = wait_timeout_recover(&lane.cv, st, Duration::from_millis(50));
                 }
             };
             shed_expired(&mut expired, &metrics, &model);
@@ -593,7 +806,7 @@ fn replica_worker(
                 break;
             }
             let window = max_wait - elapsed;
-            let mut st = lane.state.lock().unwrap();
+            let mut st = lock_recover(&lane.state);
             // At most ONE wait per lock acquisition: `window` is computed
             // from the batch-open time above, so waiting with it twice
             // (e.g. after a wake that admitted a request) would restart
@@ -631,8 +844,7 @@ fn replica_worker(
                             // with the stale one.
                             continue 'fill;
                         }
-                        let (guard, _) = lane.cv.wait_timeout(st, window).unwrap();
-                        st = guard;
+                        st = wait_timeout_recover(&lane.cv, st, window);
                         waited = true;
                         continue;
                     }
@@ -663,25 +875,45 @@ fn replica_worker(
         lane.cv.notify_one();
 
         // -- fuse (borrowed — no input clones), execute once, split ------
+        // The whole fuse/execute/split is unwind-isolated: a panicking
+        // kernel (or a concat/split invariant violation) must cost this
+        // ONE batch one typed error — not the worker thread, and (before
+        // lock_recover) not every mutex the unwind would have poisoned.
+        lane.beat(idx);
         let exec_start = Instant::now();
         let queue_times: Vec<Duration> = batch
             .iter()
             .map(|r| exec_start.duration_since(r.enqueued))
             .collect();
         let sizes: Vec<usize> = batch.iter().map(|r| rows_of(&r.input)).collect();
-        let result = {
-            let inputs: Vec<&Tensor> = batch.iter().map(|r| &r.input).collect();
-            concat_batch(&inputs).and_then(|fused| {
-                let out = backend.run_batch(&fused)?;
-                split_batch(&out, &sizes)
-            })
-        };
+        let result: std::thread::Result<Result<Vec<Tensor>>> =
+            catch_unwind(AssertUnwindSafe(|| {
+                let inputs: Vec<&Tensor> = batch.iter().map(|r| &r.input).collect();
+                concat_batch(&inputs).and_then(|fused| {
+                    let out = backend.run_batch(&fused)?;
+                    split_batch(&out, &sizes)
+                })
+            }));
         let exec_time = exec_start.elapsed();
+        lane.beat(idx);
         let batch_requests = batch.len();
 
+        let (fate, abort) = match &result {
+            Ok(Ok(_)) => (BatchFate::Success, false),
+            Ok(Err(_)) => (BatchFate::Error, false),
+            Err(p) => (BatchFate::Panic, p.is::<ReplicaAbort>()),
+        };
+        metrics.record_batch(&model, batch_requests, rows, &queue_times, exec_time, fate);
+        // Breaker feedback: exec errors and panics are lane-sickness
+        // signals; a success closes a half-open probe round.
+        if let Some(b) = &lane.breaker {
+            if lock_recover(b).on_batch(fate == BatchFate::Success, Instant::now()) {
+                metrics.record_fault_event(&model, FaultEvent::BreakerOpen);
+            }
+        }
+
         match result {
-            Ok(outputs) => {
-                metrics.record_batch(&model, batch_requests, rows, &queue_times, exec_time, false);
+            Ok(Ok(outputs)) => {
                 for ((req, out), q) in batch.into_iter().zip(outputs).zip(&queue_times) {
                     let _ = req.resp.send(Response {
                         id: req.id,
@@ -693,8 +925,7 @@ fn replica_worker(
                     });
                 }
             }
-            Err(e) => {
-                metrics.record_batch(&model, batch_requests, rows, &queue_times, exec_time, true);
+            Ok(Err(e)) => {
                 let err = ServeError::Exec(e.to_string());
                 for (req, q) in batch.into_iter().zip(&queue_times) {
                     let _ = req.resp.send(Response {
@@ -705,6 +936,26 @@ fn replica_worker(
                         batch_requests,
                         batch_rows: rows,
                     });
+                }
+            }
+            Err(payload) => {
+                let err = ServeError::BackendPanic(panic_message(payload.as_ref()));
+                for (req, q) in batch.into_iter().zip(&queue_times) {
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        output: Err(err.clone()),
+                        queue_time: *q,
+                        exec_time,
+                        batch_requests,
+                        batch_rows: rows,
+                    });
+                }
+                if abort {
+                    // ReplicaAbort: the deterministic stand-in for a lost
+                    // worker thread. Every request in the batch was
+                    // answered; exit (the AliveGuard flips `alive`) and
+                    // let the supervisor respawn this slot.
+                    return;
                 }
             }
         }
@@ -727,8 +978,9 @@ fn tick_observation(prev: &ModelStats, cur: &ModelStats, max_batch: usize) -> La
     let batches = cur.batches.saturating_sub(prev.batches);
     LaneObservation {
         requests: cur.requests.saturating_sub(prev.requests),
-        // Load sheds only: invalid inputs are a client bug no replica
-        // count fixes, so they must not drive scaling.
+        // Load sheds only: invalid inputs are a client bug and circuit
+        // sheds a backend-health problem — neither is fixed by replica
+        // count, so neither may drive scaling.
         shed: (cur.shed_queue_full + cur.shed_deadline)
             .saturating_sub(prev.shed_queue_full + prev.shed_deadline),
         queue_mean_us: interval_mean(&cur.queue, &prev.queue),
@@ -742,27 +994,69 @@ fn tick_observation(prev: &ModelStats, cur: &ModelStats, max_batch: usize) -> La
     }
 }
 
-/// The serving-time feedback loop: every `ControllerConfig::tick`, diff
-/// each lane's metrics since the previous tick, step its [`Controller`],
-/// and publish the decision into the lane's [`LaneDynamics`]. Parked
-/// workers are woken on scale-up; scale-down needs no wake (active
-/// workers re-check the target before every batch). All convergence
-/// logic (deadband, hysteresis, bounds) lives in the pure controller —
-/// this thread only moves data.
-fn controller_ticker(
-    mut ctl_lanes: Vec<(String, Arc<Lane>, Controller)>,
+/// Per-worker supervision bookkeeping, local to the ticker thread (the
+/// shared state is the `WorkerHealth` atomics in [`Lane`]).
+#[derive(Default)]
+struct SupSlot {
+    restarts: u32,
+    /// Pending respawn deadline (exponential backoff from the restart
+    /// count); `None` while the slot is healthy.
+    respawn_at: Option<Instant>,
+    /// Budget spent: the slot is abandoned (counted once).
+    exhausted: bool,
+    /// Wedged already counted for the CURRENT silence; reset when the
+    /// heartbeat recovers so each wedge counts once.
+    wedged_flagged: bool,
+}
+
+/// One lane's ticker context: controller and/or supervisor state plus
+/// the root backend respawned replicas fork from.
+struct TickerLane {
+    model: String,
+    lane: Arc<Lane>,
+    /// The lane's registered backend. Respawns fork FRESH from it — the
+    /// dead replica's backend state is suspect by definition.
+    root: Arc<dyn Backend>,
+    ctl: Option<Controller>,
+    /// One slot per spawned worker; empty when no supervisor is
+    /// configured.
+    sup: Vec<SupSlot>,
+}
+
+/// The lane maintenance loop, one thread per coordinator: every tick it
+/// (a) steps each lane's [`Controller`] on the metrics delta since the
+/// previous tick and publishes the decision into [`LaneDynamics`]
+/// (parked workers are woken on scale-up; scale-down needs no wake —
+/// active workers re-check the target before every batch), and (b) runs
+/// [`supervise_lane`] when a [`SupervisorConfig`] is set. All
+/// convergence logic (deadband, hysteresis, bounds) lives in the pure
+/// controller; all breaker logic in the pure breaker — this thread only
+/// moves data and (re)spawns threads.
+fn lane_ticker(
+    mut lanes: Vec<TickerLane>,
     metrics: Arc<Metrics>,
-    max_batch: usize,
+    cfg: ServerConfig,
     stop: Arc<AtomicBool>,
 ) {
-    let mut prev: Vec<ModelStats> = ctl_lanes.iter().map(|_| ModelStats::default()).collect();
+    let mut prev: Vec<ModelStats> = lanes.iter().map(|_| ModelStats::default()).collect();
+    // Respawned worker handles live here (the originals live in
+    // `Coordinator::handles`) and are joined when the ticker exits:
+    // shutdown joins the ticker, the ticker joins its respawns, so
+    // every thread is joined exactly once.
+    let mut respawned: Vec<JoinHandle<()>> = Vec::new();
+    let tick = {
+        let mut t = Duration::from_millis(100);
+        if let Some(c) = lanes.iter().find_map(|l| l.ctl.as_ref()) {
+            t = t.min(c.config().tick);
+        }
+        if let Some(s) = cfg.supervisor {
+            t = t.min(s.tick);
+        }
+        t
+    };
     'tick: loop {
         // Sleep the tick in small slices so shutdown join never waits a
         // whole period.
-        let tick = ctl_lanes
-            .first()
-            .map(|(_, _, c)| c.config().tick)
-            .unwrap_or(Duration::from_millis(100));
         let mut slept = Duration::ZERO;
         while slept < tick {
             if stop.load(Ordering::Relaxed) {
@@ -772,22 +1066,107 @@ fn controller_ticker(
             std::thread::sleep(slice);
             slept += slice;
         }
-        for ((model, lane, ctl), prev_stats) in ctl_lanes.iter_mut().zip(prev.iter_mut()) {
-            let cur = metrics.snapshot(model).unwrap_or_default();
-            let obs = tick_observation(prev_stats, &cur, max_batch);
-            *prev_stats = cur;
-            let was = lane.dynamics.replicas();
-            let d = ctl.step(&obs);
-            lane.dynamics
-                .wait_us
-                .store(d.wait.as_micros() as u64, Ordering::Relaxed);
-            lane.dynamics
-                .target_replicas
-                .store(d.replicas, Ordering::Relaxed);
-            if d.replicas > was {
-                // Wake parked workers now instead of on their next poll.
-                lane.cv.notify_all();
+        for (tl, prev_stats) in lanes.iter_mut().zip(prev.iter_mut()) {
+            if let Some(ctl) = tl.ctl.as_mut() {
+                let cur = metrics.snapshot(&tl.model).unwrap_or_default();
+                let obs = tick_observation(prev_stats, &cur, cfg.max_batch);
+                *prev_stats = cur;
+                let was = tl.lane.dynamics.replicas();
+                let d = ctl.step(&obs);
+                tl.lane
+                    .dynamics
+                    .wait_us
+                    .store(d.wait.as_micros() as u64, Ordering::Relaxed);
+                tl.lane
+                    .dynamics
+                    .target_replicas
+                    .store(d.replicas, Ordering::Relaxed);
+                if d.replicas > was {
+                    // Wake parked workers now instead of on their next poll.
+                    tl.lane.cv.notify_all();
+                }
             }
+            if let Some(sup) = cfg.supervisor {
+                supervise_lane(tl, &sup, &cfg, &metrics, &mut respawned);
+            }
+        }
+    }
+    for h in respawned {
+        let _ = h.join();
+    }
+}
+
+/// One supervision pass over a lane's worker slots: count wedged
+/// replicas, respawn dead ones under the exponential-backoff restart
+/// budget, abandon slots whose budget is spent.
+fn supervise_lane(
+    tl: &mut TickerLane,
+    sup: &SupervisorConfig,
+    cfg: &ServerConfig,
+    metrics: &Arc<Metrics>,
+    respawned: &mut Vec<JoinHandle<()>>,
+) {
+    // A closing lane respawns nothing: its workers exiting IS the
+    // shutdown, not a failure.
+    if !lock_recover(&tl.lane.state).open {
+        return;
+    }
+    let now = Instant::now();
+    let now_us = tl.lane.epoch.elapsed().as_micros() as u64;
+    let timeout_us = sup.heartbeat_timeout.as_micros() as u64;
+    for (idx, slot) in tl.sup.iter_mut().enumerate() {
+        if slot.exhausted {
+            continue;
+        }
+        let health = &tl.lane.health[idx];
+        if health.alive.load(Ordering::SeqCst) {
+            slot.respawn_at = None;
+            // Alive but silent past the timeout: wedged, most likely
+            // stuck inside a backend call that std threads give us no
+            // safe way to interrupt. The counter is the operator signal;
+            // the circuit breaker keeps traffic away from the lane.
+            let age_us = now_us.saturating_sub(health.heartbeat_us.load(Ordering::SeqCst));
+            if age_us > timeout_us {
+                if !slot.wedged_flagged {
+                    slot.wedged_flagged = true;
+                    metrics.record_fault_event(&tl.model, FaultEvent::ReplicaWedged);
+                }
+            } else {
+                slot.wedged_flagged = false;
+            }
+            continue;
+        }
+        // Dead: its AliveGuard dropped. (Parked-above-target workers are
+        // alive and never reach this arm.)
+        match slot.respawn_at {
+            None => {
+                if slot.restarts >= sup.max_restarts {
+                    slot.exhausted = true;
+                    metrics.record_fault_event(&tl.model, FaultEvent::RestartBudgetExhausted);
+                    continue;
+                }
+                let shift = slot.restarts.min(16);
+                let backoff = sup
+                    .backoff_base
+                    .saturating_mul(1u32 << shift)
+                    .min(sup.backoff_cap);
+                slot.respawn_at = Some(now + backoff);
+            }
+            Some(at) if now >= at => {
+                slot.respawn_at = None;
+                slot.restarts += 1;
+                metrics.record_fault_event(&tl.model, FaultEvent::ReplicaRestart);
+                let be = tl.root.fork_replica().unwrap_or_else(|| tl.root.clone());
+                respawned.push(spawn_replica(
+                    tl.lane.clone(),
+                    be,
+                    cfg.clone(),
+                    metrics.clone(),
+                    tl.model.clone(),
+                    idx,
+                ));
+            }
+            Some(_) => {}
         }
     }
 }
@@ -796,6 +1175,7 @@ fn controller_ticker(
 mod tests {
     use super::*;
     use crate::coordinator::backend::InterpBackend;
+    use crate::coordinator::fault::{FaultInjectingBackend, FaultKind, FaultPlan};
     use crate::figures::Figure;
     use crate::interp::Session;
 
@@ -836,6 +1216,8 @@ mod tests {
             queue_depth: 1024,
             deadline: None,
             controller: None,
+            breaker: None,
+            supervisor: None,
         }
     }
 
@@ -1354,7 +1736,7 @@ mod tests {
             8,
             &[Duration::from_micros(100); 4],
             Duration::from_micros(400),
-            false,
+            BatchFate::Success,
         );
         let first = m.snapshot("lane").unwrap();
         let obs = tick_observation(&ModelStats::default(), &first, 8);
@@ -1371,7 +1753,7 @@ mod tests {
             2,
             &[Duration::from_micros(300); 2],
             Duration::from_micros(600),
-            false,
+            BatchFate::Success,
         );
         m.record_shed("lane", ShedKind::QueueFull);
         m.record_shed("lane", ShedKind::InvalidInput);
@@ -1472,5 +1854,261 @@ mod tests {
         let want = &sess.run(&[("x", x)]).unwrap()[0];
         assert_eq!(&resp.output.unwrap(), want);
         coord.shutdown();
+    }
+
+    #[test]
+    fn backend_panic_is_isolated_and_typed() {
+        let fig = Figure::Fig1FcTwoMul;
+        let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+        let coord = coordinator_with(
+            config(8, 1, 1),
+            Arc::new(FaultInjectingBackend::new(
+                inner,
+                FaultPlan::none().at(0, FaultKind::Panic),
+            )),
+        );
+        // Call 0 panics: the request gets a typed BackendPanic...
+        let resp = coord.infer("fig1_fc", fig.input(1, 1)).unwrap();
+        match resp.output {
+            Err(ServeError::BackendPanic(msg)) => {
+                assert!(msg.contains("injected panic at call 0"), "msg: {msg}")
+            }
+            other => panic!("expected BackendPanic, got {other:?}"),
+        }
+        // ...and the SAME worker keeps serving: call 1 is clean.
+        let sess = Session::new(fig.model()).unwrap();
+        let x = fig.input(1, 2);
+        let resp = coord.infer("fig1_fc", x.clone()).unwrap();
+        let want = &sess.run(&[("x", x)]).unwrap()[0];
+        assert_eq!(&resp.output.unwrap(), want);
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        assert_eq!(stats.panics, 1);
+        assert_eq!(stats.errors, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn panic_never_poisons_submit_or_siblings() {
+        // Regression for the pre-fault cascade: one panicking replica
+        // used to unwind through the worker, poisoning the lane and
+        // metrics mutexes, which turned every later submit() and every
+        // sibling replica into a `lock().unwrap()` panic of its own.
+        let fig = Figure::Fig1FcTwoMul;
+        let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+        let coord = coordinator_with(
+            config(1, 1, 3),
+            Arc::new(FaultInjectingBackend::new(
+                inner,
+                FaultPlan::none()
+                    .at(0, FaultKind::Panic)
+                    .at(1, FaultKind::Panic),
+            )),
+        );
+        let sess = Session::new(fig.model()).unwrap();
+        let mut panics = 0;
+        let mut oks = 0;
+        // Sequential infers: call index == request index, so exactly the
+        // two pinned calls panic, and every request AFTER a panic proves
+        // submit() and the (shared-lane) sibling replicas still work.
+        for i in 0..24u64 {
+            let x = fig.input(1, i);
+            let resp = coord.infer("fig1_fc", x.clone()).unwrap();
+            match resp.output {
+                Ok(out) => {
+                    let want = &sess.run(&[("x", x)]).unwrap()[0];
+                    assert_eq!(&out, want);
+                    oks += 1;
+                }
+                Err(ServeError::BackendPanic(_)) => panics += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(panics, 2, "exactly the two pinned calls panic");
+        assert_eq!(oks, 22);
+        // Metrics survived the panics and account for every request.
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        assert_eq!(stats.requests, 24);
+        assert_eq!(stats.panics, 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn worker_lost_is_typed_on_infer() {
+        let fig = Figure::Fig1FcTwoMul;
+        let coord = Arc::new(coordinator_with(
+            config(1, 1, 1),
+            Arc::new(SlowBackend::new(fig, 150)),
+        ));
+        // Occupy the replica, then park a second request in the queue.
+        let _busy = coord.submit("fig1_fc", fig.input(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let waiter = {
+            let coord = coord.clone();
+            std::thread::spawn(move || {
+                let fig = Figure::Fig1FcTwoMul;
+                coord.infer("fig1_fc", fig.input(1, 2)).unwrap()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        // The hard stop drops the queued request — its response sender
+        // is gone. infer must surface that as a typed WorkerLost
+        // response, not a bare channel error.
+        coord.shutdown_now();
+        let resp = waiter.join().unwrap();
+        assert_eq!(resp.output, Err(ServeError::WorkerLost));
+        assert_eq!(resp.batch_requests, 0);
+    }
+
+    #[test]
+    fn circuit_breaker_opens_and_sheds_fast() {
+        let fig = Figure::Fig1FcTwoMul;
+        let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+        let mut cfg = config(8, 1, 1);
+        cfg.breaker = Some(BreakerConfig {
+            failures_to_open: 2,
+            cooldown: Duration::from_secs(30),
+            half_open_probes: 1,
+        });
+        let coord = coordinator_with(
+            cfg,
+            Arc::new(FaultInjectingBackend::new(
+                inner,
+                // Every call fails: the lane is genuinely sick.
+                FaultPlan::seeded(1, 1000, &[FaultKind::Error]),
+            )),
+        );
+        // Two consecutive failed batches trip the breaker...
+        for i in 0..2u64 {
+            let resp = coord.infer("fig1_fc", fig.input(1, i)).unwrap();
+            assert!(matches!(resp.output, Err(ServeError::Exec(_))));
+        }
+        // ...after which submissions shed instantly, without queueing
+        // into the sick lane.
+        let t0 = Instant::now();
+        let resp = coord
+            .submit("fig1_fc", fig.input(1, 9))
+            .unwrap()
+            .recv_timeout(Duration::from_millis(100))
+            .expect("circuit shed must be immediate");
+        assert!(matches!(
+            resp.reject_reason(),
+            Some(RejectReason::CircuitOpen)
+        ));
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        assert_eq!(stats.breaker_opens, 1);
+        assert!(stats.shed_circuit >= 1);
+        // Malformed inputs keep their InvalidInput classification even
+        // while the breaker is open (validation precedes admission).
+        let bad = Tensor::from_i8(&[1, 63], vec![0; 63]).unwrap();
+        let resp = coord.submit("fig1_fc", bad).unwrap().recv().unwrap();
+        assert!(matches!(
+            resp.reject_reason(),
+            Some(RejectReason::InvalidInput(_))
+        ));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batch_transparency_property_under_faults() {
+        // The transparency property must survive an adversarial backend:
+        // with errors, panics, and delays injected at seeded schedule
+        // points, every submission still gets EXACTLY one response,
+        // malformed inputs keep their typed rejection, surviving outputs
+        // stay bit-identical to direct Session runs, and every failure
+        // is a typed Exec/BackendPanic — never a hang, a missing
+        // response, or a poisoned coordinator.
+        use crate::proptest_util::{run_prop, Gen};
+        struct Plan;
+        impl Gen for Plan {
+            /// (seed, rows) per request; rows == 0 encodes a malformed
+            /// submission (wrong feature dim).
+            type Value = Vec<(u64, usize)>;
+            fn generate(&self, rng: &mut crate::train::Rng) -> Vec<(u64, usize)> {
+                let n = 1 + rng.below(12);
+                (0..n)
+                    .map(|_| (rng.next_u64() % 1000, rng.below(4)))
+                    .collect()
+            }
+            fn shrink(&self, v: &Vec<(u64, usize)>) -> Vec<Vec<(u64, usize)>> {
+                if v.len() > 1 {
+                    vec![v[..v.len() / 2].to_vec()]
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+        let fig = Figure::Fig1FcTwoMul;
+        let sess = Session::new(fig.model()).unwrap();
+        for replicas in [1usize, 3] {
+            let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+            // ~20% of calls fault, split across all three kinds.
+            let plan = FaultPlan::seeded(
+                0xC4A05 + replicas as u64,
+                200,
+                &[FaultKind::Error, FaultKind::Panic, FaultKind::Delay],
+            );
+            let coord = coordinator_with(
+                config(4, 1, replicas),
+                Arc::new(FaultInjectingBackend::new(inner, plan)),
+            );
+            run_prop(
+                &format!("transparency_under_faults_r{replicas}"),
+                &Plan,
+                11 + replicas as u64,
+                15,
+                |reqs| {
+                    let rxs: Vec<_> = reqs
+                        .iter()
+                        .map(|&(s, rows)| {
+                            let x = if rows == 0 {
+                                Tensor::from_i8(&[1, 63], vec![0; 63]).unwrap()
+                            } else {
+                                fig.input(rows, s)
+                            };
+                            coord.submit("fig1_fc", x).unwrap()
+                        })
+                        .collect();
+                    for (&(s, rows), rx) in reqs.iter().zip(rxs) {
+                        let resp = rx
+                            .recv_timeout(Duration::from_secs(10))
+                            .map_err(|e| format!("seed {s}: no response ({e})"))?;
+                        if rows == 0 {
+                            // Malformed inputs are classified BEFORE any
+                            // fault can touch them.
+                            match resp.reject_reason() {
+                                Some(RejectReason::InvalidInput(_)) => {}
+                                other => {
+                                    return Err(format!(
+                                        "malformed: expected InvalidInput, got {other:?}"
+                                    ))
+                                }
+                            }
+                        } else {
+                            match resp.output {
+                                Ok(got) => {
+                                    let want =
+                                        &sess.run(&[("x", fig.input(rows, s))]).unwrap()[0];
+                                    if &got != want {
+                                        return Err(format!("seed {s}: output mismatch"));
+                                    }
+                                }
+                                Err(ServeError::Exec(ref m)) if m.contains("injected") => {}
+                                Err(ServeError::BackendPanic(_)) => {}
+                                Err(ref e) => {
+                                    return Err(format!("seed {s}: unexpected fate {e}"))
+                                }
+                            }
+                        }
+                        if rx.try_recv().is_ok() {
+                            return Err(format!("seed {s}: more than one response"));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+            // The chaos never breaks the graceful-drain contract.
+            coord.shutdown();
+        }
     }
 }

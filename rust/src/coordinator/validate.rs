@@ -19,7 +19,11 @@ use std::sync::Arc;
 /// time by [`Coordinator::submit`](super::Coordinator::submit), BEFORE a
 /// request can be fused with others: one bad request then costs only
 /// itself a typed `InvalidInput` rejection, never a co-batched
-/// neighbor's answer.
+/// neighbor's answer. The spec check also runs BEFORE the lane's
+/// circuit-breaker admission gate, so a malformed request keeps its
+/// deterministic `InvalidInput` classification even while the lane's
+/// backend is mid-outage and everything else is shed `CircuitOpen` —
+/// the fault-injection chaos tests rely on that ordering.
 #[derive(Clone, Debug)]
 pub struct InputSpec {
     pub dtype: DType,

@@ -22,9 +22,49 @@
 use std::cell::Cell;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+// --- poison-free locking ---------------------------------------------------
+
+/// Lock a mutex, recovering from poisoning instead of propagating it.
+///
+/// Every `Mutex` in this pool and in the serving coordinator guards data
+/// that stays structurally valid across a panic — counters, queues of
+/// owned requests, pure state machines. A panicking holder can leave such
+/// data *stale* (a heartbeat not yet stored, a batch claimed but not yet
+/// answered) but never torn, because every guarded update is a single
+/// assignment or a collection operation with no multi-step invariant
+/// spanning a potential panic site. Under that contract poisoning is pure
+/// collateral damage: honoring it would let one crashed worker cascade
+/// into every thread that later touches the lock (the pre-fault-tolerance
+/// failure mode where a dying replica could take `Coordinator::submit`
+/// down with it). The original panic still surfaces on the thread that
+/// panicked — only the *secondary* poison panic is suppressed.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] under the [`lock_recover`] poison contract.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`] under the [`lock_recover`] poison contract.
+/// The timeout flag is dropped — every caller re-checks its condition
+/// under the reacquired lock anyway.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
 
 thread_local! {
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
@@ -86,7 +126,7 @@ impl ThreadPool {
                     IN_POOL_WORKER.with(|f| f.set(true));
                     loop {
                         // Hold the lock only while receiving, not while running.
-                        let job = match rx.lock().unwrap().recv() {
+                        let job = match lock_recover(&rx).recv() {
                             Ok(job) => job,
                             Err(_) => return, // all senders dropped
                         };
@@ -119,7 +159,9 @@ impl ThreadPool {
     /// finished (this wait is what makes handing `'scope` borrows to
     /// `'static` workers sound). The last task runs inline on the calling
     /// thread so the caller is never idle. Panics in tasks are caught on the
-    /// workers and re-raised here once all tasks have settled.
+    /// workers and re-raised here once all tasks have settled — with the
+    /// ORIGINAL payload (the first one captured), so the root cause is
+    /// never masked behind a generic wrapper message.
     ///
     /// When called from a pool worker (nested parallelism) every task runs
     /// inline, guaranteeing forward progress.
@@ -136,13 +178,16 @@ impl ThreadPool {
 
         struct Barrier {
             remaining: AtomicUsize,
-            panicked: AtomicBool,
+            /// First panic payload captured from a pool task; re-raised by
+            /// the caller so the original panic (message, location-carrying
+            /// payload, typed `panic_any` value) survives the pool hop.
+            payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
             lock: Mutex<()>,
             cv: Condvar,
         }
         let barrier = Arc::new(Barrier {
             remaining: AtomicUsize::new(tasks.len() - 1),
-            panicked: AtomicBool::new(false),
+            payload: Mutex::new(None),
             lock: Mutex::new(()),
             cv: Condvar::new(),
         });
@@ -162,27 +207,34 @@ impl ThreadPool {
             };
             let b = barrier.clone();
             let job: Job = Box::new(move || {
-                if panic::catch_unwind(AssertUnwindSafe(task)).is_err() {
-                    b.panicked.store(true, Ordering::SeqCst);
+                if let Err(p) = panic::catch_unwind(AssertUnwindSafe(task)) {
+                    let mut slot = lock_recover(&b.payload);
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
                 }
                 if b.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
-                    let _guard = b.lock.lock().unwrap();
+                    let _guard = lock_recover(&b.lock);
                     b.cv.notify_all();
                 }
             });
             tx.send(job).expect("pool workers are down");
         }
 
-        let inline_panic = panic::catch_unwind(AssertUnwindSafe(inline)).is_err();
+        let inline_payload = panic::catch_unwind(AssertUnwindSafe(inline)).err();
 
-        let mut guard = barrier.lock.lock().unwrap();
+        let mut guard = lock_recover(&barrier.lock);
         while barrier.remaining.load(Ordering::SeqCst) != 0 {
-            guard = barrier.cv.wait(guard).unwrap();
+            guard = wait_recover(&barrier.cv, guard);
         }
         drop(guard);
 
-        if inline_panic || barrier.panicked.load(Ordering::SeqCst) {
-            panic!("parallel task panicked");
+        // Resume with the original payload — first worker panic wins, the
+        // inline task's as fallback. (The old behavior, a fresh
+        // `panic!("parallel task panicked")`, discarded the root cause.)
+        let worker_payload = lock_recover(&barrier.payload).take();
+        if let Some(p) = worker_payload.or(inline_payload) {
+            panic::resume_unwind(p);
         }
     }
 }
@@ -420,6 +472,57 @@ mod tests {
             .collect();
         pool.run_scoped(tasks);
         assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn task_panic_payload_is_preserved() {
+        // Regression: the pool used to re-raise worker panics as a fresh
+        // `panic!("parallel task panicked")`, discarding the original
+        // payload (and with it the actual failure message). The original
+        // payload must survive the pool hop, typed.
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| std::panic::panic_any(Marker(42))),
+                Box::new(|| {}),
+                Box::new(|| {}),
+            ];
+            pool.run_scoped(tasks);
+        }));
+        let payload = result.unwrap_err();
+        let m = payload
+            .downcast_ref::<Marker>()
+            .expect("original panic payload, not a wrapper");
+        assert_eq!(m, &Marker(42));
+        // A panicking INLINE task (the last task runs on the caller)
+        // also surfaces its own payload.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| std::panic::panic_any(Marker(7))),
+            ];
+            pool.run_scoped(tasks);
+        }));
+        let payload = result.unwrap_err();
+        assert_eq!(payload.downcast_ref::<Marker>(), Some(&Marker(7)));
+    }
+
+    #[test]
+    fn lock_recover_recovers_a_poisoned_mutex() {
+        let m = Mutex::new(7usize);
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("die holding the lock");
+        }));
+        assert!(m.is_poisoned());
+        // `lock().unwrap()` would now panic in every thread forever; the
+        // recovering helper hands back the (structurally intact) data.
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 8);
     }
 
     #[test]

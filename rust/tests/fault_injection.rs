@@ -1,0 +1,328 @@
+//! Chaos suite: the serving coordinator under a deterministically
+//! hostile backend.
+//!
+//! `FaultInjectingBackend` schedules errors, panics, delays, and replica
+//! aborts by call index from a seed — no wall-clock randomness — and
+//! these tests assert the fault-tolerance contract end to end: every
+//! accepted request gets exactly one typed response, `shutdown()` still
+//! drains, the circuit breaker cycles closed → open → half-open →
+//! closed against a real outage, the supervisor respawns aborted
+//! replicas and abandons slots whose restart budget is spent, and the
+//! metrics account for every fate.
+//!
+//! Knobs (the CI `fault-injection` job arms the heavy profile):
+//! * `PQDL_CHAOS=full` — more replicas, more requests, higher fault
+//!   rates, more seeds;
+//! * `PQDL_CHAOS_SEED=<u64>` — base seed override, for replaying a
+//!   reported failure exactly.
+
+use pqdl::coordinator::{
+    BreakerConfig, CoordinatorBuilder, FaultInjectingBackend, FaultKind, FaultPlan, InterpBackend,
+    RejectReason, ServeError, ServerConfig, SupervisorConfig,
+};
+use pqdl::figures::Figure;
+use pqdl::interp::Session;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn chaos_full() -> bool {
+    std::env::var("PQDL_CHAOS").map(|v| v == "full").unwrap_or(false)
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("PQDL_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC4A0_5EED)
+}
+
+fn base_config(replicas: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        replicas,
+        queue_depth: 4096,
+        deadline: None,
+        controller: None,
+        breaker: None,
+        supervisor: None,
+    }
+}
+
+/// An aggressive supervisor for tests: fast scans, fast respawns.
+fn fast_supervisor(max_restarts: u32) -> SupervisorConfig {
+    SupervisorConfig {
+        heartbeat_timeout: Duration::from_secs(5),
+        max_restarts,
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(50),
+        tick: Duration::from_millis(5),
+    }
+}
+
+/// The headline chaos property. For every replica count and seed in the
+/// profile: submit a mixed stream of well-formed and malformed requests
+/// against a backend injecting errors, panics, delays, AND replica
+/// aborts (with the supervisor respawning the dead) — then require:
+///
+/// 1. exactly one response per submission, each a typed fate;
+/// 2. well-formed outputs that survive are bit-identical to a direct
+///    `Session` run;
+/// 3. malformed submissions are always `InvalidInput`, faults or not;
+/// 4. the metrics account for every fate: executed requests equal
+///    Ok+Exec+Panic responses, `errors`/`panics` match the per-response
+///    counts, `shed_invalid` matches the malformed count;
+/// 5. `shutdown()` still returns (clean drain) afterwards.
+#[test]
+fn chaos_exactly_one_response_clean_drain_full_accounting() {
+    let full = chaos_full();
+    let replica_counts: &[usize] = if full { &[1, 2, 4] } else { &[1, 3] };
+    let seeds: u64 = if full { 6 } else { 2 };
+    let requests: usize = if full { 160 } else { 48 };
+    let rate_per_mille: u64 = if full { 300 } else { 150 };
+
+    let fig = Figure::Fig1FcTwoMul;
+    let sess = Session::new(fig.model()).unwrap();
+    for &replicas in replica_counts {
+        for round in 0..seeds {
+            let seed = chaos_seed() ^ (round.wrapping_mul(0x9E37) + replicas as u64);
+            let plan = FaultPlan::seeded(
+                seed,
+                rate_per_mille,
+                &[
+                    FaultKind::Error,
+                    FaultKind::Panic,
+                    FaultKind::Delay,
+                    FaultKind::Abort,
+                ],
+            )
+            .with_delay(Duration::from_millis(2));
+            let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+            let injector = FaultInjectingBackend::new(inner, plan);
+            let counters = injector.counters();
+            let mut cfg = base_config(replicas);
+            // Aborts kill worker threads; the supervisor must keep the
+            // lane alive for the whole stream. Budget far above anything
+            // this stream can spend.
+            cfg.supervisor = Some(fast_supervisor(10_000));
+            let coord = CoordinatorBuilder::new(cfg)
+                .register("fig1_fc", Arc::new(injector))
+                .start();
+
+            // A deterministic request mix: every 5th submission is
+            // malformed (wrong feature dim).
+            let mut rxs = Vec::new();
+            let mut malformed = 0u64;
+            for i in 0..requests {
+                let x = if i % 5 == 4 {
+                    malformed += 1;
+                    pqdl::tensor::Tensor::from_i8(&[1, 63], vec![0; 63]).unwrap()
+                } else {
+                    fig.input(1 + i % 3, seed ^ i as u64)
+                };
+                rxs.push((i, coord.submit("fig1_fc", x).unwrap()));
+            }
+
+            let (mut ok, mut exec, mut panicked, mut invalid, mut lost) =
+                (0u64, 0u64, 0u64, 0u64, 0u64);
+            for (i, rx) in rxs {
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .unwrap_or_else(|e| {
+                        panic!("req {i} (replicas {replicas}, seed {seed:#x}): no response ({e})")
+                    });
+                if i % 5 == 4 {
+                    match resp.reject_reason() {
+                        Some(RejectReason::InvalidInput(_)) => invalid += 1,
+                        other => panic!("req {i}: malformed classified {other:?}"),
+                    }
+                } else {
+                    match resp.output {
+                        Ok(got) => {
+                            let rows = 1 + i % 3;
+                            let want = &sess
+                                .run(&[("x", fig.input(rows, seed ^ i as u64))])
+                                .unwrap()[0];
+                            assert_eq!(&got, want, "req {i}: surviving output must be exact");
+                            ok += 1;
+                        }
+                        Err(ServeError::Exec(ref m)) => {
+                            assert!(m.contains("injected"), "req {i}: unexpected exec: {m}");
+                            exec += 1;
+                        }
+                        Err(ServeError::BackendPanic(_)) => panicked += 1,
+                        Err(ServeError::WorkerLost) => lost += 1,
+                        Err(ref e) => panic!("req {i}: unexpected fate {e}"),
+                    }
+                }
+                assert!(rx.try_recv().is_err(), "req {i}: more than one response");
+            }
+            assert_eq!(invalid, malformed);
+            assert_eq!(
+                ok + exec + panicked + lost,
+                (requests as u64) - malformed,
+                "every well-formed request has exactly one typed fate"
+            );
+            assert_eq!(lost, 0, "supervised lane must not lose requests pre-shutdown");
+
+            // The metrics agree with the observed fates.
+            let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+            assert_eq!(stats.requests, ok + exec + panicked, "executed requests");
+            assert_eq!(stats.errors, exec);
+            assert_eq!(stats.panics, panicked);
+            assert_eq!(stats.shed_invalid, malformed);
+            // Abort panics both answer a batch AND kill the worker; any
+            // injected abort shows up as panic responses.
+            let injected = counters.total_injected();
+            if exec + panicked > 0 {
+                assert!(injected > 0);
+            }
+
+            // Clean drain even after aborts/restarts.
+            let t0 = Instant::now();
+            coord.shutdown();
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "drain wedged after chaos"
+            );
+        }
+    }
+}
+
+/// Breaker integration against a real (scheduled) outage: two failed
+/// batches trip it open, the open window sheds `CircuitOpen`, the
+/// cooldown admits a half-open probe, and the healthy probe closes it.
+#[test]
+fn circuit_breaker_cycles_through_a_real_outage() {
+    let fig = Figure::Fig1FcTwoMul;
+    let sess = Session::new(fig.model()).unwrap();
+    let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+    // Calls 0 and 1 fail; everything afterwards is healthy.
+    let plan = FaultPlan::none()
+        .at(0, FaultKind::Error)
+        .at(1, FaultKind::Panic);
+    let mut cfg = base_config(1);
+    cfg.breaker = Some(BreakerConfig {
+        failures_to_open: 2,
+        cooldown: Duration::from_millis(150),
+        half_open_probes: 1,
+    });
+    let coord = CoordinatorBuilder::new(cfg)
+        .register("fig1_fc", Arc::new(FaultInjectingBackend::new(inner, plan)))
+        .start();
+
+    // Closed: the two scheduled failures execute (and trip the breaker).
+    let r0 = coord.infer("fig1_fc", fig.input(1, 0)).unwrap();
+    assert!(matches!(r0.output, Err(ServeError::Exec(_))));
+    let r1 = coord.infer("fig1_fc", fig.input(1, 1)).unwrap();
+    assert!(matches!(r1.output, Err(ServeError::BackendPanic(_))));
+
+    // Open: immediate shed, no execution.
+    let shed = coord.infer("fig1_fc", fig.input(1, 2)).unwrap();
+    assert!(matches!(
+        shed.reject_reason(),
+        Some(RejectReason::CircuitOpen)
+    ));
+
+    // Half-open after the cooldown: the probe executes (call 2 — clean)
+    // and closes the breaker.
+    std::thread::sleep(Duration::from_millis(200));
+    let x = fig.input(1, 3);
+    let probe = coord.infer("fig1_fc", x.clone()).unwrap();
+    let want = &sess.run(&[("x", x)]).unwrap()[0];
+    assert_eq!(&probe.output.unwrap(), want, "probe batch must serve");
+
+    // Closed again: full traffic, no sheds.
+    for i in 10..16u64 {
+        let x = fig.input(1, i);
+        let resp = coord.infer("fig1_fc", x.clone()).unwrap();
+        let want = &sess.run(&[("x", x)]).unwrap()[0];
+        assert_eq!(&resp.output.unwrap(), want);
+    }
+    let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+    assert_eq!(stats.breaker_opens, 1);
+    assert!(stats.shed_circuit >= 1);
+    coord.shutdown();
+}
+
+/// Supervision: an injected `ReplicaAbort` kills the lane's only worker
+/// after answering its batch; the supervisor respawns the slot (fresh
+/// fork from the root backend) and the next request serves normally.
+#[test]
+fn supervisor_respawns_an_aborted_replica() {
+    let fig = Figure::Fig1FcTwoMul;
+    let sess = Session::new(fig.model()).unwrap();
+    let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+    let plan = FaultPlan::none().at(0, FaultKind::Abort);
+    let mut cfg = base_config(1);
+    cfg.supervisor = Some(fast_supervisor(5));
+    let coord = CoordinatorBuilder::new(cfg)
+        .register("fig1_fc", Arc::new(FaultInjectingBackend::new(inner, plan)))
+        .start();
+
+    // Call 0 aborts: the request is still answered (typed panic), then
+    // the worker thread exits.
+    let r0 = coord.infer("fig1_fc", fig.input(1, 0)).unwrap();
+    assert!(matches!(r0.output, Err(ServeError::BackendPanic(_))));
+
+    // The lane has zero live workers until the supervisor respawns one;
+    // this infer blocks on exactly that happening.
+    let x = fig.input(1, 1);
+    let r1 = coord.infer("fig1_fc", x.clone()).unwrap();
+    let want = &sess.run(&[("x", x)]).unwrap()[0];
+    assert_eq!(&r1.output.unwrap(), want, "respawned replica must serve");
+
+    let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+    assert!(stats.restarts >= 1, "restart must be counted");
+    assert_eq!(stats.panics, 1);
+    coord.shutdown();
+}
+
+/// Restart-budget exhaustion: a backend that aborts EVERY call burns
+/// through `max_restarts`, the slot is abandoned (counted once), and a
+/// request queued into the dead lane is answered `WorkerLost` by the
+/// graceful shutdown's leftover sweep — never silently dropped.
+#[test]
+fn supervisor_restart_budget_exhaustion_is_counted_and_drains_typed() {
+    let fig = Figure::Fig1FcTwoMul;
+    let inner = Arc::new(InterpBackend::new(fig.model()).unwrap());
+    let plan = FaultPlan::seeded(0, 1000, &[FaultKind::Abort]); // every call aborts
+    let mut cfg = base_config(1);
+    cfg.supervisor = Some(fast_supervisor(2)); // 2 respawns, then abandoned
+    let coord = CoordinatorBuilder::new(cfg)
+        .register("fig1_fc", Arc::new(FaultInjectingBackend::new(inner, plan)))
+        .start();
+
+    // Three served batches: the original worker plus its two respawns,
+    // each answering one batch (typed panic) before dying.
+    for i in 0..3u64 {
+        let resp = coord.infer("fig1_fc", fig.input(1, i)).unwrap();
+        assert!(
+            matches!(resp.output, Err(ServeError::BackendPanic(_))),
+            "batch {i} must still be answered"
+        );
+    }
+
+    // The third death exhausts the budget; wait for the ticker to count
+    // it (bounded poll, no sleep-and-hope).
+    let t0 = Instant::now();
+    loop {
+        let stats = coord.metrics.snapshot("fig1_fc").unwrap();
+        if stats.restart_budget_exhausted >= 1 {
+            assert_eq!(stats.restarts, 2, "exactly the budgeted respawns happened");
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "budget exhaustion never recorded"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // A request into the dead (but open) lane is accepted, never served
+    // — graceful shutdown must still answer it, typed.
+    let rx = coord.submit("fig1_fc", fig.input(1, 99)).unwrap();
+    coord.shutdown();
+    let resp = rx.try_recv().expect("leftover request must be answered");
+    assert_eq!(resp.output, Err(ServeError::WorkerLost));
+}
