@@ -183,6 +183,7 @@ fn main() {
     // trajectory so BENCH_serving.json can compare ISA lanes across
     // commits; `PQDL_FORCE_ISA` pins an entire serving run instead.
     {
+        use pqdl::ops::bitpack::PackedWeights;
         use pqdl::ops::fused::{FusedQFc, QEpilogue};
         use pqdl::ops::matmul::{self, PackedB};
         use pqdl::ops::Isa;
@@ -216,7 +217,7 @@ fn main() {
                 };
                 let fc = FusedQFc {
                     bw: bw.clone(),
-                    bp: PackedB::pack(&bw, k, n),
+                    bp: PackedB::pack(&bw, k, n).map(PackedWeights::I8),
                     k,
                     n,
                     a_zp: 0,
@@ -250,6 +251,126 @@ fn main() {
         }
     }
 
+    // --- per-width microkernel rows (sub-8-bit weight packing) ------------
+    // The same (k, n) GEMM + fused FC workload at each logical weight
+    // width the planner can bake: full i8 panels, nibble-packed int4, and
+    // XNOR-popcount bipolar (±1 activations, so the bit-sliced path runs
+    // for real rather than falling back to the widened loop). Every width
+    // computes with the same i32 accumulator semantics — these rows
+    // measure the packing's memory/throughput effect, and land in the
+    // JSON trajectory so per-width lanes compare across commits.
+    {
+        use pqdl::ops::bitpack::{
+            gemm_i4_packed_isa, gemm_xnor_isa, pack_bits_rows, BitPackedB, PackedB4, PackedWeights,
+        };
+        use pqdl::ops::fused::{FusedQFc, QEpilogue};
+        use pqdl::ops::matmul::{self, PackedB};
+        use pqdl::ops::Isa;
+        use pqdl::quant::QType;
+        use pqdl::train::Rng;
+
+        let (k, n) = (64usize, 128usize);
+        let mut rng = Rng::new(0x4B17);
+        let bw8: Vec<i32> = (0..k * n).map(|_| rng.i8() as i32).collect();
+        let bw4: Vec<i32> = (0..k * n).map(|_| rng.below(16) as i32 - 8).collect();
+        let bw1: Vec<i32> = (0..k * n)
+            .map(|_| if rng.below(2) == 0 { -1 } else { 1 })
+            .collect();
+        let isa = Isa::active();
+        let packs = [
+            ("int8", &bw8, PackedWeights::I8(PackedB::pack(&bw8, k, n).unwrap())),
+            ("int4", &bw4, PackedWeights::I4(PackedB4::pack(&bw4, k, n).unwrap())),
+            (
+                "bipolar",
+                &bw1,
+                PackedWeights::Bipolar(BitPackedB::pack(&bw1, k, n).unwrap()),
+            ),
+        ];
+        section(&format!(
+            "per-width packed GEMM + fused FC (k={k}, n={n}, isa {isa})"
+        ));
+        println!(
+            "{:<8} | {:<8} | {:>12} | {:>14} | {:>14}",
+            "width", "batch", "baked bytes", "gemm itm/s", "fused itm/s"
+        );
+        for batch in [8usize, 128] {
+            // ±1 activations: valid i8 input for every width, and the
+            // alphabet the XNOR kernel's row bit-pack requires.
+            let a: Vec<i8> = (0..batch * k)
+                .map(|_| if rng.below(2) == 0 { -1i8 } else { 1 })
+                .collect();
+            let x = Tensor::from_i8(&[batch, k], a.clone()).unwrap();
+            for (label, bw, pw) in &packs {
+                let gemm = {
+                    let a = &a;
+                    let mut c = vec![0i32; batch * n];
+                    let mut abits = Vec::new();
+                    assert!(pack_bits_rows(a, batch, k, &mut abits));
+                    bench_auto(
+                        &format!("width {label} gemm b{batch}"),
+                        batch,
+                        target_ms,
+                        move || match pw {
+                            PackedWeights::I8(bp) => {
+                                matmul::gemm_i8_packed_isa(isa, a, bp, batch, &mut c)
+                            }
+                            PackedWeights::I4(bp) => gemm_i4_packed_isa(isa, a, bp, batch, &mut c),
+                            PackedWeights::Bipolar(bb) => {
+                                gemm_xnor_isa(isa, &abits, bb, batch, &mut c)
+                            }
+                        },
+                    )
+                };
+                // PackedWeights owns its panels (no Clone) — repack for
+                // the fused kernel's copy.
+                let fc_bp = match pw {
+                    PackedWeights::I8(_) => PackedWeights::I8(PackedB::pack(bw, k, n).unwrap()),
+                    PackedWeights::I4(_) => PackedWeights::I4(PackedB4::pack(bw, k, n).unwrap()),
+                    PackedWeights::Bipolar(_) => {
+                        PackedWeights::Bipolar(BitPackedB::pack(bw, k, n).unwrap())
+                    }
+                };
+                let fc = FusedQFc {
+                    bw: (*bw).clone(),
+                    bp: Some(fc_bp),
+                    k,
+                    n,
+                    a_zp: 0,
+                    bias: None,
+                    isa,
+                    epi: QEpilogue {
+                        s1: 0.013,
+                        s2: None,
+                        relu: true,
+                        inv_scale: 1.0 / 0.11,
+                        zp: 3,
+                        out_qtype: QType::I8,
+                    },
+                };
+                let fused = {
+                    let x = x.clone();
+                    let mut scratch = [None, None];
+                    bench_auto(
+                        &format!("width {label} fc b{batch}"),
+                        batch,
+                        target_ms,
+                        move || {
+                            fc.run(&x, None, &mut scratch).expect("fused fc run");
+                        },
+                    )
+                };
+                println!(
+                    "{label:<8} | {batch:<8} | {:>12} | {:>14.1} | {:>14.1}",
+                    pw.bytes(),
+                    gemm.throughput_per_s,
+                    fused.throughput_per_s
+                );
+                json.record(&format!("width {label} gemm b{batch}"), batch, &gemm);
+                json.record(&format!("width {label} fc b{batch}"), batch, &fused);
+            }
+        }
+    }
+
     // --- tuned vs default GEMM tile (plan-time micro-tuner) ---------------
     // The micro-tuner measures its winner for this machine fresh (own
     // in-memory cache, so the bench never inherits a stale winner), then
@@ -257,6 +378,7 @@ fn main() {
     // incumbent default competes in the tuner's shortlist, so tuned can
     // at worst tie it.
     {
+        use pqdl::ops::bitpack::PackedWeights;
         use pqdl::ops::fused::{FusedQFc, QEpilogue};
         use pqdl::ops::matmul::{self, PackedB};
         use pqdl::ops::Isa;
@@ -275,6 +397,7 @@ fn main() {
             k,
             out: n,
             kind: ProblemKind::PackedBGemm,
+            bits: 8,
         }];
         let outcome = tune_gemms_with(
             &cache,
@@ -314,7 +437,7 @@ fn main() {
                 };
                 let fc = FusedQFc {
                     bw: bw.clone(),
-                    bp: PackedB::pack_with(&bw, k, n, cfg),
+                    bp: PackedB::pack_with(&bw, k, n, cfg).map(PackedWeights::I8),
                     k,
                     n,
                     a_zp: 0,

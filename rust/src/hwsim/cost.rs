@@ -61,20 +61,34 @@ impl CostReport {
     }
 }
 
+/// Cost of an M×K×N integer GEMM on the systolic array with 8-bit
+/// weights. See [`gemm_cost_w`] for sub-8-bit weight widths.
+pub fn gemm_cost(cfg: &HwConfig, m: usize, k: usize, n: usize) -> CostReport {
+    gemm_cost_w(cfg, m, k, n, 8)
+}
+
 /// Cost of an M×K×N integer GEMM on the systolic array: the array
 /// computes a `rows × cols` output tile per K cycles (output-stationary),
 /// plus a pipeline-fill overhead per tile.
-pub fn gemm_cost(cfg: &HwConfig, m: usize, k: usize, n: usize) -> CostReport {
+///
+/// `weight_bits` is the *logical* weight width (8, 4, ..., 1 for
+/// bipolar). Weights travel bit-packed, so the weight terms of DRAM and
+/// SRAM traffic scale with the width; compute cycles and MAC count do
+/// not (the array still performs one MAC per weight, whatever its
+/// width — narrow widths buy bandwidth and energy, not cycles, which is
+/// exactly the co-design trade-off the report exists to expose).
+pub fn gemm_cost_w(cfg: &HwConfig, m: usize, k: usize, n: usize, weight_bits: u8) -> CostReport {
     let tiles_m = m.div_ceil(cfg.mac_rows) as u64;
     let tiles_n = n.div_ceil(cfg.mac_cols) as u64;
     let fill = (cfg.mac_rows + cfg.mac_cols) as u64; // systolic skew
     let cycles = tiles_m * tiles_n * (k as u64 + fill);
+    let weight_bytes = (k * n * weight_bits.clamp(1, 8) as usize).div_ceil(8) as u64;
     CostReport {
         macs: (m * k * n) as u64,
         cycles,
         // Activations stream in per tile-row; weights per tile.
-        sram_bytes: (m * k) as u64 * tiles_n + (k * n) as u64 * tiles_m + (m * n) as u64 * 4,
-        dram_bytes: (k * n) as u64, // weight load
+        sram_bytes: (m * k) as u64 * tiles_n + weight_bytes * tiles_m + (m * n) as u64 * 4,
+        dram_bytes: weight_bytes, // weight load
         vector_ops: 0,
         host_flops: 0,
     }
@@ -136,6 +150,23 @@ mod tests {
         let b = gemm_cost(&cfg, 8, 128, 8);
         assert_eq!(b.macs, 2 * a.macs);
         assert!(b.cycles > a.cycles);
+    }
+
+    #[test]
+    fn narrow_weights_cut_traffic_not_compute() {
+        let cfg = HwConfig::default();
+        let w8 = gemm_cost_w(&cfg, 8, 64, 16, 8);
+        let w4 = gemm_cost_w(&cfg, 8, 64, 16, 4);
+        let w1 = gemm_cost_w(&cfg, 8, 64, 16, 1);
+        assert_eq!(w8, gemm_cost(&cfg, 8, 64, 16));
+        assert_eq!(w4.dram_bytes, w8.dram_bytes / 2);
+        assert_eq!(w1.dram_bytes, w8.dram_bytes / 8);
+        assert!(w4.sram_bytes < w8.sram_bytes);
+        // Same array, same schedule: compute is width-independent.
+        assert_eq!(w4.macs, w8.macs);
+        assert_eq!(w4.cycles, w8.cycles);
+        // Ragged packing rounds up, never to zero.
+        assert_eq!(gemm_cost_w(&cfg, 1, 3, 3, 1).dram_bytes, 2);
     }
 
     #[test]

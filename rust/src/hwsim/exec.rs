@@ -20,7 +20,7 @@
 //! with the interpreter *demonstrates* the paper's expressiveness claim.
 
 use super::config::{HwConfig, Rounding};
-use super::cost::{gemm_cost, host_cost, vector_cost, CostReport};
+use super::cost::{gemm_cost_w, host_cost, vector_cost, CostReport};
 use super::lut::{ActEval, ActLut};
 use crate::onnx::ir::{Graph, Model, Node};
 use crate::onnx::shape::ConvAttrs;
@@ -107,6 +107,10 @@ pub enum Stage {
         rescale: HwRescale,
         relu: bool,
         out_qtype: QType,
+        /// Minimal logical weight width (bits), derived from the weight
+        /// VALUES at lift time; drives the width-scaled traffic terms of
+        /// the cost model ([`gemm_cost_w`]).
+        weight_bits: u8,
     },
     /// Convolution integer block (NCHW).
     Conv {
@@ -120,6 +124,8 @@ pub enum Stage {
         rescale: HwRescale,
         relu: bool,
         out_qtype: QType,
+        /// Minimal logical weight width (bits), as in [`Stage::Fc`].
+        weight_bits: u8,
     },
     /// Activation ROM stage.
     Act { lut: ActLut, f16_evaluated: bool },
@@ -421,6 +427,7 @@ impl HwModule {
         };
         let rescale = lift_rescale(&chain.muls, cfg.max_shift)?;
         Self::check_unit_requantize(g, chain)?;
+        let weight_bits = QType::minimal_for(&w).map_or(8, |q| q.bits());
         Ok(Stage::Fc {
             w,
             k,
@@ -429,6 +436,7 @@ impl HwModule {
             rescale,
             relu: chain.relu,
             out_qtype: chain.out_qtype,
+            weight_bits,
         })
     }
 
@@ -452,6 +460,7 @@ impl HwModule {
         };
         let rescale = lift_rescale(&chain.muls, cfg.max_shift)?;
         Self::check_unit_requantize(g, chain)?;
+        let weight_bits = QType::minimal_for(&w).map_or(8, |q| q.bits());
         Ok(Stage::Conv {
             w,
             m,
@@ -463,6 +472,7 @@ impl HwModule {
             rescale,
             relu: chain.relu,
             out_qtype: chain.out_qtype,
+            weight_bits,
         })
     }
 
@@ -579,13 +589,13 @@ impl HwModule {
 
         let out = match val {
             HwValue::Float(data, shape) => Tensor::from_f32(&shape, data)?,
-            HwValue::Int(t) => match t.qtype {
-                QType::I8 => {
-                    Tensor::from_i8(&t.shape, t.data.iter().map(|&v| v as i8).collect())?
-                }
-                QType::U8 => {
+            // Narrow logical widths still live in their standard 8-bit
+            // container at the edge, so only the container dtype matters.
+            HwValue::Int(t) => match t.qtype.dtype() {
+                DType::U8 => {
                     Tensor::from_u8(&t.shape, t.data.iter().map(|&v| v as u8).collect())?
                 }
+                _ => Tensor::from_i8(&t.shape, t.data.iter().map(|&v| v as i8).collect())?,
             },
         };
         Ok((out, cost))
@@ -627,6 +637,7 @@ impl HwModule {
                 rescale,
                 relu,
                 out_qtype,
+                weight_bits,
             } => {
                 let t = match val {
                     HwValue::Int(t) => t,
@@ -658,7 +669,7 @@ impl HwModule {
                     }
                     *v = q;
                 }
-                cost.add(&gemm_cost(&self.cfg, m, *k, *n));
+                cost.add(&gemm_cost_w(&self.cfg, m, *k, *n, *weight_bits));
                 cost.add(&vector_cost(&self.cfg, m * n, 2));
                 let mut shape = t.shape[..t.shape.len() - 1].to_vec();
                 shape.push(*n);
@@ -679,6 +690,7 @@ impl HwModule {
                 rescale,
                 relu,
                 out_qtype,
+                weight_bits,
             } => {
                 let t = match val {
                     HwValue::Int(t) => t,
@@ -723,7 +735,12 @@ impl HwModule {
                         }
                     }
                 }
-                cost.add(&gemm_cost(&self.cfg, *m, patch_rows, nb * patch));
+                // Output-stationary mapping with the kernel in the
+                // DRAM-resident B position: A = im2col patches
+                // [nb·patch, patch_rows] streamed from SRAM, B = kernel
+                // [patch_rows, m] loaded once and width-packed — so the
+                // width scaling lands on the true weight operand.
+                cost.add(&gemm_cost_w(&self.cfg, nb * patch, patch_rows, *m, *weight_bits));
                 cost.add(&vector_cost(&self.cfg, nb * m * patch, 2));
                 Ok(HwValue::Int(HwInt {
                     data: out,
@@ -865,6 +882,21 @@ impl HwModule {
             Stage::Fc { rescale, .. } | Stage::Conv { rescale, .. } => rescale.exact_from_model,
             _ => true,
         })
+    }
+
+    /// Minimal logical weight width of each FC/conv stage in pipeline
+    /// order (8, 4, ..., 1 for bipolar) — the widths the cost model's
+    /// width-scaled traffic terms use.
+    pub fn weight_widths(&self) -> Vec<u8> {
+        self.stages
+            .iter()
+            .filter_map(|s| match s {
+                Stage::Fc { weight_bits, .. } | Stage::Conv { weight_bits, .. } => {
+                    Some(*weight_bits)
+                }
+                _ => None,
+            })
+            .collect()
     }
 }
 

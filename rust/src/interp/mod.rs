@@ -110,6 +110,12 @@ pub struct PlanStats {
     pub fused_qfc: usize,
     pub fused_qconv: usize,
     pub fused_act_lut: usize,
+    /// Fused FC/conv steps whose weights baked to the int4 nibble-packed
+    /// kernel family (subset of `fused_qfc + fused_qconv`).
+    pub fused_int4: usize,
+    /// Fused FC/conv steps whose weights baked to the bipolar
+    /// XNOR-popcount kernel family (subset of `fused_qfc + fused_qconv`).
+    pub fused_bipolar: usize,
     pub eliminated: usize,
     /// Kernel instruction set the plan's quantized microkernels were
     /// stamped with at compile time (see [`crate::ops::Isa::active`]).
@@ -136,13 +142,15 @@ impl std::fmt::Display for PlanStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} eliminated; isa {} on {} steps; tile {} [{}]; twin {})",
+            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} int4 / {} bipolar baked, {} eliminated; isa {} on {} steps; tile {} [{}]; twin {})",
             self.nodes,
             self.steps,
             self.fused_qfc,
             self.fused_qconv,
             self.fused_act_lut,
             self.fused_nodes,
+            self.fused_int4,
+            self.fused_bipolar,
             self.eliminated,
             self.isa,
             self.isa_steps,
@@ -489,6 +497,8 @@ impl Session {
             fused_qfc: s.fused_qfc,
             fused_qconv: s.fused_qconv,
             fused_act_lut: s.fused_act_lut,
+            fused_int4: s.fused_int4,
+            fused_bipolar: s.fused_bipolar,
             eliminated: s.eliminated,
             isa: self.plan.isa,
             isa_steps: self

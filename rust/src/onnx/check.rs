@@ -17,6 +17,7 @@ pub const STANDARD_OPS: &[&str] = &[
     "Add",
     "AveragePool",
     "Cast",
+    "Clip",
     "Conv",
     "ConvInteger",
     "DequantizeLinear",
@@ -61,9 +62,21 @@ pub enum CheckError {
         declared: Vec<Dim>,
         inferred: Vec<Dim>,
     },
+    #[error("width metadata '{key}': {reason}")]
+    WidthMetadata { key: String, reason: String },
     #[error(transparent)]
     Shape(#[from] ShapeError),
 }
+
+/// Metadata-prop prefix declaring an initializer's *logical* weight
+/// width (`pqdl.width.<initializer> = int4 | bipolar | ...`) — the
+/// QONNX-style container-vs-logical split: the tensor is stored in a
+/// standard 8-bit container, the annotation says how many of those bits
+/// carry signal. Strictly advisory, honoring paper goal 1 (no metadata
+/// is ever *required* for execution — the optimizer re-derives widths
+/// from the weight values themselves), but when present the checker
+/// verifies it, so a stale annotation fails fast instead of lying.
+pub const WIDTH_META_PREFIX: &str = "pqdl.width.";
 
 /// Validate a model. Returns the inferred value types on success so
 /// callers (interpreter, hwsim, rewriter) can reuse them.
@@ -99,6 +112,37 @@ pub fn check_model(
     for vi in &g.inputs {
         if !seen.insert(vi.name.as_str()) {
             return Err(CheckError::DuplicateInput(vi.name.clone()));
+        }
+    }
+
+    // Advisory width metadata: never required, but when present it must
+    // name a real initializer, parse as a known width, and admit the
+    // stored values.
+    for (key, val) in &model.metadata {
+        let Some(init_name) = key.strip_prefix(WIDTH_META_PREFIX) else {
+            continue;
+        };
+        let qt = crate::quant::QType::parse(val).ok_or_else(|| CheckError::WidthMetadata {
+            key: key.clone(),
+            reason: format!("unknown width '{val}'"),
+        })?;
+        let Some(t) = g.initializer(init_name) else {
+            return Err(CheckError::WidthMetadata {
+                key: key.clone(),
+                reason: "no such initializer".into(),
+            });
+        };
+        let vals = t
+            .as_quantized_i32()
+            .map_err(|_| CheckError::WidthMetadata {
+                key: key.clone(),
+                reason: format!("initializer is {}, not a quantized dtype", t.dtype()),
+            })?;
+        if !qt.admits(&vals) {
+            return Err(CheckError::WidthMetadata {
+                key: key.clone(),
+                reason: format!("values exceed the declared {} range", qt.name()),
+            });
         }
     }
 
@@ -213,6 +257,43 @@ mod tests {
             check_model(&m),
             Err(CheckError::DuplicateInitializer(_))
         ));
+    }
+
+    #[test]
+    fn width_metadata_is_advisory_but_verified() {
+        // Valid annotation: the i8 container holds int4-range values.
+        let mut m = ok_model();
+        m.metadata
+            .push(("pqdl.width.w".into(), "int4".into()));
+        assert!(check_model(&m).is_ok());
+        // Unknown width name.
+        let mut m = ok_model();
+        m.metadata
+            .push(("pqdl.width.w".into(), "int12".into()));
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::WidthMetadata { .. })
+        ));
+        // Annotation naming a missing initializer.
+        let mut m = ok_model();
+        m.metadata
+            .push(("pqdl.width.nope".into(), "int4".into()));
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::WidthMetadata { .. })
+        ));
+        // Values outside the declared range (zeros are not bipolar).
+        let mut m = ok_model();
+        m.metadata
+            .push(("pqdl.width.w".into(), "bipolar".into()));
+        assert!(matches!(
+            check_model(&m),
+            Err(CheckError::WidthMetadata { .. })
+        ));
+        // Unrelated metadata keys stay free-form.
+        let mut m = ok_model();
+        m.metadata.push(("author".into(), "whoever".into()));
+        assert!(check_model(&m).is_ok());
     }
 
     #[test]

@@ -312,6 +312,26 @@ pub fn infer_node(
             }
             vec![x.clone()]
         }
+        "Clip" => {
+            // Opset 13: optional scalar min/max inputs of the same dtype
+            // as x. The executor supports f32 (the sub-8-bit codification
+            // emits it there); inference only pins the type algebra.
+            let x = req(0)?;
+            if x.dtype != DType::F32 {
+                return Err(err(node, format!("unsupported dtype {}", x.dtype)));
+            }
+            for i in [1, 2] {
+                if let Some(b) = inputs.get(i).copied().flatten() {
+                    if b.dtype != x.dtype {
+                        return Err(err(
+                            node,
+                            format!("bound dtype {} != input {}", b.dtype, x.dtype),
+                        ));
+                    }
+                }
+            }
+            vec![x.clone()]
+        }
         "Tanh" | "Sigmoid" => {
             let x = req(0)?;
             if !x.dtype.is_float() {

@@ -1,0 +1,790 @@
+//! Bit-packed sub-8-bit weight storage and GEMM kernels (ROADMAP item 3,
+//! QONNX/FINN-style lowering).
+//!
+//! Two kernel families below the existing i8 panels:
+//!
+//! * **int4** — weights whose widened values all fit `[-8, 7]` pack two
+//!   two's-complement nibbles per byte (low nibble first). The GEMMs
+//!   unpack one L1-sized block at a time into a stack buffer of plain i8
+//!   and then run exactly the i8 microkernel accumulation, so the packed
+//!   path halves weight memory traffic without new arithmetic.
+//! * **bipolar (XNOR-popcount)** — weights/activations that are all
+//!   {-1, +1} pack one bit per value (bit set ⇔ +1, 8 weights per byte,
+//!   64 per word). Since `a·b = +1` iff the sign bits agree,
+//!   `dot = k − 2·popcount(a_bits XOR b_bits)` over the logical k bits.
+//!   Zero-padded tail bits XOR to 0, so counting over whole words equals
+//!   counting over the logical bits and the ragged tail needs no mask.
+//!
+//! **Bit-exactness:** every kernel accumulates each output element's
+//! k-products in ascending k order (the int4 paths literally run the i8
+//! loop over unpacked values; the XNOR identity is exact over i32), so
+//! results are bit-identical to the naive widen-to-i32 triple loop — the
+//! same oracle the i8 packed kernels are proptested against
+//! (`tests/packed_gemm.rs` per-width differential tests).
+//!
+//! The `isa` parameters on the dispatch wrappers are the same plan-time
+//! seam the i8 kernels use (PR 6). The bodies are scalar today — the
+//! int4 inner loop IS the i8 loop (already auto-vectorizable over the
+//! unpacked block) and the XNOR kernel is dominated by `count_ones`,
+//! which compiles to the native popcount instruction on every supported
+//! target — so the wrappers exist to keep the call sites and the tuner
+//! stable when `vpshufb`-style unpack or `vpopcntdq` variants land.
+
+use super::isa::Isa;
+use super::matmul::{self, GEMM_MR, GEMM_NR_MAX};
+use crate::parallel::{self, ThreadPool};
+use crate::tune::GemmConfig;
+
+/// k-rows unpacked per stack block in the int4 kernels. One block is
+/// `UNPACK_KC x GEMM_NR_MAX` i8 = 4 KiB, L1-resident next to the
+/// activation rows streaming against it.
+const UNPACK_KC: usize = 256;
+
+// --- nibble packing ---------------------------------------------------------
+
+/// Pack two int4 values (each in `[-8, 7]`) into one byte, low nibble
+/// first.
+#[inline]
+pub fn pack_nibbles(lo: i8, hi: i8) -> u8 {
+    debug_assert!((-8..=7).contains(&lo) && (-8..=7).contains(&hi));
+    ((lo as u8) & 0x0f) | ((hi as u8) << 4)
+}
+
+/// Sign-extend the low nibble of a packed byte back to i8.
+#[inline]
+pub fn unpack_nibble_lo(b: u8) -> i8 {
+    ((b << 4) as i8) >> 4
+}
+
+/// Sign-extend the high nibble of a packed byte back to i8.
+#[inline]
+pub fn unpack_nibble_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+// --- int4 packed B (FC weights) ---------------------------------------------
+
+/// A `[k, n]` B operand nibble-packed at plan time for
+/// [`gemm_i4_packed`]: the exact panel layout of
+/// [`matmul::PackedB`] (`ceil(n/nr)` column panels, each `[k x nr]`
+/// row-major, ragged last panel zero-padded) at half the bytes — each
+/// panel row of `nr` values is `nr/2` bytes, low nibble first. Packing
+/// refuses (`None`) when any widened value leaves `[-8, 7]` or the tile
+/// width is odd (panel rows must stay byte-aligned); callers then keep
+/// the i8 or widened-i32 kernels — identical results either way.
+pub struct PackedB4 {
+    data: Vec<u8>,
+    pub k: usize,
+    pub n: usize,
+    /// Tile config this operand was packed with (same roles as on
+    /// [`matmul::PackedB`]).
+    pub cfg: GemmConfig,
+}
+
+impl PackedB4 {
+    /// Pack with the default tile config.
+    pub fn pack(bw: &[i32], k: usize, n: usize) -> Option<PackedB4> {
+        PackedB4::pack_with(bw, k, n, GemmConfig::DEFAULT)
+    }
+
+    /// Pack with an explicit (tuned) tile config.
+    pub fn pack_with(bw: &[i32], k: usize, n: usize, cfg: GemmConfig) -> Option<PackedB4> {
+        debug_assert_eq!(bw.len(), k * n);
+        assert!(
+            cfg.nr > 0 && cfg.nr <= GEMM_NR_MAX,
+            "bad panel width {}",
+            cfg.nr
+        );
+        if cfg.nr % 2 != 0 || bw.iter().any(|&v| !(-8..=7).contains(&v)) {
+            return None;
+        }
+        let nr = cfg.nr;
+        let row_bytes = nr / 2;
+        let np = n.div_ceil(nr);
+        let mut data = vec![0u8; np * k * row_bytes];
+        for jp in 0..np {
+            let j0 = jp * nr;
+            let jw = nr.min(n - j0);
+            let panel = &mut data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+            for kk in 0..k {
+                for jj in 0..jw {
+                    let v = bw[kk * n + j0 + jj] as i8;
+                    let byte = &mut panel[kk * row_bytes + jj / 2];
+                    *byte = if jj % 2 == 0 {
+                        pack_nibbles(v, unpack_nibble_hi(*byte))
+                    } else {
+                        pack_nibbles(unpack_nibble_lo(*byte), v)
+                    };
+                }
+            }
+        }
+        Some(PackedB4 { data, k, n, cfg })
+    }
+
+    /// Bytes held by the packed panels (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// i8-activation GEMM against a nibble-packed B: `C[m,n] = A[m,k] x
+/// B[k,n]`, i32 accumulation. Per column panel, unpacks [`UNPACK_KC`]
+/// panel rows at a time into a stack i8 block and runs the i8 register
+/// tile over it; per output element the products still accumulate in
+/// ascending k (block partial sums added in block order), so the result
+/// is bit-identical to [`matmul::gemm_i8_i32`] over the widened values.
+pub fn gemm_i4_packed(a: &[i8], bp: &PackedB4, m: usize, c: &mut [i32]) {
+    match bp.cfg.nr {
+        4 => gemm_i4_packed_tile::<4>(a, bp, m, c, 4),
+        8 => gemm_i4_packed_tile::<8>(a, bp, m, c, 8),
+        16 => gemm_i4_packed_tile::<16>(a, bp, m, c, 16),
+        nr => gemm_i4_packed_tile::<GEMM_NR_MAX>(a, bp, m, c, nr),
+    }
+}
+
+fn gemm_i4_packed_tile<const NR_CAP: usize>(
+    a: &[i8],
+    bp: &PackedB4,
+    m: usize,
+    c: &mut [i32],
+    nr: usize,
+) {
+    let (k, n) = (bp.k, bp.n);
+    debug_assert_eq!(nr, bp.cfg.nr);
+    debug_assert!(nr > 0 && nr <= NR_CAP && nr % 2 == 0);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    let kc_blk = bp.cfg.kc.clamp(1, UNPACK_KC);
+    let row_bytes = nr / 2;
+    let np = n.div_ceil(nr);
+    let mut unp = [0i8; UNPACK_KC * GEMM_NR_MAX];
+    for jp in 0..np {
+        let j0 = jp * nr;
+        let jw = nr.min(n - j0);
+        let panel = &bp.data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+        for i in 0..m {
+            let base = i * n + j0;
+            c[base..base + jw].fill(0);
+        }
+        let mut kb = 0;
+        while kb < k {
+            let kc = kc_blk.min(k - kb);
+            // Unpack this k-block of the panel once for every row tile.
+            for kk in 0..kc {
+                let prow = &panel[(kb + kk) * row_bytes..(kb + kk + 1) * row_bytes];
+                let urow = &mut unp[kk * nr..(kk + 1) * nr];
+                for (jj, &byte) in prow.iter().enumerate() {
+                    urow[2 * jj] = unpack_nibble_lo(byte);
+                    urow[2 * jj + 1] = unpack_nibble_hi(byte);
+                }
+            }
+            let mut i0 = 0;
+            while i0 < m {
+                let iw = GEMM_MR.min(m - i0);
+                let mut acc = [[0i32; NR_CAP]; GEMM_MR];
+                if nr == NR_CAP {
+                    for kk in 0..kc {
+                        let brow = &unp[kk * NR_CAP..(kk + 1) * NR_CAP];
+                        for r in 0..iw {
+                            let av = a[(i0 + r) * k + kb + kk] as i32;
+                            for jj in 0..NR_CAP {
+                                acc[r][jj] += av * brow[jj] as i32;
+                            }
+                        }
+                    }
+                } else {
+                    for kk in 0..kc {
+                        let brow = &unp[kk * nr..(kk + 1) * nr];
+                        for r in 0..iw {
+                            let av = a[(i0 + r) * k + kb + kk] as i32;
+                            for (jj, &bv) in brow.iter().enumerate() {
+                                acc[r][jj] += av * bv as i32;
+                            }
+                        }
+                    }
+                }
+                for r in 0..iw {
+                    let base = (i0 + r) * n + j0;
+                    for (cv, av) in c[base..base + jw].iter_mut().zip(&acc[r][..jw]) {
+                        *cv += av;
+                    }
+                }
+                i0 += GEMM_MR;
+            }
+            kb += kc;
+        }
+    }
+}
+
+/// [`gemm_i4_packed`] through the plan-selected ISA seam (scalar body
+/// today — see the module note).
+pub fn gemm_i4_packed_isa(isa: Isa, a: &[i8], bp: &PackedB4, m: usize, c: &mut [i32]) {
+    let _ = isa.normalized();
+    gemm_i4_packed(a, bp, m, c);
+}
+
+/// Row-parallel wrapper over [`gemm_i4_packed_isa`] (bit-exact: disjoint
+/// row blocks, identical per-element accumulation order). Thresholds come
+/// from the operand's (possibly tuned) config.
+pub fn gemm_i4_packed_par_isa(
+    pool: &ThreadPool,
+    isa: Isa,
+    a: &[i8],
+    bp: &PackedB4,
+    m: usize,
+    c: &mut [i32],
+) {
+    let (k, n) = (bp.k, bp.n);
+    let min_rows = bp.cfg.par_min_rows.max(1);
+    if !worth_parallel(pool, m, k, n, min_rows, bp.cfg.par_min_work) {
+        gemm_i4_packed_isa(isa, a, bp, m, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, min_rows, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i4_packed_isa(isa, &a[row0 * k..(row0 + rows) * k], bp, rows, block);
+    });
+}
+
+// --- int4 packed A (conv weights) -------------------------------------------
+
+/// An `[m, k]` A operand (the conv weight matrix) nibble-packed at plan
+/// time for [`gemm_i4_packed_a`]: plain row-major, each row
+/// `ceil(k/2)` bytes (low nibble = even k), rows independently
+/// byte-aligned so the ragged k tail pads within its own row. `None`
+/// when any value leaves `[-8, 7]`.
+pub struct PackedA4 {
+    data: Vec<u8>,
+    pub m: usize,
+    pub k: usize,
+    /// Tile config carried for the runtime thresholds (the layout itself
+    /// is row-major, not tiled).
+    pub cfg: GemmConfig,
+}
+
+impl PackedA4 {
+    pub fn pack(aw: &[i32], m: usize, k: usize) -> Option<PackedA4> {
+        PackedA4::pack_with(aw, m, k, GemmConfig::DEFAULT)
+    }
+
+    pub fn pack_with(aw: &[i32], m: usize, k: usize, cfg: GemmConfig) -> Option<PackedA4> {
+        debug_assert_eq!(aw.len(), m * k);
+        if aw.iter().any(|&v| !(-8..=7).contains(&v)) {
+            return None;
+        }
+        let row_bytes = k.div_ceil(2);
+        let mut data = vec![0u8; m * row_bytes];
+        for i in 0..m {
+            for kk in 0..k {
+                let v = aw[i * k + kk] as i8;
+                let byte = &mut data[i * row_bytes + kk / 2];
+                *byte = if kk % 2 == 0 {
+                    pack_nibbles(v, unpack_nibble_hi(*byte))
+                } else {
+                    pack_nibbles(unpack_nibble_lo(*byte), v)
+                };
+            }
+        }
+        Some(PackedA4 { data, m, k, cfg })
+    }
+
+    /// Bytes held by the packed rows (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// GEMM against a nibble-packed A and a runtime row-major i8 B (the conv
+/// im2col columns): `C[m,n] = A[m,k] x B[k,n]`. Unpacks [`GEMM_MR`] weight
+/// rows x [`UNPACK_KC`] k at a time into a stack block, then streams the B
+/// rows exactly like the widened kernel — ascending k per output element,
+/// bit-identical to the naive loop.
+pub fn gemm_i4_packed_a(ap: &PackedA4, b: &[i8], n: usize, c: &mut [i32]) {
+    let (m, k) = (ap.m, ap.k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let row_bytes = k.div_ceil(2);
+    c.fill(0);
+    let mut unp = [0i8; GEMM_MR * UNPACK_KC];
+    let mut i0 = 0;
+    while i0 < m {
+        let iw = GEMM_MR.min(m - i0);
+        let mut kb = 0;
+        while kb < k {
+            let kc = UNPACK_KC.min(k - kb);
+            for r in 0..iw {
+                let prow = &ap.data[(i0 + r) * row_bytes..(i0 + r + 1) * row_bytes];
+                for kk in 0..kc {
+                    let byte = prow[(kb + kk) / 2];
+                    unp[r * UNPACK_KC + kk] = if (kb + kk) % 2 == 0 {
+                        unpack_nibble_lo(byte)
+                    } else {
+                        unpack_nibble_hi(byte)
+                    };
+                }
+            }
+            for kk in 0..kc {
+                let brow = &b[(kb + kk) * n..(kb + kk + 1) * n];
+                for r in 0..iw {
+                    let av = unp[r * UNPACK_KC + kk] as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let crow = &mut c[(i0 + r) * n..(i0 + r + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv as i32;
+                    }
+                }
+            }
+            kb += kc;
+        }
+        i0 += GEMM_MR;
+    }
+}
+
+/// [`gemm_i4_packed_a`] through the plan-selected ISA seam (scalar body
+/// today — see the module note).
+pub fn gemm_i4_packed_a_isa(isa: Isa, ap: &PackedA4, b: &[i8], n: usize, c: &mut [i32]) {
+    let _ = isa.normalized();
+    gemm_i4_packed_a(ap, b, n, c);
+}
+
+// --- bipolar bit packing ----------------------------------------------------
+
+/// Words of 64 bit-packed values covering `k`.
+#[inline]
+pub fn bit_words(k: usize) -> usize {
+    k.div_ceil(64)
+}
+
+/// Pack `m` rows of ±1 i8 values into bit rows (bit set ⇔ +1), 64 per
+/// i64 word, `bit_words(k)` words per row, tail bits zero. Appends to
+/// `out` (callers pass a cleared recycled buffer) and returns `false` —
+/// leaving `out` in an unspecified state — if any value is not ±1: the
+/// runtime gate the fused kernels use to fall back to the widened path.
+pub fn pack_bits_rows(a: &[i8], m: usize, k: usize, out: &mut Vec<i64>) -> bool {
+    debug_assert_eq!(a.len(), m * k);
+    let words = bit_words(k);
+    out.reserve(m * words);
+    for i in 0..m {
+        let row = &a[i * k..(i + 1) * k];
+        for wchunk in row.chunks(64) {
+            let mut w = 0u64;
+            for (t, &v) in wchunk.iter().enumerate() {
+                match v {
+                    1 => w |= 1 << t,
+                    -1 => {}
+                    _ => return false,
+                }
+            }
+            out.push(w as i64);
+        }
+    }
+    true
+}
+
+/// Pack the columns of a row-major `[k, n]` ±1 i8 matrix into bit
+/// columns (`bit_words(k)` words per column). Same contract as
+/// [`pack_bits_rows`].
+pub fn pack_bits_cols(b: &[i8], k: usize, n: usize, out: &mut Vec<i64>) -> bool {
+    debug_assert_eq!(b.len(), k * n);
+    let words = bit_words(k);
+    let base = out.len();
+    out.resize(base + n * words, 0);
+    for kk in 0..k {
+        let (w, t) = (kk / 64, kk % 64);
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (j, &v) in brow.iter().enumerate() {
+            match v {
+                1 => out[base + j * words + w] |= 1 << t,
+                -1 => {}
+                _ => return false,
+            }
+        }
+    }
+    true
+}
+
+/// A `[k, n]` bipolar B operand bit-packed at plan time for
+/// [`gemm_xnor`]: column-major bit columns so each output element XORs
+/// two contiguous word runs. `None` unless every widened value is ±1.
+pub struct BitPackedB {
+    data: Vec<i64>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl BitPackedB {
+    pub fn pack(bw: &[i32], k: usize, n: usize) -> Option<BitPackedB> {
+        debug_assert_eq!(bw.len(), k * n);
+        if bw.iter().any(|&v| v != 1 && v != -1) {
+            return None;
+        }
+        let words = bit_words(k);
+        let mut data = vec![0i64; n * words];
+        for kk in 0..k {
+            let (w, t) = (kk / 64, kk % 64);
+            for j in 0..n {
+                if bw[kk * n + j] == 1 {
+                    data[j * words + w] |= 1 << t;
+                }
+            }
+        }
+        Some(BitPackedB { data, k, n })
+    }
+
+    /// Bytes held by the packed bit columns (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+/// An `[m, k]` bipolar A operand (conv weights) bit-packed at plan time
+/// for [`gemm_xnor_a`]: row-major bit rows. `None` unless all ±1.
+pub struct BitPackedA {
+    data: Vec<i64>,
+    pub m: usize,
+    pub k: usize,
+}
+
+impl BitPackedA {
+    pub fn pack(aw: &[i32], m: usize, k: usize) -> Option<BitPackedA> {
+        debug_assert_eq!(aw.len(), m * k);
+        if aw.iter().any(|&v| v != 1 && v != -1) {
+            return None;
+        }
+        let mut data = Vec::new();
+        let packed: Vec<i8> = aw.iter().map(|&v| v as i8).collect();
+        let ok = pack_bits_rows(&packed, m, k, &mut data);
+        debug_assert!(ok);
+        Some(BitPackedA { data, m, k })
+    }
+
+    /// Bytes held by the packed bit rows (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+/// XNOR-popcount GEMM: bit-packed ±1 activations (rows, from
+/// [`pack_bits_rows`]) x bit-packed ±1 weights. For each element,
+/// `dot = k − 2·popcount(a XOR b)` — exact over i32, so bit-identical to
+/// the widened ±1 triple loop.
+pub fn gemm_xnor(a_bits: &[i64], bb: &BitPackedB, m: usize, c: &mut [i32]) {
+    let words = bit_words(bb.k);
+    let (k, n) = (bb.k as i32, bb.n);
+    debug_assert_eq!(a_bits.len(), m * words);
+    debug_assert_eq!(c.len(), m * bb.n);
+    for i in 0..m {
+        let arow = &a_bits[i * words..(i + 1) * words];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let bcol = &bb.data[j * words..(j + 1) * words];
+            let mut diff = 0u32;
+            for (aw, bw) in arow.iter().zip(bcol) {
+                diff += (aw ^ bw).count_ones();
+            }
+            *cv = k - 2 * diff as i32;
+        }
+    }
+}
+
+/// [`gemm_xnor`] through the plan-selected ISA seam (scalar body today —
+/// `count_ones` already lowers to the native popcount; see module note).
+pub fn gemm_xnor_isa(isa: Isa, a_bits: &[i64], bb: &BitPackedB, m: usize, c: &mut [i32]) {
+    let _ = isa.normalized();
+    gemm_xnor(a_bits, bb, m, c);
+}
+
+/// Row-parallel wrapper over [`gemm_xnor_isa`] (bit-exact: disjoint rows,
+/// exact integer identity per element). Default thresholds — bit-packed
+/// operands have no tuned config.
+pub fn gemm_xnor_par_isa(
+    pool: &ThreadPool,
+    isa: Isa,
+    a_bits: &[i64],
+    bb: &BitPackedB,
+    m: usize,
+    c: &mut [i32],
+) {
+    let (k, n) = (bb.k, bb.n);
+    let words = bit_words(k);
+    if !worth_parallel(
+        pool,
+        m,
+        k,
+        n,
+        matmul::GEMM_PAR_MIN_ROWS,
+        matmul::GEMM_PAR_MIN_WORK,
+    ) {
+        gemm_xnor_isa(isa, a_bits, bb, m, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, matmul::GEMM_PAR_MIN_ROWS, |row0, block| {
+        let rows = block.len() / n;
+        gemm_xnor_isa(
+            isa,
+            &a_bits[row0 * words..(row0 + rows) * words],
+            bb,
+            rows,
+            block,
+        );
+    });
+}
+
+/// XNOR-popcount GEMM with bit-packed A rows (conv weights) against
+/// bit-packed B columns built at run time from the im2col buffer
+/// ([`pack_bits_cols`]).
+pub fn gemm_xnor_a(ap: &BitPackedA, b_bits: &[i64], n: usize, c: &mut [i32]) {
+    let words = bit_words(ap.k);
+    let (m, k) = (ap.m, ap.k as i32);
+    debug_assert_eq!(b_bits.len(), n * words);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &ap.data[i * words..(i + 1) * words];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let bcol = &b_bits[j * words..(j + 1) * words];
+            let mut diff = 0u32;
+            for (aw, bw) in arow.iter().zip(bcol) {
+                diff += (aw ^ bw).count_ones();
+            }
+            *cv = k - 2 * diff as i32;
+        }
+    }
+}
+
+/// [`gemm_xnor_a`] through the plan-selected ISA seam (scalar body today).
+pub fn gemm_xnor_a_isa(isa: Isa, ap: &BitPackedA, b_bits: &[i64], n: usize, c: &mut [i32]) {
+    let _ = isa.normalized();
+    gemm_xnor_a(ap, b_bits, n, c);
+}
+
+// --- width-dispatched plan-time weight storage ------------------------------
+
+/// Plan-time baked B-side weights at whatever width the optimizer
+/// selected (see `opt::select_fc_width`): the i8 panels every chain gets
+/// today, nibble panels when the weights fit int4, bit columns when they
+/// are bipolar. The fused FC kernel dispatches on the variant at run
+/// time and falls back to the widened-i32 path whenever the activations
+/// don't qualify (non-i8, nonzero zero point, non-±1 for XNOR) — so the
+/// narrow variants can never change results, only memory traffic.
+pub enum PackedWeights {
+    I8(matmul::PackedB),
+    I4(PackedB4),
+    Bipolar(BitPackedB),
+}
+
+impl PackedWeights {
+    /// Bytes held by the baked storage (plan-memory accounting /
+    /// `Kernel::baked_bytes`).
+    pub fn bytes(&self) -> usize {
+        match self {
+            PackedWeights::I8(p) => p.bytes(),
+            PackedWeights::I4(p) => p.bytes(),
+            PackedWeights::Bipolar(p) => p.bytes(),
+        }
+    }
+
+    /// Logical weight bits per value (8 / 4 / 1) — feeds the hwsim cost
+    /// model's DRAM-traffic scaling and `plan_stats`.
+    pub fn bits(&self) -> u8 {
+        match self {
+            PackedWeights::I8(_) => 8,
+            PackedWeights::I4(_) => 4,
+            PackedWeights::Bipolar(_) => 1,
+        }
+    }
+
+    pub fn width_name(&self) -> &'static str {
+        match self {
+            PackedWeights::I8(_) => "int8",
+            PackedWeights::I4(_) => "int4",
+            PackedWeights::Bipolar(_) => "bipolar",
+        }
+    }
+}
+
+/// Plan-time baked A-side (conv) weights — the conv twin of
+/// [`PackedWeights`].
+pub enum PackedConvWeights {
+    I8(matmul::PackedA),
+    I4(PackedA4),
+    Bipolar(BitPackedA),
+}
+
+impl PackedConvWeights {
+    pub fn bytes(&self) -> usize {
+        match self {
+            PackedConvWeights::I8(p) => p.bytes(),
+            PackedConvWeights::I4(p) => p.bytes(),
+            PackedConvWeights::Bipolar(p) => p.bytes(),
+        }
+    }
+
+    pub fn bits(&self) -> u8 {
+        match self {
+            PackedConvWeights::I8(_) => 8,
+            PackedConvWeights::I4(_) => 4,
+            PackedConvWeights::Bipolar(_) => 1,
+        }
+    }
+
+    pub fn width_name(&self) -> &'static str {
+        match self {
+            PackedConvWeights::I8(_) => "int8",
+            PackedConvWeights::I4(_) => "int4",
+            PackedConvWeights::Bipolar(_) => "bipolar",
+        }
+    }
+}
+
+/// Local copy of the packed kernels' pool-dispatch policy (the matmul
+/// original is private; the thresholds mean the same thing here).
+fn worth_parallel(
+    pool: &ThreadPool,
+    m: usize,
+    k: usize,
+    n: usize,
+    min_rows: usize,
+    min_work: usize,
+) -> bool {
+    pool.threads() > 1
+        && parallel::allow_pool_dispatch()
+        && m >= 2 * min_rows
+        && m.saturating_mul(k).saturating_mul(n) >= min_work
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn nibble_round_trip_all_values() {
+        for lo in -8..=7i8 {
+            for hi in -8..=7i8 {
+                let b = pack_nibbles(lo, hi);
+                assert_eq!(unpack_nibble_lo(b), lo);
+                assert_eq!(unpack_nibble_hi(b), hi);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_b4_refuses_out_of_range() {
+        assert!(PackedB4::pack(&[0, 8], 1, 2).is_none());
+        assert!(PackedB4::pack(&[-9, 0], 1, 2).is_none());
+        assert!(PackedB4::pack(&[-8, 7], 1, 2).is_some());
+        assert!(PackedA4::pack(&[0, 8], 2, 1).is_none());
+        assert!(PackedA4::pack(&[-8, 7], 2, 1).is_some());
+    }
+
+    #[test]
+    fn i4_gemm_matches_naive_ragged() {
+        // Shapes straddling panel width, MR, and the unpack block.
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (4, 16, 8), (5, 300, 17), (2, 513, 9)] {
+            let a: Vec<i32> = (0..m * k).map(|i| (i as i32 * 37 % 255) - 127).collect();
+            let b: Vec<i32> = (0..k * n).map(|i| (i as i32 * 13 % 16) - 8).collect();
+            let want = naive(&a, &b, m, k, n);
+            let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+            let bp = PackedB4::pack(&b, k, n).unwrap();
+            let mut c = vec![0i32; m * n];
+            gemm_i4_packed(&a8, &bp, m, &mut c);
+            assert_eq!(c, want, "B-packed m={m} k={k} n={n}");
+            let ap = PackedA4::pack(&a.iter().map(|&v| v.clamp(-8, 7)).collect::<Vec<_>>(), m, k)
+                .unwrap();
+            let want_a = naive(
+                &a.iter().map(|&v| v.clamp(-8, 7)).collect::<Vec<_>>(),
+                &b,
+                m,
+                k,
+                n,
+            );
+            let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+            let mut c = vec![0i32; m * n];
+            gemm_i4_packed_a(&ap, &b8, n, &mut c);
+            assert_eq!(c, want_a, "A-packed m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn bit_pack_round_trip_and_ragged_tails() {
+        // k not a multiple of 64: tail bits must pad to zero on both
+        // sides so whole-word popcounts stay exact.
+        for &(m, k) in &[(1, 1), (3, 63), (2, 64), (2, 65), (4, 130)] {
+            let vals: Vec<i8> = (0..m * k).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+            let mut bits = Vec::new();
+            assert!(pack_bits_rows(&vals, m, k, &mut bits));
+            assert_eq!(bits.len(), m * bit_words(k));
+            for i in 0..m {
+                for kk in 0..k {
+                    let bit = (bits[i * bit_words(k) + kk / 64] >> (kk % 64)) & 1;
+                    assert_eq!(bit == 1, vals[i * k + kk] == 1, "row {i} bit {kk}");
+                }
+            }
+        }
+        let mut bits = Vec::new();
+        assert!(!pack_bits_rows(&[1, 0, -1], 1, 3, &mut bits));
+    }
+
+    #[test]
+    fn xnor_gemm_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 63, 5), (4, 64, 8), (5, 200, 17), (2, 513, 3)] {
+            let a: Vec<i32> = (0..m * k).map(|i| if i % 5 < 2 { -1 } else { 1 }).collect();
+            let b: Vec<i32> = (0..k * n).map(|i| if i % 7 < 4 { 1 } else { -1 }).collect();
+            let want = naive(&a, &b, m, k, n);
+            let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+            let mut a_bits = Vec::new();
+            assert!(pack_bits_rows(&a8, m, k, &mut a_bits));
+            let bb = BitPackedB::pack(&b, k, n).unwrap();
+            let mut c = vec![0i32; m * n];
+            gemm_xnor(&a_bits, &bb, m, &mut c);
+            assert_eq!(c, want, "xnor m={m} k={k} n={n}");
+
+            // Conv orientation: A bit rows at plan time, B bit cols at
+            // run time.
+            let ap = BitPackedA::pack(&a, m, k).unwrap();
+            let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+            let mut b_bits = Vec::new();
+            assert!(pack_bits_cols(&b8, k, n, &mut b_bits));
+            let mut c = vec![0i32; m * n];
+            gemm_xnor_a(&ap, &b_bits, n, &mut c);
+            assert_eq!(c, want, "xnor-a m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn bipolar_pack_refuses_non_pm1() {
+        assert!(BitPackedB::pack(&[1, -1, 0, 1], 2, 2).is_none());
+        assert!(BitPackedA::pack(&[2, 1], 1, 2).is_none());
+        assert!(BitPackedB::pack(&[1, -1, -1, 1], 2, 2).is_some());
+    }
+
+    #[test]
+    fn packed_bytes_report_reduction() {
+        let (k, n) = (128, 64);
+        let b4: Vec<i32> = (0..k * n).map(|i| (i as i32 % 16) - 8 + 1).collect();
+        let b1: Vec<i32> = (0..k * n).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let p8 = matmul::PackedB::pack(&b4, k, n).unwrap();
+        let p4 = PackedB4::pack(&b4, k, n).unwrap();
+        let p1 = BitPackedB::pack(&b1, k, n).unwrap();
+        assert_eq!(p4.bytes() * 2, p8.bytes());
+        assert_eq!(p1.bytes() * 8, k * n);
+        assert_eq!(PackedWeights::I4(p4).bits(), 4);
+        assert_eq!(PackedWeights::Bipolar(p1).width_name(), "bipolar");
+    }
+}

@@ -6,6 +6,7 @@
 //! blocked GEMM the fully-connected path uses, so one hot loop serves
 //! both patterns.
 
+use super::bitpack;
 use super::isa::Isa;
 use super::matmul::{gemm_f32, gemm_i32, gemm_i8_packed_a_isa, PackedA};
 use super::OpError;
@@ -399,6 +400,101 @@ pub fn conv_integer_prewidened_into(
         }
     }
     Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
+}
+
+/// Width-dispatched form of [`conv_integer_prewidened_into`]: the baked
+/// conv weights may be i8 row panels, int4 nibble rows, or bipolar bit
+/// rows (see [`bitpack::PackedConvWeights`]). Narrow paths engage only
+/// when the whole call qualifies — i8 input with zero zero-point for
+/// int4; additionally all-±1 input and zero padding for XNOR (im2col
+/// pads with 0, which is not a bipolar level) — otherwise the call
+/// degrades to the widened-i32 kernel over `wv`, identical results.
+///
+/// The XNOR path packs each im2col column block into a per-call bit
+/// buffer (small: `patch * ceil(k/64)` words); the bipolar figure models
+/// are tiny, so this stays off the alloc-regression paths.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_integer_packed_into(
+    x: &Tensor,
+    wv: &[i32],
+    wp: Option<&bitpack::PackedConvWeights>,
+    m: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    x_zp: i32,
+    attrs: &ConvAttrs,
+    isa: Isa,
+    recycled: Option<Tensor>,
+    scratch: &mut Option<Tensor>,
+) -> Result<Tensor, OpError> {
+    let narrow = matches!(
+        wp,
+        Some(bitpack::PackedConvWeights::I4(_)) | Some(bitpack::PackedConvWeights::Bipolar(_))
+    );
+    if !narrow {
+        let wp8 = match wp {
+            Some(bitpack::PackedConvWeights::I8(p)) => Some(p),
+            _ => None,
+        };
+        return conv_integer_prewidened_into(
+            x, wv, wp8, m, c, kh, kw, x_zp, attrs, isa, recycled, scratch,
+        );
+    }
+    if attrs.group != 1 {
+        return Err(OpError::Semantics("group conv not supported".into()));
+    }
+    let (n, xc, h, wd) = nchw(x)?;
+    if c != xc {
+        return Err(OpError::Semantics(format!("channel mismatch {c} vs {xc}")));
+    }
+    let oh = out_spatial(h, kh, attrs.pads[0], attrs.pads[2], attrs.strides[0], attrs.dilations[0]);
+    let ow = out_spatial(wd, kw, attrs.pads[1], attrs.pads[3], attrs.strides[1], attrs.dilations[1]);
+    let patch_rows = c * kh * kw;
+    let patch = oh * ow;
+    match (wp, x.data()) {
+        (Some(bitpack::PackedConvWeights::I4(ap)), TensorData::I8(xv))
+            if x_zp == 0 && ap.m == m && ap.k == patch_rows =>
+        {
+            let mut out = recycled_i32_zeroed(recycled, n * m * patch);
+            let mut col = recycled_i8_zeroed(scratch.take(), patch_rows * patch);
+            for (b, dst) in out.chunks_mut(m * patch).enumerate() {
+                let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+                im2col_i8(isa, src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
+                bitpack::gemm_i4_packed_a_isa(isa, ap, &col, patch, dst);
+            }
+            let len = col.len();
+            *scratch = Tensor::from_i8(&[len], col).ok();
+            Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
+        }
+        (Some(bitpack::PackedConvWeights::Bipolar(ap)), TensorData::I8(xv))
+            if x_zp == 0
+                && ap.m == m
+                && ap.k == patch_rows
+                && attrs.pads == [0, 0, 0, 0]
+                && xv.iter().all(|&v| v == 1 || v == -1) =>
+        {
+            // All-±1 input and no zero padding ⇒ every im2col column is
+            // ±1 and the bit pack cannot fail.
+            let mut out = recycled_i32_zeroed(recycled, n * m * patch);
+            let mut col = recycled_i8_zeroed(scratch.take(), patch_rows * patch);
+            let mut bits: Vec<i64> = Vec::new();
+            for (b, dst) in out.chunks_mut(m * patch).enumerate() {
+                let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+                im2col_i8(isa, src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
+                bits.clear();
+                let ok = bitpack::pack_bits_cols(&col, patch_rows, patch, &mut bits);
+                debug_assert!(ok);
+                bitpack::gemm_xnor_a_isa(isa, ap, &bits, patch, dst);
+            }
+            let len = col.len();
+            *scratch = Tensor::from_i8(&[len], col).ok();
+            Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
+        }
+        _ => conv_integer_prewidened_into(
+            x, wv, None, m, c, kh, kw, x_zp, attrs, isa, recycled, scratch,
+        ),
+    }
 }
 
 /// ONNX float `Conv` (group=1), same im2col+GEMM path in f32.

@@ -236,6 +236,72 @@ pub fn relu_into(x: &Tensor, recycled: Option<Tensor>) -> Result<Tensor, OpError
     Ok(Tensor::new(Shape::from_slice(x.shape()), data)?)
 }
 
+/// ONNX `Clip` (opset 13 form: optional scalar `min`/`max` inputs).
+///
+/// The sub-8-bit codification places an f32 Clip with integer bounds
+/// between the rescale stage and its `QuantizeLinear` to declare the
+/// narrow logical range (see `quant::scheme`). Semantics are numpy's:
+/// out-of-range values pin to the violated bound, NaN propagates
+/// (comparisons with NaN are false). NaN propagation is what makes the
+/// matcher's Clip absorption exact — the fused epilogue's
+/// `clamp(round(x))` also sends NaN through to the saturating cast, so
+/// both paths agree on every f32 bit pattern.
+pub fn clip(x: &Tensor, lo: Option<&Tensor>, hi: Option<&Tensor>) -> Result<Tensor, OpError> {
+    clip_into(x, lo, hi, None)
+}
+
+/// [`clip`] into recycled storage (identical values).
+pub fn clip_into(
+    x: &Tensor,
+    lo: Option<&Tensor>,
+    hi: Option<&Tensor>,
+    recycled: Option<Tensor>,
+) -> Result<Tensor, OpError> {
+    let scalar = |t: Option<&Tensor>, which: &str| -> Result<Option<f32>, OpError> {
+        match t {
+            None => Ok(None),
+            Some(t) => {
+                if t.numel() != 1 {
+                    return Err(OpError::Semantics(format!(
+                        "Clip: {which} must be a scalar, got shape {:?}",
+                        t.shape()
+                    )));
+                }
+                Ok(Some(t.as_f32()?[0]))
+            }
+        }
+    };
+    let (lo, hi) = (scalar(lo, "min")?, scalar(hi, "max")?);
+    let n = x.numel();
+    let data = match x.data() {
+        TensorData::F32(v) => {
+            let mut o = recycled_f32(recycled, n);
+            o.extend(v.iter().map(|&x| {
+                let mut y = x;
+                if let Some(l) = lo {
+                    if y < l {
+                        y = l;
+                    }
+                }
+                if let Some(h) = hi {
+                    if y > h {
+                        y = h;
+                    }
+                }
+                y
+            }));
+            TensorData::F32(o)
+        }
+        d => {
+            return Err(OpError::Semantics(format!(
+                "Clip: unsupported dtype {}",
+                d.dtype()
+            )))
+        }
+    };
+    Ok(Tensor::new(Shape::from_slice(x.shape()), data)?)
+}
+
 /// ONNX `Tanh` — f32 or genuine f16 (Figure 5's `Tanh FLOAT16 -> FLOAT16`).
 pub fn tanh(x: &Tensor) -> Result<Tensor, OpError> {
     tanh_into(x, None)
@@ -340,6 +406,25 @@ mod tests {
         assert_eq!(relu(&i).unwrap().as_i32().unwrap(), &[0, 0, 5]);
         let q = Tensor::from_i8(&[2], vec![-7, 7]).unwrap();
         assert_eq!(relu(&q).unwrap().as_i8().unwrap(), &[0, 7]);
+    }
+
+    #[test]
+    fn clip_bounds_and_nan() {
+        let x = Tensor::from_f32(&[5], vec![-9.0, -1.0, 0.5, 7.0, f32::NAN]).unwrap();
+        let lo = Tensor::scalar_f32(-7.0);
+        let hi = Tensor::scalar_f32(7.0);
+        let y = clip(&x, Some(&lo), Some(&hi)).unwrap();
+        let v = y.as_f32().unwrap();
+        assert_eq!(&v[..4], &[-7.0, -1.0, 0.5, 7.0]);
+        assert!(v[4].is_nan(), "Clip must propagate NaN (numpy semantics)");
+        // One-sided and missing bounds.
+        let y = clip(&x, Some(&lo), None).unwrap();
+        assert_eq!(y.as_f32().unwrap()[0], -7.0);
+        let y = clip(&x, None, None).unwrap();
+        assert_eq!(y.as_f32().unwrap()[..4], [-9.0, -1.0, 0.5, 7.0]);
+        // Non-scalar bound rejected.
+        let bad = Tensor::from_f32(&[2], vec![0.0, 1.0]).unwrap();
+        assert!(clip(&x, Some(&bad), None).is_err());
     }
 
     #[test]

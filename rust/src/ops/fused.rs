@@ -25,11 +25,11 @@
 
 use super::isa::Isa;
 use super::OpError;
-use super::{conv, matmul, qlinear};
+use super::{bitpack, conv, matmul, qlinear};
 use crate::onnx::shape::ConvAttrs;
 use crate::quant::lut::ActLut;
 use crate::quant::QType;
-use crate::tensor::{recycled_i8, recycled_u8, Shape, Tensor, TensorData};
+use crate::tensor::{recycled_i8, recycled_u8, DType, Shape, Tensor, TensorData};
 
 /// The baked scalar tail of a quantized FC/conv chain: `Cast → Mul(s1)
 /// [→ Mul(s2)] [→ Relu] → QuantizeLinear(1/inv_scale, zp)`.
@@ -299,8 +299,14 @@ fn write_quantized(
 ) -> Result<Tensor, OpError> {
     let isa = isa.normalized();
     let n = acc.len();
+    // Satellite fix + width generalization in one: the clamp bounds come
+    // from the qtype's derived logical range (single source with
+    // `qlinear::saturate_range`), not restated per container — a narrow
+    // out_qtype (int4, bipolar) saturates to ITS range while writing the
+    // same i8/u8 container tensor the rest of the plan consumes.
+    let (lo, hi) = epi.out_qtype.range();
     macro_rules! emit {
-        ($recycle:ident, $sat:path, $variant:ident) => {{
+        ($recycle:ident, $sat:expr, $variant:ident) => {{
             let mut o = $recycle(recycled, n);
             match bias {
                 BiasLayout::PerColumn(b) if !b.is_empty() => {
@@ -329,20 +335,29 @@ fn write_quantized(
             TensorData::$variant(o)
         }};
     }
-    let data = match epi.out_qtype {
-        QType::I8 => emit!(recycled_i8, qlinear::saturate_i8, I8),
-        QType::U8 => emit!(recycled_u8, qlinear::saturate_u8, U8),
+    let data = match epi.out_qtype.dtype() {
+        crate::tensor::DType::I8 => emit!(
+            recycled_i8,
+            |v: f32| qlinear::saturate_range(v, lo, hi) as i8,
+            I8
+        ),
+        _ => emit!(
+            recycled_u8,
+            |v: f32| qlinear::saturate_range(v, lo, hi) as u8,
+            U8
+        ),
     };
     Ok(Tensor::new(shape, data)?)
 }
 
 /// Fused quantized fully-connected block: `MatMulInteger [+Add] + Cast +
 /// Mul[+Mul] [+Relu] + QuantizeLinear` as one kernel. The weight fields
-/// mirror [`super::Kernel::MatMulIntegerPrebound`] (packed i8 panels with
-/// the widened-i32 fallback).
+/// extend [`super::Kernel::MatMulIntegerPrebound`]'s (packed weights with
+/// the widened-i32 fallback) to whatever width the optimizer baked —
+/// i8 panels, int4 nibble panels, or bipolar bit columns.
 pub struct FusedQFc {
     pub bw: Vec<i32>,
-    pub bp: Option<matmul::PackedB>,
+    pub bp: Option<bitpack::PackedWeights>,
     pub k: usize,
     pub n: usize,
     pub a_zp: i32,
@@ -357,16 +372,18 @@ pub struct FusedQFc {
 
 impl FusedQFc {
     /// `scratch[0]` parks the i32 accumulator between runs (the only
-    /// intermediate buffer of the whole chain); `recycled` is the retired
-    /// quantized output — steady state allocates nothing
-    /// (`tests/alloc_regression.rs`).
+    /// intermediate buffer of the whole chain); `scratch[1]` the XNOR
+    /// activation bit-pack buffer when the weights are bipolar;
+    /// `recycled` is the retired quantized output — steady state
+    /// allocates nothing (`tests/alloc_regression.rs`).
     pub fn run(
         &self,
         x: &Tensor,
         recycled: Option<Tensor>,
         scratch: &mut [Option<Tensor>; 2],
     ) -> Result<Tensor, OpError> {
-        let acc = matmul::matmul_integer_prewidened_into(
+        let [acc_scratch, bits_scratch] = scratch;
+        let acc = matmul::matmul_integer_packed_into(
             x,
             &self.bw,
             self.bp.as_ref(),
@@ -374,7 +391,8 @@ impl FusedQFc {
             self.n,
             self.a_zp,
             self.isa,
-            scratch[0].take(),
+            acc_scratch.take(),
+            bits_scratch,
         )?;
         let bias = match &self.bias {
             Some(b) => BiasLayout::PerColumn(b),
@@ -388,16 +406,17 @@ impl FusedQFc {
             self.isa,
             recycled,
         )?;
-        scratch[0] = Some(acc);
+        *acc_scratch = Some(acc);
         Ok(out)
     }
 }
 
 /// Fused quantized convolution block: the same chain over `ConvInteger`.
-/// Weight fields mirror [`super::Kernel::ConvIntegerPrebound`].
+/// Weight fields extend [`super::Kernel::ConvIntegerPrebound`]'s to the
+/// optimizer-selected width (i8 / int4 / bipolar).
 pub struct FusedQConv {
     pub wv: Vec<i32>,
-    pub wp: Option<matmul::PackedA>,
+    pub wp: Option<bitpack::PackedConvWeights>,
     pub m: usize,
     pub c: usize,
     pub kh: usize,
@@ -422,7 +441,7 @@ impl FusedQConv {
         scratch: &mut [Option<Tensor>; 2],
     ) -> Result<Tensor, OpError> {
         let [col_scratch, acc_scratch] = scratch;
-        let acc = conv::conv_integer_prewidened_into(
+        let acc = conv::conv_integer_packed_into(
             x,
             &self.wv,
             self.wp.as_ref(),
@@ -469,23 +488,28 @@ impl FusedActLut {
     pub fn run(&self, x: &Tensor, recycled: Option<Tensor>) -> Result<Tensor, OpError> {
         let n = x.numel();
         let shape = Shape::from_slice(x.shape());
-        let data = match (x.data(), self.in_qtype, self.lut.out_qtype) {
-            (TensorData::I8(v), QType::I8, QType::I8) => {
+        // The dispatch keys on the CONTAINER dtypes; narrow logical
+        // widths share their container's arm (the table already encodes
+        // the narrow saturation).
+        let in_dt = self.in_qtype.dtype();
+        let out_dt = self.lut.out_qtype.dtype();
+        let data = match (x.data(), in_dt, out_dt) {
+            (TensorData::I8(v), DType::I8, DType::I8) => {
                 let mut o = recycled_i8(recycled, n);
                 o.extend(v.iter().map(|&q| self.lut.get_raw(q as u8) as i8));
                 TensorData::I8(o)
             }
-            (TensorData::I8(v), QType::I8, QType::U8) => {
+            (TensorData::I8(v), DType::I8, DType::U8) => {
                 let mut o = recycled_u8(recycled, n);
                 o.extend(v.iter().map(|&q| self.lut.get_raw(q as u8) as u8));
                 TensorData::U8(o)
             }
-            (TensorData::U8(v), QType::U8, QType::I8) => {
+            (TensorData::U8(v), DType::U8, DType::I8) => {
                 let mut o = recycled_i8(recycled, n);
                 o.extend(v.iter().map(|&q| self.lut.get_raw(q) as i8));
                 TensorData::I8(o)
             }
-            (TensorData::U8(v), QType::U8, QType::U8) => {
+            (TensorData::U8(v), DType::U8, DType::U8) => {
                 let mut o = recycled_u8(recycled, n);
                 o.extend(v.iter().map(|&q| self.lut.get_raw(q) as u8));
                 TensorData::U8(o)
@@ -553,9 +577,9 @@ mod tests {
         if relu {
             t = elementwise::relu(&t).unwrap();
         }
-        let zp = match out {
-            QType::I8 => Tensor::scalar_i8(zp as i8),
-            QType::U8 => Tensor::scalar_u8(zp as u8),
+        let zp = match out.dtype() {
+            DType::I8 => Tensor::scalar_i8(zp as i8),
+            _ => Tensor::scalar_u8(zp as u8),
         };
         ql::quantize_linear(&t, &Tensor::scalar_f32(scale), Some(&zp)).unwrap()
     }

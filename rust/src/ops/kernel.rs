@@ -83,6 +83,11 @@ pub enum Kernel {
     QuantizeLinear,
     DequantizeLinear,
     Relu,
+    /// Clip; the optional scalar min/max arrive as inputs at run time
+    /// (opset 13 form). The sub-8-bit codification emits integer-valued
+    /// f32 bounds here to declare a narrow logical range — see
+    /// `quant::scheme` and the matcher's Clip absorption.
+    Clip,
     Tanh,
     Sigmoid,
     Softmax {
@@ -280,6 +285,7 @@ impl Kernel {
             "QuantizeLinear" => Kernel::QuantizeLinear,
             "DequantizeLinear" => Kernel::DequantizeLinear,
             "Relu" => Kernel::Relu,
+            "Clip" => Kernel::Clip,
             "Tanh" => Kernel::Tanh,
             "Sigmoid" => Kernel::Sigmoid,
             "Softmax" => Kernel::Softmax {
@@ -332,6 +338,7 @@ impl Kernel {
             Kernel::QuantizeLinear => "QuantizeLinear",
             Kernel::DequantizeLinear => "DequantizeLinear",
             Kernel::Relu => "Relu",
+            Kernel::Clip => "Clip",
             Kernel::Tanh => "Tanh",
             Kernel::Sigmoid => "Sigmoid",
             Kernel::Softmax { .. } => "Softmax",
@@ -374,13 +381,15 @@ impl Kernel {
                     k: *k,
                     out: *n,
                     kind: ProblemKind::PackedBGemm,
+                    bits: 8,
                 })
             }
-            Kernel::FusedQFc(f) if f.bp.is_some() => Some(GemmProblem {
+            Kernel::FusedQFc(f) => f.bp.as_ref().map(|p| GemmProblem {
                 w: &f.bw,
                 k: f.k,
                 out: f.n,
                 kind: ProblemKind::PackedBGemm,
+                bits: p.bits(),
             }),
             Kernel::ConvIntegerPrebound {
                 wv, wp, m, c, kh, kw, ..
@@ -389,12 +398,14 @@ impl Kernel {
                 k: c * kh * kw,
                 out: *m,
                 kind: ProblemKind::PackedAGemm,
+                bits: 8,
             }),
-            Kernel::FusedQConv(f) if f.wp.is_some() => Some(GemmProblem {
+            Kernel::FusedQConv(f) => f.wp.as_ref().map(|p| GemmProblem {
                 w: &f.wv,
                 k: f.c * f.kh * f.kw,
                 out: f.m,
                 kind: ProblemKind::PackedAGemm,
+                bits: p.bits(),
             }),
             _ => None,
         }
@@ -405,31 +416,54 @@ impl Kernel {
     /// the panels hold the same widened values in a different layout, and
     /// every tile config accumulates in the same ascending-k order.
     pub fn retune(&mut self, cfg: crate::tune::GemmConfig) {
+        use super::bitpack::{PackedA4, PackedB4, PackedConvWeights, PackedWeights};
         use crate::ops::matmul::{PackedA, PackedB};
         match self {
             Kernel::MatMulIntegerPrebound { bw, bp, k, n, .. } if bp.is_some() => {
                 *bp = PackedB::pack_with(bw, *k, *n, cfg);
             }
-            Kernel::FusedQFc(f) if f.bp.is_some() => {
-                f.bp = PackedB::pack_with(&f.bw, f.k, f.n, cfg);
-            }
+            Kernel::FusedQFc(f) => match &f.bp {
+                Some(PackedWeights::I8(_)) => {
+                    f.bp = PackedB::pack_with(&f.bw, f.k, f.n, cfg).map(PackedWeights::I8);
+                }
+                Some(PackedWeights::I4(_)) => {
+                    // Keep the old panels if the tuned tile width can't
+                    // byte-align nibbles (odd nr).
+                    if let Some(p) = PackedB4::pack_with(&f.bw, f.k, f.n, cfg) {
+                        f.bp = Some(PackedWeights::I4(p));
+                    }
+                }
+                // Bit columns have no tile parameters.
+                Some(PackedWeights::Bipolar(_)) | None => {}
+            },
             Kernel::ConvIntegerPrebound {
                 wv, wp, m, c, kh, kw, ..
             } if wp.is_some() => {
                 *wp = PackedA::pack_with(wv, *m, *c * *kh * *kw, cfg);
             }
-            Kernel::FusedQConv(f) if f.wp.is_some() => {
-                f.wp = PackedA::pack_with(&f.wv, f.m, f.c * f.kh * f.kw, cfg);
-            }
+            Kernel::FusedQConv(f) => match &f.wp {
+                Some(PackedConvWeights::I8(_)) => {
+                    f.wp = PackedA::pack_with(&f.wv, f.m, f.c * f.kh * f.kw, cfg)
+                        .map(PackedConvWeights::I8);
+                }
+                Some(PackedConvWeights::I4(_)) => {
+                    if let Some(p) = PackedA4::pack_with(&f.wv, f.m, f.c * f.kh * f.kw, cfg) {
+                        f.wp = Some(PackedConvWeights::I4(p));
+                    }
+                }
+                Some(PackedConvWeights::Bipolar(_)) | None => {}
+            },
             _ => {}
         }
     }
 
     /// Bytes of baked quantized-weight storage this kernel holds (the
-    /// widened i32 copy, the packed i8 panels, the folded bias) — the
-    /// plan-memory number behind the lazy-twin accounting. Float-path
-    /// bakes (Gemm `bt`, Conv `bias4`) are excluded: they are not
-    /// duplicated between fused and unfused twins in the paper patterns.
+    /// widened i32 copy, the packed panels at whatever width the
+    /// optimizer selected, the folded bias) — the plan-memory number
+    /// behind the lazy-twin accounting and the per-width weight-memory
+    /// figures. Float-path bakes (Gemm `bt`, Conv `bias4`) are excluded:
+    /// they are not duplicated between fused and unfused twins in the
+    /// paper patterns.
     pub fn baked_bytes(&self) -> usize {
         let opt_panel_b = |bp: &Option<matmul::PackedB>| bp.as_ref().map_or(0, |p| p.bytes());
         let opt_panel_a = |wp: &Option<matmul::PackedA>| wp.as_ref().map_or(0, |p| p.bytes());
@@ -437,9 +471,31 @@ impl Kernel {
         match self {
             Kernel::MatMulIntegerPrebound { bw, bp, .. } => bw.len() * 4 + opt_panel_b(bp),
             Kernel::ConvIntegerPrebound { wv, wp, .. } => wv.len() * 4 + opt_panel_a(wp),
-            Kernel::FusedQFc(f) => f.bw.len() * 4 + opt_panel_b(&f.bp) + opt_bias(&f.bias),
-            Kernel::FusedQConv(f) => f.wv.len() * 4 + opt_panel_a(&f.wp) + opt_bias(&f.bias),
+            Kernel::FusedQFc(f) => {
+                f.bw.len() * 4
+                    + f.bp.as_ref().map_or(0, |p| p.bytes())
+                    + opt_bias(&f.bias)
+            }
+            Kernel::FusedQConv(f) => {
+                f.wv.len() * 4
+                    + f.wp.as_ref().map_or(0, |p| p.bytes())
+                    + opt_bias(&f.bias)
+            }
             _ => 0,
+        }
+    }
+
+    /// Logical weight width of the packed storage this kernel will run
+    /// with (`"int8"` / `"int4"` / `"bipolar"`), `None` when it holds no
+    /// packed quantized weights. Observability twin of [`Kernel::isa`]
+    /// for the width axis (plan stats, CI dispatch filters).
+    pub fn weight_width(&self) -> Option<&'static str> {
+        match self {
+            Kernel::MatMulIntegerPrebound { bp: Some(_), .. }
+            | Kernel::ConvIntegerPrebound { wp: Some(_), .. } => Some("int8"),
+            Kernel::FusedQFc(f) => f.bp.as_ref().map(|p| p.width_name()),
+            Kernel::FusedQConv(f) => f.wp.as_ref().map(|p| p.width_name()),
+            _ => None,
         }
     }
 
@@ -590,6 +646,7 @@ impl Kernel {
                 qlinear::dequantize_linear_into(req(0)?, req(1)?, opt(2), recycled)?
             }
             Kernel::Relu => elementwise::relu_into(req(0)?, recycled)?,
+            Kernel::Clip => elementwise::clip_into(req(0)?, opt(1), opt(2), recycled)?,
             Kernel::Tanh => elementwise::tanh_into(req(0)?, recycled)?,
             Kernel::Sigmoid => elementwise::sigmoid_into(req(0)?, recycled)?,
             Kernel::Softmax { axis } => shape_ops::softmax_into(req(0)?, *axis, recycled)?,

@@ -6,6 +6,7 @@
 //! quantization, i.e. zero points of 0, but the operator contract is
 //! implemented in full).
 
+use super::bitpack;
 use super::isa::Isa;
 use super::OpError;
 use crate::parallel::{self, ThreadPool};
@@ -1001,6 +1002,73 @@ pub fn matmul_integer_prewidened_into(
     let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
     out_shape.push(n);
     Ok(Tensor::new(out_shape, crate::tensor::TensorData::I32(c))?)
+}
+
+/// Width-dispatched form of [`matmul_integer_prewidened_into`]: the baked
+/// weights may be i8 panels, int4 nibble panels, or bipolar bit columns
+/// (see [`bitpack::PackedWeights`]). The narrow paths engage only when
+/// the activations qualify (i8, zero zero-point; exactly ±1 for XNOR) —
+/// otherwise the call degrades to the widened-i32 kernel over `bw`, so a
+/// narrow baking can never change results, only memory traffic.
+/// `bits_scratch` parks the XNOR activation bit-pack buffer between runs
+/// (an i64 tensor from the scratch planner).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_integer_packed_into(
+    a: &Tensor,
+    bw: &[i32],
+    bp: Option<&bitpack::PackedWeights>,
+    k: usize,
+    n: usize,
+    a_zp: i32,
+    isa: Isa,
+    recycled: Option<Tensor>,
+    bits_scratch: &mut Option<Tensor>,
+) -> Result<Tensor, OpError> {
+    use crate::tensor::TensorData;
+    let narrow = match bp {
+        Some(bitpack::PackedWeights::I4(_)) | Some(bitpack::PackedWeights::Bipolar(_)) => bp,
+        _ => None,
+    };
+    let (m, ka) = flat_mk(a.shape());
+    if let (Some(narrow), TensorData::I8(av), true) = (narrow, a.data(), a_zp == 0) {
+        if ka != k {
+            return Err(OpError::Semantics(format!("K mismatch {ka} vs {k}")));
+        }
+        let pool = ThreadPool::global();
+        match narrow {
+            bitpack::PackedWeights::I4(bp4) => {
+                let mut c = crate::tensor::recycled_i32_zeroed(recycled, m * n);
+                bitpack::gemm_i4_packed_par_isa(pool, isa, av, bp4, m, &mut c);
+                let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
+                out_shape.push(n);
+                return Ok(Tensor::new(out_shape, TensorData::I32(c))?);
+            }
+            bitpack::PackedWeights::Bipolar(bb) => {
+                // Runtime ±1 gate: pack the activations; on any non-±1
+                // value fall through to the widened path below.
+                let mut bits =
+                    crate::tensor::recycled_i64(bits_scratch.take(), m * bitpack::bit_words(k));
+                if bitpack::pack_bits_rows(av, m, k, &mut bits) {
+                    let mut c = crate::tensor::recycled_i32_zeroed(recycled, m * n);
+                    bitpack::gemm_xnor_par_isa(pool, isa, &bits, bb, m, &mut c);
+                    *bits_scratch =
+                        Some(Tensor::new(vec![bits.len()], TensorData::I64(bits))?);
+                    let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
+                    out_shape.push(n);
+                    return Ok(Tensor::new(out_shape, TensorData::I32(c))?);
+                }
+                bits.clear();
+                *bits_scratch = Some(Tensor::new(vec![0], TensorData::I64(bits))?);
+                return matmul_integer_prewidened_into(a, bw, None, k, n, a_zp, isa, recycled);
+            }
+            bitpack::PackedWeights::I8(_) => unreachable!(),
+        }
+    }
+    let bp8 = match bp {
+        Some(bitpack::PackedWeights::I8(p)) => Some(p),
+        _ => None,
+    };
+    matmul_integer_prewidened_into(a, bw, bp8, k, n, a_zp, isa, recycled)
 }
 
 /// Row-parallel wrapper over [`gemm_f32`]. Bit-exact with the serial

@@ -11,6 +11,7 @@
 //! callers that hold a bare node (rewrite passes, tests); the interpreter
 //! binds at plan time and only runs in its hot loop.
 
+pub mod bitpack;
 pub mod conv;
 pub mod elementwise;
 pub mod fused;

@@ -22,17 +22,30 @@ pub fn round_half_even(x: f32) -> f32 {
     x.round_ties_even()
 }
 
+/// Saturating clamp of QuantizeLinear against an integer range, kept in
+/// f32 so the caller picks the container cast. Every saturate in the
+/// stack (here, the fused epilogues in [`super::fused`], hwsim) derives
+/// its `(lo, hi)` from [`crate::quant::QType::range`] and funnels through
+/// this one clamp, so a new width cannot drift the bounds anywhere.
+#[inline]
+pub(crate) fn saturate_range(v: f32, lo: i32, hi: i32) -> f32 {
+    v.clamp(lo as f32, hi as f32)
+}
+
 /// Saturating f32 -> i8 cast of QuantizeLinear (shared with the fused
 /// epilogue in [`super::fused`], which must replicate it bit for bit).
+/// Bounds derived from the int8 logical range, not restated.
 #[inline]
 pub(crate) fn saturate_i8(v: f32) -> i8 {
-    v.clamp(-128.0, 127.0) as i8
+    let (lo, hi) = crate::quant::QType::I8.range();
+    saturate_range(v, lo, hi) as i8
 }
 
 /// See [`saturate_i8`].
 #[inline]
 pub(crate) fn saturate_u8(v: f32) -> u8 {
-    v.clamp(0.0, 255.0) as u8
+    let (lo, hi) = crate::quant::QType::U8.range();
+    saturate_range(v, lo, hi) as u8
 }
 
 /// ONNX `QuantizeLinear` (per-tensor): output dtype = zero-point dtype.

@@ -220,7 +220,9 @@ impl<'g, 'i> Walk<'g, 'i> {
 
 /// The matched quantized-FC/conv epilogue chain (Figures 1–3 and the
 /// accumulate half of 4–6): `MatMulInteger|ConvInteger [+ Add(bias)] +
-/// Cast(FLOAT) + Mul[+Mul] [+ Relu] + QuantizeLinear`.
+/// Cast(FLOAT) + Mul[+Mul] [+ Relu] [+ Clip] + QuantizeLinear`, where
+/// the optional Clip declares a sub-8-bit logical output range (absorbed
+/// into `out_qtype`; see the lemma at the match site).
 pub struct QChain<'g> {
     /// Anchor node index (the MatMulInteger / ConvInteger).
     pub anchor: usize,
@@ -334,6 +336,47 @@ pub fn match_q_chain<'g>(
         (node_idx, node) = walk.step(node)?;
     }
 
+    // Optional Clip declaring a narrow logical output range (the
+    // sub-8-bit codification): scalar f32 bounds that are exactly the
+    // integer range of a sub-8-bit [`QType`]. The Clip is absorbed by
+    // narrowing the chain's `out_qtype` — sound because the following
+    // QuantizeLinear must then be the identity requantize (scale == 1,
+    // zero point == 0, verified below), and for integer bounds
+    // `round_half_even(clip(v, lo, hi)) == clamp(round_half_even(v), lo,
+    // hi)` for every finite v (round is monotone and fixes the integer
+    // endpoints), while NaN propagates through both paths to the same
+    // saturating cast and ±inf pin to the same bound. Anything that
+    // doesn't fit this shape declines, leaving the Clip to execute as
+    // its own (bit-defined) node.
+    let mut clip_qtype: Option<QType> = None;
+    if node.op_type == "Clip" {
+        if node.inputs.first().map(String::as_str) != Some(walk.cur) {
+            return Err(mismatch(node, "chain value must be Clip's data input"));
+        }
+        let bound = |i: usize| -> Option<f32> {
+            node.inputs
+                .get(i)
+                .filter(|n| !n.is_empty())
+                .and_then(|n| scalar_f32_init(g, n, policy))
+        };
+        let (Some(lo), Some(hi)) = (bound(1), bound(2)) else {
+            return Err(mismatch(node, "Clip bounds must be scalar initializers"));
+        };
+        if !(lo.is_finite() && hi.is_finite() && lo.fract() == 0.0 && hi.fract() == 0.0) {
+            return Err(mismatch(node, "Clip bounds must be finite integers"));
+        }
+        let range = (lo as i32, hi as i32);
+        let qt = (2..=8u8)
+            .flat_map(|b| [QType::Int(b), QType::UInt(b)])
+            .find(|qt| qt.range() == range)
+            .ok_or_else(|| {
+                mismatch(node, format!("Clip range [{lo}, {hi}] is not a width's range"))
+            })?;
+        clip_qtype = Some(qt);
+        walk.consume(node_idx, node)?;
+        (node_idx, node) = walk.step(node)?;
+    }
+
     // Rounding + clipping stage.
     if node.op_type != "QuantizeLinear" {
         return Err(mismatch(node, "expected QuantizeLinear (round+clip)"));
@@ -350,8 +393,27 @@ pub fn match_q_chain<'g>(
         .get(2)
         .filter(|n| !n.is_empty())
         .ok_or_else(|| mismatch(node, "QuantizeLinear missing zero point"))?;
-    let (q_zp, out_qtype) = scalar_zp_init(g, zp_name, policy)
+    let (q_zp, mut out_qtype) = scalar_zp_init(g, zp_name, policy)
         .ok_or_else(|| mismatch(node, "zero point must be a scalar i8/u8 initializer"))?;
+    if let Some(narrow) = clip_qtype {
+        // The absorption lemma above needs the identity requantize and a
+        // container whose dtype matches the narrow type's signedness.
+        if q_scale != 1.0 {
+            return Err(mismatch(node, "Clip absorption requires requantize scale 1"));
+        }
+        if q_zp.numel() != 1
+            || q_zp.as_quantized_i32().ok().and_then(|v| v.first().copied()) != Some(0)
+        {
+            return Err(mismatch(node, "Clip absorption requires zero point 0"));
+        }
+        if narrow.dtype() != out_qtype.dtype() {
+            return Err(mismatch(
+                node,
+                "Clip range signedness does not match the container dtype",
+            ));
+        }
+        out_qtype = narrow;
+    }
     walk.consume(node_idx, node)?;
 
     Ok(QChain {

@@ -38,14 +38,61 @@ pub mod matcher;
 
 use crate::onnx::ir::{Graph, Model};
 use crate::onnx::shape::ValueType;
+use crate::ops::bitpack::{self, PackedConvWeights, PackedWeights};
 use crate::ops::fused::{FusedActLut, FusedQConv, FusedQFc, QEpilogue};
 use crate::ops::kernel::{prebind_conv_integer, prebind_matmul_integer};
-use crate::ops::Kernel;
+use crate::ops::{matmul, Kernel};
 use crate::quant::lut::{ActEval, ActLut};
 use crate::quant::QType;
 use crate::tensor::DType;
 use matcher::{match_act_chain, match_q_chain, ConsumerIndex, InitPolicy, QChain};
 use std::collections::{HashMap, HashSet};
+use std::sync::OnceLock;
+
+/// The `PQDL_PACK_WIDTH` knob: which weight widths plan-time baking may
+/// select for the fused kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackWidth {
+    /// Narrowest storage the widened weights admit: bipolar bit columns
+    /// when every value is ±1, nibble panels when all fit `[-8, 7]`,
+    /// else the i8 panels. The default.
+    Auto,
+    /// i8 panels only — pre-PR-9 behavior, and the CI width-matrix
+    /// baseline (narrow baking can never change results, so this knob
+    /// only moves memory, never bits).
+    Int8,
+}
+
+impl PackWidth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PackWidth::Auto => "auto",
+            PackWidth::Int8 => "int8",
+        }
+    }
+
+    /// Parse a knob value; unknown strings are `None` (callers fall back
+    /// to the default — same contract as `PQDL_TUNE`).
+    pub fn from_name(s: &str) -> Option<PackWidth> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(PackWidth::Auto),
+            "int8" => Some(PackWidth::Int8),
+            _ => None,
+        }
+    }
+
+    /// Process-wide mode, decided once (`OnceLock`) like `TuneMode` and
+    /// `Isa::active`.
+    pub fn active() -> PackWidth {
+        static ACTIVE: OnceLock<PackWidth> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            std::env::var("PQDL_PACK_WIDTH")
+                .ok()
+                .and_then(|v| PackWidth::from_name(&v))
+                .unwrap_or(PackWidth::Auto)
+        })
+    }
+}
 
 /// Plan-compilation options. `fuse` (default: on) runs the pass pipeline;
 /// sessions compile an unfused plan alongside regardless, for the
@@ -69,6 +116,10 @@ pub struct OptStats {
     pub fused_qconv: usize,
     pub fused_act_lut: usize,
     pub eliminated: usize,
+    /// Fused kernels whose weights baked as int4 nibble panels.
+    pub fused_int4: usize,
+    /// Fused kernels whose weights baked as bipolar bit rows/columns.
+    pub fused_bipolar: usize,
 }
 
 impl OptStats {
@@ -149,8 +200,22 @@ pub(crate) fn optimize(
                     claimed[n] = true;
                 }
                 match &kernel {
-                    Kernel::FusedQFc(_) => stats.fused_qfc += 1,
-                    Kernel::FusedQConv(_) => stats.fused_qconv += 1,
+                    Kernel::FusedQFc(f) => {
+                        stats.fused_qfc += 1;
+                        match f.bp.as_ref().map(|p| p.bits()) {
+                            Some(4) => stats.fused_int4 += 1,
+                            Some(1) => stats.fused_bipolar += 1,
+                            _ => {}
+                        }
+                    }
+                    Kernel::FusedQConv(f) => {
+                        stats.fused_qconv += 1;
+                        match f.wp.as_ref().map(|p| p.bits()) {
+                            Some(4) => stats.fused_int4 += 1,
+                            Some(1) => stats.fused_bipolar += 1,
+                            _ => {}
+                        }
+                    }
                     Kernel::FusedActLut(_) => stats.fused_act_lut += 1,
                     _ => {}
                 }
@@ -325,6 +390,56 @@ fn build_epilogue(chain: &QChain<'_>) -> Option<QEpilogue> {
     })
 }
 
+/// Select the narrowest weight storage the widened FC weights admit
+/// (tentpole of the sub-8-bit refactor). `Auto` tries bipolar bit
+/// columns, then int4 nibble panels, before keeping the i8 panels the
+/// prebinder already built; `Int8` (the knob) always keeps them. The
+/// choice can never change results: the fused kernels gate the narrow
+/// paths on the activations at run time and fall back to the widened-i32
+/// loop over `bw` otherwise, and every narrow kernel is bit-identical to
+/// that loop when it does engage (see `ops::bitpack`).
+fn select_packed_fc(
+    bw: &[i32],
+    bp: Option<matmul::PackedB>,
+    k: usize,
+    n: usize,
+) -> Option<PackedWeights> {
+    if PackWidth::active() == PackWidth::Auto {
+        if bw.iter().all(|&v| v == 1 || v == -1) {
+            if let Some(p) = bitpack::BitPackedB::pack(bw, k, n) {
+                return Some(PackedWeights::Bipolar(p));
+            }
+        } else if bw.iter().all(|&v| (-8..=7).contains(&v)) {
+            if let Some(p) = bitpack::PackedB4::pack(bw, k, n) {
+                return Some(PackedWeights::I4(p));
+            }
+        }
+    }
+    bp.map(PackedWeights::I8)
+}
+
+/// Conv twin of [`select_packed_fc`]: `wv` is the `[m, c*kh*kw]` weight
+/// matrix the im2col GEMM streams against.
+fn select_packed_conv(
+    wv: &[i32],
+    wp: Option<matmul::PackedA>,
+    m: usize,
+    k: usize,
+) -> Option<PackedConvWeights> {
+    if PackWidth::active() == PackWidth::Auto {
+        if wv.iter().all(|&v| v == 1 || v == -1) {
+            if let Some(p) = bitpack::BitPackedA::pack(wv, m, k) {
+                return Some(PackedConvWeights::Bipolar(p));
+            }
+        } else if wv.iter().all(|&v| (-8..=7).contains(&v)) {
+            if let Some(p) = bitpack::PackedA4::pack(wv, m, k) {
+                return Some(PackedConvWeights::I4(p));
+            }
+        }
+    }
+    wp.map(PackedConvWeights::I8)
+}
+
 fn fused_item(nodes: Vec<usize>, kernel: Kernel, g: &Graph) -> PlanItem {
     let anchor = &g.nodes[nodes[0]];
     PlanItem::Fused {
@@ -366,6 +481,7 @@ fn try_fuse_qfc(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<Pla
         }
     };
     let epi = build_epilogue(&chain)?;
+    let bp = select_packed_fc(&bw, bp, k, n);
     let kernel = Kernel::FusedQFc(FusedQFc {
         bw,
         bp,
@@ -412,6 +528,7 @@ fn try_fuse_qconv(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<P
         }
     };
     let epi = build_epilogue(&chain)?;
+    let wp = select_packed_conv(&wv, wp, m, c * kh * kw);
     let kernel = Kernel::FusedQConv(FusedQConv {
         wv,
         wp,

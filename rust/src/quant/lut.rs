@@ -110,9 +110,11 @@ impl ActLut {
         let mut table = vec![0i16; 256];
         for b in 0..=255u16 {
             let b = b as u8;
-            let q = match in_qtype {
-                QType::I8 => (b as i8) as i32,
-                QType::U8 => b as i32,
+            // The index domain is the full 8-bit *container*; narrow
+            // logical widths reuse their container's interpretation.
+            let q = match in_qtype.dtype() {
+                crate::tensor::DType::I8 => (b as i8) as i32,
+                _ => b as i32,
             };
             let x = (q - in_zp) as f32 * in_scale;
             let y = eval_act(f, eval, x);

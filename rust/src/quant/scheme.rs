@@ -1,6 +1,11 @@
 //! Symmetric quantization scheme (paper §3, Eq. 1): `X = scale_X * X_q`
-//! with zero offset. int8 for signed tensors, uint8 for provably
-//! non-negative ones (post-ReLU / post-Sigmoid, Figure 6).
+//! with zero offset — generalized, QONNX-style, to arbitrary logical
+//! widths. The paper's instantiation (int8 for signed tensors, uint8 for
+//! provably non-negative ones, Figure 6) is the `QType::I8` / `QType::U8`
+//! pair; narrower widths (int{2..8}, uint{2..8}, bipolar {-1,+1}) carry
+//! their values in the same i8/u8 **container** with a declared narrow
+//! **logical** range, so every existing kernel runs them unchanged and
+//! bit-packed kernels can opt in where the payoff exists.
 
 use crate::ops::qlinear::round_half_even;
 use crate::tensor::{DType, Tensor, TensorData};
@@ -18,37 +23,158 @@ pub enum QuantError {
     Other(String),
 }
 
-/// Quantized integer target type.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Quantized integer target type: a logical width plus signedness.
+///
+/// `Int(b)` / `UInt(b)` are signed/unsigned integers of `b ∈ 2..=8`
+/// logical bits; `Bipolar` is the two-level {-1,+1} scheme of binarized
+/// networks (no zero — packs one bit per weight in the XNOR kernels).
+/// The **container** dtype every variant is stored and computed in stays
+/// i8/u8 (`dtype()`), mirroring QONNX's container-vs-logical-width split:
+/// a narrow tensor is an i8 tensor whose values provably fit `range()`.
+///
+/// Range, packing density, and rescale magnitudes are *derived* from the
+/// width here — never matched per-variant at a use site — so adding a
+/// width cannot drift the clamp bounds of any downstream epilogue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum QType {
-    I8,
-    U8,
+    /// Signed int of the given logical bit width (2..=8), i8 container.
+    Int(u8),
+    /// Unsigned int of the given logical bit width (2..=8), u8 container.
+    UInt(u8),
+    /// Two-level {-1, +1}, i8 container, one logical bit per value.
+    Bipolar,
 }
 
 impl QType {
-    pub fn dtype(self) -> DType {
+    /// The paper's signed instantiation. An associated const, not an enum
+    /// variant — construction sites read the same, but range math is now
+    /// derived from the width.
+    pub const I8: QType = QType::Int(8);
+    /// The paper's unsigned instantiation (post-ReLU / post-Sigmoid).
+    pub const U8: QType = QType::UInt(8);
+    /// 4-bit signed: two values per container byte once packed.
+    pub const I4: QType = QType::Int(4);
+
+    /// Logical bits carried per value (Bipolar is one bit: sign).
+    pub fn bits(self) -> u8 {
         match self {
-            QType::I8 => DType::I8,
-            QType::U8 => DType::U8,
+            QType::Int(b) | QType::UInt(b) => b,
+            QType::Bipolar => 1,
         }
     }
 
-    /// Integer range the quantized values live in.
+    pub fn signed(self) -> bool {
+        !matches!(self, QType::UInt(_))
+    }
+
+    /// Container dtype the values are stored and computed in.
+    pub fn dtype(self) -> DType {
+        if self.signed() {
+            DType::I8
+        } else {
+            DType::U8
+        }
+    }
+
+    /// Logical integer range, derived from width. This is the single
+    /// source the checker, hwsim saturation, and the fused epilogues all
+    /// clamp with.
     pub fn range(self) -> (i32, i32) {
         match self {
-            QType::I8 => (-128, 127),
-            QType::U8 => (0, 255),
+            QType::Int(b) => (-(1i32 << (b - 1)), (1i32 << (b - 1)) - 1),
+            QType::UInt(b) => (0, (1i32 << b) - 1),
+            QType::Bipolar => (-1, 1),
         }
     }
 
     /// The positive magnitude the scale maps onto (127 for symmetric
-    /// int8 — the paper's scheme keeps ±ranges symmetric so -128 is
+    /// int8 — the paper's scheme keeps ±ranges symmetric so -2^(b-1) is
     /// never produced by quantization, only by saturating arithmetic —
-    /// and 255 for uint8 one-sided data).
+    /// and 2^b - 1 for one-sided unsigned data; 1 for bipolar).
     pub fn positive_levels(self) -> f32 {
+        self.range().1 as f32
+    }
+
+    /// Values per container byte once bit-packed (8 for bipolar, 2 for
+    /// int4, 1 for int8 — intermediate widths round down to their packed
+    /// density even though only 4/1-bit kernels exist today).
+    pub fn packed_per_byte(self) -> usize {
+        8 / self.bits() as usize
+    }
+
+    /// True when a dedicated bit-packed kernel family exists for this
+    /// width (int4 nibble GEMM, bipolar XNOR-popcount GEMM).
+    pub fn has_packed_kernel(self) -> bool {
+        matches!(self, QType::Bipolar | QType::Int(4))
+    }
+
+    /// Canonical lowercase name ("int8", "uint4", "bipolar", …).
+    pub fn name(self) -> String {
         match self {
-            QType::I8 => 127.0,
-            QType::U8 => 255.0,
+            QType::Int(b) => format!("int{b}"),
+            QType::UInt(b) => format!("uint{b}"),
+            QType::Bipolar => "bipolar".to_string(),
+        }
+    }
+
+    /// Parse a canonical name back into a `QType`.
+    pub fn parse(s: &str) -> Option<QType> {
+        if s == "bipolar" {
+            return Some(QType::Bipolar);
+        }
+        let (signed, rest) = if let Some(r) = s.strip_prefix("uint") {
+            (false, r)
+        } else if let Some(r) = s.strip_prefix("int") {
+            (true, r)
+        } else {
+            return None;
+        };
+        let b: u8 = rest.parse().ok()?;
+        if !(2..=8).contains(&b) {
+            return None;
+        }
+        Some(if signed { QType::Int(b) } else { QType::UInt(b) })
+    }
+
+    /// Narrowest `QType` whose logical range covers every value, matching
+    /// the observed signedness. `{-1,+1}`-only data (no zero) infers
+    /// `Bipolar`; all-zero data degenerates to the widest type of its
+    /// signedness so a zero tensor never claims a 1-bit kernel.
+    pub fn minimal_for(values: &[i32]) -> Option<QType> {
+        let (mut lo, mut hi) = (i32::MAX, i32::MIN);
+        for &v in values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if values.is_empty() || lo > hi {
+            return None;
+        }
+        if lo >= -1 && hi <= 1 && values.iter().all(|&v| v != 0) {
+            return Some(QType::Bipolar);
+        }
+        if lo >= 0 {
+            for b in 2..=8u8 {
+                if hi <= (1i32 << b) - 1 {
+                    return Some(QType::UInt(b));
+                }
+            }
+        } else {
+            for b in 2..=8u8 {
+                if lo >= -(1i32 << (b - 1)) && hi <= (1i32 << (b - 1)) - 1 {
+                    return Some(QType::Int(b));
+                }
+            }
+        }
+        None
+    }
+
+    /// True when every value fits this type's logical range (and, for
+    /// bipolar, is exactly ±1).
+    pub fn admits(self, values: &[i32]) -> bool {
+        let (lo, hi) = self.range();
+        match self {
+            QType::Bipolar => values.iter().all(|&v| v == -1 || v == 1),
+            _ => values.iter().all(|&v| v >= lo && v <= hi),
         }
     }
 }
@@ -78,22 +204,24 @@ impl SymmetricScale {
     }
 
     /// Quantize an fp32 tensor: `q = clip(round(x / scale))` with
-    /// round-half-to-even, matching ONNX QuantizeLinear.
+    /// round-half-to-even, matching ONNX QuantizeLinear. The clamp bounds
+    /// come from the qtype's derived logical range, so sub-8-bit types
+    /// produce values that provably fit their declared width while living
+    /// in the same i8/u8 container. `Bipolar` is the exception: it has no
+    /// zero level, so it binarizes by sign (`x >= 0 → +1`), the standard
+    /// BNN deterministic binarization.
     pub fn quantize(&self, x: &Tensor) -> Result<Tensor, QuantError> {
         let xv = x.as_f32()?;
+        if self.qtype == QType::Bipolar {
+            let data = TensorData::I8(xv.iter().map(|&v| if v >= 0.0 { 1 } else { -1 }).collect());
+            return Ok(Tensor::new(x.shape().to_vec(), data)?);
+        }
         let inv = 1.0 / self.scale;
         let (lo, hi) = self.qtype.range();
-        let data = match self.qtype {
-            QType::I8 => TensorData::I8(
-                xv.iter()
-                    .map(|&v| round_half_even(v * inv).clamp(lo as f32, hi as f32) as i8)
-                    .collect(),
-            ),
-            QType::U8 => TensorData::U8(
-                xv.iter()
-                    .map(|&v| round_half_even(v * inv).clamp(lo as f32, hi as f32) as u8)
-                    .collect(),
-            ),
+        let quant = |v: f32| round_half_even(v * inv).clamp(lo as f32, hi as f32);
+        let data = match self.qtype.dtype() {
+            DType::I8 => TensorData::I8(xv.iter().map(|&v| quant(v) as i8).collect()),
+            _ => TensorData::U8(xv.iter().map(|&v| quant(v) as u8).collect()),
         };
         Ok(Tensor::new(x.shape().to_vec(), data)?)
     }
@@ -193,5 +321,94 @@ mod tests {
         assert!(SymmetricScale::from_max_abs(-1.0, QType::I8).is_err());
         let b = Tensor::from_f32(&[1], vec![0.0]).unwrap();
         assert!(quantize_bias(&b, 0.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn ranges_derived_from_width() {
+        assert_eq!(QType::I8.range(), (-128, 127));
+        assert_eq!(QType::U8.range(), (0, 255));
+        assert_eq!(QType::Int(4).range(), (-8, 7));
+        assert_eq!(QType::UInt(4).range(), (0, 15));
+        assert_eq!(QType::Int(2).range(), (-2, 1));
+        assert_eq!(QType::Bipolar.range(), (-1, 1));
+        assert_eq!(QType::I8.positive_levels(), 127.0);
+        assert_eq!(QType::U8.positive_levels(), 255.0);
+        assert_eq!(QType::Int(4).positive_levels(), 7.0);
+    }
+
+    #[test]
+    fn container_and_density_derived() {
+        assert_eq!(QType::Int(4).dtype(), DType::I8);
+        assert_eq!(QType::UInt(4).dtype(), DType::U8);
+        assert_eq!(QType::Bipolar.dtype(), DType::I8);
+        assert_eq!(QType::I8.packed_per_byte(), 1);
+        assert_eq!(QType::Int(4).packed_per_byte(), 2);
+        assert_eq!(QType::Bipolar.packed_per_byte(), 8);
+        assert!(QType::Int(4).has_packed_kernel());
+        assert!(QType::Bipolar.has_packed_kernel());
+        assert!(!QType::I8.has_packed_kernel());
+        assert!(!QType::Int(3).has_packed_kernel());
+    }
+
+    #[test]
+    fn name_parse_round_trip() {
+        for q in [
+            QType::I8,
+            QType::U8,
+            QType::Int(4),
+            QType::UInt(3),
+            QType::Int(2),
+            QType::Bipolar,
+        ] {
+            assert_eq!(QType::parse(&q.name()), Some(q), "{}", q.name());
+        }
+        assert_eq!(QType::parse("int8"), Some(QType::I8));
+        assert!(QType::parse("int1").is_none());
+        assert!(QType::parse("int9").is_none());
+        assert!(QType::parse("float32").is_none());
+    }
+
+    #[test]
+    fn minimal_for_infers_width_and_bipolarity() {
+        assert_eq!(QType::minimal_for(&[-1, 1, 1]), Some(QType::Bipolar));
+        // A zero forbids bipolar (no zero level).
+        assert_eq!(QType::minimal_for(&[-1, 0, 1]), Some(QType::Int(2)));
+        assert_eq!(QType::minimal_for(&[-8, 7]), Some(QType::Int(4)));
+        assert_eq!(QType::minimal_for(&[-9, 7]), Some(QType::Int(5)));
+        assert_eq!(QType::minimal_for(&[0, 15]), Some(QType::UInt(4)));
+        assert_eq!(QType::minimal_for(&[-128, 127]), Some(QType::I8));
+        assert_eq!(QType::minimal_for(&[300]), None);
+        assert_eq!(QType::minimal_for(&[]), None);
+    }
+
+    #[test]
+    fn admits_checks_logical_range() {
+        assert!(QType::Int(4).admits(&[-8, 0, 7]));
+        assert!(!QType::Int(4).admits(&[8]));
+        assert!(QType::Bipolar.admits(&[-1, 1]));
+        assert!(!QType::Bipolar.admits(&[0]));
+    }
+
+    #[test]
+    fn narrow_quantize_clamps_to_logical_range() {
+        let s = SymmetricScale {
+            scale: 1.0,
+            qtype: QType::Int(4),
+        };
+        let x = Tensor::from_f32(&[4], vec![-100.0, -8.0, 7.0, 100.0]).unwrap();
+        let q = s.quantize(&x).unwrap();
+        // i8 container, int4 logical range.
+        assert_eq!(q.as_i8().unwrap(), &[-8, -8, 7, 7]);
+    }
+
+    #[test]
+    fn bipolar_quantize_is_sign() {
+        let s = SymmetricScale {
+            scale: 1.0,
+            qtype: QType::Bipolar,
+        };
+        let x = Tensor::from_f32(&[4], vec![-0.3, 0.0, 0.2, -5.0]).unwrap();
+        let q = s.quantize(&x).unwrap();
+        assert_eq!(q.as_i8().unwrap(), &[-1, 1, 1, -1]);
     }
 }

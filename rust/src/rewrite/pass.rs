@@ -467,9 +467,9 @@ pub fn quantize_model(
                 );
                 let zp = b.init_fresh(
                     &format!("{}_deq_zp", node.name),
-                    match x.qtype {
-                        QType::I8 => Tensor::scalar_i8(0),
-                        QType::U8 => Tensor::scalar_u8(0),
+                    match x.qtype.dtype() {
+                        DType::U8 => Tensor::scalar_u8(0),
+                        _ => Tensor::scalar_i8(0),
                     },
                 );
                 let f = b.node("DequantizeLinear", &[&x.name, &s, &zp], &[]);
@@ -506,9 +506,9 @@ pub fn quantize_model(
                 );
                 let zp = b.init_fresh(
                     &format!("{}_out_zp", out.name),
-                    match q.qtype {
-                        QType::I8 => Tensor::scalar_i8(0),
-                        QType::U8 => Tensor::scalar_u8(0),
+                    match q.qtype.dtype() {
+                        DType::U8 => Tensor::scalar_u8(0),
+                        _ => Tensor::scalar_i8(0),
                     },
                 );
                 let f = b.node("DequantizeLinear", &[&q.name, &s, &zp], &[]);

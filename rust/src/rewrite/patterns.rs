@@ -83,9 +83,11 @@ pub struct ConvParams {
 }
 
 fn zp_init(b: &mut GraphBuilder, prefix: &str, qtype: QType) -> String {
-    let t = match qtype {
-        QType::I8 => Tensor::scalar_i8(0),
-        QType::U8 => Tensor::scalar_u8(0),
+    // The zero point's dtype selects the *container* (i8 vs u8); any
+    // narrower logical width lives inside that container.
+    let t = match qtype.dtype() {
+        crate::tensor::DType::U8 => Tensor::scalar_u8(0),
+        _ => Tensor::scalar_i8(0),
     };
     b.init_fresh(&format!("{prefix}_zero_point"), t)
 }
@@ -114,11 +116,25 @@ fn emit_rescale(b: &mut GraphBuilder, x: &str, rescale: &RescaleOp, prefix: &str
 }
 
 /// Rounding + clipping stage: `QuantizeLinear(scale=1, zero_point=0)`;
-/// the zero-point dtype selects int8 vs uint8 (§3.1).
+/// the zero-point dtype selects int8 vs uint8 (§3.1). Sub-8-bit logical
+/// outputs additionally get an explicit `Clip` to the narrow range
+/// *before* the quantizer — the standard-ops codification of "this i8
+/// container only ever holds int4 values", which the optimizer's matcher
+/// absorbs back into the fused kernel's saturation bounds. Bipolar is
+/// excluded: `round(clip(x, -1, 1))` collapses (-0.5, 0.5) to 0, so a
+/// {-1, +1} activation alphabet is not expressible with this stage.
 fn emit_round_clip(b: &mut GraphBuilder, x: &str, qtype: QType, prefix: &str) -> String {
+    let pre_q = if qtype.bits() < 8 && qtype != QType::Bipolar {
+        let (lo, hi) = qtype.range();
+        let lo = b.init_fresh(&format!("{prefix}_clip_min"), Tensor::scalar_f32(lo as f32));
+        let hi = b.init_fresh(&format!("{prefix}_clip_max"), Tensor::scalar_f32(hi as f32));
+        b.node("Clip", &[x, &lo, &hi], &[])
+    } else {
+        x.to_string()
+    };
     let one = b.init_fresh(&format!("{prefix}_unit_scale"), Tensor::scalar_f32(1.0));
     let zp = zp_init(b, prefix, qtype);
-    b.node("QuantizeLinear", &[x, &one, &zp], &[])
+    b.node("QuantizeLinear", &[&pre_q, &one, &zp], &[])
 }
 
 /// Emit the activation tail shared by Figs. 4–6: Dequantize -> (optional
@@ -302,6 +318,23 @@ mod tests {
         let y = sess.run(&[("x", x)]).unwrap();
         // [110, -110] * 0.25 = [27.5, -27.5]; ReLU -> [27.5, 0]; u8 -> [28, 0].
         assert_eq!(y[0].as_u8().unwrap(), &[28, 0]);
+    }
+
+    #[test]
+    fn sub8_fc_emits_clip_and_saturates_narrow() {
+        let params = fc_params(RescaleOp::OneMul(0.25), ActKind::None, QType::Int(4));
+        let m = build_fc_model(&params, DType::I8);
+        check_model(&m).unwrap();
+        let ops: Vec<&str> = m.graph.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(
+            ops,
+            vec!["MatMulInteger", "Add", "Cast", "Mul", "Clip", "QuantizeLinear"]
+        );
+        let sess = Session::new(m).unwrap();
+        let x = Tensor::from_i8(&[1, 4], vec![10, 10, 10, 10]).unwrap();
+        let y = sess.run(&[("x", x)]).unwrap();
+        // [110, -110] * 0.25 = [27.5, -27.5]; int4 clip -> [7, -8].
+        assert_eq!(y[0].as_i8().unwrap(), &[7, -8]);
     }
 
     #[test]

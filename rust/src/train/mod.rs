@@ -7,9 +7,11 @@
 pub mod cnn;
 pub mod data;
 pub mod mlp;
+pub mod narrow;
 pub mod rng;
 
 pub use cnn::{cnn_accuracy, train_cnn, Cnn};
 pub use data::{gaussian_blobs, spirals, synthetic_digits, Dataset};
 pub use mlp::{accuracy, train_classifier, HiddenAct, Mlp};
+pub use narrow::NarrowModel;
 pub use rng::Rng;

@@ -1,0 +1,479 @@
+//! Sub-8-bit figure-class models: an int4-weight MLP and a
+//! bipolar-weight CNN.
+//!
+//! Both are genuinely trained in fp32 ([`super::mlp`], [`super::cnn`]),
+//! post-training quantized to their narrow width, and emitted as pure
+//! standard-ONNX pre-quantized graphs through [`crate::rewrite::patterns`]
+//! — the same codification the Figure 1–6 models use, extended with the
+//! sub-8-bit `Clip` stage. They are figure-class citizens: deterministic
+//! (seeded training, memoized per process), registry-addressable via
+//! [`NarrowModel::ALL`], and covered by the three-way differential oracle
+//! in `tests/subwidth.rs`.
+//!
+//! Width mechanics:
+//!
+//! * **`Mlp4`** quantizes both FC layers symmetrically to `[-7, 7]` and
+//!   declares its hidden activations int4 through the emitted
+//!   `Clip(-8, 7) + QuantizeLinear` stage, so the optimizer both bakes
+//!   nibble-packed weights and absorbs the narrow saturation epilogue.
+//! * **`BipolarCnn`** binarizes its conv kernel and FC head to `{-1, +1}`
+//!   (per-tensor scale = mean |w|), consumes sign-binarized ±1 images,
+//!   and uses zero padding — exactly the preconditions of the
+//!   XNOR-popcount conv kernel. Its FC head is retrained on the
+//!   *deployed* integer conv features (the classic BNN
+//!   freeze-then-retrain recipe), so conv quantization error never
+//!   reaches the head as train/serve skew.
+//!
+//! Both models also carry advisory `pqdl.width.*` metadata props for
+//! their narrow initializers; the checker verifies the annotations
+//! against the stored values (paper goal 1: advisory, never required).
+
+use super::cnn::{train_cnn, Cnn};
+use super::data::{gaussian_blobs, synthetic_digits, Dataset};
+use super::mlp::{train_classifier, HiddenAct, Mlp};
+use crate::interp::Session;
+use crate::onnx::check::WIDTH_META_PREFIX;
+use crate::onnx::ir::Attr;
+use crate::onnx::{batched, GraphBuilder, Model};
+use crate::quant::QType;
+use crate::rewrite::patterns::{emit_conv, emit_fc, ActKind, ConvParams, FcParams, RescaleOp};
+use crate::tensor::{DType, Tensor};
+use std::sync::OnceLock;
+
+/// The sub-8-bit figure-class models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NarrowModel {
+    /// Two-layer FC classifier: int4 weights, int4 hidden activations.
+    Mlp4,
+    /// Conv + pool + FC digit classifier with `{-1, +1}` weights end to
+    /// end, deployed on ±1 inputs with zero padding (XNOR-eligible).
+    BipolarCnn,
+}
+
+const MLP4_IN: usize = 8;
+const MLP4_HID: usize = 16;
+const MLP4_CLASSES: usize = 3;
+
+const BCNN_FILTERS: usize = 4;
+const BCNN_CLASSES: usize = 10;
+/// Conv 8×8 pad-0 → 6×6, pool 2×2 → 3×3.
+const BCNN_FEAT: usize = BCNN_FILTERS * 3 * 3;
+
+impl NarrowModel {
+    pub const ALL: [NarrowModel; 2] = [NarrowModel::Mlp4, NarrowModel::BipolarCnn];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NarrowModel::Mlp4 => "mlp_int4",
+            NarrowModel::BipolarCnn => "cnn_bipolar",
+        }
+    }
+
+    /// Per-sample input dims (without the batch axis).
+    pub fn input_dims(&self) -> Vec<usize> {
+        match self {
+            NarrowModel::Mlp4 => vec![MLP4_IN],
+            NarrowModel::BipolarCnn => vec![1, 8, 8],
+        }
+    }
+
+    /// Per-sample output dims (without the batch axis).
+    pub fn output_dims(&self) -> Vec<usize> {
+        match self {
+            NarrowModel::Mlp4 => vec![MLP4_CLASSES],
+            NarrowModel::BipolarCnn => vec![BCNN_CLASSES],
+        }
+    }
+
+    /// Train (memoized per process), quantize, and emit the
+    /// standard-ONNX pre-quantized model. Training is seeded, so every
+    /// call returns the identical model.
+    pub fn model(&self) -> Model {
+        match self {
+            NarrowModel::Mlp4 => mlp4_parts().model.clone(),
+            NarrowModel::BipolarCnn => bipolar_parts().model.clone(),
+        }
+    }
+
+    /// Deterministic i8 input batch; for the bipolar CNN every element
+    /// is ±1 (the XNOR input alphabet).
+    pub fn input(&self, batch: usize, seed: u64) -> Tensor {
+        let dims = self.input_dims();
+        let flat: usize = dims.iter().product();
+        let t = crate::figures::canonical_input(batch, flat, seed);
+        let t = match self {
+            NarrowModel::Mlp4 => t,
+            NarrowModel::BipolarCnn => {
+                let pm1: Vec<i8> = t
+                    .as_i8()
+                    .unwrap()
+                    .iter()
+                    .map(|&v| if v < 0 { -1 } else { 1 })
+                    .collect();
+                Tensor::from_i8(&[batch, flat], pm1).unwrap()
+            }
+        };
+        let mut shape = vec![batch];
+        shape.extend(dims);
+        t.reshape(&shape).unwrap()
+    }
+}
+
+/// Symmetric quantization to `[-limit, limit]`: the largest-magnitude
+/// weight maps exactly to ±limit (so `QType::minimal_for` recovers the
+/// intended width), and `w ≈ q * scale`.
+fn quantize_sym(w: &[f32], limit: i32) -> (Vec<i8>, f32) {
+    let max = w.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-6);
+    let scale = max / limit as f32;
+    let lim = limit as f32;
+    let q = w
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-lim, lim) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// Sign-binarize to `{-1, +1}` (zero counts as +1, keeping the alphabet
+/// strictly bipolar); scale = mean |w| (the BinaryConnect/XNOR-Net
+/// per-tensor scaling factor).
+fn binarize(w: &[f32]) -> (Vec<i8>, f32) {
+    let mean = w.iter().map(|&v| v.abs() as f64).sum::<f64>() / w.len().max(1) as f64;
+    let q = w.iter().map(|&v| if v < 0.0 { -1i8 } else { 1 }).collect();
+    (q, (mean as f32).max(1e-6))
+}
+
+fn max_abs(v: &[f32]) -> f32 {
+    v.iter().fold(0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Tag the (builder-suffixed) initializer whose name starts with
+/// `init_prefix` with an advisory `pqdl.width.*` metadata prop.
+fn tag_width(model: &mut Model, init_prefix: &str, qtype: QType) {
+    let name = model
+        .graph
+        .initializers
+        .iter()
+        .map(|(n, _)| n)
+        .find(|n| n.starts_with(init_prefix))
+        .unwrap_or_else(|| panic!("no initializer with prefix '{init_prefix}'"))
+        .clone();
+    model
+        .metadata
+        .push((format!("{WIDTH_META_PREFIX}{name}"), qtype.name()));
+}
+
+struct Mlp4Parts {
+    model: Model,
+    /// Input quantization scale (`x_q = round(x / s_x)`).
+    s_x: f32,
+    /// Training set the accuracy test replays through the model.
+    data: Dataset,
+    /// fp32 reference accuracy on `data` (pre-quantization).
+    fp32_acc: f32,
+}
+
+fn mlp4_parts() -> &'static Mlp4Parts {
+    static CACHE: OnceLock<Mlp4Parts> = OnceLock::new();
+    CACHE.get_or_init(build_mlp4)
+}
+
+fn build_mlp4() -> Mlp4Parts {
+    let data = gaussian_blobs(400, MLP4_IN, MLP4_CLASSES, 0.25, 0xA401);
+    let mut mlp = Mlp::new(&[MLP4_IN, MLP4_HID, MLP4_CLASSES], HiddenAct::Relu, 0xA402);
+    train_classifier(&mut mlp, &data, 15, 16, 0.05, 0.9, 0xA403);
+    let fp32_acc = super::mlp::accuracy(&mlp, &data);
+
+    let n = data.len();
+    let s_x = (max_abs(&data.x) / 127.0).max(1e-6);
+    let (w0q, s_w0) = quantize_sym(&mlp.layers[0].w, 7);
+    let (w1q, s_w1) = quantize_sym(&mlp.layers[1].w, 7);
+
+    // Calibrate the int4 hidden scale on the fp32 pre-activations (ReLU
+    // only discards negatives, so max |pre-act| bounds the post-ReLU
+    // range too).
+    let l0 = &mlp.layers[0];
+    let mut hidden = vec![0f32; n * MLP4_HID];
+    for i in 0..n {
+        let (x, _) = data.sample(i);
+        let h = &mut hidden[i * MLP4_HID..(i + 1) * MLP4_HID];
+        h.copy_from_slice(&l0.b);
+        for (k, &xv) in x.iter().enumerate() {
+            for (hv, &wv) in h.iter_mut().zip(&l0.w[k * MLP4_HID..(k + 1) * MLP4_HID]) {
+                *hv += xv * wv;
+            }
+        }
+    }
+    let s_h = (max_abs(&hidden) / 7.0).max(1e-6);
+    let s_out = (max_abs(&mlp.logits(&data.x, n)) / 127.0).max(1e-6);
+
+    let l1 = &mlp.layers[1];
+    let b0q: Vec<i32> = l0.b.iter().map(|&b| (b / (s_x * s_w0)).round() as i32).collect();
+    let b1q: Vec<i32> = l1.b.iter().map(|&b| (b / (s_h * s_w1)).round() as i32).collect();
+
+    let mut b = GraphBuilder::new("mlp_int4");
+    b.input("x", DType::I8, &batched(&[MLP4_IN]));
+    let h = emit_fc(
+        &mut b,
+        "x",
+        &FcParams {
+            weight_q: Tensor::from_i8(&[MLP4_IN, MLP4_HID], w0q).unwrap(),
+            bias_q: Some(Tensor::from_i32(&[MLP4_HID], b0q).unwrap()),
+            rescale: RescaleOp::OneMul(s_x * s_w0 / s_h),
+            activation: ActKind::Relu,
+            out_qtype: QType::Int(4),
+        },
+        "l0",
+    );
+    let y = emit_fc(
+        &mut b,
+        &h,
+        &FcParams {
+            weight_q: Tensor::from_i8(&[MLP4_HID, MLP4_CLASSES], w1q).unwrap(),
+            bias_q: Some(Tensor::from_i32(&[MLP4_CLASSES], b1q).unwrap()),
+            rescale: RescaleOp::OneMul(s_h * s_w1 / s_out),
+            activation: ActKind::None,
+            out_qtype: QType::I8,
+        },
+        "l1",
+    );
+    b.output(&y, DType::I8, &batched(&[MLP4_CLASSES]));
+    let mut model = b.finish_model();
+    tag_width(&mut model, "l0_weight_q", QType::Int(4));
+    tag_width(&mut model, "l1_weight_q", QType::Int(4));
+    Mlp4Parts {
+        model,
+        s_x,
+        data,
+        fp32_acc,
+    }
+}
+
+struct BipolarParts {
+    model: Model,
+    /// Binarized (±1.0 f32) training images.
+    data: Dataset,
+}
+
+fn bipolar_parts() -> &'static BipolarParts {
+    static CACHE: OnceLock<BipolarParts> = OnceLock::new();
+    CACHE.get_or_init(build_bipolar_cnn)
+}
+
+/// Threshold the synthetic-digit images to the strict ±1 alphabet
+/// (lit pixels sit near 1.0, background near 0.0; 0.5 separates them).
+fn binarize_images(mut d: Dataset) -> Dataset {
+    for v in &mut d.x {
+        *v = if *v > 0.5 { 1.0 } else { -1.0 };
+    }
+    d
+}
+
+fn build_bipolar_cnn() -> BipolarParts {
+    let data = binarize_images(synthetic_digits(400, 0xB101));
+    let mut cnn = Cnn::new(BCNN_FILTERS, BCNN_CLASSES, 0xB102);
+    train_cnn(&mut cnn, &data, 6, 32, 0.05, 0.9, 0xB103);
+
+    let (cwq, alpha_c) = binarize(&cnn.conv_w);
+    // ±1 input at scale 1 × ±1 kernel at scale alpha_c: the bias enters
+    // the accumulator at scale alpha_c.
+    let b_cq: Vec<i32> = cnn.conv_b.iter().map(|&b| (b / alpha_c).round() as i32).collect();
+    // Analytic accumulator bound: nine ±1·±1 taps plus the bias. Scaling
+    // that bound onto the full i8 range keeps the conv output exact
+    // through the rescale (decompose() accepts multipliers > 1).
+    let acc_max = 9 + b_cq.iter().map(|b| b.abs()).max().unwrap_or(0);
+    let m_c = 127.0 / acc_max as f32;
+    // Conv output q represents q * s_c in fp32 terms.
+    let s_c = alpha_c / m_c;
+
+    let conv_params = ConvParams {
+        weight_q: Tensor::from_i8(&[BCNN_FILTERS, 1, 3, 3], cwq).unwrap(),
+        bias_q: Some(Tensor::from_i32(&[BCNN_FILTERS], b_cq).unwrap()),
+        rescale: RescaleOp::OneMul(m_c),
+        relu: true,
+        out_qtype: QType::I8,
+        strides: [1, 1],
+        // Zero padding injects 0, which is outside the {-1,+1} alphabet —
+        // pad-free valid convolution is the XNOR kernel's precondition.
+        pads: [0, 0, 0, 0],
+    };
+    let pool_attrs = [
+        ("kernel_shape", Attr::Ints(vec![2, 2])),
+        ("strides", Attr::Ints(vec![2, 2])),
+    ];
+
+    // Deployment-true feature extractor: run the *quantized* conv + pool
+    // through the interpreter so the retrained head never sees
+    // train/serve skew from conv binarization.
+    let feat_model = {
+        let mut b = GraphBuilder::new("cnn_bipolar_features");
+        b.input("x", DType::I8, &batched(&[1, 8, 8]));
+        let c = emit_conv(&mut b, "x", &conv_params, "c0");
+        let p = b.node("MaxPool", &[&c], &pool_attrs);
+        let f = b.node("Flatten", &[&p], &[("axis", Attr::Int(1))]);
+        b.output(&f, DType::I8, &batched(&[BCNN_FEAT]));
+        b.finish_model()
+    };
+    let n = data.len();
+    let x_q: Vec<i8> = data.x.iter().map(|&v| if v > 0.0 { 1i8 } else { -1 }).collect();
+    let sess = Session::new(feat_model).expect("bipolar feature model");
+    let feats_q = sess
+        .run(&[("x", Tensor::from_i8(&[n, 1, 8, 8], x_q).unwrap())])
+        .expect("bipolar feature run");
+    let feats: Vec<f32> = feats_q[0]
+        .as_quantized_i32()
+        .unwrap()
+        .iter()
+        .map(|&q| q as f32 * s_c)
+        .collect();
+
+    let feat_data = Dataset {
+        x: feats,
+        y: data.y.clone(),
+        dim: BCNN_FEAT,
+        classes: BCNN_CLASSES,
+        image_shape: None,
+    };
+    // Single Dense layer (no hidden stage), retrained on the integer
+    // features, then itself binarized.
+    let mut head = Mlp::new(&[BCNN_FEAT, BCNN_CLASSES], HiddenAct::Relu, 0xB104);
+    train_classifier(&mut head, &feat_data, 20, 32, 0.05, 0.9, 0xB105);
+
+    let hl = &head.layers[0];
+    let (fwq, alpha_f) = binarize(&hl.w);
+    let b_fq: Vec<i32> = hl.b.iter().map(|&b| (b / (s_c * alpha_f)).round() as i32).collect();
+    let s_out = (max_abs(&head.logits(&feat_data.x, n)) / 127.0).max(1e-6);
+    let m_f = s_c * alpha_f / s_out;
+
+    let mut b = GraphBuilder::new("cnn_bipolar");
+    b.input("x", DType::I8, &batched(&[1, 8, 8]));
+    let c = emit_conv(&mut b, "x", &conv_params, "c0");
+    let p = b.node("MaxPool", &[&c], &pool_attrs);
+    let f = b.node("Flatten", &[&p], &[("axis", Attr::Int(1))]);
+    let y = emit_fc(
+        &mut b,
+        &f,
+        &FcParams {
+            weight_q: Tensor::from_i8(&[BCNN_FEAT, BCNN_CLASSES], fwq).unwrap(),
+            bias_q: Some(Tensor::from_i32(&[BCNN_CLASSES], b_fq).unwrap()),
+            rescale: RescaleOp::OneMul(m_f),
+            activation: ActKind::None,
+            out_qtype: QType::I8,
+        },
+        "fc",
+    );
+    b.output(&y, DType::I8, &batched(&[BCNN_CLASSES]));
+    let mut model = b.finish_model();
+    tag_width(&mut model, "c0_kernel_q", QType::Bipolar);
+    tag_width(&mut model, "fc_weight_q", QType::Bipolar);
+    BipolarParts { model, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::check_model;
+
+    fn argmax(row: &[i32]) -> usize {
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn quantized_accuracy(model: Model, x: Tensor, y: &[usize], classes: usize) -> f32 {
+        let sess = Session::new(model).unwrap();
+        let out = sess.run(&[("x", x)]).unwrap();
+        let logits = out[0].as_quantized_i32().unwrap();
+        let correct = logits
+            .chunks(classes)
+            .zip(y)
+            .filter(|(row, &want)| argmax(row) == want)
+            .count();
+        correct as f32 / y.len().max(1) as f32
+    }
+
+    #[test]
+    fn mlp4_validates_and_keeps_accuracy() {
+        let parts = mlp4_parts();
+        check_model(&parts.model).unwrap();
+        // Width metadata is present for both FC weights.
+        let widths: Vec<&str> = parts
+            .model
+            .metadata
+            .iter()
+            .filter(|(k, _)| k.starts_with(WIDTH_META_PREFIX))
+            .map(|(_, v)| v.as_str())
+            .collect();
+        assert_eq!(widths, vec!["int4", "int4"]);
+
+        // The fp32 net separates the blobs; int4 weights + int4 hidden
+        // activations should not destroy that.
+        assert!(parts.fp32_acc > 0.9, "fp32 accuracy {}", parts.fp32_acc);
+        let n = parts.data.len();
+        let xq: Vec<i8> = parts
+            .data
+            .x
+            .iter()
+            .map(|&v| (v / parts.s_x).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        let acc = quantized_accuracy(
+            parts.model.clone(),
+            Tensor::from_i8(&[n, MLP4_IN], xq).unwrap(),
+            &parts.data.y,
+            MLP4_CLASSES,
+        );
+        assert!(acc > 0.8, "int4 MLP accuracy {acc}");
+    }
+
+    #[test]
+    fn bipolar_cnn_validates_and_beats_chance() {
+        let parts = bipolar_parts();
+        check_model(&parts.model).unwrap();
+        let widths: Vec<&str> = parts
+            .model
+            .metadata
+            .iter()
+            .filter(|(k, _)| k.starts_with(WIDTH_META_PREFIX))
+            .map(|(_, v)| v.as_str())
+            .collect();
+        assert_eq!(widths, vec!["bipolar", "bipolar"]);
+
+        // Deliberately loose bar: the model exists to exercise the XNOR
+        // path end to end, not to chase accuracy — but single-bit weights
+        // on 10-class digits must still beat chance (0.1) by a wide
+        // margin or the quantization math is broken.
+        let n = parts.data.len();
+        let xq: Vec<i8> = parts
+            .data
+            .x
+            .iter()
+            .map(|&v| if v > 0.0 { 1i8 } else { -1 })
+            .collect();
+        let acc = quantized_accuracy(
+            parts.model.clone(),
+            Tensor::from_i8(&[n, 1, 8, 8], xq).unwrap(),
+            &parts.data.y,
+            BCNN_CLASSES,
+        );
+        assert!(acc > 0.25, "bipolar CNN accuracy {acc}");
+    }
+
+    #[test]
+    fn narrow_models_are_deterministic() {
+        for m in NarrowModel::ALL {
+            assert_eq!(m.model(), m.model(), "{} not deterministic", m.name());
+            let a = m.input(3, 1);
+            let b = m.input(3, 1);
+            assert_eq!(a, b);
+            let mut dims = vec![3];
+            dims.extend(m.input_dims());
+            assert_eq!(a.shape(), &dims[..]);
+        }
+        // Bipolar inputs are strictly ±1.
+        let t = NarrowModel::BipolarCnn.input(2, 7);
+        assert!(t.as_i8().unwrap().iter().all(|&v| v == 1 || v == -1));
+    }
+}

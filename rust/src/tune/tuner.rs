@@ -22,6 +22,10 @@
 
 use super::cache::{self, TuneCache};
 use super::{GemmConfig, TuneMode};
+use crate::ops::bitpack::{
+    gemm_i4_packed_a_isa, gemm_i4_packed_par_isa, gemm_xnor_a_isa, gemm_xnor_par_isa,
+    pack_bits_cols, pack_bits_rows, BitPackedA, BitPackedB, PackedA4, PackedB4,
+};
 use crate::ops::matmul::{
     gemm_i8_packed_a_isa, gemm_i8_packed_par_isa, PackedA, PackedB, GEMM_MR,
 };
@@ -62,16 +66,27 @@ pub struct GemmProblem<'a> {
     /// Output features (B columns or A rows).
     pub out: usize,
     pub kind: ProblemKind,
+    /// Logical weight bits of the packed storage this plan baked (8 / 4 /
+    /// 1 — `PackedWeights::bits`): selects the kernel family the tuner
+    /// times, and keys the cache so an int4 plan never reuses an int8
+    /// winner for the same shape.
+    pub bits: u8,
 }
 
 impl GemmProblem<'_> {
-    /// Cache-key shape token, e.g. `b64x32` / `a27x8`.
+    /// Cache-key shape token, e.g. `b64x32` / `a27x8`; narrow widths get
+    /// a suffix (`b64x32w4`) so pre-existing int8 cache entries stay
+    /// valid.
     fn shape_token(&self) -> String {
         let tag = match self.kind {
             ProblemKind::PackedBGemm => 'b',
             ProblemKind::PackedAGemm => 'a',
         };
-        format!("{tag}{}x{}", self.k, self.out)
+        if self.bits == 8 {
+            format!("{tag}{}x{}", self.k, self.out)
+        } else {
+            format!("{tag}{}x{}w{}", self.k, self.out, self.bits)
+        }
     }
 }
 
@@ -202,40 +217,84 @@ fn probe_i8(len: usize, seed: u64) -> Vec<i8> {
         .collect()
 }
 
+/// Deterministic ±1 probe activations for the XNOR problems (sign of the
+/// i8 probe stream).
+fn probe_pm1(len: usize, seed: u64) -> Vec<i8> {
+    probe_i8(len, seed)
+        .into_iter()
+        .map(|v| if v >= 0 { 1 } else { -1 })
+        .collect()
+}
+
 /// Best-of-[`TUNE_PROBE_REPS`] wall time of one candidate over every
-/// problem, through the exact dispatch path serving uses. `None` when a
-/// problem's weights refuse to pack (out of i8 range) — the caller keeps
-/// the default config, same as the plan compiler would.
+/// problem, through the exact dispatch path serving uses — per width:
+/// the i8 panel kernels, the int4 nibble kernels (whose layout follows
+/// the candidate config), or the XNOR kernels (config-independent, so
+/// they add the same constant to every candidate). `None` when a
+/// problem's weights refuse to pack at the declared width — the caller
+/// keeps the default config, same as the plan compiler would.
 fn measure_candidate(cfg: GemmConfig, problems: &[GemmProblem], isa: Isa) -> Option<u64> {
     let pool = ThreadPool::global();
     let mut total = 0u64;
     for (idx, p) in problems.iter().enumerate() {
         let seed = 0x9e37_79b9_7f4a_7c15 ^ (idx as u64);
         let mut best = u64::MAX;
-        match p.kind {
-            ProblemKind::PackedBGemm => {
+        macro_rules! time_reps {
+            ($run:expr) => {{
+                // One untimed warmup rep per problem (page faults, branch
+                // history), then timed reps.
+                $run;
+                for _ in 0..TUNE_PROBE_REPS {
+                    let t = Instant::now();
+                    $run;
+                    best = best.min(t.elapsed().as_nanos() as u64);
+                }
+            }};
+        }
+        match (p.kind, p.bits) {
+            (ProblemKind::PackedBGemm, 4) => {
+                let bp = PackedB4::pack_with(p.w, p.k, p.out, cfg)?;
+                let a = probe_i8(TUNE_PROBE_ROWS * p.k, seed);
+                let mut c = vec![0i32; TUNE_PROBE_ROWS * p.out];
+                time_reps!(gemm_i4_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c));
+            }
+            (ProblemKind::PackedBGemm, 1) => {
+                let bb = BitPackedB::pack(p.w, p.k, p.out)?;
+                let a = probe_pm1(TUNE_PROBE_ROWS * p.k, seed);
+                let mut a_bits = Vec::new();
+                if !pack_bits_rows(&a, TUNE_PROBE_ROWS, p.k, &mut a_bits) {
+                    return None;
+                }
+                let mut c = vec![0i32; TUNE_PROBE_ROWS * p.out];
+                time_reps!(gemm_xnor_par_isa(pool, isa, &a_bits, &bb, TUNE_PROBE_ROWS, &mut c));
+            }
+            (ProblemKind::PackedBGemm, _) => {
                 let bp = PackedB::pack_with(p.w, p.k, p.out, cfg)?;
                 let a = probe_i8(TUNE_PROBE_ROWS * p.k, seed);
                 let mut c = vec![0i32; TUNE_PROBE_ROWS * p.out];
-                // One untimed warmup rep per problem (page faults, branch
-                // history), then timed reps.
-                gemm_i8_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c);
-                for _ in 0..TUNE_PROBE_REPS {
-                    let t = Instant::now();
-                    gemm_i8_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c);
-                    best = best.min(t.elapsed().as_nanos() as u64);
-                }
+                time_reps!(gemm_i8_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c));
             }
-            ProblemKind::PackedAGemm => {
+            (ProblemKind::PackedAGemm, 4) => {
+                let ap = PackedA4::pack_with(p.w, p.out, p.k, cfg)?;
+                let b = probe_i8(p.k * TUNE_PROBE_ROWS, seed);
+                let mut c = vec![0i32; p.out * TUNE_PROBE_ROWS];
+                time_reps!(gemm_i4_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c));
+            }
+            (ProblemKind::PackedAGemm, 1) => {
+                let ap = BitPackedA::pack(p.w, p.out, p.k)?;
+                let b = probe_pm1(p.k * TUNE_PROBE_ROWS, seed);
+                let mut b_bits = Vec::new();
+                if !pack_bits_cols(&b, p.k, TUNE_PROBE_ROWS, &mut b_bits) {
+                    return None;
+                }
+                let mut c = vec![0i32; p.out * TUNE_PROBE_ROWS];
+                time_reps!(gemm_xnor_a_isa(isa, &ap, &b_bits, TUNE_PROBE_ROWS, &mut c));
+            }
+            (ProblemKind::PackedAGemm, _) => {
                 let ap = PackedA::pack_with(p.w, p.out, p.k, cfg)?;
                 let b = probe_i8(p.k * TUNE_PROBE_ROWS, seed);
                 let mut c = vec![0i32; p.out * TUNE_PROBE_ROWS];
-                gemm_i8_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c);
-                for _ in 0..TUNE_PROBE_REPS {
-                    let t = Instant::now();
-                    gemm_i8_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c);
-                    best = best.min(t.elapsed().as_nanos() as u64);
-                }
+                time_reps!(gemm_i8_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c));
             }
         }
         total = total.saturating_add(best);
@@ -281,8 +340,8 @@ mod tests {
     #[test]
     fn shape_key_is_order_independent() {
         let (bw, aw) = toy_problems();
-        let p1 = GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm };
-        let p2 = GemmProblem { w: &aw, k: 9, out: 6, kind: ProblemKind::PackedAGemm };
+        let p1 = GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm, bits: 8 };
+        let p2 = GemmProblem { w: &aw, k: 9, out: 6, kind: ProblemKind::PackedAGemm, bits: 8 };
         assert_eq!(shape_key(&[p1, p2]), shape_key(&[p2, p1]));
         assert_eq!(shape_key(&[p1, p2]), vec!["a9x6".to_string(), "b12x10".to_string()]);
     }
@@ -291,7 +350,7 @@ mod tests {
     fn off_and_empty_return_default_without_touching_the_cache() {
         let cache = TuneCache::new(None);
         let (bw, _) = toy_problems();
-        let p = GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm };
+        let p = GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm, bits: 8 };
         let out = tune_gemms_with(&cache, 1, &[p], Isa::Scalar, 1, TuneMode::Off);
         assert_eq!(out, TuneOutcome::DEFAULT);
         let out = tune_gemms_with(&cache, 1, &[], Isa::Scalar, 1, TuneMode::Full);
@@ -304,8 +363,8 @@ mod tests {
         let cache = TuneCache::new(None);
         let (bw, aw) = toy_problems();
         let ps = [
-            GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm },
-            GemmProblem { w: &aw, k: 9, out: 6, kind: ProblemKind::PackedAGemm },
+            GemmProblem { w: &bw, k: 12, out: 10, kind: ProblemKind::PackedBGemm, bits: 8 },
+            GemmProblem { w: &aw, k: 9, out: 6, kind: ProblemKind::PackedAGemm, bits: 8 },
         ];
         // Cold cache in `cached` mode: default, nothing stored.
         let out = tune_gemms_with(&cache, 42, &ps, Isa::Scalar, 2, TuneMode::Cached);
@@ -330,10 +389,31 @@ mod tests {
     }
 
     #[test]
+    fn narrow_widths_key_and_measure_through_their_kernels() {
+        // Width is part of the cache key: an int4 plan must never reuse
+        // an int8 winner for the same shape (different kernel family).
+        let b4: Vec<i32> = (0..16 * 6).map(|i| (i as i32 % 16) - 8).collect();
+        let b1: Vec<i32> = (0..6 * 16).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let p8 = GemmProblem { w: &b4, k: 16, out: 6, kind: ProblemKind::PackedBGemm, bits: 8 };
+        let p4 = GemmProblem { w: &b4, k: 16, out: 6, kind: ProblemKind::PackedBGemm, bits: 4 };
+        let p1 = GemmProblem { w: &b1, k: 16, out: 6, kind: ProblemKind::PackedAGemm, bits: 1 };
+        assert_eq!(shape_key(&[p8]), vec!["b16x6".to_string()]);
+        assert_eq!(
+            shape_key(&[p4, p1]),
+            vec!["a16x6w1".to_string(), "b16x6w4".to_string()]
+        );
+        // Full mode measures the narrow kernel families end to end.
+        let cache = TuneCache::new(None);
+        let out = tune_gemms_with(&cache, 9, &[p4, p1], Isa::Scalar, 1, TuneMode::Full);
+        assert_eq!(out.source, TuneSource::Measured);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
     fn unpackable_weights_fall_back_to_default_config() {
         let cache = TuneCache::new(None);
         let bw = vec![1000i32; 8 * 8]; // out of i8 range: pack refuses
-        let p = GemmProblem { w: &bw, k: 8, out: 8, kind: ProblemKind::PackedBGemm };
+        let p = GemmProblem { w: &bw, k: 8, out: 8, kind: ProblemKind::PackedBGemm, bits: 8 };
         let out = tune_gemms_with(&cache, 7, &[p], Isa::Scalar, 1, TuneMode::Full);
         assert_eq!(out.cfg, GemmConfig::DEFAULT);
         assert_eq!(out.source, TuneSource::Measured);

@@ -4,10 +4,15 @@
 //! crossing the KC block boundary — the packed kernels must match a
 //! naive triple loop bit for bit, serial and pool-dispatched alike.
 
+use pqdl::ops::bitpack::{
+    gemm_i4_packed_a_isa, gemm_i4_packed_isa, gemm_xnor_a_isa, gemm_xnor_isa, pack_bits_cols,
+    pack_bits_rows, BitPackedA, BitPackedB, PackedA4, PackedB4, PackedWeights,
+};
 use pqdl::ops::matmul::{
     gemm_i8_i32, gemm_i8_i32_par, gemm_i8_packed, gemm_i8_packed_a, gemm_i8_packed_a_isa,
-    gemm_i8_packed_isa, gemm_i8_packed_par, gemm_i8_packed_par_isa, matmul_integer_prewidened,
-    matmul_integer_prewidened_into, PackedA, PackedB, GEMM_KC, GEMM_MR, GEMM_NR,
+    gemm_i8_packed_isa, gemm_i8_packed_par, gemm_i8_packed_par_isa, matmul_integer_packed_into,
+    matmul_integer_prewidened, matmul_integer_prewidened_into, PackedA, PackedB, GEMM_KC,
+    GEMM_MR, GEMM_NR,
 };
 use pqdl::ops::Isa;
 use pqdl::parallel::ThreadPool;
@@ -234,6 +239,149 @@ fn packed_gemm_crosses_kc_block_boundary() {
         let mut got = vec![0i32; m * n];
         gemm_i8_packed(&a, &bp, m, &mut got);
         assert_eq!(want, got, "({m},{k},{n})");
+    }
+}
+
+#[test]
+fn i4_packed_kernels_match_naive_ragged() {
+    // The nibble-packed family under the same contract as the i8 panels:
+    // random shapes with ragged m/k/n (odd n exercises the padded last
+    // nibble; k past UNPACK_KC exercises block-partial-sum order), every
+    // ISA, B-packed (FC) and A-packed (conv) orientations.
+    let shapes = Pair(
+        Pair(RangeUsize { lo: 1, hi: 9 }, RangeUsize { lo: 1, hi: 70 }),
+        RangeUsize { lo: 1, hi: 21 },
+    );
+    run_prop("i4_gemm_vs_naive", &shapes, 0x14_9ACC, 60, |&((m, k), n)| {
+        let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64 ^ 0x1417);
+
+        // FC orientation: full-range i8 activations x int4 weights
+        // (drawn from the whole [-8, 7] range including both extremes).
+        let a = rand_i8(&mut rng, m * k);
+        let b4: Vec<i32> = (0..k * n).map(|_| (rng.below(16) as i32) - 8).collect();
+        let want = naive(&a, &b4, m, k, n);
+        let bp = PackedB4::pack(&b4, k, n).ok_or("PackedB4 refused int4 data")?;
+
+        // Conv orientation: int4 weights x full-range i8 activations.
+        let aw: Vec<i32> = (0..m * k).map(|_| (rng.below(16) as i32) - 8).collect();
+        let aw8: Vec<i8> = aw.iter().map(|&v| v as i8).collect();
+        let bact = rand_i8(&mut rng, k * n);
+        let bact_w: Vec<i32> = bact.iter().map(|&v| v as i32).collect();
+        let want_a = naive(&aw8, &bact_w, m, k, n);
+        let ap = PackedA4::pack(&aw, m, k).ok_or("PackedA4 refused int4 data")?;
+
+        for isa in Isa::available() {
+            let mut got = vec![0i32; m * n];
+            gemm_i4_packed_isa(isa, &a, &bp, m, &mut got);
+            if got != want {
+                return Err(format!("{isa} i4 packed-B mismatch at ({m},{k},{n})"));
+            }
+            let mut got_a = vec![0i32; m * n];
+            gemm_i4_packed_a_isa(isa, &ap, &bact, n, &mut got_a);
+            if got_a != want_a {
+                return Err(format!("{isa} i4 packed-A mismatch at ({m},{k},{n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn xnor_kernels_match_naive_across_word_boundaries() {
+    // The bipolar family: shapes spanning the 64-bit word boundary (the
+    // ragged-tail proof relies on zero tail bits XORing to zero), every
+    // ISA, both orientations — FC (runtime-packed activation rows) and
+    // conv (plan-packed weight rows against runtime-packed im2col cols).
+    let shapes = Pair(
+        Pair(RangeUsize { lo: 1, hi: 7 }, RangeUsize { lo: 1, hi: 140 }),
+        RangeUsize { lo: 1, hi: 13 },
+    );
+    run_prop("xnor_gemm_vs_naive", &shapes, 0x1_9ACC, 60, |&((m, k), n)| {
+        let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64 ^ 0xB1);
+        let a8: Vec<i8> = (0..m * k).map(|_| if rng.below(2) == 0 { -1 } else { 1 }).collect();
+        let b1: Vec<i32> = (0..k * n).map(|_| if rng.below(2) == 0 { -1 } else { 1 }).collect();
+        let want = naive(&a8, &b1, m, k, n);
+
+        let bb = BitPackedB::pack(&b1, k, n).ok_or("BitPackedB refused ±1 data")?;
+        let mut a_bits = Vec::new();
+        if !pack_bits_rows(&a8, m, k, &mut a_bits) {
+            return Err("pack_bits_rows refused ±1 data".into());
+        }
+        let aw: Vec<i32> = a8.iter().map(|&v| v as i32).collect();
+        let ap = BitPackedA::pack(&aw, m, k).ok_or("BitPackedA refused ±1 data")?;
+        let b8: Vec<i8> = b1.iter().map(|&v| v as i8).collect();
+        let mut b_bits = Vec::new();
+        if !pack_bits_cols(&b8, k, n, &mut b_bits) {
+            return Err("pack_bits_cols refused ±1 data".into());
+        }
+
+        for isa in Isa::available() {
+            let mut got = vec![0i32; m * n];
+            gemm_xnor_isa(isa, &a_bits, &bb, m, &mut got);
+            if got != want {
+                return Err(format!("{isa} xnor mismatch at ({m},{k},{n})"));
+            }
+            let mut got_a = vec![0i32; m * n];
+            gemm_xnor_a_isa(isa, &ap, &b_bits, n, &mut got_a);
+            if got_a != want {
+                return Err(format!("{isa} xnor-a mismatch at ({m},{k},{n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn width_dispatched_entry_point_at_zp_edges() {
+    // The tensor-level width dispatcher: for every baked-width variant
+    // and every zero-point edge, the result must equal the strictly
+    // scalar widen-to-i32 oracle. Nonzero a_zp (and non-±1 activations
+    // under a bipolar baking) must route to the widened fallback — the
+    // "narrow baking never changes results" contract.
+    let (m, k, n) = (5usize, 67, GEMM_NR + 3);
+    let mut rng = Rng::new(0x2ED_4B1);
+
+    // int4-baked weights, full-range i8 activations.
+    let a = Tensor::from_i8(&[m, k], rand_i8(&mut rng, m * k)).unwrap();
+    let b4: Vec<i32> = (0..k * n).map(|_| (rng.below(16) as i32) - 8).collect();
+    let w4 = PackedWeights::I4(PackedB4::pack(&b4, k, n).unwrap());
+
+    // bipolar-baked weights; strictly ±1 activations qualify for XNOR,
+    // the mixed tensor (one 0 inserted) must fall back.
+    let b1: Vec<i32> = (0..k * n).map(|_| if rng.below(2) == 0 { -1 } else { 1 }).collect();
+    let w1 = PackedWeights::Bipolar(BitPackedB::pack(&b1, k, n).unwrap());
+    let mut pm1 = vec![0i8; m * k];
+    for v in &mut pm1 {
+        *v = if rng.below(2) == 0 { -1 } else { 1 };
+    }
+    let a_pm1 = Tensor::from_i8(&[m, k], pm1.clone()).unwrap();
+    pm1[m * k / 2] = 0;
+    let a_mixed = Tensor::from_i8(&[m, k], pm1).unwrap();
+
+    for (label, act, bw, packed) in [
+        ("int4", &a, &b4, &w4),
+        ("bipolar/pm1", &a_pm1, &b1, &w1),
+        ("bipolar/mixed", &a_mixed, &b1, &w1),
+    ] {
+        for a_zp in [-128i32, -1, 0, 1, 127] {
+            let want = matmul_integer_prewidened(act, bw, k, n, a_zp).unwrap();
+            for isa in Isa::available() {
+                let mut bits_scratch = None;
+                let got = matmul_integer_packed_into(
+                    act,
+                    bw,
+                    Some(packed),
+                    k,
+                    n,
+                    a_zp,
+                    isa,
+                    None,
+                    &mut bits_scratch,
+                )
+                .unwrap();
+                assert_eq!(want, got, "{label} {isa} a_zp={a_zp}");
+            }
+        }
     }
 }
 

@@ -163,6 +163,7 @@ fn second_tune_for_the_same_key_hits_without_re_measuring() {
         k: 12,
         out: 10,
         kind: ProblemKind::PackedBGemm,
+        bits: 8,
     }];
     let own = TuneCache::new(None);
     let first = tune_gemms_with(&own, digest, &problems, Isa::Scalar, 1, TuneMode::Full);
@@ -184,6 +185,7 @@ fn tune_off_reproduces_the_hand_picked_constants() {
         k: 8,
         out: 8,
         kind: ProblemKind::PackedBGemm,
+        bits: 8,
     };
     let own = TuneCache::new(None);
     let out = tune_gemms_with(&own, 1, &[p], Isa::Scalar, 1, TuneMode::Off);
