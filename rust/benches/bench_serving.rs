@@ -184,7 +184,7 @@ fn main() {
     // commits; `PQDL_FORCE_ISA` pins an entire serving run instead.
     {
         use pqdl::ops::bitpack::PackedWeights;
-        use pqdl::ops::fused::{FusedQFc, QEpilogue};
+        use pqdl::ops::fused::{ActPack, FusedQFc, QEpilogue};
         use pqdl::ops::matmul::{self, PackedB};
         use pqdl::ops::Isa;
         use pqdl::quant::QType;
@@ -231,10 +231,12 @@ fn main() {
                         zp: 3,
                         out_qtype: QType::I8,
                     },
+                    emit: ActPack::Container,
+                    a_pack: ActPack::Container,
                 };
                 let fused = {
                     let x = x.clone();
-                    let mut scratch = [None, None];
+                    let mut scratch = [None, None, None];
                     bench_auto(&format!("isa {isa} fc b{batch}"), batch, target_ms, move || {
                         fc.run(&x, None, &mut scratch).expect("fused fc run");
                     })
@@ -249,21 +251,79 @@ fn main() {
                 json.record(&format!("isa {isa} fc b{batch}"), batch, &fused);
             }
         }
+
+        // Narrow GEMM bodies per ISA: the nibble-activation int4 kernel
+        // (packed-u8 A rows against widened i32 B) and the XNOR-popcount
+        // bipolar kernel, each forced through every ISA this host
+        // supports — scalar doubles as the differential oracle.
+        {
+            use pqdl::ops::bitpack::{
+                gemm_i4a_bytes_isa, gemm_xnor_isa, pack_bits_rows, pack_nibble_rows, BitPackedB,
+            };
+
+            let bw4: Vec<i32> = (0..k * n).map(|_| rng.below(16) as i32 - 8).collect();
+            let bw1: Vec<i32> = (0..k * n)
+                .map(|_| if rng.below(2) == 0 { -1 } else { 1 })
+                .collect();
+            let bb = BitPackedB::pack(&bw1, k, n).expect("±1 weights must bit-pack");
+            println!(
+                "{:<8} | {:<8} | {:>14} | {:>14}",
+                "isa", "batch", "i4a itm/s", "xnor itm/s"
+            );
+            for batch in [8usize, 128] {
+                let a4: Vec<i8> = (0..batch * k).map(|_| rng.below(16) as i8 - 8).collect();
+                let a1: Vec<i8> = (0..batch * k)
+                    .map(|_| if rng.below(2) == 0 { -1i8 } else { 1 })
+                    .collect();
+                let mut a_bytes = Vec::new();
+                pack_nibble_rows(&a4, batch, k, &mut a_bytes);
+                let mut abits = Vec::new();
+                assert!(pack_bits_rows(&a1, batch, k, &mut abits));
+                for isa in Isa::available() {
+                    let i4a = {
+                        let a_bytes = &a_bytes;
+                        let bw4 = &bw4;
+                        let mut c = vec![0i32; batch * n];
+                        bench_auto(&format!("isa {isa} i4a b{batch}"), batch, target_ms, move || {
+                            gemm_i4a_bytes_isa(isa, a_bytes, batch, k, bw4, n, &mut c);
+                        })
+                    };
+                    let xnor = {
+                        let abits = &abits;
+                        let bb = &bb;
+                        let mut c = vec![0i32; batch * n];
+                        bench_auto(&format!("isa {isa} xnor b{batch}"), batch, target_ms, move || {
+                            gemm_xnor_isa(isa, abits, bb, batch, &mut c);
+                        })
+                    };
+                    println!(
+                        "{:<8} | {batch:<8} | {:>14.1} | {:>14.1}",
+                        isa.name(),
+                        i4a.throughput_per_s,
+                        xnor.throughput_per_s
+                    );
+                    json.record(&format!("isa {isa} i4a b{batch}"), batch, &i4a);
+                    json.record(&format!("isa {isa} xnor b{batch}"), batch, &xnor);
+                }
+            }
+        }
     }
 
     // --- per-width microkernel rows (sub-8-bit weight packing) ------------
     // The same (k, n) GEMM + fused FC workload at each logical weight
-    // width the planner can bake: full i8 panels, nibble-packed int4, and
-    // XNOR-popcount bipolar (±1 activations, so the bit-sliced path runs
-    // for real rather than falling back to the widened loop). Every width
-    // computes with the same i32 accumulator semantics — these rows
-    // measure the packing's memory/throughput effect, and land in the
-    // JSON trajectory so per-width lanes compare across commits.
+    // width the planner can bake: full i8 panels, nibble-packed int4,
+    // tribble int3, crumb int2, and XNOR-popcount bipolar (±1
+    // activations, so the bit-sliced path runs for real rather than
+    // falling back to the widened loop). Every width computes with the
+    // same i32 accumulator semantics — these rows measure the packing's
+    // memory/throughput effect, and land in the JSON trajectory so
+    // per-width lanes compare across commits.
     {
         use pqdl::ops::bitpack::{
-            gemm_i4_packed_isa, gemm_xnor_isa, pack_bits_rows, BitPackedB, PackedB4, PackedWeights,
+            gemm_i2_packed_isa, gemm_i3_packed_isa, gemm_i4_packed_isa, gemm_xnor_isa,
+            pack_bits_rows, BitPackedB, PackedB2, PackedB3, PackedB4, PackedWeights,
         };
-        use pqdl::ops::fused::{FusedQFc, QEpilogue};
+        use pqdl::ops::fused::{ActPack, FusedQFc, QEpilogue};
         use pqdl::ops::matmul::{self, PackedB};
         use pqdl::ops::Isa;
         use pqdl::quant::QType;
@@ -273,6 +333,8 @@ fn main() {
         let mut rng = Rng::new(0x4B17);
         let bw8: Vec<i32> = (0..k * n).map(|_| rng.i8() as i32).collect();
         let bw4: Vec<i32> = (0..k * n).map(|_| rng.below(16) as i32 - 8).collect();
+        let bw3: Vec<i32> = (0..k * n).map(|_| rng.below(8) as i32 - 4).collect();
+        let bw2: Vec<i32> = (0..k * n).map(|_| rng.below(4) as i32 - 2).collect();
         let bw1: Vec<i32> = (0..k * n)
             .map(|_| if rng.below(2) == 0 { -1 } else { 1 })
             .collect();
@@ -280,6 +342,8 @@ fn main() {
         let packs = [
             ("int8", &bw8, PackedWeights::I8(PackedB::pack(&bw8, k, n).unwrap())),
             ("int4", &bw4, PackedWeights::I4(PackedB4::pack(&bw4, k, n).unwrap())),
+            ("int3", &bw3, PackedWeights::I3(PackedB3::pack(&bw3, k, n).unwrap())),
+            ("int2", &bw2, PackedWeights::I2(PackedB2::pack(&bw2, k, n).unwrap())),
             (
                 "bipolar",
                 &bw1,
@@ -315,6 +379,8 @@ fn main() {
                                 matmul::gemm_i8_packed_isa(isa, a, bp, batch, &mut c)
                             }
                             PackedWeights::I4(bp) => gemm_i4_packed_isa(isa, a, bp, batch, &mut c),
+                            PackedWeights::I3(bp) => gemm_i3_packed_isa(isa, a, bp, batch, &mut c),
+                            PackedWeights::I2(bp) => gemm_i2_packed_isa(isa, a, bp, batch, &mut c),
                             PackedWeights::Bipolar(bb) => {
                                 gemm_xnor_isa(isa, &abits, bb, batch, &mut c)
                             }
@@ -326,6 +392,8 @@ fn main() {
                 let fc_bp = match pw {
                     PackedWeights::I8(_) => PackedWeights::I8(PackedB::pack(bw, k, n).unwrap()),
                     PackedWeights::I4(_) => PackedWeights::I4(PackedB4::pack(bw, k, n).unwrap()),
+                    PackedWeights::I3(_) => PackedWeights::I3(PackedB3::pack(bw, k, n).unwrap()),
+                    PackedWeights::I2(_) => PackedWeights::I2(PackedB2::pack(bw, k, n).unwrap()),
                     PackedWeights::Bipolar(_) => {
                         PackedWeights::Bipolar(BitPackedB::pack(bw, k, n).unwrap())
                     }
@@ -346,10 +414,12 @@ fn main() {
                         zp: 3,
                         out_qtype: QType::I8,
                     },
+                    emit: ActPack::Container,
+                    a_pack: ActPack::Container,
                 };
                 let fused = {
                     let x = x.clone();
-                    let mut scratch = [None, None];
+                    let mut scratch = [None, None, None];
                     bench_auto(
                         &format!("width {label} fc b{batch}"),
                         batch,
@@ -369,6 +439,74 @@ fn main() {
                 json.record(&format!("width {label} fc b{batch}"), batch, &fused);
             }
         }
+
+        // Packed-activation vs container-activation fused FC: the same
+        // int4-weight consumer fed (a) the plain i8 container edge and
+        // (b) the nibble-packed u8 edge a paired producer hands it when
+        // the planner stamps `a_pack: Nibble` — isolating the win of
+        // skipping the unpack/repack round-trip between fused stages.
+        {
+            use pqdl::ops::bitpack::pack_nibble_rows;
+
+            println!(
+                "{:<10} | {:<8} | {:>14} | {:>8}",
+                "a-edge", "batch", "fc itm/s", "speedup"
+            );
+            for batch in [8usize, 128] {
+                let a: Vec<i8> = (0..batch * k).map(|_| rng.below(16) as i8 - 8).collect();
+                let x_cont = Tensor::from_i8(&[batch, k], a.clone()).unwrap();
+                let mut packed = Vec::new();
+                pack_nibble_rows(&a, batch, k, &mut packed);
+                let x_pack = Tensor::from_u8(&[batch, k.div_ceil(2)], packed).unwrap();
+                let mk_fc = |a_pack: ActPack| FusedQFc {
+                    bw: bw4.clone(),
+                    bp: PackedB4::pack(&bw4, k, n).map(PackedWeights::I4),
+                    k,
+                    n,
+                    a_zp: 0,
+                    bias: None,
+                    isa,
+                    epi: QEpilogue {
+                        s1: 0.013,
+                        s2: None,
+                        relu: true,
+                        inv_scale: 1.0 / 0.11,
+                        zp: 3,
+                        out_qtype: QType::I8,
+                    },
+                    emit: ActPack::Container,
+                    a_pack,
+                };
+                let cont = {
+                    let fc = mk_fc(ActPack::Container);
+                    let x = x_cont.clone();
+                    let mut scratch = [None, None, None];
+                    bench_auto(&format!("act cont fc b{batch}"), batch, target_ms, move || {
+                        fc.run(&x, None, &mut scratch).expect("container-edge fc run");
+                    })
+                };
+                let pack = {
+                    let fc = mk_fc(ActPack::Nibble);
+                    let x = x_pack.clone();
+                    let mut scratch = [None, None, None];
+                    bench_auto(&format!("act nibble fc b{batch}"), batch, target_ms, move || {
+                        fc.run(&x, None, &mut scratch).expect("nibble-edge fc run");
+                    })
+                };
+                println!(
+                    "{:<10} | {batch:<8} | {:>14.1} | {:>8}",
+                    "container", cont.throughput_per_s, ""
+                );
+                println!(
+                    "{:<10} | {batch:<8} | {:>14.1} | {:>7.2}x",
+                    "nibble",
+                    pack.throughput_per_s,
+                    pack.throughput_per_s / cont.throughput_per_s
+                );
+                json.record(&format!("act cont fc b{batch}"), batch, &cont);
+                json.record(&format!("act nibble fc b{batch}"), batch, &pack);
+            }
+        }
     }
 
     // --- tuned vs default GEMM tile (plan-time micro-tuner) ---------------
@@ -379,7 +517,7 @@ fn main() {
     // at worst tie it.
     {
         use pqdl::ops::bitpack::PackedWeights;
-        use pqdl::ops::fused::{FusedQFc, QEpilogue};
+        use pqdl::ops::fused::{ActPack, FusedQFc, QEpilogue};
         use pqdl::ops::matmul::{self, PackedB};
         use pqdl::ops::Isa;
         use pqdl::quant::QType;
@@ -451,10 +589,12 @@ fn main() {
                         zp: 3,
                         out_qtype: QType::I8,
                     },
+                    emit: ActPack::Container,
+                    a_pack: ActPack::Container,
                 };
                 let fused = {
                     let x = x.clone();
-                    let mut scratch = [None, None];
+                    let mut scratch = [None, None, None];
                     bench_auto(&format!("{label} fc b{batch}"), batch, target_ms, move || {
                         fc.run(&x, None, &mut scratch).expect("fused fc run");
                     })

@@ -77,17 +77,38 @@ pub fn gemm_cost(cfg: &HwConfig, m: usize, k: usize, n: usize) -> CostReport {
 /// not (the array still performs one MAC per weight, whatever its
 /// width — narrow widths buy bandwidth and energy, not cycles, which is
 /// exactly the co-design trade-off the report exists to expose).
+///
+/// Activations are assumed full 8-bit; see [`gemm_cost_wa`] when the
+/// incoming edge is itself packed (nibble / bit-plane fused chains).
 pub fn gemm_cost_w(cfg: &HwConfig, m: usize, k: usize, n: usize, weight_bits: u8) -> CostReport {
+    gemm_cost_wa(cfg, m, k, n, weight_bits, 8)
+}
+
+/// [`gemm_cost_w`] with a packed *activation* width as well. When a fused
+/// chain hands its successor a nibble- or bit-plane-packed edge, the
+/// activation stream that re-plays per output tile column shrinks by the
+/// same bit-packing factor as the weights — `act_bits` scales that term.
+/// Output traffic stays i32 (accumulators are width-independent), and
+/// compute is untouched for the same reason as in [`gemm_cost_w`].
+pub fn gemm_cost_wa(
+    cfg: &HwConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    weight_bits: u8,
+    act_bits: u8,
+) -> CostReport {
     let tiles_m = m.div_ceil(cfg.mac_rows) as u64;
     let tiles_n = n.div_ceil(cfg.mac_cols) as u64;
     let fill = (cfg.mac_rows + cfg.mac_cols) as u64; // systolic skew
     let cycles = tiles_m * tiles_n * (k as u64 + fill);
     let weight_bytes = (k * n * weight_bits.clamp(1, 8) as usize).div_ceil(8) as u64;
+    let act_bytes = (m * k * act_bits.clamp(1, 8) as usize).div_ceil(8) as u64;
     CostReport {
         macs: (m * k * n) as u64,
         cycles,
         // Activations stream in per tile-row; weights per tile.
-        sram_bytes: (m * k) as u64 * tiles_n + weight_bytes * tiles_m + (m * n) as u64 * 4,
+        sram_bytes: act_bytes * tiles_n + weight_bytes * tiles_m + (m * n) as u64 * 4,
         dram_bytes: weight_bytes, // weight load
         vector_ops: 0,
         host_flops: 0,
@@ -167,6 +188,25 @@ mod tests {
         assert_eq!(w4.cycles, w8.cycles);
         // Ragged packing rounds up, never to zero.
         assert_eq!(gemm_cost_w(&cfg, 1, 3, 3, 1).dram_bytes, 2);
+    }
+
+    #[test]
+    fn packed_activations_cut_sram_traffic_only() {
+        let cfg = HwConfig::default();
+        let a8 = gemm_cost_wa(&cfg, 8, 64, 16, 4, 8);
+        let a4 = gemm_cost_wa(&cfg, 8, 64, 16, 4, 4);
+        let a1 = gemm_cost_wa(&cfg, 8, 64, 16, 4, 1);
+        assert_eq!(a8, gemm_cost_w(&cfg, 8, 64, 16, 4));
+        // Weight DRAM traffic is activation-width-independent.
+        assert_eq!(a4.dram_bytes, a8.dram_bytes);
+        // Activation streaming shrinks; i32 output term is untouched,
+        // so strict inequality is the exact claim.
+        assert!(a4.sram_bytes < a8.sram_bytes);
+        assert!(a1.sram_bytes < a4.sram_bytes);
+        assert_eq!(a4.macs, a8.macs);
+        assert_eq!(a4.cycles, a8.cycles);
+        // Ragged rows round up per the whole streamed block, never to 0.
+        assert!(gemm_cost_wa(&cfg, 1, 3, 3, 8, 1).sram_bytes > 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! with the interpreter *demonstrates* the paper's expressiveness claim.
 
 use super::config::{HwConfig, Rounding};
-use super::cost::{gemm_cost_w, host_cost, vector_cost, CostReport};
+use super::cost::{gemm_cost_wa, host_cost, vector_cost, CostReport};
 use super::lut::{ActEval, ActLut};
 use crate::onnx::ir::{Graph, Model, Node};
 use crate::onnx::shape::ConvAttrs;
@@ -109,7 +109,7 @@ pub enum Stage {
         out_qtype: QType,
         /// Minimal logical weight width (bits), derived from the weight
         /// VALUES at lift time; drives the width-scaled traffic terms of
-        /// the cost model ([`gemm_cost_w`]).
+        /// the cost model ([`gemm_cost_wa`]).
         weight_bits: u8,
     },
     /// Convolution integer block (NCHW).
@@ -669,7 +669,9 @@ impl HwModule {
                     }
                     *v = q;
                 }
-                cost.add(&gemm_cost_w(&self.cfg, m, *k, *n, *weight_bits));
+                // Activation stream width follows the producing stage's
+                // qtype: a bipolar or int4 edge arrives bit-packed.
+                cost.add(&gemm_cost_wa(&self.cfg, m, *k, *n, *weight_bits, t.qtype.bits()));
                 cost.add(&vector_cost(&self.cfg, m * n, 2));
                 let mut shape = t.shape[..t.shape.len() - 1].to_vec();
                 shape.push(*n);
@@ -740,7 +742,16 @@ impl HwModule {
                 // [nb·patch, patch_rows] streamed from SRAM, B = kernel
                 // [patch_rows, m] loaded once and width-packed — so the
                 // width scaling lands on the true weight operand.
-                cost.add(&gemm_cost_w(&self.cfg, nb * patch, patch_rows, *m, *weight_bits));
+                // im2col replicates input values, so the patch matrix
+                // streams at the input edge's logical width.
+                cost.add(&gemm_cost_wa(
+                    &self.cfg,
+                    nb * patch,
+                    patch_rows,
+                    *m,
+                    *weight_bits,
+                    t.qtype.bits(),
+                ));
                 cost.add(&vector_cost(&self.cfg, nb * m * patch, 2));
                 Ok(HwValue::Int(HwInt {
                     data: out,

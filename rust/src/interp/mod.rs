@@ -84,6 +84,11 @@ pub enum SessionError {
     ValueMissing(String),
     #[error("batch split/concat failed: {0}")]
     Batch(#[from] crate::tensor::TensorError),
+    /// A forced `PQDL_PACK_WIDTH` the model's fused weights cannot admit
+    /// — rejected at plan time instead of silently falling back (the
+    /// forcing values exist precisely to pin a kernel family).
+    #[error(transparent)]
+    Pack(#[from] crate::opt::PackError),
 }
 
 /// Per-node execution statistics (filled when profiling is enabled).
@@ -113,9 +118,19 @@ pub struct PlanStats {
     /// Fused FC/conv steps whose weights baked to the int4 nibble-packed
     /// kernel family (subset of `fused_qfc + fused_qconv`).
     pub fused_int4: usize,
+    /// Fused FC/conv steps whose weights baked to int3 tribble panels.
+    pub fused_int3: usize,
+    /// Fused FC/conv steps whose weights baked to int2 crumb panels.
+    pub fused_int2: usize,
     /// Fused FC/conv steps whose weights baked to the bipolar
     /// XNOR-popcount kernel family (subset of `fused_qfc + fused_qconv`).
     pub fused_bipolar: usize,
+    /// Fused FC→FC edges carrying nibble-packed activation rows (the
+    /// producer never materializes the i8 container for the edge).
+    pub packed_act_nibble: usize,
+    /// Fused FC→FC edges attempting bitplane (±1) activation packing
+    /// (runtime-gated; a batch containing 0 falls back to the container).
+    pub packed_act_bitplane: usize,
     pub eliminated: usize,
     /// Kernel instruction set the plan's quantized microkernels were
     /// stamped with at compile time (see [`crate::ops::Isa::active`]).
@@ -142,7 +157,7 @@ impl std::fmt::Display for PlanStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} int4 / {} bipolar baked, {} eliminated; isa {} on {} steps; tile {} [{}]; twin {})",
+            "{} nodes -> {} steps ({} fused-fc, {} fused-conv, {} act-lut over {} nodes, {} int4 / {} int3 / {} int2 / {} bipolar baked, {} nibble-act / {} bitplane-act edges, {} eliminated; isa {} on {} steps; tile {} [{}]; twin {})",
             self.nodes,
             self.steps,
             self.fused_qfc,
@@ -150,7 +165,11 @@ impl std::fmt::Display for PlanStats {
             self.fused_act_lut,
             self.fused_nodes,
             self.fused_int4,
+            self.fused_int3,
+            self.fused_int2,
             self.fused_bipolar,
+            self.packed_act_nibble,
+            self.packed_act_bitplane,
             self.eliminated,
             self.isa,
             self.isa_steps,
@@ -498,7 +517,11 @@ impl Session {
             fused_qconv: s.fused_qconv,
             fused_act_lut: s.fused_act_lut,
             fused_int4: s.fused_int4,
+            fused_int3: s.fused_int3,
+            fused_int2: s.fused_int2,
             fused_bipolar: s.fused_bipolar,
+            packed_act_nibble: s.packed_act_nibble,
+            packed_act_bitplane: s.packed_act_bitplane,
             eliminated: s.eliminated,
             isa: self.plan.isa,
             isa_steps: self

@@ -119,15 +119,16 @@ pub(crate) struct CompiledPlan {
 ///   dies (its `frees` step, or the end-of-run sweep) the tensor moves
 ///   here instead of being dropped, and the next run's kernel for that
 ///   slot writes into its storage.
-/// * `scratch` — two per-step kernel-internal buffers (conv im2col
-///   columns, pre-bias conv results), owned by schedule position.
+/// * `scratch` — three per-step kernel-internal buffers (conv im2col
+///   columns, pre-bias conv results, the fused FC's packed-activation
+///   staging container), owned by schedule position.
 ///
 /// Memory stays bounded by the live-set of the largest batch seen: a
 /// shape change just re-fills the affected buffers once.
 pub(crate) struct ScratchArena {
     pub store: Vec<Option<Tensor>>,
     pub recycle: Vec<Option<Tensor>>,
-    pub scratch: Vec<[Option<Tensor>; 2]>,
+    pub scratch: Vec<[Option<Tensor>; 3]>,
 }
 
 impl ScratchArena {
@@ -137,7 +138,7 @@ impl ScratchArena {
         let mut recycle = Vec::with_capacity(n_slots);
         recycle.resize_with(n_slots, || None);
         let mut scratch = Vec::with_capacity(n_steps);
-        scratch.resize_with(n_steps, || [None, None]);
+        scratch.resize_with(n_steps, || [None, None, None]);
         ScratchArena {
             store,
             recycle,
@@ -209,7 +210,7 @@ impl CompiledPlan {
             items,
             aliases,
             stats,
-        } = opt::optimize(model, order, types, opts);
+        } = opt::optimize(model, order, types, opts).map_err(SessionError::Pack)?;
         let init_pos: HashMap<&str, u32> = g
             .initializers
             .iter()

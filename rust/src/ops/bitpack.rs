@@ -22,16 +22,44 @@
 //! same oracle the i8 packed kernels are proptested against
 //! (`tests/packed_gemm.rs` per-width differential tests).
 //!
-//! The `isa` parameters on the dispatch wrappers are the same plan-time
-//! seam the i8 kernels use (PR 6). The bodies are scalar today — the
-//! int4 inner loop IS the i8 loop (already auto-vectorizable over the
-//! unpacked block) and the XNOR kernel is dominated by `count_ones`,
-//! which compiles to the native popcount instruction on every supported
-//! target — so the wrappers exist to keep the call sites and the tuner
-//! stable when `vpshufb`-style unpack or `vpopcntdq` variants land.
+//! Two more storage-only widths ride the same seams:
+//!
+//! * **int2 (crumb)** — widened values in `[-2, 1]` pack four per byte
+//!   (offset-encoded `v + 2` ∈ `[0, 3]`, little-endian within the byte).
+//! * **int3 (tribble)** — widened values in `[-4, 3]` pack as 3-bit
+//!   fields in a little-endian bitstream (`v + 4` ∈ `[0, 7]`).
+//!
+//! Both decode to plain i8 and accumulate exactly like the int4 path, so
+//! they inherit its bit-exactness argument wholesale. Their kernels are
+//! scalar reference implementations behind the same `_isa`/`_par_isa`
+//! dispatch seams the int4/XNOR kernels started with — SIMD twins slot
+//! in without touching any call site.
+//!
+//! **Bit-exactness of the SIMD twins** (`x86`/`arm` modules below): every
+//! product `a[i,kk]·b[kk,j]` is computed exactly in an i32 lane (no
+//! `maddbw`-style i16 pair-sums — the nibble unpack widens to 32-bit
+//! lanes *before* multiplying, which sidesteps the documented
+//! `_mm256_maddubs_epi16` saturation hazard entirely), and per output
+//! element the lane still visits k in the scalar loop's ascending order.
+//! i32 wrapping addition is associative and commutative, so the vector
+//! regrouping cannot change any output bit. The XNOR twins replace
+//! per-word `count_ones` with a `vpshufb` nibble-LUT popcount (AVX2) /
+//! `vcntq_u8` (NEON) over 256/128-bit chunks plus a scalar word tail —
+//! popcounts are exact integers, so the identity `dot = k − 2·popcount`
+//! is untouched.
+//!
+//! The `_isa` wrappers run every value through [`Isa::normalized`]
+//! before entering an `unsafe` body, exactly like `matmul.rs`: a forced
+//! or stale ISA degrades to scalar instead of faulting.
+//!
+//! **Packed activations** (PR 10): [`pack_nibble_rows`] and
+//! [`gemm_i4a_bytes`] let a fused producer hand its i8 output to the
+//! next fused FC as nibble rows (half the intermediate traffic), and the
+//! bitplane form from [`pack_bits_rows`] feeds [`gemm_xnor`] directly —
+//! see `ops::fused` for the plan-time pairing decision.
 
 use super::isa::Isa;
-use super::matmul::{self, GEMM_MR, GEMM_NR_MAX};
+use super::matmul::{self, GEMM_MR, GEMM_NR, GEMM_NR_MAX};
 use crate::parallel::{self, ThreadPool};
 use crate::tune::GemmConfig;
 
@@ -216,11 +244,26 @@ fn gemm_i4_packed_tile<const NR_CAP: usize>(
     }
 }
 
-/// [`gemm_i4_packed`] through the plan-selected ISA seam (scalar body
-/// today — see the module note).
+/// [`gemm_i4_packed`] through a plan-selected ISA. The SIMD twins are
+/// written for the default 8-lane panel width (one nibble-packed panel
+/// row = one 32-bit word = one 8-lane unpack); any other tuned width
+/// runs the bit-identical scalar kernel, mirroring `matmul.rs`.
 pub fn gemm_i4_packed_isa(isa: Isa, a: &[i8], bp: &PackedB4, m: usize, c: &mut [i32]) {
-    let _ = isa.normalized();
-    gemm_i4_packed(a, bp, m, c);
+    if bp.cfg.nr != GEMM_NR {
+        return gemm_i4_packed(a, bp, m, c);
+    }
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::gemm_i4_packed_avx2(a, bp, m, c) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::gemm_i4_packed_sse41(a, bp, m, c) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: normalized() admits Neon only on aarch64 hosts.
+        Isa::Neon => unsafe { arm::gemm_i4_packed_neon(a, bp, m, c) },
+        _ => gemm_i4_packed(a, bp, m, c),
+    }
 }
 
 /// Row-parallel wrapper over [`gemm_i4_packed_isa`] (bit-exact: disjoint
@@ -342,11 +385,140 @@ pub fn gemm_i4_packed_a(ap: &PackedA4, b: &[i8], n: usize, c: &mut [i32]) {
     }
 }
 
-/// [`gemm_i4_packed_a`] through the plan-selected ISA seam (scalar body
-/// today — see the module note).
+/// [`gemm_i4_packed_a`] through a plan-selected ISA. The row-major
+/// nibble layout has no tile-width parameter, so every config reaches
+/// the SIMD bodies (the ragged n tail is scalar inside them).
 pub fn gemm_i4_packed_a_isa(isa: Isa, ap: &PackedA4, b: &[i8], n: usize, c: &mut [i32]) {
-    let _ = isa.normalized();
-    gemm_i4_packed_a(ap, b, n, c);
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::gemm_i4_packed_a_avx2(ap, b, n, c) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse41 => unsafe { x86::gemm_i4_packed_a_sse41(ap, b, n, c) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: normalized() admits Neon only on aarch64 hosts.
+        Isa::Neon => unsafe { arm::gemm_i4_packed_a_neon(ap, b, n, c) },
+        _ => gemm_i4_packed_a(ap, b, n, c),
+    }
+}
+
+// --- packed activations (fused-chain A side) --------------------------------
+
+/// Pack `m` rows of i8 values (each already saturated to `[-8, 7]` by a
+/// narrow quantize epilogue) into row-major nibble rows — the activation
+/// twin of [`PackedA4::pack`], producing the layout [`gemm_i4a_bytes`]
+/// consumes. Rows are independently byte-aligned (`ceil(n/2)` bytes, low
+/// nibble = even column); the caller guarantees the range at plan time
+/// (the producing epilogue's `QType` admits int4), so packing is
+/// infallible here.
+pub fn pack_nibble_rows(src: &[i8], m: usize, n: usize, out: &mut Vec<u8>) {
+    debug_assert_eq!(src.len(), m * n);
+    debug_assert!(src.iter().all(|&v| (-8..=7).contains(&v)));
+    let row_bytes = n.div_ceil(2);
+    out.clear();
+    out.resize(m * row_bytes, 0);
+    for i in 0..m {
+        let row = &src[i * n..(i + 1) * n];
+        let orow = &mut out[i * row_bytes..(i + 1) * row_bytes];
+        for (j, &v) in row.iter().enumerate() {
+            orow[j / 2] |= ((v as u8) & 0x0f) << (4 * (j % 2));
+        }
+    }
+}
+
+/// GEMM with nibble-packed *activation* rows (from [`pack_nibble_rows`])
+/// against the widened i32 weight matrix: `C[m,n] = A[m,k] x B[k,n]`.
+/// This is the consumer side of a packed-activation fused pair — the
+/// producing stage never materializes the i8 container for the edge, so
+/// the unpack-repack round trip between fused stages disappears. Each
+/// product is exact in i32 and k ascends per output element, so results
+/// are bit-identical to the widened path over the same values.
+pub fn gemm_i4a_bytes(a_bytes: &[u8], m: usize, k: usize, bw: &[i32], n: usize, c: &mut [i32]) {
+    let row_bytes = k.div_ceil(2);
+    debug_assert_eq!(a_bytes.len(), m * row_bytes);
+    debug_assert_eq!(bw.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0);
+    for i in 0..m {
+        let arow = &a_bytes[i * row_bytes..(i + 1) * row_bytes];
+        for kk in 0..k {
+            let byte = arow[kk / 2];
+            let av = if kk % 2 == 0 {
+                unpack_nibble_lo(byte)
+            } else {
+                unpack_nibble_hi(byte)
+            } as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &bw[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// [`gemm_i4a_bytes`] through the plan-selected ISA seam. Only the AVX2
+/// body is vectorized today (the B rows are already i32, so the axpy
+/// auto-vectorizes well on the 128-bit targets); everything else runs
+/// the bit-identical scalar kernel.
+pub fn gemm_i4a_bytes_isa(
+    isa: Isa,
+    a_bytes: &[u8],
+    m: usize,
+    k: usize,
+    bw: &[i32],
+    n: usize,
+    c: &mut [i32],
+) {
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::gemm_i4a_bytes_avx2(a_bytes, m, k, bw, n, c) },
+        _ => gemm_i4a_bytes(a_bytes, m, k, bw, n, c),
+    }
+}
+
+/// Row-parallel wrapper over [`gemm_i4a_bytes_isa`] (disjoint row
+/// blocks; default thresholds — packed activations carry no tuned
+/// config).
+pub fn gemm_i4a_bytes_par_isa(
+    pool: &ThreadPool,
+    isa: Isa,
+    a_bytes: &[u8],
+    m: usize,
+    k: usize,
+    bw: &[i32],
+    n: usize,
+    c: &mut [i32],
+) {
+    let row_bytes = k.div_ceil(2);
+    if !worth_parallel(
+        pool,
+        m,
+        k,
+        n,
+        matmul::GEMM_PAR_MIN_ROWS,
+        matmul::GEMM_PAR_MIN_WORK,
+    ) {
+        gemm_i4a_bytes_isa(isa, a_bytes, m, k, bw, n, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, matmul::GEMM_PAR_MIN_ROWS, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i4a_bytes_isa(
+            isa,
+            &a_bytes[row0 * row_bytes..(row0 + rows) * row_bytes],
+            rows,
+            k,
+            bw,
+            n,
+            block,
+        );
+    });
 }
 
 // --- bipolar bit packing ----------------------------------------------------
@@ -489,11 +661,21 @@ pub fn gemm_xnor(a_bits: &[i64], bb: &BitPackedB, m: usize, c: &mut [i32]) {
     }
 }
 
-/// [`gemm_xnor`] through the plan-selected ISA seam (scalar body today —
-/// `count_ones` already lowers to the native popcount; see module note).
+/// [`gemm_xnor`] through a plan-selected ISA: AVX2 runs the `vpshufb`
+/// nibble-LUT popcount over 256-bit chunks, NEON `vcntq_u8` over 128-bit
+/// chunks, both with a scalar `count_ones` word tail. SSE4.1 has no
+/// cheap vector popcount, so it keeps the scalar kernel (whose
+/// `count_ones` already lowers to the native `popcnt` instruction).
 pub fn gemm_xnor_isa(isa: Isa, a_bits: &[i64], bb: &BitPackedB, m: usize, c: &mut [i32]) {
-    let _ = isa.normalized();
-    gemm_xnor(a_bits, bb, m, c);
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::gemm_xnor_avx2(a_bits, bb, m, c) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: normalized() admits Neon only on aarch64 hosts.
+        Isa::Neon => unsafe { arm::gemm_xnor_neon(a_bits, bb, m, c) },
+        _ => gemm_xnor(a_bits, bb, m, c),
+    }
 }
 
 /// Row-parallel wrapper over [`gemm_xnor_isa`] (bit-exact: disjoint rows,
@@ -554,10 +736,442 @@ pub fn gemm_xnor_a(ap: &BitPackedA, b_bits: &[i64], n: usize, c: &mut [i32]) {
     }
 }
 
-/// [`gemm_xnor_a`] through the plan-selected ISA seam (scalar body today).
+/// [`gemm_xnor_a`] through a plan-selected ISA (same popcount bodies as
+/// [`gemm_xnor_isa`]).
 pub fn gemm_xnor_a_isa(isa: Isa, ap: &BitPackedA, b_bits: &[i64], n: usize, c: &mut [i32]) {
+    match isa.normalized() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: normalized() verified the feature bit on this host.
+        Isa::Avx2 => unsafe { x86::gemm_xnor_a_avx2(ap, b_bits, n, c) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: normalized() admits Neon only on aarch64 hosts.
+        Isa::Neon => unsafe { arm::gemm_xnor_a_neon(ap, b_bits, n, c) },
+        _ => gemm_xnor_a(ap, b_bits, n, c),
+    }
+}
+
+// --- int2 (crumb) and int3 (tribble) packed storage -------------------------
+
+/// Sign-decode an offset-encoded 2-bit crumb (`[0,3]` → `[-2,1]`).
+#[inline]
+fn decode_crumb(bits: u8) -> i8 {
+    (bits & 0b11) as i8 - 2
+}
+
+/// Sign-decode an offset-encoded 3-bit tribble (`[0,7]` → `[-4,3]`).
+#[inline]
+fn decode_tribble(bits: u8) -> i8 {
+    (bits & 0b111) as i8 - 4
+}
+
+/// A `[k, n]` B operand crumb-packed (int2) at plan time for
+/// [`gemm_i2_packed`]: the [`PackedB4`] column-panel layout at a quarter
+/// of the i8 bytes — each panel row of `nr` values is `nr/4` bytes, four
+/// offset-encoded crumbs per byte, little-endian within the byte.
+/// Packing refuses (`None`) when any widened value leaves `[-2, 1]` or
+/// the tile width is not a multiple of 4 (panel rows must stay
+/// byte-aligned); callers then keep the wider kernels.
+pub struct PackedB2 {
+    data: Vec<u8>,
+    pub k: usize,
+    pub n: usize,
+    /// Tile config this operand was packed with.
+    pub cfg: GemmConfig,
+}
+
+impl PackedB2 {
+    pub fn pack(bw: &[i32], k: usize, n: usize) -> Option<PackedB2> {
+        PackedB2::pack_with(bw, k, n, GemmConfig::DEFAULT)
+    }
+
+    pub fn pack_with(bw: &[i32], k: usize, n: usize, cfg: GemmConfig) -> Option<PackedB2> {
+        debug_assert_eq!(bw.len(), k * n);
+        assert!(
+            cfg.nr > 0 && cfg.nr <= GEMM_NR_MAX,
+            "bad panel width {}",
+            cfg.nr
+        );
+        if cfg.nr % 4 != 0 || bw.iter().any(|&v| !(-2..=1).contains(&v)) {
+            return None;
+        }
+        let nr = cfg.nr;
+        let row_bytes = nr / 4;
+        let np = n.div_ceil(nr);
+        // Zero fill = crumb 0 = decoded -2 for padded lanes; those lanes
+        // are never read back (jw masks them), matching PackedB4's
+        // unread zero-nibble padding.
+        let mut data = vec![0u8; np * k * row_bytes];
+        for jp in 0..np {
+            let j0 = jp * nr;
+            let jw = nr.min(n - j0);
+            let panel = &mut data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+            for kk in 0..k {
+                for jj in 0..jw {
+                    let enc = (bw[kk * n + j0 + jj] + 2) as u8;
+                    panel[kk * row_bytes + jj / 4] |= enc << (2 * (jj % 4));
+                }
+            }
+        }
+        Some(PackedB2 { data, k, n, cfg })
+    }
+
+    /// Bytes held by the packed panels (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A `[k, n]` B operand tribble-packed (int3) at plan time for
+/// [`gemm_i3_packed`]: same column panels, each panel row a
+/// little-endian bitstream of `nr` 3-bit offset-encoded fields
+/// (`nr*3/8` bytes). Refuses widths where the row is not byte-aligned
+/// (`nr*3 % 8 != 0` — so nr 8 and 16 pack, nr 4 falls back) or values
+/// outside `[-4, 3]`.
+pub struct PackedB3 {
+    data: Vec<u8>,
+    pub k: usize,
+    pub n: usize,
+    /// Tile config this operand was packed with.
+    pub cfg: GemmConfig,
+}
+
+impl PackedB3 {
+    pub fn pack(bw: &[i32], k: usize, n: usize) -> Option<PackedB3> {
+        PackedB3::pack_with(bw, k, n, GemmConfig::DEFAULT)
+    }
+
+    pub fn pack_with(bw: &[i32], k: usize, n: usize, cfg: GemmConfig) -> Option<PackedB3> {
+        debug_assert_eq!(bw.len(), k * n);
+        assert!(
+            cfg.nr > 0 && cfg.nr <= GEMM_NR_MAX,
+            "bad panel width {}",
+            cfg.nr
+        );
+        if cfg.nr * 3 % 8 != 0 || bw.iter().any(|&v| !(-4..=3).contains(&v)) {
+            return None;
+        }
+        let nr = cfg.nr;
+        let row_bytes = nr * 3 / 8;
+        debug_assert!(row_bytes <= 8, "nr <= GEMM_NR_MAX keeps a row in one u64");
+        let np = n.div_ceil(nr);
+        let mut data = vec![0u8; np * k * row_bytes];
+        for jp in 0..np {
+            let j0 = jp * nr;
+            let jw = nr.min(n - j0);
+            let panel = &mut data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+            for kk in 0..k {
+                let mut word = 0u64;
+                for jj in 0..jw {
+                    let enc = (bw[kk * n + j0 + jj] + 4) as u64;
+                    word |= enc << (3 * jj);
+                }
+                let row = &mut panel[kk * row_bytes..(kk + 1) * row_bytes];
+                row.copy_from_slice(&word.to_le_bytes()[..row_bytes]);
+            }
+        }
+        Some(PackedB3 { data, k, n, cfg })
+    }
+
+    /// Bytes held by the packed panels (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// i8-activation GEMM against a crumb-packed B: decodes each panel row
+/// to i8 on the fly and accumulates exactly like the int4 scalar kernel
+/// (ascending k per output element, exact i32 products) — bit-identical
+/// to the widened triple loop. Scalar reference body; the `_isa` seam
+/// below is where SIMD twins will land (module note).
+pub fn gemm_i2_packed(a: &[i8], bp: &PackedB2, m: usize, c: &mut [i32]) {
+    let (k, n) = (bp.k, bp.n);
+    let nr = bp.cfg.nr;
+    let row_bytes = nr / 4;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    let np = n.div_ceil(nr);
+    let mut vals = [0i8; GEMM_NR_MAX];
+    for jp in 0..np {
+        let j0 = jp * nr;
+        let jw = nr.min(n - j0);
+        let panel = &bp.data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+        for i in 0..m {
+            c[i * n + j0..i * n + j0 + jw].fill(0);
+        }
+        for kk in 0..k {
+            let prow = &panel[kk * row_bytes..(kk + 1) * row_bytes];
+            for jj in 0..jw {
+                vals[jj] = decode_crumb(prow[jj / 4] >> (2 * (jj % 4)));
+            }
+            for i in 0..m {
+                let av = a[i * k + kk] as i32;
+                if av == 0 {
+                    continue;
+                }
+                let crow = &mut c[i * n + j0..i * n + j0 + jw];
+                for (cv, &bv) in crow.iter_mut().zip(&vals[..jw]) {
+                    *cv += av * bv as i32;
+                }
+            }
+        }
+    }
+}
+
+/// i8-activation GEMM against a tribble-packed B (same structure and
+/// bit-exactness argument as [`gemm_i2_packed`]).
+pub fn gemm_i3_packed(a: &[i8], bp: &PackedB3, m: usize, c: &mut [i32]) {
+    let (k, n) = (bp.k, bp.n);
+    let nr = bp.cfg.nr;
+    let row_bytes = nr * 3 / 8;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    let np = n.div_ceil(nr);
+    let mut vals = [0i8; GEMM_NR_MAX];
+    for jp in 0..np {
+        let j0 = jp * nr;
+        let jw = nr.min(n - j0);
+        let panel = &bp.data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+        for i in 0..m {
+            c[i * n + j0..i * n + j0 + jw].fill(0);
+        }
+        for kk in 0..k {
+            let prow = &panel[kk * row_bytes..(kk + 1) * row_bytes];
+            let mut word = [0u8; 8];
+            word[..row_bytes].copy_from_slice(prow);
+            let word = u64::from_le_bytes(word);
+            for jj in 0..jw {
+                vals[jj] = decode_tribble((word >> (3 * jj)) as u8);
+            }
+            for i in 0..m {
+                let av = a[i * k + kk] as i32;
+                if av == 0 {
+                    continue;
+                }
+                let crow = &mut c[i * n + j0..i * n + j0 + jw];
+                for (cv, &bv) in crow.iter_mut().zip(&vals[..jw]) {
+                    *cv += av * bv as i32;
+                }
+            }
+        }
+    }
+}
+
+/// [`gemm_i2_packed`] through the plan-selected ISA seam (scalar body
+/// today; SIMD twins pending — the seam keeps call sites and the tuner
+/// stable when they land, exactly as the int4 wrappers did pre-PR 10).
+pub fn gemm_i2_packed_isa(isa: Isa, a: &[i8], bp: &PackedB2, m: usize, c: &mut [i32]) {
     let _ = isa.normalized();
-    gemm_xnor_a(ap, b_bits, n, c);
+    gemm_i2_packed(a, bp, m, c);
+}
+
+/// [`gemm_i3_packed`] through the plan-selected ISA seam (scalar body
+/// today; see [`gemm_i2_packed_isa`]).
+pub fn gemm_i3_packed_isa(isa: Isa, a: &[i8], bp: &PackedB3, m: usize, c: &mut [i32]) {
+    let _ = isa.normalized();
+    gemm_i3_packed(a, bp, m, c);
+}
+
+/// Row-parallel wrapper over [`gemm_i2_packed_isa`] (bit-exact: disjoint
+/// row blocks; thresholds from the operand's config).
+pub fn gemm_i2_packed_par_isa(
+    pool: &ThreadPool,
+    isa: Isa,
+    a: &[i8],
+    bp: &PackedB2,
+    m: usize,
+    c: &mut [i32],
+) {
+    let (k, n) = (bp.k, bp.n);
+    let min_rows = bp.cfg.par_min_rows.max(1);
+    if !worth_parallel(pool, m, k, n, min_rows, bp.cfg.par_min_work) {
+        gemm_i2_packed_isa(isa, a, bp, m, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, min_rows, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i2_packed_isa(isa, &a[row0 * k..(row0 + rows) * k], bp, rows, block);
+    });
+}
+
+/// Row-parallel wrapper over [`gemm_i3_packed_isa`].
+pub fn gemm_i3_packed_par_isa(
+    pool: &ThreadPool,
+    isa: Isa,
+    a: &[i8],
+    bp: &PackedB3,
+    m: usize,
+    c: &mut [i32],
+) {
+    let (k, n) = (bp.k, bp.n);
+    let min_rows = bp.cfg.par_min_rows.max(1);
+    if !worth_parallel(pool, m, k, n, min_rows, bp.cfg.par_min_work) {
+        gemm_i3_packed_isa(isa, a, bp, m, c);
+        return;
+    }
+    parallel::par_row_chunks_mut(pool, c, m, n, min_rows, |row0, block| {
+        let rows = block.len() / n;
+        gemm_i3_packed_isa(isa, &a[row0 * k..(row0 + rows) * k], bp, rows, block);
+    });
+}
+
+/// An `[m, k]` A operand (conv weights) crumb-packed at plan time for
+/// [`gemm_i2_packed_a`]: plain row-major like [`PackedA4`], each row
+/// `ceil(k/4)` bytes. `None` when any value leaves `[-2, 1]`.
+pub struct PackedA2 {
+    data: Vec<u8>,
+    pub m: usize,
+    pub k: usize,
+    /// Tile config carried for the runtime thresholds.
+    pub cfg: GemmConfig,
+}
+
+impl PackedA2 {
+    pub fn pack(aw: &[i32], m: usize, k: usize) -> Option<PackedA2> {
+        PackedA2::pack_with(aw, m, k, GemmConfig::DEFAULT)
+    }
+
+    pub fn pack_with(aw: &[i32], m: usize, k: usize, cfg: GemmConfig) -> Option<PackedA2> {
+        debug_assert_eq!(aw.len(), m * k);
+        if aw.iter().any(|&v| !(-2..=1).contains(&v)) {
+            return None;
+        }
+        let row_bytes = k.div_ceil(4);
+        let mut data = vec![0u8; m * row_bytes];
+        for i in 0..m {
+            for kk in 0..k {
+                let enc = (aw[i * k + kk] + 2) as u8;
+                data[i * row_bytes + kk / 4] |= enc << (2 * (kk % 4));
+            }
+        }
+        Some(PackedA2 { data, m, k, cfg })
+    }
+
+    /// Bytes held by the packed rows (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// An `[m, k]` A operand tribble-packed at plan time for
+/// [`gemm_i3_packed_a`]: row-major little-endian 3-bit bitstream per
+/// row (`ceil(3k/8)` bytes; fields may straddle byte boundaries within
+/// a row, never across rows). `None` when any value leaves `[-4, 3]`.
+pub struct PackedA3 {
+    data: Vec<u8>,
+    pub m: usize,
+    pub k: usize,
+    /// Tile config carried for the runtime thresholds.
+    pub cfg: GemmConfig,
+}
+
+impl PackedA3 {
+    pub fn pack(aw: &[i32], m: usize, k: usize) -> Option<PackedA3> {
+        PackedA3::pack_with(aw, m, k, GemmConfig::DEFAULT)
+    }
+
+    pub fn pack_with(aw: &[i32], m: usize, k: usize, cfg: GemmConfig) -> Option<PackedA3> {
+        debug_assert_eq!(aw.len(), m * k);
+        if aw.iter().any(|&v| !(-4..=3).contains(&v)) {
+            return None;
+        }
+        let row_bytes = (3 * k).div_ceil(8);
+        let mut data = vec![0u8; m * row_bytes];
+        for i in 0..m {
+            let row = &mut data[i * row_bytes..(i + 1) * row_bytes];
+            for kk in 0..k {
+                let enc = (aw[i * k + kk] + 4) as u16;
+                let bit = 3 * kk;
+                let (byte, off) = (bit / 8, bit % 8);
+                row[byte] |= (enc << off) as u8;
+                if off > 5 {
+                    row[byte + 1] |= (enc >> (8 - off)) as u8;
+                }
+            }
+        }
+        Some(PackedA3 { data, m, k, cfg })
+    }
+
+    /// Decode one weight value (exposed for the kernels and tests).
+    #[inline]
+    fn get(&self, i: usize, kk: usize) -> i8 {
+        let row_bytes = (3 * self.k).div_ceil(8);
+        let row = &self.data[i * row_bytes..(i + 1) * row_bytes];
+        let bit = 3 * kk;
+        let (byte, off) = (bit / 8, bit % 8);
+        let lo = (row[byte] >> off) as u16;
+        let hi = if off > 5 && byte + 1 < row_bytes {
+            (row[byte + 1] as u16) << (8 - off)
+        } else {
+            0
+        };
+        decode_tribble((lo | hi) as u8)
+    }
+
+    /// Bytes held by the packed rows (plan-memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// GEMM against a crumb-packed A and a runtime row-major i8 B (the conv
+/// im2col columns) — the int2 twin of [`gemm_i4_packed_a`]: per weight
+/// an exact i32 product, k ascending per output element, bit-identical
+/// to the widened loop. Scalar reference body behind the `_isa` seam.
+pub fn gemm_i2_packed_a(ap: &PackedA2, b: &[i8], n: usize, c: &mut [i32]) {
+    let (m, k) = (ap.m, ap.k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let row_bytes = k.div_ceil(4);
+    c.fill(0);
+    for i in 0..m {
+        let arow = &ap.data[i * row_bytes..(i + 1) * row_bytes];
+        for kk in 0..k {
+            let av = decode_crumb(arow[kk / 4] >> (2 * (kk % 4))) as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+}
+
+/// GEMM against a tribble-packed A (int3 twin of [`gemm_i4_packed_a`]).
+pub fn gemm_i3_packed_a(ap: &PackedA3, b: &[i8], n: usize, c: &mut [i32]) {
+    let (m, k) = (ap.m, ap.k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = ap.get(i, kk) as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+}
+
+/// [`gemm_i2_packed_a`] through the plan-selected ISA seam (scalar body
+/// today; SIMD twins pending, same as the B side).
+pub fn gemm_i2_packed_a_isa(isa: Isa, ap: &PackedA2, b: &[i8], n: usize, c: &mut [i32]) {
+    let _ = isa.normalized();
+    gemm_i2_packed_a(ap, b, n, c);
+}
+
+/// [`gemm_i3_packed_a`] through the plan-selected ISA seam (scalar body
+/// today).
+pub fn gemm_i3_packed_a_isa(isa: Isa, ap: &PackedA3, b: &[i8], n: usize, c: &mut [i32]) {
+    let _ = isa.normalized();
+    gemm_i3_packed_a(ap, b, n, c);
 }
 
 // --- width-dispatched plan-time weight storage ------------------------------
@@ -572,6 +1186,8 @@ pub fn gemm_xnor_a_isa(isa: Isa, ap: &BitPackedA, b_bits: &[i64], n: usize, c: &
 pub enum PackedWeights {
     I8(matmul::PackedB),
     I4(PackedB4),
+    I3(PackedB3),
+    I2(PackedB2),
     Bipolar(BitPackedB),
 }
 
@@ -582,16 +1198,20 @@ impl PackedWeights {
         match self {
             PackedWeights::I8(p) => p.bytes(),
             PackedWeights::I4(p) => p.bytes(),
+            PackedWeights::I3(p) => p.bytes(),
+            PackedWeights::I2(p) => p.bytes(),
             PackedWeights::Bipolar(p) => p.bytes(),
         }
     }
 
-    /// Logical weight bits per value (8 / 4 / 1) — feeds the hwsim cost
-    /// model's DRAM-traffic scaling and `plan_stats`.
+    /// Logical weight bits per value (8 / 4 / 3 / 2 / 1) — feeds the
+    /// hwsim cost model's DRAM-traffic scaling and `plan_stats`.
     pub fn bits(&self) -> u8 {
         match self {
             PackedWeights::I8(_) => 8,
             PackedWeights::I4(_) => 4,
+            PackedWeights::I3(_) => 3,
+            PackedWeights::I2(_) => 2,
             PackedWeights::Bipolar(_) => 1,
         }
     }
@@ -600,6 +1220,8 @@ impl PackedWeights {
         match self {
             PackedWeights::I8(_) => "int8",
             PackedWeights::I4(_) => "int4",
+            PackedWeights::I3(_) => "int3",
+            PackedWeights::I2(_) => "int2",
             PackedWeights::Bipolar(_) => "bipolar",
         }
     }
@@ -610,6 +1232,8 @@ impl PackedWeights {
 pub enum PackedConvWeights {
     I8(matmul::PackedA),
     I4(PackedA4),
+    I3(PackedA3),
+    I2(PackedA2),
     Bipolar(BitPackedA),
 }
 
@@ -618,6 +1242,8 @@ impl PackedConvWeights {
         match self {
             PackedConvWeights::I8(p) => p.bytes(),
             PackedConvWeights::I4(p) => p.bytes(),
+            PackedConvWeights::I3(p) => p.bytes(),
+            PackedConvWeights::I2(p) => p.bytes(),
             PackedConvWeights::Bipolar(p) => p.bytes(),
         }
     }
@@ -626,6 +1252,8 @@ impl PackedConvWeights {
         match self {
             PackedConvWeights::I8(_) => 8,
             PackedConvWeights::I4(_) => 4,
+            PackedConvWeights::I3(_) => 3,
+            PackedConvWeights::I2(_) => 2,
             PackedConvWeights::Bipolar(_) => 1,
         }
     }
@@ -634,6 +1262,8 @@ impl PackedConvWeights {
         match self {
             PackedConvWeights::I8(_) => "int8",
             PackedConvWeights::I4(_) => "int4",
+            PackedConvWeights::I3(_) => "int3",
+            PackedConvWeights::I2(_) => "int2",
             PackedConvWeights::Bipolar(_) => "bipolar",
         }
     }
@@ -653,6 +1283,540 @@ fn worth_parallel(
         && parallel::allow_pool_dispatch()
         && m >= 2 * min_rows
         && m.saturating_mul(k).saturating_mul(n) >= min_work
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{BitPackedA, BitPackedB, PackedA4, PackedB4, GEMM_MR, GEMM_NR};
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::x86_64::*;
+
+    /// AVX2 twin of [`super::gemm_i4_packed`]: one nibble-packed panel
+    /// row (4 bytes at nr = 8) is broadcast as a 32-bit word, each lane
+    /// shifts its own nibble into place (`vpsrlvd`), masks, and
+    /// sign-extends via `(x ^ 8) - 8` — all in 32-bit lanes, so every
+    /// product is exact (no `vpmaddubsw` i16 saturation hazard) and the
+    /// k-ascending accumulation matches the scalar kernel bit for bit.
+    ///
+    /// Safety: caller must have verified AVX2 (`Isa::normalized`). The
+    /// 4-byte panel-row read is `panel[kk*4 .. kk*4+4]` with `kk < k`
+    /// and `panel.len() == k*4` — always in bounds (safe slice read).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_i4_packed_avx2(a: &[i8], bp: &PackedB4, m: usize, c: &mut [i32]) {
+        let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(bp.cfg.nr, GEMM_NR);
+        let row_bytes = GEMM_NR / 2;
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let maskf = _mm256_set1_epi32(0xf);
+        let eight = _mm256_set1_epi32(8);
+        let np = n.div_ceil(GEMM_NR);
+        for jp in 0..np {
+            let j0 = jp * GEMM_NR;
+            let jw = GEMM_NR.min(n - j0);
+            let panel = &bp.data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+            let mut i0 = 0;
+            while i0 < m {
+                let iw = GEMM_MR.min(m - i0);
+                let mut acc = [_mm256_setzero_si256(); GEMM_MR];
+                for kk in 0..k {
+                    let w = u32::from_le_bytes(
+                        panel[kk * row_bytes..kk * row_bytes + 4].try_into().unwrap(),
+                    );
+                    let nib = _mm256_and_si256(
+                        _mm256_srlv_epi32(_mm256_set1_epi32(w as i32), shifts),
+                        maskf,
+                    );
+                    let bv = _mm256_sub_epi32(_mm256_xor_si256(nib, eight), eight);
+                    for r in 0..iw {
+                        let av = _mm256_set1_epi32(a[(i0 + r) * k + kk] as i32);
+                        acc[r] = _mm256_add_epi32(acc[r], _mm256_mullo_epi32(av, bv));
+                    }
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc[r]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + jw].copy_from_slice(&tmp[..jw]);
+                }
+                i0 += GEMM_MR;
+            }
+        }
+    }
+
+    /// SSE4.1 twin of [`super::gemm_i4_packed`]: the 8-wide panel row as
+    /// two 4-lane halves; nibbles are shifted/masked on the scalar side
+    /// and sign-extended + multiplied in 32-bit vector lanes (`pmulld`).
+    ///
+    /// Safety: caller verified SSE4.1; read bounds as in the AVX2 twin.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn gemm_i4_packed_sse41(a: &[i8], bp: &PackedB4, m: usize, c: &mut [i32]) {
+        let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(bp.cfg.nr, GEMM_NR);
+        let row_bytes = GEMM_NR / 2;
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        let eight = _mm_set1_epi32(8);
+        let np = n.div_ceil(GEMM_NR);
+        for jp in 0..np {
+            let j0 = jp * GEMM_NR;
+            let jw = GEMM_NR.min(n - j0);
+            let panel = &bp.data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+            let mut i0 = 0;
+            while i0 < m {
+                let iw = GEMM_MR.min(m - i0);
+                let mut acc = [[_mm_setzero_si128(); 2]; GEMM_MR];
+                for kk in 0..k {
+                    let w = u32::from_le_bytes(
+                        panel[kk * row_bytes..kk * row_bytes + 4].try_into().unwrap(),
+                    );
+                    let lo = _mm_setr_epi32(
+                        (w & 0xf) as i32,
+                        ((w >> 4) & 0xf) as i32,
+                        ((w >> 8) & 0xf) as i32,
+                        ((w >> 12) & 0xf) as i32,
+                    );
+                    let hi = _mm_setr_epi32(
+                        ((w >> 16) & 0xf) as i32,
+                        ((w >> 20) & 0xf) as i32,
+                        ((w >> 24) & 0xf) as i32,
+                        ((w >> 28) & 0xf) as i32,
+                    );
+                    let blo = _mm_sub_epi32(_mm_xor_si128(lo, eight), eight);
+                    let bhi = _mm_sub_epi32(_mm_xor_si128(hi, eight), eight);
+                    for r in 0..iw {
+                        let av = _mm_set1_epi32(a[(i0 + r) * k + kk] as i32);
+                        acc[r][0] = _mm_add_epi32(acc[r][0], _mm_mullo_epi32(av, blo));
+                        acc[r][1] = _mm_add_epi32(acc[r][1], _mm_mullo_epi32(av, bhi));
+                    }
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, acc[r][0]);
+                    _mm_storeu_si128(tmp.as_mut_ptr().add(4) as *mut __m128i, acc[r][1]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + jw].copy_from_slice(&tmp[..jw]);
+                }
+                i0 += GEMM_MR;
+            }
+        }
+    }
+
+    /// AVX2 twin of [`super::gemm_i4_packed_a`]: the weight nibble is
+    /// decoded once per (row, k) on the scalar side (O(mk) work) and the
+    /// O(mkn) axpy over the runtime B row runs in 8-wide i32 lanes
+    /// (widening `vpmovsxbd` B load). Zero weights are skipped exactly
+    /// like the scalar kernel (adding zero is the identity, so the skip
+    /// cannot change bits).
+    ///
+    /// Safety: caller verified AVX2. The raw 8-byte B load reads
+    /// `b[kk*n + j .. +8]` with `j + 8 <= n` — in bounds; the tail is
+    /// scalar.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_i4_packed_a_avx2(ap: &PackedA4, b: &[i8], n: usize, c: &mut [i32]) {
+        let (m, k) = (ap.m, ap.k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let row_bytes = k.div_ceil(2);
+        c.fill(0);
+        for i in 0..m {
+            let arow = &ap.data[i * row_bytes..(i + 1) * row_bytes];
+            for kk in 0..k {
+                let byte = arow[kk / 2];
+                let av = if kk % 2 == 0 {
+                    super::unpack_nibble_lo(byte)
+                } else {
+                    super::unpack_nibble_hi(byte)
+                } as i32;
+                if av == 0 {
+                    continue;
+                }
+                let avv = _mm256_set1_epi32(av);
+                let brow = &b[kk * n..(kk + 1) * n];
+                let crow = &mut c[i * n..(i + 1) * n];
+                let mut j = 0;
+                while j + 8 <= n {
+                    let bv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                        brow.as_ptr().add(j) as *const __m128i
+                    ));
+                    let cv = _mm256_loadu_si256(crow.as_ptr().add(j) as *const __m256i);
+                    _mm256_storeu_si256(
+                        crow.as_mut_ptr().add(j) as *mut __m256i,
+                        _mm256_add_epi32(cv, _mm256_mullo_epi32(avv, bv)),
+                    );
+                    j += 8;
+                }
+                while j < n {
+                    crow[j] += av * brow[j] as i32;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// SSE4.1 twin of [`super::gemm_i4_packed_a`] (4-wide axpy halves).
+    ///
+    /// Safety: caller verified SSE4.1; the raw 4-byte B load reads
+    /// `b[kk*n + j .. +4]` with `j + 4 <= n`.
+    #[target_feature(enable = "sse4.1")]
+    pub(super) unsafe fn gemm_i4_packed_a_sse41(ap: &PackedA4, b: &[i8], n: usize, c: &mut [i32]) {
+        let (m, k) = (ap.m, ap.k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let row_bytes = k.div_ceil(2);
+        c.fill(0);
+        for i in 0..m {
+            let arow = &ap.data[i * row_bytes..(i + 1) * row_bytes];
+            for kk in 0..k {
+                let byte = arow[kk / 2];
+                let av = if kk % 2 == 0 {
+                    super::unpack_nibble_lo(byte)
+                } else {
+                    super::unpack_nibble_hi(byte)
+                } as i32;
+                if av == 0 {
+                    continue;
+                }
+                let avv = _mm_set1_epi32(av);
+                let brow = &b[kk * n..(kk + 1) * n];
+                let crow = &mut c[i * n..(i + 1) * n];
+                let mut j = 0;
+                while j + 4 <= n {
+                    // SAFETY: j + 4 <= n keeps the unaligned 4-byte read
+                    // inside this B row.
+                    let b4 = _mm_cvtsi32_si128(
+                        (brow.as_ptr().add(j) as *const i32).read_unaligned(),
+                    );
+                    let bv = _mm_cvtepi8_epi32(b4);
+                    let cv = _mm_loadu_si128(crow.as_ptr().add(j) as *const __m128i);
+                    _mm_storeu_si128(
+                        crow.as_mut_ptr().add(j) as *mut __m128i,
+                        _mm_add_epi32(cv, _mm_mullo_epi32(avv, bv)),
+                    );
+                    j += 4;
+                }
+                while j < n {
+                    crow[j] += av * brow[j] as i32;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of [`super::gemm_i4a_bytes`]: same scalar nibble decode
+    /// per (row, k), vector axpy over the already-i32 weight row.
+    ///
+    /// Safety: caller verified AVX2; the 8-lane loads read
+    /// `bw[kk*n + j .. +8]` / `c[i*n + j .. +8]` with `j + 8 <= n`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_i4a_bytes_avx2(
+        a_bytes: &[u8],
+        m: usize,
+        k: usize,
+        bw: &[i32],
+        n: usize,
+        c: &mut [i32],
+    ) {
+        let row_bytes = k.div_ceil(2);
+        debug_assert_eq!(a_bytes.len(), m * row_bytes);
+        debug_assert_eq!(bw.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        c.fill(0);
+        for i in 0..m {
+            let arow = &a_bytes[i * row_bytes..(i + 1) * row_bytes];
+            for kk in 0..k {
+                let byte = arow[kk / 2];
+                let av = if kk % 2 == 0 {
+                    super::unpack_nibble_lo(byte)
+                } else {
+                    super::unpack_nibble_hi(byte)
+                } as i32;
+                if av == 0 {
+                    continue;
+                }
+                let avv = _mm256_set1_epi32(av);
+                let brow = &bw[kk * n..(kk + 1) * n];
+                let crow = &mut c[i * n..(i + 1) * n];
+                let mut j = 0;
+                while j + 8 <= n {
+                    let bv = _mm256_loadu_si256(brow.as_ptr().add(j) as *const __m256i);
+                    let cv = _mm256_loadu_si256(crow.as_ptr().add(j) as *const __m256i);
+                    _mm256_storeu_si256(
+                        crow.as_mut_ptr().add(j) as *mut __m256i,
+                        _mm256_add_epi32(cv, _mm256_mullo_epi32(avv, bv)),
+                    );
+                    j += 8;
+                }
+                while j < n {
+                    crow[j] += av * brow[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// XOR-popcount of two equal-length word runs: `vpshufb` nibble-LUT
+    /// popcount + `vpsadbw` horizontal byte sums over 256-bit chunks
+    /// (4 words), scalar `count_ones` for the ragged word tail. Exact
+    /// integer popcount — identical to the scalar sum by construction.
+    ///
+    /// Safety: caller verified AVX2. Each 32-byte load reads
+    /// `x[w .. w+4]` words with `w + 4 <= len` — in bounds.
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_popcnt_avx2(aw: &[i64], bw: &[i64]) -> u32 {
+        debug_assert_eq!(aw.len(), bw.len());
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0xf);
+        let mut acc = _mm256_setzero_si256();
+        let mut w = 0;
+        while w + 4 <= aw.len() {
+            let av = _mm256_loadu_si256(aw.as_ptr().add(w) as *const __m256i);
+            let bv = _mm256_loadu_si256(bw.as_ptr().add(w) as *const __m256i);
+            let x = _mm256_xor_si256(av, bv);
+            let lo = _mm256_and_si256(x, low);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low);
+            let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()));
+            w += 4;
+        }
+        let mut tmp = [0u64; 4];
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc);
+        let mut diff = (tmp[0] + tmp[1] + tmp[2] + tmp[3]) as u32;
+        while w < aw.len() {
+            diff += (aw[w] ^ bw[w]).count_ones();
+            w += 1;
+        }
+        diff
+    }
+
+    /// AVX2 twin of [`super::gemm_xnor`]: same `(i, j)` loop, the inner
+    /// word loop replaced by [`xor_popcnt_avx2`].
+    ///
+    /// Safety: caller verified AVX2 (the popcount helper's bounds hold
+    /// for every row/column slice pair — both are `words` long).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_xnor_avx2(a_bits: &[i64], bb: &BitPackedB, m: usize, c: &mut [i32]) {
+        let words = super::bit_words(bb.k);
+        let (k, n) = (bb.k as i32, bb.n);
+        debug_assert_eq!(a_bits.len(), m * words);
+        debug_assert_eq!(c.len(), m * bb.n);
+        for i in 0..m {
+            let arow = &a_bits[i * words..(i + 1) * words];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let bcol = &bb.data[j * words..(j + 1) * words];
+                *cv = k - 2 * xor_popcnt_avx2(arow, bcol) as i32;
+            }
+        }
+    }
+
+    /// AVX2 twin of [`super::gemm_xnor_a`].
+    ///
+    /// Safety: as [`gemm_xnor_avx2`].
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_xnor_a_avx2(
+        ap: &BitPackedA,
+        b_bits: &[i64],
+        n: usize,
+        c: &mut [i32],
+    ) {
+        let words = super::bit_words(ap.k);
+        let (m, k) = (ap.m, ap.k as i32);
+        debug_assert_eq!(b_bits.len(), n * words);
+        debug_assert_eq!(c.len(), m * n);
+        for i in 0..m {
+            let arow = &ap.data[i * words..(i + 1) * words];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let bcol = &b_bits[j * words..(j + 1) * words];
+                *cv = k - 2 * xor_popcnt_avx2(arow, bcol) as i32;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{BitPackedA, BitPackedB, PackedA4, PackedB4, GEMM_MR, GEMM_NR};
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::aarch64::*;
+
+    /// NEON twin of [`super::gemm_i4_packed`]: the 8-wide nibble row as
+    /// two 4-lane halves, nibbles shifted into place with per-lane
+    /// variable right shifts (`vshlq_u32` with negative counts), masked,
+    /// and sign-extended `(x ^ 8) - 8` in 32-bit lanes — exact products,
+    /// scalar accumulation order.
+    ///
+    /// Safety: caller verified NEON via `Isa::normalized` (baseline on
+    /// aarch64); all reads are safe slice accesses.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_i4_packed_neon(a: &[i8], bp: &PackedB4, m: usize, c: &mut [i32]) {
+        let (k, n) = (bp.k, bp.n);
+        debug_assert_eq!(bp.cfg.nr, GEMM_NR);
+        let row_bytes = GEMM_NR / 2;
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        let sh_lo: [i32; 4] = [0, -4, -8, -12];
+        let sh_hi: [i32; 4] = [-16, -20, -24, -28];
+        let sh_lo = vld1q_s32(sh_lo.as_ptr());
+        let sh_hi = vld1q_s32(sh_hi.as_ptr());
+        let maskf = vdupq_n_u32(0xf);
+        let eight = vdupq_n_s32(8);
+        let np = n.div_ceil(GEMM_NR);
+        for jp in 0..np {
+            let j0 = jp * GEMM_NR;
+            let jw = GEMM_NR.min(n - j0);
+            let panel = &bp.data[jp * k * row_bytes..(jp + 1) * k * row_bytes];
+            let mut i0 = 0;
+            while i0 < m {
+                let iw = GEMM_MR.min(m - i0);
+                let mut acc = [[vdupq_n_s32(0); 2]; GEMM_MR];
+                for kk in 0..k {
+                    let w = u32::from_le_bytes(
+                        panel[kk * row_bytes..kk * row_bytes + 4].try_into().unwrap(),
+                    );
+                    let wv = vdupq_n_u32(w);
+                    let lo = vandq_u32(vshlq_u32(wv, sh_lo), maskf);
+                    let hi = vandq_u32(vshlq_u32(wv, sh_hi), maskf);
+                    let blo = vsubq_s32(veorq_s32(vreinterpretq_s32_u32(lo), eight), eight);
+                    let bhi = vsubq_s32(veorq_s32(vreinterpretq_s32_u32(hi), eight), eight);
+                    for r in 0..iw {
+                        let av = vdupq_n_s32(a[(i0 + r) * k + kk] as i32);
+                        acc[r][0] = vmlaq_s32(acc[r][0], av, blo);
+                        acc[r][1] = vmlaq_s32(acc[r][1], av, bhi);
+                    }
+                }
+                let mut tmp = [0i32; GEMM_NR];
+                for r in 0..iw {
+                    vst1q_s32(tmp.as_mut_ptr(), acc[r][0]);
+                    vst1q_s32(tmp.as_mut_ptr().add(4), acc[r][1]);
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + jw].copy_from_slice(&tmp[..jw]);
+                }
+                i0 += GEMM_MR;
+            }
+        }
+    }
+
+    /// NEON twin of [`super::gemm_i4_packed_a`] (8-wide widening axpy:
+    /// `vmovl_s8`/`vmovl_s16` B load, `vmlaq_s32` accumulate).
+    ///
+    /// Safety: caller verified NEON; the raw 8-byte B load reads
+    /// `b[kk*n + j .. +8]` with `j + 8 <= n`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_i4_packed_a_neon(ap: &PackedA4, b: &[i8], n: usize, c: &mut [i32]) {
+        let (m, k) = (ap.m, ap.k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let row_bytes = k.div_ceil(2);
+        c.fill(0);
+        for i in 0..m {
+            let arow = &ap.data[i * row_bytes..(i + 1) * row_bytes];
+            for kk in 0..k {
+                let byte = arow[kk / 2];
+                let av = if kk % 2 == 0 {
+                    super::unpack_nibble_lo(byte)
+                } else {
+                    super::unpack_nibble_hi(byte)
+                } as i32;
+                if av == 0 {
+                    continue;
+                }
+                let avv = vdupq_n_s32(av);
+                let brow = &b[kk * n..(kk + 1) * n];
+                let crow = &mut c[i * n..(i + 1) * n];
+                let mut j = 0;
+                while j + 8 <= n {
+                    let b16 = vmovl_s8(vld1_s8(brow.as_ptr().add(j)));
+                    let blo = vmovl_s16(vget_low_s16(b16));
+                    let bhi = vmovl_s16(vget_high_s16(b16));
+                    let clo = vld1q_s32(crow.as_ptr().add(j));
+                    let chi = vld1q_s32(crow.as_ptr().add(j + 4));
+                    vst1q_s32(crow.as_mut_ptr().add(j), vmlaq_s32(clo, avv, blo));
+                    vst1q_s32(crow.as_mut_ptr().add(j + 4), vmlaq_s32(chi, avv, bhi));
+                    j += 8;
+                }
+                while j < n {
+                    crow[j] += av * brow[j] as i32;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// XOR-popcount of two equal-length word runs: `vcntq_u8` byte
+    /// popcount + pairwise widening sums over 128-bit chunks (2 words),
+    /// scalar `count_ones` tail.
+    ///
+    /// Safety: caller verified NEON. Each 16-byte load reads
+    /// `x[w .. w+2]` words with `w + 2 <= len`.
+    #[target_feature(enable = "neon")]
+    unsafe fn xor_popcnt_neon(aw: &[i64], bw: &[i64]) -> u32 {
+        debug_assert_eq!(aw.len(), bw.len());
+        let mut acc = vdupq_n_u64(0);
+        let mut w = 0;
+        while w + 2 <= aw.len() {
+            let av = vld1q_u8(aw.as_ptr().add(w) as *const u8);
+            let bv = vld1q_u8(bw.as_ptr().add(w) as *const u8);
+            let x = veorq_u8(av, bv);
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(x)))));
+            w += 2;
+        }
+        let mut diff = (vgetq_lane_u64::<0>(acc) + vgetq_lane_u64::<1>(acc)) as u32;
+        while w < aw.len() {
+            diff += (aw[w] ^ bw[w]).count_ones();
+            w += 1;
+        }
+        diff
+    }
+
+    /// NEON twin of [`super::gemm_xnor`].
+    ///
+    /// Safety: caller verified NEON.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_xnor_neon(a_bits: &[i64], bb: &BitPackedB, m: usize, c: &mut [i32]) {
+        let words = super::bit_words(bb.k);
+        let (k, n) = (bb.k as i32, bb.n);
+        debug_assert_eq!(a_bits.len(), m * words);
+        debug_assert_eq!(c.len(), m * bb.n);
+        for i in 0..m {
+            let arow = &a_bits[i * words..(i + 1) * words];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let bcol = &bb.data[j * words..(j + 1) * words];
+                *cv = k - 2 * xor_popcnt_neon(arow, bcol) as i32;
+            }
+        }
+    }
+
+    /// NEON twin of [`super::gemm_xnor_a`].
+    ///
+    /// Safety: caller verified NEON.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_xnor_a_neon(
+        ap: &BitPackedA,
+        b_bits: &[i64],
+        n: usize,
+        c: &mut [i32],
+    ) {
+        let words = super::bit_words(ap.k);
+        let (m, k) = (ap.m, ap.k as i32);
+        debug_assert_eq!(b_bits.len(), n * words);
+        debug_assert_eq!(c.len(), m * n);
+        for i in 0..m {
+            let arow = &ap.data[i * words..(i + 1) * words];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let bcol = &b_bits[j * words..(j + 1) * words];
+                *cv = k - 2 * xor_popcnt_neon(arow, bcol) as i32;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -786,5 +1950,158 @@ mod tests {
         assert_eq!(p1.bytes() * 8, k * n);
         assert_eq!(PackedWeights::I4(p4).bits(), 4);
         assert_eq!(PackedWeights::Bipolar(p1).width_name(), "bipolar");
+        let b2: Vec<i32> = (0..k * n).map(|i| (i as i32 % 4) - 2).collect();
+        let b3: Vec<i32> = (0..k * n).map(|i| (i as i32 % 8) - 4).collect();
+        let p2 = PackedB2::pack(&b2, k, n).unwrap();
+        let p3 = PackedB3::pack(&b3, k, n).unwrap();
+        assert_eq!(p2.bytes() * 4, k * n);
+        assert_eq!(p3.bytes() * 8, k * n * 3);
+        assert_eq!(PackedWeights::I2(p2).bits(), 2);
+        assert_eq!(PackedWeights::I3(p3).width_name(), "int3");
+    }
+
+    #[test]
+    fn narrow_simd_twins_match_scalar_per_isa() {
+        // Every host-supported ISA must agree bit for bit with the scalar
+        // kernels through the dispatch seams (the same differential the
+        // i8 kernels get in tests/packed_gemm.rs).
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (5, 300, 17), (2, 513, 9), (6, 64, 24)] {
+            let a: Vec<i8> = (0..m * k).map(|i| ((i * 37) % 255) as u8 as i8).collect();
+            let b4: Vec<i32> = (0..k * n).map(|i| (i as i32 * 13 % 16) - 8).collect();
+            let bp = PackedB4::pack(&b4, k, n).unwrap();
+            let mut want = vec![0i32; m * n];
+            gemm_i4_packed(&a, &bp, m, &mut want);
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i4_packed_isa(isa, &a, &bp, m, &mut got);
+                assert_eq!(got, want, "i4 B {isa} m={m} k={k} n={n}");
+            }
+            let a4: Vec<i32> = (0..m * k).map(|i| (i as i32 * 11 % 16) - 8).collect();
+            let ap = PackedA4::pack(&a4, m, k).unwrap();
+            let b8: Vec<i8> = b4.iter().map(|&v| v as i8).collect();
+            let mut want = vec![0i32; m * n];
+            gemm_i4_packed_a(&ap, &b8, n, &mut want);
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i4_packed_a_isa(isa, &ap, &b8, n, &mut got);
+                assert_eq!(got, want, "i4 A {isa} m={m} k={k} n={n}");
+            }
+        }
+        for &(m, k, n) in &[(1, 1, 1), (3, 63, 5), (2, 256, 8), (5, 200, 17), (2, 513, 3)] {
+            let a: Vec<i8> = (0..m * k).map(|i| if i % 5 < 2 { -1 } else { 1 }).collect();
+            let b: Vec<i32> = (0..k * n).map(|i| if i % 7 < 4 { 1 } else { -1 }).collect();
+            let mut a_bits = Vec::new();
+            assert!(pack_bits_rows(&a, m, k, &mut a_bits));
+            let bb = BitPackedB::pack(&b, k, n).unwrap();
+            let mut want = vec![0i32; m * n];
+            gemm_xnor(&a_bits, &bb, m, &mut want);
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_xnor_isa(isa, &a_bits, &bb, m, &mut got);
+                assert_eq!(got, want, "xnor {isa} m={m} k={k} n={n}");
+            }
+            let aw: Vec<i32> = a.iter().map(|&v| v as i32).collect();
+            let ap = BitPackedA::pack(&aw, m, k).unwrap();
+            let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+            let mut b_bits = Vec::new();
+            assert!(pack_bits_cols(&b8, k, n, &mut b_bits));
+            let mut want = vec![0i32; m * n];
+            gemm_xnor_a(&ap, &b_bits, n, &mut want);
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_xnor_a_isa(isa, &ap, &b_bits, n, &mut got);
+                assert_eq!(got, want, "xnor A {isa} m={m} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn i2_i3_pack_refusal_and_round_trip() {
+        assert!(PackedB2::pack(&[0, 2], 1, 2).is_none());
+        assert!(PackedB2::pack(&[-3, 0], 1, 2).is_none());
+        assert!(PackedB2::pack(&[-2, 1], 1, 2).is_some());
+        assert!(PackedB3::pack(&[0, 4], 1, 2).is_none());
+        assert!(PackedB3::pack(&[-5, 0], 1, 2).is_none());
+        assert!(PackedB3::pack(&[-4, 3], 1, 2).is_some());
+        assert!(PackedA2::pack(&[0, -3], 2, 1).is_none());
+        assert!(PackedA2::pack(&[-2, 1], 2, 1).is_some());
+        assert!(PackedA3::pack(&[4, 0], 2, 1).is_none());
+        assert!(PackedA3::pack(&[-4, 3], 2, 1).is_some());
+        // Tile widths that cannot byte-align refuse too (int3 at nr=4:
+        // 12-bit rows).
+        let nr4 = GemmConfig {
+            nr: 4,
+            ..GemmConfig::DEFAULT
+        };
+        assert!(PackedB3::pack_with(&[0; 8], 2, 4, nr4).is_none());
+        assert!(PackedB2::pack_with(&[0; 8], 2, 4, nr4).is_some());
+    }
+
+    #[test]
+    fn i2_i3_gemm_matches_naive_ragged() {
+        // Shapes straddling panel width, MR, byte boundaries (4 crumbs /
+        // 8-value tribble rows), and the k blocking.
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (4, 16, 8), (5, 300, 17), (2, 513, 9)] {
+            let a: Vec<i32> = (0..m * k).map(|i| (i as i32 * 37 % 255) - 127).collect();
+            let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+            let b2: Vec<i32> = (0..k * n).map(|i| (i as i32 * 13 % 4) - 2).collect();
+            let b3: Vec<i32> = (0..k * n).map(|i| (i as i32 * 11 % 8) - 4).collect();
+            let want2 = naive(&a, &b2, m, k, n);
+            let want3 = naive(&a, &b3, m, k, n);
+            let p2 = PackedB2::pack(&b2, k, n).unwrap();
+            let p3 = PackedB3::pack(&b3, k, n).unwrap();
+            let mut c = vec![0i32; m * n];
+            gemm_i2_packed(&a8, &p2, m, &mut c);
+            assert_eq!(c, want2, "int2 B m={m} k={k} n={n}");
+            let mut c = vec![0i32; m * n];
+            gemm_i3_packed(&a8, &p3, m, &mut c);
+            assert_eq!(c, want3, "int3 B m={m} k={k} n={n}");
+            for isa in Isa::available() {
+                let mut c = vec![0i32; m * n];
+                gemm_i2_packed_isa(isa, &a8, &p2, m, &mut c);
+                assert_eq!(c, want2, "int2 B {isa}");
+                let mut c = vec![0i32; m * n];
+                gemm_i3_packed_isa(isa, &a8, &p3, m, &mut c);
+                assert_eq!(c, want3, "int3 B {isa}");
+            }
+
+            // A-side (conv orientation): narrow weights, runtime i8 B.
+            let w2: Vec<i32> = (0..m * k).map(|i| (i as i32 * 7 % 4) - 2).collect();
+            let w3: Vec<i32> = (0..m * k).map(|i| (i as i32 * 5 % 8) - 4).collect();
+            let b: Vec<i32> = (0..k * n).map(|i| (i as i32 * 29 % 255) - 127).collect();
+            let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+            let pa2 = PackedA2::pack(&w2, m, k).unwrap();
+            let pa3 = PackedA3::pack(&w3, m, k).unwrap();
+            let mut c = vec![0i32; m * n];
+            gemm_i2_packed_a(&pa2, &b8, n, &mut c);
+            assert_eq!(c, naive(&w2, &b, m, k, n), "int2 A m={m} k={k} n={n}");
+            let mut c = vec![0i32; m * n];
+            gemm_i3_packed_a(&pa3, &b8, n, &mut c);
+            assert_eq!(c, naive(&w3, &b, m, k, n), "int3 A m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn nibble_activation_gemm_matches_widened() {
+        // The packed-activation consumer path: i8 rows already saturated
+        // to int4 range, packed to nibble rows, multiplied against the
+        // widened i32 weights — bit-identical to the container path.
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (4, 16, 8), (5, 33, 17), (2, 64, 9)] {
+            let acts: Vec<i8> = (0..m * k).map(|i| ((i * 5) % 16) as i8 - 8).collect();
+            let bw: Vec<i32> = (0..k * n).map(|i| (i as i32 * 37 % 255) - 127).collect();
+            let aw: Vec<i32> = acts.iter().map(|&v| v as i32).collect();
+            let want = naive(&aw, &bw, m, k, n);
+            let mut packed = Vec::new();
+            pack_nibble_rows(&acts, m, k, &mut packed);
+            assert_eq!(packed.len(), m * k.div_ceil(2));
+            let mut c = vec![0i32; m * n];
+            gemm_i4a_bytes(&packed, m, k, &bw, n, &mut c);
+            assert_eq!(c, want, "nibble-A m={m} k={k} n={n}");
+            for isa in Isa::available() {
+                let mut c = vec![0i32; m * n];
+                gemm_i4a_bytes_isa(isa, &packed, m, k, &bw, n, &mut c);
+                assert_eq!(c, want, "nibble-A {isa} m={m} k={k} n={n}");
+            }
+        }
     }
 }

@@ -430,7 +430,10 @@ pub fn conv_integer_packed_into(
 ) -> Result<Tensor, OpError> {
     let narrow = matches!(
         wp,
-        Some(bitpack::PackedConvWeights::I4(_)) | Some(bitpack::PackedConvWeights::Bipolar(_))
+        Some(bitpack::PackedConvWeights::I4(_))
+            | Some(bitpack::PackedConvWeights::I3(_))
+            | Some(bitpack::PackedConvWeights::I2(_))
+            | Some(bitpack::PackedConvWeights::Bipolar(_))
     );
     if !narrow {
         let wp8 = match wp {
@@ -462,6 +465,34 @@ pub fn conv_integer_packed_into(
                 let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
                 im2col_i8(isa, src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
                 bitpack::gemm_i4_packed_a_isa(isa, ap, &col, patch, dst);
+            }
+            let len = col.len();
+            *scratch = Tensor::from_i8(&[len], col).ok();
+            Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
+        }
+        (Some(bitpack::PackedConvWeights::I3(ap)), TensorData::I8(xv))
+            if x_zp == 0 && ap.m == m && ap.k == patch_rows =>
+        {
+            let mut out = recycled_i32_zeroed(recycled, n * m * patch);
+            let mut col = recycled_i8_zeroed(scratch.take(), patch_rows * patch);
+            for (b, dst) in out.chunks_mut(m * patch).enumerate() {
+                let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+                im2col_i8(isa, src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
+                bitpack::gemm_i3_packed_a_isa(isa, ap, &col, patch, dst);
+            }
+            let len = col.len();
+            *scratch = Tensor::from_i8(&[len], col).ok();
+            Ok(Tensor::from_i32(&[n, m, oh, ow], out)?)
+        }
+        (Some(bitpack::PackedConvWeights::I2(ap)), TensorData::I8(xv))
+            if x_zp == 0 && ap.m == m && ap.k == patch_rows =>
+        {
+            let mut out = recycled_i32_zeroed(recycled, n * m * patch);
+            let mut col = recycled_i8_zeroed(scratch.take(), patch_rows * patch);
+            for (b, dst) in out.chunks_mut(m * patch).enumerate() {
+                let src = &xv[b * c * h * wd..(b + 1) * c * h * wd];
+                im2col_i8(isa, src, c, h, wd, kh, kw, attrs, oh, ow, &mut col);
+                bitpack::gemm_i2_packed_a_isa(isa, ap, &col, patch, dst);
             }
             let len = col.len();
             *scratch = Tensor::from_i8(&[len], col).ok();

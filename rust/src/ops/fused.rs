@@ -27,9 +27,36 @@ use super::isa::Isa;
 use super::OpError;
 use super::{bitpack, conv, matmul, qlinear};
 use crate::onnx::shape::ConvAttrs;
+use crate::parallel::ThreadPool;
 use crate::quant::lut::ActLut;
 use crate::quant::QType;
-use crate::tensor::{recycled_i8, recycled_u8, DType, Shape, Tensor, TensorData};
+use crate::tensor::{
+    recycled_i32_zeroed, recycled_i64, recycled_i8, recycled_u8, DType, Shape, Tensor, TensorData,
+};
+
+/// How a fused FC stage's activation edge travels between two fused
+/// kernels — the plan-time packed-activation decision (stamped by the
+/// optimizer's pairing pass; see `opt`). `Container` is both the default
+/// and the universal fallback: the consumer dispatches on the ARRIVING
+/// dtype, so a producer that declines to pack at run time (bitplane with
+/// a 0 in the batch) degrades to the container path without any extra
+/// coordination.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ActPack {
+    /// Plain i8/u8 container tensor (the unpaired form).
+    #[default]
+    Container,
+    /// `[m, ceil(n/2)]` u8 nibble rows — two int4 values per byte,
+    /// low nibble = even column ([`bitpack::pack_nibble_rows`]).
+    /// Infallible at run time: the producing epilogue's `out_qtype`
+    /// saturates to `[-8, 7]` by construction.
+    Nibble,
+    /// `[m, words(n)]` i64 sign bitplanes for the consumer's XNOR GEMM.
+    /// Runtime-gated: the bipolar epilogue can emit 0 (a bit plane can't
+    /// represent it), so any non-±1 value falls the batch back to the
+    /// container form.
+    Bitplane,
+}
 
 /// The baked scalar tail of a quantized FC/conv chain: `Cast → Mul(s1)
 /// [→ Mul(s2)] [→ Relu] → QuantizeLinear(1/inv_scale, zp)`.
@@ -368,46 +395,172 @@ pub struct FusedQFc {
     /// results whatever it names).
     pub isa: Isa,
     pub epi: QEpilogue,
+    /// How this stage EMITS its output when the sole consumer is another
+    /// fused FC ([`ActPack::Container`] unless the pairing pass fired).
+    pub emit: ActPack,
+    /// What activation form this stage ACCEPTS from its paired producer.
+    /// The run-time dispatch keys on the arriving dtype, so a container
+    /// tensor (unpaired edge, or a bitplane producer's fallback batch)
+    /// always takes the ordinary path regardless of this field.
+    pub a_pack: ActPack,
 }
 
 impl FusedQFc {
     /// `scratch[0]` parks the i32 accumulator between runs (the only
     /// intermediate buffer of the whole chain); `scratch[1]` the XNOR
     /// activation bit-pack buffer when the weights are bipolar;
-    /// `recycled` is the retired quantized output — steady state
-    /// allocates nothing (`tests/alloc_regression.rs`).
+    /// `scratch[2]` the i8 container staging buffer when this stage emits
+    /// a packed activation edge; `recycled` is the retired quantized
+    /// output — steady state allocates nothing
+    /// (`tests/alloc_regression.rs`).
     pub fn run(
         &self,
         x: &Tensor,
         recycled: Option<Tensor>,
-        scratch: &mut [Option<Tensor>; 2],
+        scratch: &mut [Option<Tensor>; 3],
     ) -> Result<Tensor, OpError> {
-        let [acc_scratch, bits_scratch] = scratch;
-        let acc = matmul::matmul_integer_packed_into(
-            x,
-            &self.bw,
-            self.bp.as_ref(),
-            self.k,
-            self.n,
-            self.a_zp,
-            self.isa,
-            acc_scratch.take(),
-            bits_scratch,
-        )?;
+        let [acc_scratch, bits_scratch, pack_scratch] = scratch;
+        let acc = match (x.data(), self.a_pack) {
+            // Paired edge, nibble form: rows of two int4 values per byte
+            // against the widened i32 weights. Bit-identical to unpacking
+            // into the i8 container first — same values, same k order,
+            // each product exact in i32 (see `bitpack::gemm_i4a_bytes`).
+            (TensorData::U8(bytes), ActPack::Nibble) => {
+                let row_bytes = self.k.div_ceil(2);
+                if self.a_zp != 0 || row_bytes == 0 || bytes.len() % row_bytes != 0 {
+                    return Err(OpError::Semantics(format!(
+                        "FusedQFc: nibble-packed activation rows do not fit k={} (len {}, a_zp {})",
+                        self.k,
+                        bytes.len(),
+                        self.a_zp
+                    )));
+                }
+                let m = bytes.len() / row_bytes;
+                let mut c = recycled_i32_zeroed(acc_scratch.take(), m * self.n);
+                bitpack::gemm_i4a_bytes_par_isa(
+                    ThreadPool::global(),
+                    self.isa,
+                    bytes,
+                    m,
+                    self.k,
+                    &self.bw,
+                    self.n,
+                    &mut c,
+                );
+                Tensor::new(Shape::from_slice(&[m, self.n]), TensorData::I32(c))?
+            }
+            // Paired edge, bitplane form: the producer already packed the
+            // sign bits, so the XNOR GEMM runs without this stage's own
+            // pack pass (`bits_scratch` stays parked).
+            (TensorData::I64(bits), ActPack::Bitplane) => {
+                let Some(bitpack::PackedWeights::Bipolar(bb)) = self.bp.as_ref() else {
+                    return Err(OpError::Semantics(
+                        "FusedQFc: bitplane activation arrived but weights are not bipolar"
+                            .to_string(),
+                    ));
+                };
+                let words = bitpack::bit_words(self.k);
+                if self.a_zp != 0 || words == 0 || bits.len() % words != 0 {
+                    return Err(OpError::Semantics(format!(
+                        "FusedQFc: bitplane activation rows do not fit k={} (len {}, a_zp {})",
+                        self.k,
+                        bits.len(),
+                        self.a_zp
+                    )));
+                }
+                let m = bits.len() / words;
+                let mut c = recycled_i32_zeroed(acc_scratch.take(), m * self.n);
+                bitpack::gemm_xnor_par_isa(ThreadPool::global(), self.isa, bits, bb, m, &mut c);
+                Tensor::new(Shape::from_slice(&[m, self.n]), TensorData::I32(c))?
+            }
+            // Container form — unpaired edges AND every fallback.
+            _ => matmul::matmul_integer_packed_into(
+                x,
+                &self.bw,
+                self.bp.as_ref(),
+                self.k,
+                self.n,
+                self.a_zp,
+                self.isa,
+                acc_scratch.take(),
+                bits_scratch,
+            )?,
+        };
         let bias = match &self.bias {
             Some(b) => BiasLayout::PerColumn(b),
             None => BiasLayout::None,
         };
-        let out = write_quantized(
+        if self.emit == ActPack::Container {
+            let out = write_quantized(
+                acc.as_i32()?,
+                bias,
+                &self.epi,
+                Shape::from_slice(acc.shape()),
+                self.isa,
+                recycled,
+            )?;
+            *acc_scratch = Some(acc);
+            return Ok(out);
+        }
+        // Packed emission: quantize into the staging container first (the
+        // exact same epilogue pass — the packed form re-encodes the SAME
+        // saturated values, so three-way bit-identity is preserved), then
+        // pack the rows for the paired consumer. A fallback round retires
+        // the container itself, so route an i8 retiree back to the
+        // staging side; a packed retiree (u8/i64) seeds the packed buffer.
+        let mut staging = pack_scratch.take();
+        let mut packed_recycle = recycled;
+        if staging.is_none()
+            && packed_recycle
+                .as_ref()
+                .is_some_and(|t| t.dtype() == DType::I8)
+        {
+            staging = packed_recycle.take();
+        }
+        let container = write_quantized(
             acc.as_i32()?,
             bias,
             &self.epi,
             Shape::from_slice(acc.shape()),
             self.isa,
-            recycled,
+            staging,
         )?;
         *acc_scratch = Some(acc);
-        Ok(out)
+        let TensorData::I8(vals) = container.data() else {
+            // Plan-time pairing only fires for i8-container out_qtypes;
+            // reaching here means the plan is inconsistent.
+            return Err(OpError::Semantics(
+                "FusedQFc: packed emission requires an i8-container out_qtype".to_string(),
+            ));
+        };
+        debug_assert_eq!(container.numel() % self.n.max(1), 0);
+        let rows = container.numel() / self.n.max(1);
+        match self.emit {
+            ActPack::Nibble => {
+                let row_bytes = self.n.div_ceil(2);
+                let mut buf = recycled_u8(packed_recycle, rows * row_bytes);
+                bitpack::pack_nibble_rows(vals, rows, self.n, &mut buf);
+                let out = Tensor::new(Shape::from_slice(&[rows, row_bytes]), TensorData::U8(buf))?;
+                *pack_scratch = Some(container);
+                Ok(out)
+            }
+            ActPack::Bitplane => {
+                // Pre-scan before touching the word buffer so a steady
+                // fallback stream allocates nothing.
+                if vals.iter().all(|&v| v == 1 || v == -1) {
+                    let words = bitpack::bit_words(self.n);
+                    let mut bits = recycled_i64(packed_recycle, rows * words);
+                    if bitpack::pack_bits_rows(vals, rows, self.n, &mut bits) {
+                        let out =
+                            Tensor::new(Shape::from_slice(&[rows, words]), TensorData::I64(bits))?;
+                        *pack_scratch = Some(container);
+                        return Ok(out);
+                    }
+                }
+                Ok(container)
+            }
+            ActPack::Container => unreachable!("handled above"),
+        }
     }
 }
 
@@ -433,14 +586,16 @@ pub struct FusedQConv {
 
 impl FusedQConv {
     /// `scratch[0]` is the im2col column buffer, `scratch[1]` parks the
-    /// i32 accumulator; `recycled` the retired quantized output.
+    /// i32 accumulator (`scratch[2]` is unused — conv stages never emit
+    /// packed activation edges; the array is shared with [`FusedQFc`]);
+    /// `recycled` the retired quantized output.
     pub fn run(
         &self,
         x: &Tensor,
         recycled: Option<Tensor>,
-        scratch: &mut [Option<Tensor>; 2],
+        scratch: &mut [Option<Tensor>; 3],
     ) -> Result<Tensor, OpError> {
-        let [col_scratch, acc_scratch] = scratch;
+        let [col_scratch, acc_scratch, _] = scratch;
         let acc = conv::conv_integer_packed_into(
             x,
             &self.wv,

@@ -416,7 +416,10 @@ impl Kernel {
     /// the panels hold the same widened values in a different layout, and
     /// every tile config accumulates in the same ascending-k order.
     pub fn retune(&mut self, cfg: crate::tune::GemmConfig) {
-        use super::bitpack::{PackedA4, PackedB4, PackedConvWeights, PackedWeights};
+        use super::bitpack::{
+            PackedA2, PackedA3, PackedA4, PackedB2, PackedB3, PackedB4, PackedConvWeights,
+            PackedWeights,
+        };
         use crate::ops::matmul::{PackedA, PackedB};
         match self {
             Kernel::MatMulIntegerPrebound { bw, bp, k, n, .. } if bp.is_some() => {
@@ -431,6 +434,17 @@ impl Kernel {
                     // byte-align nibbles (odd nr).
                     if let Some(p) = PackedB4::pack_with(&f.bw, f.k, f.n, cfg) {
                         f.bp = Some(PackedWeights::I4(p));
+                    }
+                }
+                Some(PackedWeights::I3(_)) => {
+                    // Tribble rows need nr*3 to fill whole bytes.
+                    if let Some(p) = PackedB3::pack_with(&f.bw, f.k, f.n, cfg) {
+                        f.bp = Some(PackedWeights::I3(p));
+                    }
+                }
+                Some(PackedWeights::I2(_)) => {
+                    if let Some(p) = PackedB2::pack_with(&f.bw, f.k, f.n, cfg) {
+                        f.bp = Some(PackedWeights::I2(p));
                     }
                 }
                 // Bit columns have no tile parameters.
@@ -449,6 +463,16 @@ impl Kernel {
                 Some(PackedConvWeights::I4(_)) => {
                     if let Some(p) = PackedA4::pack_with(&f.wv, f.m, f.c * f.kh * f.kw, cfg) {
                         f.wp = Some(PackedConvWeights::I4(p));
+                    }
+                }
+                Some(PackedConvWeights::I3(_)) => {
+                    if let Some(p) = PackedA3::pack_with(&f.wv, f.m, f.c * f.kh * f.kw, cfg) {
+                        f.wp = Some(PackedConvWeights::I3(p));
+                    }
+                }
+                Some(PackedConvWeights::I2(_)) => {
+                    if let Some(p) = PackedA2::pack_with(&f.wv, f.m, f.c * f.kh * f.kw, cfg) {
+                        f.wp = Some(PackedConvWeights::I2(p));
                     }
                 }
                 Some(PackedConvWeights::Bipolar(_)) | None => {}
@@ -486,8 +510,8 @@ impl Kernel {
     }
 
     /// Logical weight width of the packed storage this kernel will run
-    /// with (`"int8"` / `"int4"` / `"bipolar"`), `None` when it holds no
-    /// packed quantized weights. Observability twin of [`Kernel::isa`]
+    /// with (`"int8"` / `"int4"` / `"int3"` / `"int2"` / `"bipolar"`),
+    /// `None` when it holds no packed quantized weights. Observability twin of [`Kernel::isa`]
     /// for the width axis (plan stats, CI dispatch filters).
     pub fn weight_width(&self) -> Option<&'static str> {
         match self {
@@ -504,21 +528,22 @@ impl Kernel {
     /// `MissingInput` errors are minted without a node name; callers that
     /// know it patch it in via [`OpError::with_node`].
     pub fn run(&self, inputs: &[Option<&Tensor>]) -> Result<Tensor, OpError> {
-        self.run_with(inputs, None, &mut [None, None])
+        self.run_with(inputs, None, &mut [None, None, None])
     }
 
     /// [`Kernel::run`] with the scratch planner's buffers: `recycled` is
     /// the retired output tensor of a previous run at this plan step
     /// (its storage is reused when dtype and capacity fit), `scratch`
-    /// two per-step slots for kernel-internal intermediates (the conv
-    /// im2col column buffer, the float conv's pre-bias result). Results
-    /// are bit-identical to [`Kernel::run`] for every kernel — only the
+    /// three per-step slots for kernel-internal intermediates (the conv
+    /// im2col column buffer, the float conv's pre-bias result, the fused
+    /// FC's packed-activation staging container). Results are
+    /// bit-identical to [`Kernel::run`] for every kernel — only the
     /// origin of the output buffer differs.
     pub fn run_with(
         &self,
         inputs: &[Option<&Tensor>],
         recycled: Option<Tensor>,
-        scratch: &mut [Option<Tensor>; 2],
+        scratch: &mut [Option<Tensor>; 3],
     ) -> Result<Tensor, OpError> {
         let req = |i: usize| -> Result<&Tensor, OpError> {
             inputs
@@ -600,7 +625,7 @@ impl Kernel {
                 &mut scratch[0],
             )?,
             Kernel::Conv { attrs, bias4 } => {
-                let [col_scratch, y_scratch] = scratch;
+                let [col_scratch, y_scratch, _] = scratch;
                 match (opt(2), bias4) {
                     (None, _) => {
                         conv::conv_f32_into(req(0)?, req(1)?, attrs, recycled, col_scratch)?
@@ -758,7 +783,7 @@ mod tests {
         assert_eq!(generic, packed);
         let spare = Some(Tensor::from_i32(&[64], vec![5; 64]).unwrap());
         let recycled = kernel
-            .run_with(&[Some(&x), Some(w)], spare, &mut [None, None])
+            .run_with(&[Some(&x), Some(w)], spare, &mut [None, None, None])
             .unwrap();
         assert_eq!(generic, recycled);
     }

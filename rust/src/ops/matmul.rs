@@ -1026,7 +1026,10 @@ pub fn matmul_integer_packed_into(
 ) -> Result<Tensor, OpError> {
     use crate::tensor::TensorData;
     let narrow = match bp {
-        Some(bitpack::PackedWeights::I4(_)) | Some(bitpack::PackedWeights::Bipolar(_)) => bp,
+        Some(bitpack::PackedWeights::I4(_))
+        | Some(bitpack::PackedWeights::I3(_))
+        | Some(bitpack::PackedWeights::I2(_))
+        | Some(bitpack::PackedWeights::Bipolar(_)) => bp,
         _ => None,
     };
     let (m, ka) = flat_mk(a.shape());
@@ -1039,6 +1042,20 @@ pub fn matmul_integer_packed_into(
             bitpack::PackedWeights::I4(bp4) => {
                 let mut c = crate::tensor::recycled_i32_zeroed(recycled, m * n);
                 bitpack::gemm_i4_packed_par_isa(pool, isa, av, bp4, m, &mut c);
+                let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
+                out_shape.push(n);
+                return Ok(Tensor::new(out_shape, TensorData::I32(c))?);
+            }
+            bitpack::PackedWeights::I3(bp3) => {
+                let mut c = crate::tensor::recycled_i32_zeroed(recycled, m * n);
+                bitpack::gemm_i3_packed_par_isa(pool, isa, av, bp3, m, &mut c);
+                let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
+                out_shape.push(n);
+                return Ok(Tensor::new(out_shape, TensorData::I32(c))?);
+            }
+            bitpack::PackedWeights::I2(bp2) => {
+                let mut c = crate::tensor::recycled_i32_zeroed(recycled, m * n);
+                bitpack::gemm_i2_packed_par_isa(pool, isa, av, bp2, m, &mut c);
                 let mut out_shape = Shape::from_slice(&a.shape()[..a.shape().len() - 1]);
                 out_shape.push(n);
                 return Ok(Tensor::new(out_shape, TensorData::I32(c))?);

@@ -39,7 +39,7 @@ pub mod matcher;
 use crate::onnx::ir::{Graph, Model};
 use crate::onnx::shape::ValueType;
 use crate::ops::bitpack::{self, PackedConvWeights, PackedWeights};
-use crate::ops::fused::{FusedActLut, FusedQConv, FusedQFc, QEpilogue};
+use crate::ops::fused::{ActPack, FusedActLut, FusedQConv, FusedQFc, QEpilogue};
 use crate::ops::kernel::{prebind_conv_integer, prebind_matmul_integer};
 use crate::ops::{matmul, Kernel};
 use crate::quant::lut::{ActEval, ActLut};
@@ -51,16 +51,31 @@ use std::sync::OnceLock;
 
 /// The `PQDL_PACK_WIDTH` knob: which weight widths plan-time baking may
 /// select for the fused kernels.
+///
+/// `Auto` and `Int8` are policies (never fail); the narrow values are
+/// *forcing* — they pin every fused chain to one storage width so CI and
+/// benches exercise a specific kernel family deliberately, and they
+/// reject the plan with a clear [`PackError`] when a chain's weights do
+/// not admit the width (a silent fallback would defeat the pinning).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PackWidth {
     /// Narrowest storage the widened weights admit: bipolar bit columns
-    /// when every value is ±1, nibble panels when all fit `[-8, 7]`,
-    /// else the i8 panels. The default.
+    /// when every value is ±1, then crumb (int2) / tribble (int3) /
+    /// nibble (int4) panels by range, else the i8 panels. The default.
     Auto,
     /// i8 panels only — pre-PR-9 behavior, and the CI width-matrix
     /// baseline (narrow baking can never change results, so this knob
     /// only moves memory, never bits).
     Int8,
+    /// Force int4 nibble panels; plan-time error if any fused chain's
+    /// weights leave `[-8, 7]`.
+    Int4,
+    /// Force int3 tribble panels; plan-time error outside `[-4, 3]`.
+    Int3,
+    /// Force int2 crumb panels; plan-time error outside `[-2, 1]`.
+    Int2,
+    /// Force bipolar bit columns; plan-time error unless strictly ±1.
+    Bipolar,
 }
 
 impl PackWidth {
@@ -68,6 +83,10 @@ impl PackWidth {
         match self {
             PackWidth::Auto => "auto",
             PackWidth::Int8 => "int8",
+            PackWidth::Int4 => "int4",
+            PackWidth::Int3 => "int3",
+            PackWidth::Int2 => "int2",
+            PackWidth::Bipolar => "bipolar",
         }
     }
 
@@ -77,6 +96,10 @@ impl PackWidth {
         match s.trim().to_ascii_lowercase().as_str() {
             "auto" => Some(PackWidth::Auto),
             "int8" => Some(PackWidth::Int8),
+            "int4" => Some(PackWidth::Int4),
+            "int3" => Some(PackWidth::Int3),
+            "int2" => Some(PackWidth::Int2),
+            "bipolar" => Some(PackWidth::Bipolar),
             _ => None,
         }
     }
@@ -93,6 +116,33 @@ impl PackWidth {
         })
     }
 }
+
+/// Plan-time rejection of a forced `PQDL_PACK_WIDTH`: a fused chain's
+/// weights do not admit the requested storage width. Raised instead of
+/// silently keeping wider panels — the forcing values exist to pin a
+/// kernel family (CI dispatch matrix, benches), and a fallback would
+/// defeat that pin. Surfaced through `SessionError::Pack`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackError {
+    /// Anchor node of the fused chain whose weights failed to pack.
+    pub node: String,
+    /// The forced width's knob name (`"int4"`, `"bipolar"`, ...).
+    pub width: &'static str,
+    /// What the weights actually look like.
+    pub reason: String,
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PQDL_PACK_WIDTH={} rejected at plan time: node '{}': {}",
+            self.width, self.node, self.reason
+        )
+    }
+}
+
+impl std::error::Error for PackError {}
 
 /// Plan-compilation options. `fuse` (default: on) runs the pass pipeline;
 /// sessions compile an unfused plan alongside regardless, for the
@@ -118,8 +168,20 @@ pub struct OptStats {
     pub eliminated: usize,
     /// Fused kernels whose weights baked as int4 nibble panels.
     pub fused_int4: usize,
+    /// Fused kernels whose weights baked as int3 tribble panels.
+    pub fused_int3: usize,
+    /// Fused kernels whose weights baked as int2 crumb panels.
+    pub fused_int2: usize,
     /// Fused kernels whose weights baked as bipolar bit rows/columns.
     pub fused_bipolar: usize,
+    /// Fused FC→FC edges where the producer emits its activation rows
+    /// nibble-packed (two values per byte) for the consumer's int4
+    /// activation GEMM.
+    pub packed_act_nibble: usize,
+    /// Fused FC→FC edges where the producer tries bitplane (±1) packing
+    /// for the consumer's XNOR GEMM (runtime-gated: any 0 in the
+    /// activation falls back to the i8 container for that batch).
+    pub packed_act_bitplane: usize,
 }
 
 impl OptStats {
@@ -158,20 +220,23 @@ pub(crate) struct Optimized {
 }
 
 /// Run the pass pipeline over a checked model's schedule. `types` is the
-/// checker's value-type map (used to pin the LUT input domain).
+/// checker's value-type map (used to pin the LUT input domain). The only
+/// error is a forced `PQDL_PACK_WIDTH` the model's fused weights cannot
+/// admit ([`PackError`]) — every other precondition failure declines its
+/// pass and leaves the nodes unfused.
 pub(crate) fn optimize(
     model: &Model,
     order: &[usize],
     types: &HashMap<String, ValueType>,
     opts: &PlanOptions,
-) -> Optimized {
+) -> Result<Optimized, PackError> {
     let g = &model.graph;
     if !opts.fuse {
-        return Optimized {
+        return Ok(Optimized {
             items: order.iter().map(|&i| PlanItem::Node(i)).collect(),
             aliases: HashMap::new(),
             stats: OptStats::default(),
-        };
+        });
     }
 
     let idx = ConsumerIndex::build(g);
@@ -185,8 +250,8 @@ pub(crate) fn optimize(
             continue; // absorbed into an earlier fused span
         }
         let fused = match g.nodes[i].op_type.as_str() {
-            "MatMulInteger" => try_fuse_qfc(g, &idx, i),
-            "ConvInteger" => try_fuse_qconv(g, &idx, i),
+            "MatMulInteger" => try_fuse_qfc(g, &idx, i)?,
+            "ConvInteger" => try_fuse_qconv(g, &idx, i)?,
             "DequantizeLinear" => try_fuse_act_lut(g, &idx, i, types),
             _ => None,
         };
@@ -204,6 +269,8 @@ pub(crate) fn optimize(
                         stats.fused_qfc += 1;
                         match f.bp.as_ref().map(|p| p.bits()) {
                             Some(4) => stats.fused_int4 += 1,
+                            Some(3) => stats.fused_int3 += 1,
+                            Some(2) => stats.fused_int2 += 1,
                             Some(1) => stats.fused_bipolar += 1,
                             _ => {}
                         }
@@ -212,6 +279,8 @@ pub(crate) fn optimize(
                         stats.fused_qconv += 1;
                         match f.wp.as_ref().map(|p| p.bits()) {
                             Some(4) => stats.fused_int4 += 1,
+                            Some(3) => stats.fused_int3 += 1,
+                            Some(2) => stats.fused_int2 += 1,
                             Some(1) => stats.fused_bipolar += 1,
                             _ => {}
                         }
@@ -223,6 +292,14 @@ pub(crate) fn optimize(
             }
             _ => items.push(PlanItem::Node(i)),
         }
+    }
+
+    // --- packed-activation pairing (fused FC -> fused FC edges) ---------
+    // With packing enabled at all, a fused FC whose output feeds exactly
+    // one other fused FC can hand the activation over in packed form —
+    // the plan stamps the decision on both kernels (`emit` / `a_pack`).
+    if PackWidth::active() != PackWidth::Int8 {
+        pair_packed_activations(g, &idx, &mut items, &mut stats);
     }
 
     // --- identity / no-op-reshape elimination (value aliasing) ----------
@@ -365,11 +442,127 @@ pub(crate) fn optimize(
         .zip(removed)
         .filter_map(|(item, dead)| (!dead).then_some(item))
         .collect();
-    Optimized {
+    Ok(Optimized {
         items,
         aliases,
         stats,
+    })
+}
+
+/// The packed-activation pairing pass (tentpole part b): for every fused
+/// FC whose output value is chain-internal, consumed SOLELY by the anchor
+/// of another fused FC with `a_zp == 0`, stamp a packed edge form on both
+/// kernels. Nibble when the producer's epilogue saturates into `[-8, 7]`
+/// (i8 container — packing is then infallible), bitplane when the
+/// producer emits bipolar AND the consumer holds bit-packed weights
+/// (runtime-gated: the epilogue can emit 0, which a bit plane cannot
+/// carry, so those batches travel as the container and the consumer's
+/// dtype dispatch falls back — no coordination needed). Bit-exactness:
+/// the packed forms re-encode exactly the saturated values the container
+/// would hold, and the consuming kernels accumulate them in the same
+/// order ([`bitpack::gemm_i4a_bytes`], `gemm_xnor`).
+fn pair_packed_activations(
+    g: &Graph,
+    idx: &ConsumerIndex<'_>,
+    items: &mut [PlanItem],
+    stats: &mut OptStats,
+) {
+    // Producer map: fused-FC output value -> item position.
+    let mut producers: HashMap<&str, usize> = HashMap::new();
+    for (pos, item) in items.iter().enumerate() {
+        if let PlanItem::Fused {
+            kernel: Kernel::FusedQFc(_),
+            output,
+            ..
+        } = item
+        {
+            producers.insert(output.as_str(), pos);
+        }
     }
+    let mut pairs: Vec<(usize, usize, ActPack)> = Vec::new();
+    for (pos, item) in items.iter().enumerate() {
+        let PlanItem::Fused {
+            kernel: Kernel::FusedQFc(cons),
+            input,
+            nodes,
+            ..
+        } = item
+        else {
+            continue;
+        };
+        let Some(&ppos) = producers.get(input.as_str()) else {
+            continue;
+        };
+        if ppos == pos {
+            continue;
+        }
+        let PlanItem::Fused {
+            kernel: Kernel::FusedQFc(prod),
+            ..
+        } = &items[ppos]
+        else {
+            continue;
+        };
+        // The edge value must be invisible outside the pair and feed ONLY
+        // the consumer chain's anchor — otherwise some other reader would
+        // see a packed tensor where the graph promises an i8 container.
+        if !matcher::chain_internal(g, input) {
+            continue;
+        }
+        let sole = matches!(
+            idx.sole_consumer(g, input),
+            Ok(Some((consumer, _))) if consumer == nodes[0]
+        );
+        // Nibble/bitplane GEMMs carry no zero-point; the pairing demands
+        // the symmetric case (a_zp == 0), the overwhelmingly common one
+        // for i8 hidden activations.
+        if !sole || cons.a_zp != 0 || prod.n != cons.k {
+            continue;
+        }
+        if let Some(form) = packed_act_form(prod, cons) {
+            pairs.push((ppos, pos, form));
+        }
+    }
+    for (ppos, cpos, form) in pairs {
+        if let PlanItem::Fused {
+            kernel: Kernel::FusedQFc(f),
+            ..
+        } = &mut items[ppos]
+        {
+            f.emit = form;
+        }
+        if let PlanItem::Fused {
+            kernel: Kernel::FusedQFc(f),
+            ..
+        } = &mut items[cpos]
+        {
+            f.a_pack = form;
+        }
+        match form {
+            ActPack::Nibble => stats.packed_act_nibble += 1,
+            ActPack::Bitplane => stats.packed_act_bitplane += 1,
+            ActPack::Container => {}
+        }
+    }
+}
+
+/// Which packed form (if any) a fused FC -> fused FC edge admits.
+fn packed_act_form(prod: &FusedQFc, cons: &FusedQFc) -> Option<ActPack> {
+    let q = prod.epi.out_qtype;
+    if q == QType::Bipolar {
+        // XNOR consumption needs bit-packed weights on the other side.
+        if matches!(cons.bp, Some(PackedWeights::Bipolar(_))) {
+            return Some(ActPack::Bitplane);
+        }
+        return None;
+    }
+    if q.dtype() == DType::I8 {
+        let (lo, hi) = q.range();
+        if lo >= -8 && hi <= 7 {
+            return Some(ActPack::Nibble);
+        }
+    }
+    None
 }
 
 /// Backend-side preconditions shared by both fused epilogue builders:
@@ -390,32 +583,77 @@ fn build_epilogue(chain: &QChain<'_>) -> Option<QEpilogue> {
     })
 }
 
-/// Select the narrowest weight storage the widened FC weights admit
-/// (tentpole of the sub-8-bit refactor). `Auto` tries bipolar bit
-/// columns, then int4 nibble panels, before keeping the i8 panels the
-/// prebinder already built; `Int8` (the knob) always keeps them. The
-/// choice can never change results: the fused kernels gate the narrow
-/// paths on the activations at run time and fall back to the widened-i32
-/// loop over `bw` otherwise, and every narrow kernel is bit-identical to
-/// that loop when it does engage (see `ops::bitpack`).
+/// Describe why a forced width can't hold these weights (the value range
+/// the packers would refuse), for [`PackError::reason`].
+fn width_refusal(w: &[i32], width: PackWidth) -> String {
+    let lo = w.iter().copied().min().unwrap_or(0);
+    let hi = w.iter().copied().max().unwrap_or(0);
+    let admit = match width {
+        PackWidth::Bipolar => "strictly ±1".to_string(),
+        PackWidth::Int2 => "[-2, 1]".to_string(),
+        PackWidth::Int3 => "[-4, 3]".to_string(),
+        PackWidth::Int4 => "[-8, 7]".to_string(),
+        _ => "<any>".to_string(),
+    };
+    format!(
+        "widened weight values span [{lo}, {hi}], outside the {} range {admit} \
+         (use PQDL_PACK_WIDTH=auto or int8 for this model)",
+        width.name()
+    )
+}
+
+/// Select the weight storage for a fused FC's widened weights (tentpole
+/// of the sub-8-bit refactor). `Auto` walks the minimal-width ladder —
+/// bipolar bit columns when strictly ±1, else crumb / tribble / nibble
+/// panels by range — before keeping the i8 panels the prebinder already
+/// built; `Int8` always keeps them; the forced narrow values pack that
+/// width or fail with the refusal reason (the caller attaches the node
+/// name). The choice can never change results: the fused kernels gate
+/// the narrow paths on the activations at run time and fall back to the
+/// widened-i32 loop over `bw` otherwise, and every narrow kernel is
+/// bit-identical to that loop when it does engage (see `ops::bitpack`).
 fn select_packed_fc(
     bw: &[i32],
     bp: Option<matmul::PackedB>,
     k: usize,
     n: usize,
-) -> Option<PackedWeights> {
-    if PackWidth::active() == PackWidth::Auto {
-        if bw.iter().all(|&v| v == 1 || v == -1) {
-            if let Some(p) = bitpack::BitPackedB::pack(bw, k, n) {
-                return Some(PackedWeights::Bipolar(p));
+) -> Result<Option<PackedWeights>, String> {
+    let width = PackWidth::active();
+    match width {
+        PackWidth::Auto => {
+            if bw.iter().all(|&v| v == 1 || v == -1) {
+                if let Some(p) = bitpack::BitPackedB::pack(bw, k, n) {
+                    return Ok(Some(PackedWeights::Bipolar(p)));
+                }
+            } else if bw.iter().all(|&v| (-2..=1).contains(&v)) {
+                if let Some(p) = bitpack::PackedB2::pack(bw, k, n) {
+                    return Ok(Some(PackedWeights::I2(p)));
+                }
+            } else if bw.iter().all(|&v| (-4..=3).contains(&v)) {
+                if let Some(p) = bitpack::PackedB3::pack(bw, k, n) {
+                    return Ok(Some(PackedWeights::I3(p)));
+                }
+            } else if bw.iter().all(|&v| (-8..=7).contains(&v)) {
+                if let Some(p) = bitpack::PackedB4::pack(bw, k, n) {
+                    return Ok(Some(PackedWeights::I4(p)));
+                }
             }
-        } else if bw.iter().all(|&v| (-8..=7).contains(&v)) {
-            if let Some(p) = bitpack::PackedB4::pack(bw, k, n) {
-                return Some(PackedWeights::I4(p));
-            }
+            Ok(bp.map(PackedWeights::I8))
         }
+        PackWidth::Int8 => Ok(bp.map(PackedWeights::I8)),
+        PackWidth::Int4 => bitpack::PackedB4::pack(bw, k, n)
+            .map(|p| Some(PackedWeights::I4(p)))
+            .ok_or_else(|| width_refusal(bw, width)),
+        PackWidth::Int3 => bitpack::PackedB3::pack(bw, k, n)
+            .map(|p| Some(PackedWeights::I3(p)))
+            .ok_or_else(|| width_refusal(bw, width)),
+        PackWidth::Int2 => bitpack::PackedB2::pack(bw, k, n)
+            .map(|p| Some(PackedWeights::I2(p)))
+            .ok_or_else(|| width_refusal(bw, width)),
+        PackWidth::Bipolar => bitpack::BitPackedB::pack(bw, k, n)
+            .map(|p| Some(PackedWeights::Bipolar(p)))
+            .ok_or_else(|| width_refusal(bw, width)),
     }
-    bp.map(PackedWeights::I8)
 }
 
 /// Conv twin of [`select_packed_fc`]: `wv` is the `[m, c*kh*kw]` weight
@@ -425,19 +663,43 @@ fn select_packed_conv(
     wp: Option<matmul::PackedA>,
     m: usize,
     k: usize,
-) -> Option<PackedConvWeights> {
-    if PackWidth::active() == PackWidth::Auto {
-        if wv.iter().all(|&v| v == 1 || v == -1) {
-            if let Some(p) = bitpack::BitPackedA::pack(wv, m, k) {
-                return Some(PackedConvWeights::Bipolar(p));
+) -> Result<Option<PackedConvWeights>, String> {
+    let width = PackWidth::active();
+    match width {
+        PackWidth::Auto => {
+            if wv.iter().all(|&v| v == 1 || v == -1) {
+                if let Some(p) = bitpack::BitPackedA::pack(wv, m, k) {
+                    return Ok(Some(PackedConvWeights::Bipolar(p)));
+                }
+            } else if wv.iter().all(|&v| (-2..=1).contains(&v)) {
+                if let Some(p) = bitpack::PackedA2::pack(wv, m, k) {
+                    return Ok(Some(PackedConvWeights::I2(p)));
+                }
+            } else if wv.iter().all(|&v| (-4..=3).contains(&v)) {
+                if let Some(p) = bitpack::PackedA3::pack(wv, m, k) {
+                    return Ok(Some(PackedConvWeights::I3(p)));
+                }
+            } else if wv.iter().all(|&v| (-8..=7).contains(&v)) {
+                if let Some(p) = bitpack::PackedA4::pack(wv, m, k) {
+                    return Ok(Some(PackedConvWeights::I4(p)));
+                }
             }
-        } else if wv.iter().all(|&v| (-8..=7).contains(&v)) {
-            if let Some(p) = bitpack::PackedA4::pack(wv, m, k) {
-                return Some(PackedConvWeights::I4(p));
-            }
+            Ok(wp.map(PackedConvWeights::I8))
         }
+        PackWidth::Int8 => Ok(wp.map(PackedConvWeights::I8)),
+        PackWidth::Int4 => bitpack::PackedA4::pack(wv, m, k)
+            .map(|p| Some(PackedConvWeights::I4(p)))
+            .ok_or_else(|| width_refusal(wv, width)),
+        PackWidth::Int3 => bitpack::PackedA3::pack(wv, m, k)
+            .map(|p| Some(PackedConvWeights::I3(p)))
+            .ok_or_else(|| width_refusal(wv, width)),
+        PackWidth::Int2 => bitpack::PackedA2::pack(wv, m, k)
+            .map(|p| Some(PackedConvWeights::I2(p)))
+            .ok_or_else(|| width_refusal(wv, width)),
+        PackWidth::Bipolar => bitpack::BitPackedA::pack(wv, m, k)
+            .map(|p| Some(PackedConvWeights::Bipolar(p)))
+            .ok_or_else(|| width_refusal(wv, width)),
     }
-    wp.map(PackedConvWeights::I8)
 }
 
 fn fused_item(nodes: Vec<usize>, kernel: Kernel, g: &Graph) -> PlanItem {
@@ -453,19 +715,35 @@ fn fused_item(nodes: Vec<usize>, kernel: Kernel, g: &Graph) -> PlanItem {
 /// Quantized-FC fusion: requires the matcher's chain plus the packed /
 /// pre-widened weight baking (`prebind_matmul_integer`) and a bias the
 /// row-broadcast epilogue reproduces exactly (`[N]` or `[1, N]` i32).
-fn try_fuse_qfc(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<PlanItem> {
-    g.nodes[anchor].inputs.first().filter(|n| !n.is_empty())?;
-    let chain = match_q_chain(g, idx, anchor, InitPolicy::Bakeable).ok()?;
-    let Kernel::MatMulIntegerPrebound {
+/// `Ok(None)` declines the fusion; `Err` propagates a forced-width
+/// packing rejection (only possible once the chain WOULD fuse — unfused
+/// chains make no packing decision).
+fn try_fuse_qfc(
+    g: &Graph,
+    idx: &ConsumerIndex<'_>,
+    anchor: usize,
+) -> Result<Option<PlanItem>, PackError> {
+    if g.nodes[anchor]
+        .inputs
+        .first()
+        .filter(|n| !n.is_empty())
+        .is_none()
+    {
+        return Ok(None);
+    }
+    let Ok(chain) = match_q_chain(g, idx, anchor, InitPolicy::Bakeable) else {
+        return Ok(None);
+    };
+    let Some(Kernel::MatMulIntegerPrebound {
         bw,
         bp,
         k,
         n,
         a_zp,
         isa,
-    } = prebind_matmul_integer(&g.nodes[anchor], g)?
+    }) = prebind_matmul_integer(&g.nodes[anchor], g)
     else {
-        return None;
+        return Ok(None);
     };
     let bias = match chain.bias {
         None => None,
@@ -475,13 +753,22 @@ fn try_fuse_qfc(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<Pla
             // rank-extend the unfused output; the anchor output is always
             // rank >= 2, so rank <= 2 suffices).
             if b.numel() != n || b.shape().last() != Some(&n) || b.rank() > 2 {
-                return None; // layout the per-column epilogue can't bake
+                return Ok(None); // layout the per-column epilogue can't bake
             }
-            Some(b.as_i32().ok()?.to_vec())
+            match b.as_i32() {
+                Ok(v) => Some(v.to_vec()),
+                Err(_) => return Ok(None),
+            }
         }
     };
-    let epi = build_epilogue(&chain)?;
-    let bp = select_packed_fc(&bw, bp, k, n);
+    let Some(epi) = build_epilogue(&chain) else {
+        return Ok(None);
+    };
+    let bp = select_packed_fc(&bw, bp, k, n).map_err(|reason| PackError {
+        node: g.nodes[anchor].name.clone(),
+        width: PackWidth::active().name(),
+        reason,
+    })?;
     let kernel = Kernel::FusedQFc(FusedQFc {
         bw,
         bp,
@@ -491,16 +778,32 @@ fn try_fuse_qfc(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<Pla
         bias,
         isa,
         epi,
+        emit: ActPack::Container,
+        a_pack: ActPack::Container,
     });
-    Some(fused_item(chain.nodes, kernel, g))
+    Ok(Some(fused_item(chain.nodes, kernel, g)))
 }
 
 /// Quantized-conv fusion: the conv chain with a `[1, M, 1, 1]` i32 bias
-/// (exactly the layout the emitted Fig. 3 pattern broadcasts).
-fn try_fuse_qconv(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<PlanItem> {
-    g.nodes[anchor].inputs.first().filter(|n| !n.is_empty())?;
-    let chain = match_q_chain(g, idx, anchor, InitPolicy::Bakeable).ok()?;
-    let Kernel::ConvIntegerPrebound {
+/// (exactly the layout the emitted Fig. 3 pattern broadcasts). Error
+/// semantics as in [`try_fuse_qfc`].
+fn try_fuse_qconv(
+    g: &Graph,
+    idx: &ConsumerIndex<'_>,
+    anchor: usize,
+) -> Result<Option<PlanItem>, PackError> {
+    if g.nodes[anchor]
+        .inputs
+        .first()
+        .filter(|n| !n.is_empty())
+        .is_none()
+    {
+        return Ok(None);
+    }
+    let Ok(chain) = match_q_chain(g, idx, anchor, InitPolicy::Bakeable) else {
+        return Ok(None);
+    };
+    let Some(Kernel::ConvIntegerPrebound {
         wv,
         wp,
         m,
@@ -510,25 +813,34 @@ fn try_fuse_qconv(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<P
         x_zp,
         attrs,
         isa,
-    } = prebind_conv_integer(
+    }) = prebind_conv_integer(
         &g.nodes[anchor],
         g,
         &crate::onnx::shape::ConvAttrs::from_node(&g.nodes[anchor]),
-    )?
+    )
     else {
-        return None;
+        return Ok(None);
     };
     let bias = match chain.bias {
         None => None,
         Some(b) => {
             if b.shape() != [1, m, 1, 1] {
-                return None;
+                return Ok(None);
             }
-            Some(b.as_i32().ok()?.to_vec())
+            match b.as_i32() {
+                Ok(v) => Some(v.to_vec()),
+                Err(_) => return Ok(None),
+            }
         }
     };
-    let epi = build_epilogue(&chain)?;
-    let wp = select_packed_conv(&wv, wp, m, c * kh * kw);
+    let Some(epi) = build_epilogue(&chain) else {
+        return Ok(None);
+    };
+    let wp = select_packed_conv(&wv, wp, m, c * kh * kw).map_err(|reason| PackError {
+        node: g.nodes[anchor].name.clone(),
+        width: PackWidth::active().name(),
+        reason,
+    })?;
     let kernel = Kernel::FusedQConv(FusedQConv {
         wv,
         wp,
@@ -542,7 +854,7 @@ fn try_fuse_qconv(g: &Graph, idx: &ConsumerIndex<'_>, anchor: usize) -> Option<P
         isa,
         epi,
     });
-    Some(fused_item(chain.nodes, kernel, g))
+    Ok(Some(fused_item(chain.nodes, kernel, g)))
 }
 
 /// LUT folding: the activation chain becomes a 256-entry table built by

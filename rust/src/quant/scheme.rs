@@ -103,9 +103,13 @@ impl QType {
     }
 
     /// True when a dedicated bit-packed kernel family exists for this
-    /// width (int4 nibble GEMM, bipolar XNOR-popcount GEMM).
+    /// width (int4 nibble GEMM, bipolar XNOR-popcount GEMM, int2 crumb
+    /// and int3 tribble GEMMs).
     pub fn has_packed_kernel(self) -> bool {
-        matches!(self, QType::Bipolar | QType::Int(4))
+        matches!(
+            self,
+            QType::Bipolar | QType::Int(4) | QType::Int(3) | QType::Int(2)
+        )
     }
 
     /// Canonical lowercase name ("int8", "uint4", "bipolar", …).
@@ -346,8 +350,11 @@ mod tests {
         assert_eq!(QType::Bipolar.packed_per_byte(), 8);
         assert!(QType::Int(4).has_packed_kernel());
         assert!(QType::Bipolar.has_packed_kernel());
+        assert!(QType::Int(3).has_packed_kernel());
+        assert!(QType::Int(2).has_packed_kernel());
         assert!(!QType::I8.has_packed_kernel());
-        assert!(!QType::Int(3).has_packed_kernel());
+        assert!(!QType::Int(5).has_packed_kernel());
+        assert!(!QType::UInt(4).has_packed_kernel());
     }
 
     #[test]

@@ -23,8 +23,10 @@
 use super::cache::{self, TuneCache};
 use super::{GemmConfig, TuneMode};
 use crate::ops::bitpack::{
+    gemm_i2_packed_a_isa, gemm_i2_packed_par_isa, gemm_i3_packed_a_isa, gemm_i3_packed_par_isa,
     gemm_i4_packed_a_isa, gemm_i4_packed_par_isa, gemm_xnor_a_isa, gemm_xnor_par_isa,
-    pack_bits_cols, pack_bits_rows, BitPackedA, BitPackedB, PackedA4, PackedB4,
+    pack_bits_cols, pack_bits_rows, BitPackedA, BitPackedB, PackedA2, PackedA3, PackedA4,
+    PackedB2, PackedB3, PackedB4,
 };
 use crate::ops::matmul::{
     gemm_i8_packed_a_isa, gemm_i8_packed_par_isa, PackedA, PackedB, GEMM_MR,
@@ -67,9 +69,9 @@ pub struct GemmProblem<'a> {
     pub out: usize,
     pub kind: ProblemKind,
     /// Logical weight bits of the packed storage this plan baked (8 / 4 /
-    /// 1 — `PackedWeights::bits`): selects the kernel family the tuner
-    /// times, and keys the cache so an int4 plan never reuses an int8
-    /// winner for the same shape.
+    /// 3 / 2 / 1 — `PackedWeights::bits`): selects the kernel family the
+    /// tuner times, and keys the cache so an int4 plan never reuses an
+    /// int8 winner for the same shape.
     pub bits: u8,
 }
 
@@ -258,6 +260,18 @@ fn measure_candidate(cfg: GemmConfig, problems: &[GemmProblem], isa: Isa) -> Opt
                 let mut c = vec![0i32; TUNE_PROBE_ROWS * p.out];
                 time_reps!(gemm_i4_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c));
             }
+            (ProblemKind::PackedBGemm, 3) => {
+                let bp = PackedB3::pack_with(p.w, p.k, p.out, cfg)?;
+                let a = probe_i8(TUNE_PROBE_ROWS * p.k, seed);
+                let mut c = vec![0i32; TUNE_PROBE_ROWS * p.out];
+                time_reps!(gemm_i3_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c));
+            }
+            (ProblemKind::PackedBGemm, 2) => {
+                let bp = PackedB2::pack_with(p.w, p.k, p.out, cfg)?;
+                let a = probe_i8(TUNE_PROBE_ROWS * p.k, seed);
+                let mut c = vec![0i32; TUNE_PROBE_ROWS * p.out];
+                time_reps!(gemm_i2_packed_par_isa(pool, isa, &a, &bp, TUNE_PROBE_ROWS, &mut c));
+            }
             (ProblemKind::PackedBGemm, 1) => {
                 let bb = BitPackedB::pack(p.w, p.k, p.out)?;
                 let a = probe_pm1(TUNE_PROBE_ROWS * p.k, seed);
@@ -279,6 +293,18 @@ fn measure_candidate(cfg: GemmConfig, problems: &[GemmProblem], isa: Isa) -> Opt
                 let b = probe_i8(p.k * TUNE_PROBE_ROWS, seed);
                 let mut c = vec![0i32; p.out * TUNE_PROBE_ROWS];
                 time_reps!(gemm_i4_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c));
+            }
+            (ProblemKind::PackedAGemm, 3) => {
+                let ap = PackedA3::pack_with(p.w, p.out, p.k, cfg)?;
+                let b = probe_i8(p.k * TUNE_PROBE_ROWS, seed);
+                let mut c = vec![0i32; p.out * TUNE_PROBE_ROWS];
+                time_reps!(gemm_i3_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c));
+            }
+            (ProblemKind::PackedAGemm, 2) => {
+                let ap = PackedA2::pack_with(p.w, p.out, p.k, cfg)?;
+                let b = probe_i8(p.k * TUNE_PROBE_ROWS, seed);
+                let mut c = vec![0i32; p.out * TUNE_PROBE_ROWS];
+                time_reps!(gemm_i2_packed_a_isa(isa, &ap, &b, TUNE_PROBE_ROWS, &mut c));
             }
             (ProblemKind::PackedAGemm, 1) => {
                 let ap = BitPackedA::pack(p.w, p.out, p.k)?;

@@ -5,8 +5,10 @@
 //! naive triple loop bit for bit, serial and pool-dispatched alike.
 
 use pqdl::ops::bitpack::{
-    gemm_i4_packed_a_isa, gemm_i4_packed_isa, gemm_xnor_a_isa, gemm_xnor_isa, pack_bits_cols,
-    pack_bits_rows, BitPackedA, BitPackedB, PackedA4, PackedB4, PackedWeights,
+    gemm_i2_packed_a_isa, gemm_i2_packed_isa, gemm_i3_packed_a_isa, gemm_i3_packed_isa,
+    gemm_i4_packed_a_isa, gemm_i4_packed_isa, gemm_i4a_bytes_isa, gemm_i4a_bytes_par_isa,
+    gemm_xnor_a_isa, gemm_xnor_isa, pack_bits_cols, pack_bits_rows, pack_nibble_rows, BitPackedA,
+    BitPackedB, PackedA2, PackedA3, PackedA4, PackedB2, PackedB3, PackedB4, PackedWeights,
 };
 use pqdl::ops::matmul::{
     gemm_i8_i32, gemm_i8_i32_par, gemm_i8_packed, gemm_i8_packed_a, gemm_i8_packed_a_isa,
@@ -284,6 +286,170 @@ fn i4_packed_kernels_match_naive_ragged() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn i2_i3_packed_kernels_match_naive_ragged() {
+    // The crumb (int2) and tribble (int3) families under the identical
+    // differential contract: ragged m/k/n (odd n exercises padded tail
+    // fields; int3's 3-bit stream only byte-aligns every 8 columns, so
+    // sub-panel n hits the straddling-field decode), every ISA, both
+    // orientations.
+    let shapes = Pair(
+        Pair(RangeUsize { lo: 1, hi: 9 }, RangeUsize { lo: 1, hi: 70 }),
+        RangeUsize { lo: 1, hi: 21 },
+    );
+    run_prop("i2_i3_gemm_vs_naive", &shapes, 0x23_9ACC, 60, |&((m, k), n)| {
+        let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64 ^ 0x2323);
+
+        // FC orientation: full-range i8 activations x narrow weights
+        // spanning each width's whole range including both extremes.
+        let a = rand_i8(&mut rng, m * k);
+        let b3: Vec<i32> = (0..k * n).map(|_| (rng.below(8) as i32) - 4).collect();
+        let b2: Vec<i32> = (0..k * n).map(|_| (rng.below(4) as i32) - 2).collect();
+        let want3 = naive(&a, &b3, m, k, n);
+        let want2 = naive(&a, &b2, m, k, n);
+        let bp3 = PackedB3::pack(&b3, k, n).ok_or("PackedB3 refused int3 data")?;
+        let bp2 = PackedB2::pack(&b2, k, n).ok_or("PackedB2 refused int2 data")?;
+
+        // Conv orientation: narrow weights x full-range i8 activations.
+        let aw3: Vec<i32> = (0..m * k).map(|_| (rng.below(8) as i32) - 4).collect();
+        let aw2: Vec<i32> = (0..m * k).map(|_| (rng.below(4) as i32) - 2).collect();
+        let aw3_8: Vec<i8> = aw3.iter().map(|&v| v as i8).collect();
+        let aw2_8: Vec<i8> = aw2.iter().map(|&v| v as i8).collect();
+        let bact = rand_i8(&mut rng, k * n);
+        let bact_w: Vec<i32> = bact.iter().map(|&v| v as i32).collect();
+        let want3_a = naive(&aw3_8, &bact_w, m, k, n);
+        let want2_a = naive(&aw2_8, &bact_w, m, k, n);
+        let ap3 = PackedA3::pack(&aw3, m, k).ok_or("PackedA3 refused int3 data")?;
+        let ap2 = PackedA2::pack(&aw2, m, k).ok_or("PackedA2 refused int2 data")?;
+
+        for isa in Isa::available() {
+            let mut got = vec![0i32; m * n];
+            gemm_i3_packed_isa(isa, &a, &bp3, m, &mut got);
+            if got != want3 {
+                return Err(format!("{isa} i3 packed-B mismatch at ({m},{k},{n})"));
+            }
+            got.fill(0);
+            gemm_i2_packed_isa(isa, &a, &bp2, m, &mut got);
+            if got != want2 {
+                return Err(format!("{isa} i2 packed-B mismatch at ({m},{k},{n})"));
+            }
+            got.fill(0);
+            gemm_i3_packed_a_isa(isa, &ap3, &bact, n, &mut got);
+            if got != want3_a {
+                return Err(format!("{isa} i3 packed-A mismatch at ({m},{k},{n})"));
+            }
+            got.fill(0);
+            gemm_i2_packed_a_isa(isa, &ap2, &bact, n, &mut got);
+            if got != want2_a {
+                return Err(format!("{isa} i2 packed-A mismatch at ({m},{k},{n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nibble_activation_kernel_matches_naive_ragged() {
+    // The packed-activation int4 body (u8 nibble rows x widened i32
+    // weights) that fused chains feed directly: odd k exercises the
+    // padded last nibble per row, every ISA, and the row-parallel
+    // wrapper across pool sizes must all equal the widened oracle.
+    let shapes = Pair(
+        Pair(RangeUsize { lo: 1, hi: 9 }, RangeUsize { lo: 1, hi: 70 }),
+        RangeUsize { lo: 1, hi: 21 },
+    );
+    run_prop("i4a_gemm_vs_naive", &shapes, 0x4A_9ACC, 60, |&((m, k), n)| {
+        let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64 ^ 0x4A4A);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(16) as i8) - 8).collect();
+        let bw: Vec<i32> = (0..k * n).map(|_| rng.i8() as i32).collect();
+        let want = naive(&a, &bw, m, k, n);
+        let mut a_bytes = Vec::new();
+        pack_nibble_rows(&a, m, k, &mut a_bytes);
+        for isa in Isa::available() {
+            let mut got = vec![0i32; m * n];
+            gemm_i4a_bytes_isa(isa, &a_bytes, m, k, &bw, n, &mut got);
+            if got != want {
+                return Err(format!("{isa} i4a mismatch at ({m},{k},{n})"));
+            }
+            for threads in [1usize, 3] {
+                let pool = ThreadPool::new(threads);
+                let mut par = vec![0i32; m * n];
+                gemm_i4a_bytes_par_isa(&pool, isa, &a_bytes, m, k, &bw, n, &mut par);
+                if par != want {
+                    return Err(format!(
+                        "{isa} i4a par mismatch at ({m},{k},{n}), {threads} threads"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn narrow_isa_bodies_at_saturation_extremes() {
+    // Worst-case accumulator growth for the sub-8-bit SIMD bodies. The
+    // int4 AVX2 path rides maddubs-style i16 lane math pre-widened to
+    // i32 — the (-128 activation) x (-8 weight) corner at KC-crossing
+    // depth is exactly where an unwidened lane would saturate; all ISAs
+    // must reproduce the naive i32 accumulation bit for bit. Same drill
+    // for int3/int2 extremes and the nibble-activation body.
+    let (m, n) = (GEMM_MR + 2, GEMM_NR + 3);
+    for k in [1usize, 7, GEMM_KC + 5] {
+        for (av, wv4) in [(i8::MIN, -8i32), (i8::MIN, 7), (i8::MAX, -8), (i8::MAX, 7)] {
+            let a = vec![av; m * k];
+            let b4 = vec![wv4; k * n];
+            let want = naive(&a, &b4, m, k, n);
+            let bp4 = PackedB4::pack(&b4, k, n).unwrap();
+            let b3 = vec![wv4.clamp(-4, 3); k * n];
+            let want3 = naive(&a, &b3, m, k, n);
+            let bp3 = PackedB3::pack(&b3, k, n).unwrap();
+            let b2 = vec![wv4.clamp(-2, 1); k * n];
+            let want2 = naive(&a, &b2, m, k, n);
+            let bp2 = PackedB2::pack(&b2, k, n).unwrap();
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i4_packed_isa(isa, &a, &bp4, m, &mut got);
+                assert_eq!(want, got, "{isa} i4 ({m},{k},{n}) a={av} w={wv4}");
+                got.fill(0);
+                gemm_i3_packed_isa(isa, &a, &bp3, m, &mut got);
+                assert_eq!(want3, got, "{isa} i3 ({m},{k},{n}) a={av}");
+                got.fill(0);
+                gemm_i2_packed_isa(isa, &a, &bp2, m, &mut got);
+                assert_eq!(want2, got, "{isa} i2 ({m},{k},{n}) a={av}");
+            }
+        }
+        // Nibble-activation body at its own extremes: ±8-range packed
+        // activations against i8-extreme widened weights.
+        for (av4, wv) in [(-8i8, i8::MIN as i32), (-8, i8::MAX as i32), (7, i8::MIN as i32)] {
+            let a = vec![av4; m * k];
+            let bw = vec![wv; k * n];
+            let want = naive(&a, &bw, m, k, n);
+            let mut a_bytes = Vec::new();
+            pack_nibble_rows(&a, m, k, &mut a_bytes);
+            for isa in Isa::available() {
+                let mut got = vec![0i32; m * n];
+                gemm_i4a_bytes_isa(isa, &a_bytes, m, k, &bw, n, &mut got);
+                assert_eq!(want, got, "{isa} i4a ({m},{k},{n}) a={av4} w={wv}");
+            }
+        }
+    }
+    // Alternating-sign int4 weights: partial sums cancel, exposing any
+    // SIMD lane that reorders the ascending-k accumulation.
+    let (m, k, n) = (3usize, GEMM_KC + 1, GEMM_NR * 2 + 1);
+    let a: Vec<i8> = (0..m * k)
+        .map(|i| if i % 2 == 0 { i8::MAX } else { i8::MIN })
+        .collect();
+    let b4: Vec<i32> = (0..k * n).map(|i| if (i / n) % 2 == 0 { -8 } else { 7 }).collect();
+    let want = naive(&a, &b4, m, k, n);
+    let bp4 = PackedB4::pack(&b4, k, n).unwrap();
+    for isa in Isa::available() {
+        let mut got = vec![0i32; m * n];
+        gemm_i4_packed_isa(isa, &a, &bp4, m, &mut got);
+        assert_eq!(want, got, "{isa} i4 alternating-sign");
+    }
 }
 
 #[test]

@@ -1,33 +1,86 @@
 //! Sub-8-bit end-to-end contract on the narrow figure-class models
-//! (int4 MLP, bipolar CNN):
+//! (int4 MLP, bipolar CNN) plus emitted int3/int2 FC chains:
 //!
-//! 1. Both models validate (including their advisory `pqdl.width.*`
+//! 1. Models validate (including their advisory `pqdl.width.*`
 //!    metadata) and their plans bake the expected narrow kernel
-//!    families (`fused_int4` / `fused_bipolar` in [`PlanStats`]).
+//!    families (`fused_int4` / `fused_int3` / `fused_int2` /
+//!    `fused_bipolar` in [`PlanStats`]) — including the nibble-packed
+//!    activation edge between paired fused FCs (`packed_act_nibble`).
 //! 2. The three-way differential oracle holds bit for bit: fused plan ==
 //!    unfused plan == legacy interpreter, across batch sizes, on both
-//!    the serial and auto executor paths. Narrow baking is an
-//!    optimization, never a semantic change.
-//! 3. The hardware lift derives the minimal logical weight width from
+//!    the serial and auto executor paths. Narrow baking (and packed
+//!    activation hand-off) is an optimization, never a semantic change.
+//! 3. Forced `PQDL_PACK_WIDTH` values are honored exactly: a model whose
+//!    widened weights fit the forced range bakes that family on every
+//!    fused chain; one that does not is rejected at plan time with
+//!    [`SessionError::Pack`] naming the knob. The CI width matrix
+//!    re-runs this suite across auto/int8/int4/bipolar/int2.
+//! 4. The hardware lift derives the minimal logical weight width from
 //!    the weight values alone (no metadata required — paper goal 1),
 //!    pinning the widths the cost model's traffic scaling uses.
 
 use pqdl::hwsim::{HwConfig, HwModule};
-use pqdl::interp::{PlanOptions, Session};
+use pqdl::interp::{PlanOptions, Session, SessionError};
+use pqdl::onnx::{batched, GraphBuilder, Model};
 use pqdl::opt::PackWidth;
 use pqdl::proptest_util::{run_prop, RangeUsize};
+use pqdl::quant::QType;
+use pqdl::rewrite::patterns::{emit_fc, ActKind, FcParams, RescaleOp};
+use pqdl::tensor::{DType, Tensor};
 use pqdl::train::NarrowModel;
+
+/// Does the forced width admit weight values spanning `[lo, hi]`?
+/// (Bipolar is stricter than its range: it has no code point for 0.)
+fn width_admits(w: PackWidth, lo: i32, hi: i32) -> bool {
+    match w {
+        PackWidth::Auto | PackWidth::Int8 => true,
+        PackWidth::Int4 => lo >= -8 && hi <= 7,
+        PackWidth::Int3 => lo >= -4 && hi <= 3,
+        PackWidth::Int2 => lo >= -2 && hi <= 1,
+        PackWidth::Bipolar => lo == -1 && hi == 1,
+    }
+}
+
+/// Weight-value span of each narrow figure model (int4 quantization pins
+/// an extremal ±7 weight; binarization emits strictly ±1).
+fn model_span(m: NarrowModel) -> (i32, i32) {
+    match m {
+        NarrowModel::Mlp4 => (-7, 7),
+        NarrowModel::BipolarCnn => (-1, 1),
+    }
+}
+
+/// Assert that `model` is rejected at plan time with a [`SessionError::Pack`]
+/// whose message names the knob and the offending width.
+fn assert_pack_rejection(model: Model, name: &str) {
+    let err = Session::new(model).expect_err(name);
+    assert!(
+        matches!(err, SessionError::Pack(_)),
+        "{name}: expected Pack rejection, got {err}"
+    );
+    let msg = err.to_string();
+    assert!(
+        msg.contains("PQDL_PACK_WIDTH") && msg.contains(PackWidth::active().name()),
+        "{name}: rejection must name the knob and width: {msg}"
+    );
+}
 
 #[test]
 fn narrow_models_validate_and_bake_narrow_kernels() {
-    // The CI width matrix re-runs this suite with PQDL_PACK_WIDTH=int8;
-    // under forced-int8 the plans must bake ZERO narrow kernels (and the
-    // three-way oracle below still holds — the knob moves memory, never
-    // bits). Under the default Auto policy the counts are pinned exactly.
-    let auto = PackWidth::active() == PackWidth::Auto;
+    // The CI width matrix re-runs this suite with forced PQDL_PACK_WIDTH
+    // values; the expectations below branch on the active policy. Under
+    // the default Auto policy the minimal-width counts are pinned
+    // exactly; under a forced width every fused chain either bakes that
+    // family or the whole session is rejected at plan time.
+    let width = PackWidth::active();
     for m in NarrowModel::ALL {
         let model = m.model();
         pqdl::onnx::check_model(&model).unwrap();
+        let (lo, hi) = model_span(m);
+        if !width_admits(width, lo, hi) {
+            assert_pack_rejection(model, m.name());
+            continue;
+        }
         let sess = Session::new(model).unwrap();
         let stats = sess.plan_stats();
         assert!(
@@ -35,46 +88,74 @@ fn narrow_models_validate_and_bake_narrow_kernels() {
             "{}: fusion must shrink the plan ({stats})",
             m.name()
         );
-        if !auto {
-            assert_eq!(stats.fused_int4, 0, "{}: forced int8 ({stats})", m.name());
-            assert_eq!(stats.fused_bipolar, 0, "{}: forced int8 ({stats})", m.name());
-        }
-        match m {
+        let chains = match m {
             NarrowModel::Mlp4 => {
                 assert_eq!(stats.fused_qfc, 2, "{}: FC chains ({stats})", m.name());
-                if auto {
-                    assert_eq!(
-                        stats.fused_int4, 2,
-                        "{}: both FC layers must bake int4 ({stats})",
-                        m.name()
-                    );
-                    assert_eq!(stats.fused_bipolar, 0, "{}: ({stats})", m.name());
-                }
+                2
             }
             NarrowModel::BipolarCnn => {
                 assert_eq!(stats.fused_qconv, 1, "{}: conv chain ({stats})", m.name());
                 assert_eq!(stats.fused_qfc, 1, "{}: FC head ({stats})", m.name());
-                if auto {
-                    assert_eq!(
-                        stats.fused_bipolar, 2,
-                        "{}: conv + head must bake bipolar ({stats})",
-                        m.name()
-                    );
-                    assert_eq!(stats.fused_int4, 0, "{}: ({stats})", m.name());
-                }
+                2
             }
-        }
+        };
+        let (want4, want3, want2, want1) = match (width, m) {
+            // Auto picks the minimal width per chain.
+            (PackWidth::Auto, NarrowModel::Mlp4) => (chains, 0, 0, 0),
+            (PackWidth::Auto, NarrowModel::BipolarCnn) => (0, 0, 0, chains),
+            // Forced int8 bakes zero narrow kernels.
+            (PackWidth::Int8, _) => (0, 0, 0, 0),
+            // Forced narrow widths pin EVERY fused chain to that family
+            // (±1 weights fit any narrower container).
+            (PackWidth::Int4, _) => (chains, 0, 0, 0),
+            (PackWidth::Int3, _) => (0, chains, 0, 0),
+            (PackWidth::Int2, _) => (0, 0, chains, 0),
+            (PackWidth::Bipolar, _) => (0, 0, 0, chains),
+        };
+        assert_eq!(stats.fused_int4, want4, "{} {width:?}: ({stats})", m.name());
+        assert_eq!(stats.fused_int3, want3, "{} {width:?}: ({stats})", m.name());
+        assert_eq!(stats.fused_int2, want2, "{} {width:?}: ({stats})", m.name());
+        assert_eq!(
+            stats.fused_bipolar, want1,
+            "{} {width:?}: ({stats})",
+            m.name()
+        );
+        // Packed-activation pairing: Mlp4's hidden edge is int4-typed and
+        // chains FC→FC, so any non-int8 policy hands the second FC the
+        // nibble-packed edge; the bipolar CNN has no FC→FC edge.
+        let want_nibble = match m {
+            NarrowModel::Mlp4 if width != PackWidth::Int8 => 1,
+            _ => 0,
+        };
+        assert_eq!(
+            stats.packed_act_nibble, want_nibble,
+            "{} {width:?}: packed-activation edges ({stats})",
+            m.name()
+        );
+        assert_eq!(
+            stats.packed_act_bitplane, 0,
+            "{} {width:?}: ({stats})",
+            m.name()
+        );
     }
 }
 
 /// The three-way oracle extended to the sub-8-bit models. This is the
 /// strongest statement the PR makes: nibble-packed int4 GEMM, the
-/// XNOR-popcount conv, the Clip-absorbing matcher, and the narrow
-/// saturation epilogues all agree BIT FOR BIT with the node-by-node
-/// legacy interpreter executing the raw standard-ONNX graph.
+/// XNOR-popcount conv, the packed-activation fused hand-off, the
+/// Clip-absorbing matcher, and the narrow saturation epilogues all agree
+/// BIT FOR BIT with the node-by-node legacy interpreter executing the
+/// raw standard-ONNX graph. (Under the default Auto policy the Mlp4 leg
+/// exercises the nibble-packed activation edge for real — the plan
+/// stamps it, per the stats pin above.)
 #[test]
 fn narrow_three_way_bit_identical() {
+    let width = PackWidth::active();
     for m in NarrowModel::ALL {
+        let (lo, hi) = model_span(m);
+        if !width_admits(width, lo, hi) {
+            continue; // rejection contract covered above
+        }
         let fused = Session::new(m.model()).unwrap();
         let unfused = Session::new_with_options(m.model(), PlanOptions { fuse: false }).unwrap();
         assert_eq!(
@@ -112,10 +193,119 @@ fn narrow_three_way_bit_identical() {
     }
 }
 
+const TINY_K: usize = 12;
+const TINY_H: usize = 10;
+const TINY_N: usize = 4;
+
+/// A two-layer FC chain whose weights deterministically sweep the whole
+/// `[lo, hi]` alphabet (both extremes present, so `QType::minimal_for`
+/// recovers exactly the intended width). The hidden edge is int4-typed,
+/// making the pair nibble-eligible — the packed-activation hand-off runs
+/// over int3/int2-baked consumer weights.
+fn tiny_fc_chain(name: &str, lo: i32, hi: i32) -> Model {
+    let span = hi - lo + 1;
+    let w0: Vec<i8> = (0..TINY_K * TINY_H)
+        .map(|i| (lo + (i as i32 % span)) as i8)
+        .collect();
+    let w1: Vec<i8> = (0..TINY_H * TINY_N)
+        .map(|i| (lo + ((i as i32 + 1) % span)) as i8)
+        .collect();
+    let mut b = GraphBuilder::new(name);
+    b.input("x", DType::I8, &batched(&[TINY_K]));
+    let h = emit_fc(
+        &mut b,
+        "x",
+        &FcParams {
+            weight_q: Tensor::from_i8(&[TINY_K, TINY_H], w0).unwrap(),
+            bias_q: None,
+            rescale: RescaleOp::OneMul(0.25),
+            activation: ActKind::Relu,
+            out_qtype: QType::Int(4),
+        },
+        "l0",
+    );
+    let y = emit_fc(
+        &mut b,
+        &h,
+        &FcParams {
+            weight_q: Tensor::from_i8(&[TINY_H, TINY_N], w1).unwrap(),
+            bias_q: None,
+            rescale: RescaleOp::OneMul(0.5),
+            activation: ActKind::None,
+            out_qtype: QType::I8,
+        },
+        "l1",
+    );
+    b.output(&y, DType::I8, &batched(&[TINY_N]));
+    b.finish_model()
+}
+
+/// int3/int2 end-to-end round-trips: the Auto ladder bakes the minimal
+/// family, forced widths pin or reject, the nibble-packed edge pairs
+/// over the narrow consumer weights, and the three-way oracle holds.
+#[test]
+fn int2_int3_chains_bake_and_stay_bit_identical() {
+    let width = PackWidth::active();
+    for (label, lo, hi) in [("int3", -4i32, 3i32), ("int2", -2, 1)] {
+        let model = tiny_fc_chain(label, lo, hi);
+        pqdl::onnx::check_model(&model).unwrap();
+        if !width_admits(width, lo, hi) {
+            assert_pack_rejection(model, label);
+            continue;
+        }
+        let fused = Session::new(model.clone()).unwrap();
+        let stats = fused.plan_stats();
+        assert_eq!(stats.fused_qfc, 2, "{label}: FC chains ({stats})");
+        let (want4, want3, want2) = match (width, label) {
+            (PackWidth::Auto, "int3") => (0, 2, 0),
+            (PackWidth::Auto, "int2") => (0, 0, 2),
+            (PackWidth::Int8, _) => (0, 0, 0),
+            (PackWidth::Int4, _) => (2, 0, 0),
+            (PackWidth::Int3, _) => (0, 2, 0),
+            (PackWidth::Int2, _) => (0, 0, 2), // int3 weights were rejected
+            (w, l) => unreachable!("unadmitted combination {w:?}/{l}"),
+        };
+        assert_eq!(stats.fused_int4, want4, "{label} {width:?}: ({stats})");
+        assert_eq!(stats.fused_int3, want3, "{label} {width:?}: ({stats})");
+        assert_eq!(stats.fused_int2, want2, "{label} {width:?}: ({stats})");
+        let want_nibble = if width == PackWidth::Int8 { 0 } else { 1 };
+        assert_eq!(
+            stats.packed_act_nibble, want_nibble,
+            "{label} {width:?}: packed-activation edge ({stats})"
+        );
+
+        let unfused = Session::new_with_options(model, PlanOptions { fuse: false }).unwrap();
+        run_prop(
+            &format!("tiny_three_way::{label}"),
+            &RangeUsize { lo: 1, hi: 13 },
+            0x2331 ^ lo as u64,
+            8,
+            |&batch| {
+                let x = pqdl::figures::canonical_input(batch, TINY_K, batch as u64 * 31 + 7);
+                let legacy = fused
+                    .run_unplanned(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let f = fused
+                    .run_serial(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let u = unfused
+                    .run_serial(&[("x", x.clone())])
+                    .map_err(|e| e.to_string())?;
+                let auto = fused.run(&[("x", x)]).map_err(|e| e.to_string())?;
+                if legacy != f || legacy != u || legacy != auto {
+                    return Err(format!("{label}: three-way divergence at batch {batch}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
 /// The hardware lift re-derives each stage's logical weight width from
 /// the weight VALUES (int4 quantization pins an extremal ±7 weight;
 /// binarization emits strictly ±1), with no reliance on the advisory
-/// metadata.
+/// metadata — and independently of the interpreter's PQDL_PACK_WIDTH
+/// policy, which never reaches the lift.
 #[test]
 fn hw_lift_derives_minimal_weight_widths() {
     let mlp4 = HwModule::compile(&NarrowModel::Mlp4.model(), HwConfig::default()).unwrap();
